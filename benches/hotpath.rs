@@ -1,0 +1,137 @@
+//! `cargo bench --bench hotpath` — microbenchmarks of the serving hot paths
+//! (L3 perf targets from DESIGN.md §7): the perf-model predictor queried by
+//! adaptive chunking, scheduler batch formation, simulator iteration rate,
+//! KV-cache accounting, and (when artifacts exist) real PJRT execution
+//! latency for decode steps and KVP partials.
+
+use medha::config::{DeploymentConfig, SloConfig};
+use medha::coordinator::chunking::{AdaptiveChunk, ChunkPolicy};
+use medha::coordinator::request::Request;
+use medha::coordinator::scheduler::Scheduler;
+use medha::coordinator::StaticChunk;
+use medha::kvcache::{BlockPool, KvManager};
+use medha::perfmodel::{BatchShape, PerfModel};
+use medha::sim::{SimOptions, Simulation};
+use medha::util::bench::BenchSuite;
+use medha::util::json::Json;
+use medha::util::rng::Rng;
+use medha::workload;
+use std::collections::BTreeMap;
+
+fn main() {
+    let mut suite = BenchSuite::from_env();
+    suite.header();
+
+    let dep = DeploymentConfig::llama3_8b_tp8();
+    let pm = PerfModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
+    let slo = SloConfig::default();
+
+    // --- L3 scheduling hot path -----------------------------------------
+    let batch = BatchShape {
+        prefills: vec![medha::perfmodel::PrefillWork { chunk: 256, kv_len: 1_000_000 }],
+        decodes: (0..64).map(|i| medha::perfmodel::DecodeWork { kv_len: 1_000 + i }).collect(),
+    };
+    suite.bench("perfmodel/iteration_time mixed-64", || {
+        std::hint::black_box(pm.iteration_time(&batch));
+    });
+
+    let adaptive = AdaptiveChunk::new(vec![32, 64, 128, 256, 512, 1024, 2048, 4096]);
+    let decode_ctxs: Vec<u64> = (0..64).map(|i| 1_000 + i).collect();
+    suite.bench("chunking/adaptive decision (64 decodes)", || {
+        std::hint::black_box(adaptive.next_chunk(2_000_000, 1 << 40, &decode_ctxs, &pm, &slo));
+    });
+
+    let mut requests = BTreeMap::new();
+    let mut sched = Scheduler::new(Box::new(StaticChunk(512)), 128);
+    for id in 0..128u64 {
+        let mut r = Request::new(id, 64, 4_000, 0.0);
+        r.complete_chunk(64, 0.0);
+        requests.insert(id, r);
+        sched.enqueue(id);
+        let plan = sched.next_batch(&requests, &pm, &slo, |r| r.kv_len());
+        sched.complete_iteration(&plan, &mut requests, 0.0);
+    }
+    suite.bench("scheduler/next_batch 128 decodes", || {
+        std::hint::black_box(sched.next_batch(&requests, &pm, &slo, |r| r.kv_len()));
+    });
+
+    suite.bench("kvcache/append+ship+release cycle", || {
+        let mut kv = KvManager::new(BlockPool::new(16, 1 << 16));
+        kv.onboard(1);
+        for _ in 0..64 {
+            kv.append(1, 128).unwrap();
+            kv.account_table_shipment(&[1]);
+        }
+        kv.release(1).unwrap();
+    });
+
+    // --- simulator throughput --------------------------------------------
+    suite.bench("sim/mixed 100K-prefill + 8 decodes", || {
+        let mut dep = DeploymentConfig::llama3_8b_tp8();
+        dep.scheduler.adaptive_chunking = false;
+        dep.scheduler.static_chunk = 2048;
+        let w = workload::long_plus_decodes(100_000, 8, 1_000, 64);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        std::hint::black_box(sim.run());
+    });
+
+    // --- substrates -------------------------------------------------------
+    let manifest_like = format!(
+        "{{\"entries\":{{{}}}}}",
+        (0..50)
+            .map(|i| format!("\"e{i}\":{{\"file\":\"f{i}.hlo\",\"inputs\":[{{\"shape\":[16,512],\"dtype\":\"f32\"}}]}}"))
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    suite.bench("json/parse 50-entry manifest", || {
+        std::hint::black_box(Json::parse(&manifest_like).unwrap());
+    });
+
+    let mut rng = Rng::new(7);
+    suite.bench("rng/poisson(40) x1000", || {
+        for _ in 0..1000 {
+            std::hint::black_box(rng.poisson(40.0));
+        }
+    });
+
+    // --- real runtime (artifacts required) --------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        use medha::engine::{tokenize, Engine};
+        let engine = Engine::load("artifacts", 8).unwrap();
+        // warm the executable cache + state
+        let mut state = engine.new_state().unwrap();
+        let prompt = tokenize("benchmark prompt for decode latency measurement!!");
+        engine.prefill(&mut state, &prompt, 16).unwrap();
+        let mut last = vec![0i32];
+        suite.bench("runtime/decode step (real PJRT, 8 layers)", || {
+            let logits = engine.forward_chunk(&mut state, &last).unwrap();
+            last[0] = medha::engine::argmax(&logits);
+            if state.pos as usize > engine.spec.max_seq - 4 {
+                state = engine.new_state().unwrap();
+                engine.prefill(&mut state, &prompt, 16).unwrap();
+            }
+        });
+
+        let spec = engine.spec;
+        let row = spec.hkv * spec.d_head;
+        let mut rng = Rng::new(3);
+        let mut gen = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect()
+        };
+        let q = gen(spec.hq * spec.d_head);
+        let k = gen(1024 * row);
+        let v = gen(1024 * row);
+        suite.bench("runtime/kvp partial+merge (2x512)", || {
+            std::hint::black_box(
+                engine.kvp_decode_attention(&q, &k, &v, 1000, 512, 2).unwrap(),
+            );
+        });
+        suite.bench("runtime/prefill chunk c=64 (8 layers)", || {
+            let mut s = engine.new_state().unwrap();
+            let toks: Vec<i32> = (0..64).collect();
+            std::hint::black_box(engine.forward_chunk(&mut s, &toks).unwrap());
+        });
+    } else {
+        println!("(artifacts missing — runtime benches skipped; run `make artifacts`)");
+    }
+}

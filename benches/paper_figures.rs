@@ -1,0 +1,26 @@
+//! `cargo bench --bench paper_figures` — regenerates every table and figure
+//! of the paper's evaluation (DESIGN.md §5 experiment index) and times each
+//! harness. Filter with `cargo bench --bench paper_figures fig15`.
+
+use medha::figures;
+use medha::util::bench::BenchSuite;
+use std::time::Instant;
+
+fn main() {
+    let mut suite = BenchSuite::from_env();
+    println!("reproducing every paper table/figure; filter with --filter <id>\n");
+    let mut timings = Vec::new();
+    for &fig in figures::ALL_FIGURES {
+        if !suite.enabled(fig) {
+            continue;
+        }
+        let t0 = Instant::now();
+        figures::run(fig).unwrap_or_else(|e| panic!("{fig}: {e}"));
+        timings.push((fig, t0.elapsed().as_secs_f64()));
+    }
+    println!("\n=== harness timings ===");
+    for (fig, t) in &timings {
+        println!("{fig:<10} {t:>8.2}s");
+    }
+    let _ = &mut suite;
+}

@@ -1,0 +1,77 @@
+//! Long-context scenario at paper scale: simulate a 2M-token request on a
+//! 128-GPU Medha 3D deployment (tp=8, spp=4, kvp=4) and print the dynamic
+//! KVP onboarding timeline (the paper's Fig. 19 scenario), plus the SLO
+//! verdicts.
+//!
+//! Run: `cargo run --release --example long_context_sim [--ctx 2M] [--model llama3-8b]`
+
+use medha::config::DeploymentConfig;
+use medha::sim::{SimOptions, Simulation};
+use medha::util::args::Args;
+use medha::util::stats::{fmt_duration, fmt_tokens};
+use medha::workload;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[], false);
+    let ctx = args.u64_or("ctx", 2_000_000);
+    let model = args.str_or("model", "llama3-8b");
+    let mut dep = match model {
+        "llama3-70b" => DeploymentConfig::llama3_70b_tp8(),
+        _ => DeploymentConfig::llama3_8b_tp8(),
+    }
+    .with_parallel(8, 4, 4);
+    dep.scheduler.kvp_onboard_threshold = ctx / 4;
+    dep.validate()?;
+
+    println!(
+        "simulating a {} request on {} ({} = {} GPUs)",
+        fmt_tokens(ctx),
+        dep.model.name,
+        dep.parallel.label(),
+        dep.total_gpus()
+    );
+
+    let w = workload::long_plus_decodes(ctx, 8, 1_000, 2_000);
+    let slo = dep.slo;
+    let mut sim = Simulation::new(dep, w, SimOptions::default());
+    sim.run();
+
+    println!("\nKVP onboarding timeline (Fig. 19):");
+    for (t, id, g) in sim.kvp_onboard_log() {
+        println!("  t={:>9}  request {id} onboards group {g}", fmt_duration(*t));
+    }
+
+    println!("\nGPU staircase (sampled):");
+    let iters = &sim.metrics.iters;
+    let step = (iters.len() / 10).max(1);
+    println!("  {:>10} {:>6} {:>12} {:>8}", "time", "gpus", "iter time", "chunk");
+    for rec in iters.iter().step_by(step) {
+        println!(
+            "  {:>10} {:>6} {:>12} {:>8}",
+            fmt_duration(rec.t),
+            rec.active_gpus,
+            fmt_duration(rec.dur_s),
+            rec.chunk.map(|c| c.to_string()).unwrap_or_default()
+        );
+    }
+
+    let long = sim.request(0).unwrap();
+    let ttft = long.ttft().unwrap();
+    let mut m = sim.metrics;
+    let s = m.summary();
+    println!("\nresults:");
+    println!(
+        "  long-request TTFT: {}  (TTFT SLO {}: {})",
+        fmt_duration(ttft),
+        fmt_duration(slo.ttft_s),
+        if ttft <= slo.ttft_s { "MET" } else { "missed (expected beyond ~2M; see paper sec 7)" }
+    );
+    println!(
+        "  P95 TBT (batched decodes): {}  (TBT SLO {}: {})",
+        fmt_duration(s.tbt_p95),
+        fmt_duration(slo.tbt_s),
+        if s.tbt_p95 <= slo.tbt_s { "MET" } else { "missed" }
+    );
+    println!("  decode throughput: {:.1} tok/s over the run", s.decode_tps);
+    Ok(())
+}

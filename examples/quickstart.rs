@@ -1,0 +1,49 @@
+//! Quickstart: the 60-second tour.
+//!
+//! 1. Load the AOT artifacts and generate text with the tiny real model on
+//!    the CPU PJRT runtime (chunked prefill + greedy decode).
+//! 2. Ask the perf model a deployment question (what does a 1M-token
+//!    request cost on a DGX-H100 fleet?).
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (needs `make artifacts` first; skips step 1 gracefully if missing)
+
+use medha::config::DeploymentConfig;
+use medha::engine::{detokenize, tokenize, Engine};
+use medha::perfmodel::PerfModel;
+use medha::util::stats::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. real model on CPU PJRT -------------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("== serving the tiny real model (CPU PJRT) ==");
+        let engine = Engine::load("artifacts", 8)?;
+        let prompt = "Attention is all";
+        let t0 = std::time::Instant::now();
+        let out = engine.generate(&tokenize(prompt), 16, 64)?;
+        println!("prompt:    {prompt:?}");
+        println!("generated: {:?}", detokenize(&out));
+        println!("({} tokens in {})\n", out.len(), fmt_duration(t0.elapsed().as_secs_f64()));
+    } else {
+        println!("(artifacts/ not built — run `make artifacts` for the real-model demo)\n");
+    }
+
+    // --- 2. deployment planning with the perf model ---------------------
+    println!("== planning a 1M-token deployment (Llama-3 8B) ==");
+    for (tp, spp, kvp) in [(8, 1, 1), (8, 4, 1), (8, 4, 4)] {
+        let dep = DeploymentConfig::llama3_8b_tp8().with_parallel(tp, spp, kvp);
+        dep.validate()?;
+        let pm = PerfModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
+        let ctx = 1_000_000;
+        println!(
+            "  {:<16} {:>4} GPUs: TTFT {:>8}, TBT {:>8}, fits: {}",
+            dep.parallel.label(),
+            dep.total_gpus(),
+            fmt_duration(pm.prefill_time_spp(ctx, 4096)),
+            fmt_duration(pm.decode_tbt(ctx)),
+            pm.fits_memory(ctx)
+        );
+    }
+    println!("\nnext: `medha reproduce --figure all`, `cargo run --release --example serve_e2e`");
+    Ok(())
+}

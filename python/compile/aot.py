@@ -1,0 +1,233 @@
+"""AOT compiler: lower every L2 entry point to HLO text for the Rust runtime.
+
+Run once at build time (`make artifacts`). Python never runs at serve time.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out-dir (default ../artifacts):
+  <entry>.hlo.txt        one per entry point / shape bucket
+  weights.bin            all model weights, f32 LE, concatenated
+  manifest.json          entry signatures, weight table, model spec, golden
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Chunk-size buckets the Rust adaptive-chunking policy can schedule.
+CHUNK_BUCKETS = (1, 16, 64, 256)
+# Layers-per-stage buckets -> SPP degrees {1, 2, 4} for an 8-layer model.
+STAGE_BUCKETS = (8, 4, 2)
+# KVP shard capacities (rows) and shard counts for the merge entry.
+KVP_SHARD_CAPS = (512, 1024)
+KVP_MERGE_COUNTS = (2, 4)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+def _sig(args):
+    return [{"shape": list(a.shape), "dtype": _dtype_name(a.dtype)} for a in args]
+
+
+class Emitter:
+    def __init__(self, out_dir: str, spec: M.ModelSpec):
+        self.out_dir = out_dir
+        self.spec = spec
+        self.entries = {}
+
+    def emit(self, name: str, fn, example_args, outputs_doc: str):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": _sig(example_args),
+            "doc": outputs_doc,
+        }
+        print(f"  {name:28s} {len(text)/1e6:6.2f} MB  ({time.time()-t0:.1f}s)")
+
+
+def shape_struct(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def emit_entries(em: Emitter):
+    spec = em.spec
+    V, D, dh, hq, hkv, Mx = spec.vocab, spec.d_model, spec.d_head, spec.hq, spec.hkv, spec.max_seq
+    f32, i32 = jnp.float32, jnp.int32
+
+    for c in CHUNK_BUCKETS:
+        em.emit(
+            f"embed_c{c}",
+            lambda tokens, emb: (M.embed(tokens, emb),),
+            (shape_struct((c,), i32), shape_struct((V, D))),
+            "h[C,D]",
+        )
+        em.emit(
+            f"lm_head_c{c}",
+            lambda h, norm_w, emb: (M.lm_head(h, norm_w, emb, spec),),
+            (shape_struct((c, D)), shape_struct((D,)), shape_struct((V, D))),
+            "logits[C,V]",
+        )
+
+    lw_shapes = M.layer_weight_shapes(spec)
+
+    for lps in STAGE_BUCKETS:
+        for c in CHUNK_BUCKETS:
+            def stage_fn(h, ck, cv, start, *flat, _lps=lps):
+                lws = []
+                per = len(M.LAYER_WEIGHT_NAMES)
+                for i in range(_lps):
+                    lws.append(dict(zip(M.LAYER_WEIGHT_NAMES, flat[i * per:(i + 1) * per])))
+                h, ck, cv = M.stage_forward(h, ck, cv, start[0], lws, spec, use_kernel=True)
+                return h, ck, cv
+
+            weight_args = []
+            for _ in range(lps):
+                for nm in M.LAYER_WEIGHT_NAMES:
+                    weight_args.append(shape_struct(lw_shapes[nm]))
+            em.emit(
+                f"stage_c{c}_l{lps}",
+                stage_fn,
+                (
+                    shape_struct((c, D)),
+                    shape_struct((lps, Mx, hkv, dh)),
+                    shape_struct((lps, Mx, hkv, dh)),
+                    shape_struct((1,), i32),
+                    *weight_args,
+                ),
+                "(h'[C,D], ck'[Lps,M,hkv,dh], cv')",
+            )
+
+    # KVP attention-level entries (decode path: C=1 replicated query).
+    for cap in KVP_SHARD_CAPS:
+        em.emit(
+            f"kvp_partial_c1_s{cap}",
+            lambda q, k, v, qs, ss, sl: M.kvp_partial_attention(
+                q, k, v, qs[0], ss[0], sl[0], block_k=512
+            ),
+            (
+                shape_struct((1, hq, dh)),
+                shape_struct((cap, hkv, dh)),
+                shape_struct((cap, hkv, dh)),
+                shape_struct((1,), i32),
+                shape_struct((1,), i32),
+                shape_struct((1,), i32),
+            ),
+            "(o[1,hq,dh], m[1,hq], l[1,hq])",
+        )
+    for s in KVP_MERGE_COUNTS:
+        em.emit(
+            f"kvp_merge_s{s}_c1",
+            lambda os_, ms, ls: (M.kvp_merge(os_, ms, ls),),
+            (
+                shape_struct((s, 1, hq, dh)),
+                shape_struct((s, 1, hq)),
+                shape_struct((s, 1, hq)),
+            ),
+            "o[1,hq,dh]",
+        )
+
+
+def flatten_weights(params, spec: M.ModelSpec):
+    """Canonical flat weight order — MUST match rust/src/engine/weights.rs."""
+    tensors = [("embed", params["embed"]), ("final_norm", params["final_norm"])]
+    for i, layer in enumerate(params["layers"]):
+        for nm in M.LAYER_WEIGHT_NAMES:
+            tensors.append((f"layers.{i}.{nm}", layer[nm]))
+    return tensors
+
+
+def write_weights(out_dir: str, params, spec: M.ModelSpec):
+    tensors = flatten_weights(params, spec)
+    table = []
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name, t in tensors:
+            arr = np.asarray(t, dtype="<f4")
+            data = arr.tobytes()
+            table.append({
+                "name": name, "shape": list(arr.shape),
+                "offset": offset, "size": len(data),
+            })
+            f.write(data)
+            offset += len(data)
+    return table
+
+
+def golden_generation(params, spec: M.ModelSpec):
+    prompt = list(b"The quadratic cost of attention ")
+    t0 = time.time()
+    generated = M.generate_greedy(params, prompt, 24, spec, chunk_size=16, use_kernel=True)
+    print(f"  golden generation ({len(generated)} tokens, {time.time()-t0:.1f}s)")
+    return {"prompt": prompt, "chunk_size": 16, "generated": generated}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", "--out-dir", dest="out_dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    spec = M.ModelSpec()
+    print(f"model: {spec.n_params/1e6:.1f}M params, {spec.n_layers} layers, "
+          f"hq={spec.hq} hkv={spec.hkv} d={spec.d_model} max_seq={spec.max_seq}")
+    em = Emitter(args.out_dir, spec)
+    emit_entries(em)
+
+    params = M.init_params(spec, args.seed)
+    table = write_weights(args.out_dir, params, spec)
+    golden = None if args.skip_golden else golden_generation(params, spec)
+
+    manifest = {
+        "spec": {
+            "vocab": spec.vocab, "d_model": spec.d_model, "n_layers": spec.n_layers,
+            "hq": spec.hq, "hkv": spec.hkv, "d_head": spec.d_head, "d_ff": spec.d_ff,
+            "rope_theta": spec.rope_theta, "max_seq": spec.max_seq,
+            "norm_eps": spec.norm_eps, "n_params": spec.n_params,
+        },
+        "chunk_buckets": list(CHUNK_BUCKETS),
+        "stage_buckets": list(STAGE_BUCKETS),
+        "kvp_shard_caps": list(KVP_SHARD_CAPS),
+        "kvp_merge_counts": list(KVP_MERGE_COUNTS),
+        "layer_weight_names": list(M.LAYER_WEIGHT_NAMES),
+        "entries": em.entries,
+        "weights": {"file": "weights.bin", "tensors": table},
+        "golden": golden,
+        "seed": args.seed,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(em.entries)} entries + weights + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

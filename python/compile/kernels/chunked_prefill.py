@@ -1,0 +1,40 @@
+"""Chunked-prefill attention (paper section 4.1-4.2) on top of the flash kernel.
+
+A prefill *chunk* of C query tokens attends to the whole KV prefix computed
+so far (which already includes the chunk's own K/V). The paper's key insight
+is that the arithmetic intensity of this operation depends only on C (Eq. 7),
+so even tiny chunks stay compute-bound — this kernel is the code path that
+makes that true, by parallelizing over both query and KV tiles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .flash import flash_attention
+
+
+def chunked_prefill_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_start,
+    kv_len,
+    *,
+    sm_scale: float | None = None,
+    block_q: int = 16,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """Causal GQA attention of one prefill chunk against the KV prefix.
+
+    q : [C, hq, d] chunk queries; q[i] sits at global position q_start + i.
+    k, v : [max_kv, hkv, d] padded KV cache; rows [0, kv_len) are valid and
+        must already contain this chunk's keys/values
+        (kv_len >= q_start + C).
+    Returns [C, hq, d].
+    """
+    o, _, _ = flash_attention(
+        q, k, v, q_start, 0, kv_len,
+        sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+    )
+    return o

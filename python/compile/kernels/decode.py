@@ -1,0 +1,35 @@
+"""Decode attention — single-token query over a long (padded) KV cache.
+
+Decode is the memory-bound phase (paper section 3.1): one query token scans
+the whole prefix. Structurally this is the KVP partial kernel with a single
+shard covering the full cache; the KV-tile grid axis is the FlashDecoding
+"parallelize over KV" dimension that keeps long-context decode efficient.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .flash import flash_attention
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    kv_len,
+    *,
+    sm_scale: float | None = None,
+    block_k: int = 128,
+) -> jnp.ndarray:
+    """q [nq, hq, d] (the trailing nq tokens of the sequence), k/v padded.
+
+    kv_len counts the valid KV rows *including* the query tokens' own
+    entries. Returns [nq, hq, d].
+    """
+    nq = q.shape[0]
+    o, _, _ = flash_attention(
+        q, k, v, kv_len - nq, 0, kv_len,
+        sm_scale=sm_scale, block_q=min(16, nq), block_k=block_k,
+    )
+    return o

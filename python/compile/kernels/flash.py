@@ -1,0 +1,223 @@
+"""Core Pallas flash-attention kernel with a 2D (query-block x KV-block) grid.
+
+This is the paper's L1 hot-spot, adapted from CUDA/FlashInfer to the TPU
+Pallas model (DESIGN.md `Hardware-Adaptation`):
+
+  * the grid axis over KV tiles is the TPU analogue of FlashDecoding's
+    "parallelize across KV tokens" — it is what makes *chunked prefill*
+    efficient when the query chunk is tiny but the KV prefix is huge
+    (paper section 4.1, Fig. 7);
+  * BlockSpecs express the HBM->VMEM staging the paper obtains with CUDA
+    threadblock tiling;
+  * online softmax (Milakov & Gimelshein) carries (m, l) across KV tiles,
+    and the same (m, l) statistics are exported so KV-parallel (KVP) shards
+    can be merged exactly (paper section 4.4).
+
+The kernel is always lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain HLO
+that the Rust runtime can run. Real-TPU efficiency is estimated structurally
+in DESIGN.md / EXPERIMENTS.md section Perf.
+
+Shapes (kernel-internal layout is head-major; wrappers transpose):
+  q : [hq, nq, d]      k, v : [hkv, nkv, d]
+  scalars (passed as (1,1) i32 arrays): q_start, kv_offset, kv_valid
+Returns (o [hq, nq, d], m [hq, nq], l [hq, nq]) where o is locally
+normalized and (m, l) are the online-softmax statistics over this KV range.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps exp() exact-zero and avoids NaN
+
+
+def _flash_kernel(
+    q_start_ref,
+    kv_offset_ref,
+    kv_valid_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    *,
+    sm_scale: float,
+    block_q: int,
+    block_k: int,
+    num_kv_blocks: int,
+):
+    _, i, j = (
+        pl.program_id(0),
+        pl.program_id(1),
+        pl.program_id(2),
+    )
+    q_start = q_start_ref[0, 0]
+    kv_offset = kv_offset_ref[0, 0]
+    kv_valid = kv_valid_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # Global positions of this tile's queries and keys.
+    q_pos = q_start + i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kv_local = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    kv_pos = kv_offset + kv_local
+
+    # Causal skip: if every key in the tile is beyond every query, do nothing.
+    tile_live = (kv_offset + j * block_k) <= (q_start + i * block_q + block_q - 1)
+
+    @pl.when(tile_live)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)  # [block_q, d]
+        k = k_ref[0].astype(jnp.float32)  # [block_k, d]
+        v = v_ref[0].astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [block_q, block_k]
+        mask = (kv_pos <= q_pos) & (kv_local < kv_valid)
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_prev = m_ref[0]  # [block_q]
+        l_prev = l_ref[0]
+        m_cur = jnp.max(scores, axis=-1)  # [block_q]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # exp(NEG_INF - NEG_INF) = 1, but l_prev = 0 there
+        p = jnp.exp(scores - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = o_ref[0] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        o_ref[0] = acc
+        m_ref[0] = m_new
+        l_ref[0] = l_new
+
+    # Final KV tile: normalize the accumulator by l (guard empty rows).
+    @pl.when(j == num_kv_blocks - 1)
+    def _finalize():
+        l = l_ref[0]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = o_ref[0] / denom[:, None]
+
+
+def flash_attention_hmajor(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_start: jnp.ndarray,
+    kv_offset: jnp.ndarray,
+    kv_valid: jnp.ndarray,
+    *,
+    sm_scale: float | None = None,
+    block_q: int = 16,
+    block_k: int = 128,
+):
+    """Head-major flash attention; see module docstring for semantics.
+
+    q [hq, nq, d], k/v [hkv, nkv, d]; nq % block_q == 0, nkv % block_k == 0
+    (use the `chunked_prefill` / `kvp` wrappers for padding + layout).
+    Scalars may be Python ints or i32 arrays; they are reshaped to (1, 1).
+    """
+    hq, nq, d = q.shape
+    hkv, nkv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    assert nq % block_q == 0, f"nq={nq} % block_q={block_q}"
+    assert nkv % block_k == 0, f"nkv={nkv} % block_k={block_k}"
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    num_q_blocks = nq // block_q
+    num_kv_blocks = nkv // block_k
+
+    def scal(x):
+        return jnp.asarray(x, jnp.int32).reshape(1, 1)
+
+    grid = (hq, num_q_blocks, num_kv_blocks)
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=float(sm_scale),
+        block_q=block_q,
+        block_k=block_k,
+        num_kv_blocks=num_kv_blocks,
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, i, j: (0, 0)),  # q_start
+            pl.BlockSpec((1, 1), lambda h, i, j: (0, 0)),  # kv_offset
+            pl.BlockSpec((1, 1), lambda h, i, j: (0, 0)),  # kv_valid
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_q), lambda h, i, j: (h, i)),
+            pl.BlockSpec((1, block_q), lambda h, i, j: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hq, nq, d), jnp.float32),
+            jax.ShapeDtypeStruct((hq, nq), jnp.float32),
+            jax.ShapeDtypeStruct((hq, nq), jnp.float32),
+        ],
+        interpret=True,
+    )(scal(q_start), scal(kv_offset), scal(kv_valid), q, k, v)
+    return o, m, l
+
+
+def _pad_axis(x, axis, multiple):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_start,
+    kv_offset,
+    kv_valid,
+    *,
+    sm_scale: float | None = None,
+    block_q: int = 16,
+    block_k: int = 128,
+):
+    """Sequence-major convenience wrapper.
+
+    q [nq, hq, d]; k, v [nkv, hkv, d]. Pads nq/nkv up to the block sizes,
+    transposes to head-major, runs the kernel, and slices the padding off.
+    Returns (o [nq, hq, d], m [nq, hq], l [nq, hq]).
+    """
+    nq = q.shape[0]
+    block_q = min(block_q, max(1, nq)) if nq < block_q else block_q
+    qh = jnp.transpose(q, (1, 0, 2))
+    kh = jnp.transpose(k, (1, 0, 2))
+    vh = jnp.transpose(v, (1, 0, 2))
+    qh, _ = _pad_axis(qh, 1, block_q)
+    kh, _ = _pad_axis(kh, 1, block_k)
+    vh, _ = _pad_axis(vh, 1, block_k)
+    # Padded queries are harmless (extra rows are discarded); padded KV rows
+    # are masked out because kv_valid only covers real rows.
+    o, m, l = flash_attention_hmajor(
+        qh, kh, vh, q_start, kv_offset, kv_valid,
+        sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+    )
+    o = jnp.transpose(o, (1, 0, 2))[:nq]
+    m = jnp.transpose(m, (1, 0))[:nq]
+    l = jnp.transpose(l, (1, 0))[:nq]
+    return o, m, l

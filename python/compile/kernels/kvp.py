@@ -1,0 +1,76 @@
+"""KV-cache parallelism (KVP) kernels — paper section 4.4.
+
+KVP shards the KV cache of a single long request across worker groups along
+the sequence dimension. Each worker computes *partial* attention of the
+(replicated) query against its local shard, emitting the online-softmax
+statistics (m, l); the coordinator merges the partials exactly. The merge
+communication volume depends only on the number of query tokens — never on
+the context length — which is what bounds TBT for multi-million contexts.
+
+`kvp_partial_attention` runs on each shard; `kvp_merge` combines shard
+outputs. Both are Pallas kernels validated against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .flash import flash_attention
+
+NEG_INF = -1e30
+
+
+def kvp_partial_attention(
+    q: jnp.ndarray,
+    k_shard: jnp.ndarray,
+    v_shard: jnp.ndarray,
+    q_start,
+    shard_start,
+    shard_len,
+    *,
+    sm_scale: float | None = None,
+    block_q: int = 16,
+    block_k: int = 128,
+):
+    """Partial attention of q against one KV shard.
+
+    q : [nq, hq, d] replicated query tokens (global positions q_start + i).
+    k_shard, v_shard : [shard_cap, hkv, d]; rows [0, shard_len) hold global
+        KV positions [shard_start, shard_start + shard_len).
+    Returns (o [nq, hq, d] locally normalized, m [nq, hq], l [nq, hq]).
+    """
+    return flash_attention(
+        q, k_shard, v_shard, q_start, shard_start, shard_len,
+        sm_scale=sm_scale, block_q=block_q, block_k=block_k,
+    )
+
+
+def _merge_kernel(o_ref, m_ref, l_ref, out_ref, *, num_shards: int):
+    """Single-block merge: refs hold the full [S, nq, hq(,d)] arrays."""
+    m = m_ref[...]  # [S, nq, hq]
+    l = l_ref[...]
+    o = o_ref[...]  # [S, nq, hq, d]
+    m_glob = jnp.max(m, axis=0)  # [nq, hq]
+    w = jnp.exp(m - m_glob[None]) * l  # [S, nq, hq]; exp(NEG_INF-m)=0 for dead shards
+    denom = jnp.sum(w, axis=0)
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    out_ref[...] = jnp.sum(o * w[..., None], axis=0) / denom[..., None]
+
+
+def kvp_merge(os_: jnp.ndarray, ms: jnp.ndarray, ls: jnp.ndarray) -> jnp.ndarray:
+    """Merge S shard partials: os_ [S, nq, hq, d], ms/ls [S, nq, hq].
+
+    Exactly reproduces monolithic softmax attention (ref.merge_partials_ref).
+    The payload per shard is O(nq * hq * d) — independent of context length.
+    """
+    s, nq, hq, d = os_.shape
+    kernel = functools.partial(_merge_kernel, num_shards=s)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((nq, hq, d), jnp.float32),
+        interpret=True,
+    )(os_.astype(jnp.float32), ms.astype(jnp.float32), ls.astype(jnp.float32))

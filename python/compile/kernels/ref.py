@@ -1,0 +1,125 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Everything here is deliberately written in the most direct way possible —
+full materialized attention matrices, explicit masks — so that the Pallas
+kernels (flash-style, tiled, online-softmax) can be validated against an
+implementation whose correctness is obvious.
+
+Conventions (shared with the kernels and the L2 model):
+  * q        : [nq, hq, d]     query chunk (hq query heads)
+  * k, v     : [nkv, hkv, d]   KV cache (hkv KV heads; GQA group = hq // hkv)
+  * q_start  : global position of q[0] in the sequence (chunked prefill)
+  * kv_len   : number of *valid* rows in k/v (the rest is padding)
+Causal rule: query at global position p attends to KV positions <= p.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def _expand_gqa(x: jnp.ndarray, hq: int) -> jnp.ndarray:
+    """[nkv, hkv, d] -> [nkv, hq, d] by repeating each KV head hq//hkv times."""
+    nkv, hkv, d = x.shape
+    assert hq % hkv == 0, f"hq={hq} not divisible by hkv={hkv}"
+    group = hq // hkv
+    return jnp.repeat(x, group, axis=1)
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_start,
+    kv_len,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    """Causal GQA attention of a query chunk against a (padded) KV cache.
+
+    Returns [nq, hq, d].
+    """
+    nq, hq, d = q.shape
+    nkv = k.shape[0]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kx = _expand_gqa(k, hq)  # [nkv, hq, d]
+    vx = _expand_gqa(v, hq)
+    # scores[h, i, j]
+    scores = jnp.einsum("ihd,jhd->hij", q, kx) * sm_scale
+    q_pos = q_start + jnp.arange(nq)[:, None]  # [nq, 1]
+    kv_pos = jnp.arange(nkv)[None, :]  # [1, nkv]
+    mask = (kv_pos <= q_pos) & (kv_pos < kv_len)  # [nq, nkv]
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    probs = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("hij,jhd->ihd", probs, vx)
+    return out
+
+
+def partial_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_start,
+    shard_start,
+    shard_len,
+    sm_scale: float | None = None,
+):
+    """KVP partial attention over one KV shard.
+
+    The shard holds KV positions [shard_start, shard_start + shard_len) of the
+    global sequence (k/v may be padded beyond shard_len). Returns the
+    *locally normalized* output together with the online-softmax statistics
+    needed to merge shards:
+
+      o : [nq, hq, d]  softmax(local scores) @ V   (normalized by local l)
+      m : [nq, hq]     local max score (NEG_INF where shard fully masked)
+      l : [nq, hq]     local sum of exp(score - m)
+    """
+    nq, hq, d = q.shape
+    nkv = k.shape[0]
+    if sm_scale is None:
+        sm_scale = 1.0 / (d ** 0.5)
+    kx = _expand_gqa(k, hq)
+    vx = _expand_gqa(v, hq)
+    scores = jnp.einsum("ihd,jhd->hij", q, kx) * sm_scale
+    q_pos = q_start + jnp.arange(nq)[:, None]
+    kv_pos = shard_start + jnp.arange(nkv)[None, :]
+    local = jnp.arange(nkv)[None, :]
+    mask = (kv_pos <= q_pos) & (local < shard_len)
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)  # [hq, nq]
+    # Guard fully-masked rows: exp(-inf - -inf) would be NaN.
+    safe_m = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(scores - safe_m[:, :, None])
+    p = jnp.where(mask[None, :, :], p, 0.0)
+    l = jnp.sum(p, axis=-1)  # [hq, nq]
+    o = jnp.einsum("hij,jhd->ihd", p, vx)
+    denom = jnp.where(l == 0.0, 1.0, l)
+    o = o / denom.T[:, :, None]
+    return o, m.T, l.T  # [nq,hq,d], [nq,hq], [nq,hq]
+
+
+def merge_partials_ref(os_, ms, ls):
+    """Merge KVP shard partials with online softmax.
+
+    os_ : [S, nq, hq, d]  locally-normalized partial outputs
+    ms  : [S, nq, hq]     local maxima
+    ls  : [S, nq, hq]     local exp-sums
+    Returns [nq, hq, d] — identical to monolithic softmax attention.
+    """
+    m_glob = jnp.max(ms, axis=0)  # [nq, hq]
+    safe = jnp.where(jnp.isfinite(m_glob), m_glob, 0.0)
+    w = jnp.exp(jnp.where(jnp.isfinite(ms), ms, NEG_INF) - safe[None]) * ls
+    denom = jnp.sum(w, axis=0)  # [nq, hq]
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    out = jnp.sum(os_ * w[..., None], axis=0) / denom[..., None]
+    return out
+
+
+def decode_attention_ref(q, k, v, kv_len, sm_scale=None):
+    """Single-token decode attention: q [nq, hq, d] over kv_len valid rows."""
+    nq = q.shape[0]
+    return attention_ref(q, k, v, q_start=kv_len - nq, kv_len=kv_len, sm_scale=sm_scale)

@@ -1,0 +1,233 @@
+"""L2: GQA Llama-style transformer in JAX, built on the L1 Pallas kernels.
+
+This is the *compile-path* model. `aot.py` lowers the entry points below to
+HLO text once; the Rust engine (rust/src/engine) loads the artifacts and owns
+all serving-time state (KV caches live as PJRT buffers managed from Rust).
+
+The model is deliberately pipeline-stage-shaped: the transformer is split
+into stages of `layers_per_stage` layers, and `stage_forward` is the unit the
+Rust SPP scheduler executes — chunk i+1 can enter stage 0 while chunk i is in
+stage 1, which is exactly the paper's Sequence Pipeline Parallelism (Fig. 9b).
+
+Entry points (all static-shape, AOT-lowered per chunk-size bucket):
+  embed(tokens[C], emb[V,D])                       -> h[C, D]
+  stage_forward(h[C,D], ck, cv, start, *weights)   -> (h', ck', cv')
+  lm_head(h[C,D], norm_w[D], emb[V,D])             -> logits[C, V]
+  kvp_partial(q, k_shard, v_shard, qs, ss, sl)     -> (o, m, l)
+  kvp_merge(os, ms, ls)                            -> o
+
+Weight values are inputs (not baked constants) so artifacts stay small and
+Rust can keep weights resident as device buffers across calls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref as kref
+from .kernels.chunked_prefill import chunked_prefill_attention
+from .kernels.kvp import kvp_merge, kvp_partial_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Architecture hyper-parameters (mirrored by rust/src/config presets)."""
+
+    vocab: int = 256  # byte-level tokenizer
+    d_model: int = 512
+    n_layers: int = 8
+    hq: int = 8
+    hkv: int = 2  # GQA group of 4, like Llama-3's 8:1 shape scaled down
+    d_head: int = 64
+    d_ff: int = 1408
+    rope_theta: float = 10000.0
+    max_seq: int = 2048
+    norm_eps: float = 1e-5
+
+    @property
+    def params_per_layer(self) -> int:
+        dm, dh = self.d_model, self.d_head
+        return (
+            dm * self.hq * dh  # wq
+            + 2 * dm * self.hkv * dh  # wk, wv
+            + self.hq * dh * dm  # wo
+            + 3 * dm * self.d_ff  # gate, up, down
+            + 2 * dm  # two rmsnorm gains
+        )
+
+    @property
+    def n_params(self) -> int:
+        return self.vocab * self.d_model + self.n_layers * self.params_per_layer + self.d_model
+
+
+# Canonical per-layer weight order — MUST match rust/src/engine/weights.rs.
+LAYER_WEIGHT_NAMES = (
+    "attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down",
+)
+
+
+def layer_weight_shapes(spec: ModelSpec):
+    dm, dh, hq, hkv, ff = spec.d_model, spec.d_head, spec.hq, spec.hkv, spec.d_ff
+    return {
+        "attn_norm": (dm,),
+        "wq": (dm, hq * dh),
+        "wk": (dm, hkv * dh),
+        "wv": (dm, hkv * dh),
+        "wo": (hq * dh, dm),
+        "mlp_norm": (dm,),
+        "w_gate": (dm, ff),
+        "w_up": (dm, ff),
+        "w_down": (ff, dm),
+    }
+
+
+def init_params(spec: ModelSpec, seed: int = 0):
+    """Deterministic random init (scaled normal) — the 'small real model'."""
+    key = jax.random.PRNGKey(seed)
+    shapes = layer_weight_shapes(spec)
+    params = {"embed": None, "final_norm": jnp.ones((spec.d_model,), jnp.float32), "layers": []}
+    key, sub = jax.random.split(key)
+    params["embed"] = (jax.random.normal(sub, (spec.vocab, spec.d_model)) * 0.02).astype(jnp.float32)
+    for _ in range(spec.n_layers):
+        layer = {}
+        for name in LAYER_WEIGHT_NAMES:
+            key, sub = jax.random.split(key)
+            shp = shapes[name]
+            if name.endswith("norm"):
+                layer[name] = jnp.ones(shp, jnp.float32)
+            else:
+                scale = 0.02 if name != "wo" and name != "w_down" else 0.02 / (2 * spec.n_layers) ** 0.5
+                layer[name] = (jax.random.normal(sub, shp) * scale).astype(jnp.float32)
+        params["layers"].append(layer)
+    return params
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x [n, h, d] at absolute `positions` [n]."""
+    n, h, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [n, half]
+    cos = jnp.cos(angles)[:, None, :]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k_cache, v_cache, q_start, kv_len, use_kernel, spec):
+    if use_kernel:
+        # Perf (EXPERIMENTS.md §Perf L1): grid-step count dominates
+        # interpret-mode CPU latency, so use the largest tiles the shapes
+        # allow. block_k=512 (vs the 128 default) quarters the KV grid and
+        # is still VMEM-trivial on real TPU (256 KiB/operand block);
+        # decode (c=1) uses a single full-cache KV tile; block_q=64 merges
+        # prefill query blocks (64x64 q-tile).
+        c = q.shape[0]
+        block_k = spec.max_seq if c == 1 else 512
+        return chunked_prefill_attention(
+            q, k_cache, v_cache, q_start, kv_len,
+            block_q=min(64, c), block_k=block_k,
+        )
+    return kref.attention_ref(q, k_cache, v_cache, q_start, kv_len)
+
+
+def layer_forward(h, ck, cv, start, lw, spec: ModelSpec, use_kernel: bool = True):
+    """One transformer layer over a chunk.
+
+    h [C, D]; ck, cv [M, hkv, dh] this layer's cache; start = global position
+    of h[0]. Returns (h', ck', cv') with the chunk's K/V written at
+    [start, start+C).
+    """
+    c = h.shape[0]
+    positions = start + jnp.arange(c)
+    x = rmsnorm(h, lw["attn_norm"], spec.norm_eps)
+    q = (x @ lw["wq"]).reshape(c, spec.hq, spec.d_head)
+    k = (x @ lw["wk"]).reshape(c, spec.hkv, spec.d_head)
+    v = (x @ lw["wv"]).reshape(c, spec.hkv, spec.d_head)
+    q = rope(q, positions, spec.rope_theta)
+    k = rope(k, positions, spec.rope_theta)
+    ck = jax.lax.dynamic_update_slice(ck, k, (start, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cv, v, (start, 0, 0))
+    attn = _attention(q, ck, cv, start, start + c, use_kernel, spec)
+    h = h + attn.reshape(c, spec.hq * spec.d_head) @ lw["wo"]
+    x = rmsnorm(h, lw["mlp_norm"], spec.norm_eps)
+    h = h + (jax.nn.silu(x @ lw["w_gate"]) * (x @ lw["w_up"])) @ lw["w_down"]
+    return h, ck, cv
+
+
+def embed(tokens: jnp.ndarray, emb: jnp.ndarray) -> jnp.ndarray:
+    """tokens [C] i32 -> h [C, D]."""
+    return emb[tokens]
+
+
+def stage_forward(h, ck, cv, start, layer_weights, spec: ModelSpec, use_kernel: bool = True):
+    """Run `len(layer_weights)` layers over a chunk.
+
+    ck, cv: [Lps, M, hkv, dh] — this stage's slice of the KV cache.
+    """
+    n = len(layer_weights)
+    cks, cvs = [], []
+    for i in range(n):
+        h, cki, cvi = layer_forward(h, ck[i], cv[i], start, layer_weights[i], spec, use_kernel)
+        cks.append(cki)
+        cvs.append(cvi)
+    return h, jnp.stack(cks), jnp.stack(cvs)
+
+
+def lm_head(h: jnp.ndarray, norm_w: jnp.ndarray, emb: jnp.ndarray, spec: ModelSpec) -> jnp.ndarray:
+    """h [C, D] -> logits [C, V] (tied embedding)."""
+    return rmsnorm(h, norm_w, spec.norm_eps) @ emb.T
+
+
+# ---------------------------------------------------------------------------
+# Full-model reference paths (used by tests and to produce golden outputs for
+# the Rust end-to-end check; never AOT-compiled).
+# ---------------------------------------------------------------------------
+
+def empty_cache(spec: ModelSpec):
+    shape = (spec.n_layers, spec.max_seq, spec.hkv, spec.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def forward_chunk(params, tokens, ck, cv, start, spec: ModelSpec, use_kernel=True):
+    """Full model over one chunk: returns (logits [C, V], ck', cv')."""
+    h = embed(tokens, params["embed"])
+    h, ck, cv = stage_forward(h, ck, cv, start, params["layers"], spec, use_kernel)
+    return lm_head(h, params["final_norm"], params["embed"], spec), ck, cv
+
+
+def generate_greedy(params, prompt, n_new, spec: ModelSpec, chunk_size=16, use_kernel=False):
+    """Chunked prefill + greedy decode; the golden path for the Rust e2e test."""
+    ck, cv = empty_cache(spec)
+    pos = 0
+    logits = None
+    prompt = jnp.asarray(prompt, jnp.int32)
+    while pos < len(prompt):
+        c = min(chunk_size, len(prompt) - pos)
+        logits, ck, cv = forward_chunk(params, prompt[pos:pos + c], ck, cv, pos, spec, use_kernel)
+        pos += c
+    out = []
+    tok = jnp.argmax(logits[-1]).astype(jnp.int32)
+    for _ in range(n_new):
+        out.append(int(tok))
+        logits, ck, cv = forward_chunk(params, tok[None], ck, cv, pos, spec, use_kernel)
+        pos += 1
+        tok = jnp.argmax(logits[-1]).astype(jnp.int32)
+    return out
+
+
+# Re-exports for aot.py
+__all__ = [
+    "ModelSpec", "LAYER_WEIGHT_NAMES", "layer_weight_shapes", "init_params",
+    "embed", "stage_forward", "lm_head", "forward_chunk", "generate_greedy",
+    "empty_cache", "kvp_partial_attention", "kvp_merge",
+]

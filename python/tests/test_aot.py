@@ -1,0 +1,106 @@
+"""AOT artifacts: manifest consistency and HLO round-trip sanity.
+
+These tests run against ../artifacts if `make artifacts` has been executed;
+otherwise they are skipped (the kernel/model tests above are the gating
+correctness signal and never skip).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built (run `make artifacts`)"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_all_entry_files_exist(manifest):
+    for name, e in manifest["entries"].items():
+        path = os.path.join(ART, e["file"])
+        assert os.path.exists(path), f"missing artifact for {name}"
+        assert os.path.getsize(path) > 100
+
+
+def test_entry_coverage(manifest):
+    """Every (bucket x stage) combination the Rust engine schedules exists."""
+    names = set(manifest["entries"])
+    for c in manifest["chunk_buckets"]:
+        assert f"embed_c{c}" in names
+        assert f"lm_head_c{c}" in names
+        for lps in manifest["stage_buckets"]:
+            assert f"stage_c{c}_l{lps}" in names
+    for cap in manifest["kvp_shard_caps"]:
+        assert f"kvp_partial_c1_s{cap}" in names
+    for s in manifest["kvp_merge_counts"]:
+        assert f"kvp_merge_s{s}_c1" in names
+
+
+def test_stage_buckets_cover_model(manifest):
+    n_layers = manifest["spec"]["n_layers"]
+    for lps in manifest["stage_buckets"]:
+        assert n_layers % lps == 0, "stage bucket must tile the layer stack"
+
+
+def test_weights_table(manifest):
+    wb = manifest["weights"]
+    path = os.path.join(ART, wb["file"])
+    total = os.path.getsize(path)
+    end = 0
+    for t in wb["tensors"]:
+        assert t["offset"] == end, "weight table must be contiguous"
+        assert t["size"] == int(np.prod(t["shape"])) * 4
+        end = t["offset"] + t["size"]
+    assert end == total
+    # spec param count == bytes/4
+    assert total // 4 == manifest["spec"]["n_params"]
+
+
+def test_weight_order_matches_contract(manifest):
+    """rust/src/engine/weights.rs depends on this exact order."""
+    names = [t["name"] for t in manifest["weights"]["tensors"]]
+    assert names[0] == "embed"
+    assert names[1] == "final_norm"
+    lw = manifest["layer_weight_names"]
+    i = 2
+    for layer in range(manifest["spec"]["n_layers"]):
+        for nm in lw:
+            assert names[i] == f"layers.{layer}.{nm}"
+            i += 1
+    assert i == len(names)
+
+
+def test_stage_entry_signature(manifest):
+    spec = manifest["spec"]
+    e = manifest["entries"]["stage_c16_l2"]
+    ins = e["inputs"]
+    assert ins[0] == {"shape": [16, spec["d_model"]], "dtype": "f32"}
+    assert ins[1]["shape"] == [2, spec["max_seq"], spec["hkv"], spec["d_head"]]
+    assert ins[3] == {"shape": [1], "dtype": "i32"}
+    assert len(ins) == 4 + 2 * len(manifest["layer_weight_names"])
+
+
+def test_golden_generation_present(manifest):
+    g = manifest["golden"]
+    assert g is not None
+    assert len(g["generated"]) >= 8
+    assert all(0 <= t < manifest["spec"]["vocab"] for t in g["generated"])
+
+
+def test_hlo_text_parseable_header(manifest):
+    """HLO text must start with an HloModule header (what the Rust loader
+    feeds HloModuleProto::from_text_file)."""
+    for name, e in list(manifest["entries"].items())[:5]:
+        with open(os.path.join(ART, e["file"])) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), name

@@ -1,0 +1,144 @@
+"""L1 correctness: flash kernel vs pure-jnp oracle (pytest + hypothesis)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.chunked_prefill import chunked_prefill_attention
+from compile.kernels.decode import decode_attention
+from compile.kernels.flash import flash_attention
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def mk(nq, max_kv, hq, hkv, d, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((nq, hq, d)), dtype)
+    k = jnp.asarray(rng.standard_normal((max_kv, hkv, d)), dtype)
+    v = jnp.asarray(rng.standard_normal((max_kv, hkv, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("nq", [1, 3, 16, 33])
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (8, 2), (8, 1)])
+def test_flash_matches_ref_basic(nq, hq, hkv):
+    d, max_kv = 32, 256
+    q, k, v = mk(nq, max_kv, hq, hkv, d, seed=nq * 10 + hq)
+    kv_len = 100 + nq
+    q_start = kv_len - nq
+    o, _, _ = flash_attention(q, k, v, q_start, 0, kv_len)
+    o_ref = ref.attention_ref(q, k, v, q_start, kv_len)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+@pytest.mark.parametrize("block_q,block_k", [(1, 32), (8, 64), (16, 128), (32, 256)])
+def test_flash_block_shapes(block_q, block_k):
+    q, k, v = mk(32, 512, 8, 2, 64, seed=7)
+    o, _, _ = flash_attention(q, k, v, 200, 0, 232, block_q=block_q, block_k=block_k)
+    o_ref = ref.attention_ref(q, k, v, 200, 232)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_first_chunk_at_origin():
+    """q_start=0: each query i attends only to positions 0..i."""
+    q, k, v = mk(16, 128, 8, 2, 32, seed=3)
+    o, _, _ = flash_attention(q, k, v, 0, 0, 16)
+    o_ref = ref.attention_ref(q, k, v, 0, 16)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_kv_len_masks_padding():
+    """Garbage beyond kv_len must not affect the output."""
+    q, k, v = mk(8, 256, 8, 2, 32, seed=4)
+    kv_len = 64
+    o1, _, _ = flash_attention(q, k, v, kv_len - 8, 0, kv_len)
+    k2 = k.at[kv_len:].set(1e6)
+    v2 = v.at[kv_len:].set(-1e6)
+    o2, _, _ = flash_attention(q, k2, v2, kv_len - 8, 0, kv_len)
+    np.testing.assert_allclose(o1, o2, rtol=0, atol=0)
+
+
+def test_causality_future_kv_ignored():
+    """Perturbing KV rows in (q_pos, kv_len) ... i.e. future rows for early
+    queries ... must not change those queries' outputs."""
+    nq, kv_len = 8, 40
+    q, k, v = mk(nq, 128, 4, 2, 32, seed=5)
+    q_start = kv_len - nq
+    o1, _, _ = flash_attention(q, k, v, q_start, 0, kv_len)
+    # Row kv_len-1 is visible only to the last query.
+    k2 = k.at[kv_len - 1].add(3.0)
+    o2, _, _ = flash_attention(q, k2, v, q_start, 0, kv_len)
+    np.testing.assert_allclose(o1[:-1], o2[:-1], rtol=0, atol=0)
+    assert not np.allclose(o1[-1], o2[-1])
+
+
+def test_chunked_prefill_equals_monolithic():
+    """Processing a prompt in chunks == processing it in one shot (Fig. 6)."""
+    n, hq, hkv, d = 96, 8, 2, 32
+    q, k, v = mk(n, n, hq, hkv, d, seed=6)
+    mono = ref.attention_ref(q, k, v, 0, n)
+    got = []
+    for start in range(0, n, 32):
+        got.append(chunked_prefill_attention(q[start:start + 32], k, v, start, start + 32))
+    np.testing.assert_allclose(jnp.concatenate(got), mono, **TOL)
+
+
+def test_decode_attention_wrapper():
+    q, k, v = mk(1, 256, 8, 2, 64, seed=8)
+    o = decode_attention(q, k, v, 200)
+    o_ref = ref.decode_attention_ref(q, k, v, 200)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_scale_override():
+    q, k, v = mk(4, 128, 4, 2, 32, seed=9)
+    o, _, _ = flash_attention(q, k, v, 60, 0, 64, sm_scale=0.5)
+    o_ref = ref.attention_ref(q, k, v, 60, 64, sm_scale=0.5)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_stats_match_ref_partials():
+    q, k, v = mk(4, 128, 4, 2, 32, seed=10)
+    o, m, l = flash_attention(q, k, v, 60, 0, 64)
+    o_r, m_r, l_r = ref.partial_attention_ref(q, k, v, 60, 0, 64)
+    np.testing.assert_allclose(o, o_r, **TOL)
+    np.testing.assert_allclose(m, m_r, **TOL)
+    np.testing.assert_allclose(l, l_r, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nq=st.integers(1, 24),
+    extra_kv=st.integers(0, 150),
+    hq_group=st.sampled_from([(4, 4), (8, 2), (4, 1)]),
+    d=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_hypothesis_sweep(nq, extra_kv, hq_group, d, seed):
+    """Randomized shape/position sweep: kernel == oracle everywhere."""
+    hq, hkv = hq_group
+    kv_len = nq + extra_kv
+    max_kv = kv_len + (seed % 7)  # arbitrary padding
+    q, k, v = mk(nq, max_kv, hq, hkv, d, seed=seed)
+    q_start = kv_len - nq
+    o, _, _ = flash_attention(q, k, v, q_start, 0, kv_len)
+    o_ref = ref.attention_ref(q, k, v, q_start, kv_len)
+    np.testing.assert_allclose(o, o_ref, rtol=5e-5, atol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([np.float32, jnp.bfloat16]),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_dtypes(dtype, seed):
+    """bf16 inputs: kernel accumulates in f32; compare against f32 oracle
+    at bf16-appropriate tolerance."""
+    q, k, v = mk(8, 128, 8, 2, 32, seed=seed, dtype=np.float32)
+    qd, kd, vd = (x.astype(dtype) for x in (q, k, v))
+    o, _, _ = flash_attention(qd, kd, vd, 56, 0, 64)
+    o_ref = ref.attention_ref(q, k, v, 56, 64)
+    tol = 5e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32), o_ref, rtol=tol, atol=tol)

@@ -1,0 +1,117 @@
+"""KVP kernels: shard partials + online-softmax merge == monolithic attention."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.kvp import kvp_merge, kvp_partial_attention
+
+TOL = dict(rtol=3e-5, atol=3e-5)
+
+
+def mk(nq, max_kv, hq, hkv, d, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((nq, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((max_kv, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((max_kv, hkv, d)), jnp.float32)
+    return q, k, v
+
+
+def shard_and_merge(q, k, v, q_start, kv_len, shard_cap, n_shards):
+    """The exact orchestration the Rust KVP manager performs."""
+    parts = []
+    for s in range(n_shards):
+        lo = s * shard_cap
+        ks, vs = k[lo:lo + shard_cap], v[lo:lo + shard_cap]
+        slen = int(np.clip(kv_len - lo, 0, shard_cap))
+        parts.append(kvp_partial_attention(q, ks, vs, q_start, lo, slen))
+    os_ = jnp.stack([p[0] for p in parts])
+    ms = jnp.stack([p[1] for p in parts])
+    ls = jnp.stack([p[2] for p in parts])
+    return kvp_merge(os_, ms, ls)
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_kvp_equals_monolithic(n_shards):
+    shard_cap = 128
+    q, k, v = mk(1, shard_cap * n_shards, 8, 2, 64, seed=n_shards)
+    kv_len = shard_cap * n_shards - 17
+    o = shard_and_merge(q, k, v, kv_len - 1, kv_len, shard_cap, n_shards)
+    o_ref = ref.attention_ref(q, k, v, kv_len - 1, kv_len)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_kvp_dead_shard():
+    """A shard entirely beyond kv_len contributes nothing (dynamic onboarding:
+    freshly added workers start empty)."""
+    q, k, v = mk(1, 256, 8, 2, 32, seed=9)
+    kv_len = 100  # shard 1 (rows 128..256) completely invalid
+    o = shard_and_merge(q, k, v, kv_len - 1, kv_len, 128, 2)
+    o_ref = ref.attention_ref(q, k, v, kv_len - 1, kv_len)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_kvp_multi_query_chunk():
+    """KVP also applies to prefill chunks (paper Eq. 10)."""
+    q, k, v = mk(16, 256, 8, 2, 32, seed=11)
+    kv_len = 230
+    o = shard_and_merge(q, k, v, kv_len - 16, kv_len, 128, 2)
+    o_ref = ref.attention_ref(q, k, v, kv_len - 16, kv_len)
+    np.testing.assert_allclose(o, o_ref, **TOL)
+
+
+def test_merge_matches_ref_merge():
+    q, k, v = mk(4, 256, 4, 2, 32, seed=12)
+    parts = [
+        kvp_partial_attention(q, k[:128], v[:128], 251, 0, 128),
+        kvp_partial_attention(q, k[128:], v[128:], 251, 128, 124),
+    ]
+    os_ = jnp.stack([p[0] for p in parts])
+    ms = jnp.stack([p[1] for p in parts])
+    ls = jnp.stack([p[2] for p in parts])
+    got = kvp_merge(os_, ms, ls)
+    want = ref.merge_partials_ref(os_, ms, ls)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_merge_is_permutation_invariant():
+    """Shard order must not matter — the coordinator may receive partials
+    out of order."""
+    q, k, v = mk(2, 256, 4, 2, 32, seed=13)
+    parts = [
+        kvp_partial_attention(q, k[:128], v[:128], 255, 0, 128),
+        kvp_partial_attention(q, k[128:], v[128:], 255, 128, 128),
+    ]
+    fwd = kvp_merge(
+        jnp.stack([parts[0][0], parts[1][0]]),
+        jnp.stack([parts[0][1], parts[1][1]]),
+        jnp.stack([parts[0][2], parts[1][2]]),
+    )
+    rev = kvp_merge(
+        jnp.stack([parts[1][0], parts[0][0]]),
+        jnp.stack([parts[1][1], parts[0][1]]),
+        jnp.stack([parts[1][2], parts[0][2]]),
+    )
+    np.testing.assert_allclose(fwd, rev, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    kv_len=st.integers(1, 500),
+    n_shards=st.integers(1, 4),
+    nq=st.sampled_from([1, 2, 8]),
+    seed=st.integers(0, 2**16),
+)
+def test_kvp_hypothesis_sweep(kv_len, n_shards, nq, seed):
+    """Any (kv_len, shard count, query count): sharded == monolithic."""
+    shard_cap = 128
+    kv_len = max(kv_len, nq)
+    max_kv = shard_cap * n_shards
+    if kv_len > max_kv:
+        kv_len = max_kv
+    q, k, v = mk(nq, max_kv, 8, 2, 32, seed=seed)
+    o = shard_and_merge(q, k, v, kv_len - nq, kv_len, shard_cap, n_shards)
+    o_ref = ref.attention_ref(q, k, v, kv_len - nq, kv_len)
+    np.testing.assert_allclose(o, o_ref, rtol=5e-5, atol=5e-5)

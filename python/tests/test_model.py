@@ -1,0 +1,122 @@
+"""L2 model: shape checks, kernel-vs-ref path equivalence, chunking and
+stage-composition invariants (what SPP relies on)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+SPEC = M.ModelSpec(max_seq=256, n_layers=4, d_model=128, d_ff=352, hq=4, hkv=2, d_head=32)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(SPEC, seed=0)
+
+
+def toks(n, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).integers(0, SPEC.vocab, n), jnp.int32)
+
+
+def test_param_count_matches_spec(params):
+    total = params["embed"].size + params["final_norm"].size
+    for layer in params["layers"]:
+        total += sum(w.size for w in layer.values())
+    assert total == SPEC.n_params
+
+
+def test_forward_shapes(params):
+    ck, cv = M.empty_cache(SPEC)
+    logits, ck, cv = M.forward_chunk(params, toks(16), ck, cv, 0, SPEC)
+    assert logits.shape == (16, SPEC.vocab)
+    assert ck.shape == (SPEC.n_layers, SPEC.max_seq, SPEC.hkv, SPEC.d_head)
+    assert jnp.all(jnp.isfinite(logits))
+
+
+def test_kernel_path_matches_ref_path(params):
+    ck, cv = M.empty_cache(SPEC)
+    l_kern, ck1, cv1 = M.forward_chunk(params, toks(32), ck, cv, 0, SPEC, use_kernel=True)
+    ck, cv = M.empty_cache(SPEC)
+    l_ref, ck2, cv2 = M.forward_chunk(params, toks(32), ck, cv, 0, SPEC, use_kernel=False)
+    np.testing.assert_allclose(l_kern, l_ref, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(ck1, ck2, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunks", [[48], [16, 16, 16], [32, 16], [1] * 8 + [40]])
+def test_chunked_prefill_invariance(params, chunks):
+    """Any chunking of the prompt yields the same final logits — the
+    correctness property adaptive chunking (section 4.2) depends on."""
+    if sum(chunks) != 48:
+        chunks = chunks + [48 - sum(chunks)]
+    t = toks(48, seed=2)
+    ck, cv = M.empty_cache(SPEC)
+    full, _, _ = M.forward_chunk(params, t, ck, cv, 0, SPEC)
+    ck, cv = M.empty_cache(SPEC)
+    pos = 0
+    last = None
+    for c in chunks:
+        last, ck, cv = M.forward_chunk(params, t[pos:pos + c], ck, cv, pos, SPEC)
+        pos += c
+    np.testing.assert_allclose(last[-1], full[-1], rtol=2e-4, atol=2e-4)
+
+
+def test_stage_composition_equals_full_model(params):
+    """Running the model as 2 stages of 2 layers == monolithic forward —
+    the invariant SPP staging relies on."""
+    t = toks(16, seed=3)
+    ck, cv = M.empty_cache(SPEC)
+    full, ckf, cvf = M.forward_chunk(params, t, ck, cv, 0, SPEC)
+
+    h = M.embed(t, params["embed"])
+    shape = (2, SPEC.max_seq, SPEC.hkv, SPEC.d_head)
+    ck0, cv0 = jnp.zeros(shape), jnp.zeros(shape)
+    ck1, cv1 = jnp.zeros(shape), jnp.zeros(shape)
+    h, ck0, cv0 = M.stage_forward(h, ck0, cv0, 0, params["layers"][:2], SPEC)
+    h, ck1, cv1 = M.stage_forward(h, ck1, cv1, 0, params["layers"][2:], SPEC)
+    logits = M.lm_head(h, params["final_norm"], params["embed"], SPEC)
+    np.testing.assert_allclose(logits, full, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(jnp.concatenate([ck0, ck1]), ckf, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_step_consistency(params):
+    """Prefill of n+1 tokens == prefill of n tokens + one decode step."""
+    t = toks(17, seed=4)
+    ck, cv = M.empty_cache(SPEC)
+    full, _, _ = M.forward_chunk(params, t, ck, cv, 0, SPEC)
+    ck, cv = M.empty_cache(SPEC)
+    _, ck, cv = M.forward_chunk(params, t[:16], ck, cv, 0, SPEC)
+    dec, _, _ = M.forward_chunk(params, t[16:], ck, cv, 16, SPEC)
+    np.testing.assert_allclose(dec[-1], full[-1], rtol=2e-4, atol=2e-4)
+
+
+def test_generate_greedy_deterministic(params):
+    out1 = M.generate_greedy(params, list(b"hello"), 8, SPEC)
+    out2 = M.generate_greedy(params, list(b"hello"), 8, SPEC)
+    assert out1 == out2
+    assert all(0 <= t < SPEC.vocab for t in out1)
+
+
+def test_rope_is_relative(params):
+    """RoPE: shifting both q and k positions by the same delta preserves
+    q.k dot products (the property that makes cache-relative positions
+    work)."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((4, 2, 32)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((4, 2, 32)), jnp.float32)
+    p = jnp.arange(4)
+    a = M.rope(x, p, 10000.0)
+    b = M.rope(y, p, 10000.0)
+    a2 = M.rope(x, p + 100, 10000.0)
+    b2 = M.rope(y, p + 100, 10000.0)
+    dots1 = jnp.einsum("nhd,nhd->nh", a, b)
+    dots2 = jnp.einsum("nhd,nhd->nh", a2, b2)
+    np.testing.assert_allclose(dots1, dots2, rtol=1e-4, atol=1e-4)
+
+
+def test_rmsnorm_scale_invariance():
+    x = jnp.asarray(np.random.default_rng(6).standard_normal((3, 16)), jnp.float32)
+    w = jnp.ones((16,))
+    n1 = M.rmsnorm(x, w, 0.0)
+    n2 = M.rmsnorm(5.0 * x, w, 0.0)
+    np.testing.assert_allclose(n1, n2, rtol=1e-5, atol=1e-5)

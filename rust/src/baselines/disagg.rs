@@ -1,0 +1,127 @@
+//! Prefill-decode disaggregation baseline (section 2.4, DistServe/Splitwise
+//! style; revisited in section 7 "online vs offline inference").
+//!
+//! Dedicated prefill workers run homogeneous prefill batches; the finished
+//! KV cache is then shipped to decode workers. For long contexts the paper
+//! argues this is unattractive **online** because the transfer volume is the
+//! whole KV cache (hundreds of GB at 1M+ tokens) and the cache occupies both
+//! pools during the handoff — but attractive **offline** (context building),
+//! which this model also quantifies.
+
+use crate::config::{HardwareConfig, ModelConfig, ParallelismConfig};
+use crate::perfmodel::{BatchShape, PerfModel};
+
+#[derive(Debug, Clone)]
+pub struct DisaggModel {
+    pm: PerfModel,
+    /// Effective KV transfer bandwidth between the pools (bytes/s). IB per
+    /// GPU pair times the TP degree (parallel planes).
+    pub transfer_bw: f64,
+}
+
+/// Latency breakdown of a disaggregated request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DisaggLatency {
+    pub prefill_s: f64,
+    pub transfer_s: f64,
+    pub decode_tbt_s: f64,
+}
+
+impl DisaggLatency {
+    /// TTFT as the user sees it: prefill + cache handoff.
+    pub fn ttft_s(&self) -> f64 {
+        self.prefill_s + self.transfer_s
+    }
+}
+
+impl DisaggModel {
+    pub fn new(model: ModelConfig, hw: HardwareConfig, parallel: ParallelismConfig) -> DisaggModel {
+        let transfer_bw = hw.inter_node.bandwidth * parallel.tp as f64;
+        DisaggModel {
+            pm: PerfModel::new(model, hw, parallel),
+            transfer_bw,
+        }
+    }
+
+    /// KV bytes that must cross pools for an `n`-token context.
+    pub fn kv_transfer_bytes(&self, n: u64) -> f64 {
+        self.pm.model.kv_bytes(n) as f64
+    }
+
+    pub fn latency(&self, n: u64, chunk: u64) -> DisaggLatency {
+        DisaggLatency {
+            prefill_s: self.pm.prefill_time_spp(n, chunk),
+            transfer_s: self.kv_transfer_bytes(n) / self.transfer_bw,
+            decode_tbt_s: self
+                .pm
+                .iteration_time(&BatchShape::decode_only(&[n]))
+                .total(),
+        }
+    }
+
+    /// Peak memory pressure during handoff: the cache lives in BOTH pools.
+    pub fn handoff_bytes(&self, n: u64) -> f64 {
+        2.0 * self.kv_transfer_bytes(n)
+    }
+
+    pub fn perf_model(&self) -> &PerfModel {
+        &self.pm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentConfig;
+
+    fn disagg(spp: u32) -> DisaggModel {
+        let d = DeploymentConfig::llama3_8b_tp8().with_parallel(8, spp, 1);
+        DisaggModel::new(d.model, d.hardware, d.parallel)
+    }
+
+    #[test]
+    fn transfer_stalls_decode_at_long_context() {
+        // Section 2.4: the handoff moves the *whole* KV cache — at long
+        // context that is a stall worth hundreds of decode iterations
+        // (prefill itself is quadratic, so the linear transfer never beats
+        // it; the cost is felt against decode-side interactivity and
+        // memory, not prefill time).
+        let m = disagg(16);
+        let l = m.latency(4_000_000, 4096);
+        assert!(
+            l.transfer_s > 50.0 * l.decode_tbt_s,
+            "transfer {} vs tbt {}",
+            l.transfer_s,
+            l.decode_tbt_s
+        );
+    }
+
+    #[test]
+    fn transfer_is_small_for_short_context() {
+        // Short contexts: the handoff is a few ms — why disaggregation IS
+        // attractive at ordinary lengths (Splitwise/DistServe).
+        let m = disagg(1);
+        let l = m.latency(8_000, 2048);
+        assert!(l.transfer_s < 0.010, "{}", l.transfer_s);
+        assert!(l.transfer_s < l.prefill_s);
+    }
+
+    #[test]
+    fn handoff_doubles_memory() {
+        let m = disagg(1);
+        let n = 1_000_000;
+        assert_eq!(m.handoff_bytes(n), 2.0 * m.kv_transfer_bytes(n));
+        // 8B @1M: ~131 GB KV -> handoff pressure ~262 GB
+        let gb = m.handoff_bytes(n) / 1e9;
+        assert!((100.0..400.0).contains(&gb), "{gb} GB");
+    }
+
+    #[test]
+    fn medha_colocated_ttft_beats_disagg_online() {
+        // Same GPUs: Medha serves TTFT without the transfer term.
+        let m = disagg(8);
+        let l = m.latency(2_000_000, 4096);
+        let medha_ttft = m.perf_model().prefill_time_spp(2_000_000, 4096);
+        assert!(l.ttft_s() > medha_ttft);
+    }
+}

@@ -1,0 +1,22 @@
+//! Baseline systems the paper compares against, reimplemented as scheduling
+//! / parallelism policies over the same roofline substrate (DESIGN.md §3):
+//!
+//! * **Ring / Striped attention** (Liu et al. / Brandon et al.): sequence-
+//!   parallel prefill across servers with cyclic KV transfers — fast
+//!   prefill, but monolithic (no preemption, no batching) and no decode
+//!   story (Table 1, Figs. 14a/14b).
+//! * **vLLM-like engine**: continuous batching without Medha's platform
+//!   optimizations — centralized scheduler overhead and CPU-side page-table
+//!   copies that grow with context length (Fig. 13).
+//! * **Conventional pipeline parallelism** is in
+//!   `coordinator::spp::conventional_pp_prefill_schedule` (Fig. 9a).
+
+pub mod disagg;
+pub mod ring;
+pub mod table1;
+pub mod vllm;
+
+pub use disagg::{DisaggLatency, DisaggModel};
+pub use ring::{ring_prefill_time, striped_prefill_time, RingConfig};
+pub use table1::{capability_matrix, Capability};
+pub use vllm::VllmModel;

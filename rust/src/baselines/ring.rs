@@ -1,0 +1,145 @@
+//! Ring & Striped attention prefill-time models (sections 2.3, 3.2).
+//!
+//! Both shard the *sequence* across `p` worker groups (each group = one TP
+//! domain, typically a server). Computation proceeds in `p` rounds; each
+//! round a group computes attention of its query shard against the KV shard
+//! it currently holds, then forwards the KV shard around the ring. Per-round
+//! time is max(compute, transfer) — when shards get small the transfer
+//! dominates and scaling collapses (the paper's C3).
+//!
+//! * **Ring** assigns contiguous query blocks. With causal masking the
+//!   worker holding the last block does ~p/(p+1)... ~2x the average work in
+//!   the worst round, and rounds are synchronized, so the critical path sees
+//!   the *unbalanced* maximum each round.
+//! * **Striped** assigns round-robin token strips, making every round's
+//!   per-worker work essentially uniform (the ~1.5x fix).
+
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::perfmodel::counts;
+
+#[derive(Debug, Clone)]
+pub struct RingConfig {
+    /// Sequence-parallel degree (worker groups in the ring).
+    pub p: u32,
+    /// TP degree inside each group (shares one server).
+    pub tp: u32,
+}
+
+/// Per-round KV-shard transfer time (inter-node link; KV for n/p tokens,
+/// one layer — transfers overlap per layer with compute of the same layer).
+fn round_transfer_s(m: &ModelConfig, hw: &HardwareConfig, shard_tokens: u64) -> f64 {
+    let bytes = counts::attn_read_bytes(m, shard_tokens);
+    bytes / hw.inter_node.bandwidth + hw.inter_node.latency_s
+}
+
+/// Striped attention prefill latency for `n` tokens.
+pub fn striped_prefill_time(m: &ModelConfig, hw: &HardwareConfig, cfg: &RingConfig, n: u64) -> f64 {
+    sequence_parallel_prefill(m, hw, cfg, n, 1.0)
+}
+
+/// Ring attention prefill latency: same structure with the causal-imbalance
+/// penalty on the compute term (paper: striped is ~1.5x faster).
+pub fn ring_prefill_time(m: &ModelConfig, hw: &HardwareConfig, cfg: &RingConfig, n: u64) -> f64 {
+    sequence_parallel_prefill(m, hw, cfg, n, ring_imbalance(cfg.p))
+}
+
+/// With contiguous causal blocks, round r's busiest worker computes a full
+/// (unmasked) block-pair while the average worker computes half — the
+/// synchronized rounds run at the max. Imbalance -> 2 - 1/p.
+fn ring_imbalance(p: u32) -> f64 {
+    2.0 - 1.0 / p as f64
+}
+
+fn sequence_parallel_prefill(
+    m: &ModelConfig,
+    hw: &HardwareConfig,
+    cfg: &RingConfig,
+    n: u64,
+    imbalance: f64,
+) -> f64 {
+    let p = cfg.p.max(1) as u64;
+    let shard = n.div_ceil(p);
+    let group_flops = hw.sustained_flops() * cfg.tp as f64;
+
+    // Causal attention FLOPs for the whole prefill, one layer:
+    let total_attn = 2.0 * (n as f64) * (n as f64) * m.d_head as f64 * m.hq as f64;
+    // Ideal per-round, per-worker compute (p rounds, p workers):
+    let per_round_ideal = total_attn / (p * p) as f64;
+    let round_compute = per_round_ideal * imbalance / group_flops;
+    let round_comm = round_transfer_s(m, hw, shard);
+    // p synchronized rounds per layer. At inference the causal mask leaves
+    // bubbles that defeat the training-style compute/comm overlap (the
+    // paper's C3: "KV cache block transfers become the bottleneck"), so the
+    // transfer is largely exposed on the critical path.
+    let attn_time = p as f64 * (round_compute + round_comm) * m.n_layers as f64;
+
+    // Linear layers are data-parallel over the sequence shards (each worker
+    // runs its n/p tokens through the full stack).
+    let lin_flops = counts::linear_flops(m, shard) * m.n_layers as f64;
+    let lin_bytes = counts::weight_bytes_per_layer(m) * m.n_layers as f64;
+    let lin_time = (lin_flops / group_flops)
+        .max(lin_bytes / (hw.sustained_bw() * cfg.tp as f64));
+
+    attn_time + lin_time + hw.cpu_overhead_s
+}
+
+/// Preemption granularity: ring/striped run the prefill as one monolithic
+/// collective — a competing request waits for the *whole* thing (Fig. 14b).
+pub fn preemption_granularity_s(prefill_time: f64) -> f64 {
+    prefill_time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{HardwareConfig, ModelConfig};
+
+    fn setup() -> (ModelConfig, HardwareConfig) {
+        (ModelConfig::llama3_8b(), HardwareConfig::dgx_h100())
+    }
+
+    #[test]
+    fn striped_beats_ring() {
+        let (m, hw) = setup();
+        let cfg = RingConfig { p: 8, tp: 8 };
+        let ring = ring_prefill_time(&m, &hw, &cfg, 1_000_000);
+        let striped = striped_prefill_time(&m, &hw, &cfg, 1_000_000);
+        let speedup = ring / striped;
+        // paper cites ~1.5x
+        assert!((1.2..2.1).contains(&speedup), "speedup={speedup}");
+    }
+
+    #[test]
+    fn scaling_degrades_when_shards_get_small() {
+        // C3: fixed 64K context; at high p the per-round transfer dominates
+        // and efficiency collapses.
+        let (m, hw) = setup();
+        let t1 = striped_prefill_time(&m, &hw, &RingConfig { p: 1, tp: 8 }, 65_536);
+        let t16 = striped_prefill_time(&m, &hw, &RingConfig { p: 16, tp: 8 }, 65_536);
+        let eff = t1 / (16.0 * t16);
+        assert!(eff < 0.8, "efficiency should degrade, got {eff}");
+    }
+
+    #[test]
+    fn large_context_scales_well() {
+        let (m, hw) = setup();
+        let t1 = striped_prefill_time(&m, &hw, &RingConfig { p: 1, tp: 8 }, 4_000_000);
+        let t8 = striped_prefill_time(&m, &hw, &RingConfig { p: 8, tp: 8 }, 4_000_000);
+        let eff = t1 / (8.0 * t8);
+        assert!(eff > 0.7, "eff={eff}");
+    }
+
+    #[test]
+    fn preemption_is_the_whole_prefill() {
+        let (m, hw) = setup();
+        let cfg = RingConfig { p: 16, tp: 8 };
+        let t = striped_prefill_time(&m, &hw, &cfg, 1_000_000);
+        // Fig. 14b's shape: striped attention's HOL delay is the whole
+        // prefill (seconds-to-minutes), orders of magnitude above Medha's
+        // per-chunk granularity (~tens of ms).
+        let g = preemption_granularity_s(t);
+        assert!(g > 1.0, "granularity={g}s");
+        let medha_chunk_granularity = 0.060;
+        assert!(g / medha_chunk_granularity > 20.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Table 1: qualitative capability matrix of parallelization strategies.
+//! Generated programmatically from each strategy's properties so the bench
+//! harness can print the paper's table.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scalability {
+    Up,
+    Down,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Capability {
+    pub name: &'static str,
+    /// Can combine with chunked prefills for fine-grained preemption.
+    pub preemptable: bool,
+    pub faster_prefills: bool,
+    pub faster_decodes: bool,
+    pub scalability: Scalability,
+}
+
+/// The six rows of Table 1.
+pub fn capability_matrix() -> Vec<Capability> {
+    vec![
+        Capability {
+            name: "Pipeline Parallelism (PP)",
+            preemptable: true,
+            faster_prefills: false,
+            faster_decodes: false,
+            scalability: Scalability::Up,
+        },
+        Capability {
+            name: "Tensor Parallelism (TP)",
+            preemptable: true,
+            faster_prefills: true,
+            faster_decodes: true,
+            scalability: Scalability::Down,
+        },
+        Capability {
+            name: "Ring/Striped Attention (RA)",
+            preemptable: false,
+            faster_prefills: true,
+            faster_decodes: false,
+            scalability: Scalability::Up,
+        },
+        Capability {
+            name: "Sequence Pipeline Parallelism (SPP)",
+            preemptable: true,
+            faster_prefills: true,
+            faster_decodes: false,
+            scalability: Scalability::Up,
+        },
+        Capability {
+            name: "KV Parallelism (KVP)",
+            preemptable: true,
+            faster_prefills: true,
+            faster_decodes: true,
+            scalability: Scalability::Down,
+        },
+        Capability {
+            name: "Mnemosyne 3D Parallelism (3DP)",
+            preemptable: true,
+            faster_prefills: true,
+            faster_decodes: true,
+            scalability: Scalability::Up,
+        },
+    ]
+}
+
+pub fn render_matrix() -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<38} {:>12} {:>16} {:>15} {:>12}\n",
+        "Parallelism Strategy", "Preemptable", "Faster Prefills", "Faster Decodes", "Scalability"
+    ));
+    for c in capability_matrix() {
+        let tick = |b: bool| if b { "yes" } else { "no" };
+        out.push_str(&format!(
+            "{:<38} {:>12} {:>16} {:>15} {:>12}\n",
+            c.name,
+            tick(c.preemptable),
+            tick(c.faster_prefills),
+            tick(c.faster_decodes),
+            match c.scalability {
+                Scalability::Up => "high",
+                Scalability::Down => "low",
+            }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_matches_paper() {
+        let m = capability_matrix();
+        assert_eq!(m.len(), 6);
+        let get = |n: &str| m.iter().find(|c| c.name.contains(n)).unwrap().clone();
+        // Ring attention: not preemptable, prefill-only, scales up
+        let ra = get("Ring");
+        assert!(!ra.preemptable && ra.faster_prefills && !ra.faster_decodes);
+        // 3DP: everything + scales
+        let dp = get("3DP");
+        assert!(dp.preemptable && dp.faster_prefills && dp.faster_decodes);
+        assert_eq!(dp.scalability, Scalability::Up);
+        // TP fast but unscalable
+        let tp = get("Tensor");
+        assert_eq!(tp.scalability, Scalability::Down);
+    }
+
+    #[test]
+    fn renders_all_rows() {
+        let s = render_matrix();
+        assert_eq!(s.lines().count(), 7);
+        assert!(s.contains("3DP"));
+    }
+}

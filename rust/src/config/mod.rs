@@ -1,0 +1,224 @@
+//! Configuration system: model architectures, hardware, parallelism layouts,
+//! SLOs, and scheduler policy. Presets mirror the paper's evaluation setup;
+//! everything is also loadable from JSON files (see `configs/`).
+
+mod hardware;
+mod model;
+mod parallel;
+
+pub use hardware::{HardwareConfig, InterconnectConfig};
+pub use model::ModelConfig;
+pub use parallel::{ParallelismConfig, PlacementError};
+
+use crate::util::json::Json;
+
+/// Latency service-level objectives (paper: 30s TTFT babbling point /
+/// production-grade 20-30ms TBT).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    pub ttft_s: f64,
+    pub tbt_s: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        // Paper section 3.1 / section 6: 30s TTFT, 20-30ms TBT.
+        SloConfig {
+            ttft_s: 30.0,
+            tbt_s: 0.030,
+        }
+    }
+}
+
+impl SloConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<SloConfig> {
+        Ok(SloConfig {
+            ttft_s: j.req_f64("ttft_s")?,
+            tbt_s: j.req_f64("tbt_s")?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ttft_s", self.ttft_s.into()),
+            ("tbt_s", self.tbt_s.into()),
+        ])
+    }
+}
+
+/// Scheduler policy knobs (section 4.2 adaptive chunking + section 7).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Chunk sizes the scheduler may pick from (must be sorted ascending).
+    pub chunk_sizes: Vec<u64>,
+    /// If true, shrink chunk size adaptively to keep batch time under
+    /// `slo.tbt_s`; if false, always use `static_chunk`.
+    pub adaptive_chunking: bool,
+    pub static_chunk: u64,
+    /// Max decode requests batched per iteration.
+    pub max_batch_size: usize,
+    /// KVP dynamic-growth threshold: max KV tokens per KVP worker group
+    /// before onboarding the next one (section 4.4).
+    pub kvp_onboard_threshold: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            chunk_sizes: vec![32, 64, 128, 256, 512, 1024, 2048, 4096],
+            adaptive_chunking: true,
+            static_chunk: 2048,
+            max_batch_size: 128,
+            kvp_onboard_threshold: 512 * 1024,
+        }
+    }
+}
+
+impl SchedulerConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<SchedulerConfig> {
+        let d = SchedulerConfig::default();
+        Ok(SchedulerConfig {
+            chunk_sizes: match j.get("chunk_sizes") {
+                Some(a) => a
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("chunk_sizes must be an array"))?
+                    .iter()
+                    .filter_map(|x| x.as_u64())
+                    .collect(),
+                None => d.chunk_sizes,
+            },
+            adaptive_chunking: j
+                .get("adaptive_chunking")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(d.adaptive_chunking),
+            static_chunk: j.get("static_chunk").and_then(|x| x.as_u64()).unwrap_or(d.static_chunk),
+            max_batch_size: j
+                .get("max_batch_size")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(d.max_batch_size),
+            kvp_onboard_threshold: j
+                .get("kvp_onboard_threshold")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.kvp_onboard_threshold),
+        })
+    }
+}
+
+/// Everything a deployment needs: what model, on what hardware, in which
+/// parallel layout, under which SLOs and scheduler policy.
+#[derive(Debug, Clone)]
+pub struct DeploymentConfig {
+    pub model: ModelConfig,
+    pub hardware: HardwareConfig,
+    pub parallel: ParallelismConfig,
+    pub slo: SloConfig,
+    pub scheduler: SchedulerConfig,
+}
+
+impl DeploymentConfig {
+    /// The paper's workhorse setup: Llama-3 8B, tp=8 on one DGX-H100.
+    pub fn llama3_8b_tp8() -> DeploymentConfig {
+        DeploymentConfig {
+            model: ModelConfig::llama3_8b(),
+            hardware: HardwareConfig::dgx_h100(),
+            parallel: ParallelismConfig::new(8, 1, 1),
+            slo: SloConfig::default(),
+            scheduler: SchedulerConfig::default(),
+        }
+    }
+
+    pub fn llama3_70b_tp8() -> DeploymentConfig {
+        DeploymentConfig {
+            model: ModelConfig::llama3_70b(),
+            hardware: HardwareConfig::dgx_h100(),
+            parallel: ParallelismConfig::new(8, 1, 1),
+            slo: SloConfig::default(),
+            scheduler: SchedulerConfig::default(),
+        }
+    }
+
+    pub fn with_parallel(mut self, tp: u32, spp: u32, kvp: u32) -> Self {
+        self.parallel = ParallelismConfig::new(tp, spp, kvp);
+        self
+    }
+
+    pub fn total_gpus(&self) -> u32 {
+        self.parallel.total_workers()
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<DeploymentConfig> {
+        Ok(DeploymentConfig {
+            model: ModelConfig::from_json(j.req("model")?)?,
+            hardware: match j.get("hardware") {
+                Some(h) => HardwareConfig::from_json(h)?,
+                None => HardwareConfig::dgx_h100(),
+            },
+            parallel: match j.get("parallel") {
+                Some(p) => ParallelismConfig::from_json(p)?,
+                None => ParallelismConfig::new(8, 1, 1),
+            },
+            slo: match j.get("slo") {
+                Some(s) => SloConfig::from_json(s)?,
+                None => SloConfig::default(),
+            },
+            scheduler: match j.get("scheduler") {
+                Some(s) => SchedulerConfig::from_json(s)?,
+                None => SchedulerConfig::default(),
+            },
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<DeploymentConfig> {
+        DeploymentConfig::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Validate the layout against the model and hardware (e.g. TP cannot
+    /// exceed KV heads or the NVLink domain).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.parallel
+            .validate(&self.model, &self.hardware)
+            .map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        DeploymentConfig::llama3_8b_tp8().validate().unwrap();
+        DeploymentConfig::llama3_70b_tp8()
+            .with_parallel(8, 4, 4)
+            .validate()
+            .unwrap();
+    }
+
+    #[test]
+    fn total_gpu_math() {
+        let d = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 4, 4);
+        assert_eq!(d.total_gpus(), 128);
+    }
+
+    #[test]
+    fn json_roundtrip_minimal() {
+        let j = Json::parse(
+            r#"{"model": {"preset": "llama3-8b"},
+                "parallel": {"tp": 8, "spp": 2, "kvp": 1},
+                "slo": {"ttft_s": 30.0, "tbt_s": 0.02}}"#,
+        )
+        .unwrap();
+        let d = DeploymentConfig::from_json(&j).unwrap();
+        assert_eq!(d.model.n_layers, 32);
+        assert_eq!(d.parallel.spp, 2);
+        assert!((d.slo.tbt_s - 0.02).abs() < 1e-12);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn scheduler_defaults() {
+        let s = SchedulerConfig::default();
+        assert!(s.adaptive_chunking);
+        assert!(s.chunk_sizes.windows(2).all(|w| w[0] < w[1]));
+    }
+}

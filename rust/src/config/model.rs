@@ -1,0 +1,169 @@
+//! Model architecture configs. Presets cover the paper's evaluation models
+//! (Llama-3 8B / 70B) plus the tiny model actually served end-to-end on the
+//! CPU PJRT runtime (matching python/compile/model.py's ModelSpec).
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: u32,
+    /// Query heads per layer.
+    pub hq: u32,
+    /// KV heads per layer (GQA). Paper: both Llama-3 models have 8.
+    pub hkv: u32,
+    /// Attention head dimension.
+    pub d_head: u32,
+    pub d_model: u32,
+    /// MLP hidden dimension (SwiGLU: 3 matmuls of d_model x d_ff).
+    pub d_ff: u32,
+    pub vocab: u32,
+    /// Bytes per parameter / KV element (2 = fp16/bf16, 4 = fp32).
+    pub dtype_bytes: u32,
+}
+
+impl ModelConfig {
+    pub fn llama3_8b() -> ModelConfig {
+        ModelConfig {
+            name: "llama3-8b".into(),
+            n_layers: 32,
+            hq: 32,
+            hkv: 8,
+            d_head: 128,
+            d_model: 4096,
+            d_ff: 14336,
+            vocab: 128_256,
+            dtype_bytes: 2,
+        }
+    }
+
+    pub fn llama3_70b() -> ModelConfig {
+        ModelConfig {
+            name: "llama3-70b".into(),
+            n_layers: 80,
+            hq: 64,
+            hkv: 8,
+            d_head: 128,
+            d_model: 8192,
+            d_ff: 28672,
+            vocab: 128_256,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// The model actually served by the CPU engine (python ModelSpec mirror).
+    pub fn tiny_23m() -> ModelConfig {
+        ModelConfig {
+            name: "tiny-23m".into(),
+            n_layers: 8,
+            hq: 8,
+            hkv: 2,
+            d_head: 64,
+            d_model: 512,
+            d_ff: 1408,
+            vocab: 256,
+            dtype_bytes: 4,
+        }
+    }
+
+    pub fn preset(name: &str) -> anyhow::Result<ModelConfig> {
+        match name {
+            "llama3-8b" => Ok(ModelConfig::llama3_8b()),
+            "llama3-70b" => Ok(ModelConfig::llama3_70b()),
+            "tiny-23m" | "tiny" => Ok(ModelConfig::tiny_23m()),
+            other => anyhow::bail!("unknown model preset '{other}'"),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        if let Some(p) = j.get("preset").and_then(|x| x.as_str()) {
+            let mut m = ModelConfig::preset(p)?;
+            // allow field overrides on top of a preset
+            if let Some(x) = j.get("dtype_bytes").and_then(|x| x.as_u64()) {
+                m.dtype_bytes = x as u32;
+            }
+            return Ok(m);
+        }
+        Ok(ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            n_layers: j.req_u64("n_layers")? as u32,
+            hq: j.req_u64("hq")? as u32,
+            hkv: j.req_u64("hkv")? as u32,
+            d_head: j.req_u64("d_head")? as u32,
+            d_model: j.req_u64("d_model")? as u32,
+            d_ff: j.req_u64("d_ff")? as u32,
+            vocab: j.req_u64("vocab")? as u32,
+            dtype_bytes: j.get("dtype_bytes").and_then(|x| x.as_u64()).unwrap_or(2) as u32,
+        })
+    }
+
+    /// GQA group size hq/hkv — the arithmetic-intensity multiplier in Eq. 7.
+    pub fn gqa_group(&self) -> u32 {
+        self.hq / self.hkv
+    }
+
+    /// Total parameter count (tied embeddings, SwiGLU MLP, no biases).
+    pub fn n_params(&self) -> u64 {
+        let dm = self.d_model as u64;
+        let dh = self.d_head as u64;
+        let attn = dm * (self.hq as u64) * dh // wq
+            + 2 * dm * (self.hkv as u64) * dh // wk, wv
+            + (self.hq as u64) * dh * dm; // wo
+        let mlp = 3 * dm * self.d_ff as u64;
+        let norms = 2 * dm;
+        (self.n_layers as u64) * (attn + mlp + norms) + (self.vocab as u64) * dm + dm
+    }
+
+    /// Weight bytes (for memory-feasibility checks, Fig. 15 red crosses).
+    pub fn param_bytes(&self) -> u64 {
+        self.n_params() * self.dtype_bytes as u64
+    }
+
+    /// KV cache bytes for `n` tokens: Eq. 2, M_kv(n) = 2 * l * n * hkv * d
+    /// elements (K and V), times bytes per element.
+    pub fn kv_bytes(&self, n: u64) -> u64 {
+        2 * self.n_layers as u64
+            * n
+            * self.hkv as u64
+            * self.d_head as u64
+            * self.dtype_bytes as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama3_8b_param_count_plausible() {
+        let p = ModelConfig::llama3_8b().n_params();
+        assert!((7e9..9e9).contains(&(p as f64)), "{p}");
+    }
+
+    #[test]
+    fn llama3_70b_param_count_plausible() {
+        let p = ModelConfig::llama3_70b().n_params();
+        assert!((6.5e10..7.5e10).contains(&(p as f64)), "{p}");
+    }
+
+    #[test]
+    fn kv_bytes_matches_paper_example() {
+        // Paper section 2.1: Llama-3 70B @ 1M tokens needs ~320 GB KV cache.
+        let m = ModelConfig::llama3_70b();
+        let gb = m.kv_bytes(1_000_000) as f64 / 1e9;
+        assert!((300.0..340.0).contains(&gb), "{gb} GB");
+    }
+
+    #[test]
+    fn gqa_group_llama() {
+        assert_eq!(ModelConfig::llama3_8b().gqa_group(), 4);
+        assert_eq!(ModelConfig::llama3_70b().gqa_group(), 8);
+        assert_eq!(ModelConfig::tiny_23m().gqa_group(), 4);
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(ModelConfig::preset("llama3-8b").is_ok());
+        assert!(ModelConfig::preset("gpt-oops").is_err());
+    }
+}

@@ -1,0 +1,142 @@
+//! Parallelism layout: the paper's 3D strategy (TP x SPP x KVP), Fig. 12.
+//!
+//! * TP shards attention heads + linear layers within the NVLink domain;
+//! * SPP (sequence pipeline parallelism) splits layers into pipeline stages
+//!   and densely pipelines *prefill chunks* across them;
+//! * KVP replicates the model and shards the KV cache along the sequence
+//!   dimension across replica groups.
+//!
+//! A KVP group contains spp stages x tp workers; total = tp * spp * kvp.
+
+use super::{HardwareConfig, ModelConfig};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelismConfig {
+    pub tp: u32,
+    pub spp: u32,
+    pub kvp: u32,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum PlacementError {
+    #[error("tp={tp} exceeds KV heads ({hkv}) — TP shards the head dimension")]
+    TpExceedsKvHeads { tp: u32, hkv: u32 },
+    #[error("tp={tp} exceeds the NVLink domain ({gpus_per_node} GPUs/node)")]
+    TpExceedsNode { tp: u32, gpus_per_node: u32 },
+    #[error("spp={spp} does not divide n_layers={layers}")]
+    SppLayerMismatch { spp: u32, layers: u32 },
+    #[error("degree must be >= 1")]
+    ZeroDegree,
+}
+
+impl ParallelismConfig {
+    pub fn new(tp: u32, spp: u32, kvp: u32) -> ParallelismConfig {
+        ParallelismConfig { tp, spp, kvp }
+    }
+
+    pub fn total_workers(&self) -> u32 {
+        self.tp * self.spp * self.kvp
+    }
+
+    /// Workers in one KVP replica group (one full model replica).
+    pub fn workers_per_replica(&self) -> u32 {
+        self.tp * self.spp
+    }
+
+    pub fn layers_per_stage(&self, model: &ModelConfig) -> u32 {
+        model.n_layers / self.spp
+    }
+
+    pub fn validate(
+        &self,
+        model: &ModelConfig,
+        hw: &HardwareConfig,
+    ) -> Result<(), PlacementError> {
+        if self.tp == 0 || self.spp == 0 || self.kvp == 0 {
+            return Err(PlacementError::ZeroDegree);
+        }
+        if self.tp > model.hkv {
+            return Err(PlacementError::TpExceedsKvHeads {
+                tp: self.tp,
+                hkv: model.hkv,
+            });
+        }
+        if self.tp > hw.gpus_per_node {
+            return Err(PlacementError::TpExceedsNode {
+                tp: self.tp,
+                gpus_per_node: hw.gpus_per_node,
+            });
+        }
+        if model.n_layers % self.spp != 0 {
+            return Err(PlacementError::SppLayerMismatch {
+                spp: self.spp,
+                layers: model.n_layers,
+            });
+        }
+        Ok(())
+    }
+
+    /// Whether two pipeline-adjacent stages sit on the same node (TP groups
+    /// are node-aligned; stage boundaries cross nodes when tp == node size).
+    pub fn stage_hop_same_node(&self, hw: &HardwareConfig) -> bool {
+        self.tp < hw.gpus_per_node
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<ParallelismConfig> {
+        Ok(ParallelismConfig {
+            tp: j.req_u64("tp")? as u32,
+            spp: j.get("spp").or_else(|| j.get("pp")).and_then(|x| x.as_u64()).unwrap_or(1) as u32,
+            kvp: j.get("kvp").and_then(|x| x.as_u64()).unwrap_or(1) as u32,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tp", (self.tp as u64).into()),
+            ("spp", (self.spp as u64).into()),
+            ("kvp", (self.kvp as u64).into()),
+        ])
+    }
+
+    pub fn label(&self) -> String {
+        format!("tp{}-spp{}-kvp{}", self.tp, self.spp, self.kvp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation_rules() {
+        let m = ModelConfig::llama3_8b(); // hkv = 8, 32 layers
+        let h = HardwareConfig::dgx_h100();
+        assert!(ParallelismConfig::new(8, 4, 2).validate(&m, &h).is_ok());
+        assert_eq!(
+            ParallelismConfig::new(16, 1, 1).validate(&m, &h),
+            Err(PlacementError::TpExceedsKvHeads { tp: 16, hkv: 8 })
+        );
+        assert_eq!(
+            ParallelismConfig::new(8, 5, 1).validate(&m, &h),
+            Err(PlacementError::SppLayerMismatch { spp: 5, layers: 32 })
+        );
+        assert_eq!(
+            ParallelismConfig::new(0, 1, 1).validate(&m, &h),
+            Err(PlacementError::ZeroDegree)
+        );
+    }
+
+    #[test]
+    fn worker_counts() {
+        let p = ParallelismConfig::new(8, 4, 4);
+        assert_eq!(p.total_workers(), 128); // the paper's max scale
+        assert_eq!(p.workers_per_replica(), 32);
+    }
+
+    #[test]
+    fn layers_per_stage() {
+        let m = ModelConfig::llama3_70b();
+        assert_eq!(ParallelismConfig::new(8, 8, 1).layers_per_stage(&m), 10);
+    }
+}

@@ -1,0 +1,297 @@
+//! Chunk-size policies (section 4.2).
+//!
+//! Static policies fix one chunk size and live with the prefill/decode
+//! latency trade-off of Fig. 8a. **Adaptive chunking** queries the runtime
+//! predictor (our perf model, standing in for Vidur's) and picks the largest
+//! chunk whose predicted *mixed-batch* execution time stays under the TBT
+//! SLO — so chunks start large when the KV prefix is short and shrink as
+//! attention time grows (Fig. 8b).
+
+use crate::config::SloConfig;
+use crate::perfmodel::{BatchShape, PerfModel, PrefillWork};
+
+pub trait ChunkPolicy: Send + Sync {
+    /// Choose the next chunk size for a prefill with `kv_done` tokens
+    /// already processed and `remaining` tokens to go, sharing the batch
+    /// with `decode_ctxs` (local KV lengths of piggybacked decodes).
+    fn next_chunk(
+        &self,
+        kv_done: u64,
+        remaining: u64,
+        decode_ctxs: &[u64],
+        pm: &PerfModel,
+        slo: &SloConfig,
+    ) -> u64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Fixed chunk size (Sarathi-style).
+#[derive(Debug, Clone, Copy)]
+pub struct StaticChunk(pub u64);
+
+impl ChunkPolicy for StaticChunk {
+    fn next_chunk(
+        &self,
+        _kv_done: u64,
+        remaining: u64,
+        _decode_ctxs: &[u64],
+        _pm: &PerfModel,
+        _slo: &SloConfig,
+    ) -> u64 {
+        self.0.min(remaining)
+    }
+
+    fn name(&self) -> &'static str {
+        "static"
+    }
+}
+
+/// Adaptive chunking: largest bucket that keeps the predicted batch
+/// execution time within the decode-latency budget.
+#[derive(Debug, Clone)]
+pub struct AdaptiveChunk {
+    /// Candidate sizes, ascending.
+    pub buckets: Vec<u64>,
+    /// Fraction of the TBT SLO budgeted for a mixed iteration (leave room
+    /// for pipeline hops and merge costs charged elsewhere).
+    pub budget_frac: f64,
+}
+
+impl AdaptiveChunk {
+    pub fn new(buckets: Vec<u64>) -> AdaptiveChunk {
+        assert!(!buckets.is_empty());
+        assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets must ascend");
+        AdaptiveChunk {
+            buckets,
+            budget_frac: 0.9,
+        }
+    }
+
+    /// Predicted execution time of the mixed batch for chunk size `c`.
+    fn predict(
+        &self,
+        c: u64,
+        kv_done: u64,
+        decode_ctxs: &[u64],
+        pm: &PerfModel,
+    ) -> f64 {
+        let batch = BatchShape {
+            prefills: vec![PrefillWork {
+                chunk: c,
+                kv_len: kv_done + c,
+            }],
+            decodes: decode_ctxs
+                .iter()
+                .map(|&kv_len| crate::perfmodel::DecodeWork { kv_len })
+                .collect(),
+        };
+        // The policy must bound *every* stage's iteration time; stages run
+        // layers/spp layers each, and a token hits all of them, so budget
+        // against the per-stage time times the pipeline depth is equivalent
+        // to budgeting the full-model iteration.
+        pm.iteration_time(&batch).total()
+    }
+
+    pub fn slo_budget(&self, slo: &SloConfig) -> f64 {
+        slo.tbt_s * self.budget_frac
+    }
+}
+
+impl ChunkPolicy for AdaptiveChunk {
+    fn next_chunk(
+        &self,
+        kv_done: u64,
+        remaining: u64,
+        decode_ctxs: &[u64],
+        pm: &PerfModel,
+        slo: &SloConfig,
+    ) -> u64 {
+        let budget = self.slo_budget(slo);
+        let mut best = self.buckets[0].min(remaining).max(1);
+        for &c in &self.buckets {
+            let cand = c.min(remaining).max(1);
+            let t = self.predict(cand, kv_done, decode_ctxs, pm);
+            if t <= budget {
+                best = best.max(cand);
+            } else {
+                break; // predicted time is monotone in c
+            }
+            if c >= remaining {
+                break;
+            }
+        }
+        best
+    }
+
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+}
+
+/// Deadline-aware chunking (the section 4.2 extension the paper points to:
+/// "more complex scheduling objectives, such as fairness or deadline-aware
+/// scheduling"). Wraps the adaptive policy: while the prefill is on track
+/// for its TTFT deadline it behaves exactly like [`AdaptiveChunk`]; once the
+/// projected finish time would miss the deadline it escalates to the largest
+/// bucket, deliberately trading batched-decode latency for the deadline.
+#[derive(Debug, Clone)]
+pub struct DeadlineChunk {
+    pub inner: AdaptiveChunk,
+    /// Seconds remaining until the request's TTFT deadline (maintained by
+    /// the caller each iteration).
+    pub deadline_remaining_s: f64,
+}
+
+impl DeadlineChunk {
+    pub fn new(buckets: Vec<u64>, deadline_remaining_s: f64) -> DeadlineChunk {
+        DeadlineChunk {
+            inner: AdaptiveChunk::new(buckets),
+            deadline_remaining_s,
+        }
+    }
+
+    /// Projected time to finish `remaining` tokens at chunk size `c`.
+    fn projected_finish(&self, c: u64, kv_done: u64, remaining: u64, pm: &PerfModel) -> f64 {
+        // One mid-prefill sample scaled by chunk count — cheap and
+        // monotone, which is all escalation needs.
+        let mid = kv_done + remaining / 2;
+        let per = self.inner.predict(c.max(1), mid, &[], pm);
+        per * remaining.div_ceil(c.max(1)) as f64
+    }
+}
+
+impl ChunkPolicy for DeadlineChunk {
+    fn next_chunk(
+        &self,
+        kv_done: u64,
+        remaining: u64,
+        decode_ctxs: &[u64],
+        pm: &PerfModel,
+        slo: &SloConfig,
+    ) -> u64 {
+        let tbt_choice = self
+            .inner
+            .next_chunk(kv_done, remaining, decode_ctxs, pm, slo);
+        let on_track = self.projected_finish(tbt_choice, kv_done, remaining, pm)
+            <= self.deadline_remaining_s;
+        if on_track {
+            tbt_choice
+        } else {
+            // behind schedule: escalate to the largest bucket
+            (*self.inner.buckets.last().unwrap()).min(remaining).max(1)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentConfig;
+
+    fn setup() -> (PerfModel, SloConfig) {
+        let d = DeploymentConfig::llama3_8b_tp8();
+        (
+            PerfModel::new(d.model, d.hardware, d.parallel),
+            SloConfig {
+                ttft_s: 30.0,
+                tbt_s: 0.030,
+            },
+        )
+    }
+
+    fn buckets() -> Vec<u64> {
+        vec![32, 64, 128, 256, 512, 1024, 2048, 4096]
+    }
+
+    #[test]
+    fn adaptive_shrinks_as_prefix_grows() {
+        // The signature behavior of Fig. 8b: early chunks big, late chunks
+        // small.
+        let (pm, slo) = setup();
+        let pol = AdaptiveChunk::new(buckets());
+        let early = pol.next_chunk(0, u64::MAX / 2, &[], &pm, &slo);
+        let late = pol.next_chunk(4_000_000, u64::MAX / 2, &[], &pm, &slo);
+        assert!(early >= 2048, "early={early}");
+        assert!(late < early, "late={late} early={early}");
+    }
+
+    #[test]
+    fn adaptive_respects_decode_load() {
+        // More batched decodes -> less budget -> smaller chunk.
+        let (pm, slo) = setup();
+        let pol = AdaptiveChunk::new(buckets());
+        let alone = pol.next_chunk(1_000_000, 1 << 40, &[], &pm, &slo);
+        let busy_ctxs: Vec<u64> = (0..64).map(|_| 500_000).collect();
+        let busy = pol.next_chunk(1_000_000, 1 << 40, &busy_ctxs, &pm, &slo);
+        assert!(busy <= alone, "busy={busy} alone={alone}");
+    }
+
+    #[test]
+    fn adaptive_never_exceeds_remaining() {
+        let (pm, slo) = setup();
+        let pol = AdaptiveChunk::new(buckets());
+        assert_eq!(pol.next_chunk(0, 100, &[], &pm, &slo), 100);
+        assert_eq!(pol.next_chunk(0, 1, &[], &pm, &slo), 1);
+    }
+
+    #[test]
+    fn adaptive_falls_back_to_min_bucket_when_budget_tight() {
+        let (pm, _) = setup();
+        let pol = AdaptiveChunk::new(buckets());
+        let tight = SloConfig {
+            ttft_s: 30.0,
+            tbt_s: 1e-6,
+        };
+        assert_eq!(pol.next_chunk(5_000_000, 1 << 40, &[], &pm, &tight), 32);
+    }
+
+    #[test]
+    fn static_is_constant() {
+        let (pm, slo) = setup();
+        let pol = StaticChunk(512);
+        assert_eq!(pol.next_chunk(0, 1 << 40, &[], &pm, &slo), 512);
+        assert_eq!(pol.next_chunk(9_999_999, 1 << 40, &[], &pm, &slo), 512);
+        assert_eq!(pol.next_chunk(0, 100, &[], &pm, &slo), 100);
+    }
+
+    #[test]
+    fn deadline_policy_relaxed_when_on_track() {
+        // Generous deadline: behaves like the adaptive policy.
+        let (pm, slo) = setup();
+        let adaptive = AdaptiveChunk::new(buckets());
+        let pol = DeadlineChunk::new(buckets(), 1e9);
+        let busy: Vec<u64> = (0..32).map(|_| 500_000).collect();
+        assert_eq!(
+            pol.next_chunk(2_000_000, 1 << 30, &busy, &pm, &slo),
+            adaptive.next_chunk(2_000_000, 1 << 30, &busy, &pm, &slo)
+        );
+    }
+
+    #[test]
+    fn deadline_policy_escalates_when_behind() {
+        // 1 second left for a 4M prefill: must escalate to the max bucket
+        // even with decodes batched along.
+        let (pm, slo) = setup();
+        let pol = DeadlineChunk::new(buckets(), 1.0);
+        let busy: Vec<u64> = (0..32).map(|_| 500_000).collect();
+        let c = pol.next_chunk(0, 4_000_000, &busy, &pm, &slo);
+        assert_eq!(c, *buckets().last().unwrap());
+    }
+
+    #[test]
+    fn predicted_batch_time_monotone_in_chunk() {
+        let (pm, _) = setup();
+        let pol = AdaptiveChunk::new(buckets());
+        let mut prev = 0.0;
+        for &c in &pol.buckets {
+            let t = pol.predict(c, 2_000_000, &[], &pm);
+            assert!(t >= prev, "c={c}: {t} < {prev}");
+            prev = t;
+        }
+    }
+}

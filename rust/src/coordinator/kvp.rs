@@ -1,0 +1,200 @@
+//! KV-parallel worker-group management (section 4.4, Figs. 10 & 19).
+//!
+//! A long request's KV cache grows as prefill progresses. Rather than
+//! pre-allocating all KVP groups, the manager onboards groups *dynamically*:
+//! each group holds at most `onboard_threshold` KV tokens of the request;
+//! when the active group fills, the next group joins. Groups not serving a
+//! long request remain independent replicas that can batch short requests
+//! (section 7's scheduling opportunity — exercised by the router).
+
+use crate::kvcache::{GroupId, RequestId, ShardMap};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct KvpManager {
+    /// Max KV tokens of one request per group before onboarding the next.
+    pub onboard_threshold: u64,
+    /// Total KVP groups available.
+    pub n_groups: u32,
+    /// Shard maps per long request.
+    maps: BTreeMap<RequestId, ShardMap>,
+    /// Onboarding events (time, request, group) — the Fig. 19 timeline.
+    pub onboard_log: Vec<(f64, RequestId, GroupId)>,
+}
+
+impl KvpManager {
+    pub fn new(onboard_threshold: u64, n_groups: u32) -> KvpManager {
+        assert!(onboard_threshold > 0 && n_groups > 0);
+        KvpManager {
+            onboard_threshold,
+            n_groups,
+            maps: BTreeMap::new(),
+            onboard_log: Vec::new(),
+        }
+    }
+
+    /// Register a request; it starts on `first_group` only.
+    pub fn onboard_request(&mut self, id: RequestId, first_group: GroupId, t: f64) {
+        let mut m = ShardMap::default();
+        m.shards.push((first_group, 0, 0));
+        self.maps.insert(id, m);
+        self.onboard_log.push((t, id, first_group));
+    }
+
+    /// Append `tokens` of processed KV for `id` at time `t`, onboarding new
+    /// groups as thresholds are crossed. Returns the groups added.
+    pub fn append_tokens(&mut self, id: RequestId, mut tokens: u64, t: f64) -> Vec<GroupId> {
+        let m = self.maps.get_mut(&id).expect("request not onboarded");
+        let mut added = Vec::new();
+        while tokens > 0 {
+            let (g, _, len) = *m.shards.last().unwrap();
+            let fleet_exhausted = m.shards.len() as u32 >= self.n_groups;
+            let room = if fleet_exhausted {
+                // No more groups to onboard: the last shard absorbs the rest
+                // (the paper grows "until it reaches the max of 128 GPUs").
+                u64::MAX
+            } else {
+                self.onboard_threshold.saturating_sub(len)
+            };
+            if room == 0 {
+                // onboard the next group (round-robin over the fleet)
+                let next = (g + 1) % self.n_groups;
+                let start = m.total_tokens();
+                m.shards.push((next, start, 0));
+                self.onboard_log.push((t, id, next));
+                added.push(next);
+                continue;
+            }
+            let take = tokens.min(room);
+            m.shards.last_mut().unwrap().2 += take;
+            tokens -= take;
+        }
+        added
+    }
+
+    pub fn shard_map(&self, id: RequestId) -> Option<&ShardMap> {
+        self.maps.get(&id)
+    }
+
+    /// Number of groups currently cooperating on `id` (the p_kvp actually
+    /// in use — Fig. 19's y-axis is this times workers/group).
+    pub fn active_groups(&self, id: RequestId) -> u32 {
+        self.maps.get(&id).map(|m| m.shards.len() as u32).unwrap_or(0)
+    }
+
+    /// Local KV lengths per group for `id` — what each group's attention
+    /// kernel scans during decode.
+    pub fn local_lengths(&self, id: RequestId) -> Vec<(GroupId, u64)> {
+        self.maps
+            .get(&id)
+            .map(|m| m.shards.iter().map(|&(g, _, n)| (g, n)).collect())
+            .unwrap_or_default()
+    }
+
+    /// The *largest* local shard bounds the parallel decode-attention time.
+    pub fn max_local_len(&self, id: RequestId) -> u64 {
+        self.local_lengths(id)
+            .iter()
+            .map(|&(_, n)| n)
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn release(&mut self, id: RequestId) {
+        self.maps.remove(&id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn grows_one_group_at_a_time() {
+        let mut k = KvpManager::new(1000, 4);
+        k.onboard_request(7, 0, 0.0);
+        assert_eq!(k.active_groups(7), 1);
+        assert!(k.append_tokens(7, 999, 1.0).is_empty());
+        assert_eq!(k.active_groups(7), 1);
+        let added = k.append_tokens(7, 2, 2.0);
+        assert_eq!(added, vec![1]);
+        assert_eq!(k.active_groups(7), 2);
+        assert_eq!(k.local_lengths(7), vec![(0, 1000), (1, 1)]);
+    }
+
+    #[test]
+    fn fig19_staircase() {
+        // 2M tokens, 512K threshold -> 4 groups onboarded progressively.
+        let mut k = KvpManager::new(512_000, 4);
+        k.onboard_request(1, 0, 0.0);
+        let mut t = 0.0;
+        let chunk = 4096;
+        let mut groups_over_time = Vec::new();
+        let mut done = 0u64;
+        while done < 2_000_000 {
+            let c = chunk.min(2_000_000 - done);
+            k.append_tokens(1, c, t);
+            done += c;
+            t += 0.1;
+            groups_over_time.push(k.active_groups(1));
+        }
+        assert_eq!(*groups_over_time.last().unwrap(), 4);
+        // staircase: non-decreasing, hits every level 1..=4
+        assert!(groups_over_time.windows(2).all(|w| w[1] >= w[0]));
+        for lvl in 1..=4 {
+            assert!(groups_over_time.contains(&lvl));
+        }
+        assert_eq!(k.onboard_log.len(), 4); // initial + 3 growth events
+    }
+
+    #[test]
+    fn shard_lengths_sum_to_processed() {
+        let mut k = KvpManager::new(100, 8);
+        k.onboard_request(2, 3, 0.0);
+        k.append_tokens(2, 777, 0.0);
+        let total: u64 = k.local_lengths(2).iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, 777);
+        assert_eq!(k.max_local_len(2), 100);
+    }
+
+    #[test]
+    fn last_group_absorbs_overflow_when_fleet_exhausted() {
+        let mut k = KvpManager::new(10, 2);
+        k.onboard_request(1, 0, 0.0);
+        k.append_tokens(1, 25, 0.0);
+        assert_eq!(k.active_groups(1), 2);
+        assert_eq!(k.local_lengths(1), vec![(0, 10), (1, 15)]);
+        assert!(k.shard_map(1).unwrap().check_contiguous());
+    }
+
+    #[test]
+    fn prop_shards_stay_contiguous_and_bounded() {
+        check("kvp shards contiguous+bounded", 200, |rng| {
+            let threshold = rng.range_u64(10, 5_000);
+            let groups = rng.range_u64(2, 16) as u32;
+            let mut k = KvpManager::new(threshold, groups);
+            k.onboard_request(1, rng.below(groups as u64) as GroupId, 0.0);
+            let budget = threshold * groups as u64;
+            let mut appended = 0u64;
+            for _ in 0..rng.range_u64(1, 50) {
+                let c = rng.range_u64(1, threshold);
+                if appended + c > budget {
+                    break;
+                }
+                k.append_tokens(1, c, 0.0);
+                appended += c;
+                let m = k.shard_map(1).unwrap();
+                assert!(m.check_contiguous());
+                assert_eq!(m.total_tokens(), appended);
+                // every shard respects the threshold (last may overflow only
+                // when the fleet is exhausted; budget-capped appends avoid it)
+                assert!(m.shards.iter().all(|&(_, _, n)| n <= threshold));
+                // all but the last shard are full
+                for &(_, _, n) in &m.shards[..m.shards.len() - 1] {
+                    assert_eq!(n, threshold);
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's coordination layer (L3): request lifecycle, mixed
+//! continuous-batching with chunked prefills, adaptive chunk sizing, the
+//! dense SPP pipeline schedule, dynamic KVP group management, request
+//! routing across replicas, and the 3D topology. Pure logic — time comes
+//! from either the cluster simulator (`crate::sim`) or wall-clock PJRT
+//! execution (`crate::engine`).
+
+pub mod chunking;
+pub mod kvp;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod spp;
+pub mod topology;
+
+pub use chunking::{AdaptiveChunk, ChunkPolicy, DeadlineChunk, StaticChunk};
+pub use kvp::KvpManager;
+pub use request::{Phase, Request};
+pub use router::Router;
+pub use scheduler::{BatchPlan, Scheduler};
+pub use spp::{conventional_pp_prefill_schedule, spp_prefill_schedule, PipelineTimeline};
+pub use topology::{Topology, WorkerId};

@@ -1,0 +1,158 @@
+//! Request lifecycle: the state machine every inference request walks
+//! through, with the latency bookkeeping (TTFT / TBT) the evaluation reports.
+
+use crate::kvcache::RequestId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Waiting to be scheduled.
+    Queued,
+    /// Prefill in progress (chunked; `prefilled` tracks progress).
+    Prefilling,
+    /// Autoregressive decode.
+    Decoding,
+    Finished,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub prompt_len: u64,
+    pub max_new_tokens: u64,
+    pub arrival_s: f64,
+    pub phase: Phase,
+    /// Prompt tokens whose KV is computed so far.
+    pub prefilled: u64,
+    /// Output tokens produced so far.
+    pub decoded: u64,
+    /// Set when the first output token is produced.
+    pub first_token_s: Option<f64>,
+    /// Completion time.
+    pub finished_s: Option<f64>,
+    /// Time the previous token was produced (for TBT samples).
+    pub last_token_s: Option<f64>,
+    /// Per-token inter-arrival latencies (TBT samples).
+    pub tbt_samples: Vec<f64>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt_len: u64, max_new_tokens: u64, arrival_s: f64) -> Request {
+        assert!(prompt_len > 0, "empty prompt");
+        Request {
+            id,
+            prompt_len,
+            max_new_tokens,
+            arrival_s,
+            phase: Phase::Queued,
+            prefilled: 0,
+            decoded: 0,
+            first_token_s: None,
+            finished_s: None,
+            last_token_s: None,
+            tbt_samples: Vec::new(),
+        }
+    }
+
+    pub fn remaining_prefill(&self) -> u64 {
+        self.prompt_len - self.prefilled
+    }
+
+    /// Total KV length once `extra` more prompt tokens are processed.
+    pub fn kv_after_chunk(&self, extra: u64) -> u64 {
+        self.prefilled + extra + self.decoded
+    }
+
+    /// Current total KV length (prompt progress + generated tokens).
+    pub fn kv_len(&self) -> u64 {
+        self.prefilled + self.decoded
+    }
+
+    /// Record a prefill chunk of `c` tokens completing at time `t`.
+    pub fn complete_chunk(&mut self, c: u64, t: f64) {
+        assert!(matches!(self.phase, Phase::Queued | Phase::Prefilling));
+        assert!(c <= self.remaining_prefill(), "chunk overruns prompt");
+        self.phase = Phase::Prefilling;
+        self.prefilled += c;
+        if self.prefilled == self.prompt_len {
+            // Prefill completion produces the first output token.
+            self.phase = Phase::Decoding;
+            self.first_token_s = Some(t);
+            self.last_token_s = Some(t);
+            self.decoded = 1;
+            if self.decoded >= self.max_new_tokens {
+                self.phase = Phase::Finished;
+                self.finished_s = Some(t);
+            }
+        }
+    }
+
+    /// Record one decode token completing at time `t`.
+    pub fn complete_decode(&mut self, t: f64) {
+        assert_eq!(self.phase, Phase::Decoding);
+        if let Some(last) = self.last_token_s {
+            self.tbt_samples.push(t - last);
+        }
+        self.last_token_s = Some(t);
+        self.decoded += 1;
+        if self.decoded >= self.max_new_tokens {
+            self.phase = Phase::Finished;
+            self.finished_s = Some(t);
+        }
+    }
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_s.map(|t| t - self.arrival_s)
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_prefill_to_decode_to_finish() {
+        let mut r = Request::new(1, 100, 3, 10.0);
+        r.complete_chunk(64, 11.0);
+        assert_eq!(r.phase, Phase::Prefilling);
+        assert_eq!(r.remaining_prefill(), 36);
+        r.complete_chunk(36, 12.0);
+        assert_eq!(r.phase, Phase::Decoding);
+        assert_eq!(r.ttft(), Some(2.0));
+        assert_eq!(r.decoded, 1);
+        r.complete_decode(12.05);
+        r.complete_decode(12.10);
+        assert!(r.is_finished());
+        assert_eq!(r.finished_s, Some(12.10));
+        assert_eq!(r.tbt_samples.len(), 2);
+        assert!((r.tbt_samples[0] - 0.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_accounting() {
+        let mut r = Request::new(2, 50, 10, 0.0);
+        assert_eq!(r.kv_after_chunk(32), 32);
+        r.complete_chunk(32, 1.0);
+        assert_eq!(r.kv_len(), 32);
+        r.complete_chunk(18, 2.0);
+        assert_eq!(r.kv_len(), 51); // 50 prompt + 1 generated
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk overruns prompt")]
+    fn chunk_cannot_overrun() {
+        let mut r = Request::new(3, 10, 1, 0.0);
+        r.complete_chunk(11, 0.0);
+    }
+
+    #[test]
+    fn single_token_request_finishes_at_prefill() {
+        let mut r = Request::new(4, 10, 1, 0.0);
+        r.complete_chunk(10, 1.0);
+        assert!(r.is_finished());
+        assert_eq!(r.ttft(), Some(1.0));
+    }
+}

@@ -1,0 +1,131 @@
+//! Request router across KVP replica groups (section 7, "independent
+//! scheduling of KVP instances").
+//!
+//! Each KVP group holds a full model replica. Short requests are routed to
+//! the least-loaded single group; a long request claims its primary group
+//! and grows across groups via the KvpManager while the remaining groups
+//! keep serving short traffic independently — the throughput opportunity
+//! the paper highlights.
+
+use crate::kvcache::{GroupId, RequestId};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// Outstanding token load per group (KV-resident + queued prompt work).
+    load: BTreeMap<GroupId, u64>,
+    /// Request -> primary group.
+    placement: BTreeMap<RequestId, GroupId>,
+}
+
+impl Router {
+    pub fn new(n_groups: u32) -> Router {
+        Router {
+            load: (0..n_groups).map(|g| (g, 0)).collect(),
+            placement: BTreeMap::new(),
+        }
+    }
+
+    pub fn n_groups(&self) -> u32 {
+        self.load.len() as u32
+    }
+
+    /// Route a request with `prompt_len` tokens: least-loaded group wins
+    /// (ties break to the lowest id for determinism).
+    pub fn route(&mut self, id: RequestId, prompt_len: u64) -> GroupId {
+        let (&g, _) = self
+            .load
+            .iter()
+            .min_by_key(|&(g, &l)| (l, *g))
+            .expect("router has no groups");
+        self.load.insert(g, self.load[&g] + prompt_len);
+        self.placement.insert(id, g);
+        g
+    }
+
+    pub fn group_of(&self, id: RequestId) -> Option<GroupId> {
+        self.placement.get(&id).copied()
+    }
+
+    /// Account additional load (e.g. KVP growth claiming another group).
+    pub fn add_load(&mut self, g: GroupId, tokens: u64) {
+        *self.load.get_mut(&g).expect("unknown group") += tokens;
+    }
+
+    pub fn release(&mut self, id: RequestId, tokens: u64) {
+        if let Some(g) = self.placement.remove(&id) {
+            let l = self.load.get_mut(&g).expect("unknown group");
+            *l = l.saturating_sub(tokens);
+        }
+    }
+
+    pub fn load_of(&self, g: GroupId) -> u64 {
+        self.load.get(&g).copied().unwrap_or(0)
+    }
+
+    pub fn total_load(&self) -> u64 {
+        self.load.values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn routes_to_least_loaded() {
+        let mut r = Router::new(3);
+        assert_eq!(r.route(1, 100), 0);
+        assert_eq!(r.route(2, 10), 1);
+        assert_eq!(r.route(3, 10), 2);
+        // group 1 and 2 have 10 each, group 0 has 100; tie breaks low id
+        assert_eq!(r.route(4, 1), 1);
+        // now g1=11, g2=10 -> least loaded is g2
+        assert_eq!(r.route(5, 1), 2);
+    }
+
+    #[test]
+    fn long_request_does_not_block_other_groups() {
+        let mut r = Router::new(4);
+        let g_long = r.route(1, 10_000_000);
+        for id in 2..20 {
+            let g = r.route(id, 1_000);
+            assert_ne!(g, g_long, "short request landed on the loaded group");
+        }
+    }
+
+    #[test]
+    fn release_restores_capacity() {
+        let mut r = Router::new(2);
+        let g = r.route(1, 500);
+        assert_eq!(r.load_of(g), 500);
+        r.release(1, 500);
+        assert_eq!(r.load_of(g), 0);
+        assert_eq!(r.group_of(1), None);
+    }
+
+    #[test]
+    fn prop_load_conservation() {
+        check("router load conserved", 200, |rng| {
+            let n = rng.range_u64(1, 8) as u32;
+            let mut r = Router::new(n);
+            let mut live: Vec<(RequestId, u64)> = Vec::new();
+            let mut expected: u64 = 0;
+            for step in 0..rng.range_u64(1, 80) {
+                if rng.bool(0.6) || live.is_empty() {
+                    let tokens = rng.range_u64(1, 100_000);
+                    r.route(step, tokens);
+                    live.push((step, tokens));
+                    expected += tokens;
+                } else {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let (id, tokens) = live.swap_remove(i);
+                    r.release(id, tokens);
+                    expected -= tokens;
+                }
+                assert_eq!(r.total_load(), expected);
+            }
+        });
+    }
+}

@@ -1,0 +1,278 @@
+//! Mixed continuous-batching scheduler (sections 2.4, 4.1–4.2).
+//!
+//! Every iteration the scheduler forms one mixed batch per replica:
+//! all active decodes (continuous batching, Orca-style) plus one chunk of
+//! the head-of-queue prefill, sized by the chunk policy. Chunking is what
+//! eliminates head-of-line blocking: a newly arrived request waits at most
+//! one bounded iteration, never behind a monolithic multi-minute prefill
+//! (Fig. 14b).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::chunking::ChunkPolicy;
+use super::request::{Phase, Request};
+use crate::config::SloConfig;
+use crate::kvcache::RequestId;
+use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
+
+/// What the scheduler decided to run this iteration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchPlan {
+    /// (request, chunk size) — at most one chunked prefill per iteration
+    /// (Sarathi-style; the chunk budget is the knob, not the count).
+    pub prefill: Option<(RequestId, u64)>,
+    /// Requests getting one decode token each.
+    pub decodes: Vec<RequestId>,
+}
+
+impl BatchPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefill.is_none() && self.decodes.is_empty()
+    }
+}
+
+/// Iteration-level scheduler state for one replica (one KVP group).
+pub struct Scheduler {
+    pub policy: Box<dyn ChunkPolicy>,
+    pub max_batch: usize,
+    /// FIFO of requests awaiting/undergoing prefill.
+    prefill_queue: VecDeque<RequestId>,
+    /// Requests in decode phase.
+    decoding: Vec<RequestId>,
+}
+
+impl Scheduler {
+    pub fn new(policy: Box<dyn ChunkPolicy>, max_batch: usize) -> Scheduler {
+        Scheduler {
+            policy,
+            max_batch,
+            prefill_queue: VecDeque::new(),
+            decoding: Vec::new(),
+        }
+    }
+
+    pub fn enqueue(&mut self, id: RequestId) {
+        self.prefill_queue.push_back(id);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.prefill_queue.len()
+    }
+
+    pub fn n_decoding(&self) -> usize {
+        self.decoding.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.prefill_queue.is_empty() || !self.decoding.is_empty()
+    }
+
+    /// Form the next mixed batch. `local_kv` maps a request to the KV
+    /// length *this replica* scans for it (identity for unsharded requests;
+    /// the KVP manager's local shard length for sharded ones).
+    pub fn next_batch<F: Fn(&Request) -> u64>(
+        &mut self,
+        requests: &BTreeMap<RequestId, Request>,
+        pm: &PerfModel,
+        slo: &SloConfig,
+        local_kv: F,
+    ) -> BatchPlan {
+        // Continuous batching: every decoding request gets a token.
+        let decodes: Vec<RequestId> = self
+            .decoding
+            .iter()
+            .copied()
+            .take(self.max_batch)
+            .collect();
+        let decode_ctxs: Vec<u64> = decodes
+            .iter()
+            .map(|id| local_kv(&requests[id]).max(1))
+            .collect();
+
+        // Piggyback one prefill chunk from the head of the queue.
+        let prefill = self.prefill_queue.front().and_then(|&id| {
+            let r = &requests[&id];
+            let remaining = r.remaining_prefill();
+            if remaining == 0 {
+                return None;
+            }
+            let c = self
+                .policy
+                .next_chunk(r.kv_len(), remaining, &decode_ctxs, pm, slo);
+            Some((id, c.max(1).min(remaining)))
+        });
+
+        BatchPlan { prefill, decodes }
+    }
+
+    /// The `BatchShape` (perf-model view) of a plan, using local KV lengths.
+    pub fn batch_shape<F: Fn(&Request) -> u64>(
+        &self,
+        plan: &BatchPlan,
+        requests: &BTreeMap<RequestId, Request>,
+        local_kv: F,
+    ) -> BatchShape {
+        let mut shape = BatchShape::default();
+        if let Some((id, c)) = plan.prefill {
+            let r = &requests[&id];
+            shape.prefills.push(PrefillWork {
+                chunk: c,
+                kv_len: local_kv(r) + c,
+            });
+        }
+        for id in &plan.decodes {
+            shape.decodes.push(DecodeWork {
+                kv_len: local_kv(&requests[id]).max(1),
+            });
+        }
+        shape
+    }
+
+    /// Apply request state transitions after a plan's iteration completes
+    /// at time `t`. Returns requests that finished.
+    pub fn complete_iteration(
+        &mut self,
+        plan: &BatchPlan,
+        requests: &mut BTreeMap<RequestId, Request>,
+        t: f64,
+    ) -> Vec<RequestId> {
+        let mut finished = Vec::new();
+        if let Some((id, c)) = plan.prefill {
+            let r = requests.get_mut(&id).expect("prefill req");
+            r.complete_chunk(c, t);
+            match r.phase {
+                Phase::Decoding => {
+                    self.prefill_queue.pop_front();
+                    self.decoding.push(id);
+                }
+                Phase::Finished => {
+                    self.prefill_queue.pop_front();
+                    finished.push(id);
+                }
+                _ => {}
+            }
+        }
+        for &id in &plan.decodes {
+            let r = requests.get_mut(&id).expect("decode req");
+            r.complete_decode(t);
+            if r.is_finished() {
+                finished.push(id);
+            }
+        }
+        self.decoding.retain(|id| !finished.contains(id));
+        finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentConfig;
+    use crate::coordinator::chunking::{AdaptiveChunk, StaticChunk};
+
+    fn setup() -> (PerfModel, SloConfig, BTreeMap<RequestId, Request>) {
+        let d = DeploymentConfig::llama3_8b_tp8();
+        (
+            PerfModel::new(d.model, d.hardware, d.parallel),
+            SloConfig::default(),
+            BTreeMap::new(),
+        )
+    }
+
+    fn static_sched(c: u64) -> Scheduler {
+        Scheduler::new(Box::new(StaticChunk(c)), 128)
+    }
+
+    #[test]
+    fn drains_prefill_then_decodes() {
+        let (pm, slo, mut reqs) = setup();
+        reqs.insert(1, Request::new(1, 100, 3, 0.0));
+        let mut s = static_sched(64);
+        s.enqueue(1);
+
+        let p1 = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        assert_eq!(p1.prefill, Some((1, 64)));
+        assert!(p1.decodes.is_empty());
+        s.complete_iteration(&p1, &mut reqs, 0.1);
+
+        let p2 = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        assert_eq!(p2.prefill, Some((1, 36))); // clipped to remaining
+        s.complete_iteration(&p2, &mut reqs, 0.2);
+        assert_eq!(reqs[&1].phase, Phase::Decoding);
+
+        // now it decodes; no prefill left
+        let p3 = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        assert_eq!(p3.prefill, None);
+        assert_eq!(p3.decodes, vec![1]);
+        s.complete_iteration(&p3, &mut reqs, 0.3);
+        let p4 = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        let fin = s.complete_iteration(&p4, &mut reqs, 0.4);
+        assert_eq!(fin, vec![1]);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn mixed_batch_piggybacks_prefill_on_decodes() {
+        let (pm, slo, mut reqs) = setup();
+        // request 1 decoding, request 2 long prefill arrives
+        reqs.insert(1, Request::new(1, 10, 50, 0.0));
+        reqs.insert(2, Request::new(2, 1_000_000, 10, 1.0));
+        let mut s = static_sched(512);
+        s.enqueue(1);
+        let p = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        s.complete_iteration(&p, &mut reqs, 0.1); // prefills 1 fully
+        s.enqueue(2);
+
+        let plan = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        assert_eq!(plan.prefill, Some((2, 512)));
+        assert_eq!(plan.decodes, vec![1]); // decode not blocked by long prefill
+    }
+
+    #[test]
+    fn adaptive_policy_shrinks_chunks_late_in_prefill() {
+        let (pm, slo, mut reqs) = setup();
+        reqs.insert(1, Request::new(1, 8_000_000, 1, 0.0));
+        let mut s = Scheduler::new(
+            Box::new(AdaptiveChunk::new(vec![32, 256, 2048, 4096])),
+            128,
+        );
+        s.enqueue(1);
+        let first = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        let (_, c_first) = first.prefill.unwrap();
+        // fast-forward most of the prefill
+        reqs.get_mut(&1).unwrap().complete_chunk(6_000_000, 100.0);
+        let late = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        let (_, c_late) = late.prefill.unwrap();
+        assert!(c_late < c_first, "late={c_late} first={c_first}");
+    }
+
+    #[test]
+    fn max_batch_caps_decodes() {
+        let (pm, slo, mut reqs) = setup();
+        let mut s = Scheduler::new(Box::new(StaticChunk(64)), 4);
+        for id in 0..8 {
+            reqs.insert(id, Request::new(id, 1, 100, 0.0));
+            s.enqueue(id);
+            let p = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+            s.complete_iteration(&p, &mut reqs, 0.1);
+        }
+        assert_eq!(s.n_decoding(), 8);
+        let plan = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        assert_eq!(plan.decodes.len(), 4);
+    }
+
+    #[test]
+    fn batch_shape_uses_local_kv() {
+        let (pm, slo, mut reqs) = setup();
+        reqs.insert(1, Request::new(1, 1, 100, 0.0));
+        let mut s = static_sched(64);
+        s.enqueue(1);
+        let p = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        s.complete_iteration(&p, &mut reqs, 0.1);
+        reqs.get_mut(&1).unwrap().decoded = 50; // pretend long decode
+        let plan = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        // KVP view: local shard is half the KV
+        let shape = s.batch_shape(&plan, &reqs, |r| r.kv_len() / 2);
+        assert_eq!(shape.decodes[0].kv_len, reqs[&1].kv_len() / 2);
+    }
+}

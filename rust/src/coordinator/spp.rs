@@ -1,0 +1,193 @@
+//! Sequence Pipeline Parallelism schedule (section 4.3, Fig. 9).
+//!
+//! The pipeline is a chain of `spp` stage timelines. Conventional PP
+//! inference admits chunk i+1 only after chunk i drains the whole pipeline
+//! (needed for autoregressive decode). SPP's insight: prefill chunks have
+//! no cross-chunk data dependency through the *model output* — chunk i+1
+//! only needs chunk i's KV at each stage, which is available as soon as
+//! chunk i leaves that stage. So stage 0 accepts chunk i+1 the moment it
+//! finishes chunk i: the dense schedule.
+//!
+//! `PipelineTimeline` is the shared machinery for both schedules; the
+//! simulator drives it with perf-model stage times, the real engine drives
+//! it with wall-clock PJRT executions.
+
+/// Per-stage next-free times.
+#[derive(Debug, Clone)]
+pub struct PipelineTimeline {
+    stage_free: Vec<f64>,
+}
+
+/// When one batch/chunk finished each stage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlowResult {
+    /// Exit time from each stage.
+    pub stage_exit: Vec<f64>,
+}
+
+impl FlowResult {
+    pub fn exit(&self) -> f64 {
+        *self.stage_exit.last().unwrap()
+    }
+
+    pub fn first_stage_exit(&self) -> f64 {
+        self.stage_exit[0]
+    }
+}
+
+impl PipelineTimeline {
+    pub fn new(stages: usize, start: f64) -> PipelineTimeline {
+        assert!(stages >= 1);
+        PipelineTimeline {
+            stage_free: vec![start; stages],
+        }
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stage_free.len()
+    }
+
+    /// Earliest time stage 0 can accept new work (the dense-SPP admission
+    /// point).
+    pub fn stage0_free(&self) -> f64 {
+        self.stage_free[0]
+    }
+
+    /// Flow one unit of work (a chunk or a batch) through all stages:
+    /// enters stage s at max(prev stage exit + hop, stage s free), holds it
+    /// for `stage_time(s)`, and frees it. Returns per-stage exit times.
+    pub fn flow<F: Fn(usize) -> f64>(
+        &mut self,
+        ready: f64,
+        stage_time: F,
+        hop_s: f64,
+    ) -> FlowResult {
+        let mut exits = Vec::with_capacity(self.stage_free.len());
+        let mut avail = ready;
+        for s in 0..self.stage_free.len() {
+            let enter = avail.max(self.stage_free[s]);
+            let exit = enter + stage_time(s);
+            self.stage_free[s] = exit;
+            exits.push(exit);
+            avail = exit + hop_s;
+        }
+        FlowResult { stage_exit: exits }
+    }
+
+    /// Advance all stage-free times to at least `t` (idle gap).
+    pub fn advance_to(&mut self, t: f64) {
+        for f in &mut self.stage_free {
+            *f = f.max(t);
+        }
+    }
+}
+
+/// Prefill completion times under the **dense SPP schedule**: chunks are
+/// admitted back-to-back at stage 0. Returns (ttft_relative, per-chunk exit
+/// times) for chunk stage-times given by `chunk_stage_time(chunk_idx)`.
+pub fn spp_prefill_schedule<F: Fn(usize) -> f64>(
+    n_chunks: usize,
+    stages: usize,
+    chunk_stage_time: F,
+    hop_s: f64,
+) -> (f64, Vec<f64>) {
+    let mut tl = PipelineTimeline::new(stages, 0.0);
+    let mut exits = Vec::with_capacity(n_chunks);
+    for i in 0..n_chunks {
+        let t = chunk_stage_time(i);
+        let ready = tl.stage0_free(); // dense admission
+        let r = tl.flow(ready, |_| t, hop_s);
+        exits.push(r.exit());
+    }
+    (exits.last().copied().unwrap_or(0.0), exits)
+}
+
+/// Prefill completion under **conventional micro-batch PP** (Fig. 9a):
+/// chunk i+1 is admitted only after chunk i exits the last stage.
+pub fn conventional_pp_prefill_schedule<F: Fn(usize) -> f64>(
+    n_chunks: usize,
+    stages: usize,
+    chunk_stage_time: F,
+    hop_s: f64,
+) -> (f64, Vec<f64>) {
+    let mut tl = PipelineTimeline::new(stages, 0.0);
+    let mut exits = Vec::with_capacity(n_chunks);
+    let mut ready = 0.0;
+    for i in 0..n_chunks {
+        let t = chunk_stage_time(i);
+        let r = tl.flow(ready, |_| t, hop_s);
+        ready = r.exit(); // serialized admission
+        exits.push(r.exit());
+    }
+    (exits.last().copied().unwrap_or(0.0), exits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn dense_overlaps_conventional_serializes() {
+        // 8 chunks, 4 stages, unit stage time, no hops:
+        // dense: 8 (stage-0 busy) + 3 (drain) = 11
+        // conventional: 8 chunks x 4 stages = 32
+        let (dense, _) = spp_prefill_schedule(8, 4, |_| 1.0, 0.0);
+        let (conv, _) = conventional_pp_prefill_schedule(8, 4, |_| 1.0, 0.0);
+        assert!((dense - 11.0).abs() < 1e-9, "{dense}");
+        assert!((conv - 32.0).abs() < 1e-9, "{conv}");
+    }
+
+    #[test]
+    fn dense_speedup_near_linear_in_stages() {
+        // Eq. 8: many chunks => TTFT ~ total/stages.
+        let n = 256;
+        let (t1, _) = spp_prefill_schedule(n, 1, |_| 1.0, 0.0);
+        let (t8, _) = spp_prefill_schedule(n, 8, |_| 0.125, 0.0);
+        // 8 stages each 1/8 the work
+        let eff = t1 / (8.0 * t8) * 8.0; // = t1 / (8 * t8)
+        let speedup = t1 / t8;
+        assert!(speedup > 0.9 * 8.0, "speedup={speedup} eff={eff}");
+    }
+
+    #[test]
+    fn flow_respects_stage_occupancy() {
+        let mut tl = PipelineTimeline::new(2, 0.0);
+        let a = tl.flow(0.0, |_| 2.0, 0.0);
+        assert_eq!(a.stage_exit, vec![2.0, 4.0]);
+        // second unit enters stage 0 at t=2 (dense), stage 1 at t=4
+        let b = tl.flow(tl.stage0_free(), |_| 2.0, 0.0);
+        assert_eq!(b.stage_exit, vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn hops_delay_downstream_stages() {
+        let mut tl = PipelineTimeline::new(2, 0.0);
+        let r = tl.flow(0.0, |_| 1.0, 0.5);
+        assert_eq!(r.stage_exit, vec![1.0, 2.5]);
+    }
+
+    #[test]
+    fn exits_monotone_nondecreasing() {
+        check("spp exits monotone", 200, |rng| {
+            let n = rng.range_u64(1, 40) as usize;
+            let stages = rng.range_u64(1, 8) as usize;
+            let times: Vec<f64> = (0..n).map(|_| rng.range_f64(0.01, 2.0)).collect();
+            let hop = rng.range_f64(0.0, 0.1);
+            let (_, dense) = spp_prefill_schedule(n, stages, |i| times[i], hop);
+            let (_, conv) = conventional_pp_prefill_schedule(n, stages, |i| times[i], hop);
+            for w in dense.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
+            // dense is never slower than conventional
+            assert!(*dense.last().unwrap() <= conv.last().unwrap() + 1e-12);
+        });
+    }
+
+    #[test]
+    fn single_stage_dense_equals_conventional() {
+        let (d, _) = spp_prefill_schedule(16, 1, |i| (i + 1) as f64 * 0.1, 0.0);
+        let (c, _) = conventional_pp_prefill_schedule(16, 1, |i| (i + 1) as f64 * 0.1, 0.0);
+        assert!((d - c).abs() < 1e-12);
+    }
+}

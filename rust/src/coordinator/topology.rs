@@ -1,0 +1,113 @@
+//! 3D-parallel worker topology (Fig. 12): kvp groups x spp stages x tp
+//! workers, with node placement (TP groups never cross the NVLink domain).
+
+use crate::config::{HardwareConfig, ParallelismConfig};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerId {
+    pub kvp: u32,
+    pub stage: u32,
+    pub tp: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub parallel: ParallelismConfig,
+    pub gpus_per_node: u32,
+}
+
+impl Topology {
+    pub fn new(parallel: ParallelismConfig, hw: &HardwareConfig) -> Topology {
+        Topology {
+            parallel,
+            gpus_per_node: hw.gpus_per_node,
+        }
+    }
+
+    pub fn total_workers(&self) -> u32 {
+        self.parallel.total_workers()
+    }
+
+    pub fn workers(&self) -> impl Iterator<Item = WorkerId> + '_ {
+        let p = self.parallel;
+        (0..p.kvp).flat_map(move |kvp| {
+            (0..p.spp).flat_map(move |stage| (0..p.tp).map(move |tp| WorkerId { kvp, stage, tp }))
+        })
+    }
+
+    /// Global linear index (placement order: kvp-major, then stage, then tp
+    /// — keeps each TP group contiguous so it lands inside one node).
+    pub fn linear(&self, w: WorkerId) -> u32 {
+        (w.kvp * self.parallel.spp + w.stage) * self.parallel.tp + w.tp
+    }
+
+    pub fn node_of(&self, w: WorkerId) -> u32 {
+        self.linear(w) / self.gpus_per_node
+    }
+
+    /// Does the stage->stage+1 hop cross a node boundary?
+    pub fn stage_hop_crosses_node(&self, kvp: u32, stage: u32) -> bool {
+        let a = self.node_of(WorkerId { kvp, stage, tp: 0 });
+        let b = self.node_of(WorkerId {
+            kvp,
+            stage: stage + 1,
+            tp: 0,
+        });
+        a != b
+    }
+
+    /// GPUs in use when `active_kvp` groups participate (Fig. 19 y-axis).
+    pub fn gpus_active(&self, active_kvp: u32) -> u32 {
+        active_kvp.min(self.parallel.kvp) * self.parallel.workers_per_replica()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+
+    fn topo(tp: u32, spp: u32, kvp: u32) -> Topology {
+        Topology::new(
+            ParallelismConfig::new(tp, spp, kvp),
+            &HardwareConfig::dgx_h100(),
+        )
+    }
+
+    #[test]
+    fn enumerates_all_workers_uniquely() {
+        let t = topo(8, 4, 4);
+        let ws: Vec<_> = t.workers().collect();
+        assert_eq!(ws.len(), 128);
+        let mut idx: Vec<u32> = ws.iter().map(|&w| t.linear(w)).collect();
+        idx.sort_unstable();
+        assert_eq!(idx, (0..128).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tp_groups_stay_within_nodes() {
+        let t = topo(8, 4, 4);
+        for w in t.workers() {
+            let n0 = t.node_of(WorkerId { tp: 0, ..w });
+            assert_eq!(t.node_of(w), n0, "TP group split across nodes: {w:?}");
+        }
+    }
+
+    #[test]
+    fn stage_hops_cross_nodes_at_tp8() {
+        let t = topo(8, 4, 1);
+        assert!(t.stage_hop_crosses_node(0, 0));
+        // tp=4: two stages share a node
+        let t2 = topo(4, 4, 1);
+        assert!(!t2.stage_hop_crosses_node(0, 0));
+        assert!(t2.stage_hop_crosses_node(0, 1));
+    }
+
+    #[test]
+    fn fig19_gpu_accounting() {
+        let t = topo(8, 4, 4);
+        assert_eq!(t.gpus_active(1), 32);
+        assert_eq!(t.gpus_active(4), 128);
+        assert_eq!(t.gpus_active(9), 128); // clamped
+    }
+}

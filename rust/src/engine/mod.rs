@@ -1,0 +1,392 @@
+//! Real-model serving engine: wires the coordinator to the PJRT runtime to
+//! serve the tiny GQA transformer end-to-end on CPU with real numerics.
+//!
+//! * `Engine` — single-client execution: chunked prefill + greedy decode
+//!   with the golden-output check, and the KVP partial/merge orchestration
+//!   (the same math the coordinator's KVP manager schedules at scale).
+//! * `pipeline::PipelineServer` — multi-threaded SPP serving: one PJRT
+//!   client per pipeline stage, dense chunk admission, mixed request
+//!   interleaving (in `pipeline.rs`).
+//!
+//! PJRT note: the `xla` crate's client is `Rc`-based (not `Send`), so
+//! cross-thread parallelism uses one client per stage thread rather than a
+//! shared client — see pipeline.rs.
+
+pub mod pipeline;
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{
+    lit_f32, lit_i32, lit_zeros_f32, load_weights, to_vec_f32, HostTensor, Runtime, TinySpec,
+};
+use std::collections::BTreeMap;
+
+/// Byte-level tokenizer (vocab = 256) for the demo model.
+pub fn tokenize(s: &str) -> Vec<i32> {
+    s.bytes().map(|b| b as i32).collect()
+}
+
+pub fn detokenize(tokens: &[i32]) -> String {
+    tokens
+        .iter()
+        .map(|&t| (t.clamp(0, 255) as u8) as char)
+        .collect()
+}
+
+/// Decompose `len` into a greedy schedule over the available chunk buckets
+/// (largest-first; buckets always include 1 so any length is exact).
+pub fn chunk_schedule(len: u64, buckets: &[u64], cap: u64) -> Vec<u64> {
+    let mut bs: Vec<u64> = buckets.iter().copied().filter(|&b| b <= cap.max(1)).collect();
+    bs.sort_unstable_by(|a, b| b.cmp(a));
+    assert!(bs.last() == Some(&1), "buckets must include 1");
+    let mut out = Vec::new();
+    let mut left = len;
+    while left > 0 {
+        let &b = bs.iter().find(|&&b| b <= left).unwrap();
+        out.push(b);
+        left -= b;
+    }
+    out
+}
+
+/// Per-sequence state: one (ck, cv) literal pair per pipeline stage.
+pub struct SeqState {
+    pub caches: Vec<(xla::Literal, xla::Literal)>,
+    pub pos: u64,
+}
+
+/// Single-client engine over the full model (stage bucket = all layers or a
+/// chosen split executed sequentially on one client).
+pub struct Engine {
+    pub rt: Runtime,
+    pub spec: TinySpec,
+    /// Layers per stage (must be one of the manifest's stage buckets).
+    pub lps: u32,
+    pub n_stages: usize,
+    weights: BTreeMap<String, HostTensor>,
+    /// Prebuilt weight literals per stage, in stage-entry argument order.
+    stage_weights: Vec<Vec<xla::Literal>>,
+    emb: xla::Literal,
+    final_norm: xla::Literal,
+}
+
+impl Engine {
+    pub fn load(dir: impl AsRef<Path>, lps: u32) -> Result<Engine> {
+        let rt = Runtime::load(dir.as_ref())?;
+        let spec = rt.manifest.spec;
+        if !rt.manifest.stage_buckets.contains(&lps) {
+            bail!(
+                "layers-per-stage {lps} not in artifact buckets {:?}",
+                rt.manifest.stage_buckets
+            );
+        }
+        let weights = load_weights(dir.as_ref(), &rt.manifest)?;
+        let n_stages = spec.n_layers / lps as usize;
+        let mut stage_weights = Vec::with_capacity(n_stages);
+        for s in 0..n_stages {
+            let mut ws = Vec::new();
+            for layer in s * lps as usize..(s + 1) * lps as usize {
+                for nm in &rt.manifest.layer_weight_names {
+                    let t = weights
+                        .get(&format!("layers.{layer}.{nm}"))
+                        .ok_or_else(|| anyhow!("missing weight layers.{layer}.{nm}"))?;
+                    ws.push(lit_f32(&t.shape, &t.data)?);
+                }
+            }
+            stage_weights.push(ws);
+        }
+        let emb = {
+            let t = &weights["embed"];
+            lit_f32(&t.shape, &t.data)?
+        };
+        let final_norm = {
+            let t = &weights["final_norm"];
+            lit_f32(&t.shape, &t.data)?
+        };
+        Ok(Engine {
+            spec,
+            lps,
+            n_stages,
+            weights,
+            stage_weights,
+            emb,
+            final_norm,
+            rt,
+        })
+    }
+
+    pub fn new_state(&self) -> Result<SeqState> {
+        let shape = [
+            self.lps as usize,
+            self.spec.max_seq,
+            self.spec.hkv,
+            self.spec.d_head,
+        ];
+        let caches = (0..self.n_stages)
+            .map(|_| Ok((lit_zeros_f32(&shape)?, lit_zeros_f32(&shape)?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(SeqState { caches, pos: 0 })
+    }
+
+    /// Run one chunk (size must be a manifest bucket) through all stages.
+    /// Returns the final logits for the chunk's tokens, row-major [c, vocab].
+    pub fn forward_chunk(&self, state: &mut SeqState, tokens: &[i32]) -> Result<Vec<f32>> {
+        let c = tokens.len();
+        if state.pos as usize + c > self.spec.max_seq {
+            bail!(
+                "sequence overflow: pos {} + chunk {c} > max_seq {}",
+                state.pos,
+                self.spec.max_seq
+            );
+        }
+        let tok_lit = lit_i32(&[c], tokens)?;
+        let mut h = self
+            .rt
+            .call_refs(&format!("embed_c{c}"), &[&tok_lit, &self.emb])?
+            .remove(0);
+        let start = lit_i32(&[1], &[state.pos as i32])?;
+        for s in 0..self.n_stages {
+            // All big operands (weights, caches) passed by reference —
+            // Literal::clone would deep-copy ~MBs per call (§Perf).
+            let mut args: Vec<&xla::Literal> =
+                vec![&h, &state.caches[s].0, &state.caches[s].1, &start];
+            args.extend(self.stage_weights[s].iter());
+            let mut out = self
+                .rt
+                .call_refs(&format!("stage_c{c}_l{}", self.lps), &args)?;
+            let h_new = out.remove(0);
+            let ck = out.remove(0);
+            let cv = out.remove(0);
+            h = h_new;
+            state.caches[s] = (ck, cv);
+        }
+        state.pos += c as u64;
+        let logits = self
+            .rt
+            .call_refs(
+                &format!("lm_head_c{c}"),
+                &[&h, &self.final_norm, &self.emb],
+            )?
+            .remove(0);
+        to_vec_f32(&logits)
+    }
+
+    /// Chunked prefill over the whole prompt; returns the last token's logits.
+    pub fn prefill(&self, state: &mut SeqState, prompt: &[i32], chunk_cap: u64) -> Result<Vec<f32>> {
+        let schedule = chunk_schedule(
+            prompt.len() as u64,
+            &self.rt.manifest.chunk_buckets,
+            chunk_cap,
+        );
+        let mut off = 0usize;
+        let mut last = Vec::new();
+        for c in schedule {
+            let logits = self.forward_chunk(state, &prompt[off..off + c as usize])?;
+            off += c as usize;
+            let v = self.spec.vocab;
+            last = logits[(c as usize - 1) * v..].to_vec();
+        }
+        Ok(last)
+    }
+
+    /// Greedy generation (prefill + decode). Returns generated token ids.
+    pub fn generate(&self, prompt: &[i32], n_new: usize, chunk_cap: u64) -> Result<Vec<i32>> {
+        let mut state = self.new_state()?;
+        let mut logits = self.prefill(&mut state, prompt, chunk_cap)?;
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            let tok = argmax(&logits);
+            out.push(tok);
+            let l = self.forward_chunk(&mut state, &[tok])?;
+            logits = l;
+        }
+        Ok(out)
+    }
+
+    /// Verify the engine reproduces the golden generation recorded at AOT
+    /// time by the pure-JAX reference — the end-to-end correctness gate.
+    pub fn verify_golden(&self) -> Result<usize> {
+        let g = self
+            .rt
+            .manifest
+            .golden
+            .clone()
+            .ok_or_else(|| anyhow!("manifest has no golden record"))?;
+        let got = self.generate(&g.prompt, g.generated.len(), g.chunk_size)?;
+        let matches = got
+            .iter()
+            .zip(&g.generated)
+            .filter(|(a, b)| a == b)
+            .count();
+        if matches != g.generated.len() {
+            bail!(
+                "golden mismatch: {matches}/{} tokens (got {:?}, want {:?})",
+                g.generated.len(),
+                got,
+                g.generated
+            );
+        }
+        Ok(matches)
+    }
+
+    // --- KVP orchestration over the runtime (section 4.4 numerics) --------
+
+    /// Decode attention for one query against a KV range [0, kv_len) held in
+    /// `k`/`v` (host row-major [n, hkv, dh]), sharded across `n_shards`
+    /// groups of `shard_cap` rows, merged with online softmax. Returns
+    /// [hq * dh]. This is the exact orchestration the KVP manager schedules
+    /// across worker groups, executed against real artifacts.
+    pub fn kvp_decode_attention(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        kv_len: usize,
+        shard_cap: usize,
+        n_shards: usize,
+    ) -> Result<Vec<f32>> {
+        let spec = self.spec;
+        let row = spec.hkv * spec.d_head;
+        if !self
+            .rt
+            .manifest
+            .kvp_shard_caps
+            .contains(&(shard_cap as u64))
+        {
+            bail!("shard cap {shard_cap} not an artifact bucket");
+        }
+        if !self
+            .rt
+            .manifest
+            .kvp_merge_counts
+            .contains(&(n_shards as u32))
+        {
+            bail!("merge count {n_shards} not an artifact bucket");
+        }
+        let q_lit = lit_f32(&[1, spec.hq, spec.d_head], q)?;
+        let mut os = Vec::new();
+        let mut ms = Vec::new();
+        let mut ls = Vec::new();
+        for s in 0..n_shards {
+            let lo = s * shard_cap;
+            let hi = ((s + 1) * shard_cap).min(k.len() / row);
+            let mut ks = vec![0f32; shard_cap * row];
+            let mut vs = vec![0f32; shard_cap * row];
+            if lo < hi {
+                ks[..(hi - lo) * row].copy_from_slice(&k[lo * row..hi * row]);
+                vs[..(hi - lo) * row].copy_from_slice(&v[lo * row..hi * row]);
+            }
+            let shard_len = kv_len.saturating_sub(lo).min(shard_cap);
+            let out = self.rt.call(
+                &format!("kvp_partial_c1_s{shard_cap}"),
+                &[
+                    q_lit.clone(),
+                    lit_f32(&[shard_cap, spec.hkv, spec.d_head], &ks)?,
+                    lit_f32(&[shard_cap, spec.hkv, spec.d_head], &vs)?,
+                    lit_i32(&[1], &[(kv_len - 1) as i32])?,
+                    lit_i32(&[1], &[lo as i32])?,
+                    lit_i32(&[1], &[shard_len as i32])?,
+                ],
+            )?;
+            os.push(to_vec_f32(&out[0])?);
+            ms.push(to_vec_f32(&out[1])?);
+            ls.push(to_vec_f32(&out[2])?);
+        }
+        let flat = |xs: &[Vec<f32>]| xs.concat();
+        let merged = self.rt.call(
+            &format!("kvp_merge_s{n_shards}_c1"),
+            &[
+                lit_f32(&[n_shards, 1, spec.hq, spec.d_head], &flat(&os))?,
+                lit_f32(&[n_shards, 1, spec.hq], &flat(&ms))?,
+                lit_f32(&[n_shards, 1, spec.hq], &flat(&ls))?,
+            ],
+        )?;
+        to_vec_f32(&merged[0])
+    }
+
+    /// Monolithic reference for the same computation (single shard over a
+    /// big-enough cap), for equivalence checks.
+    pub fn monolithic_decode_attention(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        kv_len: usize,
+        cap: usize,
+    ) -> Result<Vec<f32>> {
+        let spec = self.spec;
+        let row = spec.hkv * spec.d_head;
+        let mut ks = vec![0f32; cap * row];
+        let mut vs = vec![0f32; cap * row];
+        let n = (k.len() / row).min(cap);
+        ks[..n * row].copy_from_slice(&k[..n * row]);
+        vs[..n * row].copy_from_slice(&v[..n * row]);
+        let out = self.rt.call(
+            &format!("kvp_partial_c1_s{cap}"),
+            &[
+                lit_f32(&[1, spec.hq, spec.d_head], q)?,
+                lit_f32(&[cap, spec.hkv, spec.d_head], &ks)?,
+                lit_f32(&[cap, spec.hkv, spec.d_head], &vs)?,
+                lit_i32(&[1], &[(kv_len - 1) as i32])?,
+                lit_i32(&[1], &[0])?,
+                lit_i32(&[1], &[kv_len as i32])?,
+            ],
+        )?;
+        to_vec_f32(&out[0])
+    }
+
+    pub fn weight(&self, name: &str) -> Option<&HostTensor> {
+        self.weights.get(name)
+    }
+}
+
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_schedule_greedy_largest_first() {
+        let buckets = [1, 16, 64, 256];
+        assert_eq!(
+            chunk_schedule(300, &buckets, 256),
+            vec![256, 16, 16, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1]
+        );
+        // cap limits the largest bucket used
+        assert_eq!(chunk_schedule(40, &buckets, 16), vec![16, 16, 1, 1, 1, 1, 1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn chunk_schedule_sums() {
+        let buckets = [1u64, 16, 64, 256];
+        for len in [1u64, 5, 16, 100, 300, 1000, 2047] {
+            for cap in [1u64, 16, 64, 256] {
+                let s = chunk_schedule(len, &buckets, cap);
+                assert_eq!(s.iter().sum::<u64>(), len, "len={len} cap={cap}");
+                assert!(s.iter().all(|&c| c <= cap));
+            }
+        }
+    }
+
+    #[test]
+    fn tokenizer_roundtrip() {
+        let s = "Hello, Medha!";
+        assert_eq!(detokenize(&tokenize(s)), s);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 3.0]), 1);
+    }
+}

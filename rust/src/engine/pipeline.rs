@@ -1,0 +1,420 @@
+//! Multi-threaded SPP pipeline serving (section 4.3 on real hardware).
+//!
+//! One OS thread per pipeline stage, each with its **own PJRT CPU client**
+//! (the `xla` crate's client is Rc-based and not `Send`; separate clients
+//! per thread give true parallelism with no unsafe). Stages are connected
+//! by mpsc channels; the driver feeds prefill chunks **densely** — chunk
+//! i+1 enters stage 0 as soon as stage 0 finishes chunk i — which is
+//! exactly the dense schedule of Fig. 9b, measured here with wall clocks.
+//!
+//! Activations cross stage boundaries as host vectors (the CPU analogue of
+//! the paper's inter-node activation hop).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::{argmax, chunk_schedule};
+use crate::runtime::{lit_f32, lit_i32, lit_zeros_f32, load_weights, to_vec_f32, Runtime};
+
+/// Reserved request id for warmup traffic (compiles every executable before
+/// the serving clock starts; stage workers do not retain its cache).
+const WARMUP_REQ: usize = usize::MAX;
+
+/// A unit of work flowing through the pipeline.
+enum Msg {
+    Chunk {
+        req: usize,
+        /// Hidden states [c, d_model] entering this stage.
+        h: Vec<f32>,
+        c: usize,
+        start: i32,
+        /// Marks the request's final prompt chunk or a decode step (the
+        /// driver needs logits back for these).
+        wants_logits: bool,
+    },
+    Stop,
+}
+
+/// Per-request serving record.
+#[derive(Debug, Clone)]
+pub struct RequestReport {
+    pub prompt_len: usize,
+    pub generated: Vec<i32>,
+    pub ttft_s: f64,
+    pub tbt_s: Vec<f64>,
+}
+
+#[derive(Debug)]
+pub struct ServeReport {
+    pub requests: Vec<RequestReport>,
+    pub wall_s: f64,
+    pub prefill_tokens: u64,
+    pub decode_tokens: u64,
+}
+
+impl ServeReport {
+    pub fn decode_tps(&self) -> f64 {
+        self.decode_tokens as f64 / self.wall_s
+    }
+
+    pub fn total_tps(&self) -> f64 {
+        (self.decode_tokens + self.prefill_tokens) as f64 / self.wall_s
+    }
+}
+
+/// One stage worker: owns a PJRT client, its layers' weights, and the
+/// per-request caches for its stage.
+fn stage_worker(
+    dir: PathBuf,
+    stage: usize,
+    lps: u32,
+    rx: mpsc::Receiver<Msg>,
+    tx: mpsc::Sender<Msg>,
+) -> Result<()> {
+    let rt = Runtime::load(&dir)?;
+    let spec = rt.manifest.spec;
+    let weights = load_weights(&dir, &rt.manifest)?;
+    let mut stage_ws = Vec::new();
+    for layer in stage * lps as usize..(stage + 1) * lps as usize {
+        for nm in &rt.manifest.layer_weight_names {
+            let t = &weights[&format!("layers.{layer}.{nm}")];
+            stage_ws.push(lit_f32(&t.shape, &t.data)?);
+        }
+    }
+    let cache_shape = [lps as usize, spec.max_seq, spec.hkv, spec.d_head];
+    let mut caches: BTreeMap<usize, (xla::Literal, xla::Literal)> = BTreeMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Stop => {
+                let _ = tx.send(Msg::Stop);
+                break;
+            }
+            Msg::Chunk {
+                req,
+                h,
+                c,
+                start,
+                wants_logits,
+            } => {
+                let entry = format!("stage_c{c}_l{lps}");
+                let (ck, cv) = match caches.remove(&req) {
+                    Some(x) => x,
+                    None => (lit_zeros_f32(&cache_shape)?, lit_zeros_f32(&cache_shape)?),
+                };
+                let h_lit = lit_f32(&[c, spec.d_model], &h)?;
+                let start_lit = lit_i32(&[1], &[start])?;
+                // weights/caches by reference — Literal::clone deep-copies
+                let mut args: Vec<&xla::Literal> = vec![&h_lit, &ck, &cv, &start_lit];
+                args.extend(stage_ws.iter());
+                let mut out = rt.call_refs(&entry, &args)?;
+                let h_out = to_vec_f32(&out[0])?;
+                let cv2 = out.remove(2);
+                let ck2 = out.remove(1);
+                if req != WARMUP_REQ {
+                    caches.insert(req, (ck2, cv2));
+                }
+                tx.send(Msg::Chunk {
+                    req,
+                    h: h_out,
+                    c,
+                    start,
+                    wants_logits,
+                })
+                .map_err(|_| anyhow!("stage {stage}: downstream hung up"))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A request submitted to the pipeline server.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Serve `requests` through an `n_stages`-deep SPP pipeline.
+///
+/// Scheduling: prefill chunks of all requests are admitted densely and
+/// round-robin interleaved (continuous batching at chunk granularity);
+/// decodes are autoregressive (token t+1 admitted when t's logits return),
+/// interleaving with other requests' chunks in flight.
+pub fn serve(
+    dir: impl AsRef<Path>,
+    n_stages: usize,
+    chunk_cap: u64,
+    requests: &[ServeRequest],
+) -> Result<ServeReport> {
+    let dir = dir.as_ref().to_path_buf();
+    // Driver-side runtime for embed / lm_head.
+    let rt = Runtime::load(&dir)?;
+    let spec = rt.manifest.spec;
+    let lps_all = rt.manifest.stage_buckets.clone();
+    let lps = (spec.n_layers / n_stages) as u32;
+    if !lps_all.contains(&lps) {
+        anyhow::bail!(
+            "n_stages={n_stages} needs layers-per-stage {lps}, available {lps_all:?}"
+        );
+    }
+
+    // Build the stage chain: driver -> s0 -> s1 ... -> driver.
+    let (tx0, mut prev_rx) = mpsc::channel::<Msg>();
+    let mut handles = Vec::new();
+    for s in 0..n_stages {
+        let (tx_next, rx_next) = mpsc::channel::<Msg>();
+        let dir_c = dir.clone();
+        let rx = std::mem::replace(&mut prev_rx, rx_next);
+        handles.push(std::thread::spawn(move || {
+            stage_worker(dir_c, s, lps, rx, tx_next)
+        }));
+        let _ = s;
+    }
+    let final_rx = prev_rx;
+
+    let emb_t = {
+        let w = load_weights(&dir, &rt.manifest)?;
+        (
+            lit_f32(&w["embed"].shape, &w["embed"].data)?,
+            lit_f32(&w["final_norm"].shape, &w["final_norm"].data)?,
+        )
+    };
+
+    // ---- warmup: compile every executable on every stage thread BEFORE
+    // the serving clock starts (the CUDA-graph-capture analogue; serving
+    // metrics must measure steady-state, not compilation).
+    {
+        let mut sizes: Vec<usize> = requests
+            .iter()
+            .flat_map(|r| {
+                chunk_schedule(r.prompt.len() as u64, &rt.manifest.chunk_buckets, chunk_cap)
+            })
+            .map(|c| c as usize)
+            .collect();
+        sizes.push(1);
+        sizes.sort_unstable();
+        sizes.dedup();
+        let mut outstanding = 0usize;
+        for &c in &sizes {
+            let toks = vec![0i32; c];
+            let out = rt.call(
+                &format!("embed_c{c}"),
+                &[lit_i32(&[c], &toks)?, emb_t.0.clone()],
+            )?;
+            let h = to_vec_f32(&out[0])?;
+            // compile lm_head for this bucket too
+            let _ = rt.call(
+                &format!("lm_head_c{c}"),
+                &[
+                    lit_f32(&[c, spec.d_model], &h)?,
+                    emb_t.1.clone(),
+                    emb_t.0.clone(),
+                ],
+            )?;
+            tx0.send(Msg::Chunk {
+                req: WARMUP_REQ,
+                h,
+                c,
+                start: 0,
+                wants_logits: false,
+            })
+            .map_err(|_| anyhow!("pipeline hung up during warmup"))?;
+            outstanding += 1;
+        }
+        while outstanding > 0 {
+            let _ = final_rx.recv().map_err(|_| anyhow!("pipeline died in warmup"))?;
+            outstanding -= 1;
+        }
+    }
+
+    // Per-request driver state.
+    struct Drive {
+        prompt: Vec<i32>,
+        schedule: Vec<u64>,
+        next_chunk: usize,
+        off: usize,
+        pos: i32,
+        max_new: usize,
+        generated: Vec<i32>,
+        t_submit: Instant,
+        ttft: Option<f64>,
+        last_tok_t: Option<Instant>,
+        tbt: Vec<f64>,
+        done: bool,
+    }
+
+    let t0 = Instant::now();
+    let mut drives: Vec<Drive> = requests
+        .iter()
+        .map(|r| Drive {
+            prompt: r.prompt.clone(),
+            schedule: chunk_schedule(r.prompt.len() as u64, &rt.manifest.chunk_buckets, chunk_cap),
+            next_chunk: 0,
+            off: 0,
+            pos: 0,
+            max_new: r.max_new_tokens,
+            generated: Vec::new(),
+            t_submit: t0,
+            ttft: None,
+            last_tok_t: None,
+            tbt: Vec::new(),
+            done: false,
+        })
+        .collect();
+
+    let embed_chunk = |tokens: &[i32]| -> Result<Vec<f32>> {
+        let c = tokens.len();
+        let out = rt.call(
+            &format!("embed_c{c}"),
+            &[lit_i32(&[c], tokens)?, emb_t.0.clone()],
+        )?;
+        to_vec_f32(&out[0])
+    };
+    let lm_head_last = |h: &[f32], c: usize| -> Result<Vec<f32>> {
+        let out = rt.call(
+            &format!("lm_head_c{c}"),
+            &[
+                lit_f32(&[c, spec.d_model], h)?,
+                emb_t.1.clone(),
+                emb_t.0.clone(),
+            ],
+        )?;
+        let v = to_vec_f32(&out[0])?;
+        Ok(v[(c - 1) * spec.vocab..].to_vec())
+    };
+
+    // Feed: round-robin admit each request's next prefill chunk (dense).
+    let mut in_flight = 0usize;
+    let mut prefill_tokens = 0u64;
+    let mut decode_tokens = 0u64;
+    let max_in_flight = n_stages + 2; // keep the pipeline full, bounded
+
+    let mut submit_next_prefill = |d: &mut Drive, req: usize, in_flight: &mut usize| -> Result<bool> {
+        if d.next_chunk >= d.schedule.len() {
+            return Ok(false);
+        }
+        let c = d.schedule[d.next_chunk] as usize;
+        let toks = &d.prompt[d.off..d.off + c];
+        let h = embed_chunk(toks)?;
+        let wants = d.next_chunk + 1 == d.schedule.len();
+        tx0.send(Msg::Chunk {
+            req,
+            h,
+            c,
+            start: d.pos,
+            wants_logits: wants,
+        })
+        .map_err(|_| anyhow!("pipeline hung up"))?;
+        d.next_chunk += 1;
+        d.off += c;
+        d.pos += c as i32;
+        prefill_tokens += c as u64;
+        *in_flight += 1;
+        Ok(true)
+    };
+
+    // Admission order: shortest remaining prefill first — small requests
+    // slot in between a long request's chunks instead of queueing behind
+    // them (the anti-HOL property chunked prefill exists to provide).
+    let admission_order = |drives: &[Drive]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..drives.len()).collect();
+        idx.sort_by_key(|&i| drives[i].schedule.len() - drives[i].next_chunk);
+        idx
+    };
+
+    // Prime the pipeline.
+    'prime: loop {
+        let mut any = false;
+        for i in admission_order(&drives) {
+            if in_flight >= max_in_flight {
+                break 'prime;
+            }
+            if submit_next_prefill(&mut drives[i], i, &mut in_flight)? {
+                any = true;
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+
+    // Main loop: receive completed chunks, admit more work.
+    while in_flight > 0 {
+        let msg = final_rx.recv().map_err(|_| anyhow!("pipeline died"))?;
+        let Msg::Chunk {
+            req,
+            h,
+            c,
+            wants_logits,
+            ..
+        } = msg
+        else {
+            break;
+        };
+        in_flight -= 1;
+        if wants_logits {
+            let logits = lm_head_last(&h, c)?;
+            let tok = argmax(&logits);
+            let d = &mut drives[req];
+            let now = Instant::now();
+            if d.ttft.is_none() {
+                d.ttft = Some(now.duration_since(d.t_submit).as_secs_f64());
+            }
+            if let Some(last) = d.last_tok_t {
+                d.tbt.push(now.duration_since(last).as_secs_f64());
+            }
+            d.last_tok_t = Some(now);
+            d.generated.push(tok);
+            decode_tokens += 1;
+            if d.generated.len() < d.max_new {
+                // submit the decode step for this request
+                let hvec = embed_chunk(&[tok])?;
+                tx0.send(Msg::Chunk {
+                    req,
+                    h: hvec,
+                    c: 1,
+                    start: d.pos,
+                    wants_logits: true,
+                })
+                .map_err(|_| anyhow!("pipeline hung up"))?;
+                d.pos += 1;
+                in_flight += 1;
+            } else {
+                d.done = true;
+            }
+        }
+        // top up prefill work (shortest remaining first)
+        for i in admission_order(&drives) {
+            if in_flight >= max_in_flight {
+                break;
+            }
+            if submit_next_prefill(&mut drives[i], i, &mut in_flight)? {}
+        }
+    }
+
+    let _ = tx0.send(Msg::Stop);
+    for h in handles {
+        h.join().map_err(|_| anyhow!("stage thread panicked"))??;
+    }
+
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(ServeReport {
+        requests: drives
+            .into_iter()
+            .map(|d| RequestReport {
+                prompt_len: d.prompt.len(),
+                generated: d.generated,
+                ttft_s: d.ttft.unwrap_or(f64::NAN),
+                tbt_s: d.tbt,
+            })
+            .collect(),
+        wall_s,
+        prefill_tokens,
+        decode_tokens,
+    })
+}

@@ -1,0 +1,701 @@
+//! Reproduction harness: one function per table/figure in the paper's
+//! evaluation, printing the same rows/series the paper reports (DESIGN.md §5
+//! maps each to its modules). Invoked via `medha reproduce --figure <id>`
+//! and wrapped by the `paper_figures` bench target.
+
+use crate::baselines::{ring_prefill_time, striped_prefill_time, RingConfig, VllmModel};
+use crate::config::{DeploymentConfig, SloConfig};
+use crate::perfmodel::{gpus_required, resource_limits, BatchShape, PerfModel, PrefillWork};
+use crate::sim::{SimOptions, Simulation};
+use crate::util::stats::{fmt_duration, fmt_tokens};
+use crate::workload;
+
+pub const ALL_FIGURES: &[&str] = &[
+    "fig1", "table1", "fig5a", "fig5b", "fig6", "fig7", "fig8", "fig13a", "fig13b", "fig14a",
+    "fig14b", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21", "fig22", "sec62",
+    // ablations of DESIGN.md §6 (not paper figures, but design-choice evidence)
+    "fig9", "disagg", "kvpthresh",
+];
+
+pub fn run(figure: &str) -> anyhow::Result<()> {
+    match figure {
+        "fig1" => fig1(),
+        "table1" => table1(),
+        "fig5a" => fig5a(),
+        "fig5b" => fig5b(),
+        "fig6" => fig6(),
+        "fig7" => fig7(),
+        "fig8" => fig8(),
+        "fig13a" => fig13a(),
+        "fig13b" => fig13b(),
+        "fig14a" => fig14a(),
+        "fig14b" => fig14b(),
+        "fig15" => fig15(),
+        "fig16" => fig16(),
+        "fig17" => fig17(),
+        "fig18" => fig18(),
+        "fig19" => fig19(),
+        "fig20" => fig20(),
+        "fig21" => fig21(),
+        "fig22" => fig22(),
+        "sec62" => sec62(),
+        "fig9" => fig9(),
+        "disagg" => disagg(),
+        "kvpthresh" => kvpthresh(),
+        "all" => {
+            for f in ALL_FIGURES {
+                run(f)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown figure '{other}' (try one of {ALL_FIGURES:?})"),
+    }
+}
+
+fn pm_for(dep: &DeploymentConfig) -> PerfModel {
+    PerfModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel)
+}
+
+fn dep8b(tp: u32, spp: u32, kvp: u32) -> DeploymentConfig {
+    DeploymentConfig::llama3_8b_tp8().with_parallel(tp, spp, kvp)
+}
+
+fn dep70b(tp: u32, spp: u32, kvp: u32) -> DeploymentConfig {
+    DeploymentConfig::llama3_70b_tp8().with_parallel(tp, spp, kvp)
+}
+
+// ---------------------------------------------------------------------------
+
+/// Fig. 1 — headline: 1M/5M/10M on the full 128-GPU 3D deployment (70B).
+pub fn fig1() -> anyhow::Result<()> {
+    println!("\n== Fig. 1: Medha headline performance (Llama-3 70B, 128 H100, 3D parallel) ==");
+    println!(
+        "{:<12} {:>10} {:>14} {:>16}",
+        "context", "gpus", "prefill (TTFT)", "decode (tok/s)"
+    );
+    for &(ctx, spp, kvp) in &[(1_000_000u64, 8u32, 2u32), (5_000_000, 8, 2), (10_000_000, 8, 2)] {
+        let dep = dep70b(8, spp, kvp);
+        let pm = pm_for(&dep);
+        // Eq. 10: KVP groups cooperate on chunk attention during prefill.
+        let ttft = pm.prefill_time_3d(ctx, 4096);
+        let tbt = pm.decode_tbt(ctx);
+        println!(
+            "{:<12} {:>10} {:>14} {:>16.1}",
+            fmt_tokens(ctx),
+            dep.total_gpus(),
+            fmt_duration(ttft),
+            1.0 / tbt
+        );
+    }
+    println!("paper: 1M ~74s prefill / 64 tok/s; 5M ~3.5min / 56; 10M ~10.6min / 40");
+    println!("(absolute decode rate is bf16-KV; the paper's testbed is consistent with");
+    println!(" fp8 KV — dtype_bytes=1 doubles the modeled decode rate. Shapes match.)");
+    Ok(())
+}
+
+/// Table 1 — capability matrix.
+pub fn table1() -> anyhow::Result<()> {
+    println!("\n== Table 1: Parallelization strategies for long-context inference ==");
+    print!("{}", crate::baselines::table1::render_matrix());
+    Ok(())
+}
+
+/// Fig. 5a — max supported tokens per resource type (8xH100, 8B).
+pub fn fig5a() -> anyhow::Result<()> {
+    println!("\n== Fig. 5a: max tokens per resource, Llama-3 8B on 8xH100 (30s TTFT / 20ms TBT) ==");
+    let slo = SloConfig { ttft_s: 30.0, tbt_s: 0.020 };
+    let dep = dep8b(8, 1, 1);
+    let r = resource_limits(&dep.model, &dep.hardware, 8, &slo);
+    println!("compute-bound max tokens:   {:>12}", fmt_tokens(r.compute_tokens));
+    println!("bandwidth-bound max tokens: {:>12}", fmt_tokens(r.bandwidth_tokens));
+    println!("capacity-bound max tokens:  {:>12}", fmt_tokens(r.capacity_tokens));
+    println!("paper: compute binds first (~768K); capacity scales furthest");
+    Ok(())
+}
+
+/// Fig. 5b — GPUs needed per resource type vs context length.
+pub fn fig5b() -> anyhow::Result<()> {
+    println!("\n== Fig. 5b: GPUs required vs context (Llama-3 8B, 30s TTFT / 20ms TBT) ==");
+    let slo = SloConfig { ttft_s: 30.0, tbt_s: 0.020 };
+    let dep = dep8b(8, 1, 1);
+    println!(
+        "{:<10} {:>9} {:>10} {:>10} {:>8}",
+        "context", "compute", "bandwidth", "capacity", "max"
+    );
+    for &ctx in &[128_000u64, 256_000, 512_000, 1_000_000, 2_000_000, 4_000_000] {
+        let g = gpus_required(&dep.model, &dep.hardware, ctx, &slo);
+        println!(
+            "{:<10} {:>9} {:>10} {:>10} {:>8}",
+            fmt_tokens(ctx),
+            g.compute,
+            g.bandwidth,
+            g.capacity,
+            g.max()
+        );
+    }
+    println!("paper: ~20 GPUs @1M, ~80 @2M (quadratic in context)");
+    Ok(())
+}
+
+/// Fig. 6 — chunked-prefill read amplification (Eq. 6).
+pub fn fig6() -> anyhow::Result<()> {
+    println!("\n== Fig. 6: KV read amplification of chunked prefill (Llama-3 8B, 1M tokens) ==");
+    let m = dep8b(8, 1, 1).model;
+    let n = 1_000_000u64;
+    let contiguous = crate::perfmodel::counts::attn_read_bytes(&m, n) * m.n_layers as f64;
+    println!(
+        "{:<12} {:>16} {:>14}",
+        "chunk", "total KV reads", "amplification"
+    );
+    for &c in &[4096u64, 1024, 256, 64, 32] {
+        let r = crate::perfmodel::counts::chunked_prefill_total_reads(&m, n, c);
+        println!(
+            "{:<12} {:>13.1} TB {:>13.0}x",
+            c,
+            r / 1e12,
+            r / contiguous
+        );
+    }
+    println!("reads grow O(n^2/c) — yet Fig. 7 shows compute still dominates.");
+    Ok(())
+}
+
+/// Fig. 7 — attention prefill time vs chunk size (1M ctx, 70B, 8xH100).
+pub fn fig7() -> anyhow::Result<()> {
+    println!("\n== Fig. 7: attention time for 1M-token prefill vs chunk size (Llama-3 70B, tp=8) ==");
+    let dep = dep70b(8, 1, 1);
+    let pm = pm_for(&dep);
+    let n = 1_000_000u64;
+    let attn_time = |c: u64| -> f64 {
+        // attention term only, summed over all chunks
+        let mut t = 0.0;
+        let mut done = 0u64;
+        while done < n {
+            let chunk = c.min(n - done);
+            let it = pm.stage_time(&BatchShape::prefill_only(chunk, done + chunk), dep.model.n_layers);
+            t += it.attn_s;
+            done += chunk;
+        }
+        t
+    };
+    let base = attn_time(2048);
+    println!("{:<10} {:>14} {:>12}", "chunk", "attn time", "vs c=2048");
+    for &c in &[32u64, 64, 128, 256, 512, 1024, 2048, 4096] {
+        let t = attn_time(c);
+        println!(
+            "{:<10} {:>14} {:>11.1}%",
+            c,
+            fmt_duration(t),
+            (t / base - 1.0) * 100.0
+        );
+    }
+    println!("paper: chunk 32 adds only ~11% attention overhead vs 2048");
+    Ok(())
+}
+
+/// Fig. 8 — static vs adaptive chunking Pareto (prefill vs decode latency).
+pub fn fig8() -> anyhow::Result<()> {
+    println!("\n== Fig. 8: prefill/decode latency trade-off, static chunks vs adaptive (8B, tp=8) ==");
+    let ctx = 1_000_000u64;
+    let run = |adaptive: bool, static_chunk: u64| -> (f64, f64) {
+        let mut dep = dep8b(8, 1, 1);
+        dep.scheduler.adaptive_chunking = adaptive;
+        dep.scheduler.static_chunk = static_chunk;
+        let w = workload::long_plus_decodes(ctx, 8, 1_000, 2_000);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        sim.run();
+        let ttft = sim.request(0).unwrap().ttft().unwrap();
+        let p95 = sim.metrics.tbt.p95();
+        (ttft, p95)
+    };
+    println!("{:<16} {:>12} {:>16}", "policy", "TTFT", "P95 decode TBT");
+    for &c in &[32u64, 128, 512, 2048, 4096] {
+        let (ttft, p95) = run(false, c);
+        println!(
+            "{:<16} {:>12} {:>16}",
+            format!("static c={c}"),
+            fmt_duration(ttft),
+            fmt_duration(p95)
+        );
+    }
+    let (ttft, p95) = run(true, 0);
+    println!(
+        "{:<16} {:>12} {:>16}",
+        "adaptive",
+        fmt_duration(ttft),
+        fmt_duration(p95)
+    );
+    println!("adaptive should sit on/below the static Pareto frontier");
+    Ok(())
+}
+
+/// Fig. 13a — vLLM vs Medha-1D prefill latency across chunk sizes (1M, 8B).
+pub fn fig13a() -> anyhow::Result<()> {
+    println!("\n== Fig. 13a: prefill latency vs chunk size, vLLM-like vs Medha 1D TP (1M, 8B) ==");
+    let dep = dep8b(8, 1, 1);
+    let pm = pm_for(&dep);
+    let vllm = VllmModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
+    println!(
+        "{:<10} {:>12} {:>12} {:>8}",
+        "chunk", "vLLM-like", "Medha", "ratio"
+    );
+    for &c in &[128u64, 256, 512, 1024, 2048, 4096] {
+        let tv = vllm.prefill_time_chunked(1_000_000, c);
+        let tm = pm.prefill_time_monolithic(1_000_000, c);
+        println!(
+            "{:<10} {:>12} {:>12} {:>7.1}x",
+            c,
+            fmt_duration(tv),
+            fmt_duration(tm),
+            tv / tm
+        );
+    }
+    println!("paper: ~6x gap at small chunks from CPU-path optimizations");
+    Ok(())
+}
+
+/// Fig. 13b — decode latency vs context, vLLM vs Medha (8B, tp=8).
+pub fn fig13b() -> anyhow::Result<()> {
+    println!("\n== Fig. 13b: decode latency (TBT) vs context, vLLM-like vs Medha 1D TP (8B) ==");
+    let dep = dep8b(8, 1, 1);
+    let pm = pm_for(&dep);
+    let vllm = VllmModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
+    println!(
+        "{:<10} {:>12} {:>12} {:>8}",
+        "context", "vLLM-like", "Medha", "ratio"
+    );
+    for &ctx in &[100_000u64, 500_000, 1_000_000, 2_000_000] {
+        let tv = vllm.decode_tbt(ctx);
+        let tm = pm.decode_tbt(ctx);
+        println!(
+            "{:<10} {:>12} {:>12} {:>7.1}x",
+            fmt_tokens(ctx),
+            fmt_duration(tv),
+            fmt_duration(tm),
+            tv / tm
+        );
+    }
+    println!("paper: up to ~3.8-4x lower decode latency for Medha");
+    Ok(())
+}
+
+/// Fig. 14a — striped attention vs Medha 2D (SPP+TP) prefill, 1M tokens.
+pub fn fig14a() -> anyhow::Result<()> {
+    println!("\n== Fig. 14a: 1M-token prefill, Striped Attention vs Medha 2D SPP+TP (8B) ==");
+    println!(
+        "{:<9} {:>7} {:>12} {:>12} {:>12} {:>10}",
+        "servers", "gpus", "ring", "striped", "medha-2d", "speedup"
+    );
+    for &servers in &[1u32, 2, 4, 8, 16] {
+        let dep = dep8b(8, servers, 1);
+        let pm = pm_for(&dep);
+        let cfg = RingConfig { p: servers, tp: 8 };
+        let t_ring = ring_prefill_time(&dep.model, &dep.hardware, &cfg, 1_000_000);
+        let t_striped = striped_prefill_time(&dep.model, &dep.hardware, &cfg, 1_000_000);
+        let t_medha = pm.prefill_time_spp(1_000_000, 4096);
+        println!(
+            "{:<9} {:>7} {:>12} {:>12} {:>12} {:>9.0}%",
+            servers,
+            servers * 8,
+            fmt_duration(t_ring),
+            fmt_duration(t_striped),
+            fmt_duration(t_medha),
+            (t_striped / t_medha - 1.0) * 100.0
+        );
+    }
+    println!("paper: Medha 64% faster than striped at 16 servers");
+    Ok(())
+}
+
+/// Fig. 14b — preemption granularity.
+pub fn fig14b() -> anyhow::Result<()> {
+    println!("\n== Fig. 14b: preemption granularity (head-of-line delay for a new arrival) ==");
+    let dep = dep8b(8, 16, 1);
+    let pm = pm_for(&dep);
+    let cfg = RingConfig { p: 16, tp: 8 };
+    let striped = striped_prefill_time(&dep.model, &dep.hardware, &cfg, 1_000_000);
+    // Medha: a new arrival waits for the current chunk to clear ONE pipeline
+    // stage (dense SPP admits at stage-0 granularity).
+    let worst_iter = pm
+        .stage_time(
+            &BatchShape::prefill_only(4096, 1_000_000),
+            dep.model.n_layers / dep.parallel.spp,
+        )
+        .total();
+    println!("striped attention (monolithic prefill): {:>12}", fmt_duration(striped));
+    println!("medha (chunked, largest chunk 4096):    {:>12}", fmt_duration(worst_iter));
+    println!(
+        "ratio: {:.0}x finer-grained (paper: 120s vs 62ms)",
+        striped / worst_iter
+    );
+    Ok(())
+}
+
+/// Fig. 15 — SPP scaling heatmap: TTFT vs (context x spp), 8B & 70B.
+pub fn fig15() -> anyhow::Result<()> {
+    println!("\n== Fig. 15: Medha 2D (SPP+TP) prefill scaling; 'x' = out of memory ==");
+    for (name, dep_fn) in [
+        ("Llama-3 8B", dep8b as fn(u32, u32, u32) -> DeploymentConfig),
+        ("Llama-3 70B", dep70b as fn(u32, u32, u32) -> DeploymentConfig),
+    ] {
+        println!("\n{name} (tp=8):");
+        print!("{:<10}", "context");
+        for &spp in &[1u32, 2, 4, 8, 16] {
+            print!("{:>12}", format!("spp={spp}"));
+        }
+        println!();
+        for &ctx in &[1_000_000u64, 2_000_000, 5_000_000, 10_000_000] {
+            print!("{:<10}", fmt_tokens(ctx));
+            for &spp in &[1u32, 2, 4, 8, 16] {
+                let dep = dep_fn(8, spp, 1);
+                let pm = pm_for(&dep);
+                if !pm.fits_memory(ctx) {
+                    print!("{:>12}", "x");
+                } else {
+                    print!("{:>12}", fmt_duration(pm.prefill_time_spp(ctx, 4096)));
+                }
+            }
+            println!();
+        }
+        // scaling efficiency 1 -> 16 stages at 2M (where both fit)
+        let pm1 = pm_for(&dep_fn(8, 1, 1));
+        let pm16 = pm_for(&dep_fn(8, 16, 1));
+        let ctx = 2_000_000u64;
+        if pm1.fits_memory(ctx) && pm16.fits_memory(ctx) {
+            let eff = pm1.prefill_time_spp(ctx, 4096) / (16.0 * pm16.prefill_time_spp(ctx, 4096));
+            println!("scaling efficiency 1->16 stages @2M: {:.0}% (paper: >80%)", eff * 100.0);
+        }
+    }
+    Ok(())
+}
+
+/// Fig. 16 — TBT vs SPP degree (2M ctx).
+pub fn fig16() -> anyhow::Result<()> {
+    println!("\n== Fig. 16: decode TBT vs SPP degree, 2M context (SPP+TP) ==");
+    println!("{:<14} {:>10} {:>10} {:>10} {:>10}", "model", "spp=2", "spp=4", "spp=8", "spp=16");
+    for (name, dep_fn) in [
+        ("Llama-3 8B", dep8b as fn(u32, u32, u32) -> DeploymentConfig),
+        ("Llama-3 70B", dep70b as fn(u32, u32, u32) -> DeploymentConfig),
+    ] {
+        print!("{:<14}", name);
+        for &spp in &[2u32, 4, 8, 16] {
+            let pm = pm_for(&dep_fn(8, spp, 1));
+            if pm.fits_memory(2_000_000) {
+                print!("{:>10}", fmt_duration(pm.decode_tbt(2_000_000)));
+            } else {
+                print!("{:>10}", "x");
+            }
+        }
+        println!();
+    }
+    println!("paper: TBT only marginally affected by pipeline depth");
+    Ok(())
+}
+
+/// Fig. 17 — TBT vs KVP degree (4M & 10M).
+pub fn fig17() -> anyhow::Result<()> {
+    println!("\n== Fig. 17: decode TBT vs KVP degree (3D parallel, decode-only batches) ==");
+    println!(
+        "{:<14} {:<9} {:>10} {:>10} {:>10} {:>12}",
+        "model", "context", "kvp=1", "kvp=2", "kvp=4", "1->4 gain"
+    );
+    for (name, dep_fn, spp) in [
+        ("Llama-3 8B", dep8b as fn(u32, u32, u32) -> DeploymentConfig, 4u32),
+        ("Llama-3 70B", dep70b as fn(u32, u32, u32) -> DeploymentConfig, 8u32),
+    ] {
+        for &ctx in &[4_000_000u64, 10_000_000] {
+            print!("{:<14} {:<9}", name, fmt_tokens(ctx));
+            let mut t1 = f64::NAN;
+            let mut t4 = f64::NAN;
+            for &kvp in &[1u32, 2, 4] {
+                let pm = pm_for(&dep_fn(8, spp, kvp));
+                let t = pm.decode_tbt(ctx);
+                if kvp == 1 {
+                    t1 = t;
+                }
+                if kvp == 4 {
+                    t4 = t;
+                }
+                print!("{:>10}", fmt_duration(t));
+            }
+            println!("{:>11.1}x", t1 / t4);
+        }
+    }
+    println!("paper: 1.7x @4M -> 2.5x @10M for 8B (Amdahl-limited, grows with ctx)");
+    Ok(())
+}
+
+/// Fig. 18 — TTFT vs P95 TBT trade-off cloud (mixed batching).
+pub fn fig18() -> anyhow::Result<()> {
+    println!("\n== Fig. 18: TTFT vs P95 TBT trade-off (8B, tp=4, spp=4; chunk x kvp x ctx) ==");
+    println!(
+        "{:<8} {:<6} {:<7} {:>12} {:>14}",
+        "ctx", "kvp", "chunk", "TTFT", "P95 TBT"
+    );
+    for &ctx in &[1_000_000u64, 2_000_000, 4_000_000] {
+        for &kvp in &[1u32, 2, 4] {
+            for &chunk in &[32u64, 64, 128, 256] {
+                let mut dep = dep8b(4, 4, kvp);
+                dep.scheduler.adaptive_chunking = false;
+                dep.scheduler.static_chunk = chunk;
+                dep.scheduler.kvp_onboard_threshold = (ctx / kvp as u64).max(1);
+                let w = workload::long_plus_decodes(ctx, 4, 1_000, 600);
+                let mut sim = Simulation::new(dep, w, SimOptions::default());
+                sim.run();
+                let ttft = sim.request(0).unwrap().ttft().unwrap();
+                let p95 = sim.metrics.tbt.p95();
+                println!(
+                    "{:<8} {:<6} {:<7} {:>12} {:>14}",
+                    fmt_tokens(ctx),
+                    kvp,
+                    chunk,
+                    fmt_duration(ttft),
+                    fmt_duration(p95)
+                );
+            }
+        }
+    }
+    println!("bigger chunks: lower TTFT / higher TBT; higher kvp helps both at long ctx");
+    Ok(())
+}
+
+/// Fig. 19 — GPUs over time: dynamic KVP onboarding during a 2M prefill.
+pub fn fig19() -> anyhow::Result<()> {
+    println!("\n== Fig. 19: dynamic KVP growth, 2M-token request (8B; tp=8, spp=4... kvp<=4) ==");
+    let mut dep = dep8b(8, 4, 4);
+    dep.scheduler.kvp_onboard_threshold = 512_000;
+    let w = workload::single_long(2_000_000, 16);
+    let mut sim = Simulation::new(dep, w, SimOptions::default());
+    sim.run();
+    println!("{:>10} {:>8} {:>14}", "time", "gpus", "iter time");
+    let iters = &sim.metrics.iters;
+    let step = (iters.len() / 12).max(1);
+    for rec in iters.iter().step_by(step) {
+        println!(
+            "{:>10} {:>8} {:>14}",
+            fmt_duration(rec.t),
+            rec.active_gpus,
+            fmt_duration(rec.dur_s)
+        );
+    }
+    println!(
+        "onboard events: {:?}",
+        sim.kvp_onboard_log()
+            .iter()
+            .map(|(t, _, g)| format!("g{g}@{}", fmt_duration(*t)))
+            .collect::<Vec<_>>()
+    );
+    println!("paper: staircase 32 -> 128 GPUs with near-constant iteration time");
+    Ok(())
+}
+
+/// Fig. 20 — MFU of 2D SPP+TP prefill.
+pub fn fig20() -> anyhow::Result<()> {
+    println!("\n== Fig. 20: Model FLOPs Utilization, Medha 2D SPP+TP prefill ==");
+    println!("{:<10} {:>9} {:>9} {:>9} {:>9}", "context", "spp=1", "spp=2", "spp=4", "spp=8");
+    for &ctx in &[1_000_000u64, 2_000_000, 4_000_000] {
+        print!("{:<10}", fmt_tokens(ctx));
+        for &spp in &[1u32, 2, 4, 8] {
+            let dep = dep8b(8, spp, 1);
+            let pm = pm_for(&dep);
+            if !pm.fits_memory(ctx) {
+                print!("{:>9}", "x");
+                continue;
+            }
+            let t = pm.prefill_time_spp(ctx, 4096);
+            let flops = crate::perfmodel::counts::prefill_total_flops(&dep.model, ctx);
+            let mfu = flops / (t * dep.hardware.peak_flops * dep.total_gpus() as f64);
+            print!("{:>8.0}%", mfu * 100.0);
+        }
+        println!();
+    }
+    println!("paper: 50-60%+ MFU, decreasing with parallelism degree");
+    Ok(())
+}
+
+/// Fig. 21 — MBU of 2D KVP+TP decode.
+pub fn fig21() -> anyhow::Result<()> {
+    println!("\n== Fig. 21: Model Bandwidth Utilization, Medha 2D KVP+TP decode ==");
+    println!("{:<10} {:>9} {:>9} {:>9}", "context", "kvp=1", "kvp=2", "kvp=4");
+    for &ctx in &[1_000_000u64, 2_000_000, 4_000_000, 10_000_000] {
+        print!("{:<10}", fmt_tokens(ctx));
+        for &kvp in &[1u32, 2, 4] {
+            let dep = dep8b(8, 1, kvp);
+            let pm = pm_for(&dep);
+            let t = pm.decode_tbt(ctx);
+            let m = &dep.model;
+            let bytes = (crate::perfmodel::counts::attn_read_bytes(m, ctx)
+                + crate::perfmodel::counts::weight_bytes_per_layer(m) * kvp as f64)
+                * m.n_layers as f64;
+            let mbu = bytes / (t * dep.hardware.hbm_bw * dep.total_gpus() as f64);
+            print!("{:>8.0}%", mbu * 100.0);
+        }
+        println!();
+    }
+    println!("paper: up to ~92% MBU at kvp=1, decreasing with parallelism");
+    Ok(())
+}
+
+/// Fig. 22 — P95 mixed-batch execution time vs (batched decodes x chunk).
+pub fn fig22() -> anyhow::Result<()> {
+    println!("\n== Fig. 22: mixed-batch execution time, 1M prefill + N decodes of 1K (8B, tp=8) ==");
+    let dep = dep8b(8, 1, 1);
+    let pm = pm_for(&dep);
+    print!("{:<8}", "chunk");
+    for &n in &[0usize, 8, 32, 64, 128] {
+        print!("{:>12}", format!("{n} decodes"));
+    }
+    println!();
+    for &c in &[512u64, 1024, 2048, 4096] {
+        print!("{:<8}", c);
+        let alone = pm
+            .iteration_time(&BatchShape {
+                prefills: vec![PrefillWork { chunk: c, kv_len: 1_000_000 }],
+                decodes: vec![],
+            })
+            .total();
+        for &n in &[0usize, 8, 32, 64, 128] {
+            let b = BatchShape {
+                prefills: vec![PrefillWork { chunk: c, kv_len: 1_000_000 }],
+                decodes: (0..n)
+                    .map(|_| crate::perfmodel::DecodeWork { kv_len: 1_000 })
+                    .collect(),
+            };
+            let t = pm.iteration_time(&b).total();
+            print!("{:>11}{}", fmt_duration(t), if t / alone < 1.05 { " " } else { "*" });
+        }
+        println!();
+    }
+    println!("(* = >5% over running the chunk alone; paper: <=5% up to 128 decodes)");
+    Ok(())
+}
+
+/// Section 6.2 text claim: chunk 32 vs 4096 end-to-end prefill ratio ~1.75x.
+pub fn sec62() -> anyhow::Result<()> {
+    println!("\n== sec 6.2: end-to-end prefill, chunk 32 vs 4096 (8B, 1M tokens, tp=8) ==");
+    let pm = pm_for(&dep8b(8, 1, 1));
+    let t32 = pm.prefill_time_monolithic(1_000_000, 32);
+    let t4096 = pm.prefill_time_monolithic(1_000_000, 4096);
+    println!(
+        "chunk 32: {}   chunk 4096: {}   ratio: {:.2}x (paper: 1.75x)",
+        fmt_duration(t32),
+        fmt_duration(t4096),
+        t32 / t4096
+    );
+    Ok(())
+}
+
+/// Fig. 9 ablation: dense SPP schedule vs conventional micro-batch PP.
+pub fn fig9() -> anyhow::Result<()> {
+    println!("\n== Fig. 9 (ablation): dense SPP vs conventional PP prefill schedule ==");
+    use crate::coordinator::{conventional_pp_prefill_schedule, spp_prefill_schedule};
+    let dep = dep8b(8, 8, 1);
+    let pm = pm_for(&dep);
+    let layers_per_stage = dep.model.n_layers / dep.parallel.spp;
+    for &ctx in &[250_000u64, 1_000_000, 4_000_000] {
+        let chunk = 4096u64;
+        let n_chunks = ctx.div_ceil(chunk) as usize;
+        let stage_t = |i: usize| {
+            pm.stage_time(
+                &BatchShape::prefill_only(chunk, (i as u64 + 1) * chunk),
+                layers_per_stage,
+            )
+            .total()
+        };
+        let hop = pm.stage_hop_s(chunk);
+        let (dense, _) = spp_prefill_schedule(n_chunks, 8, stage_t, hop);
+        let (conv, _) = conventional_pp_prefill_schedule(n_chunks, 8, stage_t, hop);
+        println!(
+            "ctx {:<6} dense {:>10}  conventional {:>10}  speedup {:.1}x",
+            fmt_tokens(ctx),
+            fmt_duration(dense),
+            fmt_duration(conv),
+            conv / dense
+        );
+    }
+    println!("(dense admission is the SPP insight — near p_spp x for many chunks)");
+    Ok(())
+}
+
+/// Section 2.4 / 7 ablation: colocated Medha vs prefill-decode disaggregation.
+pub fn disagg() -> anyhow::Result<()> {
+    println!("\n== Disaggregation (ablation): colocated Medha vs prefill/decode split (8B) ==");
+    use crate::baselines::DisaggModel;
+    let dep = dep8b(8, 8, 1);
+    let pm = pm_for(&dep);
+    let dm = DisaggModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
+    println!(
+        "{:<10} {:>12} {:>14} {:>14} {:>14}",
+        "context", "medha TTFT", "disagg prefill", "KV transfer", "disagg TTFT"
+    );
+    for &ctx in &[128_000u64, 1_000_000, 4_000_000] {
+        let l = dm.latency(ctx, 4096);
+        println!(
+            "{:<10} {:>12} {:>14} {:>14} {:>14}",
+            fmt_tokens(ctx),
+            fmt_duration(pm.prefill_time_spp(ctx, 4096)),
+            fmt_duration(l.prefill_s),
+            fmt_duration(l.transfer_s),
+            fmt_duration(l.ttft_s())
+        );
+    }
+    println!("online: the KV handoff penalizes long contexts (paper section 2.4);");
+    println!("offline context-building amortizes it (paper section 7).");
+    Ok(())
+}
+
+/// KVP onboarding-threshold ablation (DESIGN.md §6).
+pub fn kvpthresh() -> anyhow::Result<()> {
+    println!("\n== KVP onboarding threshold (ablation): 2M request, 8B, tp=8 spp=4 kvp=4 ==");
+    println!(
+        "{:<12} {:>8} {:>12} {:>14} {:>12}",
+        "threshold", "groups", "TTFT", "P95 iter time", "decode TBT"
+    );
+    for &thr in &[250_000u64, 500_000, 1_000_000, 2_000_000] {
+        let mut dep = dep8b(8, 4, 4);
+        dep.scheduler.kvp_onboard_threshold = thr;
+        let w = workload::single_long(2_000_000, 64);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        sim.run();
+        let groups = sim.kvp_onboard_log().len();
+        let ttft = sim.request(0).unwrap().ttft().unwrap();
+        let mut durs = crate::util::stats::Samples::new();
+        for r in &sim.metrics.iters {
+            durs.add(r.dur_s);
+        }
+        let tbt = sim.request(0).unwrap().tbt_samples.iter().copied().sum::<f64>()
+            / sim.request(0).unwrap().tbt_samples.len().max(1) as f64;
+        println!(
+            "{:<12} {:>8} {:>12} {:>14} {:>12}",
+            fmt_tokens(thr),
+            groups,
+            fmt_duration(ttft),
+            fmt_duration(durs.p95()),
+            fmt_duration(tbt)
+        );
+    }
+    println!("smaller thresholds onboard more groups sooner: lower decode TBT,");
+    println!("more GPUs consumed earlier (the Fig. 19 trade-off).");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_run() {
+        // Smoke: every harness executes without error (output to stdout).
+        // The slow sim-backed ones are exercised in tests/sim_figures.rs.
+        for f in ["table1", "fig5a", "fig5b", "fig6", "fig7", "fig13a", "fig13b", "fig14a",
+                  "fig14b", "fig15", "fig16", "fig17", "fig20", "fig21", "fig22", "sec62", "fig1",
+                  "fig9", "disagg"] {
+            run(f).unwrap_or_else(|e| panic!("{f}: {e}"));
+        }
+    }
+
+    #[test]
+    fn unknown_figure_errors() {
+        assert!(run("fig99").is_err());
+    }
+}

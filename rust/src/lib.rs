@@ -1,0 +1,20 @@
+//! # Medha / Mnemosyne — long-context LLM inference serving, reproduced
+//!
+//! Rust coordinator (L3) + JAX/Pallas AOT compute (L2/L1) implementing the
+//! paper's three contributions — adaptive chunked prefills, Sequence
+//! Pipeline Parallelism (SPP), and KV-cache Parallelism (KVP) — composed
+//! into 3D parallelism, plus the substrates needed to reproduce every
+//! table and figure of the evaluation. See DESIGN.md for the full map.
+
+pub mod config;
+pub mod perfmodel;
+pub mod util;
+pub mod coordinator;
+pub mod kvcache;
+pub mod metrics;
+pub mod sim;
+pub mod workload;
+pub mod baselines;
+pub mod runtime;
+pub mod engine;
+pub mod figures;

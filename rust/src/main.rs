@@ -1,0 +1,185 @@
+//! Medha CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   serve       serve the tiny real model on CPU PJRT (SPP pipeline)
+//!   simulate    run the cluster simulator on a workload
+//!   reproduce   regenerate a paper table/figure (--figure fig15 | all)
+//!   inspect     list AOT artifacts and the manifest summary
+//!   table1      print the capability matrix
+
+use medha::config::DeploymentConfig;
+use medha::engine::pipeline::{serve, ServeRequest};
+use medha::engine::{detokenize, tokenize};
+use medha::sim::{SimOptions, Simulation};
+use medha::util::args::Args;
+use medha::util::stats::{fmt_duration, fmt_tokens};
+use medha::workload::{self, LengthDist};
+
+const USAGE: &str = "\
+medha — long-context LLM serving (Mnemosyne/Medha reproduction)
+
+USAGE:
+  medha serve     [--artifacts DIR] [--stages N] [--chunk-cap C] [--prompt TEXT] [--requests N] [--new-tokens N]
+  medha simulate  [--model llama3-8b|llama3-70b] [--tp N] [--spp N] [--kvp N]
+                  [--ctx TOKENS] [--requests N] [--rate R] [--horizon S] [--seed S]
+  medha reproduce --figure <fig1|table1|fig5a|...|all>
+  medha inspect   [--artifacts DIR]
+  medha table1
+";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["verbose", "adaptive", "no-adaptive"], true);
+    match args.subcommand.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("reproduce") => {
+            let fig = args.str_or("figure", "all");
+            medha::figures::run(fig)
+        }
+        Some("inspect") => cmd_inspect(&args),
+        Some("table1") => medha::figures::run("table1"),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let stages = args.usize_or("stages", 2);
+    let chunk_cap = args.u64_or("chunk-cap", 64);
+    let n_requests = args.usize_or("requests", 3);
+    let new_tokens = args.usize_or("new-tokens", 16);
+    let prompt = args.str_or(
+        "prompt",
+        "Long context inference needs chunked prefills, sequence pipeline \
+         parallelism and KV cache parallelism to serve every request well.",
+    );
+    println!("loading artifacts from {dir}; {stages}-stage SPP pipeline, chunk cap {chunk_cap}");
+    let mut reqs = vec![ServeRequest {
+        prompt: tokenize(prompt),
+        max_new_tokens: new_tokens,
+    }];
+    for i in 1..n_requests {
+        reqs.push(ServeRequest {
+            prompt: tokenize(&format!("short request number {i} says hello")),
+            max_new_tokens: new_tokens,
+        });
+    }
+    let report = serve(dir, stages, chunk_cap, &reqs)?;
+    println!(
+        "\nserved {} requests in {} — {:.1} decode tok/s, {:.1} total tok/s",
+        report.requests.len(),
+        fmt_duration(report.wall_s),
+        report.decode_tps(),
+        report.total_tps()
+    );
+    for (i, r) in report.requests.iter().enumerate() {
+        let mean_tbt = if r.tbt_s.is_empty() {
+            f64::NAN
+        } else {
+            r.tbt_s.iter().sum::<f64>() / r.tbt_s.len() as f64
+        };
+        println!(
+            "  req{i}: prompt={} ttft={} mean_tbt={} out={:?}",
+            r.prompt_len,
+            fmt_duration(r.ttft_s),
+            fmt_duration(mean_tbt),
+            detokenize(&r.generated)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "llama3-8b");
+    let mut dep = match model {
+        "llama3-70b" => DeploymentConfig::llama3_70b_tp8(),
+        _ => DeploymentConfig::llama3_8b_tp8(),
+    }
+    .with_parallel(
+        args.u64_or("tp", 8) as u32,
+        args.u64_or("spp", 4) as u32,
+        args.u64_or("kvp", 1) as u32,
+    );
+    if args.flag("no-adaptive") {
+        dep.scheduler.adaptive_chunking = false;
+    }
+    dep.validate()?;
+    let ctx = args.u64_or("ctx", 1_000_000);
+    let n = args.usize_or("requests", 8);
+    let rate = args.f64_or("rate", 0.0);
+    let w = if rate > 0.0 {
+        workload::poisson_mixed(
+            rate,
+            args.f64_or("horizon", 300.0),
+            LengthDist::ZipfBuckets {
+                buckets: vec![1_000, 16_000, 128_000, ctx],
+                s: 1.1,
+            },
+            256,
+            args.u64_or("seed", 0),
+        )
+    } else {
+        workload::long_plus_decodes(ctx, n, 1_000, 512)
+    };
+    println!(
+        "simulating {} requests on {} x{} ({})",
+        w.len(),
+        dep.model.name,
+        dep.total_gpus(),
+        dep.parallel.label()
+    );
+    let mut sim = Simulation::new(dep, w, SimOptions::default());
+    let end = sim.run();
+    let s = sim.metrics.summary();
+    println!("simulated span: {}", fmt_duration(end));
+    println!(
+        "finished: {}   TTFT p50/p95: {} / {}",
+        s.finished,
+        fmt_duration(s.ttft_p50),
+        fmt_duration(s.ttft_p95)
+    );
+    println!(
+        "TBT p50/p95/p99/max: {} / {} / {} / {}",
+        fmt_duration(s.tbt_p50),
+        fmt_duration(s.tbt_p95),
+        fmt_duration(s.tbt_p99),
+        fmt_duration(s.tbt_max)
+    );
+    println!(
+        "decode throughput: {:.1} tok/s   mean MFU: {:.0}%   mean MBU: {:.0}%",
+        s.decode_tps,
+        s.mfu_mean * 100.0,
+        s.mbu_mean * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let rt = medha::runtime::Runtime::load(dir)?;
+    let m = &rt.manifest;
+    println!(
+        "model: {} params, {} layers, hq={} hkv={} d_model={} max_seq={}",
+        fmt_tokens(m.spec.n_params),
+        m.spec.n_layers,
+        m.spec.hq,
+        m.spec.hkv,
+        m.spec.d_model,
+        m.spec.max_seq
+    );
+    println!("chunk buckets: {:?}", m.chunk_buckets);
+    println!("stage buckets (layers/stage): {:?}", m.stage_buckets);
+    println!(
+        "kvp shard caps: {:?}; merge counts: {:?}",
+        m.kvp_shard_caps, m.kvp_merge_counts
+    );
+    println!("platform: {}", rt.platform());
+    println!("{} entries:", m.entries.len());
+    for (name, e) in &m.entries {
+        println!("  {:<24} {} inputs  ({})", name, e.inputs.len(), e.file);
+    }
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! Serving metrics: TTFT / TBT percentile recorders, per-iteration traces
+//! (the Fig. 19 timeline), and MFU/MBU aggregation (Figs. 20–21).
+
+use crate::util::stats::Samples;
+
+/// One scheduler iteration's record (drives Figs. 8, 19, 22).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterRecord {
+    /// Completion time of the iteration (sim seconds).
+    pub t: f64,
+    /// Iteration execution time.
+    pub dur_s: f64,
+    /// Prefill chunk size scheduled, if any.
+    pub chunk: Option<u64>,
+    /// Decode tokens in the batch.
+    pub n_decodes: usize,
+    /// GPUs participating at this time (KVP growth staircase).
+    pub active_gpus: u32,
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub ttft: Samples,
+    pub tbt: Samples,
+    pub iters: Vec<IterRecord>,
+    pub mfu: Samples,
+    pub mbu: Samples,
+    pub finished_requests: u64,
+    pub decode_tokens: u64,
+    pub prefill_tokens: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_iter(&mut self, rec: IterRecord) {
+        self.decode_tokens += rec.n_decodes as u64;
+        self.prefill_tokens += rec.chunk.unwrap_or(0);
+        self.iters.push(rec);
+    }
+
+    pub fn record_ttft(&mut self, s: f64) {
+        self.ttft.add(s);
+    }
+
+    pub fn record_tbt(&mut self, s: f64) {
+        self.tbt.add(s);
+    }
+
+    /// Wall-clock span of the recorded iterations.
+    pub fn span_s(&self) -> f64 {
+        match (self.iters.first(), self.iters.last()) {
+            (Some(a), Some(b)) => b.t - (a.t - a.dur_s),
+            _ => 0.0,
+        }
+    }
+
+    /// Decode throughput over the recorded span (tokens/s).
+    pub fn decode_tokens_per_s(&self) -> f64 {
+        let span = self.span_s();
+        if span <= 0.0 {
+            return 0.0;
+        }
+        self.decode_tokens as f64 / span
+    }
+
+    pub fn summary(&mut self) -> MetricsSummary {
+        MetricsSummary {
+            n_ttft: self.ttft.len(),
+            ttft_p50: self.ttft.median(),
+            ttft_p95: self.ttft.p95(),
+            n_tbt: self.tbt.len(),
+            tbt_p50: self.tbt.median(),
+            tbt_p95: self.tbt.p95(),
+            tbt_p99: self.tbt.p99(),
+            tbt_max: self.tbt.max(),
+            finished: self.finished_requests,
+            decode_tps: self.decode_tokens_per_s(),
+            mfu_mean: self.mfu.mean(),
+            mbu_mean: self.mbu.mean(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MetricsSummary {
+    pub n_ttft: usize,
+    pub ttft_p50: f64,
+    pub ttft_p95: f64,
+    pub n_tbt: usize,
+    pub tbt_p50: f64,
+    pub tbt_p95: f64,
+    pub tbt_p99: f64,
+    pub tbt_max: f64,
+    pub finished: u64,
+    pub decode_tps: f64,
+    pub mfu_mean: f64,
+    pub mbu_mean: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_accounting() {
+        let mut m = Metrics::new();
+        m.record_iter(IterRecord {
+            t: 1.0,
+            dur_s: 1.0,
+            chunk: Some(512),
+            n_decodes: 4,
+            active_gpus: 8,
+        });
+        m.record_iter(IterRecord {
+            t: 2.0,
+            dur_s: 1.0,
+            chunk: None,
+            n_decodes: 8,
+            active_gpus: 8,
+        });
+        assert_eq!(m.prefill_tokens, 512);
+        assert_eq!(m.decode_tokens, 12);
+        assert!((m.span_s() - 2.0).abs() < 1e-12);
+        assert!((m.decode_tokens_per_s() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record_tbt(i as f64 / 1000.0);
+        }
+        m.record_ttft(3.0);
+        let s = m.summary();
+        assert!((s.tbt_p50 - 0.0505).abs() < 1e-3);
+        assert!(s.tbt_p95 > s.tbt_p50);
+        assert_eq!(s.n_ttft, 1);
+    }
+}

@@ -1,0 +1,285 @@
+//! Closed-form analyses built on the iteration model: SPP prefill time
+//! (Eq. 8), KVP decode time (Eq. 9/10), and the resource-requirement curves
+//! behind Fig. 5.
+
+use super::iteration::{BatchShape, PerfModel};
+use crate::config::{HardwareConfig, ModelConfig, SloConfig};
+
+impl PerfModel {
+    /// Monolithic (non-pipelined) chunked prefill time for `n` tokens with
+    /// a fixed chunk size: sum over chunks of full-model iteration time.
+    pub fn prefill_time_monolithic(&self, n: u64, chunk: u64) -> f64 {
+        let mut t = 0.0;
+        let mut done = 0u64;
+        while done < n {
+            let c = chunk.min(n - done);
+            t += self
+                .iteration_time(&BatchShape::prefill_only(c, done + c))
+                .total();
+            done += c;
+        }
+        t
+    }
+
+    /// SPP prefill time (Eq. 8): with dense pipelining, stage 0 starts chunk
+    /// i+1 as soon as chunk i leaves stage 0, so the prefill completes after
+    /// all chunks pass one stage plus the last chunk drains the remaining
+    /// spp-1 stages. Near-linear speedup in p_spp for large n.
+    pub fn prefill_time_spp(&self, n: u64, chunk: u64) -> f64 {
+        let spp = self.parallel.spp.max(1);
+        let layers_per_stage = self.model.n_layers / spp;
+        let mut sum_stage = 0.0;
+        let mut last_stage = 0.0;
+        let mut done = 0u64;
+        while done < n {
+            let c = chunk.min(n - done);
+            let st = self
+                .stage_time(&BatchShape::prefill_only(c, done + c), layers_per_stage)
+                .total()
+                + self.stage_hop_s(c);
+            sum_stage += st;
+            last_stage = st;
+            done += c;
+        }
+        sum_stage + (spp as f64 - 1.0) * last_stage
+    }
+
+    /// Full-3D prefill (Eq. 10): SPP dense pipelining with the chunk's
+    /// attention additionally parallelized across the kvp groups (each
+    /// group holds a sequence shard; chunk queries are broadcast and
+    /// partials merged, at a per-chunk merge cost independent of context).
+    pub fn prefill_time_3d(&self, n: u64, chunk: u64) -> f64 {
+        let spp = self.parallel.spp.max(1);
+        let kvp = self.parallel.kvp.max(1) as u64;
+        let layers_per_stage = self.model.n_layers / spp;
+        let mut sum_stage = 0.0;
+        let mut last_stage = 0.0;
+        let mut done = 0u64;
+        while done < n {
+            let c = chunk.min(n - done);
+            // local KV shard this group scans for the chunk
+            let local = (done + c).div_ceil(kvp);
+            let st = self
+                .stage_time(
+                    &BatchShape::prefill_only(c, local),
+                    layers_per_stage,
+                )
+                .total()
+                + self.stage_hop_s(c)
+                + self.kvp_merge_s(c) / spp as f64; // merge amortized per stage
+            sum_stage += st;
+            last_stage = st;
+            done += c;
+        }
+        sum_stage + (spp as f64 - 1.0) * last_stage
+    }
+
+    /// Decode latency (TBT) for one token of a request with `ctx` KV tokens
+    /// under the configured layout, including SPP bubble and KVP merge
+    /// (Eq. 9: attention parallelized by kvp; the rest is not).
+    pub fn decode_tbt(&self, ctx: u64) -> f64 {
+        let kvp = self.parallel.kvp.max(1) as u64;
+        let local = ctx.div_ceil(kvp);
+        let spp = self.parallel.spp.max(1);
+        let layers_per_stage = self.model.n_layers / spp;
+        let per_stage = self
+            .stage_time(&BatchShape::decode_only(&[local]), layers_per_stage)
+            .total()
+            + self.stage_hop_s(1);
+        // A single decode token traverses all stages sequentially.
+        per_stage * spp as f64 + self.kvp_merge_s(1)
+    }
+
+    /// TBT for a decode-only *batch* of requests with the given (local)
+    /// contexts, traversing all stages.
+    pub fn batch_tbt(&self, local_ctxs: &[u64]) -> f64 {
+        let spp = self.parallel.spp.max(1);
+        let layers_per_stage = self.model.n_layers / spp;
+        let per_stage = self
+            .stage_time(&BatchShape::decode_only(local_ctxs), layers_per_stage)
+            .total()
+            + self.stage_hop_s(local_ctxs.len() as u64);
+        per_stage * spp as f64 + self.kvp_merge_s(local_ctxs.len() as u64)
+    }
+}
+
+/// Fig. 5a: for a fixed GPU budget, the max context length each resource
+/// type supports under the SLOs.
+#[derive(Debug, Clone, Copy)]
+pub struct ResourceLimits {
+    /// Max n such that prefill compute meets TTFT.
+    pub compute_tokens: u64,
+    /// Max n such that decode KV scan meets TBT.
+    pub bandwidth_tokens: u64,
+    /// Max n such that weights + KV fit in aggregate HBM.
+    pub capacity_tokens: u64,
+}
+
+pub fn resource_limits(
+    model: &ModelConfig,
+    hw: &HardwareConfig,
+    gpus: u32,
+    slo: &SloConfig,
+) -> ResourceLimits {
+    let g = gpus as f64;
+    // compute: prefill_total_flops(n) / (g * sustained) <= ttft
+    let solve = |pred: &dyn Fn(u64) -> bool| -> u64 {
+        let (mut lo, mut hi) = (0u64, 1u64 << 36);
+        if !pred(1) {
+            return 0;
+        }
+        while lo + 1 < hi {
+            let mid = lo + (hi - lo) / 2;
+            if pred(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    };
+    let compute_tokens = solve(&|n| {
+        super::counts::prefill_total_flops(model, n) / (g * hw.sustained_flops()) <= slo.ttft_s
+    });
+    let bandwidth_tokens = solve(&|n| {
+        (super::counts::attn_read_bytes(model, n) * model.n_layers as f64
+            + super::counts::weight_bytes_per_layer(model) * model.n_layers as f64)
+            / (g * hw.sustained_bw())
+            <= slo.tbt_s
+    });
+    let capacity_tokens = solve(&|n| {
+        model.param_bytes() as f64 + model.kv_bytes(n) as f64
+            <= g * hw.hbm_capacity as f64 * 0.95
+    });
+    ResourceLimits {
+        compute_tokens,
+        bandwidth_tokens,
+        capacity_tokens,
+    }
+}
+
+/// Fig. 5b: GPUs needed per resource type for a given context length.
+#[derive(Debug, Clone, Copy)]
+pub struct GpuRequirement {
+    pub compute: u32,
+    pub bandwidth: u32,
+    pub capacity: u32,
+}
+
+impl GpuRequirement {
+    pub fn max(&self) -> u32 {
+        self.compute.max(self.bandwidth).max(self.capacity)
+    }
+}
+
+pub fn gpus_required(
+    model: &ModelConfig,
+    hw: &HardwareConfig,
+    ctx: u64,
+    slo: &SloConfig,
+) -> GpuRequirement {
+    let compute = (super::counts::prefill_total_flops(model, ctx)
+        / (hw.sustained_flops() * slo.ttft_s))
+        .ceil() as u32;
+    let bandwidth = ((super::counts::attn_read_bytes(model, ctx)
+        + super::counts::weight_bytes_per_layer(model))
+        * model.n_layers as f64
+        / (hw.sustained_bw() * slo.tbt_s))
+        .ceil() as u32;
+    let capacity = ((model.param_bytes() as f64 + model.kv_bytes(ctx) as f64)
+        / (hw.hbm_capacity as f64 * 0.95))
+        .ceil() as u32;
+    GpuRequirement {
+        compute: compute.max(1),
+        bandwidth: bandwidth.max(1),
+        capacity: capacity.max(1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentConfig;
+    use crate::perfmodel::PerfModel;
+
+    fn pm(tp: u32, spp: u32, kvp: u32) -> PerfModel {
+        let d = DeploymentConfig::llama3_8b_tp8().with_parallel(tp, spp, kvp);
+        PerfModel::new(d.model, d.hardware, d.parallel)
+    }
+
+    #[test]
+    fn spp_near_linear_speedup() {
+        // Eq. 8 / Fig. 15: scaling efficiency >= 80% going 1 -> 8 stages.
+        let n = 1_000_000;
+        let t1 = pm(8, 1, 1).prefill_time_spp(n, 4096);
+        let t8 = pm(8, 8, 1).prefill_time_spp(n, 4096);
+        let eff = t1 / (8.0 * t8);
+        assert!(eff > 0.8, "efficiency {eff}");
+    }
+
+    #[test]
+    fn spp_equals_monolithic_at_depth_1() {
+        let m = pm(8, 1, 1);
+        let a = m.prefill_time_spp(100_000, 2048);
+        let b = m.prefill_time_monolithic(100_000, 2048);
+        assert!((a - b).abs() / b < 1e-9);
+    }
+
+    #[test]
+    fn kvp_reduces_long_context_tbt() {
+        // Fig. 17: kvp=4 helps more at 10M than at 4M, sublinearly (Amdahl).
+        let t4_1 = pm(8, 4, 1).decode_tbt(4_000_000);
+        let t4_4 = pm(8, 4, 4).decode_tbt(4_000_000);
+        let t10_1 = pm(8, 4, 1).decode_tbt(10_000_000);
+        let t10_4 = pm(8, 4, 4).decode_tbt(10_000_000);
+        let s4 = t4_1 / t4_4;
+        let s10 = t10_1 / t10_4;
+        assert!(s4 > 1.3 && s4 < 4.0, "s4={s4}");
+        assert!(s10 > s4, "s10={s10} should exceed s4={s4}");
+    }
+
+    #[test]
+    fn spp_hurts_tbt_only_marginally() {
+        // Fig. 16: decode latency only marginally affected by pipeline depth.
+        let t1 = pm(8, 1, 1).decode_tbt(2_000_000);
+        let t16 = pm(8, 16, 1).decode_tbt(2_000_000);
+        assert!(t16 < t1 * 2.0, "t1={t1} t16={t16}");
+        assert!(t16 > t1 * 0.9);
+    }
+
+    #[test]
+    fn fig5a_compute_binds_first() {
+        // Paper: on 8xH100 / Llama-3 8B, compute caps out around ~768K
+        // tokens while capacity scales furthest.
+        let m = crate::config::ModelConfig::llama3_8b();
+        let hw = crate::config::HardwareConfig::dgx_h100();
+        let slo = SloConfig {
+            ttft_s: 30.0,
+            tbt_s: 0.020,
+        };
+        let r = resource_limits(&m, &hw, 8, &slo);
+        assert!(
+            (300_000..1_500_000).contains(&r.compute_tokens),
+            "compute {}",
+            r.compute_tokens
+        );
+        assert!(r.capacity_tokens > r.compute_tokens);
+        assert!(r.bandwidth_tokens > r.compute_tokens);
+    }
+
+    #[test]
+    fn fig5b_gpu_counts_match_paper_scale() {
+        // Paper: ~20 GPUs at 1M, ~80 at 2M (quadratic growth).
+        let m = crate::config::ModelConfig::llama3_8b();
+        let hw = crate::config::HardwareConfig::dgx_h100();
+        let slo = SloConfig {
+            ttft_s: 30.0,
+            tbt_s: 0.020,
+        };
+        let g1 = gpus_required(&m, &hw, 1_000_000, &slo).max();
+        let g2 = gpus_required(&m, &hw, 2_000_000, &slo).max();
+        assert!((10..40).contains(&g1), "g1={g1}");
+        assert!((40..160).contains(&g2), "g2={g2}");
+        assert!(g2 >= 3 * g1, "quadratic-ish growth: {g1} -> {g2}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Operation counts — the paper's Eq. 1–7, per transformer layer.
+//!
+//! All counts are *totals* for one layer before dividing across TP workers;
+//! the iteration model applies parallelism. FLOPs use the 2-flops-per-MAC
+//! convention the paper uses (Eq. 1: F_a(n) = 4 n^2 d h_q counts QK^T and
+//! PV, 2 each).
+
+use crate::config::ModelConfig;
+
+/// Attention FLOPs for `nq` query tokens attending to `nkv` KV tokens
+/// (one layer). Eq. 1 is the special case nq == nkv == n.
+pub fn attn_flops(m: &ModelConfig, nq: u64, nkv: u64) -> f64 {
+    4.0 * nq as f64 * nkv as f64 * m.d_head as f64 * m.hq as f64
+}
+
+/// Bytes of KV cache read for attention over `nkv` KV tokens (one layer).
+/// Eq. 3: R_a(n) = M_kv(n) — K and V, h_kv heads, d_head wide.
+pub fn attn_read_bytes(m: &ModelConfig, nkv: u64) -> f64 {
+    2.0 * nkv as f64 * m.hkv as f64 * m.d_head as f64 * m.dtype_bytes as f64
+}
+
+/// Arithmetic intensity of an attention op (Eq. 4 / Eq. 7): FLOPs per byte.
+/// For a prefill chunk this depends only on the chunk size — the paper's
+/// central observation.
+pub fn attn_intensity(m: &ModelConfig, nq: u64, nkv: u64) -> f64 {
+    attn_flops(m, nq, nkv) / attn_read_bytes(m, nkv)
+}
+
+/// Parameters in one layer's linear weights (attention projections + SwiGLU).
+pub fn linear_params_per_layer(m: &ModelConfig) -> f64 {
+    let dm = m.d_model as f64;
+    let dh = m.d_head as f64;
+    let attn = dm * m.hq as f64 * dh // wq
+        + 2.0 * dm * m.hkv as f64 * dh // wk, wv
+        + m.hq as f64 * dh * dm; // wo
+    let mlp = 3.0 * dm * m.d_ff as f64;
+    attn + mlp
+}
+
+/// Linear-layer FLOPs for `tokens` tokens in one layer (2 flops per MAC).
+pub fn linear_flops(m: &ModelConfig, tokens: u64) -> f64 {
+    2.0 * tokens as f64 * linear_params_per_layer(m)
+}
+
+/// Weight bytes read per layer (decode iterations are bound by this).
+pub fn weight_bytes_per_layer(m: &ModelConfig) -> f64 {
+    linear_params_per_layer(m) * m.dtype_bytes as f64
+}
+
+/// Total KV-cache read bytes for a *chunked* prefill of `n` tokens with
+/// chunk size `c`, all layers — Eq. 6's read amplification:
+/// R_cp(n, c) = sum_i R_a(i * c) = O(n^2 / c).
+pub fn chunked_prefill_total_reads(m: &ModelConfig, n: u64, c: u64) -> f64 {
+    let chunks = n.div_ceil(c);
+    let mut total = 0.0;
+    for i in 1..=chunks {
+        let kv = (i * c).min(n);
+        total += attn_read_bytes(m, kv) * m.n_layers as f64;
+    }
+    total
+}
+
+/// Total prefill attention FLOPs for `n` tokens, all layers (Eq. 1 summed
+/// over causal structure: each token attends to its prefix, n^2/2 pairs,
+/// but the paper's F_a(n) = 4 n^2 d h_q counts the full causal prefill as
+/// run by kernels that skip masked tiles — we follow the causal count).
+pub fn prefill_attn_flops(m: &ModelConfig, n: u64) -> f64 {
+    // sum over chunks of attn_flops(c, prefix) telescopes to ~n^2/2 * 4 d hq
+    2.0 * (n as f64) * (n as f64) * m.d_head as f64 * m.hq as f64 * m.n_layers as f64
+}
+
+/// Total prefill FLOPs including linear layers, all layers.
+pub fn prefill_total_flops(m: &ModelConfig, n: u64) -> f64 {
+    prefill_attn_flops(m, n) + linear_flops(m, n) * m.n_layers as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m8b() -> ModelConfig {
+        ModelConfig::llama3_8b()
+    }
+
+    #[test]
+    fn eq1_quadratic_form() {
+        let m = m8b();
+        // F_a(n) = 4 n^2 d h_q for square attention
+        let n = 1024;
+        let f = attn_flops(&m, n, n);
+        assert_eq!(f, 4.0 * 1024.0 * 1024.0 * 128.0 * 32.0);
+    }
+
+    #[test]
+    fn eq7_intensity_depends_only_on_chunk() {
+        // The paper's key insight: I(c, n) == I(c, 10n).
+        let m = m8b();
+        let i1 = attn_intensity(&m, 128, 100_000);
+        let i2 = attn_intensity(&m, 128, 1_000_000);
+        assert!((i1 - i2).abs() < 1e-9);
+        // and scales linearly with chunk size
+        let i3 = attn_intensity(&m, 256, 1_000_000);
+        assert!((i3 / i1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gqa_boosts_intensity() {
+        // Eq. 7: intensity proportional to hq/hkv (x4 for Llama-3 8B)
+        let mut mha = m8b();
+        mha.hkv = mha.hq;
+        let m = m8b();
+        let r = attn_intensity(&m, 64, 10_000) / attn_intensity(&mha, 64, 10_000);
+        assert!((r - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq6_read_amplification_quadratic() {
+        // Halving the chunk size should roughly double total reads for the
+        // same n (O(n^2 / c)).
+        let m = m8b();
+        let n = 1 << 20;
+        let r1 = chunked_prefill_total_reads(&m, n, 2048);
+        let r2 = chunked_prefill_total_reads(&m, n, 1024);
+        assert!((r2 / r1 - 2.0).abs() < 0.01, "{}", r2 / r1);
+    }
+
+    #[test]
+    fn paper_2_4_exaflops_example() {
+        // Paper section 2.1: Llama-3 70B, 1M-token prefill ~ 2.4 exaFLOPs.
+        let m = ModelConfig::llama3_70b();
+        let f = prefill_total_flops(&m, 1_000_000);
+        assert!(
+            (1.0e18..4.0e18).contains(&f),
+            "expected ~2.4e18, got {f:e}"
+        );
+    }
+
+    #[test]
+    fn linear_params_match_model_totals() {
+        let m = m8b();
+        let per_layer = linear_params_per_layer(&m);
+        let total = per_layer * m.n_layers as f64;
+        // within ~3% of n_params minus embeddings
+        let non_embed = m.n_params() as f64 - (m.vocab as f64 * m.d_model as f64);
+        assert!((total / non_embed - 1.0).abs() < 0.03);
+    }
+}

@@ -1,0 +1,371 @@
+//! Roofline execution-time model for one batch iteration on one worker
+//! group (a TP group executing `layers` transformer layers).
+//!
+//! This is the Vidur-style runtime predictor the adaptive chunking policy
+//! (section 4.2) queries, and the time source the cluster simulator charges
+//! for every stage execution. Attention and linear phases are modeled as
+//! separate roofline terms because their arithmetic intensities differ by
+//! orders of magnitude in mixed batches.
+
+use super::counts;
+use crate::config::{HardwareConfig, ModelConfig, ParallelismConfig};
+
+/// One prefill chunk's worth of work in a batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PrefillWork {
+    /// Chunk size (query tokens) processed this iteration.
+    pub chunk: u64,
+    /// KV length the chunk attends to, *including itself* (local to this
+    /// worker group if the request is KVP-sharded).
+    pub kv_len: u64,
+}
+
+/// One decode request's work in a batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeWork {
+    /// KV length scanned (local shard length if KVP-sharded).
+    pub kv_len: u64,
+}
+
+/// The shape of a mixed batch (section 2.4: chunked prefill piggybacked on
+/// decodes).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BatchShape {
+    pub prefills: Vec<PrefillWork>,
+    pub decodes: Vec<DecodeWork>,
+}
+
+impl BatchShape {
+    pub fn decode_only(ctxs: &[u64]) -> BatchShape {
+        BatchShape {
+            prefills: Vec::new(),
+            decodes: ctxs.iter().map(|&kv_len| DecodeWork { kv_len }).collect(),
+        }
+    }
+
+    pub fn prefill_only(chunk: u64, kv_len: u64) -> BatchShape {
+        BatchShape {
+            prefills: vec![PrefillWork { chunk, kv_len }],
+            decodes: Vec::new(),
+        }
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.prefills.iter().map(|p| p.chunk).sum::<u64>() + self.decodes.len() as u64
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prefills.is_empty() && self.decodes.is_empty()
+    }
+}
+
+/// Decomposed execution time for one iteration (seconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct IterationTime {
+    pub attn_s: f64,
+    pub linear_s: f64,
+    pub tp_comm_s: f64,
+    pub overhead_s: f64,
+}
+
+impl IterationTime {
+    pub fn total(&self) -> f64 {
+        self.attn_s + self.linear_s + self.tp_comm_s + self.overhead_s
+    }
+}
+
+/// The runtime predictor.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub model: ModelConfig,
+    pub hw: HardwareConfig,
+    pub parallel: ParallelismConfig,
+}
+
+impl PerfModel {
+    pub fn new(model: ModelConfig, hw: HardwareConfig, parallel: ParallelismConfig) -> PerfModel {
+        PerfModel {
+            model,
+            hw,
+            parallel,
+        }
+    }
+
+    /// Execution time of `batch` over `layers` consecutive layers on one TP
+    /// group (i.e. one pipeline-stage execution).
+    pub fn stage_time(&self, batch: &BatchShape, layers: u32) -> IterationTime {
+        if batch.is_empty() {
+            return IterationTime::default();
+        }
+        let m = &self.model;
+        let tp = self.parallel.tp as f64;
+        let flops = self.hw.sustained_flops();
+        let bw = self.hw.sustained_bw();
+
+        // --- attention phase (per layer): each item is its own kernel ---
+        let mut attn_flops = 0.0;
+        let mut attn_bytes = 0.0;
+        for p in &batch.prefills {
+            attn_flops += counts::attn_flops(m, p.chunk, p.kv_len);
+            attn_bytes += counts::attn_read_bytes(m, p.kv_len);
+        }
+        for d in &batch.decodes {
+            attn_flops += counts::attn_flops(m, 1, d.kv_len);
+            attn_bytes += counts::attn_read_bytes(m, d.kv_len);
+        }
+        // TP shards heads: flops and KV bytes split across the group.
+        // Each prefill chunk is its own kernel launch (tile/wave
+        // quantization makes tiny chunks pay a fixed cost — Fig. 7's ~11%);
+        // batched decodes share one launch.
+        let n_attn_kernels =
+            batch.prefills.len() as f64 + if batch.decodes.is_empty() { 0.0 } else { 1.0 };
+        let attn_s_layer = (attn_flops / tp / flops).max(attn_bytes / tp / bw)
+            + self.hw.attn_fixed_s * n_attn_kernels;
+
+        // --- linear phase (per layer): all tokens batched through GEMMs ---
+        let tokens = batch.tokens();
+        let lin_flops = counts::linear_flops(m, tokens);
+        // weights are read once per iteration regardless of batch size
+        let lin_bytes = counts::weight_bytes_per_layer(m)
+            + tokens as f64 * m.d_model as f64 * m.dtype_bytes as f64;
+        let linear_s_layer = (lin_flops / tp / flops).max(lin_bytes / tp / bw);
+
+        // --- TP collective (per layer): 2 all-reduces of activations ---
+        let tp_comm_s_layer = if self.parallel.tp > 1 {
+            let bytes = tokens as f64 * m.d_model as f64 * m.dtype_bytes as f64;
+            let link = &self.hw.intra_node;
+            2.0 * (2.0 * (tp - 1.0) / tp * bytes / link.bandwidth + link.latency_s)
+        } else {
+            0.0
+        };
+
+        let l = layers as f64;
+        IterationTime {
+            attn_s: attn_s_layer * l,
+            linear_s: linear_s_layer * l,
+            tp_comm_s: tp_comm_s_layer * l,
+            overhead_s: self.hw.cpu_overhead_s,
+        }
+    }
+
+    /// Full-model iteration time (all layers on one group; spp == 1 view).
+    pub fn iteration_time(&self, batch: &BatchShape) -> IterationTime {
+        self.stage_time(batch, self.model.n_layers)
+    }
+
+    /// Pipeline-stage hop: ship activations of `tokens` tokens to the next
+    /// stage (section 4.3's T_comm^pp(c)).
+    pub fn stage_hop_s(&self, tokens: u64) -> f64 {
+        if self.parallel.spp <= 1 {
+            return 0.0;
+        }
+        let link = self.hw.link(self.parallel.stage_hop_same_node(&self.hw));
+        let bytes = tokens as f64 * self.model.d_model as f64 * self.model.dtype_bytes as f64;
+        bytes / link.bandwidth + link.latency_s
+    }
+
+    /// KVP merge cost for `n_queries` query tokens (section 4.4's
+    /// T_comm^kvp): replicate queries + gather (o, m, l) partials. The
+    /// volume is independent of context length.
+    pub fn kvp_merge_s(&self, n_queries: u64) -> f64 {
+        if self.parallel.kvp <= 1 {
+            return 0.0;
+        }
+        let m = &self.model;
+        let link = &self.hw.inter_node;
+        let q_bytes = n_queries as f64
+            * m.hq as f64
+            * m.d_head as f64
+            * m.dtype_bytes as f64;
+        // o (+ m and l stats, f32 each) per shard, per layer merged by the
+        // owner; volume modeled as one round of gather + one broadcast.
+        let partial_bytes =
+            n_queries as f64 * m.hq as f64 * (m.d_head as f64 + 2.0) * 4.0;
+        let per_layer = (q_bytes + partial_bytes * (self.parallel.kvp as f64 - 1.0))
+            / link.bandwidth
+            + 2.0 * link.latency_s;
+        per_layer * m.n_layers as f64
+    }
+
+    // --- memory feasibility (Fig. 15 red crosses) -------------------------
+
+    /// Bytes resident per worker for a single request of `ctx` tokens, given
+    /// the layout: weights split over tp*spp, KV split over tp*spp*kvp.
+    pub fn per_worker_bytes(&self, ctx: u64) -> f64 {
+        let p = &self.parallel;
+        let weights = self.model.param_bytes() as f64 / (p.tp as f64 * p.spp as f64);
+        let kv = self.model.kv_bytes(ctx) as f64
+            / (p.tp as f64 * p.spp as f64 * p.kvp as f64);
+        // activation workspace ~ 2% of capacity; rounding slack included
+        let act = 0.02 * self.hw.hbm_capacity as f64;
+        weights + kv + act
+    }
+
+    pub fn fits_memory(&self, ctx: u64) -> bool {
+        self.per_worker_bytes(ctx) <= self.hw.hbm_capacity as f64
+    }
+
+    /// Max context length that fits (binary search over per_worker_bytes).
+    pub fn max_context(&self) -> u64 {
+        if !self.fits_memory(0) {
+            return 0;
+        }
+        let (mut lo, mut hi) = (0u64, 1u64 << 36);
+        while lo + 1 < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.fits_memory(mid) {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        lo
+    }
+
+    // --- utilization (Figs. 20, 21) ---------------------------------------
+
+    /// Model FLOPs Utilization: useful model FLOPs / (elapsed * total peak).
+    pub fn mfu(&self, batch: &BatchShape, elapsed_s: f64, gpus: u32) -> f64 {
+        let m = &self.model;
+        let mut f = 0.0;
+        for p in &batch.prefills {
+            f += counts::attn_flops(m, p.chunk, p.kv_len);
+        }
+        for d in &batch.decodes {
+            f += counts::attn_flops(m, 1, d.kv_len);
+        }
+        f += counts::linear_flops(m, batch.tokens());
+        f *= m.n_layers as f64;
+        f / (elapsed_s * self.hw.peak_flops * gpus as f64)
+    }
+
+    /// Model Bandwidth Utilization: bytes that must move / (elapsed * peak BW).
+    pub fn mbu(&self, batch: &BatchShape, elapsed_s: f64, gpus: u32) -> f64 {
+        let m = &self.model;
+        let mut b = 0.0;
+        for p in &batch.prefills {
+            b += counts::attn_read_bytes(m, p.kv_len);
+        }
+        for d in &batch.decodes {
+            b += counts::attn_read_bytes(m, d.kv_len);
+        }
+        b += counts::weight_bytes_per_layer(m);
+        b *= m.n_layers as f64;
+        b / (elapsed_s * self.hw.hbm_bw * gpus as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentConfig;
+
+    fn pm(tp: u32, spp: u32, kvp: u32) -> PerfModel {
+        let d = DeploymentConfig::llama3_8b_tp8().with_parallel(tp, spp, kvp);
+        PerfModel::new(d.model, d.hardware, d.parallel)
+    }
+
+    #[test]
+    fn decode_time_scales_with_context() {
+        let m = pm(8, 1, 1);
+        let t1 = m.iteration_time(&BatchShape::decode_only(&[100_000])).total();
+        let t2 = m.iteration_time(&BatchShape::decode_only(&[1_000_000])).total();
+        // At small ctx, weight reads + fixed overhead dominate, so scaling
+        // is sublinear — but 10x the context must still cost >3x.
+        assert!(t2 > t1 * 3.0, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn decode_is_memory_bound() {
+        let m = pm(8, 1, 1);
+        let b = BatchShape::decode_only(&[1_000_000]);
+        let it = m.stage_time(&b, m.model.n_layers);
+        // attention dominated by KV reads, and reads/bw >> flops/peak
+        let attn_flop_time = super::counts::attn_flops(&m.model, 1, 1_000_000)
+            / m.parallel.tp as f64
+            / m.hw.sustained_flops()
+            * m.model.n_layers as f64;
+        assert!(it.attn_s > attn_flop_time * 10.0);
+    }
+
+    #[test]
+    fn big_prefill_chunk_is_compute_bound() {
+        let m = pm(8, 1, 1);
+        let b = BatchShape::prefill_only(4096, 1_000_000);
+        let it = m.stage_time(&b, m.model.n_layers);
+        let attn_mem_time = super::counts::attn_read_bytes(&m.model, 1_000_000)
+            / m.parallel.tp as f64
+            / m.hw.sustained_bw()
+            * m.model.n_layers as f64;
+        assert!(it.attn_s > attn_mem_time * 0.99);
+        // compute term should dominate at c=4096 (intensity >> ridge)
+        assert!(
+            super::counts::attn_intensity(&m.model, 4096, 1_000_000)
+                > m.hw.sustained_flops() / m.hw.sustained_bw()
+        );
+    }
+
+    #[test]
+    fn mixed_batch_costs_more_than_parts_would_separately_save() {
+        let m = pm(8, 1, 1);
+        let mixed = BatchShape {
+            prefills: vec![PrefillWork {
+                chunk: 512,
+                kv_len: 500_000,
+            }],
+            decodes: (0..32).map(|_| DecodeWork { kv_len: 1_000 }).collect(),
+        };
+        let t_mixed = m.iteration_time(&mixed).total();
+        let t_prefill = m
+            .iteration_time(&BatchShape::prefill_only(512, 500_000))
+            .total();
+        // Piggybacking 32 small decodes should cost only a small delta
+        // (section 2.4 / Fig. 22).
+        assert!(t_mixed < t_prefill * 1.10, "{t_mixed} vs {t_prefill}");
+    }
+
+    #[test]
+    fn kvp_merge_independent_of_context() {
+        let m = pm(8, 1, 4);
+        // merge cost has no context parameter by construction; assert it is
+        // small vs a 1M-token decode's attention time
+        let merge = m.kvp_merge_s(1);
+        let dec = m.iteration_time(&BatchShape::decode_only(&[1_000_000]));
+        assert!(merge < dec.attn_s, "merge={merge} attn={}", dec.attn_s);
+    }
+
+    #[test]
+    fn memory_feasibility_ordering() {
+        // more spp => more capacity => larger max context
+        let small = pm(8, 1, 1).max_context();
+        let big = pm(8, 4, 1).max_context();
+        assert!(big > small * 3, "small={small} big={big}");
+    }
+
+    #[test]
+    fn llama70b_memory_feasibility_matches_fig15() {
+        // Fig. 15b red crosses: 70B fits 1M on one DGX (tp=8), but 10M
+        // does not fit even at spp=4; spp=8 is required (section 6.3).
+        let d = DeploymentConfig::llama3_70b_tp8();
+        let m1 = PerfModel::new(d.model.clone(), d.hardware.clone(), d.parallel);
+        assert!(m1.fits_memory(1_000_000));
+        assert!(!m1.fits_memory(10_000_000));
+        let d4 = DeploymentConfig::llama3_70b_tp8().with_parallel(8, 4, 1);
+        let m4 = PerfModel::new(d4.model, d4.hardware, d4.parallel);
+        assert!(!m4.fits_memory(10_000_000));
+        let d8 = DeploymentConfig::llama3_70b_tp8().with_parallel(8, 8, 1);
+        let m8 = PerfModel::new(d8.model, d8.hardware, d8.parallel);
+        assert!(m8.fits_memory(10_000_000));
+    }
+
+    #[test]
+    fn mfu_mbu_bounded() {
+        let m = pm(8, 1, 1);
+        let b = BatchShape::prefill_only(4096, 100_000);
+        let t = m.iteration_time(&b).total();
+        let mfu = m.mfu(&b, t, 8);
+        let mbu = m.mbu(&b, t, 8);
+        assert!(mfu > 0.05 && mfu <= 1.0, "mfu={mfu}");
+        assert!(mbu > 0.0 && mbu <= 1.0, "mbu={mbu}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Analytical performance model (the paper's Eq. 1–10) — roofline execution
+//! times for mixed batches on an H100/DGX substrate, plus SPP/KVP scaling
+//! laws, memory feasibility, and MFU/MBU accounting.
+//!
+//! This model plays two roles:
+//!  1. it is the *runtime predictor* the adaptive chunking policy queries
+//!     (the paper uses Vidur's predictor for the same purpose), and
+//!  2. it is the time source for the cluster simulator that regenerates the
+//!     paper's figures at 128-GPU scale (DESIGN.md §3 substitution table).
+
+pub mod analysis;
+pub mod counts;
+pub mod iteration;
+
+pub use analysis::{gpus_required, resource_limits, GpuRequirement, ResourceLimits};
+pub use iteration::{BatchShape, DecodeWork, IterationTime, PerfModel, PrefillWork};

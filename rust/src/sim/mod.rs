@@ -1,0 +1,501 @@
+//! Cluster simulator: executes the coordinator's scheduling decisions
+//! against the perf model's time charges, at the paper's 128-GPU scale.
+//!
+//! The simulated unit is one **cooperating KVP set** (Fig. 12): `kvp`
+//! worker groups, each a pipeline of `spp` stages of `tp` GPUs. Short
+//! requests are routed to individual groups and batched independently; a
+//! long request is chunk-prefilled (adaptive sizing), its KV sharded across
+//! groups with dynamic onboarding (Fig. 10), and its chunk/decode queries
+//! are broadcast to all participating groups with online-softmax merge —
+//! exactly the execution model of section 4.
+//!
+//! Timing model:
+//! * every group's mixed batch flows through its stage pipeline
+//!   (`PipelineTimeline`);
+//! * prefill-only batches are admitted **densely** (SPP, Fig. 9b);
+//! * batches containing decode tokens serialize on pipeline exit
+//!   (autoregressive dependency);
+//! * cooperative iterations (sharded long request) complete at the max of
+//!   the participating groups' exits, plus the KVP merge charge.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::DeploymentConfig;
+use crate::coordinator::chunking::ChunkPolicy;
+use crate::coordinator::request::{Phase, Request};
+use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::spp::PipelineTimeline;
+use crate::coordinator::{AdaptiveChunk, KvpManager, Router, StaticChunk, Topology};
+use crate::kvcache::RequestId;
+use crate::metrics::{IterRecord, Metrics};
+use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
+use crate::workload::RequestSpec;
+
+/// Simulation options beyond the deployment config.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Requests with prompts longer than this are treated as "long":
+    /// chunked, KVP-sharded, driven cooperatively.
+    pub long_threshold: u64,
+    /// Stop after this much simulated time (safety valve).
+    pub horizon_s: f64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            long_threshold: 16_384,
+            horizon_s: 86_400.0,
+        }
+    }
+}
+
+pub struct Simulation {
+    pub dep: DeploymentConfig,
+    pub opts: SimOptions,
+    pm: PerfModel,
+    layers_per_stage: u32,
+    policy: Box<dyn ChunkPolicy>,
+    topo: Topology,
+
+    requests: BTreeMap<RequestId, Request>,
+    pending: VecDeque<RequestSpec>,
+    /// Per-group short-request schedulers.
+    scheds: Vec<Scheduler>,
+    timelines: Vec<PipelineTimeline>,
+    long_queue: VecDeque<RequestId>,
+    active_long: Option<RequestId>,
+    kvp_mgr: KvpManager,
+    router: Router,
+    pub metrics: Metrics,
+    now: f64,
+}
+
+impl Simulation {
+    pub fn new(dep: DeploymentConfig, workload: Vec<RequestSpec>, opts: SimOptions) -> Simulation {
+        dep.validate().expect("invalid deployment");
+        let pm = PerfModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
+        let kvp_groups = dep.parallel.kvp.max(1);
+        let policy: Box<dyn ChunkPolicy> = if dep.scheduler.adaptive_chunking {
+            Box::new(AdaptiveChunk::new(dep.scheduler.chunk_sizes.clone()))
+        } else {
+            Box::new(StaticChunk(dep.scheduler.static_chunk))
+        };
+        let mut pending: Vec<RequestSpec> = workload;
+        pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        let layers_per_stage = dep.model.n_layers / dep.parallel.spp.max(1);
+        let topo = Topology::new(dep.parallel, &dep.hardware);
+        Simulation {
+            pm,
+            layers_per_stage,
+            policy,
+            topo,
+            requests: BTreeMap::new(),
+            pending: pending.into(),
+            scheds: (0..kvp_groups)
+                .map(|_| {
+                    Scheduler::new(
+                        Box::new(StaticChunk(dep.scheduler.static_chunk)),
+                        dep.scheduler.max_batch_size,
+                    )
+                })
+                .collect(),
+            timelines: (0..kvp_groups)
+                .map(|_| PipelineTimeline::new(dep.parallel.spp.max(1) as usize, 0.0))
+                .collect(),
+            long_queue: VecDeque::new(),
+            active_long: None,
+            kvp_mgr: KvpManager::new(dep.scheduler.kvp_onboard_threshold, kvp_groups),
+            router: Router::new(kvp_groups),
+            metrics: Metrics::new(),
+            now: 0.0,
+            dep,
+            opts,
+        }
+    }
+
+    fn admit_arrivals(&mut self) {
+        while let Some(spec) = self.pending.front() {
+            if spec.arrival_s > self.now {
+                break;
+            }
+            let spec = self.pending.pop_front().unwrap();
+            let r = Request::new(spec.id, spec.prompt_len, spec.max_new_tokens, spec.arrival_s);
+            if spec.prompt_len > self.opts.long_threshold {
+                let g = self.router.route(spec.id, spec.prompt_len);
+                self.kvp_mgr.onboard_request(spec.id, g, self.now);
+                self.long_queue.push_back(spec.id);
+            } else {
+                let g = self.router.route(spec.id, spec.prompt_len);
+                self.scheds[g as usize].enqueue(spec.id);
+            }
+            self.requests.insert(spec.id, r);
+        }
+        if self.active_long.is_none() {
+            self.active_long = self.long_queue.pop_front();
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        self.active_long.is_some()
+            || !self.long_queue.is_empty()
+            || self.scheds.iter().any(|s| s.has_work())
+    }
+
+    /// Local KV length the group's kernels scan for a short request.
+    fn short_local_kv(r: &Request) -> u64 {
+        r.kv_len().max(1)
+    }
+
+    /// Run the simulation to completion (or horizon). Returns total time.
+    pub fn run(&mut self) -> f64 {
+        loop {
+            self.admit_arrivals();
+            if !self.has_work() {
+                match self.pending.front() {
+                    Some(spec) => {
+                        self.now = spec.arrival_s;
+                        for tl in &mut self.timelines {
+                            tl.advance_to(self.now);
+                        }
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            if self.now > self.opts.horizon_s {
+                break;
+            }
+            self.step();
+        }
+        self.now
+    }
+
+    /// One lockstep iteration across the cooperating set.
+    fn step(&mut self) {
+        let n_groups = self.scheds.len();
+        let slo = self.dep.slo;
+
+        // ---- long-request work selection -------------------------------
+        let long_id = self.active_long;
+        let mut long_chunk: Option<u64> = None;
+        let mut long_decode = false;
+        if let Some(id) = long_id {
+            let r = &self.requests[&id];
+            match r.phase {
+                Phase::Queued | Phase::Prefilling => {
+                    // decode contexts seen by the chunk policy: the busiest
+                    // group's decode load (binding constraint).
+                    let decode_ctxs: Vec<u64> = (0..n_groups)
+                        .map(|_| 0u64)
+                        .collect::<Vec<_>>()
+                        .iter()
+                        .enumerate()
+                        .flat_map(|(g, _)| self.group_decode_ctxs(g))
+                        .collect();
+                    let c = self.policy.next_chunk(
+                        r.kv_len(),
+                        r.remaining_prefill(),
+                        &decode_ctxs,
+                        &self.pm,
+                        &slo,
+                    );
+                    long_chunk = Some(c.max(1).min(r.remaining_prefill()));
+                }
+                Phase::Decoding => long_decode = true,
+                Phase::Finished => {}
+            }
+        }
+        let long_nq = long_chunk.unwrap_or(if long_decode { 1 } else { 0 });
+        let participating: Vec<(u32, u64)> = match long_id {
+            Some(id) if long_nq > 0 => self.kvp_mgr.local_lengths(id),
+            _ => Vec::new(),
+        };
+
+        // ---- per-group batch formation ----------------------------------
+        let mut group_plans = Vec::with_capacity(n_groups);
+        for g in 0..n_groups {
+            let plan = self.scheds[g].next_batch(&self.requests, &self.pm, &slo, Self::short_local_kv);
+            group_plans.push(plan);
+        }
+
+        // ---- build shapes and flow through pipelines ---------------------
+        let mut any_decode = long_decode;
+        let mut exits = vec![self.now; n_groups];
+        let mut max_stage0_exit = self.now;
+        let mut worked = false;
+        let mut combined = BatchShape::default();
+        for g in 0..n_groups {
+            let mut shape = self.scheds[g].batch_shape(&group_plans[g], &self.requests, Self::short_local_kv);
+            // Long-request share on this group: partial attention over the
+            // local shard (queries broadcast to every participating group).
+            if let Some(&(_, local)) = participating.iter().find(|&&(gg, _)| gg as usize == g) {
+                if let Some(c) = long_chunk {
+                    shape.prefills.push(PrefillWork {
+                        chunk: c,
+                        kv_len: local + c,
+                    });
+                } else if long_decode {
+                    shape.decodes.push(DecodeWork {
+                        kv_len: local.max(1),
+                    });
+                }
+            }
+            if shape.is_empty() {
+                continue;
+            }
+            worked = true;
+            any_decode |= !shape.decodes.is_empty();
+            combined.prefills.extend(shape.prefills.iter().copied());
+            combined.decodes.extend(shape.decodes.iter().copied());
+            let st = self.pm.stage_time(&shape, self.layers_per_stage).total();
+            let hop = self.pm.stage_hop_s(shape.tokens());
+            let dense_ok = shape.decodes.is_empty();
+            let ready = if dense_ok {
+                self.timelines[g].stage0_free().max(self.now)
+            } else {
+                self.now
+            };
+            let res = self.timelines[g].flow(ready, |_| st, hop);
+            max_stage0_exit = max_stage0_exit.max(res.first_stage_exit());
+            exits[g] = res.exit();
+        }
+
+        if !worked {
+            // nothing runnable this instant (e.g. long queue only, already
+            // finished): bump time slightly to make progress.
+            self.now += 1e-6;
+            return;
+        }
+
+        let mut iter_end = exits.iter().cloned().fold(self.now, f64::max);
+        // KVP merge charge for cooperative work.
+        if participating.len() > 1 && long_nq > 0 {
+            iter_end += self.pm.kvp_merge_s(long_nq);
+        }
+
+        // Next admission point: dense for pure-prefill, serialized otherwise.
+        let t_next = if any_decode { iter_end } else { max_stage0_exit };
+        let dur = iter_end - self.now;
+
+        // ---- bookkeeping --------------------------------------------------
+        // Short requests finish per their group plans.
+        for g in 0..n_groups {
+            let plan = group_plans[g].clone();
+            if plan.is_empty() {
+                continue;
+            }
+            let finished = self.scheds[g].complete_iteration(&plan, &mut self.requests, iter_end);
+            for id in finished {
+                let r = &self.requests[&id];
+                if let Some(t) = r.ttft() {
+                    self.metrics.record_ttft(t);
+                }
+                for &s in &r.tbt_samples {
+                    self.metrics.record_tbt(s);
+                }
+                self.metrics.finished_requests += 1;
+                self.router.release(id, r.prompt_len);
+            }
+        }
+        // Long request progress.
+        if let Some(id) = long_id {
+            if let Some(c) = long_chunk {
+                let r = self.requests.get_mut(&id).unwrap();
+                r.complete_chunk(c, iter_end);
+                self.kvp_mgr.append_tokens(id, c, iter_end);
+                if r.phase == Phase::Decoding || r.phase == Phase::Finished {
+                    if let Some(t) = r.ttft() {
+                        self.metrics.record_ttft(t);
+                    }
+                }
+            } else if long_decode {
+                let r = self.requests.get_mut(&id).unwrap();
+                r.complete_decode(iter_end);
+                self.kvp_mgr.append_tokens(id, 1, iter_end);
+            }
+            let r = &self.requests[&id];
+            if r.is_finished() {
+                for &s in &r.tbt_samples {
+                    self.metrics.record_tbt(s);
+                }
+                self.metrics.finished_requests += 1;
+                self.kvp_mgr.release(id);
+                self.router.release(id, r.prompt_len);
+                self.active_long = None;
+            }
+        }
+
+        let active_gpus = match long_id {
+            Some(id) => self
+                .topo
+                .gpus_active(self.kvp_mgr.active_groups(id).max(1)),
+            None => self.topo.parallel.workers_per_replica(),
+        };
+        if dur > 0.0 {
+            self.metrics
+                .mfu
+                .add(self.pm.mfu(&combined, dur, active_gpus.max(1)));
+            self.metrics
+                .mbu
+                .add(self.pm.mbu(&combined, dur, active_gpus.max(1)));
+        }
+        self.metrics.record_iter(IterRecord {
+            t: iter_end,
+            dur_s: dur,
+            chunk: long_chunk.or_else(|| {
+                group_plans
+                    .iter()
+                    .find_map(|p| p.prefill.map(|(_, c)| c))
+            }),
+            n_decodes: combined.decodes.len(),
+            active_gpus,
+        });
+        self.now = t_next;
+    }
+
+    fn group_decode_ctxs(&self, g: usize) -> Vec<u64> {
+        let slo = self.dep.slo;
+        // peek: decoding requests on this group's scheduler
+        let mut v = Vec::new();
+        let _ = (&slo, &mut v);
+        for (id, r) in &self.requests {
+            if r.phase == Phase::Decoding && self.router.group_of(*id) == Some(g as u32) {
+                v.push(r.kv_len().max(1));
+            }
+        }
+        v
+    }
+
+    pub fn request(&self, id: RequestId) -> Option<&Request> {
+        self.requests.get(&id)
+    }
+
+    pub fn kvp_onboard_log(&self) -> &[(f64, RequestId, u32)] {
+        &self.kvp_mgr.onboard_log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeploymentConfig;
+    use crate::workload;
+
+    fn dep(tp: u32, spp: u32, kvp: u32) -> DeploymentConfig {
+        DeploymentConfig::llama3_8b_tp8().with_parallel(tp, spp, kvp)
+    }
+
+    #[test]
+    fn single_short_request_completes() {
+        let w = workload::single_long(1_000, 8); // below long threshold
+        let mut sim = Simulation::new(dep(8, 1, 1), w, SimOptions::default());
+        sim.run();
+        let r = sim.request(0).unwrap();
+        assert!(r.is_finished());
+        assert!(r.ttft().unwrap() > 0.0);
+        assert_eq!(sim.metrics.finished_requests, 1);
+    }
+
+    #[test]
+    fn long_request_prefill_records_ttft() {
+        let w = workload::single_long(1_000_000, 4);
+        let mut sim = Simulation::new(dep(8, 4, 1), w, SimOptions::default());
+        sim.run();
+        let r = sim.request(0).unwrap();
+        assert!(r.is_finished());
+        let ttft = r.ttft().unwrap();
+        // 1M tokens on 32 H100-class GPUs: tens of seconds
+        assert!((1.0..200.0).contains(&ttft), "ttft={ttft}");
+    }
+
+    #[test]
+    fn spp_reduces_ttft_vs_single_stage() {
+        let run = |spp: u32| {
+            let w = workload::single_long(1_000_000, 4);
+            let mut sim = Simulation::new(dep(8, spp, 1), w, SimOptions::default());
+            sim.run();
+            sim.request(0).unwrap().ttft().unwrap()
+        };
+        let t1 = run(1);
+        let t4 = run(4);
+        let speedup = t1 / t4;
+        assert!(speedup > 3.0, "speedup={speedup} (t1={t1}, t4={t4})");
+    }
+
+    #[test]
+    fn kvp_onboards_groups_as_context_grows() {
+        let mut d = dep(8, 1, 4);
+        d.scheduler.kvp_onboard_threshold = 256_000;
+        let w = workload::single_long(1_000_000, 4);
+        let mut sim = Simulation::new(d, w, SimOptions::default());
+        sim.run();
+        // 1M / 256K -> 4 groups onboarded
+        assert_eq!(sim.kvp_onboard_log().len(), 4);
+        let gpus: Vec<u32> = sim.metrics.iters.iter().map(|i| i.active_gpus).collect();
+        assert!(gpus.iter().any(|&g| g == 8));
+        assert!(gpus.iter().any(|&g| g == 32));
+        // staircase: non-decreasing while the long request runs
+        let peak = gpus.iter().copied().max().unwrap();
+        assert_eq!(peak, 32);
+    }
+
+    #[test]
+    fn mixed_batching_keeps_decodes_flowing() {
+        // Decodes batched alongside a 1M prefill must see bounded TBT —
+        // the anti-HOL-blocking claim (Fig. 14b).
+        let mut d = dep(8, 1, 1);
+        d.scheduler.max_batch_size = 64;
+        let w = workload::long_plus_decodes(500_000, 8, 1_000, 64);
+        let mut sim = Simulation::new(d, w, SimOptions::default());
+        sim.run();
+        let mut m = sim.metrics;
+        let s = m.summary();
+        assert!(s.n_tbt > 0);
+        // every decode token arrived within a bounded iteration (<300ms),
+        // not after the full multi-second prefill
+        assert!(s.tbt_max < 0.3, "tbt_max={}", s.tbt_max);
+        assert_eq!(s.finished, 9);
+    }
+
+    #[test]
+    fn adaptive_chunks_shrink_over_long_prefill() {
+        let mut d = dep(8, 1, 1);
+        d.scheduler.adaptive_chunking = true;
+        let w = workload::long_plus_decodes(2_000_000, 16, 1_000, 400);
+        let mut sim = Simulation::new(d, w, SimOptions::default());
+        sim.run();
+        let chunks: Vec<u64> = sim.metrics.iters.iter().filter_map(|i| i.chunk).collect();
+        assert!(chunks.len() > 10);
+        let first = chunks[0];
+        let last_quartile: Vec<u64> = chunks[chunks.len() * 3 / 4..].to_vec();
+        let late_max = last_quartile.iter().copied().max().unwrap();
+        assert!(
+            late_max <= first,
+            "late chunks ({late_max}) should not exceed early ({first})"
+        );
+    }
+
+    #[test]
+    fn arrivals_respected() {
+        let w = vec![
+            RequestSpec {
+                id: 0,
+                prompt_len: 100,
+                max_new_tokens: 4,
+                arrival_s: 0.0,
+            },
+            RequestSpec {
+                id: 1,
+                prompt_len: 100,
+                max_new_tokens: 4,
+                arrival_s: 1_000.0,
+            },
+        ];
+        let mut sim = Simulation::new(dep(8, 1, 1), w, SimOptions::default());
+        let end = sim.run();
+        assert!(end >= 1_000.0);
+        let r1 = sim.request(1).unwrap();
+        assert!(r1.first_token_s.unwrap() >= 1_000.0);
+    }
+}

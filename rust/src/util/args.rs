@@ -1,0 +1,150 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports: subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, typed accessors with defaults, and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `flag_names` lists boolean options (no value).
+    pub fn parse(argv: &[String], flag_names: &[&str], with_subcommand: bool) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        if with_subcommand && i < argv.len() && !argv[i].starts_with('-') {
+            out.subcommand = Some(argv[i].clone());
+            i += 1;
+        }
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some(eq) = stripped.find('=') {
+                    out.options
+                        .insert(stripped[..eq].to_string(), stripped[eq + 1..].to_string());
+                } else if flag_names.contains(&stripped) {
+                    out.flags.push(stripped.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    // trailing valueless option: treat as a flag
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str], with_subcommand: bool) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, flag_names, with_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|s| parse_tokens(s).unwrap_or_else(|| panic!("--{name}: bad integer '{s}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.u64_or(name, default as u64) as usize
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{name}: bad float '{s}'")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated u64 list, with K/M suffix support ("32,1K,2M").
+    pub fn u64_list(&self, name: &str, default: &[u64]) -> Vec<u64> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .map(|t| parse_tokens(t.trim()).unwrap_or_else(|| panic!("--{name}: bad entry '{t}'")))
+                .collect(),
+        }
+    }
+}
+
+/// Parse "128", "4K", "2M" and "1.5M" style token counts.
+pub fn parse_tokens(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(num) = s.strip_suffix(['M', 'm']) {
+        return Some((num.parse::<f64>().ok()? * 1e6) as u64);
+    }
+    if let Some(num) = s.strip_suffix(['K', 'k']) {
+        return Some((num.parse::<f64>().ok()? * 1e3) as u64);
+    }
+    s.parse::<u64>().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &sv(&["simulate", "--ctx", "1M", "--verbose", "--out=results", "trace.json"]),
+            &["verbose"],
+            true,
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("simulate"));
+        assert_eq!(a.u64_or("ctx", 0), 1_000_000);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.str_or("out", ""), "results");
+        assert_eq!(a.positional, vec!["trace.json"]);
+    }
+
+    #[test]
+    fn token_suffixes() {
+        assert_eq!(parse_tokens("128"), Some(128));
+        assert_eq!(parse_tokens("4K"), Some(4_000));
+        assert_eq!(parse_tokens("2M"), Some(2_000_000));
+        assert_eq!(parse_tokens("1.5M"), Some(1_500_000));
+        assert_eq!(parse_tokens("x"), None);
+    }
+
+    #[test]
+    fn lists() {
+        let a = Args::parse(&sv(&["--chunks", "32,128,4K"]), &[], false);
+        assert_eq!(a.u64_list("chunks", &[]), vec![32, 128, 4000]);
+        assert_eq!(a.u64_list("absent", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]), &[], false);
+        assert_eq!(a.u64_or("n", 9), 9);
+        assert_eq!(a.f64_or("x", 1.5), 1.5);
+        assert!(!a.flag("v"));
+    }
+}

@@ -1,0 +1,156 @@
+//! Measurement harness for `cargo bench` (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean/p50/p95 reporting, and a
+//! registry so bench binaries can expose `--filter` selection like criterion.
+
+use std::time::Instant;
+
+use super::stats::{fmt_duration, Samples};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<52} {:>10} {:>10} {:>10} {:>8} iters",
+            self.name,
+            fmt_duration(self.mean_s),
+            fmt_duration(self.p50_s),
+            fmt_duration(self.p95_s),
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with warmup; each sample is one call. Target ~`budget_s` seconds.
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    // Warmup + calibration: run until 10% of budget or 3 iterations.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed().as_secs_f64() < budget_s * 0.1 || warm_iters < 3 {
+        f();
+        warm_iters += 1;
+        if warm_iters >= 1000 {
+            break;
+        }
+    }
+    let per_call = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+    let target_iters = ((budget_s * 0.9) / per_call.max(1e-9)).clamp(5.0, 100_000.0) as u64;
+
+    let mut samples = Samples::new();
+    for _ in 0..target_iters {
+        let t0 = Instant::now();
+        f();
+        samples.add(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: target_iters,
+        mean_s: samples.mean(),
+        p50_s: samples.median(),
+        p95_s: samples.p95(),
+        min_s: samples.min(),
+    }
+}
+
+/// A named group of benches, with criterion-style filtering.
+pub struct BenchSuite {
+    filter: Option<String>,
+    pub results: Vec<BenchResult>,
+    budget_s: f64,
+}
+
+impl BenchSuite {
+    /// Reads `--filter <substr>` / positional filter and `--budget <secs>`
+    /// from argv (cargo bench passes `--bench`; it is ignored).
+    pub fn from_env() -> BenchSuite {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut filter = None;
+        let mut budget_s = 1.0;
+        let mut i = 0;
+        while i < argv.len() {
+            match argv[i].as_str() {
+                "--filter" if i + 1 < argv.len() => {
+                    filter = Some(argv[i + 1].clone());
+                    i += 1;
+                }
+                "--budget" if i + 1 < argv.len() => {
+                    budget_s = argv[i + 1].parse().unwrap_or(1.0);
+                    i += 1;
+                }
+                "--bench" => {}
+                s if !s.starts_with('-') => filter = Some(s.to_string()),
+                _ => {}
+            }
+            i += 1;
+        }
+        BenchSuite {
+            filter,
+            results: Vec::new(),
+            budget_s,
+        }
+    }
+
+    pub fn enabled(&self, name: &str) -> bool {
+        match &self.filter {
+            None => true,
+            Some(f) => name.contains(f.as_str()),
+        }
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        let r = bench(name, self.budget_s, f);
+        println!("{}", r.report_line());
+        self.results.push(r);
+    }
+
+    /// Run a harness section that prints its own table (figure reproduction);
+    /// still honors the filter.
+    pub fn section<F: FnOnce()>(&mut self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        println!("\n=== {name} ===");
+        f();
+    }
+
+    pub fn header(&self) {
+        println!(
+            "{:<52} {:>10} {:>10} {:>10} {:>8}",
+            "benchmark", "mean", "p50", "p95", "samples"
+        );
+        println!("{}", "-".repeat(98));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 0.05, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_s >= 0.0 && r.mean_s < 0.05);
+        assert!(r.p95_s >= r.p50_s * 0.5);
+    }
+
+    #[test]
+    fn report_line_contains_name() {
+        let r = bench("xyz", 0.02, || {});
+        assert!(r.report_line().contains("xyz"));
+    }
+}

@@ -1,0 +1,12 @@
+//! From-scratch substrates: PRNG, statistics, JSON, CLI args, bench harness,
+//! thread pool, and a property-testing helper. The offline crate registry
+//! only carries the `xla` closure, so these replace rand / serde_json / clap
+//! / criterion / tokio / proptest respectively (see DESIGN.md §3).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

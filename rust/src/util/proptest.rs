@@ -1,0 +1,87 @@
+//! Seeded randomized property-testing harness (proptest is unavailable
+//! offline). Runs a property over many generated cases; on failure, reports
+//! the failing seed so the case can be replayed deterministically:
+//!
+//! ```ignore
+//! check("kv pages never leak", 500, |rng| {
+//!     let n = rng.range_u64(1, 100);
+//!     ...assertions...
+//! });
+//! ```
+//!
+//! Set `MEDHA_PROPTEST_SEED` to replay a single failing case, and
+//! `MEDHA_PROPTEST_CASES` to scale case counts up/down globally.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` generated cases. Panics (with the seed) on the
+/// first failing case.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    if let Ok(seed_s) = std::env::var("MEDHA_PROPTEST_SEED") {
+        let seed: u64 = seed_s.parse().expect("MEDHA_PROPTEST_SEED must be u64");
+        eprintln!("[proptest] replaying {name} with seed {seed}");
+        let mut rng = Rng::new(seed);
+        prop(&mut rng);
+        return;
+    }
+    let scale: f64 = std::env::var("MEDHA_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    let cases = ((cases as f64 * scale) as u64).max(1);
+    let base = fnv1a(name.as_bytes());
+    for i in 0..cases {
+        let seed = base ^ (i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(payload) = result {
+            eprintln!(
+                "[proptest] property '{name}' FAILED on case {i}/{cases}.\n\
+                 [proptest] replay with: MEDHA_PROPTEST_SEED={seed}"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always true", 50, |_| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_panics_with_seed() {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("fails eventually", 100, |rng| {
+                assert!(rng.f64() < 0.9, "drew a big number");
+            });
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        let mut a = Vec::new();
+        check("det", 5, |rng| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        check("det", 5, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+}

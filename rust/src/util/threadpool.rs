@@ -1,0 +1,190 @@
+//! Fixed-size worker thread pool over std channels (tokio is unavailable
+//! offline; the engine's stage workers and KVP shard workers run on this).
+//!
+//! Design: each worker owns a receiver on a shared injector queue
+//! (Mutex<VecDeque>) with a condvar; jobs are boxed `FnOnce`. `scope`-like
+//! joining is provided by `JobHandle` futures backed by channels.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<Queue>,
+    cv: Condvar,
+}
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// A handle resolving to the job's return value.
+pub struct JobHandle<T> {
+    rx: mpsc::Receiver<T>,
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job finishes. Panics if the job panicked.
+    pub fn join(self) -> T {
+        self.rx.recv().expect("worker job panicked")
+    }
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> ThreadPool {
+        assert!(n > 0);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue {
+                jobs: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("medha-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job; returns a handle to its result.
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel();
+        let job: Job = Box::new(move || {
+            let out = f();
+            let _ = tx.send(out); // receiver may have been dropped; fine
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            assert!(!q.shutdown, "submit after shutdown");
+            q.jobs.push_back(job);
+        }
+        self.shared.cv.notify_one();
+        JobHandle { rx }
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
+    where
+        T: Send + 'static,
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + Clone + 'static,
+    {
+        let handles: Vec<JobHandle<U>> = items
+            .into_iter()
+            .map(|it| {
+                let f = f.clone();
+                self.submit(move || f(it))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    break j;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_jobs_and_returns_values() {
+        let pool = ThreadPool::new(4);
+        let h = pool.submit(|| 2 + 2);
+        assert_eq!(h.join(), 4);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..64).collect::<Vec<u64>>(), |x| x * x);
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn all_jobs_complete_on_drop() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            let handles: Vec<_> = (0..100)
+                .map(|_| {
+                    let c = Arc::clone(&counter);
+                    pool.submit(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join();
+            }
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallelism_actually_happens() {
+        use std::time::{Duration, Instant};
+        let pool = ThreadPool::new(4);
+        let t0 = Instant::now();
+        let hs: Vec<_> = (0..4)
+            .map(|_| pool.submit(|| thread::sleep(Duration::from_millis(50))))
+            .collect();
+        for h in hs {
+            h.join();
+        }
+        // 4 sleeps of 50ms on 4 threads should take ~50ms, not 200ms.
+        assert!(t0.elapsed() < Duration::from_millis(150));
+    }
+}

@@ -1,0 +1,167 @@
+//! Workload generators: the request populations behind each figure, plus
+//! production-like mixed traffic (Poisson arrivals, skewed context lengths —
+//! section 3's C3: inputs "ranging from 10s to 1000s, and now millions of
+//! tokens").
+
+use crate::util::rng::Rng;
+
+/// A request as submitted by a client.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestSpec {
+    pub id: u64,
+    pub prompt_len: u64,
+    pub max_new_tokens: u64,
+    pub arrival_s: f64,
+}
+
+/// One long request arriving at t=0 (Figs. 14a, 15: pure prefill scaling).
+pub fn single_long(ctx: u64, new_tokens: u64) -> Vec<RequestSpec> {
+    vec![RequestSpec {
+        id: 0,
+        prompt_len: ctx,
+        max_new_tokens: new_tokens,
+        arrival_s: 0.0,
+    }]
+}
+
+/// One long prefill plus `n_decodes` short requests already decoding —
+/// the mixed-batching scenario of Figs. 8, 18, 22. Short requests arrive
+/// first (tiny prompts, long outputs) so they are mid-decode when the long
+/// request lands.
+pub fn long_plus_decodes(
+    ctx: u64,
+    n_decodes: usize,
+    decode_ctx: u64,
+    new_tokens: u64,
+) -> Vec<RequestSpec> {
+    let mut v = Vec::with_capacity(n_decodes + 1);
+    for i in 0..n_decodes {
+        v.push(RequestSpec {
+            id: i as u64 + 1,
+            prompt_len: decode_ctx.max(1),
+            max_new_tokens: new_tokens,
+            arrival_s: 0.0,
+        });
+    }
+    v.push(RequestSpec {
+        id: 0,
+        prompt_len: ctx,
+        max_new_tokens: 32,
+        arrival_s: 0.0,
+    });
+    v
+}
+
+/// Decode-only population: requests with `ctx` tokens already prefilled
+/// conceptually; modeled as prompt_len=ctx with long outputs (Figs. 16, 17).
+pub fn decode_population(n: usize, ctx: u64, new_tokens: u64) -> Vec<RequestSpec> {
+    (0..n)
+        .map(|i| RequestSpec {
+            id: i as u64,
+            prompt_len: ctx,
+            max_new_tokens: new_tokens,
+            arrival_s: 0.0,
+        })
+        .collect()
+}
+
+/// Distribution over context lengths for mixed traffic.
+#[derive(Debug, Clone)]
+pub enum LengthDist {
+    Fixed(u64),
+    /// Log-uniform between lo and hi (orders-of-magnitude spread).
+    LogUniform { lo: u64, hi: u64 },
+    /// Zipf over explicit buckets (few huge, many small).
+    ZipfBuckets { buckets: Vec<u64>, s: f64 },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match self {
+            LengthDist::Fixed(n) => *n,
+            LengthDist::LogUniform { lo, hi } => rng.log_uniform(*lo, *hi),
+            LengthDist::ZipfBuckets { buckets, s } => {
+                // rank 0 = most common = the *smallest* context
+                let mut sorted = buckets.clone();
+                sorted.sort_unstable();
+                sorted[rng.zipf(sorted.len() as u64, *s) as usize]
+            }
+        }
+    }
+}
+
+/// Poisson arrivals with a context-length distribution — the production
+/// mix of section 3 C3.
+pub fn poisson_mixed(
+    rate_per_s: f64,
+    horizon_s: f64,
+    lengths: LengthDist,
+    new_tokens: u64,
+    seed: u64,
+) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    let mut id = 0;
+    loop {
+        t += rng.exponential(rate_per_s);
+        if t >= horizon_s {
+            break;
+        }
+        out.push(RequestSpec {
+            id,
+            prompt_len: lengths.sample(&mut rng).max(1),
+            max_new_tokens: new_tokens,
+            arrival_s: t,
+        });
+        id += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximates() {
+        let w = poisson_mixed(10.0, 100.0, LengthDist::Fixed(128), 16, 7);
+        assert!((800..1200).contains(&w.len()), "{}", w.len());
+        assert!(w.windows(2).all(|p| p[1].arrival_s >= p[0].arrival_s));
+    }
+
+    #[test]
+    fn zipf_buckets_prefer_small() {
+        let mut rng = Rng::new(3);
+        let d = LengthDist::ZipfBuckets {
+            buckets: vec![1_000_000, 1_000, 128, 16_000],
+            s: 1.2,
+        };
+        let mut small = 0;
+        let mut huge = 0;
+        for _ in 0..2_000 {
+            match d.sample(&mut rng) {
+                128 => small += 1,
+                1_000_000 => huge += 1,
+                _ => {}
+            }
+        }
+        assert!(small > huge * 3, "small={small} huge={huge}");
+    }
+
+    #[test]
+    fn mixed_scenario_shapes() {
+        let w = long_plus_decodes(1_000_000, 16, 1_000, 100);
+        assert_eq!(w.len(), 17);
+        assert_eq!(w.iter().filter(|r| r.prompt_len == 1_000_000).count(), 1);
+    }
+
+    #[test]
+    fn log_uniform_spans_decades() {
+        let mut rng = Rng::new(11);
+        let d = LengthDist::LogUniform { lo: 10, hi: 10_000_000 };
+        let xs: Vec<u64> = (0..4_000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().any(|&x| x < 100));
+        assert!(xs.iter().any(|&x| x > 1_000_000));
+    }
+}

@@ -1,0 +1,35 @@
+//! The shipped config presets under configs/ must parse and validate.
+
+use std::path::PathBuf;
+
+use medha::config::DeploymentConfig;
+
+fn config_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("configs")
+}
+
+#[test]
+fn shipped_configs_load_and_validate() {
+    let mut found = 0;
+    for entry in std::fs::read_dir(config_dir()).unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let dep = DeploymentConfig::load(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        dep.validate()
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        found += 1;
+    }
+    assert!(found >= 2, "expected shipped configs, found {found}");
+}
+
+#[test]
+fn llama3_8b_3d_preset_is_the_paper_layout() {
+    let dep = DeploymentConfig::load(&config_dir().join("llama3_8b_3d.json")).unwrap();
+    assert_eq!(dep.total_gpus(), 128);
+    assert_eq!(dep.parallel.tp, 8);
+    assert!(dep.scheduler.adaptive_chunking);
+    assert!((dep.slo.tbt_s - 0.030).abs() < 1e-12);
+}

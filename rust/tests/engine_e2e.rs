@@ -1,0 +1,133 @@
+//! End-to-end engine tests against real artifacts: golden-generation match
+//! (Rust+PJRT == pure-JAX reference), chunking invariance, and KVP
+//! shard/merge equivalence — the core "all layers compose" proof.
+
+use std::path::PathBuf;
+
+use medha::engine::pipeline::{serve, ServeRequest};
+use medha::engine::{detokenize, tokenize, Engine};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine(lps: u32) -> Option<Engine> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(artifacts_dir(), lps).unwrap())
+}
+
+#[test]
+fn golden_generation_matches_jax_reference() {
+    let Some(e) = engine(8) else { return };
+    let n = e.verify_golden().unwrap();
+    assert!(n >= 8);
+}
+
+#[test]
+fn chunking_invariance_on_real_engine() {
+    // Same prompt prefilled with different chunk caps must produce the same
+    // next token — adaptive chunking's correctness precondition, verified
+    // on the real runtime.
+    let Some(e) = engine(8) else { return };
+    let prompt = tokenize("The quadratic cost of attention grows fast.");
+    let a = e.generate(&prompt, 4, 256).unwrap();
+    let b = e.generate(&prompt, 4, 16).unwrap();
+    assert_eq!(a, b, "chunk cap changed the output");
+}
+
+#[test]
+fn staged_execution_matches_monolithic() {
+    // 4 stages of 2 layers == 1 stage of 8 layers (SPP correctness).
+    let Some(e1) = engine(8) else { return };
+    let Some(e4) = engine(2) else { return };
+    let prompt = tokenize("pipeline stages compose");
+    let a = e1.generate(&prompt, 6, 64).unwrap();
+    let b = e4.generate(&prompt, 6, 64).unwrap();
+    assert_eq!(a, b, "stage split changed the output");
+}
+
+#[test]
+fn generated_text_is_deterministic() {
+    let Some(e) = engine(8) else { return };
+    let prompt = tokenize("abc");
+    let a = e.generate(&prompt, 8, 64).unwrap();
+    let b = e.generate(&prompt, 8, 64).unwrap();
+    assert_eq!(a, b);
+    // tokens are bytes; detokenize must not panic
+    let _ = detokenize(&a);
+}
+
+#[test]
+fn pipeline_serve_matches_direct_engine() {
+    // The multi-threaded SPP pipeline (2 stages, separate PJRT clients)
+    // must produce exactly the same tokens as the single-client engine.
+    let Some(e) = engine(4) else { return };
+    let prompt = tokenize("pipeline equals direct execution");
+    let direct = e.generate(&prompt, 6, 16).unwrap();
+    let rep = serve(
+        artifacts_dir(),
+        2,
+        16,
+        &[ServeRequest {
+            prompt: prompt.clone(),
+            max_new_tokens: 6,
+        }],
+    )
+    .unwrap();
+    assert_eq!(rep.requests[0].generated, direct);
+    assert!(rep.requests[0].ttft_s > 0.0);
+    assert_eq!(rep.decode_tokens, 6);
+}
+
+#[test]
+fn kvp_sharded_equals_monolithic_attention() {
+    let Some(e) = engine(8) else { return };
+    let spec = e.spec;
+    let row = spec.hkv * spec.d_head;
+    let n = 1024usize;
+    let kv_len = 900usize;
+    // deterministic pseudo-random q/k/v
+    let gen = |seed: u64, len: usize| -> Vec<f32> {
+        let mut rng = medha::util::rng::Rng::new(seed);
+        (0..len).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect()
+    };
+    let q = gen(1, spec.hq * spec.d_head);
+    let k = gen(2, n * row);
+    let v = gen(3, n * row);
+
+    let mono = e
+        .monolithic_decode_attention(&q, &k, &v, kv_len, 1024)
+        .unwrap();
+    let sharded = e.kvp_decode_attention(&q, &k, &v, kv_len, 512, 2).unwrap();
+    assert_eq!(mono.len(), sharded.len());
+    for (a, b) in mono.iter().zip(&sharded) {
+        assert!((a - b).abs() < 2e-5, "kvp mismatch: {a} vs {b}");
+    }
+}
+
+#[test]
+fn kvp_with_empty_tail_shard() {
+    // kv_len entirely inside shard 0: shard 1 is dead, merge must still be
+    // exact (dynamic onboarding's freshly-added empty workers).
+    let Some(e) = engine(8) else { return };
+    let spec = e.spec;
+    let row = spec.hkv * spec.d_head;
+    let gen = |seed: u64, len: usize| -> Vec<f32> {
+        let mut rng = medha::util::rng::Rng::new(seed);
+        (0..len).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect()
+    };
+    let q = gen(4, spec.hq * spec.d_head);
+    let k = gen(5, 1024 * row);
+    let v = gen(6, 1024 * row);
+    let kv_len = 300; // < 512: shard 1 has zero valid rows
+    let mono = e
+        .monolithic_decode_attention(&q, &k, &v, kv_len, 512)
+        .unwrap();
+    let sharded = e.kvp_decode_attention(&q, &k, &v, kv_len, 512, 2).unwrap();
+    for (a, b) in mono.iter().zip(&sharded) {
+        assert!((a - b).abs() < 2e-5, "{a} vs {b}");
+    }
+}

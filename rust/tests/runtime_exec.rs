@@ -1,0 +1,140 @@
+//! Integration: load real artifacts, compile on PJRT CPU, execute entries,
+//! and check output shapes/numerics plumbing end-to-end.
+
+use std::path::PathBuf;
+
+use medha::runtime::{lit_f32, lit_i32, lit_zeros_f32, load_weights, to_vec_f32, Runtime};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<Runtime> {
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (`make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(artifacts_dir()).unwrap())
+}
+
+#[test]
+fn embed_and_lm_head_execute() {
+    let Some(rt) = runtime() else { return };
+    let m = &rt.manifest;
+    let w = load_weights(&artifacts_dir(), m).unwrap();
+    let emb = &w["embed"];
+    let tokens: Vec<i32> = (0..16).collect();
+    let out = rt
+        .call(
+            "embed_c16",
+            &[
+                lit_i32(&[16], &tokens).unwrap(),
+                lit_f32(&emb.shape, &emb.data).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    let h = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(h.len(), 16 * m.spec.d_model);
+    // embedding lookup: row i of output == row tokens[i] of the table
+    for i in 0..16 {
+        let want = &emb.data[(i as usize) * m.spec.d_model..(i as usize + 1) * m.spec.d_model];
+        let got = &h[i * m.spec.d_model..(i + 1) * m.spec.d_model];
+        assert_eq!(got, want);
+    }
+
+    let fnorm = &w["final_norm"];
+    let logits = rt
+        .call(
+            "lm_head_c16",
+            &[
+                out[0].clone(),
+                lit_f32(&fnorm.shape, &fnorm.data).unwrap(),
+                lit_f32(&emb.shape, &emb.data).unwrap(),
+            ],
+        )
+        .unwrap();
+    let lv = to_vec_f32(&logits[0]).unwrap();
+    assert_eq!(lv.len(), 16 * m.spec.vocab);
+    assert!(lv.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn stage_forward_executes_and_updates_cache() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest.clone();
+    let w = load_weights(&artifacts_dir(), &m).unwrap();
+    let (lps, c) = (2usize, 16usize);
+    let spec = m.spec;
+
+    // h from embed
+    let emb = &w["embed"];
+    let tokens: Vec<i32> = (5..5 + c as i32).collect();
+    let h = rt
+        .call(
+            "embed_c16",
+            &[
+                lit_i32(&[c], &tokens).unwrap(),
+                lit_f32(&emb.shape, &emb.data).unwrap(),
+            ],
+        )
+        .unwrap()
+        .remove(0);
+
+    let cache_shape = [lps, spec.max_seq, spec.hkv, spec.d_head];
+    let mut args = vec![
+        h,
+        lit_zeros_f32(&cache_shape).unwrap(),
+        lit_zeros_f32(&cache_shape).unwrap(),
+        lit_i32(&[1], &[0]).unwrap(),
+    ];
+    for layer in 0..lps {
+        for nm in &m.layer_weight_names {
+            let t = &w[&format!("layers.{layer}.{nm}")];
+            args.push(lit_f32(&t.shape, &t.data).unwrap());
+        }
+    }
+    let out = rt.call("stage_c16_l2", &args).unwrap();
+    assert_eq!(out.len(), 3);
+    let h2 = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(h2.len(), c * spec.d_model);
+    assert!(h2.iter().all(|x| x.is_finite()));
+    let ck = to_vec_f32(&out[1]).unwrap();
+    assert_eq!(ck.len(), lps * spec.max_seq * spec.hkv * spec.d_head);
+    // cache rows [0, c) must now be populated (nonzero), rest still zero
+    let row = spec.hkv * spec.d_head;
+    let first_rows = &ck[0..c * row];
+    assert!(first_rows.iter().any(|&x| x != 0.0));
+    let beyond = &ck[c * row..(c + 4) * row];
+    assert!(beyond.iter().all(|&x| x == 0.0));
+}
+
+#[test]
+fn kvp_entries_execute() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.spec;
+    let (hq, dh, hkv) = (spec.hq, spec.d_head, spec.d_head * 0 + spec.hkv);
+    let cap = 512usize;
+    let q: Vec<f32> = (0..hq * dh).map(|i| (i as f32 * 0.01).sin()).collect();
+    let k: Vec<f32> = (0..cap * hkv * dh).map(|i| (i as f32 * 0.003).cos()).collect();
+    let v: Vec<f32> = (0..cap * hkv * dh).map(|i| (i as f32 * 0.007).sin()).collect();
+    let out = rt
+        .call(
+            "kvp_partial_c1_s512",
+            &[
+                lit_f32(&[1, hq, dh], &q).unwrap(),
+                lit_f32(&[cap, hkv, dh], &k).unwrap(),
+                lit_f32(&[cap, hkv, dh], &v).unwrap(),
+                lit_i32(&[1], &[599]).unwrap(), // q_start
+                lit_i32(&[1], &[0]).unwrap(),   // shard_start
+                lit_i32(&[1], &[512]).unwrap(), // shard_len
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3); // (o, m, l)
+    let o = to_vec_f32(&out[0]).unwrap();
+    assert_eq!(o.len(), hq * dh);
+    assert!(o.iter().all(|x| x.is_finite()));
+    let l = to_vec_f32(&out[2]).unwrap();
+    assert!(l.iter().all(|&x| x > 0.0));
+}

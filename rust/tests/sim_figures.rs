@@ -1,0 +1,168 @@
+//! Integration tests asserting the *shapes* of the paper's key results on
+//! the simulated substrate (the quantitative claims DESIGN.md §5 commits to).
+
+use medha::baselines::{striped_prefill_time, RingConfig, VllmModel};
+use medha::config::DeploymentConfig;
+use medha::perfmodel::PerfModel;
+use medha::sim::{SimOptions, Simulation};
+use medha::workload;
+
+fn dep8b(tp: u32, spp: u32, kvp: u32) -> DeploymentConfig {
+    DeploymentConfig::llama3_8b_tp8().with_parallel(tp, spp, kvp)
+}
+
+fn pm(dep: &DeploymentConfig) -> PerfModel {
+    PerfModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel)
+}
+
+#[test]
+fn fig14a_medha_beats_striped_at_scale() {
+    // Paper: Medha 2D ~64% faster than striped attention at 16 servers.
+    let dep = dep8b(8, 16, 1);
+    let p = pm(&dep);
+    let cfg = RingConfig { p: 16, tp: 8 };
+    let striped = striped_prefill_time(&dep.model, &dep.hardware, &cfg, 1_000_000);
+    let medha = p.prefill_time_spp(1_000_000, 4096);
+    let gain = striped / medha - 1.0;
+    assert!((0.3..1.2).contains(&gain), "gain={gain} (paper: 0.64)");
+    // and the gap must GROW with scale
+    let dep2 = dep8b(8, 2, 1);
+    let p2 = pm(&dep2);
+    let cfg2 = RingConfig { p: 2, tp: 8 };
+    let gain2 = striped_prefill_time(&dep2.model, &dep2.hardware, &cfg2, 1_000_000)
+        / p2.prefill_time_spp(1_000_000, 4096)
+        - 1.0;
+    assert!(gain > gain2, "gap should grow with scale: {gain2} -> {gain}");
+}
+
+#[test]
+fn fig15_spp_scaling_efficiency_above_80pct() {
+    let t1 = pm(&dep8b(8, 1, 1)).prefill_time_spp(2_000_000, 4096);
+    let t16 = pm(&dep8b(8, 16, 1)).prefill_time_spp(2_000_000, 4096);
+    let eff = t1 / (16.0 * t16);
+    assert!(eff > 0.8, "eff={eff}");
+}
+
+#[test]
+fn fig15_ttft_slo_met_at_2m_with_16_servers() {
+    // Paper: 30s TTFT met up to 2M for 8B with 16 DGX servers.
+    let t = pm(&dep8b(8, 16, 1)).prefill_time_spp(2_000_000, 4096);
+    assert!(t < 30.0, "TTFT {t}s");
+}
+
+#[test]
+fn fig15_70b_memory_crosses() {
+    // Red crosses: 70B 10M infeasible below spp=8.
+    let m70 = DeploymentConfig::llama3_70b_tp8();
+    assert!(!pm(&m70.clone().with_parallel(8, 4, 1)).fits_memory(10_000_000));
+    assert!(pm(&m70.with_parallel(8, 8, 1)).fits_memory(10_000_000));
+}
+
+#[test]
+fn fig16_spp_decode_penalty_marginal() {
+    let t2 = pm(&dep8b(8, 2, 1)).decode_tbt(2_000_000);
+    let t16 = pm(&dep8b(8, 16, 1)).decode_tbt(2_000_000);
+    assert!(t16 / t2 < 2.0, "spp16/spp2 = {}", t16 / t2);
+}
+
+#[test]
+fn fig17_kvp_gains_grow_with_context() {
+    let s4m = pm(&dep8b(8, 4, 1)).decode_tbt(4_000_000) / pm(&dep8b(8, 4, 4)).decode_tbt(4_000_000);
+    let s10m =
+        pm(&dep8b(8, 4, 1)).decode_tbt(10_000_000) / pm(&dep8b(8, 4, 4)).decode_tbt(10_000_000);
+    assert!(s4m > 1.3 && s10m > s4m, "s4m={s4m} s10m={s10m}");
+    // sublinear (Amdahl): never the full 4x
+    assert!(s10m < 4.0);
+}
+
+#[test]
+fn fig13_vllm_gaps() {
+    let dep = dep8b(8, 1, 1);
+    let p = pm(&dep);
+    let v = VllmModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
+    // decode gap at 2M in the paper's ~3.8-4x range
+    let gap = v.decode_tbt(2_000_000) / p.decode_tbt(2_000_000);
+    assert!((2.0..8.0).contains(&gap), "decode gap {gap}");
+    // small-chunk prefill gap ~6x
+    let pgap = v.prefill_time_chunked(1_000_000, 128) / p.prefill_time_monolithic(1_000_000, 128);
+    assert!((3.0..12.0).contains(&pgap), "prefill gap {pgap}");
+}
+
+#[test]
+fn fig8_adaptive_dominates_static_extremes() {
+    let run = |adaptive: bool, chunk: u64| {
+        let mut dep = dep8b(8, 1, 1);
+        dep.scheduler.adaptive_chunking = adaptive;
+        dep.scheduler.static_chunk = chunk;
+        let w = workload::long_plus_decodes(500_000, 8, 1_000, 1_000);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        sim.run();
+        let ttft = sim.request(0).unwrap().ttft().unwrap();
+        let p95 = sim.metrics.tbt.p95();
+        (ttft, p95)
+    };
+    let (ttft_small, tbt_small) = run(false, 32); // good TBT, bad TTFT
+    let (ttft_big, tbt_big) = run(false, 4096); // good TTFT, bad TBT
+    let (ttft_ad, tbt_ad) = run(true, 0);
+    // adaptive must get (near-)best-of-both: TTFT much closer to the big
+    // chunk than the small chunk, TBT much closer to the small chunk.
+    assert!(ttft_ad < ttft_small * 0.6, "ttft adaptive {ttft_ad} vs small {ttft_small}");
+    assert!(tbt_ad < tbt_big * 0.6, "tbt adaptive {tbt_ad} vs big {tbt_big}");
+    assert!(ttft_big < ttft_small && tbt_small < tbt_big, "sanity");
+}
+
+#[test]
+fn fig19_gpu_staircase_with_stable_iterations() {
+    let mut dep = dep8b(8, 4, 4);
+    dep.scheduler.kvp_onboard_threshold = 500_000;
+    let w = workload::single_long(2_000_000, 8);
+    let mut sim = Simulation::new(dep, w, SimOptions::default());
+    sim.run();
+    let gpus: Vec<u32> = sim.metrics.iters.iter().map(|r| r.active_gpus).collect();
+    // staircase 32 -> 128
+    assert_eq!(gpus.first().copied().unwrap(), 32);
+    assert_eq!(gpus.iter().copied().max().unwrap(), 128);
+    for lvl in [32u32, 64, 96, 128] {
+        assert!(gpus.contains(&lvl), "missing staircase level {lvl}");
+    }
+    // near-constant iteration time: growth vs context is bounded (the
+    // opposing forces of Fig. 19) — compare last decile mean to first.
+    let durs: Vec<f64> = sim
+        .metrics
+        .iters
+        .iter()
+        .filter(|r| r.chunk.is_some())
+        .map(|r| r.dur_s)
+        .collect();
+    let k = durs.len() / 10;
+    let head: f64 = durs[..k].iter().sum::<f64>() / k as f64;
+    let tail: f64 = durs[durs.len() - k..].iter().sum::<f64>() / k as f64;
+    assert!(
+        tail / head < 3.0,
+        "iteration time should stay near-constant: head {head} tail {tail}"
+    );
+}
+
+#[test]
+fn fig22_batching_decodes_is_nearly_free() {
+    let p = pm(&dep8b(8, 1, 1));
+    use medha::perfmodel::{BatchShape, DecodeWork, PrefillWork};
+    let alone = p
+        .iteration_time(&BatchShape::prefill_only(2048, 1_000_000))
+        .total();
+    let with_128 = p
+        .iteration_time(&BatchShape {
+            prefills: vec![PrefillWork { chunk: 2048, kv_len: 1_000_000 }],
+            decodes: (0..128).map(|_| DecodeWork { kv_len: 1_000 }).collect(),
+        })
+        .total();
+    assert!(with_128 / alone < 1.05, "batching inflation {}", with_128 / alone);
+}
+
+#[test]
+fn sim_backed_figures_run() {
+    // The sim-backed harnesses execute end-to-end (stdout only).
+    for f in ["fig8", "fig19"] {
+        medha::figures::run(f).unwrap_or_else(|e| panic!("{f}: {e}"));
+    }
+}
