@@ -1,22 +1,31 @@
 //! `cargo bench --bench hotpath` — microbenchmarks of the serving hot paths
 //! (L3 perf targets from DESIGN.md §7): the perf-model predictor queried by
-//! adaptive chunking, scheduler batch formation, simulator iteration rate,
-//! KV-cache accounting, and (when artifacts exist) real PJRT execution
-//! latency for decode steps and KVP partials.
+//! adaptive chunking, scheduler batch formation, simulator iteration rate
+//! (optimized arena core vs. the pre-arena reference core), KV-cache
+//! accounting, and (when artifacts exist) real PJRT execution latency for
+//! decode steps and KVP partials.
+//!
+//! Results are recorded to `BENCH_sim.json`, including the simulator
+//! throughput reports (`sim/throughput decode-stream`, `sim/million
+//! mixed`) and the optimized-vs-reference speedup on the
+//! `sim/mixed 100K-prefill + 8 decodes` workload.
 
 use medha::config::{DeploymentConfig, SloConfig};
 use medha::coordinator::chunking::{AdaptiveChunk, ChunkPolicy};
 use medha::coordinator::request::Request;
 use medha::coordinator::scheduler::Scheduler;
-use medha::coordinator::StaticChunk;
+use medha::coordinator::{RequestArena, StaticChunk};
 use medha::kvcache::{BlockPool, KvManager};
 use medha::perfmodel::{BatchShape, PerfModel};
+use medha::sim::reference::ReferenceSimulation;
+use medha::sim::throughput::{
+    decode_stream_workload, mixed_million_workload, run_sim_throughput, throughput_dep,
+};
 use medha::sim::{SimOptions, Simulation};
 use medha::util::bench::BenchSuite;
 use medha::util::json::Json;
 use medha::util::rng::Rng;
 use medha::workload;
-use std::collections::BTreeMap;
 
 fn main() {
     let mut suite = BenchSuite::from_env();
@@ -41,18 +50,20 @@ fn main() {
         std::hint::black_box(adaptive.next_chunk(2_000_000, 1 << 40, &decode_ctxs, &pm, &slo));
     });
 
-    let mut requests = BTreeMap::new();
+    // 128 requests driven through prefill into steady-state decode.
+    let mut requests = RequestArena::new();
     let mut sched = Scheduler::new(Box::new(StaticChunk(512)), 128);
     for id in 0..128u64 {
-        let mut r = Request::new(id, 64, 4_000, 0.0);
-        r.complete_chunk(64, 0.0);
-        requests.insert(id, r);
-        sched.enqueue(id);
-        let plan = sched.next_batch(&requests, &pm, &slo, |r| r.kv_len());
+        let slot = requests.insert(Request::new(id, 64, 4_000, 0.0));
+        sched.enqueue(slot);
+        let plan = sched.next_batch(&requests, &pm, &slo);
         sched.complete_iteration(&plan, &mut requests, 0.0);
     }
+    assert_eq!(sched.n_decoding(), 128);
+    let mut plan = medha::coordinator::BatchPlan::default();
     suite.bench("scheduler/next_batch 128 decodes", || {
-        std::hint::black_box(sched.next_batch(&requests, &pm, &slo, |r| r.kv_len()));
+        sched.next_batch_into(&requests, &pm, &slo, &mut plan);
+        std::hint::black_box(plan.decodes.len());
     });
 
     suite.bench("kvcache/append+ship+release cycle", || {
@@ -65,14 +76,46 @@ fn main() {
         kv.release(1).unwrap();
     });
 
-    // --- simulator throughput --------------------------------------------
-    suite.bench("sim/mixed 100K-prefill + 8 decodes", || {
+    // --- simulator throughput: optimized core vs. pre-arena reference -----
+    let mixed_dep = || {
         let mut dep = DeploymentConfig::llama3_8b_tp8();
         dep.scheduler.adaptive_chunking = false;
         dep.scheduler.static_chunk = 2048;
+        dep
+    };
+    suite.bench("sim/mixed 100K-prefill + 8 decodes", || {
         let w = workload::long_plus_decodes(100_000, 8, 1_000, 64);
-        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        let mut sim = Simulation::new(mixed_dep(), w, SimOptions::default());
         std::hint::black_box(sim.run());
+    });
+    suite.bench("sim/mixed 100K-prefill + 8 decodes [reference]", || {
+        let w = workload::long_plus_decodes(100_000, 8, 1_000, 64);
+        let mut sim = ReferenceSimulation::new(mixed_dep(), w, SimOptions::default());
+        std::hint::black_box(sim.run());
+    });
+
+    let mut sim_reports: Vec<medha::sim::throughput::SimThroughput> = Vec::new();
+    let smoke = suite.is_smoke();
+    // 8 lockstep decoders: per-iteration cost, not perf-model volume
+    let tokens_each = if smoke { 2_000 } else { 250_000 };
+    suite.bench_once("sim/throughput decode-stream", || {
+        let r = run_sim_throughput(
+            "sim/throughput decode-stream",
+            throughput_dep(1),
+            decode_stream_workload(8, tokens_each),
+        );
+        println!("{}", r.report_line());
+        sim_reports.push(r);
+    });
+    let (n, n_long) = if smoke { (2_000, 4) } else { (1_000_000, 200) };
+    suite.bench_once("sim/million mixed", || {
+        let r = run_sim_throughput(
+            "sim/million mixed",
+            throughput_dep(2),
+            mixed_million_workload(n, n_long, 7),
+        );
+        println!("{}", r.report_line());
+        sim_reports.push(r);
     });
 
     // --- substrates -------------------------------------------------------
@@ -133,5 +176,32 @@ fn main() {
         });
     } else {
         println!("(artifacts missing — runtime benches skipped; run `make artifacts`)");
+    }
+
+    // --- record results ---------------------------------------------------
+    let speedup = {
+        let find = |name: &str| {
+            suite
+                .results
+                .iter()
+                .find(|r| r.name == name)
+                .map(|r| r.mean_s)
+        };
+        match (
+            find("sim/mixed 100K-prefill + 8 decodes"),
+            find("sim/mixed 100K-prefill + 8 decodes [reference]"),
+        ) {
+            (Some(opt), Some(reference)) if opt > 0.0 => Json::num(reference / opt),
+            _ => Json::Null,
+        }
+    };
+    let extra = vec![
+        ("sim_throughput", Json::arr(sim_reports.iter().map(|r| r.to_json()))),
+        ("sim_mixed_speedup_vs_reference", speedup),
+    ];
+    let out = std::path::Path::new("BENCH_sim.json");
+    match suite.write_json(out, extra) {
+        Ok(()) => println!("\nrecorded results to {}", out.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
     }
 }

@@ -1,0 +1,175 @@
+//! Dense request storage for the scheduling/simulation hot path.
+//!
+//! Every in-flight request lives in one `Vec` slot; schedulers, the router,
+//! and the KVP manager all refer to requests by [`Slot`] — a small integer
+//! handle — instead of the external `RequestId`. Touching a request is an
+//! array index (one cache line) rather than a `BTreeMap` descent, and
+//! finished requests' slots are recycled through a free list so the arena's
+//! footprint tracks the number of *concurrent* requests, not the total
+//! workload size. That is what lets million-request traces run without the
+//! per-request map overhead dominating the iteration loop.
+
+use super::request::Request;
+
+/// Arena handle for an in-flight request. Slots are recycled after a
+/// request is retired, so a `Slot` is only meaningful while the request it
+/// was issued for is still live.
+pub type Slot = u32;
+
+#[derive(Debug, Default)]
+pub struct RequestArena {
+    slots: Vec<Option<Request>>,
+    free: Vec<Slot>,
+    live: usize,
+}
+
+impl RequestArena {
+    pub fn new() -> RequestArena {
+        RequestArena::default()
+    }
+
+    pub fn with_capacity(n: usize) -> RequestArena {
+        RequestArena {
+            slots: Vec::with_capacity(n),
+            free: Vec::new(),
+            live: 0,
+        }
+    }
+
+    /// Store a request, reusing a vacated slot when one is available.
+    pub fn insert(&mut self, r: Request) -> Slot {
+        self.live += 1;
+        match self.free.pop() {
+            Some(s) => {
+                debug_assert!(self.slots[s as usize].is_none());
+                self.slots[s as usize] = Some(r);
+                s
+            }
+            None => {
+                self.slots.push(Some(r));
+                (self.slots.len() - 1) as Slot
+            }
+        }
+    }
+
+    /// Retire a request, recycling its slot.
+    pub fn remove(&mut self, s: Slot) -> Request {
+        let r = self.slots[s as usize].take().expect("removing vacant slot");
+        self.free.push(s);
+        self.live -= 1;
+        r
+    }
+
+    /// Hot-path accessor: panics on a vacant slot (a stale handle is a
+    /// scheduler bug, not a recoverable condition).
+    pub fn get(&self, s: Slot) -> &Request {
+        self.slots[s as usize].as_ref().expect("vacant request slot")
+    }
+
+    pub fn get_mut(&mut self, s: Slot) -> &mut Request {
+        self.slots[s as usize].as_mut().expect("vacant request slot")
+    }
+
+    pub fn try_get(&self, s: Slot) -> Option<&Request> {
+        self.slots.get(s as usize).and_then(|x| x.as_ref())
+    }
+
+    /// Live requests.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Total slots ever allocated (high-water mark of concurrency).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Iterate live requests in slot order.
+    pub fn iter(&self) -> impl Iterator<Item = (Slot, &Request)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, r)| r.as_ref().map(|r| (i as Slot, r)))
+    }
+}
+
+impl std::ops::Index<Slot> for RequestArena {
+    type Output = Request;
+    fn index(&self, s: Slot) -> &Request {
+        self.get(s)
+    }
+}
+
+impl std::ops::IndexMut<Slot> for RequestArena {
+    fn index_mut(&mut self, s: Slot) -> &mut Request {
+        self.get_mut(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request::new(id, 100, 4, 0.0)
+    }
+
+    #[test]
+    fn slots_are_recycled() {
+        let mut a = RequestArena::new();
+        let s0 = a.insert(req(10));
+        let s1 = a.insert(req(11));
+        assert_eq!((s0, s1), (0, 1));
+        assert_eq!(a.len(), 2);
+        let r = a.remove(s0);
+        assert_eq!(r.id, 10);
+        // freed slot is reused before the vector grows
+        let s2 = a.insert(req(12));
+        assert_eq!(s2, s0);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.capacity(), 2);
+        assert_eq!(a[s2].id, 12);
+        assert_eq!(a[s1].id, 11);
+    }
+
+    #[test]
+    fn iter_skips_vacant() {
+        let mut a = RequestArena::new();
+        let s0 = a.insert(req(1));
+        let _s1 = a.insert(req(2));
+        a.remove(s0);
+        let ids: Vec<u64> = a.iter().map(|(_, r)| r.id).collect();
+        assert_eq!(ids, vec![2]);
+    }
+
+    #[test]
+    fn capacity_tracks_high_water_mark() {
+        let mut a = RequestArena::new();
+        let mut slots = Vec::new();
+        for i in 0..100 {
+            slots.push(a.insert(req(i)));
+        }
+        for &s in &slots {
+            a.remove(s);
+        }
+        for i in 0..100 {
+            a.insert(req(1000 + i));
+        }
+        // churn reuses slots: still only 100 ever allocated
+        assert_eq!(a.capacity(), 100);
+        assert_eq!(a.len(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "vacant request slot")]
+    fn stale_handle_panics() {
+        let mut a = RequestArena::new();
+        let s = a.insert(req(1));
+        a.remove(s);
+        let _ = a.get(s);
+    }
+}

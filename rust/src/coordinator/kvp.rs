@@ -6,9 +6,20 @@
 //! when the active group fills, the next group joins. Groups not serving a
 //! long request remain independent replicas that can batch short requests
 //! (section 7's scheduling opportunity — exercised by the router).
+//!
+//! Long requests are keyed by their arena [`Slot`]; the external
+//! `RequestId` is kept alongside only for the onboarding log (the Fig. 19
+//! timeline reports client-visible ids).
 
+use super::arena::Slot;
 use crate::kvcache::{GroupId, RequestId, ShardMap};
-use std::collections::BTreeMap;
+use crate::util::slotvec::SlotVec;
+
+#[derive(Debug, Clone)]
+struct LongEntry {
+    ext_id: RequestId,
+    map: ShardMap,
+}
 
 #[derive(Debug, Clone)]
 pub struct KvpManager {
@@ -16,8 +27,8 @@ pub struct KvpManager {
     pub onboard_threshold: u64,
     /// Total KVP groups available.
     pub n_groups: u32,
-    /// Shard maps per long request.
-    maps: BTreeMap<RequestId, ShardMap>,
+    /// Shard maps per long request, slot-indexed.
+    maps: SlotVec<LongEntry>,
     /// Onboarding events (time, request, group) — the Fig. 19 timeline.
     pub onboard_log: Vec<(f64, RequestId, GroupId)>,
 }
@@ -28,27 +39,28 @@ impl KvpManager {
         KvpManager {
             onboard_threshold,
             n_groups,
-            maps: BTreeMap::new(),
+            maps: SlotVec::new(),
             onboard_log: Vec::new(),
         }
     }
 
     /// Register a request; it starts on `first_group` only.
-    pub fn onboard_request(&mut self, id: RequestId, first_group: GroupId, t: f64) {
+    pub fn onboard_request(&mut self, s: Slot, ext_id: RequestId, first_group: GroupId, t: f64) {
         let mut m = ShardMap::default();
         m.shards.push((first_group, 0, 0));
-        self.maps.insert(id, m);
-        self.onboard_log.push((t, id, first_group));
+        self.maps.insert(s as usize, LongEntry { ext_id, map: m });
+        self.onboard_log.push((t, ext_id, first_group));
     }
 
-    /// Append `tokens` of processed KV for `id` at time `t`, onboarding new
-    /// groups as thresholds are crossed. Returns the groups added.
-    pub fn append_tokens(&mut self, id: RequestId, mut tokens: u64, t: f64) -> Vec<GroupId> {
-        let m = self.maps.get_mut(&id).expect("request not onboarded");
+    /// Append `tokens` of processed KV for slot `s` at time `t`, onboarding
+    /// new groups as thresholds are crossed. Returns the groups added (the
+    /// common no-growth case returns an unallocated empty vector).
+    pub fn append_tokens(&mut self, s: Slot, mut tokens: u64, t: f64) -> Vec<GroupId> {
+        let e = self.maps.get_mut(s as usize).expect("request not onboarded");
         let mut added = Vec::new();
         while tokens > 0 {
-            let (g, _, len) = *m.shards.last().unwrap();
-            let fleet_exhausted = m.shards.len() as u32 >= self.n_groups;
+            let (g, _, len) = *e.map.shards.last().unwrap();
+            let fleet_exhausted = e.map.shards.len() as u32 >= self.n_groups;
             let room = if fleet_exhausted {
                 // No more groups to onboard: the last shard absorbs the rest
                 // (the paper grows "until it reaches the max of 128 GPUs").
@@ -59,49 +71,53 @@ impl KvpManager {
             if room == 0 {
                 // onboard the next group (round-robin over the fleet)
                 let next = (g + 1) % self.n_groups;
-                let start = m.total_tokens();
-                m.shards.push((next, start, 0));
-                self.onboard_log.push((t, id, next));
+                let start = e.map.total_tokens();
+                e.map.shards.push((next, start, 0));
+                self.onboard_log.push((t, e.ext_id, next));
                 added.push(next);
                 continue;
             }
             let take = tokens.min(room);
-            m.shards.last_mut().unwrap().2 += take;
+            e.map.shards.last_mut().unwrap().2 += take;
             tokens -= take;
         }
         added
     }
 
-    pub fn shard_map(&self, id: RequestId) -> Option<&ShardMap> {
-        self.maps.get(&id)
+    pub fn shard_map(&self, s: Slot) -> Option<&ShardMap> {
+        self.maps.get(s as usize).map(|e| &e.map)
     }
 
-    /// Number of groups currently cooperating on `id` (the p_kvp actually
+    /// Number of groups currently cooperating on `s` (the p_kvp actually
     /// in use — Fig. 19's y-axis is this times workers/group).
-    pub fn active_groups(&self, id: RequestId) -> u32 {
-        self.maps.get(&id).map(|m| m.shards.len() as u32).unwrap_or(0)
+    pub fn active_groups(&self, s: Slot) -> u32 {
+        self.maps
+            .get(s as usize)
+            .map(|e| e.map.shards.len() as u32)
+            .unwrap_or(0)
     }
 
-    /// Local KV lengths per group for `id` — what each group's attention
-    /// kernel scans during decode.
-    pub fn local_lengths(&self, id: RequestId) -> Vec<(GroupId, u64)> {
+    /// Local KV lengths per group for `s` — what each group's attention
+    /// kernel scans during decode. Allocates; the simulator's hot loop
+    /// iterates [`Self::shard_map`] directly instead.
+    pub fn local_lengths(&self, s: Slot) -> Vec<(GroupId, u64)> {
         self.maps
-            .get(&id)
-            .map(|m| m.shards.iter().map(|&(g, _, n)| (g, n)).collect())
+            .get(s as usize)
+            .map(|e| e.map.shards.iter().map(|&(g, _, n)| (g, n)).collect())
             .unwrap_or_default()
     }
 
     /// The *largest* local shard bounds the parallel decode-attention time.
-    pub fn max_local_len(&self, id: RequestId) -> u64 {
-        self.local_lengths(id)
+    pub fn max_local_len(&self, s: Slot) -> u64 {
+        self.local_lengths(s)
             .iter()
             .map(|&(_, n)| n)
             .max()
             .unwrap_or(0)
     }
 
-    pub fn release(&mut self, id: RequestId) {
-        self.maps.remove(&id);
+    pub fn release(&mut self, s: Slot) {
+        self.maps.remove(s as usize);
     }
 }
 
@@ -113,7 +129,7 @@ mod tests {
     #[test]
     fn grows_one_group_at_a_time() {
         let mut k = KvpManager::new(1000, 4);
-        k.onboard_request(7, 0, 0.0);
+        k.onboard_request(7, 7, 0, 0.0);
         assert_eq!(k.active_groups(7), 1);
         assert!(k.append_tokens(7, 999, 1.0).is_empty());
         assert_eq!(k.active_groups(7), 1);
@@ -127,7 +143,7 @@ mod tests {
     fn fig19_staircase() {
         // 2M tokens, 512K threshold -> 4 groups onboarded progressively.
         let mut k = KvpManager::new(512_000, 4);
-        k.onboard_request(1, 0, 0.0);
+        k.onboard_request(1, 1, 0, 0.0);
         let mut t = 0.0;
         let chunk = 4096;
         let mut groups_over_time = Vec::new();
@@ -151,7 +167,7 @@ mod tests {
     #[test]
     fn shard_lengths_sum_to_processed() {
         let mut k = KvpManager::new(100, 8);
-        k.onboard_request(2, 3, 0.0);
+        k.onboard_request(2, 2, 3, 0.0);
         k.append_tokens(2, 777, 0.0);
         let total: u64 = k.local_lengths(2).iter().map(|&(_, n)| n).sum();
         assert_eq!(total, 777);
@@ -161,11 +177,21 @@ mod tests {
     #[test]
     fn last_group_absorbs_overflow_when_fleet_exhausted() {
         let mut k = KvpManager::new(10, 2);
-        k.onboard_request(1, 0, 0.0);
+        k.onboard_request(1, 1, 0, 0.0);
         k.append_tokens(1, 25, 0.0);
         assert_eq!(k.active_groups(1), 2);
         assert_eq!(k.local_lengths(1), vec![(0, 10), (1, 15)]);
         assert!(k.shard_map(1).unwrap().check_contiguous());
+    }
+
+    #[test]
+    fn onboard_log_reports_external_ids() {
+        let mut k = KvpManager::new(10, 4);
+        // slot 0, external request id 999
+        k.onboard_request(0, 999, 2, 1.5);
+        k.append_tokens(0, 11, 2.5);
+        assert_eq!(k.onboard_log[0], (1.5, 999, 2));
+        assert_eq!(k.onboard_log[1], (2.5, 999, 3));
     }
 
     #[test]
@@ -174,7 +200,7 @@ mod tests {
             let threshold = rng.range_u64(10, 5_000);
             let groups = rng.range_u64(2, 16) as u32;
             let mut k = KvpManager::new(threshold, groups);
-            k.onboard_request(1, rng.below(groups as u64) as GroupId, 0.0);
+            k.onboard_request(1, 1, rng.below(groups as u64) as GroupId, 0.0);
             let budget = threshold * groups as u64;
             let mut appended = 0u64;
             for _ in 0..rng.range_u64(1, 50) {

@@ -5,6 +5,7 @@
 //! from either the cluster simulator (`crate::sim`) or wall-clock PJRT
 //! execution (`crate::engine`).
 
+pub mod arena;
 pub mod chunking;
 pub mod kvp;
 pub mod request;
@@ -13,6 +14,7 @@ pub mod scheduler;
 pub mod spp;
 pub mod topology;
 
+pub use arena::{RequestArena, Slot};
 pub use chunking::{AdaptiveChunk, ChunkPolicy, DeadlineChunk, StaticChunk};
 pub use kvp::KvpManager;
 pub use request::{Phase, Request};

@@ -6,23 +6,28 @@
 //! and grows across groups via the KvpManager while the remaining groups
 //! keep serving short traffic independently — the throughput opportunity
 //! the paper highlights.
+//!
+//! State is flat: per-group load is a plain vector (groups are dense ids)
+//! and request placement is slot-indexed, so routing and release are O(1)
+//! array touches in the simulator's hot loop.
 
-use crate::kvcache::{GroupId, RequestId};
-use std::collections::BTreeMap;
+use super::arena::Slot;
+use crate::kvcache::GroupId;
+use crate::util::slotvec::SlotVec;
 
 #[derive(Debug, Clone)]
 pub struct Router {
     /// Outstanding token load per group (KV-resident + queued prompt work).
-    load: BTreeMap<GroupId, u64>,
-    /// Request -> primary group.
-    placement: BTreeMap<RequestId, GroupId>,
+    load: Vec<u64>,
+    /// Request slot -> primary group.
+    placement: SlotVec<GroupId>,
 }
 
 impl Router {
     pub fn new(n_groups: u32) -> Router {
         Router {
-            load: (0..n_groups).map(|g| (g, 0)).collect(),
-            placement: BTreeMap::new(),
+            load: vec![0; n_groups as usize],
+            placement: SlotVec::new(),
         }
     }
 
@@ -32,39 +37,41 @@ impl Router {
 
     /// Route a request with `prompt_len` tokens: least-loaded group wins
     /// (ties break to the lowest id for determinism).
-    pub fn route(&mut self, id: RequestId, prompt_len: u64) -> GroupId {
-        let (&g, _) = self
+    pub fn route(&mut self, s: Slot, prompt_len: u64) -> GroupId {
+        let (g, _) = self
             .load
             .iter()
-            .min_by_key(|&(g, &l)| (l, *g))
+            .enumerate()
+            .min_by_key(|&(g, &l)| (l, g))
             .expect("router has no groups");
-        self.load.insert(g, self.load[&g] + prompt_len);
-        self.placement.insert(id, g);
+        let g = g as GroupId;
+        self.load[g as usize] += prompt_len;
+        self.placement.insert(s as usize, g);
         g
     }
 
-    pub fn group_of(&self, id: RequestId) -> Option<GroupId> {
-        self.placement.get(&id).copied()
+    pub fn group_of(&self, s: Slot) -> Option<GroupId> {
+        self.placement.get(s as usize).copied()
     }
 
     /// Account additional load (e.g. KVP growth claiming another group).
     pub fn add_load(&mut self, g: GroupId, tokens: u64) {
-        *self.load.get_mut(&g).expect("unknown group") += tokens;
+        self.load[g as usize] += tokens;
     }
 
-    pub fn release(&mut self, id: RequestId, tokens: u64) {
-        if let Some(g) = self.placement.remove(&id) {
-            let l = self.load.get_mut(&g).expect("unknown group");
+    pub fn release(&mut self, s: Slot, tokens: u64) {
+        if let Some(g) = self.placement.remove(s as usize) {
+            let l = &mut self.load[g as usize];
             *l = l.saturating_sub(tokens);
         }
     }
 
     pub fn load_of(&self, g: GroupId) -> u64 {
-        self.load.get(&g).copied().unwrap_or(0)
+        self.load.get(g as usize).copied().unwrap_or(0)
     }
 
     pub fn total_load(&self) -> u64 {
-        self.load.values().sum()
+        self.load.iter().sum()
     }
 }
 
@@ -89,8 +96,8 @@ mod tests {
     fn long_request_does_not_block_other_groups() {
         let mut r = Router::new(4);
         let g_long = r.route(1, 10_000_000);
-        for id in 2..20 {
-            let g = r.route(id, 1_000);
+        for s in 2..20 {
+            let g = r.route(s, 1_000);
             assert_ne!(g, g_long, "short request landed on the loaded group");
         }
     }
@@ -110,18 +117,18 @@ mod tests {
         check("router load conserved", 200, |rng| {
             let n = rng.range_u64(1, 8) as u32;
             let mut r = Router::new(n);
-            let mut live: Vec<(RequestId, u64)> = Vec::new();
+            let mut live: Vec<(Slot, u64)> = Vec::new();
             let mut expected: u64 = 0;
             for step in 0..rng.range_u64(1, 80) {
                 if rng.bool(0.6) || live.is_empty() {
                     let tokens = rng.range_u64(1, 100_000);
-                    r.route(step, tokens);
-                    live.push((step, tokens));
+                    r.route(step as Slot, tokens);
+                    live.push((step as Slot, tokens));
                     expected += tokens;
                 } else {
                     let i = rng.below(live.len() as u64) as usize;
-                    let (id, tokens) = live.swap_remove(i);
-                    r.release(id, tokens);
+                    let (s, tokens) = live.swap_remove(i);
+                    r.release(s, tokens);
                     expected -= tokens;
                 }
                 assert_eq!(r.total_load(), expected);

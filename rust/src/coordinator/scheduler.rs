@@ -6,28 +6,41 @@
 //! eliminates head-of-line blocking: a newly arrived request waits at most
 //! one bounded iteration, never behind a monolithic multi-minute prefill
 //! (Fig. 14b).
+//!
+//! The scheduler is built for a hot loop that runs millions of times per
+//! simulated trace: requests are referenced by arena [`Slot`]s, batch plans
+//! and shapes are written into caller-provided buffers (`next_batch_into`,
+//! `batch_shape_into`), and the decode-context list the chunk policy needs
+//! is maintained *incrementally* — updated when a request enters or leaves
+//! decode — instead of being rebuilt (and reallocated) every iteration.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
 
+use super::arena::{RequestArena, Slot};
 use super::chunking::ChunkPolicy;
 use super::request::{Phase, Request};
 use crate::config::SloConfig;
-use crate::kvcache::RequestId;
 use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
 
 /// What the scheduler decided to run this iteration.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct BatchPlan {
     /// (request, chunk size) — at most one chunked prefill per iteration
     /// (Sarathi-style; the chunk budget is the knob, not the count).
-    pub prefill: Option<(RequestId, u64)>,
+    pub prefill: Option<(Slot, u64)>,
     /// Requests getting one decode token each.
-    pub decodes: Vec<RequestId>,
+    pub decodes: Vec<Slot>,
 }
 
 impl BatchPlan {
     pub fn is_empty(&self) -> bool {
         self.prefill.is_none() && self.decodes.is_empty()
+    }
+
+    /// Empty the plan, keeping the decode-list allocation for reuse.
+    pub fn clear(&mut self) {
+        self.prefill = None;
+        self.decodes.clear();
     }
 }
 
@@ -36,9 +49,12 @@ pub struct Scheduler {
     pub policy: Box<dyn ChunkPolicy>,
     pub max_batch: usize,
     /// FIFO of requests awaiting/undergoing prefill.
-    prefill_queue: VecDeque<RequestId>,
-    /// Requests in decode phase.
-    decoding: Vec<RequestId>,
+    prefill_queue: VecDeque<Slot>,
+    /// Requests in decode phase, in the order they entered decode.
+    decoding: Vec<Slot>,
+    /// Local KV length per decoding request, parallel to `decoding`.
+    /// Maintained incrementally so batch formation never walks the arena.
+    decode_ctxs: Vec<u64>,
 }
 
 impl Scheduler {
@@ -48,11 +64,12 @@ impl Scheduler {
             max_batch,
             prefill_queue: VecDeque::new(),
             decoding: Vec::new(),
+            decode_ctxs: Vec::new(),
         }
     }
 
-    pub fn enqueue(&mut self, id: RequestId) {
-        self.prefill_queue.push_back(id);
+    pub fn enqueue(&mut self, s: Slot) {
+        self.prefill_queue.push_back(s);
     }
 
     pub fn queue_len(&self) -> usize {
@@ -67,99 +84,175 @@ impl Scheduler {
         !self.prefill_queue.is_empty() || !self.decoding.is_empty()
     }
 
-    /// Form the next mixed batch. `local_kv` maps a request to the KV
-    /// length *this replica* scans for it (identity for unsharded requests;
-    /// the KVP manager's local shard length for sharded ones).
-    pub fn next_batch<F: Fn(&Request) -> u64>(
+    /// Local KV lengths of *all* decoding requests on this replica, in
+    /// decode-entry order (what a chunk policy sees as the resident decode
+    /// load).
+    pub fn decode_ctxs(&self) -> &[u64] {
+        &self.decode_ctxs
+    }
+
+    /// Form the next mixed batch into `out` (allocation-free once `out`'s
+    /// decode list has warmed up).
+    ///
+    /// The chunk policy sees the incrementally-tracked decode contexts,
+    /// whose values are defined by the `local_kv` closure passed to
+    /// [`Self::complete_iteration_into`] — batch formation itself never
+    /// walks the arena for them.
+    pub fn next_batch_into(
         &mut self,
-        requests: &BTreeMap<RequestId, Request>,
+        requests: &RequestArena,
         pm: &PerfModel,
         slo: &SloConfig,
-        local_kv: F,
-    ) -> BatchPlan {
+        out: &mut BatchPlan,
+    ) {
+        out.clear();
         // Continuous batching: every decoding request gets a token.
-        let decodes: Vec<RequestId> = self
-            .decoding
-            .iter()
-            .copied()
-            .take(self.max_batch)
-            .collect();
-        let decode_ctxs: Vec<u64> = decodes
-            .iter()
-            .map(|id| local_kv(&requests[id]).max(1))
-            .collect();
+        let k = self.decoding.len().min(self.max_batch);
+        out.decodes.extend_from_slice(&self.decoding[..k]);
+        let decode_ctxs = &self.decode_ctxs[..k];
 
         // Piggyback one prefill chunk from the head of the queue.
-        let prefill = self.prefill_queue.front().and_then(|&id| {
-            let r = &requests[&id];
+        out.prefill = self.prefill_queue.front().and_then(|&s| {
+            let r = requests.get(s);
             let remaining = r.remaining_prefill();
             if remaining == 0 {
                 return None;
             }
             let c = self
                 .policy
-                .next_chunk(r.kv_len(), remaining, &decode_ctxs, pm, slo);
-            Some((id, c.max(1).min(remaining)))
+                .next_chunk(r.kv_len(), remaining, decode_ctxs, pm, slo);
+            Some((s, c.max(1).min(remaining)))
         });
-
-        BatchPlan { prefill, decodes }
     }
 
-    /// The `BatchShape` (perf-model view) of a plan, using local KV lengths.
-    pub fn batch_shape<F: Fn(&Request) -> u64>(
+    /// Convenience wrapper allocating a fresh plan (tests / cold paths).
+    pub fn next_batch(
+        &mut self,
+        requests: &RequestArena,
+        pm: &PerfModel,
+        slo: &SloConfig,
+    ) -> BatchPlan {
+        let mut plan = BatchPlan::default();
+        self.next_batch_into(requests, pm, slo, &mut plan);
+        plan
+    }
+
+    /// Write the `BatchShape` (perf-model view) of a plan into `out`, using
+    /// local KV lengths. `out` is cleared first.
+    pub fn batch_shape_into<F: Fn(&Request) -> u64>(
         &self,
         plan: &BatchPlan,
-        requests: &BTreeMap<RequestId, Request>,
+        requests: &RequestArena,
         local_kv: F,
-    ) -> BatchShape {
-        let mut shape = BatchShape::default();
-        if let Some((id, c)) = plan.prefill {
-            let r = &requests[&id];
-            shape.prefills.push(PrefillWork {
+        out: &mut BatchShape,
+    ) {
+        out.clear();
+        if let Some((s, c)) = plan.prefill {
+            let r = requests.get(s);
+            out.prefills.push(PrefillWork {
                 chunk: c,
                 kv_len: local_kv(r) + c,
             });
         }
-        for id in &plan.decodes {
-            shape.decodes.push(DecodeWork {
-                kv_len: local_kv(&requests[id]).max(1),
+        for &s in &plan.decodes {
+            out.decodes.push(DecodeWork {
+                kv_len: local_kv(requests.get(s)).max(1),
             });
         }
+    }
+
+    /// Convenience wrapper allocating a fresh shape.
+    pub fn batch_shape<F: Fn(&Request) -> u64>(
+        &self,
+        plan: &BatchPlan,
+        requests: &RequestArena,
+        local_kv: F,
+    ) -> BatchShape {
+        let mut shape = BatchShape::default();
+        self.batch_shape_into(plan, requests, local_kv, &mut shape);
         shape
     }
 
     /// Apply request state transitions after a plan's iteration completes
-    /// at time `t`. Returns requests that finished.
-    pub fn complete_iteration(
+    /// at time `t`, appending requests that finished to `finished` (cleared
+    /// first). `plan` must be the plan most recently formed by
+    /// `next_batch_into` on this scheduler's current state.
+    ///
+    /// `local_kv` maps a request to the KV length *this replica* scans for
+    /// it (identity for unsharded requests; the KVP manager's local shard
+    /// length for sharded ones) and defines the decode-context values the
+    /// chunk policy sees on subsequent `next_batch_into` calls — pass the
+    /// same closure every iteration.
+    pub fn complete_iteration_into<F: Fn(&Request) -> u64>(
         &mut self,
         plan: &BatchPlan,
-        requests: &mut BTreeMap<RequestId, Request>,
+        requests: &mut RequestArena,
         t: f64,
-    ) -> Vec<RequestId> {
-        let mut finished = Vec::new();
-        if let Some((id, c)) = plan.prefill {
-            let r = requests.get_mut(&id).expect("prefill req");
+        local_kv: F,
+        finished: &mut Vec<Slot>,
+    ) {
+        finished.clear();
+        let mut any_decode_finished = false;
+        if let Some((s, c)) = plan.prefill {
+            let r = requests.get_mut(s);
             r.complete_chunk(c, t);
             match r.phase {
                 Phase::Decoding => {
                     self.prefill_queue.pop_front();
-                    self.decoding.push(id);
+                    self.decoding.push(s);
+                    self.decode_ctxs.push(local_kv(requests.get(s)).max(1));
                 }
                 Phase::Finished => {
                     self.prefill_queue.pop_front();
-                    finished.push(id);
+                    finished.push(s);
                 }
                 _ => {}
             }
         }
-        for &id in &plan.decodes {
-            let r = requests.get_mut(&id).expect("decode req");
+        for (i, &s) in plan.decodes.iter().enumerate() {
+            debug_assert_eq!(
+                self.decoding.get(i).copied(),
+                Some(s),
+                "plan does not match scheduler state"
+            );
+            let r = requests.get_mut(s);
             r.complete_decode(t);
             if r.is_finished() {
-                finished.push(id);
+                finished.push(s);
+                any_decode_finished = true;
+            } else {
+                self.decode_ctxs[i] = local_kv(requests.get(s)).max(1);
             }
         }
-        self.decoding.retain(|id| !finished.contains(id));
+        if any_decode_finished {
+            // Compact `decoding`/`decode_ctxs` in place, dropping finished
+            // requests. One linear pass using the per-request phase flag —
+            // not the O(n·m) `finished.contains` retain this replaces.
+            let mut w = 0;
+            for i in 0..self.decoding.len() {
+                let s = self.decoding[i];
+                if requests.get(s).is_finished() {
+                    continue;
+                }
+                self.decoding[w] = s;
+                self.decode_ctxs[w] = self.decode_ctxs[i];
+                w += 1;
+            }
+            self.decoding.truncate(w);
+            self.decode_ctxs.truncate(w);
+        }
+    }
+
+    /// Convenience wrapper for unsharded replicas (tests / cold paths):
+    /// decode contexts track plain `kv_len`, finished set returned fresh.
+    pub fn complete_iteration(
+        &mut self,
+        plan: &BatchPlan,
+        requests: &mut RequestArena,
+        t: f64,
+    ) -> Vec<Slot> {
+        let mut finished = Vec::new();
+        self.complete_iteration_into(plan, requests, t, |r| r.kv_len(), &mut finished);
         finished
     }
 }
@@ -170,12 +263,12 @@ mod tests {
     use crate::config::DeploymentConfig;
     use crate::coordinator::chunking::{AdaptiveChunk, StaticChunk};
 
-    fn setup() -> (PerfModel, SloConfig, BTreeMap<RequestId, Request>) {
+    fn setup() -> (PerfModel, SloConfig, RequestArena) {
         let d = DeploymentConfig::llama3_8b_tp8();
         (
             PerfModel::new(d.model, d.hardware, d.parallel),
             SloConfig::default(),
-            BTreeMap::new(),
+            RequestArena::new(),
         )
     }
 
@@ -186,28 +279,28 @@ mod tests {
     #[test]
     fn drains_prefill_then_decodes() {
         let (pm, slo, mut reqs) = setup();
-        reqs.insert(1, Request::new(1, 100, 3, 0.0));
+        let s1 = reqs.insert(Request::new(1, 100, 3, 0.0));
         let mut s = static_sched(64);
-        s.enqueue(1);
+        s.enqueue(s1);
 
-        let p1 = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
-        assert_eq!(p1.prefill, Some((1, 64)));
+        let p1 = s.next_batch(&reqs, &pm, &slo);
+        assert_eq!(p1.prefill, Some((s1, 64)));
         assert!(p1.decodes.is_empty());
         s.complete_iteration(&p1, &mut reqs, 0.1);
 
-        let p2 = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
-        assert_eq!(p2.prefill, Some((1, 36))); // clipped to remaining
+        let p2 = s.next_batch(&reqs, &pm, &slo);
+        assert_eq!(p2.prefill, Some((s1, 36))); // clipped to remaining
         s.complete_iteration(&p2, &mut reqs, 0.2);
-        assert_eq!(reqs[&1].phase, Phase::Decoding);
+        assert_eq!(reqs[s1].phase, Phase::Decoding);
 
         // now it decodes; no prefill left
-        let p3 = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        let p3 = s.next_batch(&reqs, &pm, &slo);
         assert_eq!(p3.prefill, None);
-        assert_eq!(p3.decodes, vec![1]);
+        assert_eq!(p3.decodes, vec![s1]);
         s.complete_iteration(&p3, &mut reqs, 0.3);
-        let p4 = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        let p4 = s.next_batch(&reqs, &pm, &slo);
         let fin = s.complete_iteration(&p4, &mut reqs, 0.4);
-        assert_eq!(fin, vec![1]);
+        assert_eq!(fin, vec![s1]);
         assert!(!s.has_work());
     }
 
@@ -215,33 +308,33 @@ mod tests {
     fn mixed_batch_piggybacks_prefill_on_decodes() {
         let (pm, slo, mut reqs) = setup();
         // request 1 decoding, request 2 long prefill arrives
-        reqs.insert(1, Request::new(1, 10, 50, 0.0));
-        reqs.insert(2, Request::new(2, 1_000_000, 10, 1.0));
+        let s1 = reqs.insert(Request::new(1, 10, 50, 0.0));
+        let s2 = reqs.insert(Request::new(2, 1_000_000, 10, 1.0));
         let mut s = static_sched(512);
-        s.enqueue(1);
-        let p = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        s.enqueue(s1);
+        let p = s.next_batch(&reqs, &pm, &slo);
         s.complete_iteration(&p, &mut reqs, 0.1); // prefills 1 fully
-        s.enqueue(2);
+        s.enqueue(s2);
 
-        let plan = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
-        assert_eq!(plan.prefill, Some((2, 512)));
-        assert_eq!(plan.decodes, vec![1]); // decode not blocked by long prefill
+        let plan = s.next_batch(&reqs, &pm, &slo);
+        assert_eq!(plan.prefill, Some((s2, 512)));
+        assert_eq!(plan.decodes, vec![s1]); // decode not blocked by long prefill
     }
 
     #[test]
     fn adaptive_policy_shrinks_chunks_late_in_prefill() {
         let (pm, slo, mut reqs) = setup();
-        reqs.insert(1, Request::new(1, 8_000_000, 1, 0.0));
+        let s1 = reqs.insert(Request::new(1, 8_000_000, 1, 0.0));
         let mut s = Scheduler::new(
             Box::new(AdaptiveChunk::new(vec![32, 256, 2048, 4096])),
             128,
         );
-        s.enqueue(1);
-        let first = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        s.enqueue(s1);
+        let first = s.next_batch(&reqs, &pm, &slo);
         let (_, c_first) = first.prefill.unwrap();
         // fast-forward most of the prefill
-        reqs.get_mut(&1).unwrap().complete_chunk(6_000_000, 100.0);
-        let late = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        reqs[s1].complete_chunk(6_000_000, 100.0);
+        let late = s.next_batch(&reqs, &pm, &slo);
         let (_, c_late) = late.prefill.unwrap();
         assert!(c_late < c_first, "late={c_late} first={c_first}");
     }
@@ -251,28 +344,69 @@ mod tests {
         let (pm, slo, mut reqs) = setup();
         let mut s = Scheduler::new(Box::new(StaticChunk(64)), 4);
         for id in 0..8 {
-            reqs.insert(id, Request::new(id, 1, 100, 0.0));
-            s.enqueue(id);
-            let p = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+            let slot = reqs.insert(Request::new(id, 1, 100, 0.0));
+            s.enqueue(slot);
+            let p = s.next_batch(&reqs, &pm, &slo);
             s.complete_iteration(&p, &mut reqs, 0.1);
         }
         assert_eq!(s.n_decoding(), 8);
-        let plan = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        let plan = s.next_batch(&reqs, &pm, &slo);
         assert_eq!(plan.decodes.len(), 4);
     }
 
     #[test]
     fn batch_shape_uses_local_kv() {
         let (pm, slo, mut reqs) = setup();
-        reqs.insert(1, Request::new(1, 1, 100, 0.0));
+        let s1 = reqs.insert(Request::new(1, 1, 100, 0.0));
         let mut s = static_sched(64);
-        s.enqueue(1);
-        let p = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        s.enqueue(s1);
+        let p = s.next_batch(&reqs, &pm, &slo);
         s.complete_iteration(&p, &mut reqs, 0.1);
-        reqs.get_mut(&1).unwrap().decoded = 50; // pretend long decode
-        let plan = s.next_batch(&reqs, &pm, &slo, |r| r.kv_len());
+        reqs[s1].decoded = 50; // pretend long decode
+        let plan = s.next_batch(&reqs, &pm, &slo);
         // KVP view: local shard is half the KV
         let shape = s.batch_shape(&plan, &reqs, |r| r.kv_len() / 2);
-        assert_eq!(shape.decodes[0].kv_len, reqs[&1].kv_len() / 2);
+        assert_eq!(shape.decodes[0].kv_len, reqs[s1].kv_len() / 2);
+    }
+
+    #[test]
+    fn decode_ctxs_track_incrementally() {
+        let (pm, slo, mut reqs) = setup();
+        let s1 = reqs.insert(Request::new(1, 10, 100, 0.0));
+        let s2 = reqs.insert(Request::new(2, 20, 100, 0.0));
+        let mut s = static_sched(64);
+        s.enqueue(s1);
+        s.enqueue(s2);
+        for _ in 0..2 {
+            let p = s.next_batch(&reqs, &pm, &slo);
+            s.complete_iteration(&p, &mut reqs, 0.1);
+        }
+        // both decoding: ctxs mirror kv lengths, in decode-entry order
+        assert_eq!(s.decode_ctxs(), &[reqs[s1].kv_len(), reqs[s2].kv_len()]);
+        let p = s.next_batch(&reqs, &pm, &slo);
+        s.complete_iteration(&p, &mut reqs, 0.2);
+        assert_eq!(s.decode_ctxs(), &[reqs[s1].kv_len(), reqs[s2].kv_len()]);
+    }
+
+    #[test]
+    fn finished_decodes_compact_without_reorder() {
+        let (pm, slo, mut reqs) = setup();
+        let mut s = static_sched(64);
+        let mut slots = Vec::new();
+        // the middle request finishes first; neighbors run longer
+        for (id, out) in [(1u64, 8u64), (2, 3), (3, 8)] {
+            let slot = reqs.insert(Request::new(id, 4, out, 0.0));
+            s.enqueue(slot);
+            let p = s.next_batch(&reqs, &pm, &slo);
+            s.complete_iteration(&p, &mut reqs, 0.1);
+            slots.push(slot);
+        }
+        let p = s.next_batch(&reqs, &pm, &slo);
+        let fin = s.complete_iteration(&p, &mut reqs, 0.2);
+        assert_eq!(fin, vec![slots[1]]);
+        // survivors keep their relative order and their ctxs
+        let p = s.next_batch(&reqs, &pm, &slo);
+        assert_eq!(p.decodes, vec![slots[0], slots[2]]);
+        assert_eq!(s.decode_ctxs(), &[reqs[slots[0]].kv_len(), reqs[slots[2]].kv_len()]);
     }
 }

@@ -80,6 +80,31 @@ impl PipelineTimeline {
             *f = f.max(t);
         }
     }
+
+    /// Allocation-free [`Self::flow`]: identical stage math, but returns
+    /// only `(first_stage_exit, last_stage_exit)` instead of materializing
+    /// the per-stage exit vector — the simulator's hot loop needs nothing
+    /// else.
+    pub fn flow_compact<F: Fn(usize) -> f64>(
+        &mut self,
+        ready: f64,
+        stage_time: F,
+        hop_s: f64,
+    ) -> (f64, f64) {
+        let mut avail = ready;
+        let mut first = ready;
+        let mut exit = ready;
+        for s in 0..self.stage_free.len() {
+            let enter = avail.max(self.stage_free[s]);
+            exit = enter + stage_time(s);
+            self.stage_free[s] = exit;
+            if s == 0 {
+                first = exit;
+            }
+            avail = exit + hop_s;
+        }
+        (first, exit)
+    }
 }
 
 /// Prefill completion times under the **dense SPP schedule**: chunks are
@@ -181,6 +206,25 @@ mod tests {
             }
             // dense is never slower than conventional
             assert!(*dense.last().unwrap() <= conv.last().unwrap() + 1e-12);
+        });
+    }
+
+    #[test]
+    fn flow_compact_matches_flow_exactly() {
+        check("flow_compact == flow", 200, |rng| {
+            let stages = rng.range_u64(1, 8) as usize;
+            let mut a = PipelineTimeline::new(stages, 0.0);
+            let mut b = PipelineTimeline::new(stages, 0.0);
+            for _ in 0..rng.range_u64(1, 20) {
+                let ready = rng.range_f64(0.0, 5.0);
+                let t = rng.range_f64(0.01, 2.0);
+                let hop = rng.range_f64(0.0, 0.1);
+                let r = a.flow(ready, |_| t, hop);
+                let (first, exit) = b.flow_compact(ready, |_| t, hop);
+                assert_eq!(r.first_stage_exit().to_bits(), first.to_bits());
+                assert_eq!(r.exit().to_bits(), exit.to_bits());
+                assert_eq!(a.stage0_free().to_bits(), b.stage0_free().to_bits());
+            }
         });
     }
 

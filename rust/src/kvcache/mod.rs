@@ -9,7 +9,7 @@
 //! * KVP shard ownership: a long request's cache spans multiple worker
 //!   groups along the sequence dimension (section 4.4, Fig. 10).
 
-use std::collections::BTreeMap;
+use crate::util::slotvec::SlotVec;
 
 pub type RequestId = u64;
 pub type GroupId = u32;
@@ -80,11 +80,14 @@ struct BlockTable {
     dirty_blocks: u64,
 }
 
-/// KV-cache manager for a single worker group.
+/// KV-cache manager for a single worker group. Requests are expected to be
+/// identified by dense ids (arena slots); block tables live in a flat
+/// slot-indexed vector rather than a `BTreeMap`, so the per-iteration
+/// append/ship accounting is pointer-chase-free.
 #[derive(Debug, Clone)]
 pub struct KvManager {
     pub pool: BlockPool,
-    tables: BTreeMap<RequestId, BlockTable>,
+    tables: SlotVec<BlockTable>,
     /// Cumulative page-table entries shipped to workers (delta scheme).
     pub delta_entries_shipped: u64,
     /// What the naive full-copy scheme would have shipped.
@@ -95,25 +98,32 @@ impl KvManager {
     pub fn new(pool: BlockPool) -> KvManager {
         KvManager {
             pool,
-            tables: BTreeMap::new(),
+            tables: SlotVec::new(),
             delta_entries_shipped: 0,
             full_entries_shipped: 0,
         }
     }
 
     pub fn onboard(&mut self, id: RequestId) {
-        self.tables.entry(id).or_default();
+        // Ids index a dense vector: a sparse huge id would resize it to the
+        // id's magnitude. Fail loudly instead of aborting on OOM.
+        assert!(
+            id < (1 << 28),
+            "KvManager ids must be dense slot-like ids (got {id}); \
+             map external request ids through a RequestArena slot first"
+        );
+        self.tables.get_or_insert_default(id as usize);
     }
 
     pub fn is_onboarded(&self, id: RequestId) -> bool {
-        self.tables.contains_key(&id)
+        self.tables.contains(id as usize)
     }
 
     /// Append `tokens` of KV for request `id`, allocating blocks as needed.
     pub fn append(&mut self, id: RequestId, tokens: u64) -> Result<(), KvError> {
         let t = self
             .tables
-            .get_mut(&id)
+            .get_mut(id as usize)
             .ok_or(KvError::UnknownRequest(id))?;
         let new_tokens = t.tokens + tokens;
         let need_blocks = new_tokens.div_ceil(self.pool.block_tokens);
@@ -128,16 +138,19 @@ impl KvManager {
     }
 
     pub fn tokens(&self, id: RequestId) -> u64 {
-        self.tables.get(&id).map(|t| t.tokens).unwrap_or(0)
+        self.tables.get(id as usize).map(|t| t.tokens).unwrap_or(0)
     }
 
     pub fn blocks(&self, id: RequestId) -> u64 {
-        self.tables.get(&id).map(|t| t.blocks).unwrap_or(0)
+        self.tables.get(id as usize).map(|t| t.blocks).unwrap_or(0)
     }
 
     /// Free a finished/preempted request's cache.
     pub fn release(&mut self, id: RequestId) -> Result<(), KvError> {
-        let t = self.tables.remove(&id).ok_or(KvError::UnknownRequest(id))?;
+        let t = self
+            .tables
+            .remove(id as usize)
+            .ok_or(KvError::UnknownRequest(id))?;
         self.pool.release(t.blocks);
         Ok(())
     }
@@ -146,8 +159,8 @@ impl KvManager {
     /// requests: the delta scheme ships only dirty entries; the naive scheme
     /// re-ships every table every iteration (section 5).
     pub fn account_table_shipment(&mut self, active: &[RequestId]) {
-        for id in active {
-            if let Some(t) = self.tables.get_mut(id) {
+        for &id in active {
+            if let Some(t) = self.tables.get_mut(id as usize) {
                 self.delta_entries_shipped += t.dirty_blocks;
                 t.dirty_blocks = 0;
                 self.full_entries_shipped += t.blocks;

@@ -1,7 +1,14 @@
 //! Serving metrics: TTFT / TBT percentile recorders, per-iteration traces
 //! (the Fig. 19 timeline), and MFU/MBU aggregation (Figs. 20–21).
+//!
+//! Ingestion is O(1) amortized: percentile sorting is deferred to query
+//! time, and the wall-clock span is tracked incrementally instead of being
+//! recomputed from the iteration trace. For multi-million-request runs,
+//! [`Metrics::streaming`] bounds memory by reservoir-sampling the latency
+//! populations and dropping the per-iteration trace (aggregate counters
+//! are always exact).
 
-use crate::util::stats::Samples;
+use crate::util::stats::{P2Quantile, Samples};
 
 /// One scheduler iteration's record (drives Figs. 8, 19, 22).
 #[derive(Debug, Clone, PartialEq)]
@@ -18,16 +25,50 @@ pub struct IterRecord {
     pub active_gpus: u32,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     pub ttft: Samples,
     pub tbt: Samples,
+    /// Full iteration trace; empty when `keep_iter_records` is off.
     pub iters: Vec<IterRecord>,
+    /// Retain per-iteration records (figure reproduction needs them; the
+    /// million-request throughput benches turn this off).
+    pub keep_iter_records: bool,
     pub mfu: Samples,
     pub mbu: Samples,
     pub finished_requests: u64,
     pub decode_tokens: u64,
     pub prefill_tokens: u64,
+    /// Iterations recorded (exact even when the trace is dropped).
+    pub n_iters: u64,
+    /// Streaming-mode P² estimator for TBT p99: tracks the tail over the
+    /// *full* sample stream, where a small reservoir holds too few tail
+    /// points to resolve it.
+    tbt_p99_stream: Option<P2Quantile>,
+    /// Start time of the first recorded iteration (t - dur).
+    first_iter_start: Option<f64>,
+    /// Completion time of the last recorded iteration.
+    last_iter_t: f64,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics {
+            ttft: Samples::new(),
+            tbt: Samples::new(),
+            iters: Vec::new(),
+            keep_iter_records: true,
+            mfu: Samples::new(),
+            mbu: Samples::new(),
+            finished_requests: 0,
+            decode_tokens: 0,
+            prefill_tokens: 0,
+            n_iters: 0,
+            tbt_p99_stream: None,
+            first_iter_start: None,
+            last_iter_t: 0.0,
+        }
+    }
 }
 
 impl Metrics {
@@ -35,10 +76,32 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Bounded-memory recorder for huge runs: latency/utilization samples
+    /// are reservoir-capped at `reservoir` and the iteration trace is not
+    /// retained. Counters, span, and throughput stay exact.
+    pub fn streaming(reservoir: usize, seed: u64) -> Metrics {
+        Metrics {
+            ttft: Samples::reservoir(reservoir, seed ^ 0x7474_6674),
+            tbt: Samples::reservoir(reservoir, seed ^ 0x0074_6274),
+            mfu: Samples::reservoir(reservoir, seed ^ 0x0066_7564),
+            mbu: Samples::reservoir(reservoir, seed ^ 0x0062_7564),
+            keep_iter_records: false,
+            tbt_p99_stream: Some(P2Quantile::new(0.99)),
+            ..Metrics::default()
+        }
+    }
+
     pub fn record_iter(&mut self, rec: IterRecord) {
         self.decode_tokens += rec.n_decodes as u64;
         self.prefill_tokens += rec.chunk.unwrap_or(0);
-        self.iters.push(rec);
+        self.n_iters += 1;
+        if self.first_iter_start.is_none() {
+            self.first_iter_start = Some(rec.t - rec.dur_s);
+        }
+        self.last_iter_t = rec.t;
+        if self.keep_iter_records {
+            self.iters.push(rec);
+        }
     }
 
     pub fn record_ttft(&mut self, s: f64) {
@@ -47,13 +110,16 @@ impl Metrics {
 
     pub fn record_tbt(&mut self, s: f64) {
         self.tbt.add(s);
+        if let Some(q) = &mut self.tbt_p99_stream {
+            q.add(s);
+        }
     }
 
     /// Wall-clock span of the recorded iterations.
     pub fn span_s(&self) -> f64 {
-        match (self.iters.first(), self.iters.last()) {
-            (Some(a), Some(b)) => b.t - (a.t - a.dur_s),
-            _ => 0.0,
+        match self.first_iter_start {
+            Some(start) => self.last_iter_t - start,
+            None => 0.0,
         }
     }
 
@@ -68,13 +134,19 @@ impl Metrics {
 
     pub fn summary(&mut self) -> MetricsSummary {
         MetricsSummary {
-            n_ttft: self.ttft.len(),
+            n_ttft: self.ttft.count() as usize,
             ttft_p50: self.ttft.median(),
             ttft_p95: self.ttft.p95(),
-            n_tbt: self.tbt.len(),
+            n_tbt: self.tbt.count() as usize,
             tbt_p50: self.tbt.median(),
             tbt_p95: self.tbt.p95(),
-            tbt_p99: self.tbt.p99(),
+            // In streaming mode the P² estimator saw every sample; the
+            // reservoir's sparse tail is the fallback-only path. Exact mode
+            // (no estimator) is untouched — bit-identical to the reference.
+            tbt_p99: match &self.tbt_p99_stream {
+                Some(q) if q.count() > 0 => q.value(),
+                _ => self.tbt.p99(),
+            },
             tbt_max: self.tbt.max(),
             finished: self.finished_requests,
             decode_tps: self.decode_tokens_per_s(),
@@ -123,6 +195,7 @@ mod tests {
         });
         assert_eq!(m.prefill_tokens, 512);
         assert_eq!(m.decode_tokens, 12);
+        assert_eq!(m.n_iters, 2);
         assert!((m.span_s() - 2.0).abs() < 1e-12);
         assert!((m.decode_tokens_per_s() - 6.0).abs() < 1e-12);
     }
@@ -138,5 +211,32 @@ mod tests {
         assert!((s.tbt_p50 - 0.0505).abs() < 1e-3);
         assert!(s.tbt_p95 > s.tbt_p50);
         assert_eq!(s.n_ttft, 1);
+    }
+
+    #[test]
+    fn streaming_mode_bounds_memory_keeps_counters_exact() {
+        let mut m = Metrics::streaming(256, 7);
+        for i in 0..10_000u64 {
+            m.record_iter(IterRecord {
+                t: i as f64 + 1.0,
+                dur_s: 1.0,
+                chunk: Some(64),
+                n_decodes: 2,
+                active_gpus: 8,
+            });
+            m.record_tbt(0.01 + (i % 100) as f64 * 1e-4);
+        }
+        assert!(m.iters.is_empty());
+        assert_eq!(m.n_iters, 10_000);
+        assert_eq!(m.decode_tokens, 20_000);
+        assert_eq!(m.prefill_tokens, 640_000);
+        assert!((m.span_s() - 10_000.0).abs() < 1e-9);
+        assert!(m.tbt.len() <= 256);
+        let s = m.summary();
+        assert_eq!(s.n_tbt, 10_000);
+        // p50 of the uniform 0.01..0.02 ramp, estimated from the reservoir
+        assert!((s.tbt_p50 - 0.015).abs() < 0.002, "p50={}", s.tbt_p50);
+        // p99 comes from the full-stream P² estimator in streaming mode
+        assert!((s.tbt_p99 - 0.0199).abs() < 0.0005, "p99={}", s.tbt_p99);
     }
 }

@@ -57,6 +57,19 @@ impl BatchShape {
     pub fn is_empty(&self) -> bool {
         self.prefills.is_empty() && self.decodes.is_empty()
     }
+
+    /// Empty the shape, keeping the allocations for reuse (the simulator
+    /// refills one scratch shape per group per iteration).
+    pub fn clear(&mut self) {
+        self.prefills.clear();
+        self.decodes.clear();
+    }
+
+    /// Append all of `other`'s work items to this shape.
+    pub fn extend_from(&mut self, other: &BatchShape) {
+        self.prefills.extend_from_slice(&other.prefills);
+        self.decodes.extend_from_slice(&other.decodes);
+    }
 }
 
 /// Decomposed execution time for one iteration (seconds).

@@ -17,16 +17,50 @@
 //!   (autoregressive dependency);
 //! * cooperative iterations (sharded long request) complete at the max of
 //!   the participating groups' exits, plus the KVP merge charge.
+//!
+//! # Simulator-core architecture (arena + allocation-free iteration)
+//!
+//! The hot loop is built to sustain >10⁶ iterations per wall-second on
+//! million-request traces (the scale at which tail percentiles stabilize):
+//!
+//! * **Arena request store** — requests live in a dense
+//!   [`RequestArena`](crate::coordinator::RequestArena) and every
+//!   coordinator structure (scheduler queues, router placement, KVP shard
+//!   maps) refers to them by [`Slot`] handle: request touches are array
+//!   indexing, not `BTreeMap` descents, and retired slots are recycled so
+//!   memory tracks *concurrency*, not trace length.
+//! * **Allocation-free iteration** — `step()` reuses per-group scratch
+//!   (`BatchPlan`s, one `BatchShape`, exit/context buffers) via the
+//!   scheduler's `next_batch_into`/`batch_shape_into`/
+//!   `complete_iteration_into` APIs; the steady state performs no heap
+//!   allocation per iteration. Decode contexts are tracked incrementally by
+//!   each scheduler instead of being rebuilt from the request map.
+//! * **Event-driven time advance** — when an instant has no runnable work
+//!   the clock jumps to the next event (arrival or earliest stage-0 free
+//!   time) instead of spinning in 1e-6 s bumps.
+//! * **Streaming metrics** — `SimOptions::metrics_reservoir` switches
+//!   [`Metrics`] to reservoir-sampled percentiles with the per-iteration
+//!   trace dropped, bounding memory on multi-million-sample runs; by
+//!   default metrics are exact and bit-identical to the pre-arena
+//!   simulator (asserted by `tests/sim_golden.rs` against
+//!   [`reference::ReferenceSimulation`]).
+//!
+//! Benches: `sim/mixed 100K-prefill + 8 decodes` (and its `[reference]`
+//! twin) plus `sim/throughput decode-stream` and `sim/million mixed` live
+//! in `benches/hotpath.rs`, which records results to `BENCH_sim.json`.
 
-use std::collections::{BTreeMap, VecDeque};
+pub mod reference;
+pub mod throughput;
+
+use std::collections::VecDeque;
 
 use crate::config::DeploymentConfig;
 use crate::coordinator::chunking::ChunkPolicy;
 use crate::coordinator::request::{Phase, Request};
-use crate::coordinator::scheduler::Scheduler;
+use crate::coordinator::scheduler::{BatchPlan, Scheduler};
 use crate::coordinator::spp::PipelineTimeline;
-use crate::coordinator::{AdaptiveChunk, KvpManager, Router, StaticChunk, Topology};
-use crate::kvcache::RequestId;
+use crate::coordinator::{AdaptiveChunk, KvpManager, RequestArena, Router, Slot, StaticChunk, Topology};
+use crate::kvcache::{GroupId, RequestId};
 use crate::metrics::{IterRecord, Metrics};
 use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
 use crate::workload::RequestSpec;
@@ -39,6 +73,13 @@ pub struct SimOptions {
     pub long_threshold: u64,
     /// Stop after this much simulated time (safety valve).
     pub horizon_s: f64,
+    /// Keep finished `Request` records for post-run inspection
+    /// (`Simulation::request`). Turn off for million-request runs so
+    /// memory tracks concurrency, not trace length.
+    pub retain_finished: bool,
+    /// `Some(cap)`: reservoir-sample latency metrics at `cap` and drop the
+    /// per-iteration trace (see [`Metrics::streaming`]). `None`: exact.
+    pub metrics_reservoir: Option<usize>,
 }
 
 impl Default for SimOptions {
@@ -46,6 +87,8 @@ impl Default for SimOptions {
         SimOptions {
             long_threshold: 16_384,
             horizon_s: 86_400.0,
+            retain_finished: true,
+            metrics_reservoir: None,
         }
     }
 }
@@ -58,17 +101,28 @@ pub struct Simulation {
     policy: Box<dyn ChunkPolicy>,
     topo: Topology,
 
-    requests: BTreeMap<RequestId, Request>,
+    requests: RequestArena,
+    /// Finished requests, retained when `opts.retain_finished`.
+    retired: Vec<Request>,
     pending: VecDeque<RequestSpec>,
     /// Per-group short-request schedulers.
     scheds: Vec<Scheduler>,
     timelines: Vec<PipelineTimeline>,
-    long_queue: VecDeque<RequestId>,
-    active_long: Option<RequestId>,
+    long_queue: VecDeque<Slot>,
+    active_long: Option<Slot>,
     kvp_mgr: KvpManager,
     router: Router,
     pub metrics: Metrics,
     now: f64,
+
+    // ---- per-iteration scratch (reused across steps) --------------------
+    group_plans: Vec<BatchPlan>,
+    shape: BatchShape,
+    combined: BatchShape,
+    exits: Vec<f64>,
+    long_ctxs: Vec<u64>,
+    participating: Vec<(GroupId, u64)>,
+    finished_buf: Vec<Slot>,
 }
 
 impl Simulation {
@@ -85,12 +139,17 @@ impl Simulation {
         pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let layers_per_stage = dep.model.n_layers / dep.parallel.spp.max(1);
         let topo = Topology::new(dep.parallel, &dep.hardware);
+        let metrics = match opts.metrics_reservoir {
+            Some(cap) => Metrics::streaming(cap, 0x6d65_6468_61u64),
+            None => Metrics::new(),
+        };
         Simulation {
             pm,
             layers_per_stage,
             policy,
             topo,
-            requests: BTreeMap::new(),
+            requests: RequestArena::new(),
+            retired: Vec::new(),
             pending: pending.into(),
             scheds: (0..kvp_groups)
                 .map(|_| {
@@ -107,8 +166,15 @@ impl Simulation {
             active_long: None,
             kvp_mgr: KvpManager::new(dep.scheduler.kvp_onboard_threshold, kvp_groups),
             router: Router::new(kvp_groups),
-            metrics: Metrics::new(),
+            metrics,
             now: 0.0,
+            group_plans: (0..kvp_groups).map(|_| BatchPlan::default()).collect(),
+            shape: BatchShape::default(),
+            combined: BatchShape::default(),
+            exits: vec![0.0; kvp_groups as usize],
+            long_ctxs: Vec::new(),
+            participating: Vec::new(),
+            finished_buf: Vec::new(),
             dep,
             opts,
         }
@@ -121,15 +187,15 @@ impl Simulation {
             }
             let spec = self.pending.pop_front().unwrap();
             let r = Request::new(spec.id, spec.prompt_len, spec.max_new_tokens, spec.arrival_s);
+            let slot = self.requests.insert(r);
             if spec.prompt_len > self.opts.long_threshold {
-                let g = self.router.route(spec.id, spec.prompt_len);
-                self.kvp_mgr.onboard_request(spec.id, g, self.now);
-                self.long_queue.push_back(spec.id);
+                let g = self.router.route(slot, spec.prompt_len);
+                self.kvp_mgr.onboard_request(slot, spec.id, g, self.now);
+                self.long_queue.push_back(slot);
             } else {
-                let g = self.router.route(spec.id, spec.prompt_len);
-                self.scheds[g as usize].enqueue(spec.id);
+                let g = self.router.route(slot, spec.prompt_len);
+                self.scheds[g as usize].enqueue(slot);
             }
-            self.requests.insert(spec.id, r);
         }
         if self.active_long.is_none() {
             self.active_long = self.long_queue.pop_front();
@@ -145,6 +211,37 @@ impl Simulation {
     /// Local KV length the group's kernels scan for a short request.
     fn short_local_kv(r: &Request) -> u64 {
         r.kv_len().max(1)
+    }
+
+    /// Retire a finished request: recycle its arena slot, optionally
+    /// keeping the record for post-run inspection.
+    fn retire(&mut self, slot: Slot) {
+        let r = self.requests.remove(slot);
+        if self.opts.retain_finished {
+            self.retired.push(r);
+        }
+    }
+
+    /// The next instant anything can happen: the next arrival or the
+    /// earliest pipeline stage-0 free time beyond `now`. Replaces the
+    /// degenerate 1e-6 s busy-wait bumps of the pre-arena simulator; the
+    /// tiny bump survives only as a last-resort guarantee of progress.
+    fn next_event_time(&self) -> f64 {
+        let mut t = f64::INFINITY;
+        if let Some(spec) = self.pending.front() {
+            t = t.min(spec.arrival_s);
+        }
+        for tl in &self.timelines {
+            let f = tl.stage0_free();
+            if f > self.now {
+                t = t.min(f);
+            }
+        }
+        if t.is_finite() && t > self.now {
+            t
+        } else {
+            self.now + 1e-6
+        }
     }
 
     /// Run the simulation to completion (or horizon). Returns total time.
@@ -177,100 +274,113 @@ impl Simulation {
         let slo = self.dep.slo;
 
         // ---- long-request work selection -------------------------------
-        let long_id = self.active_long;
+        let long_slot = self.active_long;
         let mut long_chunk: Option<u64> = None;
         let mut long_decode = false;
-        if let Some(id) = long_id {
-            let r = &self.requests[&id];
+        if let Some(slot) = long_slot {
+            let r = self.requests.get(slot);
             match r.phase {
                 Phase::Queued | Phase::Prefilling => {
-                    // decode contexts seen by the chunk policy: the busiest
-                    // group's decode load (binding constraint).
-                    let decode_ctxs: Vec<u64> = (0..n_groups)
-                        .map(|_| 0u64)
-                        .collect::<Vec<_>>()
-                        .iter()
-                        .enumerate()
-                        .flat_map(|(g, _)| self.group_decode_ctxs(g))
-                        .collect();
-                    let c = self.policy.next_chunk(
-                        r.kv_len(),
-                        r.remaining_prefill(),
-                        &decode_ctxs,
-                        &self.pm,
-                        &slo,
-                    );
-                    long_chunk = Some(c.max(1).min(r.remaining_prefill()));
+                    // Decode contexts seen by the chunk policy: the resident
+                    // decode load across the cooperating groups, gathered
+                    // from the schedulers' incrementally-tracked context
+                    // lists (no per-request scan, no per-step allocation).
+                    let (kv_done, remaining) = (r.kv_len(), r.remaining_prefill());
+                    self.long_ctxs.clear();
+                    for sched in &self.scheds {
+                        self.long_ctxs.extend_from_slice(sched.decode_ctxs());
+                    }
+                    let c = self
+                        .policy
+                        .next_chunk(kv_done, remaining, &self.long_ctxs, &self.pm, &slo);
+                    long_chunk = Some(c.max(1).min(remaining));
                 }
                 Phase::Decoding => long_decode = true,
                 Phase::Finished => {}
             }
         }
         let long_nq = long_chunk.unwrap_or(if long_decode { 1 } else { 0 });
-        let participating: Vec<(u32, u64)> = match long_id {
-            Some(id) if long_nq > 0 => self.kvp_mgr.local_lengths(id),
-            _ => Vec::new(),
-        };
+        self.participating.clear();
+        if let Some(slot) = long_slot {
+            if long_nq > 0 {
+                if let Some(m) = self.kvp_mgr.shard_map(slot) {
+                    for &(g, _, n) in &m.shards {
+                        self.participating.push((g, n));
+                    }
+                }
+            }
+        }
 
         // ---- per-group batch formation ----------------------------------
-        let mut group_plans = Vec::with_capacity(n_groups);
         for g in 0..n_groups {
-            let plan = self.scheds[g].next_batch(&self.requests, &self.pm, &slo, Self::short_local_kv);
-            group_plans.push(plan);
+            self.scheds[g].next_batch_into(
+                &self.requests,
+                &self.pm,
+                &slo,
+                &mut self.group_plans[g],
+            );
         }
 
         // ---- build shapes and flow through pipelines ---------------------
         let mut any_decode = long_decode;
-        let mut exits = vec![self.now; n_groups];
+        self.exits.resize(n_groups, self.now);
+        self.exits.fill(self.now);
         let mut max_stage0_exit = self.now;
         let mut worked = false;
-        let mut combined = BatchShape::default();
+        self.combined.clear();
         for g in 0..n_groups {
-            let mut shape = self.scheds[g].batch_shape(&group_plans[g], &self.requests, Self::short_local_kv);
+            self.scheds[g].batch_shape_into(
+                &self.group_plans[g],
+                &self.requests,
+                Self::short_local_kv,
+                &mut self.shape,
+            );
             // Long-request share on this group: partial attention over the
             // local shard (queries broadcast to every participating group).
-            if let Some(&(_, local)) = participating.iter().find(|&&(gg, _)| gg as usize == g) {
+            if let Some(&(_, local)) = self
+                .participating
+                .iter()
+                .find(|&&(gg, _)| gg as usize == g)
+            {
                 if let Some(c) = long_chunk {
-                    shape.prefills.push(PrefillWork {
+                    self.shape.prefills.push(PrefillWork {
                         chunk: c,
                         kv_len: local + c,
                     });
                 } else if long_decode {
-                    shape.decodes.push(DecodeWork {
+                    self.shape.decodes.push(DecodeWork {
                         kv_len: local.max(1),
                     });
                 }
             }
-            if shape.is_empty() {
+            if self.shape.is_empty() {
                 continue;
             }
             worked = true;
-            any_decode |= !shape.decodes.is_empty();
-            combined.prefills.extend(shape.prefills.iter().copied());
-            combined.decodes.extend(shape.decodes.iter().copied());
-            let st = self.pm.stage_time(&shape, self.layers_per_stage).total();
-            let hop = self.pm.stage_hop_s(shape.tokens());
-            let dense_ok = shape.decodes.is_empty();
+            any_decode |= !self.shape.decodes.is_empty();
+            self.combined.extend_from(&self.shape);
+            let st = self.pm.stage_time(&self.shape, self.layers_per_stage).total();
+            let hop = self.pm.stage_hop_s(self.shape.tokens());
+            let dense_ok = self.shape.decodes.is_empty();
             let ready = if dense_ok {
                 self.timelines[g].stage0_free().max(self.now)
             } else {
                 self.now
             };
-            let res = self.timelines[g].flow(ready, |_| st, hop);
-            max_stage0_exit = max_stage0_exit.max(res.first_stage_exit());
-            exits[g] = res.exit();
+            let (first_exit, exit) = self.timelines[g].flow_compact(ready, |_| st, hop);
+            max_stage0_exit = max_stage0_exit.max(first_exit);
+            self.exits[g] = exit;
         }
 
         if !worked {
-            // nothing runnable this instant (e.g. long queue only, already
-            // finished): bump time slightly to make progress.
-            self.now += 1e-6;
+            // nothing runnable this instant: jump to the next event.
+            self.now = self.next_event_time();
             return;
         }
 
-        let mut iter_end = exits.iter().cloned().fold(self.now, f64::max);
+        let mut iter_end = self.exits.iter().cloned().fold(self.now, f64::max);
         // KVP merge charge for cooperative work.
-        if participating.len() > 1 && long_nq > 0 {
+        if self.participating.len() > 1 && long_nq > 0 {
             iter_end += self.pm.kvp_merge_s(long_nq);
         }
 
@@ -279,100 +389,122 @@ impl Simulation {
         let dur = iter_end - self.now;
 
         // ---- bookkeeping --------------------------------------------------
-        // Short requests finish per their group plans.
+        // Short requests finish per their group plans (plans stay owned by
+        // the simulator's scratch, so no clone is needed to appease the
+        // borrow checker).
         for g in 0..n_groups {
-            let plan = group_plans[g].clone();
-            if plan.is_empty() {
+            if self.group_plans[g].is_empty() {
                 continue;
             }
-            let finished = self.scheds[g].complete_iteration(&plan, &mut self.requests, iter_end);
-            for id in finished {
-                let r = &self.requests[&id];
-                if let Some(t) = r.ttft() {
+            self.scheds[g].complete_iteration_into(
+                &self.group_plans[g],
+                &mut self.requests,
+                iter_end,
+                Self::short_local_kv,
+                &mut self.finished_buf,
+            );
+            for i in 0..self.finished_buf.len() {
+                let slot = self.finished_buf[i];
+                let (ttft, prompt_len) = {
+                    let r = self.requests.get(slot);
+                    for &s in &r.tbt_samples {
+                        self.metrics.record_tbt(s);
+                    }
+                    (r.ttft(), r.prompt_len)
+                };
+                if let Some(t) = ttft {
                     self.metrics.record_ttft(t);
                 }
-                for &s in &r.tbt_samples {
-                    self.metrics.record_tbt(s);
-                }
                 self.metrics.finished_requests += 1;
-                self.router.release(id, r.prompt_len);
+                self.router.release(slot, prompt_len);
+                self.retire(slot);
             }
         }
         // Long request progress.
-        if let Some(id) = long_id {
+        if let Some(slot) = long_slot {
             if let Some(c) = long_chunk {
-                let r = self.requests.get_mut(&id).unwrap();
+                let r = self.requests.get_mut(slot);
                 r.complete_chunk(c, iter_end);
-                self.kvp_mgr.append_tokens(id, c, iter_end);
-                if r.phase == Phase::Decoding || r.phase == Phase::Finished {
-                    if let Some(t) = r.ttft() {
+                let entered_decode = r.phase == Phase::Decoding || r.phase == Phase::Finished;
+                let ttft = r.ttft();
+                self.kvp_mgr.append_tokens(slot, c, iter_end);
+                if entered_decode {
+                    if let Some(t) = ttft {
                         self.metrics.record_ttft(t);
                     }
                 }
             } else if long_decode {
-                let r = self.requests.get_mut(&id).unwrap();
-                r.complete_decode(iter_end);
-                self.kvp_mgr.append_tokens(id, 1, iter_end);
+                self.requests.get_mut(slot).complete_decode(iter_end);
+                self.kvp_mgr.append_tokens(slot, 1, iter_end);
             }
-            let r = &self.requests[&id];
-            if r.is_finished() {
-                for &s in &r.tbt_samples {
-                    self.metrics.record_tbt(s);
+            let finished = {
+                let r = self.requests.get(slot);
+                if r.is_finished() {
+                    for &s in &r.tbt_samples {
+                        self.metrics.record_tbt(s);
+                    }
+                    Some(r.prompt_len)
+                } else {
+                    None
                 }
+            };
+            if let Some(prompt_len) = finished {
                 self.metrics.finished_requests += 1;
-                self.kvp_mgr.release(id);
-                self.router.release(id, r.prompt_len);
+                self.kvp_mgr.release(slot);
+                self.router.release(slot, prompt_len);
                 self.active_long = None;
+                self.retire(slot);
             }
         }
 
-        let active_gpus = match long_id {
-            Some(id) => self
+        let active_gpus = match long_slot {
+            Some(slot) => self
                 .topo
-                .gpus_active(self.kvp_mgr.active_groups(id).max(1)),
+                .gpus_active(self.kvp_mgr.active_groups(slot).max(1)),
             None => self.topo.parallel.workers_per_replica(),
         };
         if dur > 0.0 {
             self.metrics
                 .mfu
-                .add(self.pm.mfu(&combined, dur, active_gpus.max(1)));
+                .add(self.pm.mfu(&self.combined, dur, active_gpus.max(1)));
             self.metrics
                 .mbu
-                .add(self.pm.mbu(&combined, dur, active_gpus.max(1)));
+                .add(self.pm.mbu(&self.combined, dur, active_gpus.max(1)));
         }
         self.metrics.record_iter(IterRecord {
             t: iter_end,
             dur_s: dur,
             chunk: long_chunk.or_else(|| {
-                group_plans
+                self.group_plans
                     .iter()
                     .find_map(|p| p.prefill.map(|(_, c)| c))
             }),
-            n_decodes: combined.decodes.len(),
+            n_decodes: self.combined.decodes.len(),
             active_gpus,
         });
         self.now = t_next;
     }
 
-    fn group_decode_ctxs(&self, g: usize) -> Vec<u64> {
-        let slo = self.dep.slo;
-        // peek: decoding requests on this group's scheduler
-        let mut v = Vec::new();
-        let _ = (&slo, &mut v);
-        for (id, r) in &self.requests {
-            if r.phase == Phase::Decoding && self.router.group_of(*id) == Some(g as u32) {
-                v.push(r.kv_len().max(1));
-            }
-        }
-        v
-    }
-
+    /// Look up a request by its external id — live or (when
+    /// `opts.retain_finished`) retired. Linear scan; post-run inspection
+    /// only, never on the hot path.
     pub fn request(&self, id: RequestId) -> Option<&Request> {
-        self.requests.get(&id)
+        self.requests
+            .iter()
+            .map(|(_, r)| r)
+            .chain(self.retired.iter())
+            .find(|r| r.id == id)
     }
 
     pub fn kvp_onboard_log(&self) -> &[(f64, RequestId, u32)] {
         &self.kvp_mgr.onboard_log
+    }
+
+    /// High-water mark of concurrent requests (arena slots ever allocated)
+    /// — the number that bounds simulator memory, independent of trace
+    /// length.
+    pub fn arena_high_water(&self) -> usize {
+        self.requests.capacity()
     }
 }
 
@@ -497,5 +629,76 @@ mod tests {
         assert!(end >= 1_000.0);
         let r1 = sim.request(1).unwrap();
         assert!(r1.first_token_s.unwrap() >= 1_000.0);
+    }
+
+    #[test]
+    fn slots_recycle_under_churn() {
+        // 200 sequential short requests: concurrency stays tiny, so the
+        // arena's high-water mark must too.
+        let w: Vec<RequestSpec> = (0..200)
+            .map(|i| RequestSpec {
+                id: i,
+                prompt_len: 64,
+                max_new_tokens: 2,
+                arrival_s: i as f64 * 10.0, // far apart: never concurrent
+            })
+            .collect();
+        let mut opts = SimOptions::default();
+        opts.retain_finished = false;
+        let mut sim = Simulation::new(dep(8, 1, 1), w, opts);
+        sim.run();
+        assert_eq!(sim.metrics.finished_requests, 200);
+        assert!(sim.requests.is_empty());
+        assert!(
+            sim.requests.capacity() <= 4,
+            "arena grew to {} slots for sequential traffic",
+            sim.requests.capacity()
+        );
+    }
+
+    #[test]
+    fn streaming_metrics_match_exact_counters() {
+        let w = workload::long_plus_decodes(100_000, 8, 1_000, 64);
+        let run = |opts: SimOptions| {
+            let mut d = dep(8, 1, 1);
+            d.scheduler.adaptive_chunking = false;
+            d.scheduler.static_chunk = 2048;
+            let mut sim = Simulation::new(d, w.clone(), opts);
+            sim.run();
+            sim.metrics
+        };
+        let exact = run(SimOptions::default());
+        let mut lean_opts = SimOptions::default();
+        lean_opts.retain_finished = false;
+        lean_opts.metrics_reservoir = Some(64);
+        let lean = run(lean_opts);
+        // counters are exact in both modes
+        assert_eq!(exact.finished_requests, lean.finished_requests);
+        assert_eq!(exact.n_iters, lean.n_iters);
+        assert_eq!(exact.decode_tokens, lean.decode_tokens);
+        assert_eq!(exact.prefill_tokens, lean.prefill_tokens);
+        assert_eq!(exact.tbt.count(), lean.tbt.count());
+        assert!((exact.span_s() - lean.span_s()).abs() < 1e-12);
+        // the lean run dropped the trace and capped the reservoirs
+        assert!(lean.iters.is_empty() && !exact.iters.is_empty());
+        assert!(lean.tbt.len() <= 64);
+    }
+
+    #[test]
+    fn idle_gaps_jump_to_next_event() {
+        // two requests 1000s apart: the run must not spin through the gap
+        // (bounded iteration count implies the event jump worked)
+        let w = vec![
+            RequestSpec { id: 0, prompt_len: 100, max_new_tokens: 2, arrival_s: 0.0 },
+            RequestSpec { id: 1, prompt_len: 100, max_new_tokens: 2, arrival_s: 1_000.0 },
+        ];
+        let mut sim = Simulation::new(dep(8, 1, 1), w, SimOptions::default());
+        let end = sim.run();
+        assert!(end >= 1_000.0);
+        assert!(
+            sim.metrics.n_iters < 100,
+            "spun {} iterations across an idle gap",
+            sim.metrics.n_iters
+        );
     }
 }

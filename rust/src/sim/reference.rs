@@ -1,0 +1,503 @@
+//! Reference simulator: the pre-arena simulator core, kept verbatim in
+//! spirit as a semantics oracle.
+//!
+//! This is the map-based, allocate-per-iteration implementation the
+//! optimized core in [`super`] replaced: requests live in a
+//! `BTreeMap<RequestId, Request>`, every iteration builds fresh
+//! `BatchPlan`/`BatchShape` vectors, the decode-context list for the long
+//! request's chunk policy is rebuilt by scanning every request, finished
+//! decodes are dropped with an O(n·m) `contains` retain, and idle instants
+//! advance time by 1e-6 s bumps.
+//!
+//! It exists for two reasons:
+//! * **golden equivalence** — `tests/sim_golden.rs` asserts the optimized
+//!   simulator reproduces this implementation's `Metrics` bit-for-bit on
+//!   fixed workloads (the refactor changed the engineering, not the
+//!   simulated semantics);
+//! * **before/after measurement** — `benches/hotpath.rs` times both cores
+//!   on the same workloads and records the ratio in `BENCH_sim.json`.
+//!
+//! Keep this file boring: it should only ever change when the *simulated
+//! semantics* deliberately change, in lockstep with the optimized core.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::SimOptions;
+use crate::config::{DeploymentConfig, SloConfig};
+use crate::coordinator::chunking::ChunkPolicy;
+use crate::coordinator::request::{Phase, Request};
+use crate::coordinator::spp::PipelineTimeline;
+use crate::coordinator::{AdaptiveChunk, KvpManager, Router, Slot, StaticChunk, Topology};
+use crate::kvcache::RequestId;
+use crate::metrics::{IterRecord, Metrics};
+use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
+use crate::workload::RequestSpec;
+
+/// The pre-arena scheduler: map-keyed, allocating fresh plan vectors every
+/// iteration, O(n·m) finished-retain.
+struct RefScheduler {
+    policy: Box<dyn ChunkPolicy>,
+    max_batch: usize,
+    prefill_queue: VecDeque<RequestId>,
+    decoding: Vec<RequestId>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct RefBatchPlan {
+    prefill: Option<(RequestId, u64)>,
+    decodes: Vec<RequestId>,
+}
+
+impl RefBatchPlan {
+    fn is_empty(&self) -> bool {
+        self.prefill.is_none() && self.decodes.is_empty()
+    }
+}
+
+impl RefScheduler {
+    fn new(policy: Box<dyn ChunkPolicy>, max_batch: usize) -> RefScheduler {
+        RefScheduler {
+            policy,
+            max_batch,
+            prefill_queue: VecDeque::new(),
+            decoding: Vec::new(),
+        }
+    }
+
+    fn enqueue(&mut self, id: RequestId) {
+        self.prefill_queue.push_back(id);
+    }
+
+    fn has_work(&self) -> bool {
+        !self.prefill_queue.is_empty() || !self.decoding.is_empty()
+    }
+
+    fn next_batch<F: Fn(&Request) -> u64>(
+        &mut self,
+        requests: &BTreeMap<RequestId, Request>,
+        pm: &PerfModel,
+        slo: &SloConfig,
+        local_kv: F,
+    ) -> RefBatchPlan {
+        let decodes: Vec<RequestId> = self
+            .decoding
+            .iter()
+            .copied()
+            .take(self.max_batch)
+            .collect();
+        let decode_ctxs: Vec<u64> = decodes
+            .iter()
+            .map(|id| local_kv(&requests[id]).max(1))
+            .collect();
+        let prefill = self.prefill_queue.front().and_then(|&id| {
+            let r = &requests[&id];
+            let remaining = r.remaining_prefill();
+            if remaining == 0 {
+                return None;
+            }
+            let c = self
+                .policy
+                .next_chunk(r.kv_len(), remaining, &decode_ctxs, pm, slo);
+            Some((id, c.max(1).min(remaining)))
+        });
+        RefBatchPlan { prefill, decodes }
+    }
+
+    fn batch_shape<F: Fn(&Request) -> u64>(
+        &self,
+        plan: &RefBatchPlan,
+        requests: &BTreeMap<RequestId, Request>,
+        local_kv: F,
+    ) -> BatchShape {
+        let mut shape = BatchShape::default();
+        if let Some((id, c)) = plan.prefill {
+            let r = &requests[&id];
+            shape.prefills.push(PrefillWork {
+                chunk: c,
+                kv_len: local_kv(r) + c,
+            });
+        }
+        for id in &plan.decodes {
+            shape.decodes.push(DecodeWork {
+                kv_len: local_kv(&requests[id]).max(1),
+            });
+        }
+        shape
+    }
+
+    fn complete_iteration(
+        &mut self,
+        plan: &RefBatchPlan,
+        requests: &mut BTreeMap<RequestId, Request>,
+        t: f64,
+    ) -> Vec<RequestId> {
+        let mut finished = Vec::new();
+        if let Some((id, c)) = plan.prefill {
+            let r = requests.get_mut(&id).expect("prefill req");
+            r.complete_chunk(c, t);
+            match r.phase {
+                Phase::Decoding => {
+                    self.prefill_queue.pop_front();
+                    self.decoding.push(id);
+                }
+                Phase::Finished => {
+                    self.prefill_queue.pop_front();
+                    finished.push(id);
+                }
+                _ => {}
+            }
+        }
+        for &id in &plan.decodes {
+            let r = requests.get_mut(&id).expect("decode req");
+            r.complete_decode(t);
+            if r.is_finished() {
+                finished.push(id);
+            }
+        }
+        // the quadratic retain the optimized scheduler replaced
+        self.decoding.retain(|id| !finished.contains(id));
+        finished
+    }
+}
+
+/// The pre-arena simulator. External `RequestId`s double as the slot
+/// handles handed to the (slot-keyed) router and KVP manager, so workloads
+/// must use ids < `u32::MAX` — true of every generator in this repo.
+pub struct ReferenceSimulation {
+    pub dep: DeploymentConfig,
+    pub opts: SimOptions,
+    pm: PerfModel,
+    layers_per_stage: u32,
+    policy: Box<dyn ChunkPolicy>,
+    topo: Topology,
+
+    requests: BTreeMap<RequestId, Request>,
+    pending: VecDeque<RequestSpec>,
+    scheds: Vec<RefScheduler>,
+    timelines: Vec<PipelineTimeline>,
+    long_queue: VecDeque<RequestId>,
+    active_long: Option<RequestId>,
+    kvp_mgr: KvpManager,
+    router: Router,
+    pub metrics: Metrics,
+    now: f64,
+}
+
+fn slot_of(id: RequestId) -> Slot {
+    debug_assert!(id < u32::MAX as u64, "reference sim needs small ids");
+    id as Slot
+}
+
+impl ReferenceSimulation {
+    pub fn new(
+        dep: DeploymentConfig,
+        workload: Vec<RequestSpec>,
+        opts: SimOptions,
+    ) -> ReferenceSimulation {
+        dep.validate().expect("invalid deployment");
+        let pm = PerfModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
+        let kvp_groups = dep.parallel.kvp.max(1);
+        let policy: Box<dyn ChunkPolicy> = if dep.scheduler.adaptive_chunking {
+            Box::new(AdaptiveChunk::new(dep.scheduler.chunk_sizes.clone()))
+        } else {
+            Box::new(StaticChunk(dep.scheduler.static_chunk))
+        };
+        let mut pending: Vec<RequestSpec> = workload;
+        pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        let layers_per_stage = dep.model.n_layers / dep.parallel.spp.max(1);
+        let topo = Topology::new(dep.parallel, &dep.hardware);
+        ReferenceSimulation {
+            pm,
+            layers_per_stage,
+            policy,
+            topo,
+            requests: BTreeMap::new(),
+            pending: pending.into(),
+            scheds: (0..kvp_groups)
+                .map(|_| {
+                    RefScheduler::new(
+                        Box::new(StaticChunk(dep.scheduler.static_chunk)),
+                        dep.scheduler.max_batch_size,
+                    )
+                })
+                .collect(),
+            timelines: (0..kvp_groups)
+                .map(|_| PipelineTimeline::new(dep.parallel.spp.max(1) as usize, 0.0))
+                .collect(),
+            long_queue: VecDeque::new(),
+            active_long: None,
+            kvp_mgr: KvpManager::new(dep.scheduler.kvp_onboard_threshold, kvp_groups),
+            router: Router::new(kvp_groups),
+            metrics: Metrics::new(),
+            now: 0.0,
+            dep,
+            opts,
+        }
+    }
+
+    fn admit_arrivals(&mut self) {
+        while let Some(spec) = self.pending.front() {
+            if spec.arrival_s > self.now {
+                break;
+            }
+            let spec = self.pending.pop_front().unwrap();
+            let r = Request::new(spec.id, spec.prompt_len, spec.max_new_tokens, spec.arrival_s);
+            if spec.prompt_len > self.opts.long_threshold {
+                let g = self.router.route(slot_of(spec.id), spec.prompt_len);
+                self.kvp_mgr
+                    .onboard_request(slot_of(spec.id), spec.id, g, self.now);
+                self.long_queue.push_back(spec.id);
+            } else {
+                let g = self.router.route(slot_of(spec.id), spec.prompt_len);
+                self.scheds[g as usize].enqueue(spec.id);
+            }
+            self.requests.insert(spec.id, r);
+        }
+        if self.active_long.is_none() {
+            self.active_long = self.long_queue.pop_front();
+        }
+    }
+
+    fn has_work(&self) -> bool {
+        self.active_long.is_some()
+            || !self.long_queue.is_empty()
+            || self.scheds.iter().any(|s| s.has_work())
+    }
+
+    fn short_local_kv(r: &Request) -> u64 {
+        r.kv_len().max(1)
+    }
+
+    pub fn run(&mut self) -> f64 {
+        loop {
+            self.admit_arrivals();
+            if !self.has_work() {
+                match self.pending.front() {
+                    Some(spec) => {
+                        self.now = spec.arrival_s;
+                        for tl in &mut self.timelines {
+                            tl.advance_to(self.now);
+                        }
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            if self.now > self.opts.horizon_s {
+                break;
+            }
+            self.step();
+        }
+        self.now
+    }
+
+    fn step(&mut self) {
+        let n_groups = self.scheds.len();
+        let slo = self.dep.slo;
+
+        // ---- long-request work selection -------------------------------
+        let long_id = self.active_long;
+        let mut long_chunk: Option<u64> = None;
+        let mut long_decode = false;
+        if let Some(id) = long_id {
+            let r = &self.requests[&id];
+            match r.phase {
+                Phase::Queued | Phase::Prefilling => {
+                    // rebuilt every step by scanning all requests, in
+                    // group-major id order
+                    let decode_ctxs: Vec<u64> = (0..n_groups)
+                        .flat_map(|g| self.group_decode_ctxs(g))
+                        .collect();
+                    let c = self.policy.next_chunk(
+                        r.kv_len(),
+                        r.remaining_prefill(),
+                        &decode_ctxs,
+                        &self.pm,
+                        &slo,
+                    );
+                    long_chunk = Some(c.max(1).min(r.remaining_prefill()));
+                }
+                Phase::Decoding => long_decode = true,
+                Phase::Finished => {}
+            }
+        }
+        let long_nq = long_chunk.unwrap_or(if long_decode { 1 } else { 0 });
+        let participating: Vec<(u32, u64)> = match long_id {
+            Some(id) if long_nq > 0 => self.kvp_mgr.local_lengths(slot_of(id)),
+            _ => Vec::new(),
+        };
+
+        // ---- per-group batch formation (fresh vectors every step) --------
+        let mut group_plans = Vec::with_capacity(n_groups);
+        for g in 0..n_groups {
+            let plan =
+                self.scheds[g].next_batch(&self.requests, &self.pm, &slo, Self::short_local_kv);
+            group_plans.push(plan);
+        }
+
+        // ---- build shapes and flow through pipelines ---------------------
+        let mut any_decode = long_decode;
+        let mut exits = vec![self.now; n_groups];
+        let mut max_stage0_exit = self.now;
+        let mut worked = false;
+        let mut combined = BatchShape::default();
+        for g in 0..n_groups {
+            let mut shape =
+                self.scheds[g].batch_shape(&group_plans[g], &self.requests, Self::short_local_kv);
+            if let Some(&(_, local)) = participating.iter().find(|&&(gg, _)| gg as usize == g) {
+                if let Some(c) = long_chunk {
+                    shape.prefills.push(PrefillWork {
+                        chunk: c,
+                        kv_len: local + c,
+                    });
+                } else if long_decode {
+                    shape.decodes.push(DecodeWork {
+                        kv_len: local.max(1),
+                    });
+                }
+            }
+            if shape.is_empty() {
+                continue;
+            }
+            worked = true;
+            any_decode |= !shape.decodes.is_empty();
+            combined.prefills.extend(shape.prefills.iter().copied());
+            combined.decodes.extend(shape.decodes.iter().copied());
+            let st = self.pm.stage_time(&shape, self.layers_per_stage).total();
+            let hop = self.pm.stage_hop_s(shape.tokens());
+            let dense_ok = shape.decodes.is_empty();
+            let ready = if dense_ok {
+                self.timelines[g].stage0_free().max(self.now)
+            } else {
+                self.now
+            };
+            let res = self.timelines[g].flow(ready, |_| st, hop);
+            max_stage0_exit = max_stage0_exit.max(res.first_stage_exit());
+            exits[g] = res.exit();
+        }
+
+        if !worked {
+            // the degenerate busy-wait the optimized core replaced
+            self.now += 1e-6;
+            return;
+        }
+
+        let mut iter_end = exits.iter().cloned().fold(self.now, f64::max);
+        if participating.len() > 1 && long_nq > 0 {
+            iter_end += self.pm.kvp_merge_s(long_nq);
+        }
+
+        let t_next = if any_decode { iter_end } else { max_stage0_exit };
+        let dur = iter_end - self.now;
+
+        // ---- bookkeeping --------------------------------------------------
+        for g in 0..n_groups {
+            let plan = group_plans[g].clone();
+            if plan.is_empty() {
+                continue;
+            }
+            let finished = self.scheds[g].complete_iteration(&plan, &mut self.requests, iter_end);
+            for id in finished {
+                let r = &self.requests[&id];
+                if let Some(t) = r.ttft() {
+                    self.metrics.record_ttft(t);
+                }
+                for &s in &r.tbt_samples {
+                    self.metrics.record_tbt(s);
+                }
+                self.metrics.finished_requests += 1;
+                self.router.release(slot_of(id), r.prompt_len);
+            }
+        }
+        if let Some(id) = long_id {
+            if let Some(c) = long_chunk {
+                let r = self.requests.get_mut(&id).unwrap();
+                r.complete_chunk(c, iter_end);
+                self.kvp_mgr.append_tokens(slot_of(id), c, iter_end);
+                let r = &self.requests[&id];
+                if r.phase == Phase::Decoding || r.phase == Phase::Finished {
+                    if let Some(t) = r.ttft() {
+                        self.metrics.record_ttft(t);
+                    }
+                }
+            } else if long_decode {
+                let r = self.requests.get_mut(&id).unwrap();
+                r.complete_decode(iter_end);
+                self.kvp_mgr.append_tokens(slot_of(id), 1, iter_end);
+            }
+            let r = &self.requests[&id];
+            if r.is_finished() {
+                for &s in &r.tbt_samples {
+                    self.metrics.record_tbt(s);
+                }
+                self.metrics.finished_requests += 1;
+                self.kvp_mgr.release(slot_of(id));
+                self.router.release(slot_of(id), r.prompt_len);
+                self.active_long = None;
+            }
+        }
+
+        let active_gpus = match long_id {
+            Some(id) => self
+                .topo
+                .gpus_active(self.kvp_mgr.active_groups(slot_of(id)).max(1)),
+            None => self.topo.parallel.workers_per_replica(),
+        };
+        if dur > 0.0 {
+            self.metrics
+                .mfu
+                .add(self.pm.mfu(&combined, dur, active_gpus.max(1)));
+            self.metrics
+                .mbu
+                .add(self.pm.mbu(&combined, dur, active_gpus.max(1)));
+        }
+        self.metrics.record_iter(IterRecord {
+            t: iter_end,
+            dur_s: dur,
+            chunk: long_chunk.or_else(|| {
+                group_plans
+                    .iter()
+                    .find_map(|p| p.prefill.map(|(_, c)| c))
+            }),
+            n_decodes: combined.decodes.len(),
+            active_gpus,
+        });
+        self.now = t_next;
+    }
+
+    /// Decoding requests resident on group `g`, in id order (the map-scan
+    /// the optimized core replaced with incremental tracking).
+    fn group_decode_ctxs(&self, g: usize) -> Vec<u64> {
+        let mut v = Vec::new();
+        for (id, r) in &self.requests {
+            if r.phase == Phase::Decoding && self.router.group_of(slot_of(*id)) == Some(g as u32) {
+                v.push(r.kv_len().max(1));
+            }
+        }
+        v
+    }
+
+    pub fn request(&self, id: RequestId) -> Option<&Request> {
+        self.requests.get(&id)
+    }
+
+    pub fn kvp_onboard_log(&self) -> &[(f64, RequestId, u32)] {
+        &self.kvp_mgr.onboard_log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload;
+
+    #[test]
+    fn reference_still_simulates() {
+        let dep = DeploymentConfig::llama3_8b_tp8();
+        let w = workload::long_plus_decodes(100_000, 4, 1_000, 16);
+        let mut sim = ReferenceSimulation::new(dep, w, SimOptions::default());
+        sim.run();
+        assert_eq!(sim.metrics.finished_requests, 5);
+        assert!(sim.request(0).unwrap().is_finished());
+    }
+}

@@ -1,0 +1,187 @@
+//! Simulator-core throughput measurement (`sim/throughput`,
+//! `sim/million`): how many scheduler iterations per wall-second the core
+//! sustains, and whether a million-request mixed trace completes end to
+//! end with bounded memory.
+//!
+//! The functions here are shared by `benches/hotpath.rs` (which records
+//! the results into `BENCH_sim.json`) and the `bench_smoke` integration
+//! test (which runs a down-scaled version under `MEDHA_BENCH_SMOKE=1` to
+//! keep the bench path compiling and its JSON valid).
+
+use std::time::Instant;
+
+use super::{SimOptions, Simulation};
+use crate::config::DeploymentConfig;
+use crate::util::json::Json;
+use crate::workload::{self, LengthDist, RequestSpec};
+
+/// One simulator throughput measurement.
+#[derive(Debug, Clone)]
+pub struct SimThroughput {
+    pub name: String,
+    pub requests: usize,
+    pub finished: u64,
+    pub iterations: u64,
+    pub wall_s: f64,
+    pub iters_per_s: f64,
+    pub sim_span_s: f64,
+    pub arena_high_water: usize,
+}
+
+impl SimThroughput {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("requests", self.requests.into()),
+            ("finished", self.finished.into()),
+            ("iterations", self.iterations.into()),
+            ("wall_s", self.wall_s.into()),
+            ("iters_per_s", self.iters_per_s.into()),
+            ("sim_span_s", self.sim_span_s.into()),
+            ("arena_high_water", self.arena_high_water.into()),
+        ])
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<52} {:>10.0} iters/s  ({} iters, {} reqs, {:.2}s wall)",
+            self.name, self.iters_per_s, self.iterations, self.requests, self.wall_s
+        )
+    }
+}
+
+/// Deployment used for throughput runs: static chunking (the cheap policy)
+/// so the measurement isolates the simulator core, not the predictor.
+pub fn throughput_dep(kvp: u32) -> DeploymentConfig {
+    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, kvp);
+    dep.scheduler.adaptive_chunking = false;
+    dep.scheduler.static_chunk = 2048;
+    dep
+}
+
+/// Decode-heavy steady state: `n_decoders` short requests decoding
+/// `tokens_each` output tokens in lockstep. Every simulator iteration is
+/// one small mixed batch, so iterations/sec measures the core's
+/// per-iteration overhead (batch formation, pipeline flow, bookkeeping)
+/// rather than perf-model arithmetic over huge batches.
+pub fn decode_stream_workload(n_decoders: usize, tokens_each: u64) -> Vec<RequestSpec> {
+    (0..n_decoders)
+        .map(|i| RequestSpec {
+            id: i as u64,
+            prompt_len: 256,
+            max_new_tokens: tokens_each,
+            arrival_s: 0.0,
+        })
+        .collect()
+}
+
+/// Mixed production-like trace: Poisson arrivals, Zipf-skewed short
+/// context lengths, plus `n_long` genuinely long (KVP-sharded) requests
+/// spread across the horizon — section 3's C3 heterogeneity at trace
+/// scale.
+pub fn mixed_million_workload(n_requests: usize, n_long: usize, seed: u64) -> Vec<RequestSpec> {
+    let n_short = n_requests.saturating_sub(n_long);
+    // Arrival rate chosen so the trace spans ~500 simulated seconds
+    // regardless of size; lengths stay below the default long threshold.
+    let horizon_s = 500.0;
+    let rate = n_short as f64 / horizon_s;
+    let mut w = workload::poisson_mixed(
+        rate.max(1.0),
+        horizon_s,
+        LengthDist::ZipfBuckets {
+            buckets: vec![128, 512, 2048, 8192],
+            s: 1.2,
+        },
+        4,
+        seed,
+    );
+    w.truncate(n_short);
+    let next_id = w.len() as u64;
+    for i in 0..n_long {
+        w.push(RequestSpec {
+            id: next_id + i as u64,
+            prompt_len: 100_000,
+            max_new_tokens: 8,
+            arrival_s: (i as f64 + 0.5) / n_long.max(1) as f64 * horizon_s,
+        });
+    }
+    w
+}
+
+/// Run `workload` through the optimized simulator in lean mode and report
+/// iteration throughput.
+pub fn run_sim_throughput(
+    name: &str,
+    dep: DeploymentConfig,
+    workload: Vec<RequestSpec>,
+) -> SimThroughput {
+    let n = workload.len();
+    let mut opts = SimOptions::default();
+    opts.retain_finished = false;
+    opts.metrics_reservoir = Some(4096);
+    let mut sim = Simulation::new(dep, workload, opts);
+    let t0 = Instant::now();
+    let span = sim.run();
+    let wall_s = t0.elapsed().as_secs_f64();
+    let iterations = sim.metrics.n_iters;
+    SimThroughput {
+        name: name.to_string(),
+        requests: n,
+        finished: sim.metrics.finished_requests,
+        iterations,
+        wall_s,
+        iters_per_s: iterations as f64 / wall_s.max(1e-12),
+        sim_span_s: span,
+        arena_high_water: sim.arena_high_water(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_stream_reports_throughput() {
+        let r = run_sim_throughput(
+            "sim/throughput decode-stream (test)",
+            throughput_dep(1),
+            decode_stream_workload(8, 500),
+        );
+        assert_eq!(r.finished, 8);
+        // ~one iteration per decode step across the lockstep batch
+        assert!(r.iterations >= 500, "iterations={}", r.iterations);
+        assert!(r.iters_per_s > 0.0);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("finished").and_then(|x| x.as_u64()), Some(8));
+    }
+
+    #[test]
+    fn mixed_workload_shapes() {
+        let w = mixed_million_workload(1_000, 10, 7);
+        assert!(w.len() <= 1_000);
+        assert_eq!(w.iter().filter(|r| r.prompt_len == 100_000).count(), 10);
+        // ids unique
+        let mut ids: Vec<u64> = w.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), w.len());
+    }
+
+    #[test]
+    fn mixed_trace_completes_with_bounded_arena() {
+        let r = run_sim_throughput(
+            "sim/million mixed (down-scaled test)",
+            throughput_dep(2),
+            mixed_million_workload(2_000, 4, 11),
+        );
+        assert_eq!(r.finished as usize, r.requests);
+        assert!(r.sim_span_s < 86_400.0, "hit the horizon: {}", r.sim_span_s);
+        // memory tracked concurrency, not trace length
+        assert!(
+            r.arena_high_water < r.requests,
+            "arena high-water {} vs {} requests",
+            r.arena_high_water,
+            r.requests
+        );
+    }
+}

@@ -1,11 +1,33 @@
 //! Measurement harness for `cargo bench` (criterion is unavailable offline).
 //!
-//! Provides warmup + timed iterations with mean/p50/p95 reporting, and a
-//! registry so bench binaries can expose `--filter` selection like criterion.
+//! Provides warmup + timed iterations with mean/p50/p95 reporting, a
+//! registry so bench binaries can expose `--filter` selection like
+//! criterion, and machine-readable JSON output (`BENCH_sim.json`).
+//!
+//! Smoke mode (`MEDHA_BENCH_SMOKE=1`) caps the per-bench budget and
+//! iteration count so an integration test can exercise every bench in
+//! milliseconds — keeping the bench binaries compiling and their JSON
+//! output valid under plain `cargo test`.
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats::{fmt_duration, Samples};
+
+/// Env var that switches the harness into smoke mode.
+pub const SMOKE_ENV: &str = "MEDHA_BENCH_SMOKE";
+
+/// Hard cap on timed iterations per bench (overrides calibration); set via
+/// `MEDHA_BENCH_MAX_ITERS`, implied small in smoke mode.
+pub const MAX_ITERS_ENV: &str = "MEDHA_BENCH_MAX_ITERS";
+
+fn smoke_enabled() -> bool {
+    std::env::var(SMOKE_ENV).map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+fn env_max_iters() -> Option<u64> {
+    std::env::var(MAX_ITERS_ENV).ok().and_then(|v| v.parse().ok())
+}
 
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -28,22 +50,45 @@ impl BenchResult {
             self.iters
         )
     }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", self.iters.into()),
+            ("mean_s", self.mean_s.into()),
+            ("p50_s", self.p50_s.into()),
+            ("p95_s", self.p95_s.into()),
+            ("min_s", self.min_s.into()),
+        ])
+    }
 }
 
-/// Time `f` with warmup; each sample is one call. Target ~`budget_s` seconds.
-pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
-    // Warmup + calibration: run until 10% of budget or 3 iterations.
+/// Time `f` with warmup; each sample is one call. Target ~`budget_s`
+/// seconds, hard-capped at `max_iters` timed calls when given.
+pub fn bench_with_limit<F: FnMut()>(
+    name: &str,
+    budget_s: f64,
+    max_iters: Option<u64>,
+    mut f: F,
+) -> BenchResult {
+    // Warmup + calibration: run until 10% of budget or 3 iterations —
+    // shrunk to the iteration cap when one is set, so a hard cap of 1
+    // really means ~2 total calls.
     let warm_start = Instant::now();
     let mut warm_iters = 0u64;
-    while warm_start.elapsed().as_secs_f64() < budget_s * 0.1 || warm_iters < 3 {
+    let warm_cap = max_iters.map(|m| m.clamp(1, 3)).unwrap_or(1000);
+    while warm_start.elapsed().as_secs_f64() < budget_s * 0.1 || warm_iters < warm_cap.min(3) {
         f();
         warm_iters += 1;
-        if warm_iters >= 1000 {
+        if warm_iters >= warm_cap {
             break;
         }
     }
     let per_call = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
-    let target_iters = ((budget_s * 0.9) / per_call.max(1e-9)).clamp(5.0, 100_000.0) as u64;
+    let mut target_iters = ((budget_s * 0.9) / per_call.max(1e-9)).clamp(5.0, 100_000.0) as u64;
+    if let Some(m) = max_iters {
+        target_iters = target_iters.min(m.max(1));
+    }
 
     let mut samples = Samples::new();
     for _ in 0..target_iters {
@@ -61,16 +106,24 @@ pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
     }
 }
 
+/// Time `f` with warmup; each sample is one call. Target ~`budget_s` seconds.
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, f: F) -> BenchResult {
+    bench_with_limit(name, budget_s, env_max_iters(), f)
+}
+
 /// A named group of benches, with criterion-style filtering.
 pub struct BenchSuite {
     filter: Option<String>,
     pub results: Vec<BenchResult>,
     budget_s: f64,
+    smoke: bool,
+    max_iters: Option<u64>,
 }
 
 impl BenchSuite {
     /// Reads `--filter <substr>` / positional filter and `--budget <secs>`
-    /// from argv (cargo bench passes `--bench`; it is ignored).
+    /// from argv (cargo bench passes `--bench`; it is ignored), plus the
+    /// `MEDHA_BENCH_SMOKE` / `MEDHA_BENCH_MAX_ITERS` env caps.
     pub fn from_env() -> BenchSuite {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         let mut filter = None;
@@ -92,11 +145,31 @@ impl BenchSuite {
             }
             i += 1;
         }
+        BenchSuite::with_budget(budget_s, filter)
+    }
+
+    /// Direct constructor (tests / embedding); still honors the env caps.
+    pub fn with_budget(budget_s: f64, filter: Option<String>) -> BenchSuite {
+        let smoke = smoke_enabled();
+        let mut max_iters = env_max_iters();
+        let mut budget_s = budget_s;
+        if smoke {
+            budget_s = budget_s.min(0.02);
+            max_iters = Some(max_iters.unwrap_or(2).min(2));
+        }
         BenchSuite {
             filter,
             results: Vec::new(),
             budget_s,
+            smoke,
+            max_iters,
         }
+    }
+
+    /// True when `MEDHA_BENCH_SMOKE` is set: benches should shrink their
+    /// workloads (fewer requests, shorter traces) as well.
+    pub fn is_smoke(&self) -> bool {
+        self.smoke
     }
 
     pub fn enabled(&self, name: &str) -> bool {
@@ -110,7 +183,28 @@ impl BenchSuite {
         if !self.enabled(name) {
             return;
         }
-        let r = bench(name, self.budget_s, f);
+        let r = bench_with_limit(name, self.budget_s, self.max_iters, f);
+        println!("{}", r.report_line());
+        self.results.push(r);
+    }
+
+    /// Time exactly one call of `f` — for multi-second end-to-end runs
+    /// (e.g. a million-request simulation) where repetition is wasteful.
+    pub fn bench_once<F: FnOnce()>(&mut self, name: &str, f: F) {
+        if !self.enabled(name) {
+            return;
+        }
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: dt,
+            p50_s: dt,
+            p95_s: dt,
+            min_s: dt,
+        };
         println!("{}", r.report_line());
         self.results.push(r);
     }
@@ -132,6 +226,29 @@ impl BenchSuite {
         );
         println!("{}", "-".repeat(98));
     }
+
+    /// All results as a JSON document, with `extra` top-level fields
+    /// appended (e.g. simulator throughput reports).
+    pub fn to_json(&self, extra: Vec<(&str, Json)>) -> Json {
+        let mut fields = vec![
+            ("smoke", Json::from(self.smoke)),
+            (
+                "results",
+                Json::arr(self.results.iter().map(|r| r.to_json())),
+            ),
+        ];
+        fields.extend(extra);
+        Json::obj(fields)
+    }
+
+    /// Write the JSON document to `path`.
+    pub fn write_json(
+        &self,
+        path: &std::path::Path,
+        extra: Vec<(&str, Json)>,
+    ) -> std::io::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json(extra)))
+    }
 }
 
 #[cfg(test)]
@@ -140,7 +257,7 @@ mod tests {
 
     #[test]
     fn bench_measures_something() {
-        let r = bench("noop-ish", 0.05, || {
+        let r = bench_with_limit("noop-ish", 0.05, None, || {
             std::hint::black_box((0..100).sum::<u64>());
         });
         assert!(r.iters >= 5);
@@ -150,7 +267,32 @@ mod tests {
 
     #[test]
     fn report_line_contains_name() {
-        let r = bench("xyz", 0.02, || {});
+        let r = bench_with_limit("xyz", 0.02, None, || {});
         assert!(r.report_line().contains("xyz"));
+    }
+
+    #[test]
+    fn iteration_cap_is_respected() {
+        let mut calls = 0u64;
+        let r = bench_with_limit("capped", 0.05, Some(4), || {
+            calls += 1;
+        });
+        assert_eq!(r.iters, 4);
+        // warmup (<= 3) + timed (4)
+        assert!(calls <= 7, "calls={calls}");
+    }
+
+    #[test]
+    fn suite_json_round_trips() {
+        let mut suite = BenchSuite::with_budget(0.01, None);
+        suite.bench("a/b", || {
+            std::hint::black_box(1 + 1);
+        });
+        let j = suite.to_json(vec![("extra", Json::from(7u64))]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("extra").and_then(|x| x.as_u64()), Some(7));
+        let rs = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].get("name").and_then(|x| x.as_str()), Some("a/b"));
     }
 }

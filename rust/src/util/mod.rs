@@ -8,5 +8,6 @@ pub mod bench;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod slotvec;
 pub mod stats;
 pub mod threadpool;

@@ -1,0 +1,142 @@
+//! Dense slot-indexed map: a `Vec<Option<T>>` keyed by a small integer id.
+//!
+//! The simulator's per-request bookkeeping (router placement, KVP shard
+//! maps, KV block tables) is keyed by dense slot ids handed out by the
+//! request arena, so a flat vector beats a `BTreeMap`: O(1) access with no
+//! pointer chasing, and iteration is a linear scan.
+
+/// A map from small integer keys to `T`, backed by a flat vector.
+#[derive(Debug, Clone)]
+pub struct SlotVec<T> {
+    slots: Vec<Option<T>>,
+    live: usize,
+}
+
+impl<T> Default for SlotVec<T> {
+    fn default() -> Self {
+        SlotVec {
+            slots: Vec::new(),
+            live: 0,
+        }
+    }
+}
+
+impl<T> SlotVec<T> {
+    pub fn new() -> SlotVec<T> {
+        SlotVec::default()
+    }
+
+    pub fn with_capacity(n: usize) -> SlotVec<T> {
+        SlotVec {
+            slots: Vec::with_capacity(n),
+            live: 0,
+        }
+    }
+
+    fn grow_to(&mut self, idx: usize) {
+        if idx >= self.slots.len() {
+            self.slots.resize_with(idx + 1, || None);
+        }
+    }
+
+    /// Insert `v` at `idx`, returning the previous occupant if any.
+    pub fn insert(&mut self, idx: usize, v: T) -> Option<T> {
+        self.grow_to(idx);
+        let old = self.slots[idx].replace(v);
+        if old.is_none() {
+            self.live += 1;
+        }
+        old
+    }
+
+    pub fn get(&self, idx: usize) -> Option<&T> {
+        self.slots.get(idx).and_then(|s| s.as_ref())
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> Option<&mut T> {
+        self.slots.get_mut(idx).and_then(|s| s.as_mut())
+    }
+
+    /// Get the value at `idx`, inserting `T::default()` first if vacant.
+    pub fn get_or_insert_default(&mut self, idx: usize) -> &mut T
+    where
+        T: Default,
+    {
+        self.grow_to(idx);
+        if self.slots[idx].is_none() {
+            self.slots[idx] = Some(T::default());
+            self.live += 1;
+        }
+        self.slots[idx].as_mut().unwrap()
+    }
+
+    pub fn remove(&mut self, idx: usize) -> Option<T> {
+        let v = self.slots.get_mut(idx).and_then(|s| s.take());
+        if v.is_some() {
+            self.live -= 1;
+        }
+        v
+    }
+
+    pub fn contains(&self, idx: usize) -> bool {
+        self.get(idx).is_some()
+    }
+
+    /// Number of occupied slots.
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Iterate occupied slots in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &T)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|v| (i, v)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut m: SlotVec<u64> = SlotVec::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert(3, 30), None);
+        assert_eq!(m.insert(0, 1), None);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.get(3), Some(&30));
+        assert_eq!(m.get(1), None);
+        assert_eq!(m.insert(3, 31), Some(30));
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.remove(3), Some(31));
+        assert_eq!(m.remove(3), None);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn iter_in_key_order() {
+        let mut m: SlotVec<&str> = SlotVec::new();
+        m.insert(5, "e");
+        m.insert(1, "a");
+        m.insert(3, "c");
+        m.remove(3);
+        let got: Vec<(usize, &&str)> = m.iter().collect();
+        assert_eq!(got, vec![(1, &"a"), (5, &"e")]);
+    }
+
+    #[test]
+    fn get_or_insert_default_counts_once() {
+        let mut m: SlotVec<u64> = SlotVec::new();
+        *m.get_or_insert_default(7) += 1;
+        *m.get_or_insert_default(7) += 1;
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.get(7), Some(&2));
+    }
+}

@@ -61,12 +61,25 @@ impl Welford {
     }
 }
 
-/// Exact-percentile sample collector. Stores all samples; the workloads in
-/// this repo produce at most a few million latency points, which is fine.
+/// Percentile sample collector with O(1) amortized ingestion: samples are
+/// appended unsorted and sorting is deferred to the first percentile query
+/// after a batch of inserts.
+///
+/// By default every sample is retained (exact percentiles). For
+/// multi-million-sample runs, [`Samples::reservoir`] caps memory with
+/// uniform reservoir sampling (Vitter's Algorithm R): percentiles become
+/// estimates over a fixed-size uniform subsample, while `count()` still
+/// reports the true number ingested.
 #[derive(Debug, Clone, Default)]
 pub struct Samples {
     xs: Vec<f64>,
     sorted: bool,
+    /// Max retained samples (`None` = retain everything, exact).
+    cap: Option<usize>,
+    /// Total samples ever ingested (>= xs.len() when capped).
+    seen: u64,
+    /// xorshift64* state for reservoir replacement decisions.
+    rng: u64,
 }
 
 impl Samples {
@@ -74,18 +87,63 @@ impl Samples {
         Self::default()
     }
 
+    /// Reservoir-sampled collector retaining at most `cap` samples.
+    pub fn reservoir(cap: usize, seed: u64) -> Self {
+        Samples {
+            xs: Vec::with_capacity(cap.max(1).min(1 << 20)),
+            sorted: false,
+            cap: Some(cap.max(1)),
+            seen: 0,
+            rng: seed | 1, // xorshift state must be nonzero
+        }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // xorshift64*
+        let mut x = self.rng;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
     pub fn add(&mut self, x: f64) {
-        self.xs.push(x);
-        self.sorted = false;
+        self.seen += 1;
+        match self.cap {
+            Some(cap) if self.xs.len() >= cap => {
+                // Algorithm R: keep each of the `seen` samples with equal
+                // probability cap/seen.
+                let j = self.next_u64() % self.seen;
+                if (j as usize) < cap {
+                    self.xs[j as usize] = x;
+                    self.sorted = false;
+                }
+            }
+            _ => {
+                self.xs.push(x);
+                self.sorted = false;
+            }
+        }
     }
 
     pub fn extend(&mut self, other: &Samples) {
-        self.xs.extend_from_slice(&other.xs);
-        self.sorted = false;
+        for &x in &other.xs {
+            self.add(x);
+        }
+        // Samples `other` ingested but did not retain (its own reservoir
+        // dropped them) still count toward the total seen here.
+        self.seen += other.seen.saturating_sub(other.xs.len() as u64);
     }
 
+    /// Retained samples (== `count()` unless reservoir-capped).
     pub fn len(&self) -> usize {
         self.xs.len()
+    }
+
+    /// Total samples ever ingested.
+    pub fn count(&self) -> u64 {
+        self.seen
     }
 
     pub fn is_empty(&self) -> bool {
@@ -144,6 +202,112 @@ impl Samples {
     pub fn min(&mut self) -> f64 {
         self.ensure_sorted();
         *self.xs.first().unwrap_or(&f64::NAN)
+    }
+}
+
+/// Streaming quantile estimator (Jain & Chlamtac's P² algorithm): tracks a
+/// single quantile `p` with five markers in O(1) memory and O(1) per
+/// sample — the no-retention alternative to [`Samples::reservoir`] when
+/// only one or two percentiles of a multi-million-sample stream matter.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    p: f64,
+    /// Marker heights (estimated quantile values).
+    q: [f64; 5],
+    /// Marker positions (1-based ranks).
+    n: [f64; 5],
+    /// Desired marker positions.
+    np: [f64; 5],
+    /// Desired position increments per observation.
+    dn: [f64; 5],
+    count: u64,
+}
+
+impl P2Quantile {
+    pub fn new(p: f64) -> P2Quantile {
+        assert!((0.0..=1.0).contains(&p), "quantile must be in [0,1]");
+        P2Quantile {
+            p,
+            q: [0.0; 5],
+            n: [1.0, 2.0, 3.0, 4.0, 5.0],
+            np: [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0],
+            dn: [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0],
+            count: 0,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        if self.count <= 5 {
+            let k = (self.count - 1) as usize;
+            self.q[k] = x;
+            if self.count == 5 {
+                self.q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            return;
+        }
+        // locate the cell containing x, clamping the extreme markers
+        let k = if x < self.q[0] {
+            self.q[0] = x;
+            0
+        } else if x >= self.q[4] {
+            self.q[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            while k < 3 && x >= self.q[k + 1] {
+                k += 1;
+            }
+            k
+        };
+        for i in (k + 1)..5 {
+            self.n[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.np[i] += self.dn[i];
+        }
+        // adjust interior markers toward their desired positions
+        for i in 1..4 {
+            let d = self.np[i] - self.n[i];
+            if (d >= 1.0 && self.n[i + 1] - self.n[i] > 1.0)
+                || (d <= -1.0 && self.n[i - 1] - self.n[i] < -1.0)
+            {
+                let d = d.signum();
+                // parabolic (P²) prediction, falling back to linear
+                let qp = self.q[i]
+                    + d / (self.n[i + 1] - self.n[i - 1])
+                        * ((self.n[i] - self.n[i - 1] + d) * (self.q[i + 1] - self.q[i])
+                            / (self.n[i + 1] - self.n[i])
+                            + (self.n[i + 1] - self.n[i] - d) * (self.q[i] - self.q[i - 1])
+                                / (self.n[i] - self.n[i - 1]));
+                self.q[i] = if self.q[i - 1] < qp && qp < self.q[i + 1] {
+                    qp
+                } else {
+                    let j = if d > 0.0 { i + 1 } else { i - 1 };
+                    self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+                };
+                self.n[i] += d;
+            }
+        }
+    }
+
+    /// Current estimate of the tracked quantile.
+    pub fn value(&self) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        if self.count < 5 {
+            // exact over the few samples seen so far
+            let mut xs: Vec<f64> = self.q[..self.count as usize].to_vec();
+            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let rank = self.p * (xs.len() - 1) as f64;
+            return xs[rank.round() as usize];
+        }
+        self.q[2]
     }
 }
 
@@ -258,6 +422,78 @@ mod tests {
         s.add(0.0);
         s.add(10.0);
         assert!((s.percentile(50.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reservoir_caps_memory_but_counts_all() {
+        let mut s = Samples::reservoir(100, 42);
+        for i in 0..10_000 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.len(), 100);
+        assert_eq!(s.count(), 10_000);
+        // a uniform subsample of 0..10000: the median estimate must land
+        // in the central half
+        let med = s.median();
+        assert!((2_000.0..8_000.0).contains(&med), "median={med}");
+    }
+
+    #[test]
+    fn extend_from_reservoir_keeps_total_count() {
+        let mut src = Samples::reservoir(50, 9);
+        for i in 0..5_000 {
+            src.add(i as f64);
+        }
+        let mut dst = Samples::new();
+        dst.add(1.0);
+        dst.extend(&src);
+        assert_eq!(dst.len(), 51); // 1 + the 50 retained
+        assert_eq!(dst.count(), 5_001); // but every ingested sample counted
+    }
+
+    #[test]
+    fn exact_mode_count_equals_len() {
+        let mut s = Samples::new();
+        for i in 0..1000 {
+            s.add(i as f64);
+        }
+        assert_eq!(s.len(), 1000);
+        assert_eq!(s.count(), 1000);
+        assert_eq!(s.percentile(100.0), 999.0);
+    }
+
+    #[test]
+    fn p2_tracks_median_and_p99() {
+        // deterministic pseudo-random stream, uniform in [0, 1)
+        let mut state = 88172645463325252u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 11) as f64 / (1u64 << 53) as f64
+        };
+        let mut med = P2Quantile::new(0.5);
+        let mut p99 = P2Quantile::new(0.99);
+        let mut exact = Samples::new();
+        for _ in 0..50_000 {
+            let x = next();
+            med.add(x);
+            p99.add(x);
+            exact.add(x);
+        }
+        assert!((med.value() - exact.median()).abs() < 0.02, "{}", med.value());
+        assert!((p99.value() - exact.p99()).abs() < 0.02, "{}", p99.value());
+        assert_eq!(med.count(), 50_000);
+    }
+
+    #[test]
+    fn p2_small_streams_are_exact_enough() {
+        let mut q = P2Quantile::new(0.5);
+        assert!(q.value().is_nan());
+        for x in [5.0, 1.0, 3.0] {
+            q.add(x);
+        }
+        assert_eq!(q.value(), 3.0);
     }
 
     #[test]

@@ -1,0 +1,72 @@
+//! Bench-path smoke test: runs the simulator throughput benches once in
+//! smoke mode (env-var capped iterations, down-scaled workloads) and
+//! validates the `BENCH_sim.json` document they emit — so `cargo test`
+//! keeps the bench machinery compiling and its output parseable without
+//! paying full bench budgets.
+
+use medha::sim::throughput::{
+    decode_stream_workload, mixed_million_workload, run_sim_throughput, throughput_dep,
+};
+use medha::util::bench::{BenchSuite, MAX_ITERS_ENV, SMOKE_ENV};
+use medha::util::json::Json;
+
+#[test]
+fn smoke_run_emits_valid_bench_json() {
+    std::env::set_var(SMOKE_ENV, "1");
+    let mut suite = BenchSuite::with_budget(5.0, None);
+    assert!(suite.is_smoke());
+
+    let mut calls = 0u64;
+    suite.bench("smoke/counter", || {
+        calls += 1;
+    });
+    // smoke mode caps timed iterations at 2 (plus <=3 warmup calls)
+    assert!(calls <= 5, "smoke mode ran {calls} calls");
+
+    // one pass of each sim throughput bench, down-scaled
+    let reports = vec![
+        run_sim_throughput(
+            "sim/throughput decode-stream",
+            throughput_dep(1),
+            decode_stream_workload(8, 300),
+        ),
+        run_sim_throughput(
+            "sim/million mixed",
+            throughput_dep(2),
+            mixed_million_workload(1_000, 2, 7),
+        ),
+    ];
+    for r in &reports {
+        assert!(r.finished > 0, "{}: nothing finished", r.name);
+        assert!(r.iterations > 0 && r.wall_s > 0.0);
+    }
+
+    let dir = std::env::temp_dir().join("medha_bench_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_sim.json");
+    suite
+        .write_json(
+            &path,
+            vec![(
+                "sim_throughput",
+                Json::arr(reports.iter().map(|r| r.to_json())),
+            )],
+        )
+        .unwrap();
+
+    // the emitted document must round-trip through our own parser
+    let text = std::fs::read_to_string(&path).unwrap();
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("smoke").and_then(|x| x.as_bool()), Some(true));
+    let results = j.get("results").unwrap().as_arr().unwrap();
+    assert!(!results.is_empty());
+    let sims = j.get("sim_throughput").unwrap().as_arr().unwrap();
+    assert_eq!(sims.len(), 2);
+    for s in sims {
+        assert!(s.get("iters_per_s").and_then(|x| x.as_f64()).unwrap() > 0.0);
+        assert!(s.get("name").and_then(|x| x.as_str()).is_some());
+    }
+
+    std::env::remove_var(SMOKE_ENV);
+    std::env::remove_var(MAX_ITERS_ENV);
+}

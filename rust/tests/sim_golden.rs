@@ -1,0 +1,125 @@
+//! Golden sim-semantics equivalence: the optimized (arena, allocation-free,
+//! event-driven) simulator core must reproduce the pre-refactor simulator's
+//! metrics **bit-for-bit** on fixed workloads.
+//!
+//! The pre-refactor semantics are preserved verbatim in
+//! `medha::sim::reference::ReferenceSimulation` (map-based store,
+//! per-iteration allocations, O(n²) retain, 1e-6 s idle bumps). Both cores
+//! run the same deterministic workloads; every summary statistic — finished
+//! count, TTFT/TBT percentiles, throughput, utilization means — and the
+//! total simulated time must compare exactly equal as f64s, not within a
+//! tolerance: the refactor changed the engineering of the loop, not the
+//! simulated behavior.
+
+use medha::config::DeploymentConfig;
+use medha::metrics::MetricsSummary;
+use medha::sim::reference::ReferenceSimulation;
+use medha::sim::{SimOptions, Simulation};
+use medha::workload::{self, LengthDist, RequestSpec};
+
+struct RunOutcome {
+    end_s: f64,
+    n_iters: u64,
+    summary: MetricsSummary,
+    onboard_log: Vec<(f64, u64, u32)>,
+}
+
+fn run_optimized(dep: DeploymentConfig, w: Vec<RequestSpec>) -> RunOutcome {
+    let mut sim = Simulation::new(dep, w, SimOptions::default());
+    let end_s = sim.run();
+    RunOutcome {
+        end_s,
+        n_iters: sim.metrics.n_iters,
+        onboard_log: sim.kvp_onboard_log().to_vec(),
+        summary: sim.metrics.summary(),
+    }
+}
+
+fn run_reference(dep: DeploymentConfig, w: Vec<RequestSpec>) -> RunOutcome {
+    let mut sim = ReferenceSimulation::new(dep, w, SimOptions::default());
+    let end_s = sim.run();
+    RunOutcome {
+        end_s,
+        n_iters: sim.metrics.n_iters,
+        onboard_log: sim.kvp_onboard_log().to_vec(),
+        summary: sim.metrics.summary(),
+    }
+}
+
+/// Exact f64 comparison (NaN == NaN so empty-population statistics match).
+fn assert_f64_identical(what: &str, a: f64, b: f64) {
+    assert!(
+        a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+        "{what}: optimized {a:?} != reference {b:?}"
+    );
+}
+
+fn assert_outcomes_identical(opt: &RunOutcome, reference: &RunOutcome) {
+    assert_eq!(opt.summary.finished, reference.summary.finished, "finished");
+    assert_eq!(opt.n_iters, reference.n_iters, "iteration count");
+    assert_eq!(opt.summary.n_ttft, reference.summary.n_ttft, "n_ttft");
+    assert_eq!(opt.summary.n_tbt, reference.summary.n_tbt, "n_tbt");
+    assert_eq!(opt.onboard_log, reference.onboard_log, "kvp onboard log");
+    assert_f64_identical("end time", opt.end_s, reference.end_s);
+    assert_f64_identical("ttft_p50", opt.summary.ttft_p50, reference.summary.ttft_p50);
+    assert_f64_identical("ttft_p95", opt.summary.ttft_p95, reference.summary.ttft_p95);
+    assert_f64_identical("tbt_p50", opt.summary.tbt_p50, reference.summary.tbt_p50);
+    assert_f64_identical("tbt_p95", opt.summary.tbt_p95, reference.summary.tbt_p95);
+    assert_f64_identical("tbt_p99", opt.summary.tbt_p99, reference.summary.tbt_p99);
+    assert_f64_identical("tbt_max", opt.summary.tbt_max, reference.summary.tbt_max);
+    assert_f64_identical("decode_tps", opt.summary.decode_tps, reference.summary.decode_tps);
+    assert_f64_identical("mfu_mean", opt.summary.mfu_mean, reference.summary.mfu_mean);
+    assert_f64_identical("mbu_mean", opt.summary.mbu_mean, reference.summary.mbu_mean);
+}
+
+/// Workload 1: fixed-seed Poisson mix of short requests across two KVP
+/// groups, adaptive chunking on — exercises routing, continuous batching,
+/// and idle-gap handling.
+#[test]
+fn golden_mixed_short_poisson() {
+    let dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
+    let w = workload::poisson_mixed(
+        8.0,
+        30.0,
+        LengthDist::ZipfBuckets {
+            buckets: vec![128, 1_024, 4_096, 12_288],
+            s: 1.1,
+        },
+        16,
+        42,
+    );
+    assert!(w.len() > 100, "workload degenerate: {} requests", w.len());
+    let opt = run_optimized(dep.clone(), w.clone());
+    let reference = run_reference(dep, w);
+    assert!(opt.summary.finished > 100);
+    assert_outcomes_identical(&opt, &reference);
+}
+
+/// Workload 2: one long KVP-sharded request (dynamic onboarding across 4
+/// groups) batched alongside short decodes — exercises cooperative
+/// iterations, the KVP merge charge, adaptive chunk shrinking, and the
+/// onboarding staircase.
+#[test]
+fn golden_long_kvp_sharded_plus_decodes() {
+    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 2, 4);
+    dep.scheduler.kvp_onboard_threshold = 256_000;
+    let w = workload::long_plus_decodes(1_000_000, 8, 1_000, 64);
+    let opt = run_optimized(dep.clone(), w.clone());
+    let reference = run_reference(dep, w);
+    assert_eq!(opt.summary.finished, 9);
+    assert_eq!(opt.onboard_log.len(), 4, "expected 4 KVP onboard events");
+    assert_outcomes_identical(&opt, &reference);
+}
+
+/// Static chunking variant of workload 2 — the chunk policy out of the
+/// loop isolates batch formation and pipeline-flow equivalence.
+#[test]
+fn golden_long_static_chunking() {
+    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
+    dep.scheduler.adaptive_chunking = false;
+    dep.scheduler.static_chunk = 2048;
+    let w = workload::long_plus_decodes(200_000, 6, 1_000, 32);
+    let opt = run_optimized(dep.clone(), w.clone());
+    let reference = run_reference(dep, w);
+    assert_outcomes_identical(&opt, &reference);
+}
