@@ -47,7 +47,14 @@ fn main() {
     let adaptive = AdaptiveChunk::new(vec![32, 64, 128, 256, 512, 1024, 2048, 4096]);
     let decode_ctxs: Vec<u64> = (0..64).map(|i| 1_000 + i).collect();
     suite.bench("chunking/adaptive decision (64 decodes)", || {
-        std::hint::black_box(adaptive.next_chunk(2_000_000, 1 << 40, &decode_ctxs, &pm, &slo));
+        std::hint::black_box(adaptive.next_chunk(
+            2_000_000,
+            1 << 40,
+            &decode_ctxs,
+            f64::INFINITY,
+            &pm,
+            &slo,
+        ));
     });
 
     // 128 requests driven through prefill into steady-state decode.
@@ -56,13 +63,13 @@ fn main() {
     for id in 0..128u64 {
         let slot = requests.insert(Request::new(id, 64, 4_000, 0.0));
         sched.enqueue(slot);
-        let plan = sched.next_batch(&requests, &pm, &slo);
+        let plan = sched.next_batch(&requests, &pm, &slo, 0.0);
         sched.complete_iteration(&plan, &mut requests, 0.0);
     }
     assert_eq!(sched.n_decoding(), 128);
     let mut plan = medha::coordinator::BatchPlan::default();
     suite.bench("scheduler/next_batch 128 decodes", || {
-        sched.next_batch_into(&requests, &pm, &slo, &mut plan);
+        sched.next_batch_into(&requests, &pm, &slo, 0.0, &mut plan);
         std::hint::black_box(plan.decodes.len());
     });
 
@@ -117,6 +124,47 @@ fn main() {
         println!("{}", r.report_line());
         sim_reports.push(r);
     });
+
+    // --- scheduling-policy comparison on the convoy trace ------------------
+    // FCFS vs LARS end-to-end on the heterogeneous workload: wall time
+    // captures the policy's scheduling overhead (the priority scan +
+    // preemption churn), and the recorded short-request p99 TTFT captures
+    // the convoy-elimination effect itself.
+    let convoy_cfg = if smoke {
+        medha::workload::ConvoyConfig {
+            rate_per_s: 2.0,
+            horizon_s: 5.0,
+            long_prompt: 32_768,
+            long_every: 5,
+            ..medha::workload::ConvoyConfig::default()
+        }
+    } else {
+        medha::workload::ConvoyConfig::default()
+    };
+    let run_convoy = |kind: medha::coordinator::SchedPolicyKind| -> (f64, u64) {
+        let sim = medha::sim::run_convoy_scenario(kind, &convoy_cfg, 42);
+        let (mut short, _) = medha::sim::convoy_ttft_split(&sim, &convoy_cfg);
+        (short.p99(), sim.metrics.preemptions)
+    };
+    let mut fcfs_p99 = f64::NAN;
+    let mut lars_p99 = f64::NAN;
+    let mut lars_preemptions = 0u64;
+    suite.bench_once("sched/policy_compare fcfs convoy", || {
+        let (p99, _) = run_convoy(medha::coordinator::SchedPolicyKind::Fcfs);
+        fcfs_p99 = p99;
+    });
+    suite.bench_once("sched/policy_compare lars convoy", || {
+        let (p99, n) = run_convoy(medha::coordinator::SchedPolicyKind::Lars);
+        lars_p99 = p99;
+        lars_preemptions = n;
+    });
+    if fcfs_p99.is_finite() && lars_p99.is_finite() {
+        println!(
+            "sched/policy_compare: short p99 TTFT fcfs {fcfs_p99:.3}s vs lars {lars_p99:.3}s \
+             ({:.1}x, {lars_preemptions} preemptions)",
+            fcfs_p99 / lars_p99
+        );
+    }
 
     // --- substrates -------------------------------------------------------
     let manifest_like = format!(
@@ -195,9 +243,25 @@ fn main() {
             _ => Json::Null,
         }
     };
+    let num_or_null = |x: f64| if x.is_finite() { Json::num(x) } else { Json::Null };
     let extra = vec![
         ("sim_throughput", Json::arr(sim_reports.iter().map(|r| r.to_json()))),
         ("sim_mixed_speedup_vs_reference", speedup),
+        (
+            "sched_policy_compare",
+            Json::obj(vec![
+                ("workload", Json::str("convoy")),
+                // Null (never bare NaN, which is invalid JSON) when the
+                // convoy benches were filtered out of this run.
+                ("fcfs_short_p99_ttft_s", num_or_null(fcfs_p99)),
+                ("lars_short_p99_ttft_s", num_or_null(lars_p99)),
+                (
+                    "fcfs_over_lars",
+                    if lars_p99 > 0.0 { num_or_null(fcfs_p99 / lars_p99) } else { Json::Null },
+                ),
+                ("lars_preemptions", lars_preemptions.into()),
+            ]),
+        ),
     ];
     let out = std::path::Path::new("BENCH_sim.json");
     match suite.write_json(out, extra) {

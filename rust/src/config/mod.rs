@@ -10,14 +10,29 @@ pub use hardware::{HardwareConfig, InterconnectConfig};
 pub use model::ModelConfig;
 pub use parallel::{ParallelismConfig, PlacementError};
 
+use crate::coordinator::policy::SchedPolicyKind;
 use crate::util::json::Json;
 
 /// Latency service-level objectives (paper: 30s TTFT babbling point /
-/// production-grade 20-30ms TBT).
+/// production-grade 20-30ms TBT), plus the length-aware TTFT deadlines
+/// heterogeneous scheduling needs: one absolute target cannot serve both a
+/// 500-token chat turn and a 1M-token document, so per-request deadlines
+/// scale with the request's estimated isolated prefill time.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SloConfig {
     pub ttft_s: f64,
     pub tbt_s: f64,
+    /// Length-aware deadline scale: a request's TTFT budget is
+    /// `max(ttft_floor_s, ttft_scale × estimated isolated prefill time)`.
+    /// When the proportional term wins, every fresh request starts at the
+    /// same LARS relative slack (`ttft_scale − 1`, shifted down by the
+    /// scheduler's headroom — see `coordinator::policy::Lars`).
+    pub ttft_scale: f64,
+    /// Floor on the TTFT budget, deliberately breaking proportionality for
+    /// tiny requests: their fresh slack is much larger than `ttft_scale−1`
+    /// but erodes fast, giving them a humane interactive deadline instead
+    /// of a microsecond one.
+    pub ttft_floor_s: f64,
 }
 
 impl Default for SloConfig {
@@ -26,15 +41,29 @@ impl Default for SloConfig {
         SloConfig {
             ttft_s: 30.0,
             tbt_s: 0.030,
+            ttft_scale: 5.0,
+            ttft_floor_s: 2.0,
         }
     }
 }
 
 impl SloConfig {
+    /// Length-aware TTFT budget (seconds after arrival) for a request whose
+    /// isolated prefill is estimated at `est_prefill_s`.
+    pub fn ttft_deadline_for(&self, est_prefill_s: f64) -> f64 {
+        (self.ttft_scale * est_prefill_s).max(self.ttft_floor_s)
+    }
+
     pub fn from_json(j: &Json) -> anyhow::Result<SloConfig> {
+        let d = SloConfig::default();
         Ok(SloConfig {
             ttft_s: j.req_f64("ttft_s")?,
             tbt_s: j.req_f64("tbt_s")?,
+            ttft_scale: j.get("ttft_scale").and_then(|x| x.as_f64()).unwrap_or(d.ttft_scale),
+            ttft_floor_s: j
+                .get("ttft_floor_s")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(d.ttft_floor_s),
         })
     }
 
@@ -42,6 +71,8 @@ impl SloConfig {
         Json::obj(vec![
             ("ttft_s", self.ttft_s.into()),
             ("tbt_s", self.tbt_s.into()),
+            ("ttft_scale", self.ttft_scale.into()),
+            ("ttft_floor_s", self.ttft_floor_s.into()),
         ])
     }
 }
@@ -60,6 +91,11 @@ pub struct SchedulerConfig {
     /// KVP dynamic-growth threshold: max KV tokens per KVP worker group
     /// before onboarding the next one (section 4.4).
     pub kvp_onboard_threshold: u64,
+    /// Preemptive scheduling policy ordering each replica's ready set
+    /// (section 5): fcfs | srpt | edf | lars. FCFS preserves the original
+    /// strict-FIFO behavior (and oracle parity with the reference
+    /// simulator).
+    pub policy: SchedPolicyKind,
 }
 
 impl Default for SchedulerConfig {
@@ -70,6 +106,7 @@ impl Default for SchedulerConfig {
             static_chunk: 2048,
             max_batch_size: 128,
             kvp_onboard_threshold: 512 * 1024,
+            policy: SchedPolicyKind::Fcfs,
         }
     }
 }
@@ -100,6 +137,12 @@ impl SchedulerConfig {
                 .get("kvp_onboard_threshold")
                 .and_then(|x| x.as_u64())
                 .unwrap_or(d.kvp_onboard_threshold),
+            policy: match j.get("policy").and_then(|x| x.as_str()) {
+                Some(s) => SchedPolicyKind::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!("unknown scheduler policy '{s}' (expected fcfs|srpt|edf|lars)")
+                })?,
+                None => d.policy,
+            },
         })
     }
 }
@@ -220,5 +263,31 @@ mod tests {
         let s = SchedulerConfig::default();
         assert!(s.adaptive_chunking);
         assert!(s.chunk_sizes.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(s.policy, SchedPolicyKind::Fcfs);
+    }
+
+    #[test]
+    fn scheduler_policy_from_json() {
+        let j = Json::parse(r#"{"policy": "lars", "static_chunk": 1024}"#).unwrap();
+        let s = SchedulerConfig::from_json(&j).unwrap();
+        assert_eq!(s.policy, SchedPolicyKind::Lars);
+        assert_eq!(s.static_chunk, 1024);
+        let bad = Json::parse(r#"{"policy": "wfq"}"#).unwrap();
+        assert!(SchedulerConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn length_aware_deadlines() {
+        let slo = SloConfig::default();
+        // tiny request: floored interactive budget
+        assert_eq!(slo.ttft_deadline_for(0.05), slo.ttft_floor_s);
+        // document request: proportional budget
+        assert!((slo.ttft_deadline_for(60.0) - 300.0).abs() < 1e-9);
+        // json roundtrip keeps the new knobs optional
+        let j = Json::parse(r#"{"ttft_s": 30.0, "tbt_s": 0.02}"#).unwrap();
+        let parsed = SloConfig::from_json(&j).unwrap();
+        assert_eq!(parsed.ttft_scale, slo.ttft_scale);
+        let j2 = Json::parse(&parsed.to_json().to_string()).unwrap();
+        assert_eq!(SloConfig::from_json(&j2).unwrap(), parsed);
     }
 }

@@ -14,11 +14,18 @@ pub trait ChunkPolicy: Send + Sync {
     /// Choose the next chunk size for a prefill with `kv_done` tokens
     /// already processed and `remaining` tokens to go, sharing the batch
     /// with `decode_ctxs` (local KV lengths of piggybacked decodes).
+    ///
+    /// `deadline_remaining_s` is the *live* time left until the request's
+    /// TTFT deadline (negative once overdue, `INFINITY` when the request
+    /// has no deadline) — callers recompute it every iteration from the
+    /// request being chunked, so deadline-aware policies always see the
+    /// current request, not state frozen at construction.
     fn next_chunk(
         &self,
         kv_done: u64,
         remaining: u64,
         decode_ctxs: &[u64],
+        deadline_remaining_s: f64,
         pm: &PerfModel,
         slo: &SloConfig,
     ) -> u64;
@@ -36,6 +43,7 @@ impl ChunkPolicy for StaticChunk {
         _kv_done: u64,
         remaining: u64,
         _decode_ctxs: &[u64],
+        _deadline_remaining_s: f64,
         _pm: &PerfModel,
         _slo: &SloConfig,
     ) -> u64 {
@@ -104,6 +112,7 @@ impl ChunkPolicy for AdaptiveChunk {
         kv_done: u64,
         remaining: u64,
         decode_ctxs: &[u64],
+        _deadline_remaining_s: f64,
         pm: &PerfModel,
         slo: &SloConfig,
     ) -> u64 {
@@ -135,19 +144,20 @@ impl ChunkPolicy for AdaptiveChunk {
 /// for its TTFT deadline it behaves exactly like [`AdaptiveChunk`]; once the
 /// projected finish time would miss the deadline it escalates to the largest
 /// bucket, deliberately trading batched-decode latency for the deadline.
+///
+/// The deadline is the live `deadline_remaining_s` argument of
+/// [`ChunkPolicy::next_chunk`], recomputed by the scheduler from the
+/// request being chunked every iteration — one policy instance serves any
+/// number of requests.
 #[derive(Debug, Clone)]
 pub struct DeadlineChunk {
     pub inner: AdaptiveChunk,
-    /// Seconds remaining until the request's TTFT deadline (maintained by
-    /// the caller each iteration).
-    pub deadline_remaining_s: f64,
 }
 
 impl DeadlineChunk {
-    pub fn new(buckets: Vec<u64>, deadline_remaining_s: f64) -> DeadlineChunk {
+    pub fn new(buckets: Vec<u64>) -> DeadlineChunk {
         DeadlineChunk {
             inner: AdaptiveChunk::new(buckets),
-            deadline_remaining_s,
         }
     }
 
@@ -167,14 +177,15 @@ impl ChunkPolicy for DeadlineChunk {
         kv_done: u64,
         remaining: u64,
         decode_ctxs: &[u64],
+        deadline_remaining_s: f64,
         pm: &PerfModel,
         slo: &SloConfig,
     ) -> u64 {
-        let tbt_choice = self
-            .inner
-            .next_chunk(kv_done, remaining, decode_ctxs, pm, slo);
-        let on_track = self.projected_finish(tbt_choice, kv_done, remaining, pm)
-            <= self.deadline_remaining_s;
+        let tbt_choice =
+            self.inner
+                .next_chunk(kv_done, remaining, decode_ctxs, deadline_remaining_s, pm, slo);
+        let on_track =
+            self.projected_finish(tbt_choice, kv_done, remaining, pm) <= deadline_remaining_s;
         if on_track {
             tbt_choice
         } else {
@@ -200,9 +211,13 @@ mod tests {
             SloConfig {
                 ttft_s: 30.0,
                 tbt_s: 0.030,
+                ..SloConfig::default()
             },
         )
     }
+
+    /// No live deadline: policies that ignore it get `INFINITY`.
+    const NO_DEADLINE: f64 = f64::INFINITY;
 
     fn buckets() -> Vec<u64> {
         vec![32, 64, 128, 256, 512, 1024, 2048, 4096]
@@ -214,8 +229,8 @@ mod tests {
         // small.
         let (pm, slo) = setup();
         let pol = AdaptiveChunk::new(buckets());
-        let early = pol.next_chunk(0, u64::MAX / 2, &[], &pm, &slo);
-        let late = pol.next_chunk(4_000_000, u64::MAX / 2, &[], &pm, &slo);
+        let early = pol.next_chunk(0, u64::MAX / 2, &[], NO_DEADLINE, &pm, &slo);
+        let late = pol.next_chunk(4_000_000, u64::MAX / 2, &[], NO_DEADLINE, &pm, &slo);
         assert!(early >= 2048, "early={early}");
         assert!(late < early, "late={late} early={early}");
     }
@@ -225,9 +240,9 @@ mod tests {
         // More batched decodes -> less budget -> smaller chunk.
         let (pm, slo) = setup();
         let pol = AdaptiveChunk::new(buckets());
-        let alone = pol.next_chunk(1_000_000, 1 << 40, &[], &pm, &slo);
+        let alone = pol.next_chunk(1_000_000, 1 << 40, &[], NO_DEADLINE, &pm, &slo);
         let busy_ctxs: Vec<u64> = (0..64).map(|_| 500_000).collect();
-        let busy = pol.next_chunk(1_000_000, 1 << 40, &busy_ctxs, &pm, &slo);
+        let busy = pol.next_chunk(1_000_000, 1 << 40, &busy_ctxs, NO_DEADLINE, &pm, &slo);
         assert!(busy <= alone, "busy={busy} alone={alone}");
     }
 
@@ -235,8 +250,8 @@ mod tests {
     fn adaptive_never_exceeds_remaining() {
         let (pm, slo) = setup();
         let pol = AdaptiveChunk::new(buckets());
-        assert_eq!(pol.next_chunk(0, 100, &[], &pm, &slo), 100);
-        assert_eq!(pol.next_chunk(0, 1, &[], &pm, &slo), 1);
+        assert_eq!(pol.next_chunk(0, 100, &[], NO_DEADLINE, &pm, &slo), 100);
+        assert_eq!(pol.next_chunk(0, 1, &[], NO_DEADLINE, &pm, &slo), 1);
     }
 
     #[test]
@@ -246,17 +261,18 @@ mod tests {
         let tight = SloConfig {
             ttft_s: 30.0,
             tbt_s: 1e-6,
+            ..SloConfig::default()
         };
-        assert_eq!(pol.next_chunk(5_000_000, 1 << 40, &[], &pm, &tight), 32);
+        assert_eq!(pol.next_chunk(5_000_000, 1 << 40, &[], NO_DEADLINE, &pm, &tight), 32);
     }
 
     #[test]
     fn static_is_constant() {
         let (pm, slo) = setup();
         let pol = StaticChunk(512);
-        assert_eq!(pol.next_chunk(0, 1 << 40, &[], &pm, &slo), 512);
-        assert_eq!(pol.next_chunk(9_999_999, 1 << 40, &[], &pm, &slo), 512);
-        assert_eq!(pol.next_chunk(0, 100, &[], &pm, &slo), 100);
+        assert_eq!(pol.next_chunk(0, 1 << 40, &[], NO_DEADLINE, &pm, &slo), 512);
+        assert_eq!(pol.next_chunk(9_999_999, 1 << 40, &[], NO_DEADLINE, &pm, &slo), 512);
+        assert_eq!(pol.next_chunk(0, 100, &[], NO_DEADLINE, &pm, &slo), 100);
     }
 
     #[test]
@@ -264,11 +280,11 @@ mod tests {
         // Generous deadline: behaves like the adaptive policy.
         let (pm, slo) = setup();
         let adaptive = AdaptiveChunk::new(buckets());
-        let pol = DeadlineChunk::new(buckets(), 1e9);
+        let pol = DeadlineChunk::new(buckets());
         let busy: Vec<u64> = (0..32).map(|_| 500_000).collect();
         assert_eq!(
-            pol.next_chunk(2_000_000, 1 << 30, &busy, &pm, &slo),
-            adaptive.next_chunk(2_000_000, 1 << 30, &busy, &pm, &slo)
+            pol.next_chunk(2_000_000, 1 << 30, &busy, 1e9, &pm, &slo),
+            adaptive.next_chunk(2_000_000, 1 << 30, &busy, NO_DEADLINE, &pm, &slo)
         );
     }
 
@@ -277,10 +293,22 @@ mod tests {
         // 1 second left for a 4M prefill: must escalate to the max bucket
         // even with decodes batched along.
         let (pm, slo) = setup();
-        let pol = DeadlineChunk::new(buckets(), 1.0);
+        let pol = DeadlineChunk::new(buckets());
         let busy: Vec<u64> = (0..32).map(|_| 500_000).collect();
-        let c = pol.next_chunk(0, 4_000_000, &busy, &pm, &slo);
+        let c = pol.next_chunk(0, 4_000_000, &busy, 1.0, &pm, &slo);
         assert_eq!(c, *buckets().last().unwrap());
+    }
+
+    #[test]
+    fn deadline_policy_tracks_the_live_request() {
+        // The same policy instance serves two requests with different
+        // live deadlines — the stale-constructor-state bug this replaces.
+        let (pm, slo) = setup();
+        let pol = DeadlineChunk::new(buckets());
+        let relaxed = pol.next_chunk(2_000_000, 1 << 30, &[], 1e9, &pm, &slo);
+        let urgent = pol.next_chunk(2_000_000, 1 << 30, &[], 0.5, &pm, &slo);
+        assert_eq!(urgent, *buckets().last().unwrap());
+        assert!(relaxed <= urgent);
     }
 
     #[test]

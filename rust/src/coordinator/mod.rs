@@ -1,13 +1,44 @@
 //! The paper's coordination layer (L3): request lifecycle, mixed
-//! continuous-batching with chunked prefills, adaptive chunk sizing, the
-//! dense SPP pipeline schedule, dynamic KVP group management, request
-//! routing across replicas, and the 3D topology. Pure logic — time comes
-//! from either the cluster simulator (`crate::sim`) or wall-clock PJRT
-//! execution (`crate::engine`).
+//! continuous-batching with chunked prefills, adaptive chunk sizing,
+//! preemptive scheduling policies, the dense SPP pipeline schedule, dynamic
+//! KVP group management, request routing across replicas, and the 3D
+//! topology. Pure logic — time comes from either the cluster simulator
+//! (`crate::sim`) or wall-clock PJRT execution (`crate::engine`).
+//!
+//! # Scheduling policies (section 5)
+//!
+//! Which prefill a replica runs each iteration is decided by a pluggable
+//! [`SchedPolicy`] (see [`policy`]): a single urgency key re-evaluated over
+//! the ready set every iteration, with preemption only ever happening at a
+//! chunk boundary (the preempted request's KV stays resident and it resumes
+//! from the same boundary). Shipped policies:
+//!
+//! | policy | key (min runs first)                  | preemptive |
+//! |--------|---------------------------------------|------------|
+//! | `fcfs` | arrival time                          | no         |
+//! | `srpt` | remaining estimated prefill work      | yes        |
+//! | `edf`  | absolute TTFT deadline                | yes        |
+//! | `lars` | relative slack `(D − now − W) / W`    | yes        |
+//!
+//! LARS (Length-Aware Relative Slack) is the paper's scheduler: with
+//! length-aware deadlines (`SloConfig::ttft_deadline_for`) every fresh
+//! request starts at the same slack, short requests gain urgency fast
+//! (convoy elimination), and overdue long requests beat fresh short ones
+//! (starvation freedom).
+//!
+//! **Adding a policy**: implement [`SchedPolicy`] (a `priority` key and,
+//! optionally, `preemptive = false` to pin the head like FCFS), add a
+//! variant to [`SchedPolicyKind`] (`parse`/`name`/`build`) so it is
+//! selectable from config JSON (`scheduler.policy`) and the
+//! `simulate --policy` CLI flag, and it composes automatically with every
+//! chunk policy and the simulator. Deadline/work state lives on
+//! [`Request`] (`deadline_s`, `est_prefill_s`), assigned at admission from
+//! the perf model's prefill estimate.
 
 pub mod arena;
 pub mod chunking;
 pub mod kvp;
+pub mod policy;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -17,6 +48,7 @@ pub mod topology;
 pub use arena::{RequestArena, Slot};
 pub use chunking::{AdaptiveChunk, ChunkPolicy, DeadlineChunk, StaticChunk};
 pub use kvp::KvpManager;
+pub use policy::{Edf, Fcfs, Lars, SchedPolicy, SchedPolicyKind, Srpt};
 pub use request::{Phase, Request};
 pub use router::Router;
 pub use scheduler::{BatchPlan, Scheduler};

@@ -1,0 +1,308 @@
+//! Preemptive scheduling policies (section 5): the priority order a
+//! scheduler imposes on its ready set of prefill work, and whether it may
+//! switch away from a partially-prefilled request at a chunk boundary.
+//!
+//! Chunked prefills make preemption nearly free: the only legal switch
+//! point is a chunk boundary, the preempted request's KV stays resident,
+//! and resuming is just scheduling its next chunk. A policy therefore
+//! reduces to a single urgency key re-evaluated every iteration:
+//!
+//! * [`Fcfs`] — arrival order, never switches away mid-prefill (the
+//!   pre-policy behavior; convoy effect: a long document blocks every
+//!   short interactive request behind it).
+//! * [`Srpt`] — least remaining estimated work first. Optimal for mean
+//!   latency, but a steady stream of short requests starves long ones.
+//! * [`Edf`] — earliest deadline first. Honors heterogeneous deadlines
+//!   until one is missed; an overdue long request then monopolizes the
+//!   server and recreates the convoy for everything behind it.
+//! * [`Lars`] — Length-Aware Relative Slack, the paper's scheduler:
+//!   slack relative to remaining work, so short requests gain urgency
+//!   quickly (eliminating the convoy) while overdue long requests still
+//!   win against *fresh* short ones (starvation freedom).
+//!
+//! Deadlines and work estimates are assigned at admission (see
+//! [`SloConfig::ttft_deadline_for`](crate::config::SloConfig) and the
+//! simulator's perf-model prefill estimate) and carried on the
+//! [`Request`]; policies are pure functions of that state plus `now`.
+
+use std::collections::VecDeque;
+
+use super::arena::{RequestArena, Slot};
+use super::request::Request;
+
+/// Priority ordering + preemption decision over a scheduler's ready set.
+pub trait SchedPolicy: Send + Sync {
+    /// Urgency key for a queued (possibly partially-prefilled) request at
+    /// time `now`. The scheduler runs the request with the **minimum**
+    /// key; ties break toward the earlier queue position.
+    fn priority(&self, r: &Request, now: f64) -> f64;
+
+    /// Whether the scheduler may switch away from a partially-prefilled
+    /// request at a chunk boundary (its KV is retained and it resumes from
+    /// the same boundary). Non-preemptive policies run the head to
+    /// completion and skip the priority scan entirely.
+    fn preemptive(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// First-come-first-served: strict arrival order, non-preemptive.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fcfs;
+
+impl SchedPolicy for Fcfs {
+    fn priority(&self, r: &Request, _now: f64) -> f64 {
+        r.arrival_s
+    }
+
+    fn preemptive(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+}
+
+/// Shortest remaining processing time: least estimated prefill work left.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Srpt;
+
+impl SchedPolicy for Srpt {
+    fn priority(&self, r: &Request, _now: f64) -> f64 {
+        r.remaining_work_s()
+    }
+
+    fn name(&self) -> &'static str {
+        "srpt"
+    }
+}
+
+/// Earliest deadline first over the length-aware TTFT deadlines.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Edf;
+
+impl SchedPolicy for Edf {
+    fn priority(&self, r: &Request, _now: f64) -> f64 {
+        r.deadline_s
+    }
+
+    fn name(&self) -> &'static str {
+        "edf"
+    }
+}
+
+/// Length-Aware Relative Slack:
+/// `slack = (deadline − headroom − now − remaining_work) / remaining_work`.
+///
+/// With proportional deadlines (`deadline ≈ scale × estimated work`) every
+/// fresh request starts at the same slack regardless of length, and
+/// waiting erodes slack at a rate inversely proportional to remaining
+/// work: a short interactive request becomes urgent within seconds and
+/// preempts a long document prefill at the next chunk boundary, while the
+/// document's slowly-decaying slack eventually goes below every fresh
+/// short request's, so it cannot be starved.
+///
+/// `headroom_frac` schedules against a deadline pulled in by that fraction
+/// of the request's TTFT budget. Without it a tiny request only wins the
+/// slack race milliseconds before its deadline and the chunk already in
+/// flight pushes it just past; with it the preemption fires early enough
+/// that the deadline is met, not grazed.
+#[derive(Debug, Clone, Copy)]
+pub struct Lars {
+    pub headroom_frac: f64,
+}
+
+impl Default for Lars {
+    fn default() -> Lars {
+        Lars { headroom_frac: 0.2 }
+    }
+}
+
+/// Floor on the remaining-work denominator: keeps the slack ratio finite
+/// for requests whose estimated work is (or rounds to) zero.
+const MIN_WORK_S: f64 = 1e-9;
+
+impl SchedPolicy for Lars {
+    fn priority(&self, r: &Request, now: f64) -> f64 {
+        if !r.deadline_s.is_finite() {
+            return f64::INFINITY;
+        }
+        let rem = r.remaining_work_s().max(MIN_WORK_S);
+        let effective_deadline = r.deadline_s - self.headroom_frac * r.ttft_budget_s();
+        (effective_deadline - now - rem) / rem
+    }
+
+    fn name(&self) -> &'static str {
+        "lars"
+    }
+}
+
+/// Index of the most urgent (minimum-priority) request in `queue` at time
+/// `now`, ties breaking toward the earlier index. Returns 0 — the FCFS
+/// head — for empty or singleton queues and for non-preemptive policies,
+/// which skip the scan entirely. The single selection rule shared by the
+/// per-group ready sets and the simulator's long-request queue.
+pub fn select_most_urgent(
+    policy: &dyn SchedPolicy,
+    requests: &RequestArena,
+    queue: &VecDeque<Slot>,
+    now: f64,
+) -> usize {
+    if !policy.preemptive() || queue.len() < 2 {
+        return 0;
+    }
+    let mut best = 0usize;
+    let mut best_p = policy.priority(requests.get(queue[0]), now);
+    for i in 1..queue.len() {
+        let p = policy.priority(requests.get(queue[i]), now);
+        if p < best_p {
+            best = i;
+            best_p = p;
+        }
+    }
+    best
+}
+
+/// Config/CLI-selectable policy identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicyKind {
+    Fcfs,
+    Srpt,
+    Edf,
+    Lars,
+}
+
+impl SchedPolicyKind {
+    pub const ALL: [SchedPolicyKind; 4] = [
+        SchedPolicyKind::Fcfs,
+        SchedPolicyKind::Srpt,
+        SchedPolicyKind::Edf,
+        SchedPolicyKind::Lars,
+    ];
+
+    pub fn parse(s: &str) -> Option<SchedPolicyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fcfs" | "fifo" => Some(SchedPolicyKind::Fcfs),
+            "srpt" => Some(SchedPolicyKind::Srpt),
+            "edf" => Some(SchedPolicyKind::Edf),
+            "lars" => Some(SchedPolicyKind::Lars),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedPolicyKind::Fcfs => "fcfs",
+            SchedPolicyKind::Srpt => "srpt",
+            SchedPolicyKind::Edf => "edf",
+            SchedPolicyKind::Lars => "lars",
+        }
+    }
+
+    pub fn build(self) -> Box<dyn SchedPolicy> {
+        match self {
+            SchedPolicyKind::Fcfs => Box::new(Fcfs),
+            SchedPolicyKind::Srpt => Box::new(Srpt),
+            SchedPolicyKind::Edf => Box::new(Edf),
+            SchedPolicyKind::Lars => Box::new(Lars::default()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt_len: u64, arrival_s: f64, est_s: f64, budget_s: f64) -> Request {
+        Request::new(1, prompt_len, 4, arrival_s).with_slo(est_s, arrival_s + budget_s)
+    }
+
+    #[test]
+    fn kind_parse_roundtrips() {
+        for k in SchedPolicyKind::ALL {
+            assert_eq!(SchedPolicyKind::parse(k.name()), Some(k));
+            assert_eq!(k.build().name(), k.name());
+        }
+        assert_eq!(SchedPolicyKind::parse("FIFO"), Some(SchedPolicyKind::Fcfs));
+        assert_eq!(SchedPolicyKind::parse("wfq"), None);
+    }
+
+    #[test]
+    fn fcfs_is_arrival_order_and_non_preemptive() {
+        let p = Fcfs;
+        assert!(!p.preemptive());
+        let a = req(100, 1.0, 0.1, 2.0);
+        let b = req(100, 2.0, 0.1, 2.0);
+        assert!(p.priority(&a, 5.0) < p.priority(&b, 5.0));
+    }
+
+    #[test]
+    fn srpt_prefers_less_remaining_work() {
+        let p = Srpt;
+        let short = req(100, 0.0, 0.1, 2.0);
+        let long = req(1_000_000, 0.0, 60.0, 300.0);
+        assert!(p.priority(&short, 0.0) < p.priority(&long, 0.0));
+    }
+
+    #[test]
+    fn lars_fresh_requests_tie_regardless_of_length() {
+        // With proportional deadlines (budget = scale × est), every fresh
+        // request's relative slack is (1 − headroom) × scale − 1.
+        let p = Lars::default();
+        let short = req(100, 0.0, 0.1, 0.5); // 5× its work
+        let long = req(1_000_000, 0.0, 60.0, 300.0); // 5× its work
+        let ps = p.priority(&short, 0.0);
+        let pl = p.priority(&long, 0.0);
+        let fresh = (1.0 - p.headroom_frac) * 5.0 - 1.0;
+        assert!((ps - fresh).abs() < 1e-6, "short fresh slack {ps}");
+        assert!((pl - fresh).abs() < 1e-6, "long fresh slack {pl}");
+    }
+
+    #[test]
+    fn lars_short_gains_urgency_faster_than_long() {
+        let p = Lars::default();
+        let short = req(100, 0.0, 0.1, 0.5);
+        let long = req(1_000_000, 0.0, 60.0, 300.0);
+        // after 2 seconds of waiting the short request is far more urgent
+        assert!(p.priority(&short, 2.0) < p.priority(&long, 2.0) - 1.0);
+        // and an overdue long request beats a *fresh* short one
+        let fresh_short = req(100, 310.0, 0.1, 0.5);
+        assert!(p.priority(&long, 310.0) < p.priority(&fresh_short, 310.0));
+    }
+
+    #[test]
+    fn edf_orders_by_absolute_deadline() {
+        let p = Edf;
+        let tight = req(100, 0.0, 0.1, 1.0);
+        let loose = req(100, 0.0, 0.1, 10.0);
+        assert!(p.priority(&tight, 0.0) < p.priority(&loose, 0.0));
+    }
+
+    #[test]
+    fn select_most_urgent_scans_preemptive_only() {
+        let mut arena = RequestArena::new();
+        let mut q = VecDeque::new();
+        // queue order: early long arrival first, urgent short second
+        q.push_back(arena.insert(req(1_000_000, 0.0, 60.0, 300.0)));
+        q.push_back(arena.insert(req(100, 10.0, 0.1, 0.5)));
+        // FCFS: non-preemptive, always the head
+        assert_eq!(select_most_urgent(&Fcfs, &arena, &q, 11.0), 0);
+        // SRPT: the short request has less remaining work
+        assert_eq!(select_most_urgent(&Srpt, &arena, &q, 11.0), 1);
+        // LARS: the short request is near its deadline, the long is fresh
+        assert_eq!(select_most_urgent(&Lars::default(), &arena, &q, 11.0), 1);
+        // singleton queue short-circuits to the head
+        q.pop_back();
+        assert_eq!(select_most_urgent(&Lars::default(), &arena, &q, 11.0), 0);
+    }
+
+    #[test]
+    fn lars_handles_zero_estimate() {
+        let p = Lars::default();
+        let r = Request::new(1, 10, 1, 0.0); // no SLO state: infinite deadline
+        assert!(p.priority(&r, 100.0).is_infinite());
+    }
+}

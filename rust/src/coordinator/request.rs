@@ -33,6 +33,13 @@ pub struct Request {
     pub last_token_s: Option<f64>,
     /// Per-token inter-arrival latencies (TBT samples).
     pub tbt_samples: Vec<f64>,
+    /// Absolute TTFT deadline (arrival + length-aware budget, see
+    /// `SloConfig::ttft_deadline_for`). `INFINITY` until assigned at
+    /// admission; scheduling policies and attainment metrics read it.
+    pub deadline_s: f64,
+    /// Perf-model estimate of the full isolated prefill time, set at
+    /// admission. Scaled by prefill progress via [`Self::remaining_work_s`].
+    pub est_prefill_s: f64,
 }
 
 impl Request {
@@ -50,7 +57,33 @@ impl Request {
             finished_s: None,
             last_token_s: None,
             tbt_samples: Vec::new(),
+            deadline_s: f64::INFINITY,
+            est_prefill_s: 0.0,
         }
+    }
+
+    /// Attach admission-time SLO state: the perf-model prefill estimate and
+    /// the absolute TTFT deadline derived from it.
+    pub fn with_slo(mut self, est_prefill_s: f64, deadline_s: f64) -> Request {
+        self.est_prefill_s = est_prefill_s;
+        self.deadline_s = deadline_s;
+        self
+    }
+
+    /// Estimated seconds of prefill work remaining: the admission estimate
+    /// scaled by how much of the prompt is still unprocessed.
+    pub fn remaining_work_s(&self) -> f64 {
+        self.est_prefill_s * self.remaining_prefill() as f64 / self.prompt_len as f64
+    }
+
+    /// Seconds until the TTFT deadline at time `now` (negative once overdue).
+    pub fn deadline_remaining_s(&self, now: f64) -> f64 {
+        self.deadline_s - now
+    }
+
+    /// The TTFT budget this request was admitted under (deadline − arrival).
+    pub fn ttft_budget_s(&self) -> f64 {
+        self.deadline_s - self.arrival_s
     }
 
     pub fn remaining_prefill(&self) -> u64 {
@@ -146,6 +179,26 @@ mod tests {
     fn chunk_cannot_overrun() {
         let mut r = Request::new(3, 10, 1, 0.0);
         r.complete_chunk(11, 0.0);
+    }
+
+    #[test]
+    fn slo_state_tracks_prefill_progress() {
+        let mut r = Request::new(5, 1_000, 8, 10.0).with_slo(4.0, 30.0);
+        assert_eq!(r.ttft_budget_s(), 20.0);
+        assert_eq!(r.deadline_remaining_s(12.0), 18.0);
+        assert!((r.remaining_work_s() - 4.0).abs() < 1e-12);
+        r.complete_chunk(500, 11.0);
+        assert!((r.remaining_work_s() - 2.0).abs() < 1e-12);
+        r.complete_chunk(500, 12.0);
+        assert_eq!(r.remaining_work_s(), 0.0);
+    }
+
+    #[test]
+    fn unassigned_slo_is_infinitely_lax() {
+        let r = Request::new(6, 100, 1, 0.0);
+        assert!(r.deadline_s.is_infinite());
+        assert_eq!(r.remaining_work_s(), 0.0);
+        assert!(r.ttft_budget_s().is_infinite());
     }
 
     #[test]

@@ -1,11 +1,19 @@
-//! Mixed continuous-batching scheduler (sections 2.4, 4.1–4.2).
+//! Mixed continuous-batching scheduler (sections 2.4, 4.1–4.2, 5).
 //!
 //! Every iteration the scheduler forms one mixed batch per replica:
 //! all active decodes (continuous batching, Orca-style) plus one chunk of
-//! the head-of-queue prefill, sized by the chunk policy. Chunking is what
-//! eliminates head-of-line blocking: a newly arrived request waits at most
-//! one bounded iteration, never behind a monolithic multi-minute prefill
+//! one prefill, sized by the chunk policy. Chunking is what eliminates
+//! head-of-line blocking: a newly arrived request waits at most one
+//! bounded iteration, never behind a monolithic multi-minute prefill
 //! (Fig. 14b).
+//!
+//! **Which** prefill runs is decided by a pluggable [`SchedPolicy`]
+//! (section 5): each iteration the ready set is scanned for the
+//! minimum-priority request, and preemptive policies (SRPT, EDF, LARS) may
+//! switch away from a partially-prefilled request at the chunk boundary —
+//! its KV stays resident and it resumes from the same boundary later. The
+//! default FCFS policy is non-preemptive and preserves the original strict
+//! queue-order behavior (and its hot path: no scan).
 //!
 //! The scheduler is built for a hot loop that runs millions of times per
 //! simulated trace: requests are referenced by arena [`Slot`]s, batch plans
@@ -18,6 +26,7 @@ use std::collections::VecDeque;
 
 use super::arena::{RequestArena, Slot};
 use super::chunking::ChunkPolicy;
+use super::policy::{Fcfs, SchedPolicy};
 use super::request::{Phase, Request};
 use crate::config::SloConfig;
 use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
@@ -47,24 +56,48 @@ impl BatchPlan {
 /// Iteration-level scheduler state for one replica (one KVP group).
 pub struct Scheduler {
     pub policy: Box<dyn ChunkPolicy>,
+    /// Ready-set ordering + preemption policy (section 5). FCFS by default.
+    pub sched: Box<dyn SchedPolicy>,
     pub max_batch: usize,
-    /// FIFO of requests awaiting/undergoing prefill.
+    /// Requests awaiting/undergoing prefill. Strict FIFO under FCFS; under
+    /// a preemptive policy the minimum-priority request is moved to the
+    /// front each iteration (order of the rest is immaterial — selection
+    /// re-scans every iteration).
     prefill_queue: VecDeque<Slot>,
     /// Requests in decode phase, in the order they entered decode.
     decoding: Vec<Slot>,
     /// Local KV length per decoding request, parallel to `decoding`.
     /// Maintained incrementally so batch formation never walks the arena.
     decode_ctxs: Vec<u64>,
+    /// The prefill scheduled last iteration, while it is still mid-prefill
+    /// (cleared when it leaves the queue). Switching away from it counts
+    /// as a preemption.
+    running_prefill: Option<Slot>,
+    /// Chunk-boundary switches away from a partially-prefilled request.
+    pub preemptions: u64,
 }
 
 impl Scheduler {
+    /// FCFS scheduler (the non-preemptive default every oracle-parity test
+    /// relies on).
     pub fn new(policy: Box<dyn ChunkPolicy>, max_batch: usize) -> Scheduler {
+        Scheduler::with_policy(policy, Box::new(Fcfs), max_batch)
+    }
+
+    pub fn with_policy(
+        policy: Box<dyn ChunkPolicy>,
+        sched: Box<dyn SchedPolicy>,
+        max_batch: usize,
+    ) -> Scheduler {
         Scheduler {
             policy,
+            sched,
             max_batch,
             prefill_queue: VecDeque::new(),
             decoding: Vec::new(),
             decode_ctxs: Vec::new(),
+            running_prefill: None,
+            preemptions: 0,
         }
     }
 
@@ -94,6 +127,15 @@ impl Scheduler {
     /// Form the next mixed batch into `out` (allocation-free once `out`'s
     /// decode list has warmed up).
     ///
+    /// The prefill slot goes to the minimum-priority request in the ready
+    /// set at time `now` (ties break toward the earlier queue position).
+    /// Under a preemptive policy that request may differ from the one that
+    /// ran last iteration even if the latter is mid-prefill — that is a
+    /// chunk-boundary preemption: the preempted request keeps its place in
+    /// the queue and its computed KV, and resumes from the same boundary
+    /// when it wins again. Non-preemptive policies (FCFS) skip the scan
+    /// and run the head to completion.
+    ///
     /// The chunk policy sees the incrementally-tracked decode contexts,
     /// whose values are defined by the `local_kv` closure passed to
     /// [`Self::complete_iteration_into`] — batch formation itself never
@@ -103,6 +145,7 @@ impl Scheduler {
         requests: &RequestArena,
         pm: &PerfModel,
         slo: &SloConfig,
+        now: f64,
         out: &mut BatchPlan,
     ) {
         out.clear();
@@ -111,16 +154,36 @@ impl Scheduler {
         out.decodes.extend_from_slice(&self.decoding[..k]);
         let decode_ctxs = &self.decode_ctxs[..k];
 
-        // Piggyback one prefill chunk from the head of the queue.
+        // Priority-driven selection over the ready set: move the most
+        // urgent request to the front. The scan is O(ready set) per
+        // iteration — fine at interactive backlog depths, and skipped
+        // entirely under FCFS; a priority-heap ready set for huge backlogs
+        // is a ROADMAP follow-up (only LARS keys are time-varying).
+        let best = super::policy::select_most_urgent(
+            self.sched.as_ref(),
+            requests,
+            &self.prefill_queue,
+            now,
+        );
+        if best != 0 {
+            self.prefill_queue.swap(0, best);
+        }
+
+        // Piggyback one chunk of the selected prefill.
         out.prefill = self.prefill_queue.front().and_then(|&s| {
             let r = requests.get(s);
             let remaining = r.remaining_prefill();
             if remaining == 0 {
                 return None;
             }
-            let c = self
-                .policy
-                .next_chunk(r.kv_len(), remaining, decode_ctxs, pm, slo);
+            let c = self.policy.next_chunk(
+                r.kv_len(),
+                remaining,
+                decode_ctxs,
+                r.deadline_remaining_s(now),
+                pm,
+                slo,
+            );
             Some((s, c.max(1).min(remaining)))
         });
     }
@@ -131,9 +194,10 @@ impl Scheduler {
         requests: &RequestArena,
         pm: &PerfModel,
         slo: &SloConfig,
+        now: f64,
     ) -> BatchPlan {
         let mut plan = BatchPlan::default();
-        self.next_batch_into(requests, pm, slo, &mut plan);
+        self.next_batch_into(requests, pm, slo, now, &mut plan);
         plan
     }
 
@@ -194,6 +258,13 @@ impl Scheduler {
         finished.clear();
         let mut any_decode_finished = false;
         if let Some((s, c)) = plan.prefill {
+            // Preemption accounting, at the moment the switch takes effect:
+            // a different request than the mid-prefill one actually ran.
+            // (Counting here, not at plan formation, keeps re-forming an
+            // unexecuted plan from inflating the metric.)
+            if matches!(self.running_prefill, Some(prev) if prev != s) {
+                self.preemptions += 1;
+            }
             let r = requests.get_mut(s);
             r.complete_chunk(c, t);
             match r.phase {
@@ -201,12 +272,14 @@ impl Scheduler {
                     self.prefill_queue.pop_front();
                     self.decoding.push(s);
                     self.decode_ctxs.push(local_kv(requests.get(s)).max(1));
+                    self.running_prefill = None;
                 }
                 Phase::Finished => {
                     self.prefill_queue.pop_front();
                     finished.push(s);
+                    self.running_prefill = None;
                 }
-                _ => {}
+                _ => self.running_prefill = Some(s),
             }
         }
         for (i, &s) in plan.decodes.iter().enumerate() {
@@ -262,6 +335,7 @@ mod tests {
     use super::*;
     use crate::config::DeploymentConfig;
     use crate::coordinator::chunking::{AdaptiveChunk, StaticChunk};
+    use crate::coordinator::policy::{Lars, Srpt};
 
     fn setup() -> (PerfModel, SloConfig, RequestArena) {
         let d = DeploymentConfig::llama3_8b_tp8();
@@ -283,22 +357,22 @@ mod tests {
         let mut s = static_sched(64);
         s.enqueue(s1);
 
-        let p1 = s.next_batch(&reqs, &pm, &slo);
+        let p1 = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(p1.prefill, Some((s1, 64)));
         assert!(p1.decodes.is_empty());
         s.complete_iteration(&p1, &mut reqs, 0.1);
 
-        let p2 = s.next_batch(&reqs, &pm, &slo);
+        let p2 = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(p2.prefill, Some((s1, 36))); // clipped to remaining
         s.complete_iteration(&p2, &mut reqs, 0.2);
         assert_eq!(reqs[s1].phase, Phase::Decoding);
 
         // now it decodes; no prefill left
-        let p3 = s.next_batch(&reqs, &pm, &slo);
+        let p3 = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(p3.prefill, None);
         assert_eq!(p3.decodes, vec![s1]);
         s.complete_iteration(&p3, &mut reqs, 0.3);
-        let p4 = s.next_batch(&reqs, &pm, &slo);
+        let p4 = s.next_batch(&reqs, &pm, &slo, 0.0);
         let fin = s.complete_iteration(&p4, &mut reqs, 0.4);
         assert_eq!(fin, vec![s1]);
         assert!(!s.has_work());
@@ -312,11 +386,11 @@ mod tests {
         let s2 = reqs.insert(Request::new(2, 1_000_000, 10, 1.0));
         let mut s = static_sched(512);
         s.enqueue(s1);
-        let p = s.next_batch(&reqs, &pm, &slo);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.0);
         s.complete_iteration(&p, &mut reqs, 0.1); // prefills 1 fully
         s.enqueue(s2);
 
-        let plan = s.next_batch(&reqs, &pm, &slo);
+        let plan = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(plan.prefill, Some((s2, 512)));
         assert_eq!(plan.decodes, vec![s1]); // decode not blocked by long prefill
     }
@@ -330,11 +404,11 @@ mod tests {
             128,
         );
         s.enqueue(s1);
-        let first = s.next_batch(&reqs, &pm, &slo);
+        let first = s.next_batch(&reqs, &pm, &slo, 0.0);
         let (_, c_first) = first.prefill.unwrap();
         // fast-forward most of the prefill
         reqs[s1].complete_chunk(6_000_000, 100.0);
-        let late = s.next_batch(&reqs, &pm, &slo);
+        let late = s.next_batch(&reqs, &pm, &slo, 0.0);
         let (_, c_late) = late.prefill.unwrap();
         assert!(c_late < c_first, "late={c_late} first={c_first}");
     }
@@ -346,11 +420,11 @@ mod tests {
         for id in 0..8 {
             let slot = reqs.insert(Request::new(id, 1, 100, 0.0));
             s.enqueue(slot);
-            let p = s.next_batch(&reqs, &pm, &slo);
+            let p = s.next_batch(&reqs, &pm, &slo, 0.0);
             s.complete_iteration(&p, &mut reqs, 0.1);
         }
         assert_eq!(s.n_decoding(), 8);
-        let plan = s.next_batch(&reqs, &pm, &slo);
+        let plan = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(plan.decodes.len(), 4);
     }
 
@@ -360,10 +434,10 @@ mod tests {
         let s1 = reqs.insert(Request::new(1, 1, 100, 0.0));
         let mut s = static_sched(64);
         s.enqueue(s1);
-        let p = s.next_batch(&reqs, &pm, &slo);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.0);
         s.complete_iteration(&p, &mut reqs, 0.1);
         reqs[s1].decoded = 50; // pretend long decode
-        let plan = s.next_batch(&reqs, &pm, &slo);
+        let plan = s.next_batch(&reqs, &pm, &slo, 0.0);
         // KVP view: local shard is half the KV
         let shape = s.batch_shape(&plan, &reqs, |r| r.kv_len() / 2);
         assert_eq!(shape.decodes[0].kv_len, reqs[s1].kv_len() / 2);
@@ -378,12 +452,12 @@ mod tests {
         s.enqueue(s1);
         s.enqueue(s2);
         for _ in 0..2 {
-            let p = s.next_batch(&reqs, &pm, &slo);
+            let p = s.next_batch(&reqs, &pm, &slo, 0.0);
             s.complete_iteration(&p, &mut reqs, 0.1);
         }
         // both decoding: ctxs mirror kv lengths, in decode-entry order
         assert_eq!(s.decode_ctxs(), &[reqs[s1].kv_len(), reqs[s2].kv_len()]);
-        let p = s.next_batch(&reqs, &pm, &slo);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.0);
         s.complete_iteration(&p, &mut reqs, 0.2);
         assert_eq!(s.decode_ctxs(), &[reqs[s1].kv_len(), reqs[s2].kv_len()]);
     }
@@ -397,16 +471,93 @@ mod tests {
         for (id, out) in [(1u64, 8u64), (2, 3), (3, 8)] {
             let slot = reqs.insert(Request::new(id, 4, out, 0.0));
             s.enqueue(slot);
-            let p = s.next_batch(&reqs, &pm, &slo);
+            let p = s.next_batch(&reqs, &pm, &slo, 0.0);
             s.complete_iteration(&p, &mut reqs, 0.1);
             slots.push(slot);
         }
-        let p = s.next_batch(&reqs, &pm, &slo);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.0);
         let fin = s.complete_iteration(&p, &mut reqs, 0.2);
         assert_eq!(fin, vec![slots[1]]);
         // survivors keep their relative order and their ctxs
-        let p = s.next_batch(&reqs, &pm, &slo);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(p.decodes, vec![slots[0], slots[2]]);
         assert_eq!(s.decode_ctxs(), &[reqs[slots[0]].kv_len(), reqs[slots[2]].kv_len()]);
+    }
+
+    #[test]
+    fn lars_preempts_long_prefill_for_urgent_short() {
+        let (pm, slo, mut reqs) = setup();
+        let mut s =
+            Scheduler::with_policy(Box::new(StaticChunk(64)), Box::new(Lars::default()), 128);
+        // 10 chunks of estimated work, generous proportional deadline
+        let long = reqs.insert(Request::new(1, 640, 4, 0.0).with_slo(10.0, 50.0));
+        s.enqueue(long);
+        for t in [0.1, 0.2] {
+            let p = s.next_batch(&reqs, &pm, &slo, t - 0.1);
+            assert_eq!(p.prefill, Some((long, 64)));
+            s.complete_iteration(&p, &mut reqs, t);
+        }
+        assert_eq!(reqs[long].prefilled, 128);
+
+        // urgent short arrives: tiny remaining work, deadline nearly blown
+        let short = reqs.insert(Request::new(2, 64, 2, 0.2).with_slo(0.05, 0.3));
+        s.enqueue(short);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.25);
+        assert_eq!(p.prefill, Some((short, 64)), "urgent short must preempt");
+        assert_eq!(s.preemptions, 0, "counted only when the switch executes");
+        // preemption point is the chunk boundary: the long request's KV is
+        // retained exactly as computed
+        assert_eq!(reqs[long].prefilled, 128);
+        assert_eq!(reqs[long].phase, Phase::Prefilling);
+        s.complete_iteration(&p, &mut reqs, 0.3);
+        assert_eq!(s.preemptions, 1);
+        assert_eq!(reqs[short].phase, Phase::Decoding);
+
+        // the long request resumes from its exact boundary, KV intact
+        let p = s.next_batch(&reqs, &pm, &slo, 0.35);
+        assert_eq!(p.prefill, Some((long, 64)));
+        assert_eq!(p.decodes, vec![short]);
+        s.complete_iteration(&p, &mut reqs, 0.4);
+        assert_eq!(reqs[long].prefilled, 192);
+        assert_eq!(s.preemptions, 1, "resuming is not a preemption");
+    }
+
+    #[test]
+    fn srpt_runs_shortest_first_without_counting_false_preemptions() {
+        let (pm, slo, mut reqs) = setup();
+        let mut s = Scheduler::with_policy(Box::new(StaticChunk(64)), Box::new(Srpt), 128);
+        let big = reqs.insert(Request::new(1, 1_000, 1, 0.0).with_slo(1.0, 100.0));
+        let small = reqs.insert(Request::new(2, 64, 1, 0.0).with_slo(0.05, 100.0));
+        s.enqueue(big);
+        s.enqueue(small);
+        // the small request runs first even though it arrived second
+        let p = s.next_batch(&reqs, &pm, &slo, 0.0);
+        assert_eq!(p.prefill, Some((small, 64)));
+        s.complete_iteration(&p, &mut reqs, 0.1);
+        // nothing had started when the small one won: no preemption
+        assert_eq!(s.preemptions, 0);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.1);
+        assert_eq!(p.prefill, Some((big, 64)));
+    }
+
+    #[test]
+    fn fcfs_never_reorders_or_preempts() {
+        let (pm, slo, mut reqs) = setup();
+        let mut s = static_sched(64);
+        // second request is far more urgent under any deadline policy —
+        // FCFS must ignore that entirely
+        let a = reqs.insert(Request::new(1, 256, 1, 0.0).with_slo(10.0, 1_000.0));
+        let b = reqs.insert(Request::new(2, 64, 1, 0.1).with_slo(0.01, 0.2));
+        s.enqueue(a);
+        s.enqueue(b);
+        for t in [1.0, 2.0, 3.0, 4.0] {
+            let p = s.next_batch(&reqs, &pm, &slo, t);
+            if reqs[a].remaining_prefill() > 0 {
+                assert_eq!(p.prefill, Some((a, reqs[a].remaining_prefill().min(64))));
+            }
+            s.complete_iteration(&p, &mut reqs, t);
+        }
+        assert_eq!(s.preemptions, 0);
+        assert!(reqs[a].is_finished());
     }
 }

@@ -15,6 +15,8 @@ pub const ALL_FIGURES: &[&str] = &[
     "fig14b", "fig15", "fig16", "fig17", "fig18", "fig19", "fig20", "fig21", "fig22", "sec62",
     // ablations of DESIGN.md §6 (not paper figures, but design-choice evidence)
     "fig9", "disagg", "kvpthresh",
+    // scheduling-policy comparison on the heterogeneous convoy trace (sec. 5)
+    "sched",
 ];
 
 pub fn run(figure: &str) -> anyhow::Result<()> {
@@ -42,6 +44,7 @@ pub fn run(figure: &str) -> anyhow::Result<()> {
         "fig9" => fig9(),
         "disagg" => disagg(),
         "kvpthresh" => kvpthresh(),
+        "sched" => sched(),
         "all" => {
             for f in ALL_FIGURES {
                 run(f)?;
@@ -103,7 +106,11 @@ pub fn table1() -> anyhow::Result<()> {
 /// Fig. 5a — max supported tokens per resource type (8xH100, 8B).
 pub fn fig5a() -> anyhow::Result<()> {
     println!("\n== Fig. 5a: max tokens per resource, Llama-3 8B on 8xH100 (30s TTFT / 20ms TBT) ==");
-    let slo = SloConfig { ttft_s: 30.0, tbt_s: 0.020 };
+    let slo = SloConfig {
+        ttft_s: 30.0,
+        tbt_s: 0.020,
+        ..SloConfig::default()
+    };
     let dep = dep8b(8, 1, 1);
     let r = resource_limits(&dep.model, &dep.hardware, 8, &slo);
     println!("compute-bound max tokens:   {:>12}", fmt_tokens(r.compute_tokens));
@@ -116,7 +123,11 @@ pub fn fig5a() -> anyhow::Result<()> {
 /// Fig. 5b — GPUs needed per resource type vs context length.
 pub fn fig5b() -> anyhow::Result<()> {
     println!("\n== Fig. 5b: GPUs required vs context (Llama-3 8B, 30s TTFT / 20ms TBT) ==");
-    let slo = SloConfig { ttft_s: 30.0, tbt_s: 0.020 };
+    let slo = SloConfig {
+        ttft_s: 30.0,
+        tbt_s: 0.020,
+        ..SloConfig::default()
+    };
     let dep = dep8b(8, 1, 1);
     println!(
         "{:<10} {:>9} {:>10} {:>10} {:>8}",
@@ -676,6 +687,51 @@ pub fn kvpthresh() -> anyhow::Result<()> {
     }
     println!("smaller thresholds onboard more groups sooner: lower decode TBT,");
     println!("more GPUs consumed earlier (the Fig. 19 trade-off).");
+    Ok(())
+}
+
+/// Scheduling-policy comparison (section 5): FCFS / SRPT / EDF / LARS on
+/// the heterogeneous convoy trace, interactive and document requests
+/// sharing one replica's queue.
+pub fn sched() -> anyhow::Result<()> {
+    use crate::coordinator::SchedPolicyKind;
+
+    println!("\n== sched: policy comparison on the convoy trace (8B, tp=8, one replica) ==");
+    let cfg = workload::ConvoyConfig::default();
+    let w = workload::convoy(&cfg, 42);
+    let n_long = w.iter().filter(|r| cfg.is_long(r.prompt_len)).count();
+    println!(
+        "{} requests over {:.0}s: {} interactive ({} tok) + {} documents ({})",
+        w.len(),
+        cfg.horizon_s,
+        w.len() - n_long,
+        cfg.short_prompt,
+        n_long,
+        fmt_tokens(cfg.long_prompt)
+    );
+    println!(
+        "{:<6} {:>12} {:>12} {:>12} {:>8} {:>9} {:>10} {:>9}",
+        "policy", "short p50", "short p99", "doc max", "attain", "goodput", "preempts", "TTFT p95"
+    );
+    for kind in SchedPolicyKind::ALL {
+        let mut sim = crate::sim::run_convoy_scenario(kind, &cfg, 42);
+        let (mut short, mut docs) = crate::sim::convoy_ttft_split(&sim, &cfg);
+        let doc_max = docs.max();
+        let s = sim.metrics.summary();
+        println!(
+            "{:<6} {:>12} {:>12} {:>12} {:>7.0}% {:>7.2}/s {:>10} {:>9}",
+            kind.name(),
+            fmt_duration(short.median()),
+            fmt_duration(short.p99()),
+            fmt_duration(doc_max),
+            s.ttft_attainment * 100.0,
+            s.goodput_rps,
+            s.preemptions,
+            fmt_duration(s.ttft_p95)
+        );
+    }
+    println!("LARS: bounded short-request tails (no convoy) without starving documents;");
+    println!("SRPT starves documents under load, EDF re-creates the convoy once one is late.");
     Ok(())
 }
 

@@ -8,12 +8,13 @@
 //!   table1      print the capability matrix
 
 use medha::config::DeploymentConfig;
+use medha::coordinator::SchedPolicyKind;
 use medha::engine::pipeline::{serve, ServeRequest};
 use medha::engine::{detokenize, tokenize};
 use medha::sim::{SimOptions, Simulation};
 use medha::util::args::Args;
 use medha::util::stats::{fmt_duration, fmt_tokens};
-use medha::workload::{self, LengthDist};
+use medha::workload::{self, ConvoyConfig, LengthDist};
 
 const USAGE: &str = "\
 medha — long-context LLM serving (Mnemosyne/Medha reproduction)
@@ -21,6 +22,7 @@ medha — long-context LLM serving (Mnemosyne/Medha reproduction)
 USAGE:
   medha serve     [--artifacts DIR] [--stages N] [--chunk-cap C] [--prompt TEXT] [--requests N] [--new-tokens N]
   medha simulate  [--model llama3-8b|llama3-70b] [--tp N] [--spp N] [--kvp N]
+                  [--policy fcfs|srpt|edf|lars] [--workload mixed|convoy]
                   [--ctx TOKENS] [--requests N] [--rate R] [--horizon S] [--seed S]
   medha reproduce --figure <fig1|table1|fig5a|...|all>
   medha inspect   [--artifacts DIR]
@@ -106,12 +108,28 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if args.flag("no-adaptive") {
         dep.scheduler.adaptive_chunking = false;
     }
+    if let Some(p) = args.get("policy") {
+        dep.scheduler.policy = SchedPolicyKind::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown --policy '{p}' (fcfs|srpt|edf|lars)"))?;
+    }
     dep.validate()?;
     let ctx = args.u64_or("ctx", 1_000_000);
     let n = args.usize_or("requests", 8);
     let rate = args.f64_or("rate", 0.0);
-    let w = if rate > 0.0 {
-        workload::poisson_mixed(
+    let mut opts = SimOptions::default();
+    let w = match args.str_or("workload", "mixed") {
+        "convoy" => {
+            let cfg = ConvoyConfig {
+                rate_per_s: if rate > 0.0 { rate } else { 2.0 },
+                horizon_s: args.f64_or("horizon", 60.0),
+                long_prompt: ctx,
+                ..ConvoyConfig::default()
+            };
+            // the convoy scenario: documents share the interactive queue
+            opts.long_threshold = u64::MAX;
+            workload::convoy(&cfg, args.u64_or("seed", 0))
+        }
+        "mixed" if rate > 0.0 => workload::poisson_mixed(
             rate,
             args.f64_or("horizon", 300.0),
             LengthDist::ZipfBuckets {
@@ -120,18 +138,19 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             },
             256,
             args.u64_or("seed", 0),
-        )
-    } else {
-        workload::long_plus_decodes(ctx, n, 1_000, 512)
+        ),
+        "mixed" => workload::long_plus_decodes(ctx, n, 1_000, 512),
+        other => anyhow::bail!("unknown --workload '{other}' (mixed|convoy)"),
     };
     println!(
-        "simulating {} requests on {} x{} ({})",
+        "simulating {} requests on {} x{} ({}, policy {})",
         w.len(),
         dep.model.name,
         dep.total_gpus(),
-        dep.parallel.label()
+        dep.parallel.label(),
+        dep.scheduler.policy.name()
     );
-    let mut sim = Simulation::new(dep, w, SimOptions::default());
+    let mut sim = Simulation::new(dep, w, opts);
     let end = sim.run();
     let s = sim.metrics.summary();
     println!("simulated span: {}", fmt_duration(end));
@@ -153,6 +172,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         s.decode_tps,
         s.mfu_mean * 100.0,
         s.mbu_mean * 100.0
+    );
+    println!(
+        "SLO: TTFT deadline attainment {:.0}%   TBT attainment {:.0}%   \
+         goodput {:.2} req/s   preemptions {}",
+        s.ttft_attainment * 100.0,
+        s.tbt_attainment * 100.0,
+        s.goodput_rps,
+        s.preemptions
     );
     Ok(())
 }

@@ -1,5 +1,13 @@
-//! Serving metrics: TTFT / TBT percentile recorders, per-iteration traces
-//! (the Fig. 19 timeline), and MFU/MBU aggregation (Figs. 20–21).
+//! Serving metrics: TTFT / TBT percentile recorders, per-request SLO
+//! attainment and goodput (section 6's "no request left behind" yardstick),
+//! per-iteration traces (the Fig. 19 timeline), and MFU/MBU aggregation
+//! (Figs. 20–21).
+//!
+//! Attainment is judged against per-request **length-aware** TTFT deadlines
+//! (assigned at admission, carried on the request) and the deployment's TBT
+//! SLO; goodput counts only requests that met both, per second of simulated
+//! span — the metric that separates a scheduler that merely finishes
+//! requests from one that finishes them *in time*.
 //!
 //! Ingestion is O(1) amortized: percentile sorting is deferred to query
 //! time, and the wall-clock span is tracked incrementally instead of being
@@ -8,6 +16,7 @@
 //! populations and dropping the per-iteration trace (aggregate counters
 //! are always exact).
 
+use crate::coordinator::request::Request;
 use crate::util::stats::{P2Quantile, Samples};
 
 /// One scheduler iteration's record (drives Figs. 8, 19, 22).
@@ -41,6 +50,20 @@ pub struct Metrics {
     pub prefill_tokens: u64,
     /// Iterations recorded (exact even when the trace is dropped).
     pub n_iters: u64,
+    /// TBT SLO threshold for per-token attainment accounting (`INFINITY`
+    /// until the simulator installs the deployment's `slo.tbt_s`).
+    pub tbt_slo_s: f64,
+    /// TBT samples at or under `tbt_slo_s` (exact in all modes).
+    pub tbt_within_slo: u64,
+    /// Finished requests whose TTFT met their length-aware deadline.
+    pub ttft_deadline_met: u64,
+    /// Finished requests whose TTFT missed their deadline.
+    pub ttft_deadline_missed: u64,
+    /// Finished requests that met the TTFT deadline AND kept every TBT
+    /// sample within the SLO — the goodput numerator.
+    pub slo_good_requests: u64,
+    /// Chunk-boundary prefill preemptions across all schedulers.
+    pub preemptions: u64,
     /// Streaming-mode P² estimator for TBT p99: tracks the tail over the
     /// *full* sample stream, where a small reservoir holds too few tail
     /// points to resolve it.
@@ -64,6 +87,12 @@ impl Default for Metrics {
             decode_tokens: 0,
             prefill_tokens: 0,
             n_iters: 0,
+            tbt_slo_s: f64::INFINITY,
+            tbt_within_slo: 0,
+            ttft_deadline_met: 0,
+            ttft_deadline_missed: 0,
+            slo_good_requests: 0,
+            preemptions: 0,
             tbt_p99_stream: None,
             first_iter_start: None,
             last_iter_t: 0.0,
@@ -110,8 +139,45 @@ impl Metrics {
 
     pub fn record_tbt(&mut self, s: f64) {
         self.tbt.add(s);
+        if s <= self.tbt_slo_s {
+            self.tbt_within_slo += 1;
+        }
         if let Some(q) = &mut self.tbt_p99_stream {
             q.add(s);
+        }
+    }
+
+    /// Record everything a finished request contributes — its TBT samples
+    /// (each judged against the TBT SLO), its TTFT, its deadline verdict,
+    /// and the finished count. The single definition both simulator cores
+    /// call, so their metric streams stay bit-identical (asserted by
+    /// `tests/sim_golden.rs`). Call exactly once per finished request.
+    pub fn record_finished_request(&mut self, r: &Request) {
+        let mut tbt_ok = true;
+        for &s in &r.tbt_samples {
+            tbt_ok &= s <= self.tbt_slo_s;
+            self.record_tbt(s);
+        }
+        if let Some(t) = r.ttft() {
+            self.record_ttft(t);
+        }
+        self.record_request_slo(r.ttft(), r.ttft_budget_s(), tbt_ok);
+        self.finished_requests += 1;
+    }
+
+    /// Record a finished request's SLO attainment: its TTFT against the
+    /// length-aware budget it was admitted under, and whether every one of
+    /// its TBT samples stayed within the TBT SLO (`tbt_ok`). Call exactly
+    /// once per finished request.
+    pub fn record_request_slo(&mut self, ttft: Option<f64>, ttft_budget_s: f64, tbt_ok: bool) {
+        let ttft_ok = matches!(ttft, Some(t) if t <= ttft_budget_s);
+        if ttft_ok {
+            self.ttft_deadline_met += 1;
+        } else {
+            self.ttft_deadline_missed += 1;
+        }
+        if ttft_ok && tbt_ok {
+            self.slo_good_requests += 1;
         }
     }
 
@@ -152,6 +218,28 @@ impl Metrics {
             decode_tps: self.decode_tokens_per_s(),
             mfu_mean: self.mfu.mean(),
             mbu_mean: self.mbu.mean(),
+            ttft_attainment: {
+                let n = self.ttft_deadline_met + self.ttft_deadline_missed;
+                if n > 0 {
+                    self.ttft_deadline_met as f64 / n as f64
+                } else {
+                    f64::NAN
+                }
+            },
+            tbt_attainment: if self.tbt.count() > 0 {
+                self.tbt_within_slo as f64 / self.tbt.count() as f64
+            } else {
+                f64::NAN
+            },
+            goodput_rps: {
+                let span = self.span_s();
+                if span > 0.0 {
+                    self.slo_good_requests as f64 / span
+                } else {
+                    0.0
+                }
+            },
+            preemptions: self.preemptions,
         }
     }
 }
@@ -170,6 +258,15 @@ pub struct MetricsSummary {
     pub decode_tps: f64,
     pub mfu_mean: f64,
     pub mbu_mean: f64,
+    /// Fraction of finished requests whose TTFT met its length-aware
+    /// deadline (NaN when no request carried a deadline verdict).
+    pub ttft_attainment: f64,
+    /// Fraction of TBT samples within the TBT SLO (NaN when no samples).
+    pub tbt_attainment: f64,
+    /// Requests per second that met both SLOs over the simulated span.
+    pub goodput_rps: f64,
+    /// Chunk-boundary prefill preemptions.
+    pub preemptions: u64,
 }
 
 #[cfg(test)]
@@ -211,6 +308,65 @@ mod tests {
         assert!((s.tbt_p50 - 0.0505).abs() < 1e-3);
         assert!(s.tbt_p95 > s.tbt_p50);
         assert_eq!(s.n_ttft, 1);
+    }
+
+    #[test]
+    fn slo_attainment_and_goodput() {
+        let mut m = Metrics::new();
+        m.tbt_slo_s = 0.030;
+        m.record_iter(IterRecord {
+            t: 10.0,
+            dur_s: 10.0,
+            chunk: None,
+            n_decodes: 0,
+            active_gpus: 8,
+        });
+        m.record_tbt(0.010); // within
+        m.record_tbt(0.050); // violation
+        // req 1: met deadline, clean TBT -> goodput
+        m.record_request_slo(Some(1.0), 2.0, true);
+        // req 2: met deadline, TBT violation -> not goodput
+        m.record_request_slo(Some(1.5), 2.0, false);
+        // req 3: missed deadline
+        m.record_request_slo(Some(5.0), 2.0, true);
+        // req 4: never produced a token
+        m.record_request_slo(None, 2.0, true);
+        let s = m.summary();
+        assert_eq!(m.ttft_deadline_met, 2);
+        assert_eq!(m.ttft_deadline_missed, 2);
+        assert_eq!(m.slo_good_requests, 1);
+        assert!((s.ttft_attainment - 0.5).abs() < 1e-12);
+        assert!((s.tbt_attainment - 0.5).abs() < 1e-12);
+        assert!((s.goodput_rps - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_finished_request_aggregates_everything() {
+        let mut m = Metrics::new();
+        m.tbt_slo_s = 0.030;
+        let mut r = Request::new(1, 10, 3, 0.0).with_slo(0.1, 1.0);
+        r.complete_chunk(10, 0.5); // first token at 0.5 (deadline 1.0: met)
+        r.complete_decode(0.52); // TBT 0.02 — within SLO
+        r.complete_decode(0.60); // TBT 0.08 — violation
+        assert!(r.is_finished());
+        m.record_finished_request(&r);
+        assert_eq!(m.finished_requests, 1);
+        assert_eq!(m.ttft.count(), 1);
+        assert_eq!(m.tbt.count(), 2);
+        assert_eq!(m.tbt_within_slo, 1);
+        assert_eq!(m.ttft_deadline_met, 1);
+        // one dirty TBT sample disqualifies the request from goodput
+        assert_eq!(m.slo_good_requests, 0);
+    }
+
+    #[test]
+    fn attainment_is_nan_without_data() {
+        let mut m = Metrics::new();
+        let s = m.summary();
+        assert!(s.ttft_attainment.is_nan());
+        assert!(s.tbt_attainment.is_nan());
+        assert_eq!(s.goodput_rps, 0.0);
+        assert_eq!(s.preemptions, 0);
     }
 
     #[test]

@@ -256,6 +256,7 @@ mod tests {
         let slo = SloConfig {
             ttft_s: 30.0,
             tbt_s: 0.020,
+            ..SloConfig::default()
         };
         let r = resource_limits(&m, &hw, 8, &slo);
         assert!(
@@ -275,6 +276,7 @@ mod tests {
         let slo = SloConfig {
             ttft_s: 30.0,
             tbt_s: 0.020,
+            ..SloConfig::default()
         };
         let g1 = gpus_required(&m, &hw, 1_000_000, &slo).max();
         let g2 = gpus_required(&m, &hw, 2_000_000, &slo).max();

@@ -9,6 +9,13 @@
 //! are broadcast to all participating groups with online-softmax merge —
 //! exactly the execution model of section 4.
 //!
+//! Scheduling: every request is admitted with a length-aware TTFT deadline
+//! and a perf-model work estimate; the deployment's
+//! [`SchedPolicyKind`](crate::coordinator::SchedPolicyKind) (FCFS / SRPT /
+//! EDF / LARS, `scheduler.policy`) orders each group's ready set and the
+//! long-request queue, with preemption at chunk boundaries. Per-request
+//! deadline attainment and goodput land in [`Metrics`].
+//!
 //! Timing model:
 //! * every group's mixed batch flows through its stage pipeline
 //!   (`PipelineTimeline`);
@@ -56,6 +63,7 @@ use std::collections::VecDeque;
 
 use crate::config::DeploymentConfig;
 use crate::coordinator::chunking::ChunkPolicy;
+use crate::coordinator::policy::SchedPolicy;
 use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::scheduler::{BatchPlan, Scheduler};
 use crate::coordinator::spp::PipelineTimeline;
@@ -93,12 +101,73 @@ impl Default for SimOptions {
     }
 }
 
+/// Chunk size used for admission-time isolated-prefill estimates (the basis
+/// of length-aware deadlines and scheduling-policy work estimates). A large
+/// chunk keeps the estimate cheap — O(prompt/4096) perf-model queries, once
+/// per request — and close to the best-case prefill rate.
+const EST_CHUNK: u64 = 4096;
+
+/// Perf-model estimate of a request's isolated prefill time on one replica
+/// (dense SPP pipelining at the deployment's depth). Both simulator cores
+/// use this same estimate so their deadline state is bit-identical.
+fn est_prefill_s(pm: &PerfModel, prompt_len: u64) -> f64 {
+    pm.prefill_time_spp(prompt_len, EST_CHUNK)
+}
+
+/// Build and run the heterogeneous convoy scenario shared by
+/// `figures::sched`, the `sched/policy_compare` bench, and
+/// `tests/sched_policy.rs`: one Llama-3 8B tp=8 replica, static chunking,
+/// documents flowing through the same per-group queue as the interactive
+/// requests (`long_threshold = u64::MAX`). One definition, so the figure,
+/// the bench record, and the regression thresholds always measure the same
+/// scenario.
+pub fn run_convoy_scenario(
+    kind: crate::coordinator::SchedPolicyKind,
+    cfg: &crate::workload::ConvoyConfig,
+    seed: u64,
+) -> Simulation {
+    let mut dep = DeploymentConfig::llama3_8b_tp8();
+    dep.scheduler.policy = kind;
+    dep.scheduler.adaptive_chunking = false;
+    let opts = SimOptions {
+        long_threshold: u64::MAX,
+        ..SimOptions::default()
+    };
+    let mut sim = Simulation::new(dep, crate::workload::convoy(cfg, seed), opts);
+    sim.run();
+    sim
+}
+
+/// Split finished-request TTFTs by convoy class — (interactive, documents)
+/// — using the shared [`Samples`](crate::util::stats::Samples) percentile
+/// rule everywhere the convoy is evaluated.
+pub fn convoy_ttft_split(
+    sim: &Simulation,
+    cfg: &crate::workload::ConvoyConfig,
+) -> (crate::util::stats::Samples, crate::util::stats::Samples) {
+    let mut short = crate::util::stats::Samples::new();
+    let mut long = crate::util::stats::Samples::new();
+    for r in sim.retired() {
+        if let Some(t) = r.ttft() {
+            if cfg.is_long(r.prompt_len) {
+                long.add(t);
+            } else {
+                short.add(t);
+            }
+        }
+    }
+    (short, long)
+}
+
 pub struct Simulation {
     pub dep: DeploymentConfig,
     pub opts: SimOptions,
     pm: PerfModel,
     layers_per_stage: u32,
     policy: Box<dyn ChunkPolicy>,
+    /// Ready-set ordering for the dedicated long-request queue (the
+    /// per-group schedulers each hold their own instance of the same kind).
+    sched_policy: Box<dyn SchedPolicy>,
     topo: Topology,
 
     requests: RequestArena,
@@ -139,22 +208,26 @@ impl Simulation {
         pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
         let layers_per_stage = dep.model.n_layers / dep.parallel.spp.max(1);
         let topo = Topology::new(dep.parallel, &dep.hardware);
-        let metrics = match opts.metrics_reservoir {
+        let mut metrics = match opts.metrics_reservoir {
             Some(cap) => Metrics::streaming(cap, 0x6d65_6468_61u64),
             None => Metrics::new(),
         };
+        metrics.tbt_slo_s = dep.slo.tbt_s;
+        let sched_kind = dep.scheduler.policy;
         Simulation {
             pm,
             layers_per_stage,
             policy,
+            sched_policy: sched_kind.build(),
             topo,
             requests: RequestArena::new(),
             retired: Vec::new(),
             pending: pending.into(),
             scheds: (0..kvp_groups)
                 .map(|_| {
-                    Scheduler::new(
+                    Scheduler::with_policy(
                         Box::new(StaticChunk(dep.scheduler.static_chunk)),
+                        sched_kind.build(),
                         dep.scheduler.max_batch_size,
                     )
                 })
@@ -186,7 +259,12 @@ impl Simulation {
                 break;
             }
             let spec = self.pending.pop_front().unwrap();
-            let r = Request::new(spec.id, spec.prompt_len, spec.max_new_tokens, spec.arrival_s);
+            // Length-aware SLO state: the perf-model prefill estimate sets
+            // both the scheduling policies' work term and the TTFT deadline.
+            let est = est_prefill_s(&self.pm, spec.prompt_len);
+            let deadline = spec.arrival_s + self.dep.slo.ttft_deadline_for(est);
+            let r = Request::new(spec.id, spec.prompt_len, spec.max_new_tokens, spec.arrival_s)
+                .with_slo(est, deadline);
             let slot = self.requests.insert(r);
             if spec.prompt_len > self.opts.long_threshold {
                 let g = self.router.route(slot, spec.prompt_len);
@@ -197,8 +275,16 @@ impl Simulation {
                 self.scheds[g as usize].enqueue(slot);
             }
         }
-        if self.active_long.is_none() {
-            self.active_long = self.long_queue.pop_front();
+        // Next long request: minimum scheduling-policy priority over the
+        // long queue (FCFS = the front, exactly the pre-policy behavior).
+        if self.active_long.is_none() && !self.long_queue.is_empty() {
+            let best = crate::coordinator::policy::select_most_urgent(
+                self.sched_policy.as_ref(),
+                &self.requests,
+                &self.long_queue,
+                self.now,
+            );
+            self.active_long = self.long_queue.remove(best);
         }
     }
 
@@ -265,6 +351,7 @@ impl Simulation {
             }
             self.step();
         }
+        self.metrics.preemptions = self.scheds.iter().map(|s| s.preemptions).sum();
         self.now
     }
 
@@ -285,14 +372,18 @@ impl Simulation {
                     // decode load across the cooperating groups, gathered
                     // from the schedulers' incrementally-tracked context
                     // lists (no per-request scan, no per-step allocation).
-                    let (kv_done, remaining) = (r.kv_len(), r.remaining_prefill());
+                    let (kv_done, remaining, dl) = (
+                        r.kv_len(),
+                        r.remaining_prefill(),
+                        r.deadline_remaining_s(self.now),
+                    );
                     self.long_ctxs.clear();
                     for sched in &self.scheds {
                         self.long_ctxs.extend_from_slice(sched.decode_ctxs());
                     }
                     let c = self
                         .policy
-                        .next_chunk(kv_done, remaining, &self.long_ctxs, &self.pm, &slo);
+                        .next_chunk(kv_done, remaining, &self.long_ctxs, dl, &self.pm, &slo);
                     long_chunk = Some(c.max(1).min(remaining));
                 }
                 Phase::Decoding => long_decode = true,
@@ -317,6 +408,7 @@ impl Simulation {
                 &self.requests,
                 &self.pm,
                 &slo,
+                self.now,
                 &mut self.group_plans[g],
             );
         }
@@ -405,17 +497,11 @@ impl Simulation {
             );
             for i in 0..self.finished_buf.len() {
                 let slot = self.finished_buf[i];
-                let (ttft, prompt_len) = {
+                let prompt_len = {
                     let r = self.requests.get(slot);
-                    for &s in &r.tbt_samples {
-                        self.metrics.record_tbt(s);
-                    }
-                    (r.ttft(), r.prompt_len)
+                    self.metrics.record_finished_request(r);
+                    r.prompt_len
                 };
-                if let Some(t) = ttft {
-                    self.metrics.record_ttft(t);
-                }
-                self.metrics.finished_requests += 1;
                 self.router.release(slot, prompt_len);
                 self.retire(slot);
             }
@@ -440,16 +526,13 @@ impl Simulation {
             let finished = {
                 let r = self.requests.get(slot);
                 if r.is_finished() {
-                    for &s in &r.tbt_samples {
-                        self.metrics.record_tbt(s);
-                    }
+                    self.metrics.record_finished_request(r);
                     Some(r.prompt_len)
                 } else {
                     None
                 }
             };
             if let Some(prompt_len) = finished {
-                self.metrics.finished_requests += 1;
                 self.kvp_mgr.release(slot);
                 self.router.release(slot, prompt_len);
                 self.active_long = None;
@@ -498,6 +581,14 @@ impl Simulation {
 
     pub fn kvp_onboard_log(&self) -> &[(f64, RequestId, u32)] {
         &self.kvp_mgr.onboard_log
+    }
+
+    /// Finished requests retained for post-run inspection
+    /// (`opts.retain_finished`); empty in lean mode. Drives per-class
+    /// latency splits (e.g. short-interactive vs long-document TTFT in the
+    /// policy-comparison figure).
+    pub fn retired(&self) -> &[Request] {
+        &self.retired
     }
 
     /// High-water mark of concurrent requests (arena slots ever allocated)
@@ -643,8 +734,10 @@ mod tests {
                 arrival_s: i as f64 * 10.0, // far apart: never concurrent
             })
             .collect();
-        let mut opts = SimOptions::default();
-        opts.retain_finished = false;
+        let opts = SimOptions {
+            retain_finished: false,
+            ..SimOptions::default()
+        };
         let mut sim = Simulation::new(dep(8, 1, 1), w, opts);
         sim.run();
         assert_eq!(sim.metrics.finished_requests, 200);
@@ -668,10 +761,11 @@ mod tests {
             sim.metrics
         };
         let exact = run(SimOptions::default());
-        let mut lean_opts = SimOptions::default();
-        lean_opts.retain_finished = false;
-        lean_opts.metrics_reservoir = Some(64);
-        let lean = run(lean_opts);
+        let lean = run(SimOptions {
+            retain_finished: false,
+            metrics_reservoir: Some(64),
+            ..SimOptions::default()
+        });
         // counters are exact in both modes
         assert_eq!(exact.finished_requests, lean.finished_requests);
         assert_eq!(exact.n_iters, lean.n_iters);
@@ -682,6 +776,70 @@ mod tests {
         // the lean run dropped the trace and capped the reservoirs
         assert!(lean.iters.is_empty() && !exact.iters.is_empty());
         assert!(lean.tbt.len() <= 64);
+    }
+
+    #[test]
+    fn lars_policy_runs_and_records_attainment() {
+        use crate::coordinator::SchedPolicyKind;
+        let mut d = dep(8, 1, 1);
+        d.scheduler.policy = SchedPolicyKind::Lars;
+        d.scheduler.adaptive_chunking = false;
+        d.scheduler.static_chunk = 2048;
+        // a document prefill plus short interactive arrivals, all through
+        // the group scheduler (no dedicated long path)
+        let mut w = vec![RequestSpec {
+            id: 0,
+            prompt_len: 200_000,
+            max_new_tokens: 4,
+            arrival_s: 0.0,
+        }];
+        for i in 1..6u64 {
+            w.push(RequestSpec {
+                id: i,
+                prompt_len: 512,
+                max_new_tokens: 8,
+                arrival_s: i as f64 * 0.5,
+            });
+        }
+        let opts = SimOptions {
+            long_threshold: u64::MAX,
+            ..SimOptions::default()
+        };
+        let mut sim = Simulation::new(d, w, opts);
+        sim.run();
+        let s = sim.metrics.summary();
+        assert_eq!(s.finished, 6);
+        // attainment was judged for every finished request
+        assert_eq!(sim.metrics.ttft_deadline_met + sim.metrics.ttft_deadline_missed, 6);
+        assert!(!s.ttft_attainment.is_nan());
+        // shorts preempted the document at least once
+        assert!(s.preemptions >= 1, "preemptions={}", s.preemptions);
+        // every short got its first token long before the document finished
+        let doc = sim.request(0).unwrap();
+        for i in 1..6u64 {
+            let short = sim.request(i).unwrap();
+            assert!(
+                short.first_token_s.unwrap() < doc.finished_s.unwrap(),
+                "short {i} waited for the document"
+            );
+        }
+    }
+
+    #[test]
+    fn admission_assigns_length_aware_deadlines() {
+        let w = vec![
+            RequestSpec { id: 0, prompt_len: 100, max_new_tokens: 2, arrival_s: 0.0 },
+            RequestSpec { id: 1, prompt_len: 1_000_000, max_new_tokens: 2, arrival_s: 0.0 },
+        ];
+        let mut sim = Simulation::new(dep(8, 1, 1), w, SimOptions::default());
+        sim.run();
+        let short = sim.request(0).unwrap();
+        let long = sim.request(1).unwrap();
+        assert!(short.deadline_s.is_finite() && long.deadline_s.is_finite());
+        // short request: floored budget; long request: proportional budget
+        assert_eq!(short.ttft_budget_s(), sim.dep.slo.ttft_floor_s);
+        assert!(long.ttft_budget_s() > short.ttft_budget_s());
+        assert!(long.est_prefill_s > short.est_prefill_s);
     }
 
     #[test]

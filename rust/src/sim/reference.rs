@@ -27,7 +27,9 @@ use crate::config::{DeploymentConfig, SloConfig};
 use crate::coordinator::chunking::ChunkPolicy;
 use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::spp::PipelineTimeline;
-use crate::coordinator::{AdaptiveChunk, KvpManager, Router, Slot, StaticChunk, Topology};
+use crate::coordinator::{
+    AdaptiveChunk, KvpManager, Router, SchedPolicyKind, Slot, StaticChunk, Topology,
+};
 use crate::kvcache::RequestId;
 use crate::metrics::{IterRecord, Metrics};
 use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
@@ -77,6 +79,7 @@ impl RefScheduler {
         requests: &BTreeMap<RequestId, Request>,
         pm: &PerfModel,
         slo: &SloConfig,
+        now: f64,
         local_kv: F,
     ) -> RefBatchPlan {
         let decodes: Vec<RequestId> = self
@@ -95,9 +98,14 @@ impl RefScheduler {
             if remaining == 0 {
                 return None;
             }
-            let c = self
-                .policy
-                .next_chunk(r.kv_len(), remaining, &decode_ctxs, pm, slo);
+            let c = self.policy.next_chunk(
+                r.kv_len(),
+                remaining,
+                &decode_ctxs,
+                r.deadline_remaining_s(now),
+                pm,
+                slo,
+            );
             Some((id, c.max(1).min(remaining)))
         });
         RefBatchPlan { prefill, decodes }
@@ -195,6 +203,13 @@ impl ReferenceSimulation {
         opts: SimOptions,
     ) -> ReferenceSimulation {
         dep.validate().expect("invalid deployment");
+        // The oracle preserves the pre-policy semantics: strict FCFS. Fail
+        // fast rather than silently comparing against the wrong scheduler.
+        assert_eq!(
+            dep.scheduler.policy,
+            SchedPolicyKind::Fcfs,
+            "ReferenceSimulation implements FCFS only"
+        );
         let pm = PerfModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
         let kvp_groups = dep.parallel.kvp.max(1);
         let policy: Box<dyn ChunkPolicy> = if dep.scheduler.adaptive_chunking {
@@ -228,7 +243,11 @@ impl ReferenceSimulation {
             active_long: None,
             kvp_mgr: KvpManager::new(dep.scheduler.kvp_onboard_threshold, kvp_groups),
             router: Router::new(kvp_groups),
-            metrics: Metrics::new(),
+            metrics: {
+                let mut m = Metrics::new();
+                m.tbt_slo_s = dep.slo.tbt_s;
+                m
+            },
             now: 0.0,
             dep,
             opts,
@@ -241,7 +260,11 @@ impl ReferenceSimulation {
                 break;
             }
             let spec = self.pending.pop_front().unwrap();
-            let r = Request::new(spec.id, spec.prompt_len, spec.max_new_tokens, spec.arrival_s);
+            // identical admission-time SLO state to the optimized core
+            let est = super::est_prefill_s(&self.pm, spec.prompt_len);
+            let deadline = spec.arrival_s + self.dep.slo.ttft_deadline_for(est);
+            let r = Request::new(spec.id, spec.prompt_len, spec.max_new_tokens, spec.arrival_s)
+                .with_slo(est, deadline);
             if spec.prompt_len > self.opts.long_threshold {
                 let g = self.router.route(slot_of(spec.id), spec.prompt_len);
                 self.kvp_mgr
@@ -312,6 +335,7 @@ impl ReferenceSimulation {
                         r.kv_len(),
                         r.remaining_prefill(),
                         &decode_ctxs,
+                        r.deadline_remaining_s(self.now),
                         &self.pm,
                         &slo,
                     );
@@ -330,8 +354,13 @@ impl ReferenceSimulation {
         // ---- per-group batch formation (fresh vectors every step) --------
         let mut group_plans = Vec::with_capacity(n_groups);
         for g in 0..n_groups {
-            let plan =
-                self.scheds[g].next_batch(&self.requests, &self.pm, &slo, Self::short_local_kv);
+            let plan = self.scheds[g].next_batch(
+                &self.requests,
+                &self.pm,
+                &slo,
+                self.now,
+                Self::short_local_kv,
+            );
             group_plans.push(plan);
         }
 
@@ -399,13 +428,7 @@ impl ReferenceSimulation {
             let finished = self.scheds[g].complete_iteration(&plan, &mut self.requests, iter_end);
             for id in finished {
                 let r = &self.requests[&id];
-                if let Some(t) = r.ttft() {
-                    self.metrics.record_ttft(t);
-                }
-                for &s in &r.tbt_samples {
-                    self.metrics.record_tbt(s);
-                }
-                self.metrics.finished_requests += 1;
+                self.metrics.record_finished_request(r);
                 self.router.release(slot_of(id), r.prompt_len);
             }
         }
@@ -427,12 +450,10 @@ impl ReferenceSimulation {
             }
             let r = &self.requests[&id];
             if r.is_finished() {
-                for &s in &r.tbt_samples {
-                    self.metrics.record_tbt(s);
-                }
-                self.metrics.finished_requests += 1;
+                self.metrics.record_finished_request(r);
+                let prompt_len = r.prompt_len;
                 self.kvp_mgr.release(slot_of(id));
-                self.router.release(slot_of(id), r.prompt_len);
+                self.router.release(slot_of(id), prompt_len);
                 self.active_long = None;
             }
         }

@@ -116,9 +116,11 @@ pub fn run_sim_throughput(
     workload: Vec<RequestSpec>,
 ) -> SimThroughput {
     let n = workload.len();
-    let mut opts = SimOptions::default();
-    opts.retain_finished = false;
-    opts.metrics_reservoir = Some(4096);
+    let opts = SimOptions {
+        retain_finished: false,
+        metrics_reservoir: Some(4096),
+        ..SimOptions::default()
+    };
     let mut sim = Simulation::new(dep, workload, opts);
     let t0 = Instant::now();
     let span = sim.run();

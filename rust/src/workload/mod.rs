@@ -90,6 +90,80 @@ impl LengthDist {
     }
 }
 
+/// Heterogeneous convoy trace: Poisson arrivals with **bimodal** lengths —
+/// a stream of short interactive requests into which long document
+/// prefills are periodically injected (every `long_every`-th arrival, so a
+/// fixed-seed trace deterministically contains documents). This is the
+/// workload where FCFS exhibits the convoy effect (section 3 / Fig. 2:
+/// every short request behind a document waits out its entire multi-second
+/// prefill) and LARS eliminates it via chunk-boundary preemption.
+#[derive(Debug, Clone)]
+pub struct ConvoyConfig {
+    /// Total arrival rate (requests/s), both classes.
+    pub rate_per_s: f64,
+    /// Arrivals stop after this horizon (the simulation then drains).
+    pub horizon_s: f64,
+    /// Interactive-class prompt length.
+    pub short_prompt: u64,
+    pub short_new_tokens: u64,
+    /// Document-class prompt length.
+    pub long_prompt: u64,
+    pub long_new_tokens: u64,
+    /// Every `long_every`-th arrival is a document (0 = no documents).
+    pub long_every: u64,
+}
+
+impl Default for ConvoyConfig {
+    fn default() -> Self {
+        ConvoyConfig {
+            rate_per_s: 2.0,
+            horizon_s: 60.0,
+            short_prompt: 512,
+            short_new_tokens: 64,
+            long_prompt: 512_000,
+            long_new_tokens: 16,
+            long_every: 50,
+        }
+    }
+}
+
+impl ConvoyConfig {
+    /// Whether a request of this trace is a document (by prompt length).
+    pub fn is_long(&self, prompt_len: u64) -> bool {
+        prompt_len >= self.long_prompt
+    }
+}
+
+pub fn convoy(cfg: &ConvoyConfig, seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::new();
+    let mut id = 0u64;
+    loop {
+        t += rng.exponential(cfg.rate_per_s);
+        if t >= cfg.horizon_s {
+            break;
+        }
+        // deterministic injection keeps the document count stable across
+        // seeds; the long_every/4 offset keeps the first arrival short for
+        // the shipped spacings (long_every >= 4 — below that it is 0 and
+        // the trace leads with a document)
+        let long = cfg.long_every > 0 && id % cfg.long_every == cfg.long_every / 4;
+        out.push(RequestSpec {
+            id,
+            prompt_len: if long { cfg.long_prompt } else { cfg.short_prompt },
+            max_new_tokens: if long {
+                cfg.long_new_tokens
+            } else {
+                cfg.short_new_tokens
+            },
+            arrival_s: t,
+        });
+        id += 1;
+    }
+    out
+}
+
 /// Poisson arrivals with a context-length distribution — the production
 /// mix of section 3 C3.
 pub fn poisson_mixed(
@@ -154,6 +228,34 @@ mod tests {
         let w = long_plus_decodes(1_000_000, 16, 1_000, 100);
         assert_eq!(w.len(), 17);
         assert_eq!(w.iter().filter(|r| r.prompt_len == 1_000_000).count(), 1);
+    }
+
+    #[test]
+    fn convoy_is_bimodal_with_deterministic_documents() {
+        let cfg = ConvoyConfig::default();
+        let w = convoy(&cfg, 42);
+        let longs = w.iter().filter(|r| cfg.is_long(r.prompt_len)).count();
+        let shorts = w.len() - longs;
+        // rate 2/s over 60s: ~120 arrivals, documents every 50th
+        assert!(shorts > 60, "shorts={shorts}");
+        assert!((1..=5).contains(&longs), "longs={longs}");
+        // only the two modes appear, arrivals are sorted, ids unique
+        assert!(w
+            .iter()
+            .all(|r| r.prompt_len == cfg.short_prompt || r.prompt_len == cfg.long_prompt));
+        assert!(w.windows(2).all(|p| p[1].arrival_s >= p[0].arrival_s));
+        let same_seed = convoy(&cfg, 42);
+        assert_eq!(w, same_seed);
+    }
+
+    #[test]
+    fn convoy_long_every_zero_is_all_short() {
+        let cfg = ConvoyConfig {
+            long_every: 0,
+            ..ConvoyConfig::default()
+        };
+        let w = convoy(&cfg, 7);
+        assert!(w.iter().all(|r| r.prompt_len == cfg.short_prompt));
     }
 
     #[test]

@@ -1,0 +1,120 @@
+//! Scheduling-policy subsystem integration tests: the convoy-effect
+//! regression (LARS must bound short-request tail latency where FCFS lets
+//! it blow up), the starvation-freedom invariant (LARS must not starve the
+//! long documents it preempts), and end-to-end preemption correctness
+//! through the simulator.
+
+use medha::coordinator::SchedPolicyKind;
+use medha::sim::{convoy_ttft_split, run_convoy_scenario, Simulation};
+use medha::workload::{self, ConvoyConfig};
+
+fn convoy_cfg() -> ConvoyConfig {
+    ConvoyConfig::default()
+}
+
+/// The exact scenario the `sched` figure and `sched/policy_compare` bench
+/// measure — one shared definition in `medha::sim`.
+fn run_convoy(kind: SchedPolicyKind) -> (Simulation, ConvoyConfig) {
+    let cfg = convoy_cfg();
+    (run_convoy_scenario(kind, &cfg, 42), cfg)
+}
+
+#[test]
+fn convoy_regression_lars_bounds_short_tail_fcfs_does_not() {
+    let (fcfs, cfg) = run_convoy(SchedPolicyKind::Fcfs);
+    let (lars, _) = run_convoy(SchedPolicyKind::Lars);
+
+    // both policies drain the whole trace
+    assert_eq!(fcfs.metrics.finished_requests, lars.metrics.finished_requests);
+    assert!(fcfs.metrics.finished_requests > 60);
+
+    let (mut fcfs_short, _) = convoy_ttft_split(&fcfs, &cfg);
+    let (mut lars_short, lars_long) = convoy_ttft_split(&lars, &cfg);
+    assert!(!lars_long.is_empty(), "trace must contain documents");
+
+    let fcfs_p99 = fcfs_short.p99();
+    let lars_p99 = lars_short.p99();
+    // the headline: FCFS lets the convoy blow up short-request tails;
+    // LARS preempts the documents at chunk boundaries and keeps them bounded
+    assert!(
+        fcfs_p99 >= 5.0 * lars_p99,
+        "convoy not eliminated: fcfs p99 {fcfs_p99:.2}s vs lars p99 {lars_p99:.2}s"
+    );
+    // LARS actually preempted; FCFS never does
+    assert!(lars.metrics.preemptions > 0);
+    assert_eq!(fcfs.metrics.preemptions, 0);
+}
+
+#[test]
+fn lars_never_starves_the_documents() {
+    let (lars, cfg) = run_convoy(SchedPolicyKind::Lars);
+    let docs: Vec<&medha::coordinator::Request> = lars
+        .retired()
+        .iter()
+        .filter(|r| cfg.is_long(r.prompt_len))
+        .collect();
+    assert!(!docs.is_empty());
+    for d in docs {
+        // starvation freedom: every preempted document still finishes its
+        // prefill within its own length-aware deadline
+        let ttft = d.ttft().unwrap();
+        assert!(
+            ttft <= d.ttft_budget_s(),
+            "document {} starved: ttft {ttft:.1}s > budget {:.1}s",
+            d.id,
+            d.ttft_budget_s()
+        );
+        assert!(d.is_finished());
+    }
+}
+
+#[test]
+fn lars_improves_ttft_attainment_over_fcfs_on_the_convoy() {
+    let (mut fcfs, _) = run_convoy(SchedPolicyKind::Fcfs);
+    let (mut lars, _) = run_convoy(SchedPolicyKind::Lars);
+    let sf = fcfs.metrics.summary();
+    let sl = lars.metrics.summary();
+    assert!(
+        sl.ttft_attainment > sf.ttft_attainment,
+        "lars attainment {} <= fcfs {}",
+        sl.ttft_attainment,
+        sf.ttft_attainment
+    );
+    // most requests meet their length-aware deadline under LARS; under
+    // FCFS the convoy makes that impossible
+    assert!(sl.ttft_attainment > 0.75, "lars attainment {}", sl.ttft_attainment);
+    // goodput (both SLOs met, per second) is reported for both runs
+    assert!(sl.goodput_rps.is_finite() && sf.goodput_rps.is_finite());
+}
+
+#[test]
+fn all_policies_complete_the_convoy_trace() {
+    let expected = workload::convoy(&convoy_cfg(), 42).len() as u64;
+    for kind in SchedPolicyKind::ALL {
+        let (sim, _) = run_convoy(kind);
+        assert_eq!(
+            sim.metrics.finished_requests, expected,
+            "{} left requests behind",
+            kind.name()
+        );
+    }
+}
+
+/// End-to-end preemption correctness through the simulator: token-level
+/// progress of a preempted document is exact (its prefill resumes from the
+/// chunk boundary where it stopped — total prefilled tokens equal the
+/// prompt, never recomputed, KV accounted once).
+#[test]
+fn preempted_document_prefill_is_exact() {
+    let (lars, cfg) = run_convoy(SchedPolicyKind::Lars);
+    for r in lars.retired() {
+        assert_eq!(r.prefilled, r.prompt_len, "request {} prefill mismatch", r.id);
+        if cfg.is_long(r.prompt_len) {
+            assert_eq!(r.decoded, cfg.long_new_tokens);
+        }
+    }
+    // sum of prefill tokens across all iterations equals the trace's total
+    // prompt tokens: chunks were neither lost nor re-executed on preemption
+    let total_prompt: u64 = workload::convoy(&cfg, 42).iter().map(|r| r.prompt_len).sum();
+    assert_eq!(lars.metrics.prefill_tokens, total_prompt);
+}

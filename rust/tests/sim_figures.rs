@@ -162,7 +162,7 @@ fn fig22_batching_decodes_is_nearly_free() {
 #[test]
 fn sim_backed_figures_run() {
     // The sim-backed harnesses execute end-to-end (stdout only).
-    for f in ["fig8", "fig19"] {
+    for f in ["fig8", "fig19", "sched"] {
         medha::figures::run(f).unwrap_or_else(|e| panic!("{f}: {e}"));
     }
 }

@@ -70,6 +70,23 @@ fn assert_outcomes_identical(opt: &RunOutcome, reference: &RunOutcome) {
     assert_f64_identical("decode_tps", opt.summary.decode_tps, reference.summary.decode_tps);
     assert_f64_identical("mfu_mean", opt.summary.mfu_mean, reference.summary.mfu_mean);
     assert_f64_identical("mbu_mean", opt.summary.mbu_mean, reference.summary.mbu_mean);
+    // SLO-attainment accounting must also agree bit-for-bit: both cores
+    // assign the same length-aware deadlines at admission and judge the
+    // same finish times against them.
+    assert_f64_identical(
+        "ttft_attainment",
+        opt.summary.ttft_attainment,
+        reference.summary.ttft_attainment,
+    );
+    assert_f64_identical(
+        "tbt_attainment",
+        opt.summary.tbt_attainment,
+        reference.summary.tbt_attainment,
+    );
+    assert_f64_identical("goodput_rps", opt.summary.goodput_rps, reference.summary.goodput_rps);
+    // FCFS never preempts: both cores must report zero.
+    assert_eq!(opt.summary.preemptions, 0, "optimized FCFS preempted");
+    assert_eq!(reference.summary.preemptions, 0, "reference preempted");
 }
 
 /// Workload 1: fixed-seed Poisson mix of short requests across two KVP
