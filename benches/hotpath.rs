@@ -166,6 +166,53 @@ fn main() {
         );
     }
 
+    // --- policy-aware KVP routing vs blind round-robin ---------------------
+    // The same LARS policy with two placements on the kvp_convoy trace:
+    // short p99 TTFT captures what steering shorts off the sharding groups
+    // buys; active yields count the new preemption path exercised.
+    let kvp_cfg = if smoke {
+        medha::workload::KvpConvoyConfig {
+            rate_per_s: 4.0,
+            horizon_s: 5.0,
+            doc_prompt: 64_000,
+            n_docs: 2,
+            doc_start_s: 1.0,
+            doc_stagger_s: 2.0,
+            ..medha::workload::KvpConvoyConfig::default()
+        }
+    } else {
+        medha::workload::KvpConvoyConfig::default()
+    };
+    let run_kvp = |routing: medha::coordinator::RoutingMode| -> (f64, u64) {
+        let sim = medha::sim::run_kvp_convoy_scenario(
+            medha::coordinator::SchedPolicyKind::Lars,
+            routing,
+            &kvp_cfg,
+            42,
+        );
+        let (mut short, _) = medha::sim::kvp_convoy_ttft_split(&sim, &kvp_cfg);
+        (short.p99(), sim.metrics.active_preemptions)
+    };
+    let mut rr_p99 = f64::NAN;
+    let mut routed_p99 = f64::NAN;
+    let mut routed_yields = 0u64;
+    suite.bench_once("sched/kvp_routing round-robin convoy", || {
+        let (p99, _) = run_kvp(medha::coordinator::RoutingMode::RoundRobin);
+        rr_p99 = p99;
+    });
+    suite.bench_once("sched/kvp_routing routed convoy", || {
+        let (p99, n) = run_kvp(medha::coordinator::RoutingMode::Routed);
+        routed_p99 = p99;
+        routed_yields = n;
+    });
+    if rr_p99.is_finite() && routed_p99.is_finite() {
+        println!(
+            "sched/kvp_routing: short p99 TTFT round-robin {rr_p99:.3}s vs routed \
+             {routed_p99:.3}s ({:.1}x, {routed_yields} active yields)",
+            rr_p99 / routed_p99
+        );
+    }
+
     // --- substrates -------------------------------------------------------
     let manifest_like = format!(
         "{{\"entries\":{{{}}}}}",
@@ -260,6 +307,20 @@ fn main() {
                     if lars_p99 > 0.0 { num_or_null(fcfs_p99 / lars_p99) } else { Json::Null },
                 ),
                 ("lars_preemptions", lars_preemptions.into()),
+            ]),
+        ),
+        (
+            "kvp_routing",
+            Json::obj(vec![
+                ("workload", Json::str("kvp_convoy")),
+                ("policy", Json::str("lars")),
+                ("rr_short_p99_ttft_s", num_or_null(rr_p99)),
+                ("routed_short_p99_ttft_s", num_or_null(routed_p99)),
+                (
+                    "rr_over_routed",
+                    if routed_p99 > 0.0 { num_or_null(rr_p99 / routed_p99) } else { Json::Null },
+                ),
+                ("routed_active_yields", routed_yields.into()),
             ]),
         ),
     ];

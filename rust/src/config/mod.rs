@@ -11,6 +11,7 @@ pub use model::ModelConfig;
 pub use parallel::{ParallelismConfig, PlacementError};
 
 use crate::coordinator::policy::SchedPolicyKind;
+use crate::coordinator::router::RoutingMode;
 use crate::util::json::Json;
 
 /// Latency service-level objectives (paper: 30s TTFT babbling point /
@@ -96,6 +97,12 @@ pub struct SchedulerConfig {
     /// strict-FIFO behavior (and oracle parity with the reference
     /// simulator).
     pub policy: SchedPolicyKind,
+    /// Placement of requests across KVP groups (section 7): blind |
+    /// round-robin | routed. `blind` keeps least-loaded lockstep semantics
+    /// (oracle parity); the pooled modes let non-sharded groups serve
+    /// short traffic independently and enable active-long-request
+    /// preemption under preemptive policies.
+    pub routing: RoutingMode,
 }
 
 impl Default for SchedulerConfig {
@@ -107,6 +114,7 @@ impl Default for SchedulerConfig {
             max_batch_size: 128,
             kvp_onboard_threshold: 512 * 1024,
             policy: SchedPolicyKind::Fcfs,
+            routing: RoutingMode::Blind,
         }
     }
 }
@@ -142,6 +150,14 @@ impl SchedulerConfig {
                     anyhow::anyhow!("unknown scheduler policy '{s}' (expected fcfs|srpt|edf|lars)")
                 })?,
                 None => d.policy,
+            },
+            routing: match j.get("routing").and_then(|x| x.as_str()) {
+                Some(s) => RoutingMode::parse(s).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "unknown routing mode '{s}' (expected blind|round-robin|routed)"
+                    )
+                })?,
+                None => d.routing,
             },
         })
     }
@@ -272,7 +288,25 @@ mod tests {
         let s = SchedulerConfig::from_json(&j).unwrap();
         assert_eq!(s.policy, SchedPolicyKind::Lars);
         assert_eq!(s.static_chunk, 1024);
+        // routing defaults to the oracle-parity blind mode
+        assert_eq!(s.routing, RoutingMode::Blind);
         let bad = Json::parse(r#"{"policy": "wfq"}"#).unwrap();
+        assert!(SchedulerConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn scheduler_routing_from_json() {
+        let j = Json::parse(r#"{"routing": "routed"}"#).unwrap();
+        assert_eq!(
+            SchedulerConfig::from_json(&j).unwrap().routing,
+            RoutingMode::Routed
+        );
+        let j = Json::parse(r#"{"routing": "round-robin"}"#).unwrap();
+        assert_eq!(
+            SchedulerConfig::from_json(&j).unwrap().routing,
+            RoutingMode::RoundRobin
+        );
+        let bad = Json::parse(r#"{"routing": "hash"}"#).unwrap();
         assert!(SchedulerConfig::from_json(&bad).is_err());
     }
 

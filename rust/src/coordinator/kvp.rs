@@ -19,6 +19,9 @@ use crate::util::slotvec::SlotVec;
 struct LongEntry {
     ext_id: RequestId,
     map: ShardMap,
+    /// Set while the request is preempted at a chunk boundary: its shards
+    /// stay resident on every onboarded group, waiting for `resume`.
+    yielded: bool,
 }
 
 #[derive(Debug, Clone)]
@@ -30,7 +33,13 @@ pub struct KvpManager {
     /// Shard maps per long request, slot-indexed.
     maps: SlotVec<LongEntry>,
     /// Onboarding events (time, request, group) — the Fig. 19 timeline.
+    /// Each (request, group) pair appears at most once: a retained shard is
+    /// **never** re-onboarded across yield/resume cycles.
     pub onboard_log: Vec<(f64, RequestId, GroupId)>,
+    /// Yield/resume events: (time, request, `true` for yield / `false` for
+    /// resume). Chunk-boundary preemption of the active request retains all
+    /// shards, so yields never appear in `onboard_log`.
+    pub yield_log: Vec<(f64, RequestId, bool)>,
 }
 
 impl KvpManager {
@@ -41,6 +50,7 @@ impl KvpManager {
             n_groups,
             maps: SlotVec::new(),
             onboard_log: Vec::new(),
+            yield_log: Vec::new(),
         }
     }
 
@@ -48,7 +58,14 @@ impl KvpManager {
     pub fn onboard_request(&mut self, s: Slot, ext_id: RequestId, first_group: GroupId, t: f64) {
         let mut m = ShardMap::default();
         m.shards.push((first_group, 0, 0));
-        self.maps.insert(s as usize, LongEntry { ext_id, map: m });
+        self.maps.insert(
+            s as usize,
+            LongEntry {
+                ext_id,
+                map: m,
+                yielded: false,
+            },
+        );
         self.onboard_log.push((t, ext_id, first_group));
     }
 
@@ -114,6 +131,72 @@ impl KvpManager {
             .map(|&(_, n)| n)
             .max()
             .unwrap_or(0)
+    }
+
+    /// Chunk-boundary yield of the active sharded request `s`: every
+    /// per-group KV shard stays exactly where it is (nothing is released,
+    /// nothing re-onboarded later), the request merely stops receiving
+    /// chunks until [`Self::resume`]. Panics on a request that is not
+    /// onboarded or is already yielded — both are scheduler bugs.
+    pub fn yield_active(&mut self, s: Slot, t: f64) {
+        let e = self.maps.get_mut(s as usize).expect("yield of unknown request");
+        assert!(!e.yielded, "double yield of request {}", e.ext_id);
+        debug_assert!(e.map.check_contiguous());
+        e.yielded = true;
+        self.yield_log.push((t, e.ext_id, true));
+    }
+
+    /// Resume a previously yielded request: asserts its retained shards
+    /// survived intact and clears the yielded flag. Returns `true` when
+    /// the request was actually yielded (a fresh request is a no-op, so
+    /// the activation path can call this unconditionally).
+    pub fn resume(&mut self, s: Slot, t: f64) -> bool {
+        let e = self.maps.get_mut(s as usize).expect("resume of unknown request");
+        if !e.yielded {
+            return false;
+        }
+        assert!(
+            e.map.check_contiguous(),
+            "request {} lost KV shards while yielded",
+            e.ext_id
+        );
+        e.yielded = false;
+        self.yield_log.push((t, e.ext_id, false));
+        true
+    }
+
+    pub fn is_yielded(&self, s: Slot) -> bool {
+        self.maps.get(s as usize).map(|e| e.yielded).unwrap_or(false)
+    }
+
+    /// Whether group `g` holds a KV shard of request `s`.
+    pub fn holds(&self, s: Slot, g: GroupId) -> bool {
+        self.maps
+            .get(s as usize)
+            .map(|e| e.map.shards.iter().any(|&(gg, _, _)| gg == g))
+            .unwrap_or(false)
+    }
+
+    /// Total resident long-request KV tokens on group `g`, across every
+    /// onboarded request — active or yielded. The router's occupancy view
+    /// and the per-group utilization figure read this.
+    pub fn occupancy(&self, g: GroupId) -> u64 {
+        self.maps
+            .iter()
+            .map(|(_, e)| e.map.local_tokens(g))
+            .sum()
+    }
+
+    /// Invariant the test harness leans on: no (request, group) pair ever
+    /// appears twice in the onboarding log — a shard retained across a
+    /// yield/resume cycle is never re-onboarded.
+    pub fn onboard_log_is_duplicate_free(&self) -> bool {
+        let mut pairs: Vec<(RequestId, GroupId)> =
+            self.onboard_log.iter().map(|&(_, r, g)| (r, g)).collect();
+        let n = pairs.len();
+        pairs.sort_unstable();
+        pairs.dedup();
+        pairs.len() == n
     }
 
     pub fn release(&mut self, s: Slot) {
@@ -192,6 +275,66 @@ mod tests {
         k.append_tokens(0, 11, 2.5);
         assert_eq!(k.onboard_log[0], (1.5, 999, 2));
         assert_eq!(k.onboard_log[1], (2.5, 999, 3));
+    }
+
+    #[test]
+    fn yield_retains_shards_and_never_reonboards_on_resume() {
+        let mut k = KvpManager::new(100, 4);
+        k.onboard_request(5, 50, 0, 0.0);
+        k.append_tokens(5, 250, 1.0); // onboards groups 1 and 2
+        assert_eq!(k.active_groups(5), 3);
+        let log_before = k.onboard_log.clone();
+
+        k.yield_active(5, 2.0);
+        assert!(k.is_yielded(5));
+        // retained exactly: shard map untouched, occupancy intact
+        assert_eq!(k.local_lengths(5), vec![(0, 100), (1, 100), (2, 50)]);
+        assert_eq!(k.occupancy(1), 100);
+
+        assert!(k.resume(5, 3.0));
+        assert!(!k.is_yielded(5));
+        // resuming and growing logs only the *new* group, never a retained one
+        k.append_tokens(5, 100, 4.0);
+        assert_eq!(k.onboard_log.len(), log_before.len() + 1);
+        assert_eq!(k.onboard_log.last().unwrap(), &(4.0, 50, 3));
+        assert_eq!(
+            k.yield_log,
+            vec![(2.0, 50, true), (3.0, 50, false)]
+        );
+    }
+
+    #[test]
+    fn resume_of_fresh_request_is_a_noop() {
+        let mut k = KvpManager::new(100, 2);
+        k.onboard_request(1, 1, 0, 0.0);
+        assert!(!k.resume(1, 1.0));
+        assert!(k.yield_log.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "double yield")]
+    fn double_yield_panics() {
+        let mut k = KvpManager::new(100, 2);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.yield_active(1, 1.0);
+        k.yield_active(1, 2.0);
+    }
+
+    #[test]
+    fn occupancy_sums_across_requests_and_holds_is_per_group() {
+        let mut k = KvpManager::new(100, 4);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.append_tokens(1, 150, 0.0); // g0: 100, g1: 50
+        k.onboard_request(2, 2, 1, 0.0);
+        k.append_tokens(2, 80, 0.0); // g1: 80
+        assert_eq!(k.occupancy(0), 100);
+        assert_eq!(k.occupancy(1), 130);
+        assert_eq!(k.occupancy(2), 0);
+        assert!(k.holds(1, 0) && k.holds(1, 1) && !k.holds(1, 2));
+        assert!(!k.holds(2, 0) && k.holds(2, 1));
+        k.release(1);
+        assert_eq!(k.occupancy(1), 80);
+        assert!(!k.holds(1, 1));
     }
 
     #[test]

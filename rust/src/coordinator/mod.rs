@@ -34,6 +34,19 @@
 //! chunk policy and the simulator. Deadline/work state lives on
 //! [`Request`] (`deadline_s`, `est_prefill_s`), assigned at admission from
 //! the perf model's prefill estimate.
+//!
+//! # Policy-aware KVP routing (section 7)
+//!
+//! Placement across KVP groups is the [`RoutingMode`]
+//! (`scheduler.routing`, `simulate --routing`): `blind` keeps the original
+//! least-loaded lockstep behavior (oracle parity), `round-robin` is the
+//! policy-blind pooled baseline, and `routed` delegates placement to the
+//! scheduling policy's [`SchedPolicy::route`] hook over per-group
+//! [`GroupView`] snapshots. Non-blind modes run the groups not holding the
+//! active sharded long request as an independent short-request serving
+//! pool, and a **preemptive** policy may additionally yield the *active*
+//! sharded long request at a chunk boundary ([`KvpManager::yield_active`]
+//! retains every per-group shard; resume is bit-exact).
 
 pub mod arena;
 pub mod chunking;
@@ -48,9 +61,9 @@ pub mod topology;
 pub use arena::{RequestArena, Slot};
 pub use chunking::{AdaptiveChunk, ChunkPolicy, DeadlineChunk, StaticChunk};
 pub use kvp::KvpManager;
-pub use policy::{Edf, Fcfs, Lars, SchedPolicy, SchedPolicyKind, Srpt};
+pub use policy::{Edf, Fcfs, GroupView, Lars, SchedPolicy, SchedPolicyKind, Srpt};
 pub use request::{Phase, Request};
-pub use router::Router;
+pub use router::{Router, RoutingMode};
 pub use scheduler::{BatchPlan, Scheduler};
 pub use spp::{conventional_pp_prefill_schedule, spp_prefill_schedule, PipelineTimeline};
 pub use topology::{Topology, WorkerId};

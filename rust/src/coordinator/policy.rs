@@ -29,6 +29,52 @@ use std::collections::VecDeque;
 
 use super::arena::{RequestArena, Slot};
 use super::request::Request;
+use crate::kvcache::GroupId;
+
+/// Per-group occupancy snapshot handed to a policy's routing hook when a
+/// request is admitted under `RoutingMode::Routed` (see
+/// `coordinator::router`): everything placement needs to know about one
+/// KVP group, gathered in O(groups + queued) per admission.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupView {
+    pub group: GroupId,
+    /// Outstanding token load (router accounting: KV-resident + queued
+    /// prompt work).
+    pub load: u64,
+    /// Prefills queued in the group's ready set.
+    pub queue_len: usize,
+    /// Requests currently decoding on the group.
+    pub n_decoding: usize,
+    /// Whether the group holds a KV shard of the **active** sharded long
+    /// request — it iterates in lockstep with the cooperative prefill, so
+    /// a short request placed here waits out chunk-scale iterations.
+    pub active_long: bool,
+    /// Queued requests on this group more urgent (smaller priority key at
+    /// admission time) than the request being routed.
+    pub more_urgent_queued: usize,
+}
+
+/// Blind least-loaded placement (ties to the lowest group id) — the
+/// pre-routing behavior and the non-preemptive default.
+pub fn route_least_loaded(groups: &[GroupView]) -> GroupId {
+    groups
+        .iter()
+        .min_by_key(|v| (v.load, v.group))
+        .expect("no groups to route to")
+        .group
+}
+
+/// Policy-aware placement: avoid the groups cooperating on the active
+/// sharded long request (they only complete work at chunk boundaries),
+/// then minimize the urgency rank ahead of the incoming request, then
+/// load. A fully occupied fleet degrades to least-loaded.
+pub fn route_policy_aware(groups: &[GroupView]) -> GroupId {
+    groups
+        .iter()
+        .min_by_key(|v| (v.active_long, v.more_urgent_queued, v.load, v.group))
+        .expect("no groups to route to")
+        .group
+}
 
 /// Priority ordering + preemption decision over a scheduler's ready set.
 pub trait SchedPolicy: Send + Sync {
@@ -43,6 +89,20 @@ pub trait SchedPolicy: Send + Sync {
     /// completion and skip the priority scan entirely.
     fn preemptive(&self) -> bool {
         true
+    }
+
+    /// Placement hook (section 7): which KVP group should serve `r`?
+    /// Routing decisions are made jointly with the scheduling policy —
+    /// preemptive policies place by urgency ranking and keep short traffic
+    /// off the groups sharding the active long prefill; non-preemptive
+    /// policies keep the blind least-loaded placement, so FCFS routing is
+    /// indistinguishable from the pre-routing router.
+    fn route(&self, _r: &Request, groups: &[GroupView], _now: f64) -> GroupId {
+        if self.preemptive() {
+            route_policy_aware(groups)
+        } else {
+            route_least_loaded(groups)
+        }
     }
 
     fn name(&self) -> &'static str;
@@ -164,6 +224,32 @@ pub fn select_most_urgent(
         }
     }
     best
+}
+
+/// Active-request preemption decision (section 4.4 + 5 combined): should
+/// the scheduler switch the cooperative slot away from the **currently
+/// executing** long request `active` at this chunk boundary? Returns the
+/// queue index of the strictly-more-urgent challenger, or `None` to keep
+/// running `active`. Strict inequality keeps FCFS-adjacent stability: a tie
+/// never evicts the request already holding KV shards on its groups.
+pub fn would_preempt_active(
+    policy: &dyn SchedPolicy,
+    requests: &RequestArena,
+    active: Slot,
+    queue: &VecDeque<Slot>,
+    now: f64,
+) -> Option<usize> {
+    if !policy.preemptive() || queue.is_empty() {
+        return None;
+    }
+    let best = select_most_urgent(policy, requests, queue, now);
+    let p_best = policy.priority(requests.get(queue[best]), now);
+    let p_active = policy.priority(requests.get(active), now);
+    if p_best < p_active {
+        Some(best)
+    } else {
+        None
+    }
 }
 
 /// Config/CLI-selectable policy identifier.
@@ -304,5 +390,70 @@ mod tests {
         let p = Lars::default();
         let r = Request::new(1, 10, 1, 0.0); // no SLO state: infinite deadline
         assert!(p.priority(&r, 100.0).is_infinite());
+    }
+
+    fn view(group: u32, load: u64, active_long: bool, more_urgent: usize) -> GroupView {
+        GroupView {
+            group,
+            load,
+            queue_len: more_urgent,
+            n_decoding: 0,
+            active_long,
+            more_urgent_queued: more_urgent,
+        }
+    }
+
+    #[test]
+    fn routing_hook_policy_aware_avoids_active_long_groups() {
+        let r = req(100, 0.0, 0.1, 0.5);
+        // group 0 is least loaded but shards the active long request
+        let views = vec![view(0, 10, true, 0), view(1, 500, false, 0), view(2, 800, false, 0)];
+        // preemptive policies route around the busy group
+        assert_eq!(Lars::default().route(&r, &views, 0.0), 1);
+        assert_eq!(Srpt.route(&r, &views, 0.0), 1);
+        // FCFS keeps the blind least-loaded placement
+        assert_eq!(Fcfs.route(&r, &views, 0.0), 0);
+    }
+
+    #[test]
+    fn routing_hook_ranks_by_urgency_ahead_then_load() {
+        let r = req(100, 0.0, 0.1, 0.5);
+        // neither group is long-busy; group 1 has less urgent work ahead
+        let views = vec![view(0, 10, false, 3), view(1, 900, false, 0)];
+        assert_eq!(Lars::default().route(&r, &views, 0.0), 1);
+        // equal urgency ahead: lighter load wins, ties to the low id
+        let views = vec![view(0, 50, false, 1), view(1, 50, false, 1), view(2, 90, false, 1)];
+        assert_eq!(Lars::default().route(&r, &views, 0.0), 0);
+    }
+
+    #[test]
+    fn routing_hook_degrades_to_least_loaded_when_fleet_is_occupied() {
+        let r = req(100, 0.0, 0.1, 0.5);
+        let views = vec![view(0, 700, true, 0), view(1, 300, true, 0)];
+        assert_eq!(Lars::default().route(&r, &views, 0.0), 1);
+    }
+
+    #[test]
+    fn would_preempt_active_requires_strictly_more_urgent() {
+        let mut arena = RequestArena::new();
+        let active = arena.insert(req(1_000_000, 0.0, 60.0, 300.0));
+        let mut q = VecDeque::new();
+        // an identical challenger never evicts the shard-holding incumbent
+        q.push_back(arena.insert(req(1_000_000, 0.0, 60.0, 300.0)));
+        assert_eq!(would_preempt_active(&Srpt, &arena, active, &q, 1.0), None);
+        // a near-deadline short one does
+        q.push_back(arena.insert(req(100, 10.0, 0.1, 0.5)));
+        assert_eq!(
+            would_preempt_active(&Lars::default(), &arena, active, &q, 11.0),
+            Some(1)
+        );
+        // non-preemptive policies never preempt the active request
+        assert_eq!(would_preempt_active(&Fcfs, &arena, active, &q, 11.0), None);
+        // empty queue: nothing to switch to
+        let empty = VecDeque::new();
+        assert_eq!(
+            would_preempt_active(&Lars::default(), &arena, active, &empty, 11.0),
+            None
+        );
     }
 }

@@ -2,10 +2,29 @@
 //! scheduling of KVP instances").
 //!
 //! Each KVP group holds a full model replica. Short requests are routed to
-//! the least-loaded single group; a long request claims its primary group
-//! and grows across groups via the KvpManager while the remaining groups
-//! keep serving short traffic independently — the throughput opportunity
-//! the paper highlights.
+//! a single group; a long request claims its primary group and grows across
+//! groups via the KvpManager while the remaining groups keep serving short
+//! traffic independently — the throughput opportunity the paper highlights.
+//!
+//! *How* the serving group is chosen is the [`RoutingMode`]:
+//!
+//! * [`RoutingMode::Blind`] — least-loaded by outstanding tokens, the
+//!   pre-routing behavior every oracle-parity test pins down. Under this
+//!   mode the simulator also keeps its original lockstep iteration
+//!   semantics, so FCFS + blind stays bit-identical to
+//!   `sim::reference`.
+//! * [`RoutingMode::RoundRobin`] — strictly alternating placement, the
+//!   policy-blind baseline the routed comparison is measured against.
+//! * [`RoutingMode::Routed`] — placement delegated to the scheduling
+//!   policy's [`route`](super::policy::SchedPolicy::route) hook over
+//!   per-group [`GroupView`](super::policy::GroupView) occupancy snapshots:
+//!   urgency ranking drives *where* a request runs, not just its queue
+//!   order, and groups holding the active sharded long request are avoided.
+//!
+//! The non-blind modes also switch the simulator to *pool scheduling*:
+//! groups not holding the active long request's KV shards iterate
+//! independently as a short-request serving pool instead of in lockstep
+//! with the sharded prefill.
 //!
 //! State is flat: per-group load is a plain vector (groups are dense ids)
 //! and request placement is slot-indexed, so routing and release are O(1)
@@ -15,12 +34,56 @@ use super::arena::Slot;
 use crate::kvcache::GroupId;
 use crate::util::slotvec::SlotVec;
 
+/// Config/CLI-selectable placement strategy across KVP groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutingMode {
+    /// Least-loaded placement, lockstep iteration semantics (the default;
+    /// preserves oracle parity with `sim::reference`).
+    Blind,
+    /// Policy-blind alternating placement with pool scheduling — the
+    /// baseline the routed mode is compared against.
+    RoundRobin,
+    /// Policy-aware placement (`SchedPolicy::route`) with pool scheduling
+    /// and active-long-request preemption.
+    Routed,
+}
+
+impl RoutingMode {
+    pub const ALL: [RoutingMode; 3] =
+        [RoutingMode::Blind, RoutingMode::RoundRobin, RoutingMode::Routed];
+
+    pub fn parse(s: &str) -> Option<RoutingMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "blind" | "least-loaded" => Some(RoutingMode::Blind),
+            "rr" | "round-robin" | "round_robin" => Some(RoutingMode::RoundRobin),
+            "routed" | "policy" | "policy-aware" => Some(RoutingMode::Routed),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutingMode::Blind => "blind",
+            RoutingMode::RoundRobin => "round-robin",
+            RoutingMode::Routed => "routed",
+        }
+    }
+
+    /// Non-blind modes run the independent short-request serving pool
+    /// (per-group iteration timing) instead of the lockstep schedule.
+    pub fn pooled(self) -> bool {
+        self != RoutingMode::Blind
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Router {
     /// Outstanding token load per group (KV-resident + queued prompt work).
     load: Vec<u64>,
     /// Request slot -> primary group.
     placement: SlotVec<GroupId>,
+    /// Next group for round-robin placement.
+    rr_next: GroupId,
 }
 
 impl Router {
@@ -28,6 +91,7 @@ impl Router {
         Router {
             load: vec![0; n_groups as usize],
             placement: SlotVec::new(),
+            rr_next: 0,
         }
     }
 
@@ -45,9 +109,26 @@ impl Router {
             .min_by_key(|&(g, &l)| (l, g))
             .expect("router has no groups");
         let g = g as GroupId;
+        self.route_to(s, prompt_len, g);
+        g
+    }
+
+    /// Strictly alternating placement (the policy-blind round-robin
+    /// baseline): group ids cycle regardless of load or occupancy.
+    pub fn route_round_robin(&mut self, s: Slot, prompt_len: u64) -> GroupId {
+        let g = self.rr_next;
+        self.rr_next = (self.rr_next + 1) % self.load.len() as GroupId;
+        self.route_to(s, prompt_len, g);
+        g
+    }
+
+    /// Record an externally chosen placement (the policy-aware routed mode
+    /// picks `g` via `SchedPolicy::route`; the router only does the load
+    /// and placement accounting).
+    pub fn route_to(&mut self, s: Slot, prompt_len: u64, g: GroupId) {
+        assert!((g as usize) < self.load.len(), "route_to unknown group {g}");
         self.load[g as usize] += prompt_len;
         self.placement.insert(s as usize, g);
-        g
     }
 
     pub fn group_of(&self, s: Slot) -> Option<GroupId> {
@@ -110,6 +191,39 @@ mod tests {
         r.release(1, 500);
         assert_eq!(r.load_of(g), 0);
         assert_eq!(r.group_of(1), None);
+    }
+
+    #[test]
+    fn round_robin_alternates_regardless_of_load() {
+        let mut r = Router::new(3);
+        assert_eq!(r.route_round_robin(1, 1_000_000), 0);
+        // blind to the huge load on group 0: strict alternation
+        assert_eq!(r.route_round_robin(2, 10), 1);
+        assert_eq!(r.route_round_robin(3, 10), 2);
+        assert_eq!(r.route_round_robin(4, 10), 0);
+        assert_eq!(r.load_of(0), 1_000_010);
+    }
+
+    #[test]
+    fn route_to_records_placement_and_load() {
+        let mut r = Router::new(4);
+        r.route_to(9, 500, 2);
+        assert_eq!(r.group_of(9), Some(2));
+        assert_eq!(r.load_of(2), 500);
+        r.release(9, 500);
+        assert_eq!(r.load_of(2), 0);
+    }
+
+    #[test]
+    fn routing_mode_parse_roundtrips() {
+        for m in RoutingMode::ALL {
+            assert_eq!(RoutingMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(RoutingMode::parse("rr"), Some(RoutingMode::RoundRobin));
+        assert_eq!(RoutingMode::parse("policy-aware"), Some(RoutingMode::Routed));
+        assert_eq!(RoutingMode::parse("random"), None);
+        assert!(!RoutingMode::Blind.pooled());
+        assert!(RoutingMode::RoundRobin.pooled() && RoutingMode::Routed.pooled());
     }
 
     #[test]

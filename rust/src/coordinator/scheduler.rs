@@ -109,6 +109,15 @@ impl Scheduler {
         self.prefill_queue.len()
     }
 
+    /// Slots in this group's ready set, queue order. The router's
+    /// policy-aware placement scans this to count how much more-urgent
+    /// work an incoming request would sit behind on each group; the active
+    /// long request's preemption path lives in the simulator, which owns
+    /// the dedicated long-request queue.
+    pub fn queued_slots(&self) -> impl Iterator<Item = Slot> + '_ {
+        self.prefill_queue.iter().copied()
+    }
+
     pub fn n_decoding(&self) -> usize {
         self.decoding.len()
     }

@@ -8,7 +8,7 @@
 //!   table1      print the capability matrix
 
 use medha::config::DeploymentConfig;
-use medha::coordinator::SchedPolicyKind;
+use medha::coordinator::{RoutingMode, SchedPolicyKind};
 use medha::engine::pipeline::{serve, ServeRequest};
 use medha::engine::{detokenize, tokenize};
 use medha::sim::{SimOptions, Simulation};
@@ -22,7 +22,8 @@ medha — long-context LLM serving (Mnemosyne/Medha reproduction)
 USAGE:
   medha serve     [--artifacts DIR] [--stages N] [--chunk-cap C] [--prompt TEXT] [--requests N] [--new-tokens N]
   medha simulate  [--model llama3-8b|llama3-70b] [--tp N] [--spp N] [--kvp N]
-                  [--policy fcfs|srpt|edf|lars] [--workload mixed|convoy]
+                  [--policy fcfs|srpt|edf|lars] [--routing blind|round-robin|routed]
+                  [--workload mixed|convoy|kvp-convoy]
                   [--ctx TOKENS] [--requests N] [--rate R] [--horizon S] [--seed S]
   medha reproduce --figure <fig1|table1|fig5a|...|all>
   medha inspect   [--artifacts DIR]
@@ -112,6 +113,10 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         dep.scheduler.policy = SchedPolicyKind::parse(p)
             .ok_or_else(|| anyhow::anyhow!("unknown --policy '{p}' (fcfs|srpt|edf|lars)"))?;
     }
+    if let Some(rm) = args.get("routing") {
+        dep.scheduler.routing = RoutingMode::parse(rm)
+            .ok_or_else(|| anyhow::anyhow!("unknown --routing '{rm}' (blind|round-robin|routed)"))?;
+    }
     dep.validate()?;
     let ctx = args.u64_or("ctx", 1_000_000);
     let n = args.usize_or("requests", 8);
@@ -129,6 +134,17 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             opts.long_threshold = u64::MAX;
             workload::convoy(&cfg, args.u64_or("seed", 0))
         }
+        "kvp-convoy" => {
+            // overlapping KVP-sharded documents + interactive traffic; the
+            // documents take the long-request path, so pair this with
+            // --kvp > 1 and --routing routed to see the serving pool
+            let cfg = medha::workload::KvpConvoyConfig {
+                rate_per_s: if rate > 0.0 { rate } else { 8.0 },
+                horizon_s: args.f64_or("horizon", 40.0),
+                ..medha::workload::KvpConvoyConfig::default()
+            };
+            workload::kvp_convoy(&cfg, args.u64_or("seed", 0))
+        }
         "mixed" if rate > 0.0 => workload::poisson_mixed(
             rate,
             args.f64_or("horizon", 300.0),
@@ -140,15 +156,16 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             args.u64_or("seed", 0),
         ),
         "mixed" => workload::long_plus_decodes(ctx, n, 1_000, 512),
-        other => anyhow::bail!("unknown --workload '{other}' (mixed|convoy)"),
+        other => anyhow::bail!("unknown --workload '{other}' (mixed|convoy|kvp-convoy)"),
     };
     println!(
-        "simulating {} requests on {} x{} ({}, policy {})",
+        "simulating {} requests on {} x{} ({}, policy {}, routing {})",
         w.len(),
         dep.model.name,
         dep.total_gpus(),
         dep.parallel.label(),
-        dep.scheduler.policy.name()
+        dep.scheduler.policy.name(),
+        dep.scheduler.routing.name()
     );
     let mut sim = Simulation::new(dep, w, opts);
     let end = sim.run();
@@ -175,11 +192,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     );
     println!(
         "SLO: TTFT deadline attainment {:.0}%   TBT attainment {:.0}%   \
-         goodput {:.2} req/s   preemptions {}",
+         goodput {:.2} req/s   preemptions {} queued / {} active yields",
         s.ttft_attainment * 100.0,
         s.tbt_attainment * 100.0,
         s.goodput_rps,
-        s.preemptions
+        s.preemptions,
+        s.active_preemptions
     );
     Ok(())
 }

@@ -19,6 +19,28 @@
 use crate::coordinator::request::Request;
 use crate::util::stats::{P2Quantile, Samples};
 
+/// Why a prefill lost the compute slot it was holding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PreemptionKind {
+    /// A queued (not yet active) request was re-ordered past another —
+    /// the group schedulers' chunk-boundary switch among ready requests.
+    QueuedReorder,
+    /// The **actively executing** sharded long request yielded its
+    /// cooperative slot at a chunk boundary: every per-group KV shard is
+    /// retained and the request resumes bit-exactly from the boundary.
+    ActiveYield,
+}
+
+/// One preemption, as it took effect (the "no request left behind" audit
+/// trail: who lost the slot, when, and how).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PreemptionEvent {
+    pub t: f64,
+    /// Client-visible id of the request that was preempted.
+    pub request: u64,
+    pub kind: PreemptionKind,
+}
+
 /// One scheduler iteration's record (drives Figs. 8, 19, 22).
 #[derive(Debug, Clone, PartialEq)]
 pub struct IterRecord {
@@ -62,8 +84,24 @@ pub struct Metrics {
     /// Finished requests that met the TTFT deadline AND kept every TBT
     /// sample within the SLO — the goodput numerator.
     pub slo_good_requests: u64,
-    /// Chunk-boundary prefill preemptions across all schedulers.
+    /// Chunk-boundary prefill preemptions across all schedulers — the
+    /// **queued re-ordering** count (a ready request lost the next-chunk
+    /// slot before it was the one executing).
     pub preemptions: u64,
+    /// Chunk-boundary yields of the **actively executing** sharded long
+    /// request (pool-scheduled routing modes only; the distinction the
+    /// `preemptions` counter alone cannot make).
+    pub active_preemptions: u64,
+    /// Active-yield audit trail, in event order; dropped (like `iters`)
+    /// when `keep_iter_records` is off — the counter stays exact.
+    pub preemption_events: Vec<PreemptionEvent>,
+    /// Per-group busy seconds (sum of this group's iteration durations) —
+    /// the utilization split behind the routed-vs-blind comparison.
+    pub group_busy_s: Vec<f64>,
+    /// Per-group prefill tokens executed.
+    pub group_prefill_tokens: Vec<u64>,
+    /// Per-group decode tokens executed.
+    pub group_decode_tokens: Vec<u64>,
     /// Streaming-mode P² estimator for TBT p99: tracks the tail over the
     /// *full* sample stream, where a small reservoir holds too few tail
     /// points to resolve it.
@@ -93,6 +131,11 @@ impl Default for Metrics {
             ttft_deadline_missed: 0,
             slo_good_requests: 0,
             preemptions: 0,
+            active_preemptions: 0,
+            preemption_events: Vec::new(),
+            group_busy_s: Vec::new(),
+            group_prefill_tokens: Vec::new(),
+            group_decode_tokens: Vec::new(),
             tbt_p99_stream: None,
             first_iter_start: None,
             last_iter_t: 0.0,
@@ -127,7 +170,10 @@ impl Metrics {
         if self.first_iter_start.is_none() {
             self.first_iter_start = Some(rec.t - rec.dur_s);
         }
-        self.last_iter_t = rec.t;
+        // max, not assignment: pooled-mode group iterations are recorded in
+        // group order within a step, not completion-time order. For the
+        // lockstep cores the stream is time-monotone, so this is identical.
+        self.last_iter_t = self.last_iter_t.max(rec.t);
         if self.keep_iter_records {
             self.iters.push(rec);
         }
@@ -135,6 +181,46 @@ impl Metrics {
 
     pub fn record_ttft(&mut self, s: f64) {
         self.ttft.add(s);
+    }
+
+    /// Record a chunk-boundary yield of the active sharded long request.
+    /// The counter is always exact; the per-event audit trail is an
+    /// inspection feature like the iteration trace, so lean/streaming mode
+    /// (`keep_iter_records` off) drops it to keep memory bounded by
+    /// concurrency, not trace length.
+    pub fn record_active_preemption(&mut self, t: f64, request: u64) {
+        self.active_preemptions += 1;
+        if self.keep_iter_records {
+            self.preemption_events.push(PreemptionEvent {
+                t,
+                request,
+                kind: PreemptionKind::ActiveYield,
+            });
+        }
+    }
+
+    /// Account one group's share of an iteration: `busy_s` of execution
+    /// and the tokens it processed. Groups are dense ids; the vectors grow
+    /// on first touch so single-group deployments pay nothing extra.
+    pub fn record_group_iter(&mut self, g: usize, busy_s: f64, prefill: u64, decode: u64) {
+        if self.group_busy_s.len() <= g {
+            self.group_busy_s.resize(g + 1, 0.0);
+            self.group_prefill_tokens.resize(g + 1, 0);
+            self.group_decode_tokens.resize(g + 1, 0);
+        }
+        self.group_busy_s[g] += busy_s;
+        self.group_prefill_tokens[g] += prefill;
+        self.group_decode_tokens[g] += decode;
+    }
+
+    /// Per-group busy fraction over the recorded span (empty before any
+    /// iteration ran).
+    pub fn group_utilization(&self) -> Vec<f64> {
+        let span = self.span_s();
+        if span <= 0.0 {
+            return vec![0.0; self.group_busy_s.len()];
+        }
+        self.group_busy_s.iter().map(|&b| b / span).collect()
     }
 
     pub fn record_tbt(&mut self, s: f64) {
@@ -240,6 +326,7 @@ impl Metrics {
                 }
             },
             preemptions: self.preemptions,
+            active_preemptions: self.active_preemptions,
         }
     }
 }
@@ -265,8 +352,12 @@ pub struct MetricsSummary {
     pub tbt_attainment: f64,
     /// Requests per second that met both SLOs over the simulated span.
     pub goodput_rps: f64,
-    /// Chunk-boundary prefill preemptions.
+    /// Chunk-boundary prefill preemptions of *queued* requests
+    /// (re-orderings in a ready set).
     pub preemptions: u64,
+    /// Chunk-boundary yields of the *actively executing* sharded long
+    /// request (KV shards retained, resume bit-exact).
+    pub active_preemptions: u64,
 }
 
 #[cfg(test)]
@@ -367,6 +458,46 @@ mod tests {
         assert!(s.tbt_attainment.is_nan());
         assert_eq!(s.goodput_rps, 0.0);
         assert_eq!(s.preemptions, 0);
+        assert_eq!(s.active_preemptions, 0);
+        assert!(m.preemption_events.is_empty());
+        assert!(m.group_utilization().is_empty());
+    }
+
+    #[test]
+    fn active_preemptions_are_counted_and_logged_separately() {
+        let mut m = Metrics::new();
+        m.preemptions = 3; // queued re-orderings, installed by the sim
+        m.record_active_preemption(1.5, 42);
+        m.record_active_preemption(2.5, 42);
+        let s = m.summary();
+        assert_eq!(s.preemptions, 3);
+        assert_eq!(s.active_preemptions, 2);
+        assert_eq!(
+            m.preemption_events,
+            vec![
+                PreemptionEvent { t: 1.5, request: 42, kind: PreemptionKind::ActiveYield },
+                PreemptionEvent { t: 2.5, request: 42, kind: PreemptionKind::ActiveYield },
+            ]
+        );
+        // lean/streaming mode keeps the counter exact but drops the trail
+        let mut lean = Metrics::streaming(16, 1);
+        lean.record_active_preemption(1.0, 7);
+        assert_eq!(lean.active_preemptions, 1);
+        assert!(lean.preemption_events.is_empty());
+    }
+
+    #[test]
+    fn group_utilization_tracks_busy_share_of_span() {
+        let mut m = Metrics::new();
+        m.record_iter(IterRecord { t: 10.0, dur_s: 10.0, chunk: None, n_decodes: 0, active_gpus: 8 });
+        m.record_group_iter(0, 8.0, 1_000, 16);
+        m.record_group_iter(2, 2.0, 0, 4); // group 1 untouched, grows zeroed
+        m.record_group_iter(0, 1.0, 500, 0);
+        assert_eq!(m.group_busy_s, vec![9.0, 0.0, 2.0]);
+        assert_eq!(m.group_prefill_tokens, vec![1_500, 0, 0]);
+        assert_eq!(m.group_decode_tokens, vec![16, 0, 4]);
+        let u = m.group_utilization();
+        assert!((u[0] - 0.9).abs() < 1e-12 && u[1] == 0.0 && (u[2] - 0.2).abs() < 1e-12);
     }
 
     #[test]

@@ -16,6 +16,18 @@
 //! long-request queue, with preemption at chunk boundaries. Per-request
 //! deadline attainment and goodput land in [`Metrics`].
 //!
+//! Routing: placement across KVP groups follows the deployment's
+//! [`RoutingMode`] (`scheduler.routing`). `blind` preserves the original
+//! least-loaded, lockstep-iteration semantics bit-for-bit (the oracle
+//! parity mode). The pooled modes (`round-robin`, `routed`) split each
+//! decision instant per group: the shard holders of the active long
+//! request iterate as one cooperative set while every other group serves
+//! short traffic independently (section 7), `routed` additionally placing
+//! requests via the policy's urgency-aware [`GroupView`] hook and letting
+//! a preemptive policy yield the **active** sharded prefill at a chunk
+//! boundary (KV shards retained, resume bit-exact, recorded as
+//! [`PreemptionEvent`](crate::metrics::PreemptionEvent)s).
+//!
 //! Timing model:
 //! * every group's mixed batch flows through its stage pipeline
 //!   (`PipelineTimeline`);
@@ -63,11 +75,13 @@ use std::collections::VecDeque;
 
 use crate::config::DeploymentConfig;
 use crate::coordinator::chunking::ChunkPolicy;
-use crate::coordinator::policy::SchedPolicy;
+use crate::coordinator::policy::{self, GroupView, SchedPolicy};
 use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::scheduler::{BatchPlan, Scheduler};
 use crate::coordinator::spp::PipelineTimeline;
-use crate::coordinator::{AdaptiveChunk, KvpManager, RequestArena, Router, Slot, StaticChunk, Topology};
+use crate::coordinator::{
+    AdaptiveChunk, KvpManager, RequestArena, Router, RoutingMode, Slot, StaticChunk, Topology,
+};
 use crate::kvcache::{GroupId, RequestId};
 use crate::metrics::{IterRecord, Metrics};
 use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
@@ -159,6 +173,54 @@ pub fn convoy_ttft_split(
     (short, long)
 }
 
+/// Build and run the KVP-routing scenario shared by the `sched` figure's
+/// routing table, the `sched/kvp_routing` bench, and
+/// `tests/kvp_routing.rs`: Llama-3 8B tp=8 across 4 KVP groups, static
+/// chunking, an onboarding threshold that shards each document across two
+/// groups, and the `kvp_convoy` trace of overlapping documents plus short
+/// interactive traffic. One definition, so the figure, the bench record,
+/// and the regression thresholds always measure the same scenario.
+pub fn run_kvp_convoy_scenario(
+    kind: crate::coordinator::SchedPolicyKind,
+    routing: RoutingMode,
+    cfg: &crate::workload::KvpConvoyConfig,
+    seed: u64,
+) -> Simulation {
+    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 4);
+    dep.scheduler.policy = kind;
+    dep.scheduler.routing = routing;
+    dep.scheduler.adaptive_chunking = false;
+    // Big document chunks: each sharding-group iteration is chunk-scale
+    // work, which is exactly what a blindly placed short request waits out.
+    dep.scheduler.static_chunk = 4096;
+    // Documents shard across two of the four groups, leaving an
+    // independent short-serving pool (the section 7 opportunity).
+    dep.scheduler.kvp_onboard_threshold = cfg.doc_prompt.div_ceil(2).max(1);
+    let mut sim = Simulation::new(dep, crate::workload::kvp_convoy(cfg, seed), SimOptions::default());
+    sim.run();
+    sim
+}
+
+/// Split finished-request TTFTs of a kvp_convoy run by class —
+/// (interactive, documents) — with the shared `Samples` percentile rule.
+pub fn kvp_convoy_ttft_split(
+    sim: &Simulation,
+    cfg: &crate::workload::KvpConvoyConfig,
+) -> (crate::util::stats::Samples, crate::util::stats::Samples) {
+    let mut short = crate::util::stats::Samples::new();
+    let mut docs = crate::util::stats::Samples::new();
+    for r in sim.retired() {
+        if let Some(t) = r.ttft() {
+            if cfg.is_doc(r.prompt_len) {
+                docs.add(t);
+            } else {
+                short.add(t);
+            }
+        }
+    }
+    (short, docs)
+}
+
 pub struct Simulation {
     pub dep: DeploymentConfig,
     pub opts: SimOptions,
@@ -181,6 +243,14 @@ pub struct Simulation {
     active_long: Option<Slot>,
     kvp_mgr: KvpManager,
     router: Router,
+    /// Placement mode across KVP groups (`scheduler.routing`). `Blind`
+    /// keeps the lockstep oracle-parity semantics; the pooled modes run
+    /// non-sharding groups as an independent short-request serving pool
+    /// with per-group iteration timing and active-long preemption.
+    routing: RoutingMode,
+    /// Pooled mode only: the earliest time each group can form its next
+    /// batch (its previous iteration's admission point).
+    free_at: Vec<f64>,
     pub metrics: Metrics,
     now: f64,
 
@@ -192,6 +262,8 @@ pub struct Simulation {
     long_ctxs: Vec<u64>,
     participating: Vec<(GroupId, u64)>,
     finished_buf: Vec<Slot>,
+    /// Routed-admission scratch: per-group occupancy views.
+    views: Vec<GroupView>,
 }
 
 impl Simulation {
@@ -214,6 +286,7 @@ impl Simulation {
         };
         metrics.tbt_slo_s = dep.slo.tbt_s;
         let sched_kind = dep.scheduler.policy;
+        let routing = dep.scheduler.routing;
         Simulation {
             pm,
             layers_per_stage,
@@ -239,6 +312,8 @@ impl Simulation {
             active_long: None,
             kvp_mgr: KvpManager::new(dep.scheduler.kvp_onboard_threshold, kvp_groups),
             router: Router::new(kvp_groups),
+            routing,
+            free_at: vec![0.0; kvp_groups as usize],
             metrics,
             now: 0.0,
             group_plans: (0..kvp_groups).map(|_| BatchPlan::default()).collect(),
@@ -248,6 +323,7 @@ impl Simulation {
             long_ctxs: Vec::new(),
             participating: Vec::new(),
             finished_buf: Vec::new(),
+            views: Vec::new(),
             dep,
             opts,
         }
@@ -267,24 +343,83 @@ impl Simulation {
                 .with_slo(est, deadline);
             let slot = self.requests.insert(r);
             if spec.prompt_len > self.opts.long_threshold {
+                // Documents claim their primary group by outstanding load
+                // in every mode — their KV grows across groups via the KVP
+                // manager regardless of where they start.
                 let g = self.router.route(slot, spec.prompt_len);
                 self.kvp_mgr.onboard_request(slot, spec.id, g, self.now);
                 self.long_queue.push_back(slot);
             } else {
-                let g = self.router.route(slot, spec.prompt_len);
+                let g = match self.routing {
+                    RoutingMode::Blind => self.router.route(slot, spec.prompt_len),
+                    RoutingMode::RoundRobin => {
+                        self.router.route_round_robin(slot, spec.prompt_len)
+                    }
+                    RoutingMode::Routed => {
+                        self.fill_group_views(slot);
+                        let g =
+                            self.sched_policy
+                                .route(self.requests.get(slot), &self.views, self.now);
+                        self.router.route_to(slot, spec.prompt_len, g);
+                        g
+                    }
+                };
                 self.scheds[g as usize].enqueue(slot);
             }
         }
-        // Next long request: minimum scheduling-policy priority over the
-        // long queue (FCFS = the front, exactly the pre-policy behavior).
-        if self.active_long.is_none() && !self.long_queue.is_empty() {
-            let best = crate::coordinator::policy::select_most_urgent(
+        // Blind mode: the next long request is selected here, once, and
+        // holds the cooperative slot to completion (minimum policy priority
+        // over the long queue; FCFS = the front, exactly the pre-policy
+        // behavior). Pooled modes instead re-evaluate ownership of the slot
+        // at every chunk boundary in `step_pooled`, which is what makes the
+        // *active* request preemptible.
+        if !self.routing.pooled() && self.active_long.is_none() && !self.long_queue.is_empty() {
+            let best = policy::select_most_urgent(
                 self.sched_policy.as_ref(),
                 &self.requests,
                 &self.long_queue,
                 self.now,
             );
             self.active_long = self.long_queue.remove(best);
+        }
+    }
+
+    /// Snapshot per-group occupancy for the policy routing hook: router
+    /// load, ready-set depth, participation in the active sharded long
+    /// request, and how much more-urgent work is already queued ahead of
+    /// `incoming` on each group. O(groups + total queued) per admission —
+    /// fine at interactive backlog depths; an incrementally maintained
+    /// urgency count for million-request backlogs is a ROADMAP follow-up
+    /// alongside the priority-heap ready set. Non-preemptive policies skip
+    /// the backlog scan entirely (their routing hook ignores urgency).
+    fn fill_group_views(&mut self, incoming: Slot) {
+        self.views.clear();
+        let preemptive = self.sched_policy.preemptive();
+        let p_in = self
+            .sched_policy
+            .priority(self.requests.get(incoming), self.now);
+        for g in 0..self.scheds.len() {
+            let gid = g as GroupId;
+            let sched = &self.scheds[g];
+            let mut more_urgent = 0usize;
+            if preemptive {
+                for s in sched.queued_slots() {
+                    if self.sched_policy.priority(self.requests.get(s), self.now) < p_in {
+                        more_urgent += 1;
+                    }
+                }
+            }
+            self.views.push(GroupView {
+                group: gid,
+                load: self.router.load_of(gid),
+                queue_len: sched.queue_len(),
+                n_decoding: sched.n_decoding(),
+                active_long: self
+                    .active_long
+                    .map(|slot| self.kvp_mgr.holds(slot, gid))
+                    .unwrap_or(false),
+                more_urgent_queued: more_urgent,
+            });
         }
     }
 
@@ -355,8 +490,19 @@ impl Simulation {
         self.now
     }
 
-    /// One lockstep iteration across the cooperating set.
+    /// One simulation step: the original lockstep iteration under blind
+    /// routing, or one pooled decision instant (independent per-group
+    /// iterations + cooperative coop-set iteration) under the routed modes.
     fn step(&mut self) {
+        if self.routing.pooled() {
+            self.step_pooled()
+        } else {
+            self.step_lockstep()
+        }
+    }
+
+    /// One lockstep iteration across the cooperating set.
+    fn step_lockstep(&mut self) {
         let n_groups = self.scheds.len();
         let slo = self.dep.slo;
 
@@ -462,6 +608,16 @@ impl Simulation {
             let (first_exit, exit) = self.timelines[g].flow_compact(ready, |_| st, hop);
             max_stage0_exit = max_stage0_exit.max(first_exit);
             self.exits[g] = exit;
+            // Per-group utilization split (mirrored bit-identically by the
+            // reference core): this group's own execution window and the
+            // tokens it processed, before the coop merge charge.
+            let prefill_toks: u64 = self.shape.prefills.iter().map(|p| p.chunk).sum();
+            self.metrics.record_group_iter(
+                g,
+                exit - self.now,
+                prefill_toks,
+                self.shape.decodes.len() as u64,
+            );
         }
 
         if !worked {
@@ -485,59 +641,11 @@ impl Simulation {
         // the simulator's scratch, so no clone is needed to appease the
         // borrow checker).
         for g in 0..n_groups {
-            if self.group_plans[g].is_empty() {
-                continue;
-            }
-            self.scheds[g].complete_iteration_into(
-                &self.group_plans[g],
-                &mut self.requests,
-                iter_end,
-                Self::short_local_kv,
-                &mut self.finished_buf,
-            );
-            for i in 0..self.finished_buf.len() {
-                let slot = self.finished_buf[i];
-                let prompt_len = {
-                    let r = self.requests.get(slot);
-                    self.metrics.record_finished_request(r);
-                    r.prompt_len
-                };
-                self.router.release(slot, prompt_len);
-                self.retire(slot);
-            }
+            self.complete_group_plan(g, iter_end);
         }
         // Long request progress.
         if let Some(slot) = long_slot {
-            if let Some(c) = long_chunk {
-                let r = self.requests.get_mut(slot);
-                r.complete_chunk(c, iter_end);
-                let entered_decode = r.phase == Phase::Decoding || r.phase == Phase::Finished;
-                let ttft = r.ttft();
-                self.kvp_mgr.append_tokens(slot, c, iter_end);
-                if entered_decode {
-                    if let Some(t) = ttft {
-                        self.metrics.record_ttft(t);
-                    }
-                }
-            } else if long_decode {
-                self.requests.get_mut(slot).complete_decode(iter_end);
-                self.kvp_mgr.append_tokens(slot, 1, iter_end);
-            }
-            let finished = {
-                let r = self.requests.get(slot);
-                if r.is_finished() {
-                    self.metrics.record_finished_request(r);
-                    Some(r.prompt_len)
-                } else {
-                    None
-                }
-            };
-            if let Some(prompt_len) = finished {
-                self.kvp_mgr.release(slot);
-                self.router.release(slot, prompt_len);
-                self.active_long = None;
-                self.retire(slot);
-            }
+            self.complete_long_progress(slot, long_chunk, long_decode, iter_end);
         }
 
         let active_gpus = match long_slot {
@@ -568,6 +676,371 @@ impl Simulation {
         self.now = t_next;
     }
 
+    /// Apply one group's completed plan at time `t`: request transitions
+    /// via the group scheduler, finished-request metrics, router release,
+    /// arena retirement. Shared by the lockstep core (all groups complete
+    /// at the global iteration end) and the pooled core (each pool group
+    /// completes at its own exit).
+    fn complete_group_plan(&mut self, g: usize, t: f64) {
+        if self.group_plans[g].is_empty() {
+            return;
+        }
+        self.scheds[g].complete_iteration_into(
+            &self.group_plans[g],
+            &mut self.requests,
+            t,
+            Self::short_local_kv,
+            &mut self.finished_buf,
+        );
+        for i in 0..self.finished_buf.len() {
+            let slot = self.finished_buf[i];
+            let prompt_len = {
+                let r = self.requests.get(slot);
+                self.metrics.record_finished_request(r);
+                r.prompt_len
+            };
+            self.router.release(slot, prompt_len);
+            self.retire(slot);
+        }
+    }
+
+    /// Advance the active long request by one cooperative iteration's
+    /// outcome at time `t` (chunk completed, or one decode token), growing
+    /// its KV shards and retiring it when it finishes.
+    fn complete_long_progress(
+        &mut self,
+        slot: Slot,
+        long_chunk: Option<u64>,
+        long_decode: bool,
+        t: f64,
+    ) {
+        if let Some(c) = long_chunk {
+            // TTFT is recorded once, by `record_finished_request` — the
+            // same rule short requests follow. (The pre-PR-3 cores also
+            // recorded it at decode entry, double-counting every finished
+            // long request's TTFT in the percentile stream.)
+            self.requests.get_mut(slot).complete_chunk(c, t);
+            self.kvp_mgr.append_tokens(slot, c, t);
+        } else if long_decode {
+            self.requests.get_mut(slot).complete_decode(t);
+            self.kvp_mgr.append_tokens(slot, 1, t);
+        }
+        let finished = {
+            let r = self.requests.get(slot);
+            if r.is_finished() {
+                self.metrics.record_finished_request(r);
+                Some(r.prompt_len)
+            } else {
+                None
+            }
+        };
+        if let Some(prompt_len) = finished {
+            self.kvp_mgr.release(slot);
+            self.router.release(slot, prompt_len);
+            self.active_long = None;
+            self.retire(slot);
+        }
+    }
+
+    /// Pooled-mode ownership of the cooperative long-request slot, called
+    /// at the top of every pooled step. Activates the most urgent queued
+    /// long request when the slot is empty, and — under a preemptive
+    /// policy, at a chunk boundary (every shard-holding group idle) —
+    /// yields the **actively prefilling** request to a strictly more
+    /// urgent challenger. The yielded request keeps all of its per-group
+    /// KV shards ([`KvpManager::yield_active`]) and its queue eligibility;
+    /// resuming is just winning the slot back, from the exact boundary.
+    fn reselect_active_long_pooled(&mut self) {
+        let active = match self.active_long {
+            None => {
+                if self.long_queue.is_empty() {
+                    return;
+                }
+                let best = policy::select_most_urgent(
+                    self.sched_policy.as_ref(),
+                    &self.requests,
+                    &self.long_queue,
+                    self.now,
+                );
+                let slot = self.long_queue.remove(best).expect("index in range");
+                self.kvp_mgr.resume(slot, self.now);
+                self.active_long = Some(slot);
+                return;
+            }
+            Some(a) => a,
+        };
+        if self.long_queue.is_empty() {
+            return;
+        }
+        // Preemption is legal only at a chunk boundary: every group holding
+        // one of the active request's shards must be idle.
+        let at_boundary = match self.kvp_mgr.shard_map(active) {
+            Some(m) => m
+                .shards
+                .iter()
+                .all(|&(g, _, _)| self.free_at[g as usize] <= self.now),
+            None => true,
+        };
+        if !at_boundary {
+            return;
+        }
+        match self.requests.get(active).phase {
+            // Prefill preemption only: a decoding request holds the slot
+            // to completion (its chunked work is already done).
+            Phase::Decoding | Phase::Finished => {}
+            Phase::Queued => {
+                // Never ran a chunk yet: swapping it out is a queued
+                // re-ordering, not an active yield — no event recorded.
+                if policy::would_preempt_active(
+                    self.sched_policy.as_ref(),
+                    &self.requests,
+                    active,
+                    &self.long_queue,
+                    self.now,
+                )
+                .is_some()
+                {
+                    self.long_queue.push_back(active);
+                    self.active_long = None;
+                    self.reselect_active_long_pooled();
+                }
+            }
+            Phase::Prefilling => {
+                if let Some(best) = policy::would_preempt_active(
+                    self.sched_policy.as_ref(),
+                    &self.requests,
+                    active,
+                    &self.long_queue,
+                    self.now,
+                ) {
+                    let challenger = self.long_queue.remove(best).expect("index in range");
+                    self.kvp_mgr.yield_active(active, self.now);
+                    self.metrics
+                        .record_active_preemption(self.now, self.requests.get(active).id);
+                    self.long_queue.push_back(active);
+                    self.kvp_mgr.resume(challenger, self.now);
+                    self.active_long = Some(challenger);
+                }
+            }
+        }
+    }
+
+    /// Next decision instant in pooled mode: the earliest group admission
+    /// point or pending arrival after `now` (the 1e-6 bump survives only
+    /// as the last-resort guarantee of progress, as in the lockstep core).
+    fn next_event_pooled(&self) -> f64 {
+        let mut t = f64::INFINITY;
+        if let Some(spec) = self.pending.front() {
+            t = t.min(spec.arrival_s);
+        }
+        for &f in &self.free_at {
+            if f > self.now {
+                t = t.min(f);
+            }
+        }
+        if t.is_finite() && t > self.now {
+            t
+        } else {
+            self.now + 1e-6
+        }
+    }
+
+    /// One pooled decision instant (routing modes `round-robin`/`routed`).
+    ///
+    /// The groups holding KV shards of the active long request form the
+    /// **cooperative set**: they iterate together (the sharded chunk's
+    /// partial attention plus each group's own short traffic) and complete
+    /// at the set's max exit plus the KVP merge charge. Every other group
+    /// is an **independent short-request pool** (paper section 7): it
+    /// forms, executes, and completes its own mixed batches on its own
+    /// clock, so a short request routed to an idle group never waits out a
+    /// document chunk on a sharding group.
+    fn step_pooled(&mut self) {
+        let n_groups = self.scheds.len();
+        let slo = self.dep.slo;
+        self.reselect_active_long_pooled();
+
+        // Shard holders of the active long request (the cooperative set).
+        self.participating.clear();
+        if let Some(slot) = self.active_long {
+            if let Some(m) = self.kvp_mgr.shard_map(slot) {
+                for &(g, _, n) in &m.shards {
+                    self.participating.push((g, n));
+                }
+            }
+        }
+        let coop_ready = !self.participating.is_empty()
+            && self
+                .participating
+                .iter()
+                .all(|&(g, _)| self.free_at[g as usize] <= self.now);
+
+        // ---- long-request work selection (whole coop set must be idle) --
+        let long_slot = self.active_long;
+        let mut long_chunk: Option<u64> = None;
+        let mut long_decode = false;
+        if coop_ready {
+            let r = self.requests.get(long_slot.expect("coop_ready implies active"));
+            match r.phase {
+                Phase::Queued | Phase::Prefilling => {
+                    let (kv_done, remaining, dl) = (
+                        r.kv_len(),
+                        r.remaining_prefill(),
+                        r.deadline_remaining_s(self.now),
+                    );
+                    self.long_ctxs.clear();
+                    for sched in &self.scheds {
+                        self.long_ctxs.extend_from_slice(sched.decode_ctxs());
+                    }
+                    let c = self
+                        .policy
+                        .next_chunk(kv_done, remaining, &self.long_ctxs, dl, &self.pm, &slo);
+                    long_chunk = Some(c.max(1).min(remaining));
+                }
+                Phase::Decoding => long_decode = true,
+                Phase::Finished => {}
+            }
+        }
+        let long_nq = long_chunk.unwrap_or(if long_decode { 1 } else { 0 });
+
+        // ---- batch formation + flow -------------------------------------
+        let mut coop_ran = false;
+        let mut coop_exit = self.now;
+        let mut coop_first = self.now;
+        let mut coop_any_decode = long_decode;
+        let mut coop_decodes = 0usize;
+        let mut coop_chunk: Option<u64> = None;
+        self.combined.clear(); // accumulates the coop set's shapes
+        for g in 0..n_groups {
+            self.group_plans[g].clear();
+            let member = self.participating.iter().any(|&(gg, _)| gg as usize == g);
+            let run_now = if member {
+                coop_ready && long_nq > 0
+            } else {
+                self.free_at[g] <= self.now
+            };
+            if !run_now {
+                continue;
+            }
+            self.scheds[g].next_batch_into(
+                &self.requests,
+                &self.pm,
+                &slo,
+                self.now,
+                &mut self.group_plans[g],
+            );
+            self.scheds[g].batch_shape_into(
+                &self.group_plans[g],
+                &self.requests,
+                Self::short_local_kv,
+                &mut self.shape,
+            );
+            if member {
+                let local = self
+                    .participating
+                    .iter()
+                    .find(|&&(gg, _)| gg as usize == g)
+                    .expect("member has a shard")
+                    .1;
+                if let Some(c) = long_chunk {
+                    self.shape.prefills.push(PrefillWork {
+                        chunk: c,
+                        kv_len: local + c,
+                    });
+                } else if long_decode {
+                    self.shape.decodes.push(DecodeWork {
+                        kv_len: local.max(1),
+                    });
+                }
+            }
+            if self.shape.is_empty() {
+                continue;
+            }
+            let has_decode = !self.shape.decodes.is_empty();
+            let st = self.pm.stage_time(&self.shape, self.layers_per_stage).total();
+            let hop = self.pm.stage_hop_s(self.shape.tokens());
+            let ready = if has_decode {
+                self.now
+            } else {
+                self.timelines[g].stage0_free().max(self.now)
+            };
+            let (first, exit) = self.timelines[g].flow_compact(ready, |_| st, hop);
+            let prefill_toks: u64 = self.shape.prefills.iter().map(|p| p.chunk).sum();
+            let n_decodes = self.shape.decodes.len();
+            self.metrics
+                .record_group_iter(g, exit - self.now, prefill_toks, n_decodes as u64);
+            if member {
+                coop_ran = true;
+                coop_exit = coop_exit.max(exit);
+                coop_first = coop_first.max(first);
+                coop_any_decode |= has_decode;
+                coop_decodes += n_decodes;
+                coop_chunk = coop_chunk.or(long_chunk);
+                self.combined.extend_from(&self.shape);
+            } else {
+                // Independent pool iteration: this group's requests
+                // complete at its own exit, on its own clock.
+                let dur = exit - self.now;
+                let gpus = self.topo.parallel.workers_per_replica();
+                if dur > 0.0 {
+                    self.metrics.mfu.add(self.pm.mfu(&self.shape, dur, gpus.max(1)));
+                    self.metrics.mbu.add(self.pm.mbu(&self.shape, dur, gpus.max(1)));
+                }
+                self.metrics.record_iter(IterRecord {
+                    t: exit,
+                    dur_s: dur,
+                    chunk: self.group_plans[g].prefill.map(|(_, c)| c),
+                    n_decodes,
+                    active_gpus: gpus,
+                });
+                self.free_at[g] = if has_decode { exit } else { first };
+                self.complete_group_plan(g, exit);
+            }
+        }
+
+        // ---- cooperative completion -------------------------------------
+        if coop_ran {
+            if self.participating.len() > 1 && long_nq > 0 {
+                coop_exit += self.pm.kvp_merge_s(long_nq);
+            }
+            let dur = coop_exit - self.now;
+            // Dense SPP admission survives for pure-prefill coop batches:
+            // the set re-admits at its max stage-0 exit, not full drain.
+            let free = if coop_any_decode { coop_exit } else { coop_first };
+            for i in 0..self.participating.len() {
+                let g = self.participating[i].0 as usize;
+                self.free_at[g] = free;
+            }
+            let gpus = self.topo.gpus_active(self.participating.len().max(1) as u32);
+            if dur > 0.0 {
+                self.metrics
+                    .mfu
+                    .add(self.pm.mfu(&self.combined, dur, gpus.max(1)));
+                self.metrics
+                    .mbu
+                    .add(self.pm.mbu(&self.combined, dur, gpus.max(1)));
+            }
+            self.metrics.record_iter(IterRecord {
+                t: coop_exit,
+                dur_s: dur,
+                chunk: coop_chunk,
+                n_decodes: coop_decodes,
+                active_gpus: gpus,
+            });
+            for i in 0..self.participating.len() {
+                let g = self.participating[i].0 as usize;
+                self.complete_group_plan(g, coop_exit);
+            }
+            if let Some(slot) = long_slot {
+                self.complete_long_progress(slot, long_chunk, long_decode, coop_exit);
+            }
+        }
+
+        // Whether or not anything ran, the next decision instant is the
+        // earliest group admission point or arrival.
+        self.now = self.next_event_pooled();
+    }
+
     /// Look up a request by its external id — live or (when
     /// `opts.retain_finished`) retired. Linear scan; post-run inspection
     /// only, never on the hot path.
@@ -583,6 +1056,12 @@ impl Simulation {
         &self.kvp_mgr.onboard_log
     }
 
+    /// See [`KvpManager::onboard_log_is_duplicate_free`] — the
+    /// never-re-onboard invariant, exposed for the test harness.
+    pub fn kvp_onboard_log_is_duplicate_free(&self) -> bool {
+        self.kvp_mgr.onboard_log_is_duplicate_free()
+    }
+
     /// Finished requests retained for post-run inspection
     /// (`opts.retain_finished`); empty in lean mode. Drives per-class
     /// latency splits (e.g. short-interactive vs long-document TTFT in the
@@ -596,6 +1075,12 @@ impl Simulation {
     /// length.
     pub fn arena_high_water(&self) -> usize {
         self.requests.capacity()
+    }
+
+    /// Requests still live in the arena (0 after a fully drained run —
+    /// every slot recycled; the invariant harness checks this).
+    pub fn n_live(&self) -> usize {
+        self.requests.len()
     }
 }
 
@@ -823,6 +1308,82 @@ mod tests {
                 "short {i} waited for the document"
             );
         }
+    }
+
+    #[test]
+    fn pooled_round_robin_drains_kvp_convoy() {
+        use crate::coordinator::SchedPolicyKind;
+        let cfg = workload::KvpConvoyConfig {
+            rate_per_s: 4.0,
+            horizon_s: 10.0,
+            doc_prompt: 64_000,
+            n_docs: 2,
+            doc_start_s: 1.0,
+            doc_stagger_s: 3.0,
+            ..workload::KvpConvoyConfig::default()
+        };
+        let n = workload::kvp_convoy(&cfg, 7).len() as u64;
+        for kind in SchedPolicyKind::ALL {
+            for routing in [RoutingMode::RoundRobin, RoutingMode::Routed] {
+                let sim = run_kvp_convoy_scenario(kind, routing, &cfg, 7);
+                assert_eq!(
+                    sim.metrics.finished_requests,
+                    n,
+                    "{}/{} left requests behind",
+                    kind.name(),
+                    routing.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_srpt_yields_active_doc_and_resumes_exactly() {
+        use crate::coordinator::SchedPolicyKind;
+        let mut d = dep(8, 1, 4);
+        d.scheduler.policy = SchedPolicyKind::Srpt;
+        d.scheduler.routing = RoutingMode::Routed;
+        d.scheduler.adaptive_chunking = false;
+        d.scheduler.static_chunk = 2048;
+        d.scheduler.kvp_onboard_threshold = 64_000;
+        let w = vec![
+            RequestSpec { id: 0, prompt_len: 200_000, max_new_tokens: 4, arrival_s: 0.0 },
+            RequestSpec { id: 1, prompt_len: 32_000, max_new_tokens: 4, arrival_s: 1.0 },
+        ];
+        let mut sim = Simulation::new(d, w, SimOptions::default());
+        sim.run();
+        assert_eq!(sim.metrics.finished_requests, 2);
+        // the shorter document preempted the active one at a chunk boundary
+        assert!(sim.metrics.active_preemptions >= 1);
+        let ev = sim.metrics.preemption_events[0];
+        assert_eq!(ev.request, 0);
+        assert_eq!(ev.kind, crate::metrics::PreemptionKind::ActiveYield);
+        let a = sim.request(0).unwrap();
+        let b = sim.request(1).unwrap();
+        assert!(b.finished_s.unwrap() < a.finished_s.unwrap(), "SRPT runs the short doc first");
+        // resume is exact: every prompt token prefilled once, KV grown once
+        assert_eq!(a.prefilled, 200_000);
+        assert_eq!(sim.metrics.prefill_tokens, 232_000);
+        // a retained shard is never re-onboarded across the yield
+        assert!(sim.kvp_onboard_log_is_duplicate_free(), "shard re-onboarded after yield");
+    }
+
+    #[test]
+    fn blind_routing_field_keeps_lockstep_counters() {
+        // a routed-capable build must leave the default blind path
+        // untouched: same scenario as `mixed_batching_keeps_decodes_flowing`
+        // but asserting the new counters stay zero under FCFS + blind
+        let mut d = dep(8, 1, 1);
+        d.scheduler.max_batch_size = 64;
+        let w = workload::long_plus_decodes(500_000, 8, 1_000, 64);
+        let mut sim = Simulation::new(d, w, SimOptions::default());
+        sim.run();
+        assert_eq!(sim.metrics.active_preemptions, 0);
+        assert!(sim.metrics.preemption_events.is_empty());
+        // per-group utilization recorded even in lockstep mode
+        assert_eq!(sim.metrics.group_busy_s.len(), 1);
+        assert!(sim.metrics.group_busy_s[0] > 0.0);
+        assert!(sim.metrics.group_utilization()[0] > 0.5);
     }
 
     #[test]

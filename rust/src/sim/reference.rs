@@ -28,7 +28,7 @@ use crate::coordinator::chunking::ChunkPolicy;
 use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::spp::PipelineTimeline;
 use crate::coordinator::{
-    AdaptiveChunk, KvpManager, Router, SchedPolicyKind, Slot, StaticChunk, Topology,
+    AdaptiveChunk, KvpManager, Router, RoutingMode, SchedPolicyKind, Slot, StaticChunk, Topology,
 };
 use crate::kvcache::RequestId;
 use crate::metrics::{IterRecord, Metrics};
@@ -209,6 +209,11 @@ impl ReferenceSimulation {
             dep.scheduler.policy,
             SchedPolicyKind::Fcfs,
             "ReferenceSimulation implements FCFS only"
+        );
+        assert_eq!(
+            dep.scheduler.routing,
+            RoutingMode::Blind,
+            "ReferenceSimulation implements blind least-loaded routing only"
         );
         let pm = PerfModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
         let kvp_groups = dep.parallel.kvp.max(1);
@@ -403,6 +408,15 @@ impl ReferenceSimulation {
             let res = self.timelines[g].flow(ready, |_| st, hop);
             max_stage0_exit = max_stage0_exit.max(res.first_stage_exit());
             exits[g] = res.exit();
+            // per-group utilization split, in lockstep with the optimized
+            // core's accounting (asserted bit-identical by sim_golden)
+            let prefill_toks: u64 = shape.prefills.iter().map(|p| p.chunk).sum();
+            self.metrics.record_group_iter(
+                g,
+                res.exit() - self.now,
+                prefill_toks,
+                shape.decodes.len() as u64,
+            );
         }
 
         if !worked {
@@ -437,12 +451,9 @@ impl ReferenceSimulation {
                 let r = self.requests.get_mut(&id).unwrap();
                 r.complete_chunk(c, iter_end);
                 self.kvp_mgr.append_tokens(slot_of(id), c, iter_end);
-                let r = &self.requests[&id];
-                if r.phase == Phase::Decoding || r.phase == Phase::Finished {
-                    if let Some(t) = r.ttft() {
-                        self.metrics.record_ttft(t);
-                    }
-                }
+                // TTFT recorded once, at finish, via record_finished_request
+                // (kept in lockstep with the optimized core's fix of the
+                // decode-entry double count)
             } else if long_decode {
                 let r = self.requests.get_mut(&id).unwrap();
                 r.complete_decode(iter_end);

@@ -164,6 +164,91 @@ pub fn convoy(cfg: &ConvoyConfig, seed: u64) -> Vec<RequestSpec> {
     out
 }
 
+/// KVP convoy trace (section 4.4 + 7): a Poisson stream of short
+/// interactive requests, plus a burst of **overlapping** document prefills
+/// long enough to shard across KVP groups. Documents are injected at fixed
+/// staggered times shorter than one document's service time, so a fresh
+/// document always arrives while another is mid-prefill — the scenario
+/// where policy-aware routing (shorts steered off the sharding groups) and
+/// active-long-request preemption both matter. Arrivals are deterministic
+/// given the seed; documents are at fixed offsets so every seed contains
+/// the same overlap structure.
+#[derive(Debug, Clone)]
+pub struct KvpConvoyConfig {
+    /// Short-request arrival rate (requests/s).
+    pub rate_per_s: f64,
+    /// Short arrivals stop after this horizon (the simulation then drains).
+    pub horizon_s: f64,
+    pub short_prompt: u64,
+    pub short_new_tokens: u64,
+    /// Document prompt length — must exceed the simulator's
+    /// `long_threshold` so documents take the KVP-sharded path.
+    pub doc_prompt: u64,
+    pub doc_new_tokens: u64,
+    /// Number of documents injected.
+    pub n_docs: usize,
+    /// First document's arrival time.
+    pub doc_start_s: f64,
+    /// Gap between consecutive document arrivals (chosen shorter than one
+    /// document's prefill so their service windows overlap).
+    pub doc_stagger_s: f64,
+}
+
+impl Default for KvpConvoyConfig {
+    fn default() -> Self {
+        KvpConvoyConfig {
+            rate_per_s: 8.0,
+            horizon_s: 40.0,
+            short_prompt: 512,
+            short_new_tokens: 32,
+            doc_prompt: 512_000,
+            doc_new_tokens: 8,
+            n_docs: 3,
+            doc_start_s: 2.0,
+            doc_stagger_s: 12.0,
+        }
+    }
+}
+
+impl KvpConvoyConfig {
+    /// Whether a request of this trace is a document (by prompt length).
+    pub fn is_doc(&self, prompt_len: u64) -> bool {
+        prompt_len >= self.doc_prompt
+    }
+}
+
+pub fn kvp_convoy(cfg: &KvpConvoyConfig, seed: u64) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0u64;
+    loop {
+        t += rng.exponential(cfg.rate_per_s);
+        if t >= cfg.horizon_s {
+            break;
+        }
+        out.push(RequestSpec {
+            id,
+            prompt_len: cfg.short_prompt,
+            max_new_tokens: cfg.short_new_tokens,
+            arrival_s: t,
+        });
+        id += 1;
+    }
+    // Document ids continue the short sequence (the reference simulator
+    // keys flat per-request state by id, so ids stay dense).
+    for k in 0..cfg.n_docs {
+        out.push(RequestSpec {
+            id: id + k as u64,
+            prompt_len: cfg.doc_prompt,
+            max_new_tokens: cfg.doc_new_tokens,
+            arrival_s: cfg.doc_start_s + k as f64 * cfg.doc_stagger_s,
+        });
+    }
+    out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+    out
+}
+
 /// Poisson arrivals with a context-length distribution — the production
 /// mix of section 3 C3.
 pub fn poisson_mixed(
@@ -246,6 +331,30 @@ mod tests {
         assert!(w.windows(2).all(|p| p[1].arrival_s >= p[0].arrival_s));
         let same_seed = convoy(&cfg, 42);
         assert_eq!(w, same_seed);
+    }
+
+    #[test]
+    fn kvp_convoy_has_overlapping_documents_and_is_deterministic() {
+        let cfg = KvpConvoyConfig::default();
+        let w = kvp_convoy(&cfg, 42);
+        let docs: Vec<&RequestSpec> = w.iter().filter(|r| cfg.is_doc(r.prompt_len)).collect();
+        assert_eq!(docs.len(), cfg.n_docs);
+        // staggered starts, spaced by exactly the configured gap
+        for (k, d) in docs.iter().enumerate() {
+            let expect = cfg.doc_start_s + k as f64 * cfg.doc_stagger_s;
+            assert!((d.arrival_s - expect).abs() < 1e-12);
+        }
+        // dense unique ids, sorted arrivals, bimodal lengths
+        let mut ids: Vec<u64> = w.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..w.len() as u64).collect::<Vec<_>>());
+        assert!(w.windows(2).all(|p| p[1].arrival_s >= p[0].arrival_s));
+        assert!(w
+            .iter()
+            .all(|r| r.prompt_len == cfg.short_prompt || r.prompt_len == cfg.doc_prompt));
+        assert!(w.len() > cfg.n_docs + 100, "degenerate: {} requests", w.len());
+        assert_eq!(w, kvp_convoy(&cfg, 42));
+        assert_ne!(w, kvp_convoy(&cfg, 43));
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Deterministic invariant harness (seeded randomized properties via
+//! `medha::util::proptest`): the structural guarantees the policy-aware
+//! KVP routing tentpole leans on. Slot recycling must never alias a live
+//! request, KVP shard maps must cover every KV token exactly once across
+//! groups, and randomized admit/preempt/resume/finish sequences must
+//! uphold both — under all four scheduling policies and all three routing
+//! modes. Every failure reports a replay seed (`MEDHA_PROPTEST_SEED`).
+
+use std::collections::BTreeMap;
+
+use medha::config::DeploymentConfig;
+use medha::coordinator::{KvpManager, Request, RequestArena, RoutingMode, SchedPolicyKind};
+use medha::sim::{SimOptions, Simulation};
+use medha::util::proptest::check;
+use medha::util::slotvec::SlotVec;
+use medha::workload::RequestSpec;
+
+#[test]
+fn prop_arena_slot_recycling_never_aliases_live_requests() {
+    check("arena recycling never aliases", 300, |rng| {
+        let mut arena = RequestArena::new();
+        let mut live: BTreeMap<u32, u64> = BTreeMap::new(); // slot -> ext id
+        let mut next_id = 0u64;
+        let mut high_water = 0usize;
+        for _ in 0..rng.range_u64(1, 120) {
+            if rng.bool(0.6) || live.is_empty() {
+                let id = next_id;
+                next_id += 1;
+                let slot = arena.insert(Request::new(id, 64, 2, 0.0));
+                // a handed-out slot must not collide with any live one
+                assert!(live.insert(slot, id).is_none(), "slot {slot} aliased");
+            } else {
+                let k = rng.below(live.len() as u64) as usize;
+                let (&slot, &id) = live.iter().nth(k).unwrap();
+                assert_eq!(arena.remove(slot).id, id);
+                live.remove(&slot);
+            }
+            high_water = high_water.max(live.len());
+            // every live slot still resolves to exactly its own request
+            for (&slot, &id) in &live {
+                assert_eq!(arena.get(slot).id, id, "slot {slot} aliased");
+            }
+            assert_eq!(arena.len(), live.len());
+        }
+        // retired slots are recycled: footprint is peak concurrency
+        assert!(
+            arena.capacity() <= high_water.max(1),
+            "arena grew to {} slots for {} peak concurrency",
+            arena.capacity(),
+            high_water
+        );
+    });
+}
+
+#[test]
+fn prop_slotvec_mirrors_a_map_exactly() {
+    check("slotvec mirrors map", 300, |rng| {
+        let mut sv: SlotVec<u64> = SlotVec::new();
+        let mut mirror: BTreeMap<usize, u64> = BTreeMap::new();
+        for step in 0..rng.range_u64(1, 200) {
+            let idx = rng.below(64) as usize;
+            match rng.below(3) {
+                0 => assert_eq!(sv.insert(idx, step), mirror.insert(idx, step)),
+                1 => assert_eq!(sv.remove(idx), mirror.remove(&idx)),
+                _ => assert_eq!(sv.get(idx), mirror.get(&idx)),
+            }
+            assert_eq!(sv.len(), mirror.len());
+        }
+        let got: Vec<(usize, u64)> = sv.iter().map(|(i, &v)| (i, v)).collect();
+        let want: Vec<(usize, u64)> = mirror.iter().map(|(&i, &v)| (i, v)).collect();
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn prop_kvp_shard_maps_cover_every_token_exactly_once() {
+    check("kvp shard coverage", 200, |rng| {
+        let threshold = rng.range_u64(50, 2_000);
+        let n_groups = rng.range_u64(2, 8) as u32;
+        let mut k = KvpManager::new(threshold, n_groups);
+        let n_reqs = rng.range_u64(1, 5);
+        let mut appended = vec![0u64; n_reqs as usize];
+        for s in 0..n_reqs {
+            k.onboard_request(s as u32, 100 + s, rng.below(n_groups as u64) as u32, 0.0);
+        }
+        for _ in 0..rng.range_u64(1, 60) {
+            let s = rng.below(n_reqs) as u32;
+            match rng.below(4) {
+                0 if !k.is_yielded(s) => k.yield_active(s, 1.0),
+                1 => {
+                    k.resume(s, 2.0);
+                }
+                _ => {
+                    let c = rng.range_u64(1, threshold);
+                    k.append_tokens(s, c, 3.0);
+                    appended[s as usize] += c;
+                }
+            }
+            // every request's shards tile [0, total) exactly once, and
+            // per-group occupancy is the sum of local shard lengths
+            let mut group_sum = vec![0u64; n_groups as usize];
+            for s in 0..n_reqs as u32 {
+                let m = k.shard_map(s).unwrap();
+                assert!(m.check_contiguous(), "shards not contiguous");
+                assert_eq!(m.total_tokens(), appended[s as usize]);
+                for &(g, _, n) in &m.shards {
+                    group_sum[g as usize] += n;
+                }
+            }
+            for g in 0..n_groups {
+                assert_eq!(k.occupancy(g), group_sum[g as usize]);
+            }
+        }
+        // no (request, group) pair is ever onboarded twice — yields retain
+        // shards, resumes never re-onboard
+        assert!(k.onboard_log_is_duplicate_free(), "a retained shard was re-onboarded");
+    });
+}
+
+/// Randomized end-to-end lifecycle: small heterogeneous traces (Poisson
+/// shorts + KVP-sharded documents) driven through the full simulator under
+/// every policy, with the routing mode drawn per case. Every request must
+/// finish with token-exact prefill/decode counts, every arena slot must be
+/// recycled, and the onboard log must stay duplicate-free.
+#[test]
+fn prop_random_lifecycle_upholds_invariants_across_policies() {
+    check("sim lifecycle invariants", 8, |rng| {
+        let n_short = rng.range_u64(4, 16);
+        let mut w = Vec::new();
+        let mut t = 0.0;
+        for id in 0..n_short {
+            t += rng.exponential(4.0);
+            w.push(RequestSpec {
+                id,
+                prompt_len: rng.range_u64(64, 2_048),
+                max_new_tokens: rng.range_u64(1, 16),
+                arrival_s: t,
+            });
+        }
+        let n_docs = rng.range_u64(1, 3);
+        for k in 0..n_docs {
+            w.push(RequestSpec {
+                id: n_short + k,
+                prompt_len: rng.range_u64(20_000, 80_000),
+                max_new_tokens: rng.range_u64(1, 8),
+                arrival_s: rng.range_f64(0.0, 3.0),
+            });
+        }
+        let routing = *rng.choose(&[
+            RoutingMode::Blind,
+            RoutingMode::RoundRobin,
+            RoutingMode::Routed,
+        ]);
+        let kvp = rng.range_u64(2, 4) as u32;
+        let onboard = rng.range_u64(8_000, 40_000);
+        for kind in SchedPolicyKind::ALL {
+            let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, kvp);
+            dep.scheduler.policy = kind;
+            dep.scheduler.routing = routing;
+            dep.scheduler.adaptive_chunking = false;
+            dep.scheduler.static_chunk = 2048;
+            dep.scheduler.kvp_onboard_threshold = onboard;
+            let mut sim = Simulation::new(dep, w.clone(), SimOptions::default());
+            sim.run();
+            let label = format!("{}/{}", kind.name(), routing.name());
+            assert_eq!(
+                sim.metrics.finished_requests,
+                w.len() as u64,
+                "{label} left requests behind"
+            );
+            assert_eq!(sim.n_live(), 0, "{label} leaked arena slots");
+            assert_eq!(sim.retired().len(), w.len());
+            for r in sim.retired() {
+                assert!(r.is_finished(), "{label}: request {} unfinished", r.id);
+                assert_eq!(r.prefilled, r.prompt_len, "{label}: prefill drift on {}", r.id);
+                assert_eq!(r.decoded, r.max_new_tokens, "{label}: decode drift on {}", r.id);
+            }
+            assert!(
+                sim.kvp_onboard_log_is_duplicate_free(),
+                "{label} re-onboarded a retained shard"
+            );
+            // active yields only exist for preemptive policies in pooled
+            // modes; FCFS and blind routing must never record one
+            if kind == SchedPolicyKind::Fcfs || routing == RoutingMode::Blind {
+                assert_eq!(
+                    sim.metrics.active_preemptions, 0,
+                    "{label} yielded an active request"
+                );
+            }
+        }
+    });
+}

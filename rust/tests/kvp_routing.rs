@@ -1,0 +1,164 @@
+//! Policy-aware KVP routing + active-long-request preemption, end to end:
+//! routed LARS must keep short-request tails far below blind round-robin
+//! placement on the `kvp_convoy` trace (the section 7 serving-pool
+//! opportunity), documents must never starve, preemption counters must
+//! distinguish queued re-orderings from active chunk-boundary yields, and
+//! a preempted sharded prefill must resume **bit-exactly** — identical
+//! final metrics to an uninterrupted run shifted by the yield window.
+
+use medha::config::DeploymentConfig;
+use medha::coordinator::{RoutingMode, SchedPolicyKind};
+use medha::metrics::PreemptionKind;
+use medha::sim::{kvp_convoy_ttft_split, run_kvp_convoy_scenario, SimOptions, Simulation};
+use medha::workload::{KvpConvoyConfig, RequestSpec};
+
+fn cfg() -> KvpConvoyConfig {
+    KvpConvoyConfig::default()
+}
+
+#[test]
+fn routed_lars_beats_blind_round_robin_on_short_p99_ttft() {
+    let c = cfg();
+    let rr = run_kvp_convoy_scenario(SchedPolicyKind::Lars, RoutingMode::RoundRobin, &c, 42);
+    let routed = run_kvp_convoy_scenario(SchedPolicyKind::Lars, RoutingMode::Routed, &c, 42);
+    // both placements drain the whole trace
+    assert_eq!(rr.metrics.finished_requests, routed.metrics.finished_requests);
+    assert!(rr.metrics.finished_requests > 100);
+    let (mut rr_short, _) = kvp_convoy_ttft_split(&rr, &c);
+    let (mut routed_short, routed_docs) = kvp_convoy_ttft_split(&routed, &c);
+    assert!(!routed_docs.is_empty(), "trace must contain documents");
+    let (rr_p99, routed_p99) = (rr_short.p99(), routed_short.p99());
+    // the headline: blind round-robin keeps landing shorts on the groups
+    // sharding the active document, where they wait out chunk-scale
+    // cooperative iterations; routed placement steers them to the idle
+    // serving pool
+    assert!(
+        rr_p99 >= 5.0 * routed_p99,
+        "routing won only {rr_p99:.3}s vs {routed_p99:.3}s (need >= 5x)"
+    );
+}
+
+#[test]
+fn routed_lars_never_starves_documents() {
+    let c = cfg();
+    let sim = run_kvp_convoy_scenario(SchedPolicyKind::Lars, RoutingMode::Routed, &c, 42);
+    let docs: Vec<&medha::coordinator::Request> = sim
+        .retired()
+        .iter()
+        .filter(|r| c.is_doc(r.prompt_len))
+        .collect();
+    assert_eq!(docs.len(), c.n_docs);
+    for d in docs {
+        // starvation freedom: even while yielding to fresher documents and
+        // ceding groups to short traffic, every document still makes its
+        // own length-aware deadline (LARS headroom already inside it)
+        let ttft = d.ttft().unwrap();
+        assert!(
+            ttft <= d.ttft_budget_s(),
+            "document {} starved: ttft {ttft:.1}s > budget {:.1}s",
+            d.id,
+            d.ttft_budget_s()
+        );
+        assert!(d.is_finished());
+    }
+}
+
+#[test]
+fn preemption_counters_distinguish_queued_reorders_from_active_yields() {
+    let c = cfg();
+    let mut routed = run_kvp_convoy_scenario(SchedPolicyKind::Lars, RoutingMode::Routed, &c, 42);
+    let s = routed.metrics.summary();
+    // overlapping documents force at least one active chunk-boundary yield
+    // (a fresh document's slack undercuts an ahead-of-schedule one)
+    assert!(s.active_preemptions >= 1, "no active yields on overlapping documents");
+    assert_eq!(
+        s.active_preemptions,
+        routed.metrics.preemption_events.len() as u64
+    );
+    assert!(routed
+        .metrics
+        .preemption_events
+        .iter()
+        .all(|e| e.kind == PreemptionKind::ActiveYield));
+    // every yield names a document, never an interactive request
+    assert!(routed
+        .metrics
+        .preemption_events
+        .iter()
+        .all(|e| c.is_doc(routed.request(e.request).unwrap().prompt_len)));
+    // FCFS holds the active request to completion in every routing mode
+    let fcfs = run_kvp_convoy_scenario(SchedPolicyKind::Fcfs, RoutingMode::RoundRobin, &c, 42);
+    assert_eq!(fcfs.metrics.active_preemptions, 0);
+    assert!(fcfs.metrics.preemption_events.is_empty());
+}
+
+/// The KV-integrity contract: preempt the active sharded document
+/// mid-prefill, run the preempting work to completion on other groups,
+/// resume — and the interrupted run's final metrics equal the
+/// uninterrupted run's, shifted by exactly the yield window.
+#[test]
+fn preempted_prefill_resumes_bit_exactly_shifted_by_the_yield_window() {
+    let build = |with_challenger: bool| {
+        let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 4);
+        dep.scheduler.policy = SchedPolicyKind::Srpt;
+        dep.scheduler.routing = RoutingMode::Routed;
+        dep.scheduler.adaptive_chunking = false;
+        dep.scheduler.static_chunk = 2048;
+        dep.scheduler.kvp_onboard_threshold = 64_000;
+        let mut w = vec![RequestSpec {
+            id: 0,
+            prompt_len: 200_000,
+            max_new_tokens: 6,
+            arrival_s: 0.0,
+        }];
+        if with_challenger {
+            // strictly less remaining work under SRPT: preempts doc 0 at
+            // the first chunk boundary past its arrival
+            w.push(RequestSpec {
+                id: 1,
+                prompt_len: 32_000,
+                max_new_tokens: 4,
+                arrival_s: 1.0,
+            });
+        }
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        sim.run();
+        sim
+    };
+    let solo = build(false);
+    let both = build(true);
+    let a_solo = solo.request(0).unwrap();
+    let a = both.request(0).unwrap();
+    let b = both.request(1).unwrap();
+
+    // token-exact resume: nothing lost, nothing recomputed
+    assert_eq!(a.prefilled, 200_000);
+    assert_eq!(a.decoded, 6);
+    assert_eq!(both.metrics.prefill_tokens, 232_000);
+    assert_eq!(both.metrics.active_preemptions, 1);
+    assert_eq!(both.metrics.preemption_events[0].request, 0);
+
+    // identical decode cadence: the preempted document's TBT samples match
+    // the uninterrupted run's one-for-one
+    assert_eq!(a.tbt_samples.len(), a_solo.tbt_samples.len());
+    for (x, y) in a.tbt_samples.iter().zip(&a_solo.tbt_samples) {
+        assert!((x - y).abs() < 1e-9, "tbt drifted: {x} vs {y}");
+    }
+
+    // the TTFT shift is exactly the yield window: chunk-boundary yield to
+    // the instant the preempting document released the cooperative slot
+    let yield_t = both.metrics.preemption_events[0].t;
+    let window = b.finished_s.unwrap() - yield_t;
+    assert!(window > 0.0);
+    let shift = a.ttft().unwrap() - a_solo.ttft().unwrap();
+    assert!(
+        (shift - window).abs() < 1e-6,
+        "ttft shift {shift:.6}s != yield window {window:.6}s"
+    );
+
+    // the retained shards were never re-onboarded across the yield
+    assert!(
+        both.kvp_onboard_log_is_duplicate_free(),
+        "a retained shard was re-onboarded"
+    );
+}

@@ -22,6 +22,9 @@ struct RunOutcome {
     n_iters: u64,
     summary: MetricsSummary,
     onboard_log: Vec<(f64, u64, u32)>,
+    group_busy_s: Vec<f64>,
+    group_prefill_tokens: Vec<u64>,
+    group_decode_tokens: Vec<u64>,
 }
 
 fn run_optimized(dep: DeploymentConfig, w: Vec<RequestSpec>) -> RunOutcome {
@@ -31,6 +34,9 @@ fn run_optimized(dep: DeploymentConfig, w: Vec<RequestSpec>) -> RunOutcome {
         end_s,
         n_iters: sim.metrics.n_iters,
         onboard_log: sim.kvp_onboard_log().to_vec(),
+        group_busy_s: sim.metrics.group_busy_s.clone(),
+        group_prefill_tokens: sim.metrics.group_prefill_tokens.clone(),
+        group_decode_tokens: sim.metrics.group_decode_tokens.clone(),
         summary: sim.metrics.summary(),
     }
 }
@@ -42,6 +48,9 @@ fn run_reference(dep: DeploymentConfig, w: Vec<RequestSpec>) -> RunOutcome {
         end_s,
         n_iters: sim.metrics.n_iters,
         onboard_log: sim.kvp_onboard_log().to_vec(),
+        group_busy_s: sim.metrics.group_busy_s.clone(),
+        group_prefill_tokens: sim.metrics.group_prefill_tokens.clone(),
+        group_decode_tokens: sim.metrics.group_decode_tokens.clone(),
         summary: sim.metrics.summary(),
     }
 }
@@ -84,9 +93,25 @@ fn assert_outcomes_identical(opt: &RunOutcome, reference: &RunOutcome) {
         reference.summary.tbt_attainment,
     );
     assert_f64_identical("goodput_rps", opt.summary.goodput_rps, reference.summary.goodput_rps);
-    // FCFS never preempts: both cores must report zero.
+    // FCFS never preempts: both cores must report zero, and active yields
+    // cannot exist outside the pooled routing modes.
     assert_eq!(opt.summary.preemptions, 0, "optimized FCFS preempted");
     assert_eq!(reference.summary.preemptions, 0, "reference preempted");
+    assert_eq!(opt.summary.active_preemptions, 0, "optimized yielded an active request");
+    assert_eq!(reference.summary.active_preemptions, 0, "reference yielded");
+    // per-group utilization accounting, bit-for-bit
+    assert_eq!(opt.group_busy_s.len(), reference.group_busy_s.len(), "group count");
+    for (g, (a, b)) in opt.group_busy_s.iter().zip(&reference.group_busy_s).enumerate() {
+        assert_f64_identical(&format!("group {g} busy_s"), *a, *b);
+    }
+    assert_eq!(
+        opt.group_prefill_tokens, reference.group_prefill_tokens,
+        "group prefill tokens"
+    );
+    assert_eq!(
+        opt.group_decode_tokens, reference.group_decode_tokens,
+        "group decode tokens"
+    );
 }
 
 /// Workload 1: fixed-seed Poisson mix of short requests across two KVP
@@ -139,4 +164,74 @@ fn golden_long_static_chunking() {
     let opt = run_optimized(dep.clone(), w.clone());
     let reference = run_reference(dep, w);
     assert_outcomes_identical(&opt, &reference);
+}
+
+/// Workload 4: the kvp_convoy trace — overlapping KVP-sharded documents
+/// plus interactive traffic across 4 groups — under FCFS with the default
+/// blind routing. The routed modes change semantics deliberately; this
+/// anchor pins that FCFS-without-routing on the *same trace* stays
+/// bit-identical to the oracle.
+#[test]
+fn golden_kvp_convoy_fcfs_blind() {
+    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 4);
+    dep.scheduler.adaptive_chunking = false;
+    dep.scheduler.static_chunk = 4096;
+    dep.scheduler.kvp_onboard_threshold = 256_000;
+    let cfg = workload::KvpConvoyConfig::default();
+    let w = workload::kvp_convoy(&cfg, 42);
+    let opt = run_optimized(dep.clone(), w.clone());
+    let reference = run_reference(dep, w);
+    assert!(opt.summary.finished > 100);
+    assert_outcomes_identical(&opt, &reference);
+}
+
+/// Exact f64 equality over every summary statistic — NaN == NaN, like the
+/// oracle comparison above.
+fn assert_summaries_bit_identical(a: &MetricsSummary, b: &MetricsSummary) {
+    assert_eq!(a.n_ttft, b.n_ttft);
+    assert_eq!(a.n_tbt, b.n_tbt);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.active_preemptions, b.active_preemptions);
+    for (what, x, y) in [
+        ("ttft_p50", a.ttft_p50, b.ttft_p50),
+        ("ttft_p95", a.ttft_p95, b.ttft_p95),
+        ("tbt_p50", a.tbt_p50, b.tbt_p50),
+        ("tbt_p95", a.tbt_p95, b.tbt_p95),
+        ("tbt_p99", a.tbt_p99, b.tbt_p99),
+        ("tbt_max", a.tbt_max, b.tbt_max),
+        ("decode_tps", a.decode_tps, b.decode_tps),
+        ("mfu_mean", a.mfu_mean, b.mfu_mean),
+        ("mbu_mean", a.mbu_mean, b.mbu_mean),
+        ("ttft_attainment", a.ttft_attainment, b.ttft_attainment),
+        ("tbt_attainment", a.tbt_attainment, b.tbt_attainment),
+        ("goodput_rps", a.goodput_rps, b.goodput_rps),
+    ] {
+        assert_f64_identical(what, x, y);
+    }
+}
+
+/// Determinism regression for the new pooled semantics: same workload seed
+/// + same policy ⇒ bit-identical `MetricsSummary`, onboarding log, and
+/// preemption-event stream across two routed runs, for all four policies.
+#[test]
+fn kvp_routed_runs_are_bit_deterministic() {
+    use medha::coordinator::{RoutingMode, SchedPolicyKind};
+    let cfg = workload::KvpConvoyConfig {
+        horizon_s: 15.0,
+        doc_prompt: 128_000,
+        n_docs: 2,
+        doc_stagger_s: 6.0,
+        ..workload::KvpConvoyConfig::default()
+    };
+    for kind in SchedPolicyKind::ALL {
+        let mut a = medha::sim::run_kvp_convoy_scenario(kind, RoutingMode::Routed, &cfg, 7);
+        let mut b = medha::sim::run_kvp_convoy_scenario(kind, RoutingMode::Routed, &cfg, 7);
+        assert_eq!(a.metrics.n_iters, b.metrics.n_iters, "{}", kind.name());
+        assert_eq!(a.metrics.preemption_events, b.metrics.preemption_events);
+        assert_eq!(a.kvp_onboard_log(), b.kvp_onboard_log());
+        assert_eq!(a.metrics.group_prefill_tokens, b.metrics.group_prefill_tokens);
+        let (sa, sb) = (a.metrics.summary(), b.metrics.summary());
+        assert_summaries_bit_identical(&sa, &sb);
+    }
 }
