@@ -14,7 +14,7 @@ use medha::config::{DeploymentConfig, SloConfig};
 use medha::coordinator::chunking::{AdaptiveChunk, ChunkPolicy};
 use medha::coordinator::request::Request;
 use medha::coordinator::scheduler::Scheduler;
-use medha::coordinator::{RequestArena, StaticChunk};
+use medha::coordinator::{RequestArena, SchedPolicy, StaticChunk};
 use medha::kvcache::{BlockPool, KvManager};
 use medha::perfmodel::{BatchShape, PerfModel};
 use medha::sim::reference::ReferenceSimulation;
@@ -62,7 +62,7 @@ fn main() {
     let mut sched = Scheduler::new(Box::new(StaticChunk(512)), 128);
     for id in 0..128u64 {
         let slot = requests.insert(Request::new(id, 64, 4_000, 0.0));
-        sched.enqueue(slot);
+        sched.enqueue(slot, &requests);
         let plan = sched.next_batch(&requests, &pm, &slo, 0.0);
         sched.complete_iteration(&plan, &mut requests, 0.0);
     }
@@ -72,6 +72,74 @@ fn main() {
         sched.next_batch_into(&requests, &pm, &slo, 0.0, &mut plan);
         std::hint::black_box(plan.decodes.len());
     });
+
+    // --- ready-set selection: indexed vs O(n) scan at deep backlogs -------
+    // A convoy-shaped backlog (90% interactive shorts in a few length
+    // classes + 10% documents, arrivals spread so much of the queue is
+    // deadline-critical) queued on one scheduler; `select` must pick the
+    // same request as the scan — the differential harness asserts that —
+    // so the only question benched here is the cost. Records the
+    // scan-over-index ratio per backlog depth into BENCH_sim.json.
+    let backlogs: &[usize] = if suite.is_smoke() {
+        &[256]
+    } else {
+        &[1_000, 10_000, 100_000]
+    };
+    let mut select_rows: Vec<Json> = Vec::new();
+    for kind in [
+        medha::coordinator::SchedPolicyKind::Lars,
+        medha::coordinator::SchedPolicyKind::Srpt,
+    ] {
+        let policy = kind.build();
+        for &n in backlogs {
+            let mut rng = Rng::new(0x5e1ec7 + n as u64);
+            let mut arena = RequestArena::new();
+            let mut ready = medha::coordinator::ReadySet::new(policy.key_shape());
+            let now = 60.0; // arrivals span [0, 60): a deep, part-overdue queue
+            for id in 0..n as u64 {
+                let (prompt, est) = if id % 10 == 9 {
+                    (500_000u64, 12.0)
+                } else {
+                    (*rng.choose(&[512u64, 1_024, 2_048]), 0.05)
+                };
+                let arrival = rng.range_f64(0.0, 60.0);
+                let budget = est * 5.0;
+                let r = Request::new(id, prompt, 8, arrival).with_slo(est, arrival + budget);
+                let slot = arena.insert(r);
+                ready.push(slot, policy.as_ref(), &arena);
+            }
+            let scan_name = format!("sched/select scan {} n={n}", kind.name());
+            let index_name = format!("sched/select index {} n={n}", kind.name());
+            suite.bench(&scan_name, || {
+                std::hint::black_box(ready.select_via_scan(policy.as_ref(), &arena, now));
+            });
+            suite.bench(&index_name, || {
+                std::hint::black_box(ready.select(policy.as_ref(), &arena, now));
+            });
+            let find = |name: &str| {
+                suite.results.iter().find(|r| r.name == name).map(|r| r.mean_s)
+            };
+            if let (Some(scan), Some(indexed)) = (find(&scan_name), find(&index_name)) {
+                let ratio = if indexed > 0.0 { scan / indexed } else { f64::NAN };
+                println!(
+                    "sched/select {} n={n}: scan {:.3}us vs index {:.3}us ({ratio:.0}x)",
+                    kind.name(),
+                    scan * 1e6,
+                    indexed * 1e6
+                );
+                select_rows.push(Json::obj(vec![
+                    ("policy", Json::str(kind.name())),
+                    ("backlog", (n as u64).into()),
+                    ("scan_mean_s", scan.into()),
+                    ("index_mean_s", indexed.into()),
+                    (
+                        "scan_over_index",
+                        if ratio.is_finite() { Json::num(ratio) } else { Json::Null },
+                    ),
+                ]));
+            }
+        }
+    }
 
     suite.bench("kvcache/append+ship+release cycle", || {
         let mut kv = KvManager::new(BlockPool::new(16, 1 << 16));
@@ -294,6 +362,8 @@ fn main() {
     let extra = vec![
         ("sim_throughput", Json::arr(sim_reports.iter().map(|r| r.to_json()))),
         ("sim_mixed_speedup_vs_reference", speedup),
+        // scan-vs-index ready-set selection scaling (empty when filtered out)
+        ("sched_select", Json::arr(select_rows)),
         (
             "sched_policy_compare",
             Json::obj(vec![

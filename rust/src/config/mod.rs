@@ -92,6 +92,13 @@ pub struct SchedulerConfig {
     /// KVP dynamic-growth threshold: max KV tokens per KVP worker group
     /// before onboarding the next one (section 4.4).
     pub kvp_onboard_threshold: u64,
+    /// Per-group KV-token capacity (long-request shards + short-request
+    /// reservations). Under routed placement the policy's routing hook
+    /// refuses groups without room and admission defers until capacity
+    /// frees, counted in `Metrics::routing_refusals`. `u64::MAX` (the
+    /// default) disables capacity accounting — the pre-capacity behavior
+    /// every oracle-parity test runs under.
+    pub kvp_capacity_tokens: u64,
     /// Preemptive scheduling policy ordering each replica's ready set
     /// (section 5): fcfs | srpt | edf | lars. FCFS preserves the original
     /// strict-FIFO behavior (and oracle parity with the reference
@@ -113,6 +120,7 @@ impl Default for SchedulerConfig {
             static_chunk: 2048,
             max_batch_size: 128,
             kvp_onboard_threshold: 512 * 1024,
+            kvp_capacity_tokens: u64::MAX,
             policy: SchedPolicyKind::Fcfs,
             routing: RoutingMode::Blind,
         }
@@ -145,6 +153,10 @@ impl SchedulerConfig {
                 .get("kvp_onboard_threshold")
                 .and_then(|x| x.as_u64())
                 .unwrap_or(d.kvp_onboard_threshold),
+            kvp_capacity_tokens: j
+                .get("kvp_capacity_tokens")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.kvp_capacity_tokens),
             policy: match j.get("policy").and_then(|x| x.as_str()) {
                 Some(s) => SchedPolicyKind::parse(s).ok_or_else(|| {
                     anyhow::anyhow!("unknown scheduler policy '{s}' (expected fcfs|srpt|edf|lars)")
@@ -234,6 +246,9 @@ impl DeploymentConfig {
     /// Validate the layout against the model and hardware (e.g. TP cannot
     /// exceed KV heads or the NVLink domain).
     pub fn validate(&self) -> anyhow::Result<()> {
+        if self.scheduler.kvp_capacity_tokens == 0 {
+            anyhow::bail!("kvp_capacity_tokens must be positive (use u64::MAX for unlimited)");
+        }
         self.parallel
             .validate(&self.model, &self.hardware)
             .map_err(|e| anyhow::anyhow!("{e}"))
@@ -292,6 +307,21 @@ mod tests {
         assert_eq!(s.routing, RoutingMode::Blind);
         let bad = Json::parse(r#"{"policy": "wfq"}"#).unwrap();
         assert!(SchedulerConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn scheduler_kvp_capacity_from_json() {
+        // default: capacity accounting off
+        assert_eq!(SchedulerConfig::default().kvp_capacity_tokens, u64::MAX);
+        let j = Json::parse(r#"{"kvp_capacity_tokens": 262144}"#).unwrap();
+        assert_eq!(
+            SchedulerConfig::from_json(&j).unwrap().kvp_capacity_tokens,
+            262_144
+        );
+        // a zero capacity is a config error, not a downstream assert panic
+        let mut dep = DeploymentConfig::llama3_8b_tp8();
+        dep.scheduler.kvp_capacity_tokens = 0;
+        assert!(dep.validate().is_err());
     }
 
     #[test]

@@ -10,6 +10,15 @@
 //! Long requests are keyed by their arena [`Slot`]; the external
 //! `RequestId` is kept alongside only for the onboarding log (the Fig. 19
 //! timeline reports client-visible ids).
+//!
+//! The manager is also the per-group **KV-capacity ledger** routing
+//! consults: resident long-request shard tokens (`occupancy`, maintained
+//! incrementally) plus short-request reservations (`reserve`/`unreserve`,
+//! prompt + output tokens held from admission to retirement) against a
+//! per-group `capacity`. [`KvpManager::kv_free`] is the O(1) read behind
+//! `GroupView::kv_free`, letting `SchedPolicy::route` refuse placements
+//! that would not fit. The default capacity is unlimited — the
+//! pre-capacity behavior, and what every oracle-parity test runs under.
 
 use super::arena::Slot;
 use crate::kvcache::{GroupId, RequestId, ShardMap};
@@ -30,6 +39,15 @@ pub struct KvpManager {
     pub onboard_threshold: u64,
     /// Total KVP groups available.
     pub n_groups: u32,
+    /// Per-group KV-token capacity (long shards + short reservations);
+    /// `u64::MAX` disables capacity accounting (the default).
+    pub capacity: u64,
+    /// Resident long-request KV tokens per group — the incremental mirror
+    /// of summing `local_tokens` over every shard map.
+    occ: Vec<u64>,
+    /// Short-request KV reservations per group (prompt + output tokens,
+    /// held from admission to retirement).
+    reserved: Vec<u64>,
     /// Shard maps per long request, slot-indexed.
     maps: SlotVec<LongEntry>,
     /// Onboarding events (time, request, group) — the Fig. 19 timeline.
@@ -43,11 +61,21 @@ pub struct KvpManager {
 }
 
 impl KvpManager {
+    /// Unlimited per-group capacity (the pre-capacity behavior).
     pub fn new(onboard_threshold: u64, n_groups: u32) -> KvpManager {
-        assert!(onboard_threshold > 0 && n_groups > 0);
+        KvpManager::with_capacity(onboard_threshold, n_groups, u64::MAX)
+    }
+
+    /// Capacity-accounted manager: each group holds at most `capacity` KV
+    /// tokens of long-request shards plus short-request reservations.
+    pub fn with_capacity(onboard_threshold: u64, n_groups: u32, capacity: u64) -> KvpManager {
+        assert!(onboard_threshold > 0 && n_groups > 0 && capacity > 0);
         KvpManager {
             onboard_threshold,
             n_groups,
+            capacity,
+            occ: vec![0; n_groups as usize],
+            reserved: vec![0; n_groups as usize],
             maps: SlotVec::new(),
             onboard_log: Vec::new(),
             yield_log: Vec::new(),
@@ -96,9 +124,31 @@ impl KvpManager {
             }
             let take = tokens.min(room);
             e.map.shards.last_mut().unwrap().2 += take;
+            self.occ[g as usize] += take;
             tokens -= take;
         }
         added
+    }
+
+    /// Reserve `tokens` of short-request KV on group `g` (admission).
+    pub fn reserve(&mut self, g: GroupId, tokens: u64) {
+        self.reserved[g as usize] += tokens;
+    }
+
+    /// Release a short-request reservation on group `g` (retirement).
+    pub fn unreserve(&mut self, g: GroupId, tokens: u64) {
+        let r = &mut self.reserved[g as usize];
+        debug_assert!(*r >= tokens, "unreserve of tokens never reserved");
+        *r = r.saturating_sub(tokens);
+    }
+
+    /// Free KV-token capacity on group `g`: capacity minus resident long
+    /// shards minus short reservations. O(1) — the routing hook reads this
+    /// for every group on every routed admission.
+    pub fn kv_free(&self, g: GroupId) -> u64 {
+        let occ = self.occ.get(g as usize).copied().unwrap_or(0);
+        let reserved = self.reserved.get(g as usize).copied().unwrap_or(0);
+        self.capacity.saturating_sub(occ.saturating_add(reserved))
     }
 
     pub fn shard_map(&self, s: Slot) -> Option<&ShardMap> {
@@ -179,12 +229,11 @@ impl KvpManager {
 
     /// Total resident long-request KV tokens on group `g`, across every
     /// onboarded request — active or yielded. The router's occupancy view
-    /// and the per-group utilization figure read this.
+    /// and the per-group utilization figure read this. O(1): maintained
+    /// incrementally as shards grow and requests release (the sum over
+    /// shard maps it mirrors is asserted by the invariant harness).
     pub fn occupancy(&self, g: GroupId) -> u64 {
-        self.maps
-            .iter()
-            .map(|(_, e)| e.map.local_tokens(g))
-            .sum()
+        self.occ.get(g as usize).copied().unwrap_or(0)
     }
 
     /// Invariant the test harness leans on: no (request, group) pair ever
@@ -200,7 +249,11 @@ impl KvpManager {
     }
 
     pub fn release(&mut self, s: Slot) {
-        self.maps.remove(s as usize);
+        if let Some(e) = self.maps.remove(s as usize) {
+            for &(g, _, n) in &e.map.shards {
+                self.occ[g as usize] -= n;
+            }
+        }
     }
 }
 
@@ -335,6 +388,36 @@ mod tests {
         k.release(1);
         assert_eq!(k.occupancy(1), 80);
         assert!(!k.holds(1, 1));
+    }
+
+    #[test]
+    fn capacity_ledger_tracks_shards_and_reservations() {
+        let mut k = KvpManager::with_capacity(100, 2, 1_000);
+        assert_eq!(k.kv_free(0), 1_000);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.append_tokens(1, 150, 0.0); // g0: 100, g1: 50
+        assert_eq!(k.kv_free(0), 900);
+        assert_eq!(k.kv_free(1), 950);
+        // short reservations stack on top of long-shard occupancy
+        k.reserve(0, 300);
+        assert_eq!(k.kv_free(0), 600);
+        k.unreserve(0, 300);
+        k.release(1);
+        assert_eq!(k.kv_free(0), 1_000);
+        assert_eq!(k.kv_free(1), 1_000);
+        assert_eq!(k.occupancy(0), 0);
+        // out-of-range groups read as empty, never panic
+        assert_eq!(k.kv_free(9), 1_000);
+        assert_eq!(k.occupancy(9), 0);
+    }
+
+    #[test]
+    fn unlimited_capacity_never_runs_out() {
+        let mut k = KvpManager::new(100, 2);
+        k.reserve(0, u64::MAX / 2);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.append_tokens(1, 1_000, 0.0);
+        assert!(k.kv_free(0) > u64::MAX / 4, "free={}", k.kv_free(0));
     }
 
     #[test]

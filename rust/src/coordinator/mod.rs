@@ -27,8 +27,11 @@
 //! (starvation freedom).
 //!
 //! **Adding a policy**: implement [`SchedPolicy`] (a `priority` key and,
-//! optionally, `preemptive = false` to pin the head like FCFS), add a
-//! variant to [`SchedPolicyKind`] (`parse`/`name`/`build`) so it is
+//! optionally, `preemptive = false` to pin the head like FCFS), declare
+//! its [`KeyShape`] so the indexed [`ReadySet`] can serve selection
+//! without a per-iteration scan (`Static` with a `static_key` when the
+//! key ignores `now`; `Slack` with `slack_parts` for LARS-shaped ratios),
+//! add a variant to [`SchedPolicyKind`] (`parse`/`name`/`build`) so it is
 //! selectable from config JSON (`scheduler.policy`) and the
 //! `simulate --policy` CLI flag, and it composes automatically with every
 //! chunk policy and the simulator. Deadline/work state lives on
@@ -52,6 +55,7 @@ pub mod arena;
 pub mod chunking;
 pub mod kvp;
 pub mod policy;
+pub mod readyset;
 pub mod request;
 pub mod router;
 pub mod scheduler;
@@ -61,7 +65,8 @@ pub mod topology;
 pub use arena::{RequestArena, Slot};
 pub use chunking::{AdaptiveChunk, ChunkPolicy, DeadlineChunk, StaticChunk};
 pub use kvp::KvpManager;
-pub use policy::{Edf, Fcfs, GroupView, Lars, SchedPolicy, SchedPolicyKind, Srpt};
+pub use policy::{Edf, Fcfs, GroupView, KeyShape, Lars, SchedPolicy, SchedPolicyKind, Srpt};
+pub use readyset::ReadySet;
 pub use request::{Phase, Request};
 pub use router::{Router, RoutingMode};
 pub use scheduler::{BatchPlan, Scheduler};

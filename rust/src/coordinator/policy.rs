@@ -24,6 +24,32 @@
 //! [`SloConfig::ttft_deadline_for`](crate::config::SloConfig) and the
 //! simulator's perf-model prefill estimate) and carried on the
 //! [`Request`]; policies are pure functions of that state plus `now`.
+//!
+//! # Indexed selection (the heap-backed ready set)
+//!
+//! At million-request backlogs a per-iteration O(n) scan of the ready set
+//! dominates the simulator, so selection is served by an indexed
+//! [`ReadySet`](super::readyset::ReadySet) instead. Each policy declares
+//! its [`KeyShape`] — how its priority key varies with time — and the
+//! ready set picks the matching index:
+//!
+//! * `Fifo` (FCFS): no index; selection is the queue head.
+//! * `Static` (SRPT, EDF): `priority(r, now)` is independent of `now` and
+//!   changes only when the request's own state changes (a chunk of *its*
+//!   prefill completes). One ordered index on [`SchedPolicy::static_key`],
+//!   re-keyed only for the request that progressed: O(log n) exact.
+//! * `Slack` (LARS): the slack `(C − now − W)/W` is time-varying, but its
+//!   time-invariant parts `(C, W)` ([`SchedPolicy::slack_parts`]) bound it:
+//!   for any two requests the slack order can drift only while their
+//!   remaining works differ, and the drift is one-directional (smaller `W`
+//!   only gains urgency). The ready set keeps requests ordered by the
+//!   critical time `C` and prunes the selection walk with `W`-range bounds
+//!   — see `readyset.rs` for the invariant and the proof sketch.
+//!
+//! Selection through any index is **bit-identical** to the O(n) scan under
+//! the canonical rule — argmin of `(priority(r, now), enqueue_seq)` with
+//! `f64::total_cmp` — asserted by a `debug_assert` on every selection and
+//! a randomized differential harness (`tests/invariants.rs`).
 
 use std::collections::VecDeque;
 
@@ -34,7 +60,8 @@ use crate::kvcache::GroupId;
 /// Per-group occupancy snapshot handed to a policy's routing hook when a
 /// request is admitted under `RoutingMode::Routed` (see
 /// `coordinator::router`): everything placement needs to know about one
-/// KVP group, gathered in O(groups + queued) per admission.
+/// KVP group, gathered in O(groups) per admission — every field is an O(1)
+/// read of incrementally maintained state (no backlog rescans).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GroupView {
     pub group: GroupId,
@@ -49,59 +76,158 @@ pub struct GroupView {
     /// request — it iterates in lockstep with the cooperative prefill, so
     /// a short request placed here waits out chunk-scale iterations.
     pub active_long: bool,
-    /// Queued requests on this group more urgent (smaller priority key at
-    /// admission time) than the request being routed.
+    /// Queued requests on this group already past their policy
+    /// [`critical time`](SchedPolicy::critical_time) — the incrementally
+    /// maintained urgency counter. A fresh arrival is never past its own
+    /// critical time at admission, so under the deadline-relative policies
+    /// (EDF, LARS) every counted request is provably more urgent than the
+    /// request being routed; the counter is a conservative stand-in for
+    /// the per-admission backlog rescan it replaced (which was O(total
+    /// queued) per admission; this is an O(1) read).
     pub more_urgent_queued: usize,
+    /// Free KV-token capacity on the group (`u64::MAX` when capacity
+    /// accounting is off) — placements needing more than this are refused.
+    pub kv_free: u64,
+}
+
+/// KV tokens request `r` will occupy at completion (prompt + every output
+/// token): the footprint capacity-aware placement must find room for.
+pub fn kv_need(r: &Request) -> u64 {
+    r.prompt_len + r.max_new_tokens
 }
 
 /// Blind least-loaded placement (ties to the lowest group id) — the
-/// pre-routing behavior and the non-preemptive default.
-pub fn route_least_loaded(groups: &[GroupView]) -> GroupId {
+/// pre-routing behavior and the non-preemptive default — over the groups
+/// with at least `need` free KV tokens. `None` when no group fits.
+pub fn route_least_loaded(groups: &[GroupView], need: u64) -> Option<GroupId> {
     groups
         .iter()
+        .filter(|v| v.kv_free >= need)
         .min_by_key(|v| (v.load, v.group))
-        .expect("no groups to route to")
-        .group
+        .map(|v| v.group)
 }
 
-/// Policy-aware placement: avoid the groups cooperating on the active
-/// sharded long request (they only complete work at chunk boundaries),
-/// then minimize the urgency rank ahead of the incoming request, then
-/// load. A fully occupied fleet degrades to least-loaded.
-pub fn route_policy_aware(groups: &[GroupView]) -> GroupId {
+/// Policy-aware placement: among the groups with room, avoid the groups
+/// cooperating on the active sharded long request (they only complete work
+/// at chunk boundaries), then minimize the deadline-critical work already
+/// queued, then load. A fully occupied fleet degrades to least-loaded;
+/// `None` when no group has `need` free KV tokens.
+pub fn route_policy_aware(groups: &[GroupView], need: u64) -> Option<GroupId> {
     groups
         .iter()
+        .filter(|v| v.kv_free >= need)
         .min_by_key(|v| (v.active_long, v.more_urgent_queued, v.load, v.group))
-        .expect("no groups to route to")
-        .group
+        .map(|v| v.group)
+}
+
+/// How a policy's priority key varies with time — selects the ready-set
+/// index that serves `select` without a linear scan (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyShape {
+    /// Non-preemptive: selection is the FIFO head; no index.
+    Fifo,
+    /// `priority(r, now)` ignores `now`; it changes only when the
+    /// request's own state changes. Indexed by [`SchedPolicy::static_key`].
+    Static,
+    /// Slack form `(C − now − W)/W` over the time-invariant
+    /// [`SchedPolicy::slack_parts`] `(C, W)`.
+    Slack,
+}
+
+/// Floor on the remaining-work denominator. At or below it the request is
+/// effectively one chunk from its first token.
+pub const MIN_WORK_S: f64 = 1e-9;
+
+/// Slack assigned to a request whose remaining estimated work has shrunk
+/// to (numerically) nothing: finishing it costs one chunk, so it outranks
+/// everything with real work left. Finite — never ±inf/NaN — so it can't
+/// poison an ordered index, and far below any slack reachable with a real
+/// denominator (`|C − now|/MIN_WORK_S` stays well above −1e300 for any
+/// sane simulated horizon).
+pub const DONE_SLACK: f64 = -1e300;
+
+/// Whether the slack form bottoms out at [`DONE_SLACK`]: finite critical
+/// time, no measurable work left. The single definition shared by
+/// [`slack_priority`] and the ready set's sentinel classification.
+pub fn slack_is_done(critical: f64, rem_work: f64) -> bool {
+    critical.is_finite() && rem_work <= MIN_WORK_S
+}
+
+/// The canonical slack priority over time-invariant parts `(critical,
+/// rem_work)` at time `now` — the one definition both [`Lars::priority`]
+/// and the ready set's pruning bounds are built on. Non-finite critical
+/// times (no deadline assigned) are infinitely lax.
+pub fn slack_priority(critical: f64, rem_work: f64, now: f64) -> f64 {
+    if !critical.is_finite() {
+        return f64::INFINITY;
+    }
+    if slack_is_done(critical, rem_work) {
+        return DONE_SLACK;
+    }
+    (critical - now - rem_work) / rem_work
 }
 
 /// Priority ordering + preemption decision over a scheduler's ready set.
 pub trait SchedPolicy: Send + Sync {
     /// Urgency key for a queued (possibly partially-prefilled) request at
     /// time `now`. The scheduler runs the request with the **minimum**
-    /// key; ties break toward the earlier queue position.
+    /// key; ties break toward the earlier enqueue order.
     fn priority(&self, r: &Request, now: f64) -> f64;
 
     /// Whether the scheduler may switch away from a partially-prefilled
     /// request at a chunk boundary (its KV is retained and it resumes from
     /// the same boundary). Non-preemptive policies run the head to
-    /// completion and skip the priority scan entirely.
+    /// completion and skip priority selection entirely.
     fn preemptive(&self) -> bool {
         true
     }
 
-    /// Placement hook (section 7): which KVP group should serve `r`?
-    /// Routing decisions are made jointly with the scheduling policy —
-    /// preemptive policies place by urgency ranking and keep short traffic
-    /// off the groups sharding the active long prefill; non-preemptive
-    /// policies keep the blind least-loaded placement, so FCFS routing is
-    /// indistinguishable from the pre-routing router.
-    fn route(&self, _r: &Request, groups: &[GroupView], _now: f64) -> GroupId {
+    /// How `priority` varies with time (drives the ready-set index).
+    fn key_shape(&self) -> KeyShape {
         if self.preemptive() {
-            route_policy_aware(groups)
+            KeyShape::Static
         } else {
-            route_least_loaded(groups)
+            KeyShape::Fifo
+        }
+    }
+
+    /// `KeyShape::Static` contract: `static_key(r) == priority(r, now)`
+    /// for every `now`. The ready set stores this key and re-derives it
+    /// only when the request's own state changes.
+    fn static_key(&self, r: &Request) -> f64 {
+        self.priority(r, 0.0)
+    }
+
+    /// `KeyShape::Slack` contract: `priority(r, now) ==
+    /// slack_priority(c, w, now)` for `(c, w) = slack_parts(r)`. `c` must
+    /// be time-invariant for the life of the request; `w` may change only
+    /// when the request's own prefill progresses.
+    fn slack_parts(&self, r: &Request) -> (f64, f64) {
+        (r.deadline_s, r.remaining_work_s())
+    }
+
+    /// The instant this request becomes overdue under the policy's notion
+    /// of urgency — drives the incrementally maintained per-group
+    /// `more_urgent_queued` counters (a queued request is counted once
+    /// `now` passes its critical time). Must be time-invariant.
+    fn critical_time(&self, r: &Request) -> f64 {
+        r.deadline_s
+    }
+
+    /// Placement hook (section 7): which KVP group should serve `r`, given
+    /// that it needs `need` free KV tokens? Routing decisions are made
+    /// jointly with the scheduling policy — preemptive policies place by
+    /// urgency ranking and keep short traffic off the groups sharding the
+    /// active long prefill; non-preemptive policies keep the blind
+    /// least-loaded placement. Returns `None` — a **capacity refusal** —
+    /// when no group has `need` free KV tokens; the caller defers the
+    /// admission until capacity frees (or waives the check for requests
+    /// larger than a whole group's capacity).
+    fn route(&self, _r: &Request, groups: &[GroupView], need: u64, _now: f64) -> Option<GroupId> {
+        if self.preemptive() {
+            route_policy_aware(groups, need)
+        } else {
+            route_least_loaded(groups, need)
         }
     }
 
@@ -170,6 +296,12 @@ impl SchedPolicy for Edf {
 /// slack race milliseconds before its deadline and the chunk already in
 /// flight pushes it just past; with it the preemption fires early enough
 /// that the deadline is met, not grazed.
+///
+/// A request whose estimated remaining work has shrunk below
+/// [`MIN_WORK_S`] gets the finite [`DONE_SLACK`] sentinel instead of the
+/// ratio: the raw division would swing to ±huge values (least-urgent while
+/// fresh, starving a request that is one chunk from done), and an actual
+/// 0/0 would put NaN into the ready-set order.
 #[derive(Debug, Clone, Copy)]
 pub struct Lars {
     pub headroom_frac: f64,
@@ -181,18 +313,25 @@ impl Default for Lars {
     }
 }
 
-/// Floor on the remaining-work denominator: keeps the slack ratio finite
-/// for requests whose estimated work is (or rounds to) zero.
-const MIN_WORK_S: f64 = 1e-9;
-
 impl SchedPolicy for Lars {
     fn priority(&self, r: &Request, now: f64) -> f64 {
-        if !r.deadline_s.is_finite() {
-            return f64::INFINITY;
-        }
-        let rem = r.remaining_work_s().max(MIN_WORK_S);
-        let effective_deadline = r.deadline_s - self.headroom_frac * r.ttft_budget_s();
-        (effective_deadline - now - rem) / rem
+        let (c, w) = self.slack_parts(r);
+        slack_priority(c, w, now)
+    }
+
+    fn key_shape(&self) -> KeyShape {
+        KeyShape::Slack
+    }
+
+    fn slack_parts(&self, r: &Request) -> (f64, f64) {
+        (
+            r.deadline_s - self.headroom_frac * r.ttft_budget_s(),
+            r.remaining_work_s(),
+        )
+    }
+
+    fn critical_time(&self, r: &Request) -> f64 {
+        self.slack_parts(r).0
     }
 
     fn name(&self) -> &'static str {
@@ -203,8 +342,10 @@ impl SchedPolicy for Lars {
 /// Index of the most urgent (minimum-priority) request in `queue` at time
 /// `now`, ties breaking toward the earlier index. Returns 0 — the FCFS
 /// head — for empty or singleton queues and for non-preemptive policies,
-/// which skip the scan entirely. The single selection rule shared by the
-/// per-group ready sets and the simulator's long-request queue.
+/// which skip the scan entirely. This is the selection rule for the
+/// simulator's dedicated **long-request queue**, whose depth is the number
+/// of concurrent documents (small by construction); the per-group ready
+/// sets use the indexed [`ReadySet`](super::readyset::ReadySet) instead.
 pub fn select_most_urgent(
     policy: &dyn SchedPolicy,
     requests: &RequestArena,
@@ -320,6 +461,7 @@ mod tests {
     fn fcfs_is_arrival_order_and_non_preemptive() {
         let p = Fcfs;
         assert!(!p.preemptive());
+        assert_eq!(p.key_shape(), KeyShape::Fifo);
         let a = req(100, 1.0, 0.1, 2.0);
         let b = req(100, 2.0, 0.1, 2.0);
         assert!(p.priority(&a, 5.0) < p.priority(&b, 5.0));
@@ -331,6 +473,44 @@ mod tests {
         let short = req(100, 0.0, 0.1, 2.0);
         let long = req(1_000_000, 0.0, 60.0, 300.0);
         assert!(p.priority(&short, 0.0) < p.priority(&long, 0.0));
+    }
+
+    #[test]
+    fn static_key_contract_holds_for_static_policies() {
+        // KeyShape::Static promises priority is now-independent and equal
+        // to static_key — the property the ordered index leans on.
+        let r = req(4_096, 3.0, 1.5, 9.0);
+        for p in [&Srpt as &dyn SchedPolicy, &Edf] {
+            assert_eq!(p.key_shape(), KeyShape::Static);
+            for now in [0.0, 2.5, 1e6] {
+                assert_eq!(p.priority(&r, now), p.static_key(&r));
+            }
+        }
+    }
+
+    #[test]
+    fn slack_parts_contract_holds_for_lars() {
+        let p = Lars::default();
+        assert_eq!(p.key_shape(), KeyShape::Slack);
+        for r in [
+            req(100, 0.0, 0.1, 0.5),
+            req(1_000_000, 3.0, 60.0, 300.0),
+            Request::new(1, 10, 1, 0.0), // no SLO
+        ] {
+            let (c, w) = p.slack_parts(&r);
+            for now in [0.0, 1.0, 500.0] {
+                let direct = p.priority(&r, now);
+                let via_parts = slack_priority(c, w, now);
+                assert!(
+                    direct.to_bits() == via_parts.to_bits()
+                        || (direct.is_nan() && via_parts.is_nan()),
+                    "{direct} != {via_parts}"
+                );
+            }
+            let ct = p.critical_time(&r);
+            // NaN-tolerant: an unassigned deadline makes both NaN
+            assert!(ct.to_bits() == c.to_bits() || (ct.is_nan() && c.is_nan()));
+        }
     }
 
     #[test]
@@ -392,45 +572,106 @@ mod tests {
         assert!(p.priority(&r, 100.0).is_infinite());
     }
 
-    fn view(group: u32, load: u64, active_long: bool, more_urgent: usize) -> GroupView {
+    #[test]
+    fn lars_nearly_complete_request_gets_finite_maximal_urgency() {
+        let p = Lars::default();
+        // 1e6-token prompt, one token left: remaining work rounds below the
+        // MIN_WORK_S floor while the deadline is still comfortably ahead
+        let mut r = req(1_000_000, 0.0, 1e-4, 100.0);
+        r.complete_chunk(999_999, 1.0);
+        assert!(r.remaining_work_s() <= MIN_WORK_S);
+        let slack = p.priority(&r, 1.0);
+        assert_eq!(slack, DONE_SLACK);
+        assert!(slack.is_finite(), "sentinel must stay arithmetic-safe");
+        // maximal urgency: beats a deeply overdue short request
+        let overdue = req(100, 0.0, 0.1, 0.2);
+        assert!(slack < p.priority(&overdue, 1_000.0));
+        // and the raw-ratio path is untouched for real denominators
+        let fresh = req(100, 1.0, 0.1, 0.5);
+        assert!(p.priority(&fresh, 1.0) > -1.0);
+    }
+
+    #[test]
+    fn slack_priority_is_never_nan_for_finite_inputs() {
+        for (c, w) in [(5.0, 0.0), (5.0, 1e-12), (0.0, 0.0), (-3.0, 1e-10)] {
+            let s = slack_priority(c, w, 2.0);
+            assert!(s.is_finite(), "slack({c}, {w}) = {s}");
+            assert_eq!(s, DONE_SLACK);
+        }
+        assert!(slack_priority(f64::INFINITY, 0.0, 2.0).is_infinite());
+    }
+
+    fn view(group: u32, load: u64, active_long: bool, urgent: usize) -> GroupView {
         GroupView {
             group,
             load,
-            queue_len: more_urgent,
+            queue_len: urgent,
             n_decoding: 0,
             active_long,
-            more_urgent_queued: more_urgent,
+            more_urgent_queued: urgent,
+            kv_free: u64::MAX,
         }
     }
 
     #[test]
     fn routing_hook_policy_aware_avoids_active_long_groups() {
         let r = req(100, 0.0, 0.1, 0.5);
+        let need = kv_need(&r);
         // group 0 is least loaded but shards the active long request
         let views = vec![view(0, 10, true, 0), view(1, 500, false, 0), view(2, 800, false, 0)];
         // preemptive policies route around the busy group
-        assert_eq!(Lars::default().route(&r, &views, 0.0), 1);
-        assert_eq!(Srpt.route(&r, &views, 0.0), 1);
+        assert_eq!(Lars::default().route(&r, &views, need, 0.0), Some(1));
+        assert_eq!(Srpt.route(&r, &views, need, 0.0), Some(1));
         // FCFS keeps the blind least-loaded placement
-        assert_eq!(Fcfs.route(&r, &views, 0.0), 0);
+        assert_eq!(Fcfs.route(&r, &views, need, 0.0), Some(0));
     }
 
     #[test]
     fn routing_hook_ranks_by_urgency_ahead_then_load() {
         let r = req(100, 0.0, 0.1, 0.5);
-        // neither group is long-busy; group 1 has less urgent work ahead
+        let need = kv_need(&r);
+        // neither group is long-busy; group 1 has less critical work ahead
         let views = vec![view(0, 10, false, 3), view(1, 900, false, 0)];
-        assert_eq!(Lars::default().route(&r, &views, 0.0), 1);
+        assert_eq!(Lars::default().route(&r, &views, need, 0.0), Some(1));
         // equal urgency ahead: lighter load wins, ties to the low id
         let views = vec![view(0, 50, false, 1), view(1, 50, false, 1), view(2, 90, false, 1)];
-        assert_eq!(Lars::default().route(&r, &views, 0.0), 0);
+        assert_eq!(Lars::default().route(&r, &views, need, 0.0), Some(0));
     }
 
     #[test]
     fn routing_hook_degrades_to_least_loaded_when_fleet_is_occupied() {
         let r = req(100, 0.0, 0.1, 0.5);
         let views = vec![view(0, 700, true, 0), view(1, 300, true, 0)];
-        assert_eq!(Lars::default().route(&r, &views, 0.0), 1);
+        assert_eq!(Lars::default().route(&r, &views, kv_need(&r), 0.0), Some(1));
+    }
+
+    #[test]
+    fn routing_refuses_groups_without_kv_capacity() {
+        let r = req(100, 0.0, 0.1, 0.5);
+        let need = kv_need(&r);
+        assert_eq!(need, 104); // prompt 100 + 4 output tokens
+        let mut views = vec![view(0, 10, false, 0), view(1, 900, false, 0)];
+        // the otherwise-best group is out of capacity: placement moves on
+        views[0].kv_free = need - 1;
+        views[1].kv_free = need;
+        assert_eq!(Lars::default().route(&r, &views, need, 0.0), Some(1));
+        assert_eq!(Fcfs.route(&r, &views, need, 0.0), Some(1));
+        // no group fits: the placement is refused outright
+        views[1].kv_free = 0;
+        assert_eq!(Lars::default().route(&r, &views, need, 0.0), None);
+        assert_eq!(Fcfs.route(&r, &views, need, 0.0), None);
+        assert_eq!(route_policy_aware(&views, need), None);
+        assert_eq!(route_least_loaded(&views, need), None);
+    }
+
+    #[test]
+    fn critical_time_is_the_effective_deadline() {
+        let r = req(100, 2.0, 0.1, 1.0); // deadline 3.0, budget 1.0
+        assert_eq!(Edf.critical_time(&r), 3.0);
+        assert_eq!(Srpt.critical_time(&r), 3.0);
+        let lars = Lars::default();
+        // LARS schedules against the headroom-advanced deadline
+        assert!((lars.critical_time(&r) - (3.0 - 0.2)).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,658 @@
+//! Indexed ready set: O(log n) priority selection over a scheduler's
+//! queued prefills, bit-identical to the O(n) scan it replaces.
+//!
+//! # The selection rule
+//!
+//! Selection is defined as the argmin of `(priority(r, now), seq)` where
+//! `seq` is the monotone enqueue order and `f64`s compare by `total_cmp`.
+//! Every index below is a different way of serving that same rule; a
+//! `debug_assert` in `Scheduler::next_batch_into` and the randomized
+//! differential harness in `tests/invariants.rs` hold the indexes to it
+//! against [`ReadySet::select_via_scan`], the naive scan.
+//!
+//! # Indexes by [`KeyShape`]
+//!
+//! * **`Fifo`** (FCFS) — a plain `VecDeque`; selection is the head.
+//! * **`Static`** (SRPT, EDF) — `priority` is independent of `now` and
+//!   changes only when the request's own prefill progresses, so a single
+//!   ordered set on `(static_key, seq)` is exact: `select` is `first()`,
+//!   and only the request that completed a chunk is re-keyed.
+//! * **`Slack`** (LARS) — `priority = (C − now − W)/W` over the
+//!   time-invariant critical time `C` and the remaining work `W`. No
+//!   single static order serves every `now` (two requests with different
+//!   `W` swap order exactly once as `now` passes their crossing; equal-`W`
+//!   pairs never swap), so the set is kept ordered by `C` and selection
+//!   walks that order with a **pruning bound**: once every not-yet-visited
+//!   entry provably has a larger priority than the best found, the walk
+//!   stops.
+//!
+//! # The slack pruning invariant
+//!
+//! All entries keep `W ∈ [W_min, W_max]` (tracked by an ordered index on
+//! `W`). Walking entries in ascending `C`, every unvisited entry has
+//! `C ≥ C_cur`, hence — in real arithmetic —
+//!
+//! ```text
+//! priority ≥ bound(C_cur) = (C_cur − now) / denom − 1,
+//!            denom = W_max if C_cur ≥ now else W_min
+//! ```
+//!
+//! and `bound` is non-decreasing in `C`, so the walk may stop at the
+//! first entry whose bound (minus a floating-point guard margin that
+//! dwarfs the few-ulp evaluation error; see `PRUNE_MARGIN`) strictly
+//! exceeds the best priority found. Requests whose remaining work has
+//! collapsed to the [`DONE_SLACK`](super::policy::DONE_SLACK) sentinel
+//! sit in a dedicated min-`seq` set and win outright — their constant
+//! priority is below anything the ratio can reach — so the bound never
+//! has to reason about them. The walk is worst-case O(n) but terminates
+//! after a handful of entries on real backlogs (deep queues share `W`
+//! classes, and the most-overdue small-`W` entries come first in `C`
+//! order); the `sched/select` bench records the measured win.
+//!
+//! Urgency counters ride on the same `C` order: entries migrate one-way
+//! from a fresh set to an urgent set as `now` passes their critical time
+//! (amortized O(log n) per request, O(1) to read), giving the router's
+//! `GroupView::more_urgent_queued` without rescanning backlogs.
+
+use std::collections::{BTreeSet, VecDeque};
+
+use super::arena::{RequestArena, Slot};
+use super::policy::{slack_is_done, KeyShape, SchedPolicy};
+use crate::util::slotvec::SlotVec;
+
+/// Map an `f64` to a `u64` whose unsigned order equals `f64::total_cmp`
+/// order (sign-magnitude → biased two's-complement trick).
+#[inline]
+pub fn key_bits(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b & (1u64 << 63) != 0 {
+        !b
+    } else {
+        b | (1u64 << 63)
+    }
+}
+
+/// Inverse of [`key_bits`].
+#[inline]
+pub fn bits_key(b: u64) -> f64 {
+    let raw = if b & (1u64 << 63) != 0 {
+        b & !(1u64 << 63)
+    } else {
+        !b
+    };
+    f64::from_bits(raw)
+}
+
+/// Relative guard subtracted from the pruning bound before it is allowed
+/// to stop the slack walk: orders of magnitude above the few-ulp error of
+/// evaluating the slack ratio, orders of magnitude below any urgency
+/// difference the simulator can act on. Erring low only lengthens the
+/// walk; it can never change the selected request.
+const PRUNE_MARGIN: f64 = 1e-9;
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    /// Enqueue order — the tie-break. Preserved across re-keys.
+    seq: u64,
+    /// `Static`: ordered bits of the policy's static key.
+    key_bits: u64,
+    /// Ordered bits of the policy's critical time (urgency split + the
+    /// slack walk order).
+    c_bits: u64,
+    /// `Slack`, non-sentinel: ordered bits of the remaining work.
+    r_bits: u64,
+    /// Which side of the urgency split the entry is filed under.
+    urgent: bool,
+    /// `Slack`: remaining work at/below the `MIN_WORK_S` floor — priority
+    /// is the constant `DONE_SLACK` sentinel.
+    sentinel: bool,
+}
+
+/// See the module docs. One instance per scheduler (per KVP group).
+#[derive(Debug, Default)]
+pub struct ReadySet {
+    shape: Option<KeyShape>,
+    /// `Fifo` only: enqueue order, head is the selection.
+    fifo: VecDeque<Slot>,
+    /// `Static` only: `(static_key bits, seq, slot)`.
+    by_key: BTreeSet<(u64, u64, Slot)>,
+    /// Critical time split: `fresh` holds entries whose critical time is
+    /// still ahead of the drained high-water `now`; `urgent` the rest.
+    /// Every urgent `c_bits` ≤ every fresh `c_bits`, so chaining the two
+    /// iterators walks the whole set in ascending critical time.
+    urgent: BTreeSet<(u64, u64, Slot)>,
+    fresh: BTreeSet<(u64, u64, Slot)>,
+    /// `Slack`, non-sentinel entries: `(remaining-work bits, seq, slot)` —
+    /// supplies the `[W_min, W_max]` pruning range.
+    by_r: BTreeSet<(u64, u64, Slot)>,
+    /// `Slack`, sentinel entries: `(seq, slot)` — all tied at
+    /// `DONE_SLACK`, so the min-`seq` entry wins outright.
+    done: BTreeSet<(u64, Slot)>,
+    live: SlotVec<Entry>,
+    next_seq: u64,
+    /// High-water `key_bits(now)` the urgency split has been drained to.
+    boundary: u64,
+}
+
+impl ReadySet {
+    pub fn new(shape: KeyShape) -> ReadySet {
+        ReadySet {
+            shape: Some(shape),
+            boundary: key_bits(f64::NEG_INFINITY),
+            ..ReadySet::default()
+        }
+    }
+
+    fn shape(&self) -> KeyShape {
+        self.shape.expect("ReadySet::new not used")
+    }
+
+    pub fn len(&self) -> usize {
+        match self.shape() {
+            KeyShape::Fifo => self.fifo.len(),
+            _ => self.live.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Queued slots. FIFO order under `Fifo`; slot order otherwise (the
+    /// set is an index, not a queue — callers needing priority order use
+    /// [`Self::select`]).
+    pub fn iter(&self) -> impl Iterator<Item = Slot> + '_ {
+        self.fifo
+            .iter()
+            .copied()
+            .chain(self.live.iter().map(|(i, _)| i as Slot))
+    }
+
+    /// Enqueue `s`, keying it from its current request state.
+    pub fn push(&mut self, s: Slot, policy: &dyn SchedPolicy, requests: &RequestArena) {
+        if self.shape() == KeyShape::Fifo {
+            self.fifo.push_back(s);
+            return;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let e = self.make_entry(s, seq, policy, requests);
+        let prev = self.live.insert(s as usize, e);
+        debug_assert!(prev.is_none(), "slot {s} enqueued twice");
+        self.insert_into_sets(s, e);
+    }
+
+    fn make_entry(
+        &self,
+        s: Slot,
+        seq: u64,
+        policy: &dyn SchedPolicy,
+        requests: &RequestArena,
+    ) -> Entry {
+        let r = requests.get(s);
+        let c_bits = key_bits(policy.critical_time(r));
+        match self.shape() {
+            KeyShape::Fifo => unreachable!("fifo entries are not keyed"),
+            KeyShape::Static => Entry {
+                seq,
+                key_bits: key_bits(policy.static_key(r)),
+                c_bits,
+                r_bits: 0,
+                urgent: c_bits <= self.boundary,
+                sentinel: false,
+            },
+            KeyShape::Slack => {
+                let (c, w) = policy.slack_parts(r);
+                debug_assert_eq!(key_bits(c), c_bits, "critical_time != slack critical");
+                Entry {
+                    seq,
+                    key_bits: 0,
+                    c_bits,
+                    r_bits: key_bits(w),
+                    urgent: c_bits <= self.boundary,
+                    sentinel: slack_is_done(c, w),
+                }
+            }
+        }
+    }
+
+    fn insert_into_sets(&mut self, s: Slot, e: Entry) {
+        let c_entry = (e.c_bits, e.seq, s);
+        if e.urgent {
+            self.urgent.insert(c_entry);
+        } else {
+            self.fresh.insert(c_entry);
+        }
+        match self.shape() {
+            KeyShape::Fifo => unreachable!(),
+            KeyShape::Static => {
+                self.by_key.insert((e.key_bits, e.seq, s));
+            }
+            KeyShape::Slack => {
+                if e.sentinel {
+                    self.done.insert((e.seq, s));
+                } else {
+                    self.by_r.insert((e.r_bits, e.seq, s));
+                }
+            }
+        }
+    }
+
+    fn remove_from_sets(&mut self, s: Slot, e: Entry) {
+        let c_entry = (e.c_bits, e.seq, s);
+        let hit = if e.urgent {
+            self.urgent.remove(&c_entry)
+        } else {
+            self.fresh.remove(&c_entry)
+        };
+        debug_assert!(hit, "slot {s} missing from its urgency set");
+        match self.shape() {
+            KeyShape::Fifo => unreachable!(),
+            KeyShape::Static => {
+                self.by_key.remove(&(e.key_bits, e.seq, s));
+            }
+            KeyShape::Slack => {
+                if e.sentinel {
+                    self.done.remove(&(e.seq, s));
+                } else {
+                    self.by_r.remove(&(e.r_bits, e.seq, s));
+                }
+            }
+        }
+    }
+
+    /// Drop `s` from the set (it finished its prefill or was retired).
+    pub fn remove(&mut self, s: Slot) {
+        if self.shape() == KeyShape::Fifo {
+            // The departing request is the head in every legal schedule;
+            // the positional fallback keeps arbitrary removal correct.
+            match self.fifo.front() {
+                Some(&head) if head == s => {
+                    self.fifo.pop_front();
+                }
+                _ => {
+                    if let Some(pos) = self.fifo.iter().position(|&x| x == s) {
+                        self.fifo.remove(pos);
+                    }
+                }
+            }
+            return;
+        }
+        if let Some(e) = self.live.remove(s as usize) {
+            self.remove_from_sets(s, e);
+        }
+    }
+
+    /// Refresh `s`'s keys after its own state changed (a chunk of its
+    /// prefill completed). Its enqueue order — the tie-break — survives.
+    pub fn rekey(&mut self, s: Slot, policy: &dyn SchedPolicy, requests: &RequestArena) {
+        if self.shape() == KeyShape::Fifo {
+            return;
+        }
+        let old = *self.live.get(s as usize).expect("rekey of unqueued slot");
+        let mut new = self.make_entry(s, old.seq, policy, requests);
+        // Critical time is invariant; the urgency filing must survive the
+        // re-key rather than being re-derived from the drain boundary.
+        debug_assert_eq!(new.c_bits, old.c_bits, "critical time drifted on rekey");
+        new.urgent = old.urgent;
+        if new.key_bits == old.key_bits
+            && new.r_bits == old.r_bits
+            && new.sentinel == old.sentinel
+        {
+            return;
+        }
+        self.remove_from_sets(s, old);
+        self.live.insert(s as usize, new);
+        self.insert_into_sets(s, new);
+    }
+
+    /// Migrate entries whose critical time `now` has passed into the
+    /// urgent set. One-way and monotone in the high-water `now`: each
+    /// entry crosses at most once (amortized O(log n) per request).
+    fn drain_urgent(&mut self, now: f64) {
+        let nb = key_bits(now);
+        if nb > self.boundary {
+            self.boundary = nb;
+        }
+        while let Some(&entry) = self.fresh.first() {
+            if entry.0 > self.boundary {
+                break;
+            }
+            self.fresh.remove(&entry);
+            self.urgent.insert(entry);
+            if let Some(e) = self.live.get_mut(entry.2 as usize) {
+                e.urgent = true;
+            }
+        }
+    }
+
+    /// Queued requests whose critical time has passed — the O(1)-read
+    /// urgency counter behind `GroupView::more_urgent_queued`.
+    pub fn n_urgent(&mut self, now: f64) -> usize {
+        if self.shape() == KeyShape::Fifo {
+            return 0;
+        }
+        self.drain_urgent(now);
+        self.urgent.len()
+    }
+
+    /// The selected request under the canonical rule — argmin of
+    /// `(priority(r, now), seq)` — served by the shape's index (see the
+    /// module docs). Bit-identical to [`Self::select_via_scan`].
+    pub fn select(
+        &self,
+        policy: &dyn SchedPolicy,
+        requests: &RequestArena,
+        now: f64,
+    ) -> Option<Slot> {
+        match self.shape() {
+            KeyShape::Fifo => self.fifo.front().copied(),
+            KeyShape::Static => self.by_key.first().map(|&(_, _, s)| s),
+            KeyShape::Slack => {
+                if let Some(&(_, s)) = self.done.first() {
+                    // Sentinel priorities are a constant below anything the
+                    // ratio form can produce: the earliest-enqueued wins.
+                    return Some(s);
+                }
+                self.select_slack(policy, requests, now)
+            }
+        }
+    }
+
+    /// The pruned ascending-critical-time walk (module docs). `done` is
+    /// empty here, so every entry is in `by_r` and the bound applies.
+    fn select_slack(
+        &self,
+        policy: &dyn SchedPolicy,
+        requests: &RequestArena,
+        now: f64,
+    ) -> Option<Slot> {
+        let (w_min, w_max) = match (self.by_r.first(), self.by_r.last()) {
+            (Some(&(lo, _, _)), Some(&(hi, _, _))) => (bits_key(lo), bits_key(hi)),
+            _ => return None, // no entries at all
+        };
+        let mut best: Option<(f64, u64, Slot)> = None;
+        for &(c_bits, seq, slot) in self.urgent.iter().chain(self.fresh.iter()) {
+            if let Some((best_p, _, _)) = best {
+                let diff = bits_key(c_bits) - now;
+                let denom = if diff >= 0.0 { w_max } else { w_min };
+                let bound = diff / denom - 1.0;
+                let cutoff = if bound.is_finite() {
+                    bound - PRUNE_MARGIN * (bound.abs() + 1.0)
+                } else {
+                    bound
+                };
+                if cutoff > best_p {
+                    break;
+                }
+            }
+            let p = policy.priority(requests.get(slot), now);
+            let better = match &best {
+                None => true,
+                Some((best_p, best_seq, _)) => match p.total_cmp(best_p) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Equal => seq < *best_seq,
+                    std::cmp::Ordering::Greater => false,
+                },
+            };
+            if better {
+                best = Some((p, seq, slot));
+            }
+        }
+        best.map(|(_, _, s)| s)
+    }
+
+    /// The naive O(n) realization of the selection rule — the oracle the
+    /// indexes are differentially tested against (and the baseline the
+    /// `sched/select` bench measures the indexes' win over). Under `Fifo`
+    /// selection is the head by definition (FCFS never scans).
+    pub fn select_via_scan(
+        &self,
+        policy: &dyn SchedPolicy,
+        requests: &RequestArena,
+        now: f64,
+    ) -> Option<Slot> {
+        if self.shape() == KeyShape::Fifo {
+            return self.fifo.front().copied();
+        }
+        let mut best: Option<(f64, u64, Slot)> = None;
+        for (i, e) in self.live.iter() {
+            let slot = i as Slot;
+            let p = policy.priority(requests.get(slot), now);
+            let better = match &best {
+                None => true,
+                Some((best_p, best_seq, _)) => match p.total_cmp(best_p) {
+                    std::cmp::Ordering::Less => true,
+                    std::cmp::Ordering::Equal => e.seq < *best_seq,
+                    std::cmp::Ordering::Greater => false,
+                },
+            };
+            if better {
+                best = Some((p, e.seq, slot));
+            }
+        }
+        best.map(|(_, _, s)| s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{Edf, Fcfs, Lars, Srpt};
+    use crate::coordinator::request::Request;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn key_bits_realizes_total_cmp_order() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -1.5,
+            -1e-300,
+            -0.0,
+            0.0,
+            1e-300,
+            1.5,
+            1e300,
+            f64::INFINITY,
+            f64::NAN,
+        ];
+        for &a in &xs {
+            assert_eq!(
+                bits_key(key_bits(a)).to_bits(),
+                a.to_bits(),
+                "roundtrip of {a}"
+            );
+            for &b in &xs {
+                assert_eq!(
+                    key_bits(a).cmp(&key_bits(b)),
+                    a.total_cmp(&b),
+                    "order of {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    fn req(id: u64, prompt: u64, arrival: f64, est: f64, budget: f64) -> Request {
+        Request::new(id, prompt, 4, arrival).with_slo(est, arrival + budget)
+    }
+
+    #[test]
+    fn fifo_shape_is_a_plain_queue() {
+        let mut arena = RequestArena::new();
+        let mut rs = ReadySet::new(KeyShape::Fifo);
+        let a = arena.insert(req(1, 100, 5.0, 0.1, 1.0));
+        let b = arena.insert(req(2, 100, 0.0, 0.1, 1.0)); // earlier arrival
+        rs.push(a, &Fcfs, &arena);
+        rs.push(b, &Fcfs, &arena);
+        // enqueue order wins regardless of keys; no urgency tracking
+        assert_eq!(rs.select(&Fcfs, &arena, 10.0), Some(a));
+        assert_eq!(rs.n_urgent(10.0), 0);
+        assert_eq!(rs.len(), 2);
+        rs.remove(a);
+        assert_eq!(rs.select(&Fcfs, &arena, 10.0), Some(b));
+        rs.remove(b);
+        assert!(rs.is_empty());
+    }
+
+    #[test]
+    fn static_index_selects_min_key_with_seq_ties() {
+        let mut arena = RequestArena::new();
+        let mut rs = ReadySet::new(KeyShape::Static);
+        let big = arena.insert(req(1, 1_000_000, 0.0, 60.0, 300.0));
+        let small_late = arena.insert(req(2, 100, 0.0, 0.1, 1.0));
+        let small_tie = arena.insert(req(3, 100, 0.0, 0.1, 1.0)); // same key, later seq
+        for s in [big, small_late, small_tie] {
+            rs.push(s, &Srpt, &arena);
+        }
+        assert_eq!(rs.select(&Srpt, &arena, 0.0), Some(small_late));
+        assert_eq!(
+            rs.select(&Srpt, &arena, 0.0),
+            rs.select_via_scan(&Srpt, &arena, 0.0)
+        );
+        // progress the winner's prefill past the loser: selection follows
+        arena.get_mut(small_late).complete_chunk(50, 0.1);
+        rs.rekey(small_late, &Srpt, &arena);
+        assert_eq!(rs.select(&Srpt, &arena, 0.5), Some(small_late));
+        assert_eq!(
+            rs.select(&Srpt, &arena, 0.5),
+            rs.select_via_scan(&Srpt, &arena, 0.5)
+        );
+    }
+
+    #[test]
+    fn slack_walk_matches_scan_on_mixed_backlog() {
+        let lars = Lars::default();
+        let mut arena = RequestArena::new();
+        let mut rs = ReadySet::new(KeyShape::Slack);
+        // deeply overdue document, mildly overdue short, fresh short
+        let doc = arena.insert(req(1, 1_000_000, 0.0, 60.0, 300.0));
+        let overdue_short = arena.insert(req(2, 100, 10.0, 0.1, 0.5));
+        let fresh_short = arena.insert(req(3, 100, 11.9, 0.1, 0.5));
+        for s in [doc, overdue_short, fresh_short] {
+            rs.push(s, &lars, &arena);
+        }
+        for now in [0.0, 5.0, 12.0, 200.0, 400.0] {
+            assert_eq!(
+                rs.select(&lars, &arena, now),
+                rs.select_via_scan(&lars, &arena, now),
+                "now={now}"
+            );
+        }
+        assert_eq!(rs.select(&lars, &arena, 12.0), Some(overdue_short));
+    }
+
+    #[test]
+    fn slack_sentinels_win_by_enqueue_order() {
+        let lars = Lars::default();
+        let mut arena = RequestArena::new();
+        let mut rs = ReadySet::new(KeyShape::Slack);
+        let urgent = arena.insert(req(1, 100, 0.0, 0.1, 0.2));
+        rs.push(urgent, &lars, &arena);
+        // two requests whose remaining work collapses below the floor
+        let mut done_reqs = Vec::new();
+        for id in [2, 3] {
+            let s = arena.insert(req(id, 1_000_000, 0.0, 1e-4, 100.0));
+            rs.push(s, &lars, &arena);
+            arena.get_mut(s).complete_chunk(999_999, 0.5);
+            rs.rekey(s, &lars, &arena);
+            done_reqs.push(s);
+        }
+        // earliest-enqueued sentinel beats even a deeply overdue request
+        assert_eq!(rs.select(&lars, &arena, 1_000.0), Some(done_reqs[0]));
+        assert_eq!(
+            rs.select(&lars, &arena, 1_000.0),
+            rs.select_via_scan(&lars, &arena, 1_000.0)
+        );
+        rs.remove(done_reqs[0]);
+        assert_eq!(rs.select(&lars, &arena, 1_000.0), Some(done_reqs[1]));
+        rs.remove(done_reqs[1]);
+        assert_eq!(rs.select(&lars, &arena, 1_000.0), Some(urgent));
+    }
+
+    #[test]
+    fn urgency_counter_migrates_one_way_with_now() {
+        let mut arena = RequestArena::new();
+        let mut rs = ReadySet::new(KeyShape::Static);
+        // deadlines at 1.0, 2.0, 3.0
+        let slots: Vec<Slot> = (0..3)
+            .map(|i| {
+                let s = arena.insert(req(i, 100, 0.0, 0.1, 1.0 + i as f64));
+                rs.push(s, &Edf, &arena);
+                s
+            })
+            .collect();
+        assert_eq!(rs.n_urgent(0.5), 0);
+        assert_eq!(rs.n_urgent(1.0), 1); // critical time inclusive
+        assert_eq!(rs.n_urgent(2.5), 2);
+        // removal keeps the split consistent
+        rs.remove(slots[0]);
+        assert_eq!(rs.n_urgent(2.5), 1);
+        // a request pushed already-overdue files straight into urgent
+        let late = arena.insert(req(9, 100, 0.0, 0.1, 2.0));
+        rs.push(late, &Edf, &arena);
+        assert_eq!(rs.n_urgent(2.5), 2);
+        assert_eq!(rs.n_urgent(10.0), 3);
+    }
+
+    /// Randomized per-structure differential: every mutation pattern the
+    /// scheduler can produce (push, chunk-progress re-key, remove), with
+    /// selection checked against the scan at every step. The heavyweight
+    /// cross-policy lifecycle version lives in `tests/invariants.rs`.
+    #[test]
+    fn prop_index_matches_scan_under_churn() {
+        check("readyset index ≡ scan", 120, |rng| {
+            let policies: [(KeyShape, Box<dyn SchedPolicy>); 3] = [
+                (KeyShape::Static, Box::new(Srpt)),
+                (KeyShape::Static, Box::new(Edf)),
+                (KeyShape::Slack, Box::new(Lars::default())),
+            ];
+            let (shape, policy) = &policies[rng.below(3) as usize];
+            let policy = policy.as_ref();
+            let mut arena = RequestArena::new();
+            let mut rs = ReadySet::new(*shape);
+            let mut live: Vec<Slot> = Vec::new();
+            let mut now = 0.0;
+            for id in 0..rng.range_u64(2, 60) {
+                now += rng.range_f64(0.0, 2.0);
+                match rng.below(10) {
+                    0..=5 => {
+                        let prompt = rng.range_u64(1, 200_000);
+                        let est = rng.range_f64(1e-7, 50.0);
+                        let budget = rng.range_f64(0.01, 20.0);
+                        let s = arena.insert(req(id, prompt, now, est, budget));
+                        rs.push(s, policy, &arena);
+                        live.push(s);
+                    }
+                    6..=7 if !live.is_empty() => {
+                        // progress a random request's prefill one chunk,
+                        // keeping it queued (mirror of a preempted prefill)
+                        let s = live[rng.below(live.len() as u64) as usize];
+                        let rem = arena.get(s).remaining_prefill();
+                        if rem > 1 {
+                            let c = rng.range_u64(1, rem - 1);
+                            arena.get_mut(s).complete_chunk(c, now);
+                            rs.rekey(s, policy, &arena);
+                        }
+                    }
+                    _ if !live.is_empty() => {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let s = live.swap_remove(i);
+                        rs.remove(s);
+                        arena.remove(s);
+                    }
+                    _ => {}
+                }
+                assert_eq!(
+                    rs.select(policy, &arena, now),
+                    rs.select_via_scan(policy, &arena, now),
+                    "{} diverged at now={now}",
+                    policy.name()
+                );
+                assert_eq!(rs.len(), live.len());
+                let urgent = rs.n_urgent(now);
+                assert!(urgent <= live.len());
+            }
+        });
+    }
+}

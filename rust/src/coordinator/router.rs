@@ -19,7 +19,13 @@
 //!   policy's [`route`](super::policy::SchedPolicy::route) hook over
 //!   per-group [`GroupView`](super::policy::GroupView) occupancy snapshots:
 //!   urgency ranking drives *where* a request runs, not just its queue
-//!   order, and groups holding the active sharded long request are avoided.
+//!   order, groups holding the active sharded long request are avoided,
+//!   and — with a finite `scheduler.kvp_capacity_tokens` — groups without
+//!   room for the request's KV footprint are refused outright (the
+//!   simulator defers such admissions until capacity frees). Every signal
+//!   in a `GroupView` is an O(1) read of incrementally maintained state:
+//!   the schedulers' deadline-critical urgency counters and the KVP
+//!   manager's capacity ledger, never a backlog rescan.
 //!
 //! The non-blind modes also switch the simulator to *pool scheduling*:
 //! groups not holding the active long request's KV shards iterate

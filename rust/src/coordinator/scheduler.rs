@@ -8,12 +8,32 @@
 //! (Fig. 14b).
 //!
 //! **Which** prefill runs is decided by a pluggable [`SchedPolicy`]
-//! (section 5): each iteration the ready set is scanned for the
-//! minimum-priority request, and preemptive policies (SRPT, EDF, LARS) may
-//! switch away from a partially-prefilled request at the chunk boundary —
-//! its KV stays resident and it resumes from the same boundary later. The
-//! default FCFS policy is non-preemptive and preserves the original strict
-//! queue-order behavior (and its hot path: no scan).
+//! (section 5): each iteration the most urgent ready request is selected,
+//! and preemptive policies (SRPT, EDF, LARS) may switch away from a
+//! partially-prefilled request at the chunk boundary — its KV stays
+//! resident and it resumes from the same boundary later. The default FCFS
+//! policy is non-preemptive and preserves the original strict queue-order
+//! behavior (and its hot path: no selection at all).
+//!
+//! # The indexed ready set
+//!
+//! Selection is served by a [`ReadySet`] keyed per the policy's
+//! [`KeyShape`](super::policy::KeyShape) — an ordered index for the
+//! static-key policies (SRPT/EDF), the pruned critical-time walk for
+//! LARS's time-varying slack, a plain FIFO for FCFS — replacing the O(n)
+//! priority scan per iteration that collapsed at million-request
+//! backlogs. The invariants the scheduler upholds for the index:
+//!
+//! * a request enters the set once, at [`Scheduler::enqueue`], and leaves
+//!   exactly when its prefill completes (or its owner retires it);
+//! * the only request whose keys can change between iterations is the one
+//!   whose chunk just executed — [`Scheduler::complete_iteration_into`]
+//!   re-keys it at that boundary (`remaining_work_s` is a pure function of
+//!   prefill progress; deadlines are immutable after admission);
+//! * selection must equal the canonical `(priority, enqueue-order)` argmin
+//!   — re-asserted against the O(n) scan by a `debug_assert` on **every
+//!   preemptive selection** in debug builds, and by the randomized
+//!   differential harness in `tests/invariants.rs`.
 //!
 //! The scheduler is built for a hot loop that runs millions of times per
 //! simulated trace: requests are referenced by arena [`Slot`]s, batch plans
@@ -22,11 +42,10 @@
 //! is maintained *incrementally* — updated when a request enters or leaves
 //! decode — instead of being rebuilt (and reallocated) every iteration.
 
-use std::collections::VecDeque;
-
 use super::arena::{RequestArena, Slot};
 use super::chunking::ChunkPolicy;
 use super::policy::{Fcfs, SchedPolicy};
+use super::readyset::ReadySet;
 use super::request::{Phase, Request};
 use crate::config::SloConfig;
 use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
@@ -59,19 +78,17 @@ pub struct Scheduler {
     /// Ready-set ordering + preemption policy (section 5). FCFS by default.
     pub sched: Box<dyn SchedPolicy>,
     pub max_batch: usize,
-    /// Requests awaiting/undergoing prefill. Strict FIFO under FCFS; under
-    /// a preemptive policy the minimum-priority request is moved to the
-    /// front each iteration (order of the rest is immaterial — selection
-    /// re-scans every iteration).
-    prefill_queue: VecDeque<Slot>,
+    /// Requests awaiting/undergoing prefill, indexed for O(log n)
+    /// selection by the policy's key shape (see the module docs).
+    ready: ReadySet,
     /// Requests in decode phase, in the order they entered decode.
     decoding: Vec<Slot>,
     /// Local KV length per decoding request, parallel to `decoding`.
     /// Maintained incrementally so batch formation never walks the arena.
     decode_ctxs: Vec<u64>,
     /// The prefill scheduled last iteration, while it is still mid-prefill
-    /// (cleared when it leaves the queue). Switching away from it counts
-    /// as a preemption.
+    /// (cleared when it leaves the ready set). Switching away from it
+    /// counts as a preemption.
     running_prefill: Option<Slot>,
     /// Chunk-boundary switches away from a partially-prefilled request.
     pub preemptions: u64,
@@ -89,11 +106,12 @@ impl Scheduler {
         sched: Box<dyn SchedPolicy>,
         max_batch: usize,
     ) -> Scheduler {
+        let ready = ReadySet::new(sched.key_shape());
         Scheduler {
             policy,
             sched,
             max_batch,
-            prefill_queue: VecDeque::new(),
+            ready,
             decoding: Vec::new(),
             decode_ctxs: Vec::new(),
             running_prefill: None,
@@ -101,21 +119,30 @@ impl Scheduler {
         }
     }
 
-    pub fn enqueue(&mut self, s: Slot) {
-        self.prefill_queue.push_back(s);
+    /// Admit `s` to the ready set, keying it from its current request
+    /// state (deadline/work estimates must already be assigned).
+    pub fn enqueue(&mut self, s: Slot, requests: &RequestArena) {
+        self.ready.push(s, self.sched.as_ref(), requests);
     }
 
     pub fn queue_len(&self) -> usize {
-        self.prefill_queue.len()
+        self.ready.len()
     }
 
-    /// Slots in this group's ready set, queue order. The router's
-    /// policy-aware placement scans this to count how much more-urgent
-    /// work an incoming request would sit behind on each group; the active
-    /// long request's preemption path lives in the simulator, which owns
-    /// the dedicated long-request queue.
+    /// Slots in this group's ready set (FIFO order under FCFS, slot order
+    /// otherwise — the set is an index, not a queue). Diagnostics only;
+    /// the router reads the O(1) urgency counter ([`Self::n_urgent`])
+    /// instead of scanning this.
     pub fn queued_slots(&self) -> impl Iterator<Item = Slot> + '_ {
-        self.prefill_queue.iter().copied()
+        self.ready.iter()
+    }
+
+    /// Queued requests already past their policy critical time — the
+    /// incrementally maintained urgency counter behind the router's
+    /// `GroupView::more_urgent_queued` (O(1) read; amortized O(log n)
+    /// maintenance as `now` advances).
+    pub fn n_urgent(&mut self, now: f64) -> usize {
+        self.ready.n_urgent(now)
     }
 
     pub fn n_decoding(&self) -> usize {
@@ -123,7 +150,7 @@ impl Scheduler {
     }
 
     pub fn has_work(&self) -> bool {
-        !self.prefill_queue.is_empty() || !self.decoding.is_empty()
+        !self.ready.is_empty() || !self.decoding.is_empty()
     }
 
     /// Local KV lengths of *all* decoding requests on this replica, in
@@ -136,14 +163,14 @@ impl Scheduler {
     /// Form the next mixed batch into `out` (allocation-free once `out`'s
     /// decode list has warmed up).
     ///
-    /// The prefill slot goes to the minimum-priority request in the ready
-    /// set at time `now` (ties break toward the earlier queue position).
-    /// Under a preemptive policy that request may differ from the one that
-    /// ran last iteration even if the latter is mid-prefill — that is a
-    /// chunk-boundary preemption: the preempted request keeps its place in
-    /// the queue and its computed KV, and resumes from the same boundary
-    /// when it wins again. Non-preemptive policies (FCFS) skip the scan
-    /// and run the head to completion.
+    /// The prefill slot goes to the most urgent request in the ready set
+    /// at time `now` (minimum policy priority, ties toward the earlier
+    /// enqueue). Under a preemptive policy that request may differ from
+    /// the one that ran last iteration even if the latter is mid-prefill —
+    /// that is a chunk-boundary preemption: the preempted request keeps
+    /// its ready-set position and its computed KV, and resumes from the
+    /// same boundary when it wins again. Non-preemptive policies (FCFS)
+    /// run the head to completion with no selection work at all.
     ///
     /// The chunk policy sees the incrementally-tracked decode contexts,
     /// whose values are defined by the `local_kv` closure passed to
@@ -163,23 +190,19 @@ impl Scheduler {
         out.decodes.extend_from_slice(&self.decoding[..k]);
         let decode_ctxs = &self.decode_ctxs[..k];
 
-        // Priority-driven selection over the ready set: move the most
-        // urgent request to the front. The scan is O(ready set) per
-        // iteration — fine at interactive backlog depths, and skipped
-        // entirely under FCFS; a priority-heap ready set for huge backlogs
-        // is a ROADMAP follow-up (only LARS keys are time-varying).
-        let best = super::policy::select_most_urgent(
-            self.sched.as_ref(),
-            requests,
-            &self.prefill_queue,
-            now,
+        // Indexed priority selection (O(log n); see the module docs). The
+        // debug assertion is the standing differential proof that the
+        // index serves the same request the O(n) scan would.
+        let best = self.ready.select(self.sched.as_ref(), requests, now);
+        debug_assert_eq!(
+            best,
+            self.ready.select_via_scan(self.sched.as_ref(), requests, now),
+            "{}: indexed selection diverged from the scan at now={now}",
+            self.sched.name()
         );
-        if best != 0 {
-            self.prefill_queue.swap(0, best);
-        }
 
         // Piggyback one chunk of the selected prefill.
-        out.prefill = self.prefill_queue.front().and_then(|&s| {
+        out.prefill = best.and_then(|s| {
             let r = requests.get(s);
             let remaining = r.remaining_prefill();
             if remaining == 0 {
@@ -274,21 +297,26 @@ impl Scheduler {
             if matches!(self.running_prefill, Some(prev) if prev != s) {
                 self.preemptions += 1;
             }
-            let r = requests.get_mut(s);
-            r.complete_chunk(c, t);
-            match r.phase {
+            requests.get_mut(s).complete_chunk(c, t);
+            match requests.get(s).phase {
                 Phase::Decoding => {
-                    self.prefill_queue.pop_front();
+                    self.ready.remove(s);
                     self.decoding.push(s);
                     self.decode_ctxs.push(local_kv(requests.get(s)).max(1));
                     self.running_prefill = None;
                 }
                 Phase::Finished => {
-                    self.prefill_queue.pop_front();
+                    self.ready.remove(s);
                     finished.push(s);
                     self.running_prefill = None;
                 }
-                _ => self.running_prefill = Some(s),
+                _ => {
+                    // Still mid-prefill: its remaining work changed, so its
+                    // index keys must follow (the only re-key point — see
+                    // the module invariants).
+                    self.ready.rekey(s, self.sched.as_ref(), requests);
+                    self.running_prefill = Some(s);
+                }
             }
         }
         for (i, &s) in plan.decodes.iter().enumerate() {
@@ -364,7 +392,7 @@ mod tests {
         let (pm, slo, mut reqs) = setup();
         let s1 = reqs.insert(Request::new(1, 100, 3, 0.0));
         let mut s = static_sched(64);
-        s.enqueue(s1);
+        s.enqueue(s1, &reqs);
 
         let p1 = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(p1.prefill, Some((s1, 64)));
@@ -394,10 +422,10 @@ mod tests {
         let s1 = reqs.insert(Request::new(1, 10, 50, 0.0));
         let s2 = reqs.insert(Request::new(2, 1_000_000, 10, 1.0));
         let mut s = static_sched(512);
-        s.enqueue(s1);
+        s.enqueue(s1, &reqs);
         let p = s.next_batch(&reqs, &pm, &slo, 0.0);
         s.complete_iteration(&p, &mut reqs, 0.1); // prefills 1 fully
-        s.enqueue(s2);
+        s.enqueue(s2, &reqs);
 
         let plan = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(plan.prefill, Some((s2, 512)));
@@ -412,7 +440,7 @@ mod tests {
             Box::new(AdaptiveChunk::new(vec![32, 256, 2048, 4096])),
             128,
         );
-        s.enqueue(s1);
+        s.enqueue(s1, &reqs);
         let first = s.next_batch(&reqs, &pm, &slo, 0.0);
         let (_, c_first) = first.prefill.unwrap();
         // fast-forward most of the prefill
@@ -428,7 +456,7 @@ mod tests {
         let mut s = Scheduler::new(Box::new(StaticChunk(64)), 4);
         for id in 0..8 {
             let slot = reqs.insert(Request::new(id, 1, 100, 0.0));
-            s.enqueue(slot);
+            s.enqueue(slot, &reqs);
             let p = s.next_batch(&reqs, &pm, &slo, 0.0);
             s.complete_iteration(&p, &mut reqs, 0.1);
         }
@@ -442,7 +470,7 @@ mod tests {
         let (pm, slo, mut reqs) = setup();
         let s1 = reqs.insert(Request::new(1, 1, 100, 0.0));
         let mut s = static_sched(64);
-        s.enqueue(s1);
+        s.enqueue(s1, &reqs);
         let p = s.next_batch(&reqs, &pm, &slo, 0.0);
         s.complete_iteration(&p, &mut reqs, 0.1);
         reqs[s1].decoded = 50; // pretend long decode
@@ -458,8 +486,8 @@ mod tests {
         let s1 = reqs.insert(Request::new(1, 10, 100, 0.0));
         let s2 = reqs.insert(Request::new(2, 20, 100, 0.0));
         let mut s = static_sched(64);
-        s.enqueue(s1);
-        s.enqueue(s2);
+        s.enqueue(s1, &reqs);
+        s.enqueue(s2, &reqs);
         for _ in 0..2 {
             let p = s.next_batch(&reqs, &pm, &slo, 0.0);
             s.complete_iteration(&p, &mut reqs, 0.1);
@@ -479,7 +507,7 @@ mod tests {
         // the middle request finishes first; neighbors run longer
         for (id, out) in [(1u64, 8u64), (2, 3), (3, 8)] {
             let slot = reqs.insert(Request::new(id, 4, out, 0.0));
-            s.enqueue(slot);
+            s.enqueue(slot, &reqs);
             let p = s.next_batch(&reqs, &pm, &slo, 0.0);
             s.complete_iteration(&p, &mut reqs, 0.1);
             slots.push(slot);
@@ -500,7 +528,7 @@ mod tests {
             Scheduler::with_policy(Box::new(StaticChunk(64)), Box::new(Lars::default()), 128);
         // 10 chunks of estimated work, generous proportional deadline
         let long = reqs.insert(Request::new(1, 640, 4, 0.0).with_slo(10.0, 50.0));
-        s.enqueue(long);
+        s.enqueue(long, &reqs);
         for t in [0.1, 0.2] {
             let p = s.next_batch(&reqs, &pm, &slo, t - 0.1);
             assert_eq!(p.prefill, Some((long, 64)));
@@ -510,7 +538,7 @@ mod tests {
 
         // urgent short arrives: tiny remaining work, deadline nearly blown
         let short = reqs.insert(Request::new(2, 64, 2, 0.2).with_slo(0.05, 0.3));
-        s.enqueue(short);
+        s.enqueue(short, &reqs);
         let p = s.next_batch(&reqs, &pm, &slo, 0.25);
         assert_eq!(p.prefill, Some((short, 64)), "urgent short must preempt");
         assert_eq!(s.preemptions, 0, "counted only when the switch executes");
@@ -537,8 +565,8 @@ mod tests {
         let mut s = Scheduler::with_policy(Box::new(StaticChunk(64)), Box::new(Srpt), 128);
         let big = reqs.insert(Request::new(1, 1_000, 1, 0.0).with_slo(1.0, 100.0));
         let small = reqs.insert(Request::new(2, 64, 1, 0.0).with_slo(0.05, 100.0));
-        s.enqueue(big);
-        s.enqueue(small);
+        s.enqueue(big, &reqs);
+        s.enqueue(small, &reqs);
         // the small request runs first even though it arrived second
         let p = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(p.prefill, Some((small, 64)));
@@ -557,8 +585,8 @@ mod tests {
         // FCFS must ignore that entirely
         let a = reqs.insert(Request::new(1, 256, 1, 0.0).with_slo(10.0, 1_000.0));
         let b = reqs.insert(Request::new(2, 64, 1, 0.1).with_slo(0.01, 0.2));
-        s.enqueue(a);
-        s.enqueue(b);
+        s.enqueue(a, &reqs);
+        s.enqueue(b, &reqs);
         for t in [1.0, 2.0, 3.0, 4.0] {
             let p = s.next_batch(&reqs, &pm, &slo, t);
             if reqs[a].remaining_prefill() > 0 {
@@ -568,5 +596,32 @@ mod tests {
         }
         assert_eq!(s.preemptions, 0);
         assert!(reqs[a].is_finished());
+    }
+
+    #[test]
+    fn urgency_counter_tracks_deadline_critical_backlog() {
+        let (pm, slo, mut reqs) = setup();
+        let mut s =
+            Scheduler::with_policy(Box::new(StaticChunk(64)), Box::new(Lars::default()), 128);
+        // deadlines at 1.0 and 100.0 (LARS critical times pulled in by the
+        // headroom fraction)
+        let tight = reqs.insert(Request::new(1, 640, 1, 0.0).with_slo(0.1, 1.0));
+        let loose = reqs.insert(Request::new(2, 640, 1, 0.0).with_slo(0.1, 100.0));
+        s.enqueue(tight, &reqs);
+        s.enqueue(loose, &reqs);
+        assert_eq!(s.n_urgent(0.0), 0);
+        assert_eq!(s.n_urgent(2.0), 1, "tight deadline has passed");
+        assert_eq!(s.n_urgent(200.0), 2);
+        // the counter shrinks as critical requests drain
+        let p = s.next_batch(&reqs, &pm, &slo, 200.0);
+        assert_eq!(p.prefill.map(|(x, _)| x), Some(tight));
+        for t in [200.1; 10] {
+            let p = s.next_batch(&reqs, &pm, &slo, t);
+            if p.is_empty() {
+                break;
+            }
+            s.complete_iteration(&p, &mut reqs, t);
+        }
+        assert!(s.n_urgent(200.2) <= 1);
     }
 }

@@ -23,7 +23,7 @@ USAGE:
   medha serve     [--artifacts DIR] [--stages N] [--chunk-cap C] [--prompt TEXT] [--requests N] [--new-tokens N]
   medha simulate  [--model llama3-8b|llama3-70b] [--tp N] [--spp N] [--kvp N]
                   [--policy fcfs|srpt|edf|lars] [--routing blind|round-robin|routed]
-                  [--workload mixed|convoy|kvp-convoy]
+                  [--kvp-capacity TOKENS] [--workload mixed|convoy|kvp-convoy]
                   [--ctx TOKENS] [--requests N] [--rate R] [--horizon S] [--seed S]
   medha reproduce --figure <fig1|table1|fig5a|...|all>
   medha inspect   [--artifacts DIR]
@@ -117,6 +117,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         dep.scheduler.routing = RoutingMode::parse(rm)
             .ok_or_else(|| anyhow::anyhow!("unknown --routing '{rm}' (blind|round-robin|routed)"))?;
     }
+    // Finite per-group KV capacity: routed placement refuses groups
+    // without room and defers the admission (counted in the summary).
+    if let Some(cap) = args.get("kvp-capacity") {
+        dep.scheduler.kvp_capacity_tokens = cap
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--kvp-capacity must be a token count"))?;
+    }
     dep.validate()?;
     let ctx = args.u64_or("ctx", 1_000_000);
     let n = args.usize_or("requests", 8);
@@ -199,6 +206,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         s.preemptions,
         s.active_preemptions
     );
+    if s.routing_refusals > 0 {
+        println!(
+            "capacity: {} admissions refused for KV room (deferred until capacity freed)",
+            s.routing_refusals
+        );
+    }
     Ok(())
 }
 

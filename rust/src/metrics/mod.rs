@@ -92,6 +92,16 @@ pub struct Metrics {
     /// request (pool-scheduled routing modes only; the distinction the
     /// `preemptions` counter alone cannot make).
     pub active_preemptions: u64,
+    /// Admissions refused for lack of per-group KV capacity: the routing
+    /// hook (`SchedPolicy::route`) found no fitting group, or older
+    /// refused admissions were already waiting (strict FIFO — a new
+    /// arrival queues behind them rather than taking the capacity that
+    /// frees). Each such request is counted once, when it is deferred —
+    /// or overflow-placed with the check waived, for requests larger than
+    /// a whole group's capacity. Always zero under blind routing or
+    /// unlimited capacity (the defaults, and all the reference core
+    /// supports — mirrored at zero in `sim::reference` by construction).
+    pub routing_refusals: u64,
     /// Active-yield audit trail, in event order; dropped (like `iters`)
     /// when `keep_iter_records` is off — the counter stays exact.
     pub preemption_events: Vec<PreemptionEvent>,
@@ -132,6 +142,7 @@ impl Default for Metrics {
             slo_good_requests: 0,
             preemptions: 0,
             active_preemptions: 0,
+            routing_refusals: 0,
             preemption_events: Vec::new(),
             group_busy_s: Vec::new(),
             group_prefill_tokens: Vec::new(),
@@ -327,6 +338,7 @@ impl Metrics {
             },
             preemptions: self.preemptions,
             active_preemptions: self.active_preemptions,
+            routing_refusals: self.routing_refusals,
         }
     }
 }
@@ -358,6 +370,9 @@ pub struct MetricsSummary {
     /// Chunk-boundary yields of the *actively executing* sharded long
     /// request (KV shards retained, resume bit-exact).
     pub active_preemptions: u64,
+    /// Capacity-refused admissions (deferred or overflow-placed); zero
+    /// outside routed mode with finite KV capacity.
+    pub routing_refusals: u64,
 }
 
 #[cfg(test)]
@@ -459,6 +474,7 @@ mod tests {
         assert_eq!(s.goodput_rps, 0.0);
         assert_eq!(s.preemptions, 0);
         assert_eq!(s.active_preemptions, 0);
+        assert_eq!(s.routing_refusals, 0);
         assert!(m.preemption_events.is_empty());
         assert!(m.group_utilization().is_empty());
     }

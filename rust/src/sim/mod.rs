@@ -23,10 +23,18 @@
 //! decision instant per group: the shard holders of the active long
 //! request iterate as one cooperative set while every other group serves
 //! short traffic independently (section 7), `routed` additionally placing
-//! requests via the policy's urgency-aware [`GroupView`] hook and letting
-//! a preemptive policy yield the **active** sharded prefill at a chunk
-//! boundary (KV shards retained, resume bit-exact, recorded as
-//! [`PreemptionEvent`](crate::metrics::PreemptionEvent)s).
+//! requests — the long-request *primary* included — via the policy's
+//! urgency-aware [`GroupView`] hook and letting a preemptive policy yield
+//! the **active** sharded prefill at a chunk boundary (KV shards retained,
+//! resume bit-exact, recorded as
+//! [`PreemptionEvent`](crate::metrics::PreemptionEvent)s). Routed
+//! admission is **capacity-aware**: with a finite
+//! `scheduler.kvp_capacity_tokens`, the routing hook refuses groups
+//! without room for a request's full KV footprint; refusals are counted
+//! (`Metrics::routing_refusals`) and the admission deferred until capacity
+//! frees. Every per-group signal the hook reads — urgency counts, free
+//! capacity, load — is incrementally maintained O(1) state, so an
+//! admission costs O(groups) even at million-request backlogs.
 //!
 //! Timing model:
 //! * every group's mixed batch flows through its stage pipeline
@@ -54,6 +62,12 @@
 //!   `complete_iteration_into` APIs; the steady state performs no heap
 //!   allocation per iteration. Decode contexts are tracked incrementally by
 //!   each scheduler instead of being rebuilt from the request map.
+//! * **Indexed ready sets** — preemptive selection is served by each
+//!   scheduler's [`ReadySet`](crate::coordinator::ReadySet) (O(log n),
+//!   bit-identical to the O(n) priority scan it replaced — asserted by a
+//!   per-selection `debug_assert` and the differential harness in
+//!   `tests/invariants.rs`), so deep backlogs no longer pay a linear scan
+//!   per iteration; the `sched/select` bench records the win.
 //! * **Event-driven time advance** — when an instant has no runnable work
 //!   the clock jumps to the next event (arrival or earliest stage-0 free
 //!   time) instead of spinning in 1e-6 s bumps.
@@ -236,6 +250,13 @@ pub struct Simulation {
     /// Finished requests, retained when `opts.retain_finished`.
     retired: Vec<Request>,
     pending: VecDeque<RequestSpec>,
+    /// Routed-mode admissions refused for lack of per-group KV capacity,
+    /// waiting for capacity to free. Strict FIFO: the head is retried at
+    /// every decision instant, and while anything waits here new routed
+    /// arrivals queue behind it (they would otherwise consume every token
+    /// that frees and starve the head). Each deferral was counted in
+    /// `Metrics::routing_refusals`.
+    deferred: VecDeque<Slot>,
     /// Per-group short-request schedulers.
     scheds: Vec<Scheduler>,
     timelines: Vec<PipelineTimeline>,
@@ -277,7 +298,10 @@ impl Simulation {
             Box::new(StaticChunk(dep.scheduler.static_chunk))
         };
         let mut pending: Vec<RequestSpec> = workload;
-        pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        // (arrival, id) — not arrival alone — so same-tick arrivals admit
+        // deterministically regardless of trace construction order (the
+        // tie-break `workload::kvp_convoy` already sorts by).
+        pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
         let layers_per_stage = dep.model.n_layers / dep.parallel.spp.max(1);
         let topo = Topology::new(dep.parallel, &dep.hardware);
         let mut metrics = match opts.metrics_reservoir {
@@ -296,6 +320,7 @@ impl Simulation {
             requests: RequestArena::new(),
             retired: Vec::new(),
             pending: pending.into(),
+            deferred: VecDeque::new(),
             scheds: (0..kvp_groups)
                 .map(|_| {
                     Scheduler::with_policy(
@@ -310,7 +335,11 @@ impl Simulation {
                 .collect(),
             long_queue: VecDeque::new(),
             active_long: None,
-            kvp_mgr: KvpManager::new(dep.scheduler.kvp_onboard_threshold, kvp_groups),
+            kvp_mgr: KvpManager::with_capacity(
+                dep.scheduler.kvp_onboard_threshold,
+                kvp_groups,
+                dep.scheduler.kvp_capacity_tokens,
+            ),
             router: Router::new(kvp_groups),
             routing,
             free_at: vec![0.0; kvp_groups as usize],
@@ -330,6 +359,15 @@ impl Simulation {
     }
 
     fn admit_arrivals(&mut self) {
+        // Retry capacity-deferred admissions first: capacity may have
+        // freed since the last decision instant, and FIFO retry keeps
+        // deferral fair. O(1) when nothing is deferred.
+        while let Some(&slot) = self.deferred.front() {
+            if !self.place_short_routed(slot, false) {
+                break;
+            }
+            self.deferred.pop_front();
+        }
         while let Some(spec) = self.pending.front() {
             if spec.arrival_s > self.now {
                 break;
@@ -343,28 +381,9 @@ impl Simulation {
                 .with_slo(est, deadline);
             let slot = self.requests.insert(r);
             if spec.prompt_len > self.opts.long_threshold {
-                // Documents claim their primary group by outstanding load
-                // in every mode — their KV grows across groups via the KVP
-                // manager regardless of where they start.
-                let g = self.router.route(slot, spec.prompt_len);
-                self.kvp_mgr.onboard_request(slot, spec.id, g, self.now);
-                self.long_queue.push_back(slot);
+                self.admit_long(slot, spec.id, spec.prompt_len);
             } else {
-                let g = match self.routing {
-                    RoutingMode::Blind => self.router.route(slot, spec.prompt_len),
-                    RoutingMode::RoundRobin => {
-                        self.router.route_round_robin(slot, spec.prompt_len)
-                    }
-                    RoutingMode::Routed => {
-                        self.fill_group_views(slot);
-                        let g =
-                            self.sched_policy
-                                .route(self.requests.get(slot), &self.views, self.now);
-                        self.router.route_to(slot, spec.prompt_len, g);
-                        g
-                    }
-                };
-                self.scheds[g as usize].enqueue(slot);
+                self.admit_short(slot, spec.prompt_len);
             }
         }
         // Blind mode: the next long request is selected here, once, and
@@ -384,41 +403,160 @@ impl Simulation {
         }
     }
 
-    /// Snapshot per-group occupancy for the policy routing hook: router
-    /// load, ready-set depth, participation in the active sharded long
-    /// request, and how much more-urgent work is already queued ahead of
-    /// `incoming` on each group. O(groups + total queued) per admission —
-    /// fine at interactive backlog depths; an incrementally maintained
-    /// urgency count for million-request backlogs is a ROADMAP follow-up
-    /// alongside the priority-heap ready set. Non-preemptive policies skip
-    /// the backlog scan entirely (their routing hook ignores urgency).
-    fn fill_group_views(&mut self, incoming: Slot) {
-        self.views.clear();
-        let preemptive = self.sched_policy.preemptive();
-        let p_in = self
-            .sched_policy
-            .priority(self.requests.get(incoming), self.now);
-        for g in 0..self.scheds.len() {
-            let gid = g as GroupId;
-            let sched = &self.scheds[g];
-            let mut more_urgent = 0usize;
-            if preemptive {
-                for s in sched.queued_slots() {
-                    if self.sched_policy.priority(self.requests.get(s), self.now) < p_in {
-                        more_urgent += 1;
-                    }
+    /// Admit a long (KVP-sharded) request: claim a primary group, onboard
+    /// it with the KVP manager, and queue it for the cooperative slot. The
+    /// primary anchors the first shard and the lockstep iteration set; KV
+    /// grows across groups via the manager regardless of where it starts.
+    /// Blind and round-robin modes keep least-loaded primaries; `routed`
+    /// places the primary through the same policy hook short requests use
+    /// (urgency-aware, avoiding the active document's groups), with the
+    /// capacity footprint clamped to what the primary will actually hold
+    /// before the next group onboards.
+    fn admit_long(&mut self, slot: Slot, ext_id: RequestId, prompt_len: u64) {
+        let g = if self.routing == RoutingMode::Routed {
+            self.fill_group_views();
+            let need = policy::kv_need(self.requests.get(slot))
+                .min(self.dep.scheduler.kvp_onboard_threshold);
+            let g = match self
+                .sched_policy
+                .route(self.requests.get(slot), &self.views, need, self.now)
+            {
+                Some(g) => g,
+                // The fleet is packed: counted as a refusal, placed with
+                // the capacity filter waived — documents shard across
+                // groups, so deferring the main workload would idle the
+                // fleet it is about to fill.
+                None => {
+                    self.metrics.routing_refusals += 1;
+                    self.route_capacity_waived(slot, need)
+                }
+            };
+            self.router.route_to(slot, prompt_len, g);
+            g
+        } else {
+            self.router.route(slot, prompt_len)
+        };
+        self.kvp_mgr.onboard_request(slot, ext_id, g, self.now);
+        self.long_queue.push_back(slot);
+    }
+
+    /// Admit a short request to a group scheduler per the routing mode.
+    /// Its full KV footprint (prompt + output) is reserved on the chosen
+    /// group until retirement; under `routed` with finite capacity the
+    /// placement may be refused and the admission deferred.
+    fn admit_short(&mut self, slot: Slot, prompt_len: u64) {
+        match self.routing {
+            RoutingMode::Blind => {
+                let g = self.router.route(slot, prompt_len);
+                self.reserve_short(slot, g);
+                self.scheds[g as usize].enqueue(slot, &self.requests);
+            }
+            RoutingMode::RoundRobin => {
+                let g = self.router.route_round_robin(slot, prompt_len);
+                self.reserve_short(slot, g);
+                self.scheds[g as usize].enqueue(slot, &self.requests);
+            }
+            RoutingMode::Routed => {
+                // Strict FIFO under capacity pressure: while older
+                // admissions wait for room, a new arrival queues behind
+                // them without attempting placement — otherwise it would
+                // take every token that frees and starve the queue head.
+                // Requests larger than a whole group's capacity skip the
+                // queue entirely: waiting can never make them placeable,
+                // so they go straight to overflow placement.
+                let oversized = policy::kv_need(self.requests.get(slot))
+                    > self.dep.scheduler.kvp_capacity_tokens;
+                if !oversized && !self.deferred.is_empty() {
+                    self.metrics.routing_refusals += 1;
+                    self.deferred.push_back(slot);
+                } else if !self.place_short_routed(slot, true) {
+                    self.deferred.push_back(slot);
                 }
             }
+        }
+    }
+
+    fn reserve_short(&mut self, slot: Slot, g: GroupId) {
+        let need = policy::kv_need(self.requests.get(slot));
+        self.kvp_mgr.reserve(g, need);
+    }
+
+    /// Re-route with the capacity filter waived, for refusals that waiting
+    /// can never satisfy (requests larger than a whole group's capacity,
+    /// and long-request primaries on a packed fleet). The caller accounts
+    /// the refusal; `fill_group_views` must have populated `views`.
+    fn route_capacity_waived(&mut self, slot: Slot, need: u64) -> GroupId {
+        for v in &mut self.views {
+            v.kv_free = u64::MAX;
+        }
+        self.sched_policy
+            .route(self.requests.get(slot), &self.views, need, self.now)
+            .expect("capacity-waived routing always places")
+    }
+
+    /// Routed-mode placement of a short request, honoring per-group KV
+    /// capacity through the policy's routing hook. Returns `false` when no
+    /// group can currently fit the request — the caller defers admission
+    /// until capacity frees. `count_refusal` is set on the first attempt
+    /// only, so a deferred request counts once in `routing_refusals`.
+    /// Requests larger than a whole group's capacity can never satisfy the
+    /// check and are placed with it waived (counted, never deferred).
+    fn place_short_routed(&mut self, slot: Slot, count_refusal: bool) -> bool {
+        self.fill_group_views();
+        let need = policy::kv_need(self.requests.get(slot));
+        let choice = self
+            .sched_policy
+            .route(self.requests.get(slot), &self.views, need, self.now);
+        let g = match choice {
+            Some(g) => g,
+            None => {
+                if count_refusal {
+                    self.metrics.routing_refusals += 1;
+                }
+                if need <= self.dep.scheduler.kvp_capacity_tokens {
+                    return false; // will fit once capacity frees: defer
+                }
+                // Larger than a whole group: waiting can never help, so
+                // the request is placed with the check waived.
+                self.route_capacity_waived(slot, need)
+            }
+        };
+        let prompt_len = self.requests.get(slot).prompt_len;
+        self.router.route_to(slot, prompt_len, g);
+        self.kvp_mgr.reserve(g, need);
+        self.scheds[g as usize].enqueue(slot, &self.requests);
+        true
+    }
+
+    /// Snapshot per-group occupancy for the policy routing hook: router
+    /// load, ready-set depth, participation in the active sharded long
+    /// request, the deadline-critical queue count, and free KV capacity.
+    /// O(groups) per admission — every field is an O(1) read of
+    /// incrementally maintained state (the schedulers' urgency counters
+    /// and the KVP manager's capacity ledger), replacing the
+    /// O(total queued) backlog rescan the pre-heap router performed on
+    /// each admission.
+    fn fill_group_views(&mut self) {
+        self.views.clear();
+        let preemptive = self.sched_policy.preemptive();
+        for g in 0..self.scheds.len() {
+            let gid = g as GroupId;
+            let urgent = if preemptive {
+                self.scheds[g].n_urgent(self.now)
+            } else {
+                0
+            };
             self.views.push(GroupView {
                 group: gid,
                 load: self.router.load_of(gid),
-                queue_len: sched.queue_len(),
-                n_decoding: sched.n_decoding(),
+                queue_len: self.scheds[g].queue_len(),
+                n_decoding: self.scheds[g].n_decoding(),
                 active_long: self
                     .active_long
                     .map(|slot| self.kvp_mgr.holds(slot, gid))
                     .unwrap_or(false),
-                more_urgent_queued: more_urgent,
+                more_urgent_queued: urgent,
+                kv_free: self.kvp_mgr.kv_free(gid),
             });
         }
     }
@@ -426,6 +564,7 @@ impl Simulation {
     fn has_work(&self) -> bool {
         self.active_long.is_some()
             || !self.long_queue.is_empty()
+            || !self.deferred.is_empty()
             || self.scheds.iter().any(|s| s.has_work())
     }
 
@@ -694,11 +833,16 @@ impl Simulation {
         );
         for i in 0..self.finished_buf.len() {
             let slot = self.finished_buf[i];
-            let prompt_len = {
+            let (prompt_len, kv_need) = {
                 let r = self.requests.get(slot);
                 self.metrics.record_finished_request(r);
-                r.prompt_len
+                (r.prompt_len, policy::kv_need(r))
             };
+            // Release the KV reservation held since admission (group read
+            // before the router forgets the placement).
+            if let Some(g) = self.router.group_of(slot) {
+                self.kvp_mgr.unreserve(g, kv_need);
+            }
             self.router.release(slot, prompt_len);
             self.retire(slot);
         }

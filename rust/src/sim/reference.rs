@@ -223,7 +223,8 @@ impl ReferenceSimulation {
             Box::new(StaticChunk(dep.scheduler.static_chunk))
         };
         let mut pending: Vec<RequestSpec> = workload;
-        pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s));
+        // (arrival, id) tie-break, in lockstep with the optimized core.
+        pending.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
         let layers_per_stage = dep.model.n_layers / dep.parallel.spp.max(1);
         let topo = Topology::new(dep.parallel, &dep.hardware);
         ReferenceSimulation {

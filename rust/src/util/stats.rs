@@ -152,7 +152,10 @@ impl Samples {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): a NaN sample (e.g. a
+            // latency computed from an uninitialized timestamp) must sort
+            // to the end, not panic the whole metrics query.
+            self.xs.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
@@ -246,7 +249,8 @@ impl P2Quantile {
             let k = (self.count - 1) as usize;
             self.q[k] = x;
             if self.count == 5 {
-                self.q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                // NaN-safe: see Samples::ensure_sorted.
+                self.q.sort_by(|a, b| a.total_cmp(b));
             }
             return;
         }
@@ -303,7 +307,7 @@ impl P2Quantile {
         if self.count < 5 {
             // exact over the few samples seen so far
             let mut xs: Vec<f64> = self.q[..self.count as usize].to_vec();
-            xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            xs.sort_by(|a, b| a.total_cmp(b));
             let rank = self.p * (xs.len() - 1) as f64;
             return xs[rank.round() as usize];
         }
@@ -507,6 +511,39 @@ mod tests {
         assert_eq!(h.count(), 12);
         assert!(h.bucket_counts().iter().all(|&c| c == 1));
         assert_eq!(h.overflow(), 1);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_percentiles() {
+        // Regression: the sorts used partial_cmp().unwrap(), so a single
+        // NaN latency sample panicked every subsequent percentile query.
+        let mut s = Samples::new();
+        for i in 0..10 {
+            s.add(i as f64);
+        }
+        s.add(f64::NAN);
+        // total_cmp sorts the NaN to the end: low/mid percentiles stay
+        // meaningful, the max degrades to NaN instead of panicking
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert!((s.median() - 5.0).abs() <= 1.0);
+        assert!(s.max().is_nan());
+        assert_eq!(s.len(), 11);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_p2_estimator() {
+        // The P² marker sorts had the same NaN-unsafe comparator, both in
+        // the first-five fill and the small-stream exact path.
+        let mut q = P2Quantile::new(0.5);
+        q.add(1.0);
+        q.add(f64::NAN);
+        q.add(3.0);
+        let _ = q.value(); // small-stream sort path
+        for i in 0..20 {
+            q.add(i as f64); // five-marker fill sort path + steady state
+        }
+        assert_eq!(q.count(), 23);
+        let _ = q.value(); // must not panic; value may be NaN-tainted
     }
 
     #[test]

@@ -1,15 +1,19 @@
 //! Deterministic invariant harness (seeded randomized properties via
 //! `medha::util::proptest`): the structural guarantees the policy-aware
-//! KVP routing tentpole leans on. Slot recycling must never alias a live
-//! request, KVP shard maps must cover every KV token exactly once across
-//! groups, and randomized admit/preempt/resume/finish sequences must
-//! uphold both — under all four scheduling policies and all three routing
-//! modes. Every failure reports a replay seed (`MEDHA_PROPTEST_SEED`).
+//! KVP routing and heap-backed ready-set tentpoles lean on. Slot
+//! recycling must never alias a live request, KVP shard maps must cover
+//! every KV token exactly once across groups, indexed ready-set selection
+//! must be bit-identical to the O(n) priority scan it replaced, and
+//! randomized admit/preempt/resume/finish sequences must uphold all of it
+//! — under all four scheduling policies and all three routing modes.
+//! Every failure reports a replay seed (`MEDHA_PROPTEST_SEED`).
 
 use std::collections::BTreeMap;
 
 use medha::config::DeploymentConfig;
-use medha::coordinator::{KvpManager, Request, RequestArena, RoutingMode, SchedPolicyKind};
+use medha::coordinator::{
+    KvpManager, ReadySet, Request, RequestArena, RoutingMode, SchedPolicy, SchedPolicyKind,
+};
 use medha::sim::{SimOptions, Simulation};
 use medha::util::proptest::check;
 use medha::util::slotvec::SlotVec;
@@ -117,11 +121,111 @@ fn prop_kvp_shard_maps_cover_every_token_exactly_once() {
     });
 }
 
+/// THE differential for the heap-backed ready set (PR 4 tentpole):
+/// indexed selection must equal the O(n) scan under the canonical
+/// `(priority, enqueue-order)` rule — across all four policies, through
+/// randomized lifecycles with chunk-boundary preemption re-keys, prefill
+/// completions, and arbitrary retirements. (The same equivalence is also
+/// re-asserted on *every* selection inside `Scheduler::next_batch_into`
+/// via a `debug_assert`, so the end-to-end lifecycle property below
+/// exercises it through the full simulator for 4 policies × 3 routing
+/// modes on top of this direct structural check.)
+#[test]
+fn prop_ready_set_selection_equals_scan() {
+    check("heap selection ≡ scan", 40, |rng| {
+        for kind in SchedPolicyKind::ALL {
+            let policy = kind.build();
+            let mut arena = RequestArena::new();
+            let mut rs = ReadySet::new(policy.key_shape());
+            let mut queued: Vec<u32> = Vec::new();
+            let mut now = 0.0;
+            for id in 0..rng.range_u64(4, 120) {
+                now += rng.range_f64(0.0, 0.3);
+                let roll = rng.below(12);
+                if roll < 7 {
+                    // admission with length-aware-ish SLO state
+                    let prompt: u64 = *rng.choose(&[64, 512, 2_048, 65_536, 1_000_000]);
+                    let est = prompt as f64 * rng.range_f64(1e-7, 1e-5);
+                    let budget = (est * rng.range_f64(1.5, 8.0)).max(0.05);
+                    let r = Request::new(id, prompt, 4, now).with_slo(est, now + budget);
+                    let s = arena.insert(r);
+                    rs.push(s, policy.as_ref(), &arena);
+                    queued.push(s);
+                } else if roll < 10 && !queued.is_empty() {
+                    // the selected request runs one chunk and is re-keyed —
+                    // or leaves the set when its prefill completes (the
+                    // chunk boundary where a preemptive policy may switch)
+                    if let Some(s) = rs.select(policy.as_ref(), &arena, now) {
+                        let rem = arena.get(s).remaining_prefill();
+                        let c = rng.range_u64(1, rem.max(1));
+                        arena.get_mut(s).complete_chunk(c, now);
+                        if arena.get(s).remaining_prefill() == 0 {
+                            rs.remove(s);
+                            queued.retain(|&x| x != s);
+                            arena.remove(s);
+                        } else {
+                            rs.rekey(s, policy.as_ref(), &arena);
+                        }
+                    }
+                } else if !queued.is_empty() {
+                    // retirement of an arbitrary queued request
+                    let i = rng.below(queued.len() as u64) as usize;
+                    let s = queued.swap_remove(i);
+                    rs.remove(s);
+                    arena.remove(s);
+                }
+                assert_eq!(
+                    rs.select(policy.as_ref(), &arena, now),
+                    rs.select_via_scan(policy.as_ref(), &arena, now),
+                    "{}: index diverged from scan at now={now}",
+                    kind.name()
+                );
+                assert_eq!(rs.len(), queued.len());
+            }
+        }
+    });
+}
+
+/// Regression for the arrival-tie admission order: two traces holding the
+/// same specs in different construction order must produce identical runs
+/// — the pending-admission sort tie-breaks on `(arrival_s, id)` in both
+/// simulator cores, matching `workload::kvp_convoy`'s ordering, instead
+/// of inheriting whatever order the trace builder emitted.
+#[test]
+fn same_tick_arrivals_admit_in_id_order_regardless_of_trace_order() {
+    let specs = |ids: [u64; 3]| -> Vec<RequestSpec> {
+        ids.iter()
+            .map(|&id| RequestSpec {
+                id,
+                prompt_len: 256 + 64 * id, // distinct lengths expose reorders
+                max_new_tokens: 4,
+                arrival_s: 1.0, // all in the same tick
+            })
+            .collect()
+    };
+    let run = |w: Vec<RequestSpec>| -> Vec<(u64, f64)> {
+        let dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        sim.run();
+        let mut ttfts: Vec<(u64, f64)> = sim
+            .retired()
+            .iter()
+            .map(|r| (r.id, r.ttft().unwrap()))
+            .collect();
+        ttfts.sort_by(|a, b| a.0.cmp(&b.0));
+        ttfts
+    };
+    assert_eq!(run(specs([0, 1, 2])), run(specs([2, 0, 1])));
+    assert_eq!(run(specs([1, 2, 0])), run(specs([0, 1, 2])));
+}
+
 /// Randomized end-to-end lifecycle: small heterogeneous traces (Poisson
 /// shorts + KVP-sharded documents) driven through the full simulator under
 /// every policy, with the routing mode drawn per case. Every request must
 /// finish with token-exact prefill/decode counts, every arena slot must be
-/// recycled, and the onboard log must stay duplicate-free.
+/// recycled, and the onboard log must stay duplicate-free. (In debug
+/// builds every selection inside these runs also differentially checks
+/// the indexed ready set against the O(n) scan.)
 #[test]
 fn prop_random_lifecycle_upholds_invariants_across_policies() {
     check("sim lifecycle invariants", 8, |rng| {
@@ -187,6 +291,11 @@ fn prop_random_lifecycle_upholds_invariants_across_policies() {
                     "{label} yielded an active request"
                 );
             }
+            // capacity accounting is off by default: nothing may be refused
+            assert_eq!(
+                sim.metrics.routing_refusals, 0,
+                "{label} refused a placement with unlimited capacity"
+            );
         }
     });
 }

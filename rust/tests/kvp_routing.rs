@@ -92,6 +92,74 @@ fn preemption_counters_distinguish_queued_reorders_from_active_yields() {
     assert!(fcfs.metrics.preemption_events.is_empty());
 }
 
+/// Capacity-aware routed admission (PR 4): with a finite per-group KV
+/// capacity, the routing hook refuses placements that would not fit, the
+/// refused admissions are counted and deferred — and still nothing is
+/// left behind once capacity frees. Blind placement on the same trace
+/// never consults capacity.
+#[test]
+fn capacity_refusals_defer_admissions_without_losing_requests() {
+    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
+    dep.scheduler.policy = SchedPolicyKind::Lars;
+    dep.scheduler.routing = RoutingMode::Routed;
+    dep.scheduler.adaptive_chunking = false;
+    dep.scheduler.static_chunk = 2048;
+    // room for exactly two shorts per group at a time (each needs
+    // prompt 512 + 8 output tokens of KV)
+    dep.scheduler.kvp_capacity_tokens = 2 * (512 + 8);
+    let w: Vec<RequestSpec> = (0..16)
+        .map(|i| RequestSpec {
+            id: i,
+            prompt_len: 512,
+            max_new_tokens: 8,
+            arrival_s: 0.01 * i as f64,
+        })
+        .collect();
+    let mut sim = Simulation::new(dep.clone(), w.clone(), SimOptions::default());
+    sim.run();
+    assert_eq!(sim.metrics.finished_requests, 16, "deferred admissions were lost");
+    assert!(
+        sim.metrics.routing_refusals > 0,
+        "a 16-deep burst against 4 concurrent slots must refuse placements"
+    );
+    assert_eq!(sim.n_live(), 0, "deferred requests leaked arena slots");
+    // every request still produced its tokens exactly once
+    for r in sim.retired() {
+        assert_eq!(r.prefilled, r.prompt_len);
+        assert_eq!(r.decoded, r.max_new_tokens);
+    }
+    // the same trace under blind placement ignores capacity entirely
+    dep.scheduler.routing = RoutingMode::Blind;
+    let mut blind = Simulation::new(dep, w, SimOptions::default());
+    blind.run();
+    assert_eq!(blind.metrics.routing_refusals, 0);
+    assert_eq!(blind.metrics.finished_requests, 16);
+}
+
+/// A request bigger than a whole group's capacity can never satisfy the
+/// capacity check: it is counted as a refusal but placed anyway (capacity
+/// waived) rather than deferred forever.
+#[test]
+fn oversized_request_is_overflow_placed_not_deferred_forever() {
+    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
+    dep.scheduler.policy = SchedPolicyKind::Srpt;
+    dep.scheduler.routing = RoutingMode::Routed;
+    dep.scheduler.adaptive_chunking = false;
+    dep.scheduler.static_chunk = 2048;
+    dep.scheduler.kvp_capacity_tokens = 1_000; // smaller than the request
+    let w = vec![RequestSpec {
+        id: 0,
+        prompt_len: 8_000, // short-path (below long_threshold), yet > capacity
+        max_new_tokens: 4,
+        arrival_s: 0.0,
+    }];
+    let mut sim = Simulation::new(dep, w, SimOptions::default());
+    sim.run();
+    assert_eq!(sim.metrics.finished_requests, 1, "oversized request starved");
+    assert_eq!(sim.metrics.routing_refusals, 1);
+    assert_eq!(sim.n_live(), 0);
+}
+
 /// The KV-integrity contract: preempt the active sharded document
 /// mid-prefill, run the preempting work to completion on other groups,
 /// resume — and the interrupted run's final metrics equal the

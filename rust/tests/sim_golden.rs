@@ -99,6 +99,10 @@ fn assert_outcomes_identical(opt: &RunOutcome, reference: &RunOutcome) {
     assert_eq!(reference.summary.preemptions, 0, "reference preempted");
     assert_eq!(opt.summary.active_preemptions, 0, "optimized yielded an active request");
     assert_eq!(reference.summary.active_preemptions, 0, "reference yielded");
+    // Capacity-refused admissions only exist under routed placement with a
+    // finite KV capacity; blind mode must mirror the reference's zero.
+    assert_eq!(opt.summary.routing_refusals, 0, "optimized blind mode refused a placement");
+    assert_eq!(reference.summary.routing_refusals, 0, "reference refused a placement");
     // per-group utilization accounting, bit-for-bit
     assert_eq!(opt.group_busy_s.len(), reference.group_busy_s.len(), "group count");
     for (g, (a, b)) in opt.group_busy_s.iter().zip(&reference.group_busy_s).enumerate() {
@@ -193,6 +197,7 @@ fn assert_summaries_bit_identical(a: &MetricsSummary, b: &MetricsSummary) {
     assert_eq!(a.finished, b.finished);
     assert_eq!(a.preemptions, b.preemptions);
     assert_eq!(a.active_preemptions, b.active_preemptions);
+    assert_eq!(a.routing_refusals, b.routing_refusals);
     for (what, x, y) in [
         ("ttft_p50", a.ttft_p50, b.ttft_p50),
         ("ttft_p95", a.ttft_p95, b.ttft_p95),
