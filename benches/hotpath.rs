@@ -1,14 +1,14 @@
 //! `cargo bench --bench hotpath` — microbenchmarks of the serving hot paths
 //! (L3 perf targets from DESIGN.md §7): the perf-model predictor queried by
 //! adaptive chunking, scheduler batch formation, simulator iteration rate
-//! (optimized arena core vs. the pre-arena reference core), KV-cache
-//! accounting, and (when artifacts exist) real PJRT execution latency for
-//! decode steps and KVP partials.
+//! on the unified pool-scheduled core, KV-cache accounting, and (when
+//! artifacts exist) real PJRT execution latency for decode steps and KVP
+//! partials.
 //!
 //! Results are recorded to `BENCH_sim.json`, including the simulator
 //! throughput reports (`sim/throughput decode-stream`, `sim/million
-//! mixed`) and the optimized-vs-reference speedup on the
-//! `sim/mixed 100K-prefill + 8 decodes` workload.
+//! mixed`) and the unified-core `sim/mixed 100K-prefill + 8 decodes`
+//! wall time (`sim_mixed_mean_s`).
 
 use medha::config::{DeploymentConfig, SloConfig};
 use medha::coordinator::chunking::{AdaptiveChunk, ChunkPolicy};
@@ -17,7 +17,6 @@ use medha::coordinator::scheduler::Scheduler;
 use medha::coordinator::{RequestArena, SchedPolicy, StaticChunk};
 use medha::kvcache::{BlockPool, KvManager};
 use medha::perfmodel::{BatchShape, PerfModel};
-use medha::sim::reference::ReferenceSimulation;
 use medha::sim::throughput::{
     decode_stream_workload, mixed_million_workload, run_sim_throughput, throughput_dep,
 };
@@ -151,7 +150,7 @@ fn main() {
         kv.release(1).unwrap();
     });
 
-    // --- simulator throughput: optimized core vs. pre-arena reference -----
+    // --- simulator throughput: the unified pool-scheduled core ------------
     let mixed_dep = || {
         let mut dep = DeploymentConfig::llama3_8b_tp8();
         dep.scheduler.adaptive_chunking = false;
@@ -161,11 +160,6 @@ fn main() {
     suite.bench("sim/mixed 100K-prefill + 8 decodes", || {
         let w = workload::long_plus_decodes(100_000, 8, 1_000, 64);
         let mut sim = Simulation::new(mixed_dep(), w, SimOptions::default());
-        std::hint::black_box(sim.run());
-    });
-    suite.bench("sim/mixed 100K-prefill + 8 decodes [reference]", || {
-        let w = workload::long_plus_decodes(100_000, 8, 1_000, 64);
-        let mut sim = ReferenceSimulation::new(mixed_dep(), w, SimOptions::default());
         std::hint::black_box(sim.run());
     });
 
@@ -342,26 +336,16 @@ fn main() {
     }
 
     // --- record results ---------------------------------------------------
-    let speedup = {
-        let find = |name: &str| {
-            suite
-                .results
-                .iter()
-                .find(|r| r.name == name)
-                .map(|r| r.mean_s)
-        };
-        match (
-            find("sim/mixed 100K-prefill + 8 decodes"),
-            find("sim/mixed 100K-prefill + 8 decodes [reference]"),
-        ) {
-            (Some(opt), Some(reference)) if opt > 0.0 => Json::num(reference / opt),
-            _ => Json::Null,
-        }
-    };
+    let sim_mixed_mean_s = suite
+        .results
+        .iter()
+        .find(|r| r.name == "sim/mixed 100K-prefill + 8 decodes")
+        .map(|r| Json::num(r.mean_s))
+        .unwrap_or(Json::Null);
     let num_or_null = |x: f64| if x.is_finite() { Json::num(x) } else { Json::Null };
     let extra = vec![
         ("sim_throughput", Json::arr(sim_reports.iter().map(|r| r.to_json()))),
-        ("sim_mixed_speedup_vs_reference", speedup),
+        ("sim_mixed_mean_s", sim_mixed_mean_s),
         // scan-vs-index ready-set selection scaling (empty when filtered out)
         ("sched_select", Json::arr(select_rows)),
         (

@@ -95,20 +95,20 @@ pub struct SchedulerConfig {
     /// Per-group KV-token capacity (long-request shards + short-request
     /// reservations). Under routed placement the policy's routing hook
     /// refuses groups without room and admission defers until capacity
-    /// frees, counted in `Metrics::routing_refusals`. `u64::MAX` (the
-    /// default) disables capacity accounting — the pre-capacity behavior
-    /// every oracle-parity test runs under.
+    /// frees, counted in `Metrics::routing_refusals` (deferral retries are
+    /// ordered by the scheduling policy's priority). KVP growth also skips
+    /// groups without room. `u64::MAX` (the default) disables capacity
+    /// accounting — the pre-capacity behavior the golden snapshots pin.
     pub kvp_capacity_tokens: u64,
     /// Preemptive scheduling policy ordering each replica's ready set
     /// (section 5): fcfs | srpt | edf | lars. FCFS preserves the original
-    /// strict-FIFO behavior (and oracle parity with the reference
-    /// simulator).
+    /// strict-FIFO behavior.
     pub policy: SchedPolicyKind,
     /// Placement of requests across KVP groups (section 7): blind |
-    /// round-robin | routed. `blind` keeps least-loaded lockstep semantics
-    /// (oracle parity); the pooled modes let non-sharded groups serve
-    /// short traffic independently and enable active-long-request
-    /// preemption under preemptive policies.
+    /// round-robin | routed. `blind` is least-loaded with every group in
+    /// the cooperative set (lockstep-equivalent clocks); the pooled modes
+    /// let non-sharded groups serve short traffic independently and enable
+    /// active-long-request preemption under preemptive policies.
     pub routing: RoutingMode,
 }
 
@@ -303,7 +303,7 @@ mod tests {
         let s = SchedulerConfig::from_json(&j).unwrap();
         assert_eq!(s.policy, SchedPolicyKind::Lars);
         assert_eq!(s.static_chunk, 1024);
-        // routing defaults to the oracle-parity blind mode
+        // routing defaults to the lockstep-equivalent blind mode
         assert_eq!(s.routing, RoutingMode::Blind);
         let bad = Json::parse(r#"{"policy": "wfq"}"#).unwrap();
         assert!(SchedulerConfig::from_json(&bad).is_err());

@@ -3,9 +3,12 @@
 //! A long request's KV cache grows as prefill progresses. Rather than
 //! pre-allocating all KVP groups, the manager onboards groups *dynamically*:
 //! each group holds at most `onboard_threshold` KV tokens of the request;
-//! when the active group fills, the next group joins. Groups not serving a
-//! long request remain independent replicas that can batch short requests
-//! (section 7's scheduling opportunity — exercised by the router).
+//! when the active group fills, the next group joins — round-robin,
+//! **skipping groups whose capacity ledger is out of KV room** (growth only
+//! falls back to overflow-absorbing into the last shard when the whole
+//! fleet is full). Groups not serving a long request remain independent
+//! replicas that can batch short requests (section 7's scheduling
+//! opportunity — exercised by the router).
 //!
 //! Long requests are keyed by their arena [`Slot`]; the external
 //! `RequestId` is kept alongside only for the onboarding log (the Fig. 19
@@ -100,6 +103,17 @@ impl KvpManager {
     /// Append `tokens` of processed KV for slot `s` at time `t`, onboarding
     /// new groups as thresholds are crossed. Returns the groups added (the
     /// common no-growth case returns an unallocated empty vector).
+    ///
+    /// Growth is **capacity-aware**: a candidate group whose KV ledger has
+    /// no free tokens (long shards + short reservations at `capacity`) is
+    /// skipped, in round-robin order from the last shard's group. Only when
+    /// every remaining group is full does the last shard absorb the
+    /// overflow — and a later append re-evaluates, so a group that frees
+    /// capacity can still onboard then. A group that is onboarded with
+    /// *some* room grows its shard to the full threshold (reservations are
+    /// worst-case footprints, so bounded over-commit beats fragmenting the
+    /// shard map). With unlimited capacity (the default) every candidate
+    /// has room and growth is exactly the original round-robin.
     pub fn append_tokens(&mut self, s: Slot, mut tokens: u64, t: f64) -> Vec<GroupId> {
         let e = self.maps.get_mut(s as usize).expect("request not onboarded");
         let mut added = Vec::new();
@@ -114,13 +128,39 @@ impl KvpManager {
                 self.onboard_threshold.saturating_sub(len)
             };
             if room == 0 {
-                // onboard the next group (round-robin over the fleet)
-                let next = (g + 1) % self.n_groups;
-                let start = e.map.total_tokens();
-                e.map.shards.push((next, start, 0));
-                self.onboard_log.push((t, e.ext_id, next));
-                added.push(next);
-                continue;
+                // Onboard the next group: round-robin over the fleet,
+                // skipping groups that already hold a shard of this request
+                // and groups whose capacity ledger is out of KV room.
+                let mut next = None;
+                for step in 1..=self.n_groups {
+                    let cand = (g + step) % self.n_groups;
+                    if e.map.shards.iter().any(|&(gg, _, _)| gg == cand) {
+                        continue;
+                    }
+                    if Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, cand) == 0 {
+                        continue; // capacity-aware growth: skip full groups
+                    }
+                    next = Some(cand);
+                    break;
+                }
+                match next {
+                    Some(next) => {
+                        let start = e.map.total_tokens();
+                        e.map.shards.push((next, start, 0));
+                        self.onboard_log.push((t, e.ext_id, next));
+                        added.push(next);
+                        continue;
+                    }
+                    None => {
+                        // Whole fleet out of room: overflow-absorb into the
+                        // current last shard rather than blowing a full
+                        // group's budget. Not permanent — the next append
+                        // rescans the fleet.
+                        e.map.shards.last_mut().unwrap().2 += tokens;
+                        self.occ[g as usize] += tokens;
+                        break;
+                    }
+                }
             }
             let take = tokens.min(room);
             e.map.shards.last_mut().unwrap().2 += take;
@@ -128,6 +168,15 @@ impl KvpManager {
             tokens -= take;
         }
         added
+    }
+
+    /// Free KV tokens on group `g` per the disaggregated ledger fields —
+    /// the borrow-splitting form of [`Self::kv_free`] usable while a shard
+    /// map is mutably borrowed.
+    fn ledger_kv_free(occ: &[u64], reserved: &[u64], capacity: u64, g: GroupId) -> u64 {
+        let o = occ.get(g as usize).copied().unwrap_or(0);
+        let r = reserved.get(g as usize).copied().unwrap_or(0);
+        capacity.saturating_sub(o.saturating_add(r))
     }
 
     /// Reserve `tokens` of short-request KV on group `g` (admission).
@@ -146,9 +195,7 @@ impl KvpManager {
     /// shards minus short reservations. O(1) — the routing hook reads this
     /// for every group on every routed admission.
     pub fn kv_free(&self, g: GroupId) -> u64 {
-        let occ = self.occ.get(g as usize).copied().unwrap_or(0);
-        let reserved = self.reserved.get(g as usize).copied().unwrap_or(0);
-        self.capacity.saturating_sub(occ.saturating_add(reserved))
+        Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, g)
     }
 
     pub fn shard_map(&self, s: Slot) -> Option<&ShardMap> {
@@ -418,6 +465,56 @@ mod tests {
         k.onboard_request(1, 1, 0, 0.0);
         k.append_tokens(1, 1_000, 0.0);
         assert!(k.kv_free(0) > u64::MAX / 4, "free={}", k.kv_free(0));
+    }
+
+    #[test]
+    fn capacity_full_group_is_skipped_at_growth() {
+        let mut k = KvpManager::with_capacity(100, 4, 1_000);
+        k.onboard_request(1, 1, 0, 0.0);
+        // group 1 — the round-robin next — is out of KV room
+        k.reserve(1, 1_000);
+        assert_eq!(k.kv_free(1), 0);
+        let added = k.append_tokens(1, 250, 1.0);
+        // growth skipped the full group: 0 -> 2 -> 3
+        assert_eq!(added, vec![2, 3]);
+        assert_eq!(k.local_lengths(1), vec![(0, 100), (2, 100), (3, 50)]);
+        assert!(k.shard_map(1).unwrap().check_contiguous());
+        assert!(k.onboard_log_is_duplicate_free());
+    }
+
+    #[test]
+    fn growth_overflow_absorbs_when_every_other_group_is_full() {
+        let mut k = KvpManager::with_capacity(100, 3, 1_000);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.reserve(1, 1_000);
+        k.reserve(2, 1_000);
+        let added = k.append_tokens(1, 250, 1.0);
+        assert!(added.is_empty(), "onboarded into a full group: {added:?}");
+        // the last (only) shard absorbed the overflow past its threshold
+        assert_eq!(k.local_lengths(1), vec![(0, 250)]);
+        assert_eq!(k.occupancy(0), 250);
+        // capacity freeing later lets a subsequent append resume growth
+        // onto the freed group — overflow-absorb is not permanent
+        k.unreserve(1, 1_000);
+        let added = k.append_tokens(1, 50, 2.0);
+        assert_eq!(added, vec![1]);
+        assert_eq!(k.local_lengths(1), vec![(0, 250), (1, 50)]);
+        assert!(k.shard_map(1).unwrap().check_contiguous());
+        assert!(k.onboard_log_is_duplicate_free());
+    }
+
+    #[test]
+    fn growth_never_revisits_a_group_already_holding_a_shard() {
+        // Groups 1 and 2 full: growth from group 0 must overflow-absorb
+        // rather than "onboarding" group 0 again through the wrap-around.
+        let mut k = KvpManager::with_capacity(10, 3, 50);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.reserve(1, 50);
+        k.reserve(2, 50);
+        let added = k.append_tokens(1, 30, 1.0);
+        assert!(added.is_empty());
+        assert_eq!(k.local_lengths(1), vec![(0, 30)]);
+        assert!(k.onboard_log_is_duplicate_free());
     }
 
     #[test]

@@ -41,15 +41,18 @@
 //! # Policy-aware KVP routing (section 7)
 //!
 //! Placement across KVP groups is the [`RoutingMode`]
-//! (`scheduler.routing`, `simulate --routing`): `blind` keeps the original
-//! least-loaded lockstep behavior (oracle parity), `round-robin` is the
+//! (`scheduler.routing`, `simulate --routing`): `blind` is least-loaded
+//! placement with every group in the simulator's cooperative set (the
+//! per-group clocks stay equal, degenerating to the original lockstep
+//! schedule — pinned by recorded golden snapshots), `round-robin` is the
 //! policy-blind pooled baseline, and `routed` delegates placement to the
 //! scheduling policy's [`SchedPolicy::route`] hook over per-group
 //! [`GroupView`] snapshots. Non-blind modes run the groups not holding the
 //! active sharded long request as an independent short-request serving
 //! pool, and a **preemptive** policy may additionally yield the *active*
 //! sharded long request at a chunk boundary ([`KvpManager::yield_active`]
-//! retains every per-group shard; resume is bit-exact).
+//! retains every per-group shard; resume is bit-exact). All three modes
+//! execute through the one pool-scheduled `Simulation::step`.
 
 pub mod arena;
 pub mod chunking;

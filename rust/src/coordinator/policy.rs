@@ -342,10 +342,12 @@ impl SchedPolicy for Lars {
 /// Index of the most urgent (minimum-priority) request in `queue` at time
 /// `now`, ties breaking toward the earlier index. Returns 0 — the FCFS
 /// head — for empty or singleton queues and for non-preemptive policies,
-/// which skip the scan entirely. This is the selection rule for the
-/// simulator's dedicated **long-request queue**, whose depth is the number
-/// of concurrent documents (small by construction); the per-group ready
-/// sets use the indexed [`ReadySet`](super::readyset::ReadySet) instead.
+/// which skip the scan entirely. This is the *canonical O(n) definition*
+/// of the selection rule; the simulator's long-request queue is served by
+/// the indexed [`ReadySet`](super::readyset::ReadySet) (bit-identical
+/// under the `(priority, enqueue-order)` rule, re-asserted by a
+/// `debug_assert` on every selection), and this scan remains as the
+/// differential oracle the unit tests exercise.
 pub fn select_most_urgent(
     policy: &dyn SchedPolicy,
     requests: &RequestArena,
@@ -372,7 +374,9 @@ pub fn select_most_urgent(
 /// executing** long request `active` at this chunk boundary? Returns the
 /// queue index of the strictly-more-urgent challenger, or `None` to keep
 /// running `active`. Strict inequality keeps FCFS-adjacent stability: a tie
-/// never evicts the request already holding KV shards on its groups.
+/// never evicts the request already holding KV shards on its groups. Like
+/// [`select_most_urgent`] this is the canonical scan definition; the
+/// simulator realizes the same rule over its indexed long-request queue.
 pub fn would_preempt_active(
     policy: &dyn SchedPolicy,
     requests: &RequestArena,

@@ -9,10 +9,11 @@
 //! *How* the serving group is chosen is the [`RoutingMode`]:
 //!
 //! * [`RoutingMode::Blind`] — least-loaded by outstanding tokens, the
-//!   pre-routing behavior every oracle-parity test pins down. Under this
-//!   mode the simulator also keeps its original lockstep iteration
-//!   semantics, so FCFS + blind stays bit-identical to
-//!   `sim::reference`.
+//!   pre-routing behavior the recorded golden snapshots pin down. Under
+//!   this mode the simulator runs **every** group in the cooperative set
+//!   of its single pool-scheduled step, so the per-group clocks stay equal
+//!   and the schedule degenerates to the original lockstep iteration
+//!   semantics.
 //! * [`RoutingMode::RoundRobin`] — strictly alternating placement, the
 //!   policy-blind baseline the routed comparison is measured against.
 //! * [`RoutingMode::Routed`] — placement delegated to the scheduling
@@ -27,10 +28,11 @@
 //!   the schedulers' deadline-critical urgency counters and the KVP
 //!   manager's capacity ledger, never a backlog rescan.
 //!
-//! The non-blind modes also switch the simulator to *pool scheduling*:
-//! groups not holding the active long request's KV shards iterate
-//! independently as a short-request serving pool instead of in lockstep
-//! with the sharded prefill.
+//! Every mode runs through the simulator's single pool-scheduled step; the
+//! non-blind modes narrow the cooperative set to the active long request's
+//! shard holders, so the remaining groups iterate independently as a
+//! short-request serving pool instead of in lockstep with the sharded
+//! prefill.
 //!
 //! State is flat: per-group load is a plain vector (groups are dense ids)
 //! and request placement is slot-indexed, so routing and release are O(1)
@@ -43,8 +45,9 @@ use crate::util::slotvec::SlotVec;
 /// Config/CLI-selectable placement strategy across KVP groups.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RoutingMode {
-    /// Least-loaded placement, lockstep iteration semantics (the default;
-    /// preserves oracle parity with `sim::reference`).
+    /// Least-loaded placement with every group in the cooperative set —
+    /// the per-group clocks stay equal, degenerating to the original
+    /// lockstep iteration semantics (the default).
     Blind,
     /// Policy-blind alternating placement with pool scheduling — the
     /// baseline the routed mode is compared against.
@@ -75,8 +78,9 @@ impl RoutingMode {
         }
     }
 
-    /// Non-blind modes run the independent short-request serving pool
-    /// (per-group iteration timing) instead of the lockstep schedule.
+    /// Non-blind modes narrow the cooperative set to the active shard
+    /// holders, running every other group as an independent short-request
+    /// serving pool; blind cooperates all groups (the lockstep barrier).
     pub fn pooled(self) -> bool {
         self != RoutingMode::Blind
     }

@@ -95,8 +95,8 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    /// FCFS scheduler (the non-preemptive default every oracle-parity test
-    /// relies on).
+    /// FCFS scheduler (the non-preemptive default the recorded golden
+    /// snapshots pin down).
     pub fn new(policy: Box<dyn ChunkPolicy>, max_batch: usize) -> Scheduler {
         Scheduler::with_policy(policy, Box::new(Fcfs), max_batch)
     }

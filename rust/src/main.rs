@@ -208,8 +208,11 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     );
     if s.routing_refusals > 0 {
         println!(
-            "capacity: {} admissions refused for KV room (deferred until capacity freed)",
-            s.routing_refusals
+            "capacity: {} admissions refused for KV room ({} deferred, \
+             wait p95 {} — retries in policy-priority order)",
+            s.routing_refusals,
+            s.n_deferred,
+            fmt_duration(s.deferral_wait_p95)
         );
     }
     Ok(())

@@ -94,14 +94,19 @@ pub struct Metrics {
     pub active_preemptions: u64,
     /// Admissions refused for lack of per-group KV capacity: the routing
     /// hook (`SchedPolicy::route`) found no fitting group, or older
-    /// refused admissions were already waiting (strict FIFO — a new
-    /// arrival queues behind them rather than taking the capacity that
+    /// refused admissions were already waiting (a new arrival joins the
+    /// priority-ordered deferred set rather than taking the capacity that
     /// frees). Each such request is counted once, when it is deferred —
     /// or overflow-placed with the check waived, for requests larger than
     /// a whole group's capacity. Always zero under blind routing or
-    /// unlimited capacity (the defaults, and all the reference core
-    /// supports — mirrored at zero in `sim::reference` by construction).
+    /// unlimited capacity (the defaults).
     pub routing_refusals: u64,
+    /// Wait times of capacity-deferred admissions: deferral (first
+    /// refusal) to successful placement, one sample per deferred request.
+    /// The deferred set is retried in scheduling-policy priority order, so
+    /// this distribution is what the deferred-queue urgency ordering is
+    /// judged by.
+    pub deferral_wait: Samples,
     /// Active-yield audit trail, in event order; dropped (like `iters`)
     /// when `keep_iter_records` is off — the counter stays exact.
     pub preemption_events: Vec<PreemptionEvent>,
@@ -143,6 +148,7 @@ impl Default for Metrics {
             preemptions: 0,
             active_preemptions: 0,
             routing_refusals: 0,
+            deferral_wait: Samples::new(),
             preemption_events: Vec::new(),
             group_busy_s: Vec::new(),
             group_prefill_tokens: Vec::new(),
@@ -168,6 +174,7 @@ impl Metrics {
             tbt: Samples::reservoir(reservoir, seed ^ 0x0074_6274),
             mfu: Samples::reservoir(reservoir, seed ^ 0x0066_7564),
             mbu: Samples::reservoir(reservoir, seed ^ 0x0062_7564),
+            deferral_wait: Samples::reservoir(reservoir, seed ^ 0x6465_6665),
             keep_iter_records: false,
             tbt_p99_stream: Some(P2Quantile::new(0.99)),
             ..Metrics::default()
@@ -181,9 +188,10 @@ impl Metrics {
         if self.first_iter_start.is_none() {
             self.first_iter_start = Some(rec.t - rec.dur_s);
         }
-        // max, not assignment: pooled-mode group iterations are recorded in
-        // group order within a step, not completion-time order. For the
-        // lockstep cores the stream is time-monotone, so this is identical.
+        // max, not assignment: pool-mode group iterations are recorded in
+        // group order within a decision instant, not completion-time order.
+        // For the blind barrier the stream is time-monotone, so this is
+        // identical to assignment.
         self.last_iter_t = self.last_iter_t.max(rec.t);
         if self.keep_iter_records {
             self.iters.push(rec);
@@ -234,6 +242,12 @@ impl Metrics {
         self.group_busy_s.iter().map(|&b| b / span).collect()
     }
 
+    /// Record the wait of one capacity-deferred admission, from deferral
+    /// to successful placement. Call once per deferred request.
+    pub fn record_deferral_wait(&mut self, s: f64) {
+        self.deferral_wait.add(s);
+    }
+
     pub fn record_tbt(&mut self, s: f64) {
         self.tbt.add(s);
         if s <= self.tbt_slo_s {
@@ -246,9 +260,10 @@ impl Metrics {
 
     /// Record everything a finished request contributes — its TBT samples
     /// (each judged against the TBT SLO), its TTFT, its deadline verdict,
-    /// and the finished count. The single definition both simulator cores
-    /// call, so their metric streams stay bit-identical (asserted by
-    /// `tests/sim_golden.rs`). Call exactly once per finished request.
+    /// and the finished count. One definition for every completion path,
+    /// so the metric stream is bit-deterministic (asserted by the recorded
+    /// golden snapshots in `tests/sim_golden.rs`). Call exactly once per
+    /// finished request.
     pub fn record_finished_request(&mut self, r: &Request) {
         let mut tbt_ok = true;
         for &s in &r.tbt_samples {
@@ -305,7 +320,7 @@ impl Metrics {
             tbt_p95: self.tbt.p95(),
             // In streaming mode the P² estimator saw every sample; the
             // reservoir's sparse tail is the fallback-only path. Exact mode
-            // (no estimator) is untouched — bit-identical to the reference.
+            // (no estimator) stays on the raw sample population.
             tbt_p99: match &self.tbt_p99_stream {
                 Some(q) if q.count() > 0 => q.value(),
                 _ => self.tbt.p99(),
@@ -339,6 +354,8 @@ impl Metrics {
             preemptions: self.preemptions,
             active_preemptions: self.active_preemptions,
             routing_refusals: self.routing_refusals,
+            n_deferred: self.deferral_wait.count(),
+            deferral_wait_p95: self.deferral_wait.p95(),
         }
     }
 }
@@ -373,6 +390,11 @@ pub struct MetricsSummary {
     /// Capacity-refused admissions (deferred or overflow-placed); zero
     /// outside routed mode with finite KV capacity.
     pub routing_refusals: u64,
+    /// Capacity-deferred admissions that were eventually placed (each
+    /// contributes one `deferral_wait` sample).
+    pub n_deferred: u64,
+    /// p95 of the deferral→placement wait (NaN when nothing deferred).
+    pub deferral_wait_p95: f64,
 }
 
 #[cfg(test)]
@@ -475,8 +497,28 @@ mod tests {
         assert_eq!(s.preemptions, 0);
         assert_eq!(s.active_preemptions, 0);
         assert_eq!(s.routing_refusals, 0);
+        assert_eq!(s.n_deferred, 0);
+        assert!(s.deferral_wait_p95.is_nan());
         assert!(m.preemption_events.is_empty());
         assert!(m.group_utilization().is_empty());
+    }
+
+    #[test]
+    fn deferral_waits_are_counted_and_summarized() {
+        let mut m = Metrics::new();
+        m.record_deferral_wait(0.5);
+        m.record_deferral_wait(2.0);
+        m.record_deferral_wait(1.0);
+        let s = m.summary();
+        assert_eq!(s.n_deferred, 3);
+        assert!((s.deferral_wait_p95 - 2.0).abs() < 0.2, "p95={}", s.deferral_wait_p95);
+        // streaming mode keeps the sample count exact under the reservoir
+        let mut lean = Metrics::streaming(2, 9);
+        for i in 0..10 {
+            lean.record_deferral_wait(i as f64);
+        }
+        assert_eq!(lean.deferral_wait.count(), 10);
+        assert!(lean.deferral_wait.len() <= 2);
     }
 
     #[test]

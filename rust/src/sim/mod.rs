@@ -17,24 +17,41 @@
 //! deadline attainment and goodput land in [`Metrics`].
 //!
 //! Routing: placement across KVP groups follows the deployment's
-//! [`RoutingMode`] (`scheduler.routing`). `blind` preserves the original
-//! least-loaded, lockstep-iteration semantics bit-for-bit (the oracle
-//! parity mode). The pooled modes (`round-robin`, `routed`) split each
-//! decision instant per group: the shard holders of the active long
-//! request iterate as one cooperative set while every other group serves
-//! short traffic independently (section 7), `routed` additionally placing
-//! requests — the long-request *primary* included — via the policy's
-//! urgency-aware [`GroupView`] hook and letting a preemptive policy yield
-//! the **active** sharded prefill at a chunk boundary (KV shards retained,
-//! resume bit-exact, recorded as
-//! [`PreemptionEvent`](crate::metrics::PreemptionEvent)s). Routed
-//! admission is **capacity-aware**: with a finite
+//! [`RoutingMode`] (`scheduler.routing`). All three modes run through the
+//! **single pool-scheduled execution path** of [`Simulation::step`]: every
+//! group owns an iteration clock (`free_at`), the members of the
+//! **cooperative set** iterate together (completing at the set's max exit
+//! plus the KVP merge charge), and every other group serves short traffic
+//! independently on its own clock (section 7). The modes differ only in
+//! how they configure that one path:
+//!
+//! * `blind` — least-loaded placement through the same [`GroupView`] hook
+//!   the routed mode uses (capacity filter waived), with **every** group a
+//!   member of the cooperative set. The per-group clocks therefore stay
+//!   equal and the schedule degenerates to the original lockstep iteration
+//!   semantics (the pre-pool behavior, pinned by the recorded golden
+//!   snapshots in `tests/sim_golden.rs`); the active long request holds
+//!   the cooperative slot to completion.
+//! * `round-robin` — strictly alternating placement; only the shard
+//!   holders of the active long request cooperate, the rest pool-serve.
+//! * `routed` — placement (the long-request *primary* included) delegated
+//!   to the policy's urgency-aware [`GroupView`] hook; a preemptive policy
+//!   may additionally yield the **active** sharded prefill at a chunk
+//!   boundary (KV shards retained, resume bit-exact, recorded as
+//!   [`PreemptionEvent`](crate::metrics::PreemptionEvent)s).
+//!
+//! Routed admission is **capacity-aware**: with a finite
 //! `scheduler.kvp_capacity_tokens`, the routing hook refuses groups
 //! without room for a request's full KV footprint; refusals are counted
 //! (`Metrics::routing_refusals`) and the admission deferred until capacity
-//! frees. Every per-group signal the hook reads — urgency counts, free
-//! capacity, load — is incrementally maintained O(1) state, so an
-//! admission costs O(groups) even at million-request backlogs.
+//! frees. The deferred set is ordered by the scheduling policy's own
+//! priority — FIFO under FCFS, most-urgent-first under SRPT/EDF/LARS — so
+//! a deadline-critical short never waits out a slack-rich one that merely
+//! arrived earlier, and each deferral's wait time is recorded in
+//! [`Metrics::deferral_wait`]. Every per-group signal the hook reads —
+//! urgency counts, free capacity, load — is incrementally maintained O(1)
+//! state, so an admission costs O(groups) even at million-request
+//! backlogs.
 //!
 //! Timing model:
 //! * every group's mixed batch flows through its stage pipeline
@@ -67,22 +84,24 @@
 //!   bit-identical to the O(n) priority scan it replaced — asserted by a
 //!   per-selection `debug_assert` and the differential harness in
 //!   `tests/invariants.rs`), so deep backlogs no longer pay a linear scan
-//!   per iteration; the `sched/select` bench records the win.
+//!   per iteration; the `sched/select` bench records the win. The
+//!   dedicated **long-request queue** and the **capacity-deferred
+//!   admission set** are `ReadySet`-indexed too, so document-heavy
+//!   workloads and deep deferral backlogs never regress to linear scans.
 //! * **Event-driven time advance** — when an instant has no runnable work
-//!   the clock jumps to the next event (arrival or earliest stage-0 free
-//!   time) instead of spinning in 1e-6 s bumps.
+//!   the clock jumps to the next event (arrival or earliest group
+//!   admission point) instead of spinning in 1e-6 s bumps.
 //! * **Streaming metrics** — `SimOptions::metrics_reservoir` switches
 //!   [`Metrics`] to reservoir-sampled percentiles with the per-iteration
 //!   trace dropped, bounding memory on multi-million-sample runs; by
-//!   default metrics are exact and bit-identical to the pre-arena
-//!   simulator (asserted by `tests/sim_golden.rs` against
-//!   [`reference::ReferenceSimulation`]).
+//!   default metrics are exact and **bit-deterministic**: the recorded
+//!   golden snapshots in `tests/sim_golden.rs` assert identical metric
+//!   streams across runs for every policy × routing combination.
 //!
-//! Benches: `sim/mixed 100K-prefill + 8 decodes` (and its `[reference]`
-//! twin) plus `sim/throughput decode-stream` and `sim/million mixed` live
-//! in `benches/hotpath.rs`, which records results to `BENCH_sim.json`.
+//! Benches: `sim/mixed 100K-prefill + 8 decodes` plus `sim/throughput
+//! decode-stream` and `sim/million mixed` live in `benches/hotpath.rs`,
+//! which records results to `BENCH_sim.json`.
 
-pub mod reference;
 pub mod throughput;
 
 use std::collections::VecDeque;
@@ -94,11 +113,13 @@ use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::scheduler::{BatchPlan, Scheduler};
 use crate::coordinator::spp::PipelineTimeline;
 use crate::coordinator::{
-    AdaptiveChunk, KvpManager, RequestArena, Router, RoutingMode, Slot, StaticChunk, Topology,
+    AdaptiveChunk, KvpManager, ReadySet, RequestArena, Router, RoutingMode, Slot, StaticChunk,
+    Topology,
 };
 use crate::kvcache::{GroupId, RequestId};
 use crate::metrics::{IterRecord, Metrics};
 use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
+use crate::util::slotvec::SlotVec;
 use crate::workload::RequestSpec;
 
 /// Simulation options beyond the deployment config.
@@ -136,8 +157,7 @@ impl Default for SimOptions {
 const EST_CHUNK: u64 = 4096;
 
 /// Perf-model estimate of a request's isolated prefill time on one replica
-/// (dense SPP pipelining at the deployment's depth). Both simulator cores
-/// use this same estimate so their deadline state is bit-identical.
+/// (dense SPP pipelining at the deployment's depth).
 fn est_prefill_s(pm: &PerfModel, prompt_len: u64) -> f64 {
     pm.prefill_time_spp(prompt_len, EST_CHUNK)
 }
@@ -251,26 +271,37 @@ pub struct Simulation {
     retired: Vec<Request>,
     pending: VecDeque<RequestSpec>,
     /// Routed-mode admissions refused for lack of per-group KV capacity,
-    /// waiting for capacity to free. Strict FIFO: the head is retried at
-    /// every decision instant, and while anything waits here new routed
-    /// arrivals queue behind it (they would otherwise consume every token
-    /// that frees and starve the head). Each deferral was counted in
-    /// `Metrics::routing_refusals`.
-    deferred: VecDeque<Slot>,
+    /// waiting for capacity to free. Indexed by the scheduling policy's
+    /// priority: the most urgent deferred request is retried at every
+    /// decision instant, and while it does not fit nothing less urgent may
+    /// take the capacity that frees (the anti-starvation blocking rule,
+    /// generalizing the old strict FIFO head-block — which FCFS still
+    /// degenerates to). Each deferral was counted in
+    /// `Metrics::routing_refusals`; placement records the wait into
+    /// `Metrics::deferral_wait`.
+    deferred: ReadySet,
+    /// Deferral start time per deferred slot (the wait-time numerator).
+    deferred_since: SlotVec<f64>,
     /// Per-group short-request schedulers.
     scheds: Vec<Scheduler>,
     timelines: Vec<PipelineTimeline>,
-    long_queue: VecDeque<Slot>,
+    /// Queued long (KVP-sharded) requests, indexed by the scheduling
+    /// policy's priority (the same `ReadySet` machinery as the per-group
+    /// prefill queues), so document-heavy workloads select the next
+    /// cooperative request in O(log n) instead of the old O(n) scan.
+    long_queue: ReadySet,
     active_long: Option<Slot>,
     kvp_mgr: KvpManager,
     router: Router,
-    /// Placement mode across KVP groups (`scheduler.routing`). `Blind`
-    /// keeps the lockstep oracle-parity semantics; the pooled modes run
-    /// non-sharding groups as an independent short-request serving pool
-    /// with per-group iteration timing and active-long preemption.
+    /// Placement mode across KVP groups (`scheduler.routing`). All modes
+    /// share the single pool-scheduled [`Self::step`]; `Blind` runs every
+    /// group in the cooperative set (clocks stay equal — the original
+    /// lockstep schedule) while the pooled modes cooperate only the shard
+    /// holders and let the rest serve shorts independently.
     routing: RoutingMode,
-    /// Pooled mode only: the earliest time each group can form its next
-    /// batch (its previous iteration's admission point).
+    /// The earliest time each group can form its next batch (its previous
+    /// iteration's admission point). Under blind routing all entries stay
+    /// equal — the lockstep degeneration.
     free_at: Vec<f64>,
     pub metrics: Metrics,
     now: f64,
@@ -279,7 +310,6 @@ pub struct Simulation {
     group_plans: Vec<BatchPlan>,
     shape: BatchShape,
     combined: BatchShape,
-    exits: Vec<f64>,
     long_ctxs: Vec<u64>,
     participating: Vec<(GroupId, u64)>,
     finished_buf: Vec<Slot>,
@@ -311,16 +341,19 @@ impl Simulation {
         metrics.tbt_slo_s = dep.slo.tbt_s;
         let sched_kind = dep.scheduler.policy;
         let routing = dep.scheduler.routing;
+        let sched_policy = sched_kind.build();
+        let key_shape = sched_policy.key_shape();
         Simulation {
             pm,
             layers_per_stage,
             policy,
-            sched_policy: sched_kind.build(),
+            sched_policy,
             topo,
             requests: RequestArena::new(),
             retired: Vec::new(),
             pending: pending.into(),
-            deferred: VecDeque::new(),
+            deferred: ReadySet::new(key_shape),
+            deferred_since: SlotVec::new(),
             scheds: (0..kvp_groups)
                 .map(|_| {
                     Scheduler::with_policy(
@@ -333,7 +366,7 @@ impl Simulation {
             timelines: (0..kvp_groups)
                 .map(|_| PipelineTimeline::new(dep.parallel.spp.max(1) as usize, 0.0))
                 .collect(),
-            long_queue: VecDeque::new(),
+            long_queue: ReadySet::new(key_shape),
             active_long: None,
             kvp_mgr: KvpManager::with_capacity(
                 dep.scheduler.kvp_onboard_threshold,
@@ -348,7 +381,6 @@ impl Simulation {
             group_plans: (0..kvp_groups).map(|_| BatchPlan::default()).collect(),
             shape: BatchShape::default(),
             combined: BatchShape::default(),
-            exits: vec![0.0; kvp_groups as usize],
             long_ctxs: Vec::new(),
             participating: Vec::new(),
             finished_buf: Vec::new(),
@@ -360,13 +392,22 @@ impl Simulation {
 
     fn admit_arrivals(&mut self) {
         // Retry capacity-deferred admissions first: capacity may have
-        // freed since the last decision instant, and FIFO retry keeps
-        // deferral fair. O(1) when nothing is deferred.
-        while let Some(&slot) = self.deferred.front() {
+        // freed since the last decision instant. Retries pop in the
+        // scheduling policy's priority order (FIFO under FCFS), and while
+        // the most urgent deferred request does not fit, nothing less
+        // urgent may take the capacity that frees — the anti-starvation
+        // blocking rule. O(1) when nothing is deferred.
+        while let Some(slot) =
+            self.deferred
+                .select(self.sched_policy.as_ref(), &self.requests, self.now)
+        {
             if !self.place_short_routed(slot, false) {
                 break;
             }
-            self.deferred.pop_front();
+            self.deferred.remove(slot);
+            if let Some(since) = self.deferred_since.remove(slot as usize) {
+                self.metrics.record_deferral_wait(self.now - since);
+            }
         }
         while let Some(spec) = self.pending.front() {
             if spec.arrival_s > self.now {
@@ -386,27 +427,12 @@ impl Simulation {
                 self.admit_short(slot, spec.prompt_len);
             }
         }
-        // Blind mode: the next long request is selected here, once, and
-        // holds the cooperative slot to completion (minimum policy priority
-        // over the long queue; FCFS = the front, exactly the pre-policy
-        // behavior). Pooled modes instead re-evaluate ownership of the slot
-        // at every chunk boundary in `step_pooled`, which is what makes the
-        // *active* request preemptible.
-        if !self.routing.pooled() && self.active_long.is_none() && !self.long_queue.is_empty() {
-            let best = policy::select_most_urgent(
-                self.sched_policy.as_ref(),
-                &self.requests,
-                &self.long_queue,
-                self.now,
-            );
-            self.active_long = self.long_queue.remove(best);
-        }
     }
 
     /// Admit a long (KVP-sharded) request: claim a primary group, onboard
     /// it with the KVP manager, and queue it for the cooperative slot. The
-    /// primary anchors the first shard and the lockstep iteration set; KV
-    /// grows across groups via the manager regardless of where it starts.
+    /// primary anchors the first shard and the cooperative set; KV grows
+    /// across groups via the manager regardless of where it starts.
     /// Blind and round-robin modes keep least-loaded primaries; `routed`
     /// places the primary through the same policy hook short requests use
     /// (urgency-aware, avoiding the active document's groups), with the
@@ -434,10 +460,24 @@ impl Simulation {
             self.router.route_to(slot, prompt_len, g);
             g
         } else {
-            self.router.route(slot, prompt_len)
+            // Blind / round-robin primaries are least-loaded, through the
+            // same GroupView hook routed mode uses (capacity waived).
+            self.place_least_loaded(slot, prompt_len)
         };
         self.kvp_mgr.onboard_request(slot, ext_id, g, self.now);
-        self.long_queue.push_back(slot);
+        self.long_queue
+            .push(slot, self.sched_policy.as_ref(), &self.requests);
+    }
+
+    /// Least-loaded placement over the [`GroupView`] snapshots with the
+    /// capacity filter waived (`need = 0`): the pre-pool blind rule —
+    /// min `(load, group)` — expressed through the same routing-hook state
+    /// every other placement reads.
+    fn place_least_loaded(&mut self, slot: Slot, prompt_len: u64) -> GroupId {
+        self.fill_group_views();
+        let g = policy::route_least_loaded(&self.views, 0).expect("deployment has a group");
+        self.router.route_to(slot, prompt_len, g);
+        g
     }
 
     /// Admit a short request to a group scheduler per the routing mode.
@@ -447,7 +487,10 @@ impl Simulation {
     fn admit_short(&mut self, slot: Slot, prompt_len: u64) {
         match self.routing {
             RoutingMode::Blind => {
-                let g = self.router.route(slot, prompt_len);
+                // The folded blind mode: least-loaded over GroupViews,
+                // capacity-blind — bit-identical placement to the old
+                // dedicated lockstep path.
+                let g = self.place_least_loaded(slot, prompt_len);
                 self.reserve_short(slot, g);
                 self.scheds[g as usize].enqueue(slot, &self.requests);
             }
@@ -457,23 +500,34 @@ impl Simulation {
                 self.scheds[g as usize].enqueue(slot, &self.requests);
             }
             RoutingMode::Routed => {
-                // Strict FIFO under capacity pressure: while older
-                // admissions wait for room, a new arrival queues behind
-                // them without attempting placement — otherwise it would
-                // take every token that frees and starve the queue head.
-                // Requests larger than a whole group's capacity skip the
-                // queue entirely: waiting can never make them placeable,
-                // so they go straight to overflow placement.
+                // Under capacity pressure a new arrival joins the deferred
+                // set without attempting placement — letting it place
+                // directly would take capacity the retry loop is about to
+                // hand to a more urgent waiter. The set is ordered by the
+                // policy's priority, so a deadline-critical arrival is
+                // still retried ahead of slack-rich earlier deferrals
+                // (strict FIFO under FCFS). Requests larger than a whole
+                // group's capacity skip the set entirely: waiting can
+                // never make them placeable, so they go straight to
+                // overflow placement.
                 let oversized = policy::kv_need(self.requests.get(slot))
                     > self.dep.scheduler.kvp_capacity_tokens;
                 if !oversized && !self.deferred.is_empty() {
                     self.metrics.routing_refusals += 1;
-                    self.deferred.push_back(slot);
+                    self.defer(slot);
                 } else if !self.place_short_routed(slot, true) {
-                    self.deferred.push_back(slot);
+                    self.defer(slot);
                 }
             }
         }
+    }
+
+    /// Park a refused routed admission in the priority-ordered deferred
+    /// set, stamping the deferral start for the wait-time metric.
+    fn defer(&mut self, slot: Slot) {
+        self.deferred
+            .push(slot, self.sched_policy.as_ref(), &self.requests);
+        self.deferred_since.insert(slot as usize, self.now);
     }
 
     fn reserve_short(&mut self, slot: Slot, g: GroupId) {
@@ -582,19 +636,30 @@ impl Simulation {
         }
     }
 
-    /// The next instant anything can happen: the next arrival or the
-    /// earliest pipeline stage-0 free time beyond `now`. Replaces the
-    /// degenerate 1e-6 s busy-wait bumps of the pre-arena simulator; the
-    /// tiny bump survives only as a last-resort guarantee of progress.
-    fn next_event_time(&self) -> f64 {
+    /// The next decision instant: the earliest group admission point or
+    /// pending arrival after `now`. Replaces the degenerate 1e-6 s
+    /// busy-wait bumps of the pre-arena simulator; the tiny bump survives
+    /// only as a last-resort guarantee of progress.
+    ///
+    /// The pooled modes interleave per-group clocks with arrivals (a new
+    /// request may be routable to an idle pool group mid-iteration). The
+    /// blind barrier instead admits strictly at iteration boundaries — the
+    /// lockstep contract the retired core enforced structurally (its clock
+    /// jumped straight to the iteration end), and what keeps blind
+    /// admission timing, long-request activation instants, and the
+    /// onboarding log bit-exact with the pre-refactor path. Arrivals are
+    /// consulted under the barrier only when no group has a pending
+    /// admission point (the fleet is idle).
+    fn next_event(&self) -> f64 {
         let mut t = f64::INFINITY;
-        if let Some(spec) = self.pending.front() {
-            t = t.min(spec.arrival_s);
-        }
-        for tl in &self.timelines {
-            let f = tl.stage0_free();
+        for &f in &self.free_at {
             if f > self.now {
                 t = t.min(f);
+            }
+        }
+        if self.routing.pooled() || !t.is_finite() {
+            if let Some(spec) = self.pending.front() {
+                t = t.min(spec.arrival_s);
             }
         }
         if t.is_finite() && t > self.now {
@@ -629,66 +694,110 @@ impl Simulation {
         self.now
     }
 
-    /// One simulation step: the original lockstep iteration under blind
-    /// routing, or one pooled decision instant (independent per-group
-    /// iterations + cooperative coop-set iteration) under the routed modes.
+    /// One pool-scheduled decision instant — the single execution path
+    /// every routing mode runs through.
+    ///
+    /// The **cooperative set** iterates together (each member's own mixed
+    /// batch, the shard holders additionally carrying the sharded chunk's
+    /// partial attention) and completes at the set's max exit plus the KVP
+    /// merge charge. Every other group is an **independent short-request
+    /// pool** (paper section 7): it forms, executes, and completes its own
+    /// mixed batches on its own clock, so a short request routed to an
+    /// idle group never waits out a document chunk on a sharding group.
+    ///
+    /// Membership is the routing mode's one degree of freedom: the pooled
+    /// modes (`round-robin`, `routed`) cooperate exactly the shard holders
+    /// of the active long request, while `blind` makes **every** group a
+    /// member — the per-group clocks then stay equal and the schedule
+    /// degenerates to the original lockstep iteration semantics (one
+    /// combined iteration record per instant, a single global re-admission
+    /// point).
     fn step(&mut self) {
-        if self.routing.pooled() {
-            self.step_pooled()
-        } else {
-            self.step_lockstep()
-        }
-    }
-
-    /// One lockstep iteration across the cooperating set.
-    fn step_lockstep(&mut self) {
         let n_groups = self.scheds.len();
         let slo = self.dep.slo;
+        // Blind barrier: every group is a cooperative-set member.
+        let barrier = !self.routing.pooled();
+        self.reselect_active_long();
 
-        // ---- long-request work selection -------------------------------
+        // Shard holders of the active long request.
+        self.participating.clear();
+        if let Some(slot) = self.active_long {
+            if let Some(m) = self.kvp_mgr.shard_map(slot) {
+                for &(g, _, n) in &m.shards {
+                    self.participating.push((g, n));
+                }
+            }
+        }
+        // The cooperative set runs only when every member is idle (a chunk
+        // boundary). Under the barrier that is all groups; otherwise the
+        // shard holders (no holders → no cooperative iteration).
+        let coop_ready = if barrier {
+            self.free_at.iter().all(|&f| f <= self.now)
+        } else {
+            !self.participating.is_empty()
+                && self
+                    .participating
+                    .iter()
+                    .all(|&(g, _)| self.free_at[g as usize] <= self.now)
+        };
+
+        // ---- long-request work selection (whole coop set must be idle) --
         let long_slot = self.active_long;
         let mut long_chunk: Option<u64> = None;
         let mut long_decode = false;
-        if let Some(slot) = long_slot {
-            let r = self.requests.get(slot);
-            match r.phase {
-                Phase::Queued | Phase::Prefilling => {
-                    // Decode contexts seen by the chunk policy: the resident
-                    // decode load across the cooperating groups, gathered
-                    // from the schedulers' incrementally-tracked context
-                    // lists (no per-request scan, no per-step allocation).
-                    let (kv_done, remaining, dl) = (
-                        r.kv_len(),
-                        r.remaining_prefill(),
-                        r.deadline_remaining_s(self.now),
-                    );
-                    self.long_ctxs.clear();
-                    for sched in &self.scheds {
-                        self.long_ctxs.extend_from_slice(sched.decode_ctxs());
+        if coop_ready {
+            if let Some(slot) = long_slot {
+                let r = self.requests.get(slot);
+                match r.phase {
+                    Phase::Queued | Phase::Prefilling => {
+                        // Decode contexts seen by the chunk policy: the
+                        // resident decode load across the groups, gathered
+                        // from the schedulers' incrementally-tracked context
+                        // lists (no per-request scan, no allocation).
+                        let (kv_done, remaining, dl) = (
+                            r.kv_len(),
+                            r.remaining_prefill(),
+                            r.deadline_remaining_s(self.now),
+                        );
+                        self.long_ctxs.clear();
+                        for sched in &self.scheds {
+                            self.long_ctxs.extend_from_slice(sched.decode_ctxs());
+                        }
+                        let c = self
+                            .policy
+                            .next_chunk(kv_done, remaining, &self.long_ctxs, dl, &self.pm, &slo);
+                        long_chunk = Some(c.max(1).min(remaining));
                     }
-                    let c = self
-                        .policy
-                        .next_chunk(kv_done, remaining, &self.long_ctxs, dl, &self.pm, &slo);
-                    long_chunk = Some(c.max(1).min(remaining));
+                    Phase::Decoding => long_decode = true,
+                    Phase::Finished => {}
                 }
-                Phase::Decoding => long_decode = true,
-                Phase::Finished => {}
             }
         }
         let long_nq = long_chunk.unwrap_or(if long_decode { 1 } else { 0 });
-        self.participating.clear();
-        if let Some(slot) = long_slot {
-            if long_nq > 0 {
-                if let Some(m) = self.kvp_mgr.shard_map(slot) {
-                    for &(g, _, n) in &m.shards {
-                        self.participating.push((g, n));
-                    }
-                }
-            }
-        }
 
-        // ---- per-group batch formation ----------------------------------
+        // ---- batch formation + flow -------------------------------------
+        let mut coop_ran = false;
+        let mut coop_exit = self.now;
+        let mut coop_first = self.now;
+        let mut coop_any_decode = long_decode;
+        let mut coop_decodes = 0usize;
+        let mut coop_chunk: Option<u64> = None;
+        self.combined.clear(); // accumulates the coop set's shapes
         for g in 0..n_groups {
+            self.group_plans[g].clear();
+            let holder = self.participating.iter().any(|&(gg, _)| gg as usize == g);
+            let member = barrier || holder;
+            let run_now = if member {
+                // Pooled holders additionally wait for actual long work —
+                // unreachable in practice (an active request always has a
+                // chunk or a decode pending), kept as a guard.
+                coop_ready && (barrier || long_nq > 0)
+            } else {
+                self.free_at[g] <= self.now
+            };
+            if !run_now {
+                continue;
+            }
             self.scheds[g].next_batch_into(
                 &self.requests,
                 &self.pm,
@@ -696,29 +805,21 @@ impl Simulation {
                 self.now,
                 &mut self.group_plans[g],
             );
-        }
-
-        // ---- build shapes and flow through pipelines ---------------------
-        let mut any_decode = long_decode;
-        self.exits.resize(n_groups, self.now);
-        self.exits.fill(self.now);
-        let mut max_stage0_exit = self.now;
-        let mut worked = false;
-        self.combined.clear();
-        for g in 0..n_groups {
             self.scheds[g].batch_shape_into(
                 &self.group_plans[g],
                 &self.requests,
                 Self::short_local_kv,
                 &mut self.shape,
             );
-            // Long-request share on this group: partial attention over the
-            // local shard (queries broadcast to every participating group).
-            if let Some(&(_, local)) = self
-                .participating
-                .iter()
-                .find(|&&(gg, _)| gg as usize == g)
-            {
+            if holder {
+                // Long-request share on this group: partial attention over
+                // the local shard (queries broadcast to every holder).
+                let local = self
+                    .participating
+                    .iter()
+                    .find(|&&(gg, _)| gg as usize == g)
+                    .expect("holder has a shard")
+                    .1;
                 if let Some(c) = long_chunk {
                     self.shape.prefills.push(PrefillWork {
                         chunk: c,
@@ -733,93 +834,141 @@ impl Simulation {
             if self.shape.is_empty() {
                 continue;
             }
-            worked = true;
-            any_decode |= !self.shape.decodes.is_empty();
-            self.combined.extend_from(&self.shape);
+            let has_decode = !self.shape.decodes.is_empty();
             let st = self.pm.stage_time(&self.shape, self.layers_per_stage).total();
             let hop = self.pm.stage_hop_s(self.shape.tokens());
-            let dense_ok = self.shape.decodes.is_empty();
-            let ready = if dense_ok {
-                self.timelines[g].stage0_free().max(self.now)
-            } else {
+            let ready = if has_decode {
                 self.now
+            } else {
+                self.timelines[g].stage0_free().max(self.now)
             };
-            let (first_exit, exit) = self.timelines[g].flow_compact(ready, |_| st, hop);
-            max_stage0_exit = max_stage0_exit.max(first_exit);
-            self.exits[g] = exit;
-            // Per-group utilization split (mirrored bit-identically by the
-            // reference core): this group's own execution window and the
-            // tokens it processed, before the coop merge charge.
+            let (first, exit) = self.timelines[g].flow_compact(ready, |_| st, hop);
             let prefill_toks: u64 = self.shape.prefills.iter().map(|p| p.chunk).sum();
-            self.metrics.record_group_iter(
-                g,
-                exit - self.now,
-                prefill_toks,
-                self.shape.decodes.len() as u64,
-            );
-        }
-
-        if !worked {
-            // nothing runnable this instant: jump to the next event.
-            self.now = self.next_event_time();
-            return;
-        }
-
-        let mut iter_end = self.exits.iter().cloned().fold(self.now, f64::max);
-        // KVP merge charge for cooperative work.
-        if self.participating.len() > 1 && long_nq > 0 {
-            iter_end += self.pm.kvp_merge_s(long_nq);
-        }
-
-        // Next admission point: dense for pure-prefill, serialized otherwise.
-        let t_next = if any_decode { iter_end } else { max_stage0_exit };
-        let dur = iter_end - self.now;
-
-        // ---- bookkeeping --------------------------------------------------
-        // Short requests finish per their group plans (plans stay owned by
-        // the simulator's scratch, so no clone is needed to appease the
-        // borrow checker).
-        for g in 0..n_groups {
-            self.complete_group_plan(g, iter_end);
-        }
-        // Long request progress.
-        if let Some(slot) = long_slot {
-            self.complete_long_progress(slot, long_chunk, long_decode, iter_end);
-        }
-
-        let active_gpus = match long_slot {
-            Some(slot) => self
-                .topo
-                .gpus_active(self.kvp_mgr.active_groups(slot).max(1)),
-            None => self.topo.parallel.workers_per_replica(),
-        };
-        if dur > 0.0 {
+            let n_decodes = self.shape.decodes.len();
             self.metrics
-                .mfu
-                .add(self.pm.mfu(&self.combined, dur, active_gpus.max(1)));
-            self.metrics
-                .mbu
-                .add(self.pm.mbu(&self.combined, dur, active_gpus.max(1)));
+                .record_group_iter(g, exit - self.now, prefill_toks, n_decodes as u64);
+            if member {
+                coop_ran = true;
+                coop_exit = coop_exit.max(exit);
+                coop_first = coop_first.max(first);
+                coop_any_decode |= has_decode;
+                coop_decodes += n_decodes;
+                if coop_chunk.is_none() {
+                    // The combined record reports the sharded chunk; under
+                    // the barrier it falls back to the first member's own
+                    // prefill chunk (the lockstep record's rule).
+                    coop_chunk = long_chunk.or(if barrier {
+                        self.group_plans[g].prefill.map(|(_, c)| c)
+                    } else {
+                        None
+                    });
+                }
+                self.combined.extend_from(&self.shape);
+            } else {
+                // Independent pool iteration: this group's requests
+                // complete at its own exit, on its own clock.
+                let dur = exit - self.now;
+                let gpus = self.topo.parallel.workers_per_replica();
+                if dur > 0.0 {
+                    self.metrics.mfu.add(self.pm.mfu(&self.shape, dur, gpus.max(1)));
+                    self.metrics.mbu.add(self.pm.mbu(&self.shape, dur, gpus.max(1)));
+                }
+                self.metrics.record_iter(IterRecord {
+                    t: exit,
+                    dur_s: dur,
+                    chunk: self.group_plans[g].prefill.map(|(_, c)| c),
+                    n_decodes,
+                    active_gpus: gpus,
+                });
+                self.free_at[g] = if has_decode { exit } else { first };
+                self.complete_group_plan(g, exit);
+            }
         }
-        self.metrics.record_iter(IterRecord {
-            t: iter_end,
-            dur_s: dur,
-            chunk: long_chunk.or_else(|| {
-                self.group_plans
-                    .iter()
-                    .find_map(|p| p.prefill.map(|(_, c)| c))
-            }),
-            n_decodes: self.combined.decodes.len(),
-            active_gpus,
-        });
-        self.now = t_next;
+
+        // ---- cooperative completion -------------------------------------
+        if coop_ran {
+            if self.participating.len() > 1 && long_nq > 0 {
+                coop_exit += self.pm.kvp_merge_s(long_nq);
+            }
+            let dur = coop_exit - self.now;
+            // Dense SPP admission survives for pure-prefill coop batches:
+            // the set re-admits at its max stage-0 exit, not full drain.
+            let free = if coop_any_decode { coop_exit } else { coop_first };
+            if barrier {
+                // Lockstep accounting convention, kept bit-exact with the
+                // pre-pool blind core: complete first, account after — the
+                // combined record's `active_gpus` reflects the *post-growth*
+                // shard count (the Fig. 19 staircase rule).
+                for g in 0..n_groups {
+                    self.free_at[g] = free;
+                    self.complete_group_plan(g, coop_exit);
+                }
+                if let Some(slot) = long_slot {
+                    self.complete_long_progress(slot, long_chunk, long_decode, coop_exit);
+                }
+                let gpus = match long_slot {
+                    Some(slot) => self
+                        .topo
+                        .gpus_active(self.kvp_mgr.active_groups(slot).max(1)),
+                    None => self.topo.parallel.workers_per_replica(),
+                };
+                if dur > 0.0 {
+                    self.metrics
+                        .mfu
+                        .add(self.pm.mfu(&self.combined, dur, gpus.max(1)));
+                    self.metrics
+                        .mbu
+                        .add(self.pm.mbu(&self.combined, dur, gpus.max(1)));
+                }
+                self.metrics.record_iter(IterRecord {
+                    t: coop_exit,
+                    dur_s: dur,
+                    chunk: coop_chunk,
+                    n_decodes: coop_decodes,
+                    active_gpus: gpus,
+                });
+            } else {
+                // Pooled accounting convention: the coop record reflects
+                // the shard holders that actually iterated (pre-growth).
+                let gpus = self.topo.gpus_active(self.participating.len().max(1) as u32);
+                if dur > 0.0 {
+                    self.metrics
+                        .mfu
+                        .add(self.pm.mfu(&self.combined, dur, gpus.max(1)));
+                    self.metrics
+                        .mbu
+                        .add(self.pm.mbu(&self.combined, dur, gpus.max(1)));
+                }
+                self.metrics.record_iter(IterRecord {
+                    t: coop_exit,
+                    dur_s: dur,
+                    chunk: coop_chunk,
+                    n_decodes: coop_decodes,
+                    active_gpus: gpus,
+                });
+                for i in 0..self.participating.len() {
+                    let g = self.participating[i].0 as usize;
+                    self.free_at[g] = free;
+                }
+                for i in 0..self.participating.len() {
+                    let g = self.participating[i].0 as usize;
+                    self.complete_group_plan(g, coop_exit);
+                }
+                if let Some(slot) = long_slot {
+                    self.complete_long_progress(slot, long_chunk, long_decode, coop_exit);
+                }
+            }
+        }
+
+        // Whether or not anything ran, the next decision instant is the
+        // earliest group admission point or arrival.
+        self.now = self.next_event();
     }
 
     /// Apply one group's completed plan at time `t`: request transitions
     /// via the group scheduler, finished-request metrics, router release,
-    /// arena retirement. Shared by the lockstep core (all groups complete
-    /// at the global iteration end) and the pooled core (each pool group
-    /// completes at its own exit).
+    /// arena retirement. Cooperative-set members complete together at the
+    /// set's exit; independent pool groups each complete at their own.
     fn complete_group_plan(&mut self, g: usize, t: f64) {
         if self.group_plans[g].is_empty() {
             return;
@@ -886,34 +1035,37 @@ impl Simulation {
         }
     }
 
-    /// Pooled-mode ownership of the cooperative long-request slot, called
-    /// at the top of every pooled step. Activates the most urgent queued
-    /// long request when the slot is empty, and — under a preemptive
-    /// policy, at a chunk boundary (every shard-holding group idle) —
-    /// yields the **actively prefilling** request to a strictly more
-    /// urgent challenger. The yielded request keeps all of its per-group
-    /// KV shards ([`KvpManager::yield_active`]) and its queue eligibility;
-    /// resuming is just winning the slot back, from the exact boundary.
-    fn reselect_active_long_pooled(&mut self) {
+    /// Ownership of the cooperative long-request slot, called at the top
+    /// of every step. Activates the most urgent queued long request when
+    /// the slot is empty — served by the indexed [`ReadySet`] in O(log n)
+    /// under the canonical `(priority, enqueue-order)` rule, bit-identical
+    /// to the O(n) scan it replaced (re-asserted by a `debug_assert` on
+    /// every selection). Under a **pooled** routing mode with a preemptive
+    /// policy, at a chunk boundary (every shard-holding group idle), the
+    /// **actively prefilling** request additionally yields to a strictly
+    /// more urgent challenger; the yielded request keeps all of its
+    /// per-group KV shards ([`KvpManager::yield_active`]) and its queue
+    /// eligibility — resuming is just winning the slot back, from the
+    /// exact boundary. Under blind routing the active request holds the
+    /// slot to completion (the original lockstep contract).
+    fn reselect_active_long(&mut self) {
         let active = match self.active_long {
             None => {
-                if self.long_queue.is_empty() {
-                    return;
-                }
-                let best = policy::select_most_urgent(
-                    self.sched_policy.as_ref(),
-                    &self.requests,
-                    &self.long_queue,
-                    self.now,
-                );
-                let slot = self.long_queue.remove(best).expect("index in range");
-                self.kvp_mgr.resume(slot, self.now);
-                self.active_long = Some(slot);
+                let best = match self.select_queued_long() {
+                    Some(s) => s,
+                    None => return,
+                };
+                self.long_queue.remove(best);
+                self.kvp_mgr.resume(best, self.now);
+                self.active_long = Some(best);
                 return;
             }
             Some(a) => a,
         };
-        if self.long_queue.is_empty() {
+        if !self.routing.pooled()
+            || !self.sched_policy.preemptive()
+            || self.long_queue.is_empty()
+        {
             return;
         }
         // Preemption is legal only at a chunk boundary: every group holding
@@ -935,33 +1087,21 @@ impl Simulation {
             Phase::Queued => {
                 // Never ran a chunk yet: swapping it out is a queued
                 // re-ordering, not an active yield — no event recorded.
-                if policy::would_preempt_active(
-                    self.sched_policy.as_ref(),
-                    &self.requests,
-                    active,
-                    &self.long_queue,
-                    self.now,
-                )
-                .is_some()
-                {
-                    self.long_queue.push_back(active);
+                if self.challenger_beats(active).is_some() {
+                    self.long_queue
+                        .push(active, self.sched_policy.as_ref(), &self.requests);
                     self.active_long = None;
-                    self.reselect_active_long_pooled();
+                    self.reselect_active_long();
                 }
             }
             Phase::Prefilling => {
-                if let Some(best) = policy::would_preempt_active(
-                    self.sched_policy.as_ref(),
-                    &self.requests,
-                    active,
-                    &self.long_queue,
-                    self.now,
-                ) {
-                    let challenger = self.long_queue.remove(best).expect("index in range");
+                if let Some(challenger) = self.challenger_beats(active) {
+                    self.long_queue.remove(challenger);
                     self.kvp_mgr.yield_active(active, self.now);
                     self.metrics
                         .record_active_preemption(self.now, self.requests.get(active).id);
-                    self.long_queue.push_back(active);
+                    self.long_queue
+                        .push(active, self.sched_policy.as_ref(), &self.requests);
                     self.kvp_mgr.resume(challenger, self.now);
                     self.active_long = Some(challenger);
                 }
@@ -969,220 +1109,39 @@ impl Simulation {
         }
     }
 
-    /// Next decision instant in pooled mode: the earliest group admission
-    /// point or pending arrival after `now` (the 1e-6 bump survives only
-    /// as the last-resort guarantee of progress, as in the lockstep core).
-    fn next_event_pooled(&self) -> f64 {
-        let mut t = f64::INFINITY;
-        if let Some(spec) = self.pending.front() {
-            t = t.min(spec.arrival_s);
-        }
-        for &f in &self.free_at {
-            if f > self.now {
-                t = t.min(f);
-            }
-        }
-        if t.is_finite() && t > self.now {
-            t
-        } else {
-            self.now + 1e-6
-        }
+    /// Most urgent queued long request per the indexed ready set, with the
+    /// standing differential proof against the O(n) scan.
+    fn select_queued_long(&self) -> Option<Slot> {
+        let best = self
+            .long_queue
+            .select(self.sched_policy.as_ref(), &self.requests, self.now);
+        debug_assert_eq!(
+            best,
+            self.long_queue
+                .select_via_scan(self.sched_policy.as_ref(), &self.requests, self.now),
+            "{}: long-queue index diverged from the scan at now={}",
+            self.sched_policy.name(),
+            self.now
+        );
+        best
     }
 
-    /// One pooled decision instant (routing modes `round-robin`/`routed`).
-    ///
-    /// The groups holding KV shards of the active long request form the
-    /// **cooperative set**: they iterate together (the sharded chunk's
-    /// partial attention plus each group's own short traffic) and complete
-    /// at the set's max exit plus the KVP merge charge. Every other group
-    /// is an **independent short-request pool** (paper section 7): it
-    /// forms, executes, and completes its own mixed batches on its own
-    /// clock, so a short request routed to an idle group never waits out a
-    /// document chunk on a sharding group.
-    fn step_pooled(&mut self) {
-        let n_groups = self.scheds.len();
-        let slo = self.dep.slo;
-        self.reselect_active_long_pooled();
-
-        // Shard holders of the active long request (the cooperative set).
-        self.participating.clear();
-        if let Some(slot) = self.active_long {
-            if let Some(m) = self.kvp_mgr.shard_map(slot) {
-                for &(g, _, n) in &m.shards {
-                    self.participating.push((g, n));
-                }
-            }
+    /// The queued long request that would preempt `active`: the most
+    /// urgent queued one, if **strictly** more urgent (a tie never evicts
+    /// the request already holding KV shards on its groups).
+    fn challenger_beats(&self, active: Slot) -> Option<Slot> {
+        let best = self.select_queued_long()?;
+        let p_best = self
+            .sched_policy
+            .priority(self.requests.get(best), self.now);
+        let p_active = self
+            .sched_policy
+            .priority(self.requests.get(active), self.now);
+        if p_best < p_active {
+            Some(best)
+        } else {
+            None
         }
-        let coop_ready = !self.participating.is_empty()
-            && self
-                .participating
-                .iter()
-                .all(|&(g, _)| self.free_at[g as usize] <= self.now);
-
-        // ---- long-request work selection (whole coop set must be idle) --
-        let long_slot = self.active_long;
-        let mut long_chunk: Option<u64> = None;
-        let mut long_decode = false;
-        if coop_ready {
-            let r = self.requests.get(long_slot.expect("coop_ready implies active"));
-            match r.phase {
-                Phase::Queued | Phase::Prefilling => {
-                    let (kv_done, remaining, dl) = (
-                        r.kv_len(),
-                        r.remaining_prefill(),
-                        r.deadline_remaining_s(self.now),
-                    );
-                    self.long_ctxs.clear();
-                    for sched in &self.scheds {
-                        self.long_ctxs.extend_from_slice(sched.decode_ctxs());
-                    }
-                    let c = self
-                        .policy
-                        .next_chunk(kv_done, remaining, &self.long_ctxs, dl, &self.pm, &slo);
-                    long_chunk = Some(c.max(1).min(remaining));
-                }
-                Phase::Decoding => long_decode = true,
-                Phase::Finished => {}
-            }
-        }
-        let long_nq = long_chunk.unwrap_or(if long_decode { 1 } else { 0 });
-
-        // ---- batch formation + flow -------------------------------------
-        let mut coop_ran = false;
-        let mut coop_exit = self.now;
-        let mut coop_first = self.now;
-        let mut coop_any_decode = long_decode;
-        let mut coop_decodes = 0usize;
-        let mut coop_chunk: Option<u64> = None;
-        self.combined.clear(); // accumulates the coop set's shapes
-        for g in 0..n_groups {
-            self.group_plans[g].clear();
-            let member = self.participating.iter().any(|&(gg, _)| gg as usize == g);
-            let run_now = if member {
-                coop_ready && long_nq > 0
-            } else {
-                self.free_at[g] <= self.now
-            };
-            if !run_now {
-                continue;
-            }
-            self.scheds[g].next_batch_into(
-                &self.requests,
-                &self.pm,
-                &slo,
-                self.now,
-                &mut self.group_plans[g],
-            );
-            self.scheds[g].batch_shape_into(
-                &self.group_plans[g],
-                &self.requests,
-                Self::short_local_kv,
-                &mut self.shape,
-            );
-            if member {
-                let local = self
-                    .participating
-                    .iter()
-                    .find(|&&(gg, _)| gg as usize == g)
-                    .expect("member has a shard")
-                    .1;
-                if let Some(c) = long_chunk {
-                    self.shape.prefills.push(PrefillWork {
-                        chunk: c,
-                        kv_len: local + c,
-                    });
-                } else if long_decode {
-                    self.shape.decodes.push(DecodeWork {
-                        kv_len: local.max(1),
-                    });
-                }
-            }
-            if self.shape.is_empty() {
-                continue;
-            }
-            let has_decode = !self.shape.decodes.is_empty();
-            let st = self.pm.stage_time(&self.shape, self.layers_per_stage).total();
-            let hop = self.pm.stage_hop_s(self.shape.tokens());
-            let ready = if has_decode {
-                self.now
-            } else {
-                self.timelines[g].stage0_free().max(self.now)
-            };
-            let (first, exit) = self.timelines[g].flow_compact(ready, |_| st, hop);
-            let prefill_toks: u64 = self.shape.prefills.iter().map(|p| p.chunk).sum();
-            let n_decodes = self.shape.decodes.len();
-            self.metrics
-                .record_group_iter(g, exit - self.now, prefill_toks, n_decodes as u64);
-            if member {
-                coop_ran = true;
-                coop_exit = coop_exit.max(exit);
-                coop_first = coop_first.max(first);
-                coop_any_decode |= has_decode;
-                coop_decodes += n_decodes;
-                coop_chunk = coop_chunk.or(long_chunk);
-                self.combined.extend_from(&self.shape);
-            } else {
-                // Independent pool iteration: this group's requests
-                // complete at its own exit, on its own clock.
-                let dur = exit - self.now;
-                let gpus = self.topo.parallel.workers_per_replica();
-                if dur > 0.0 {
-                    self.metrics.mfu.add(self.pm.mfu(&self.shape, dur, gpus.max(1)));
-                    self.metrics.mbu.add(self.pm.mbu(&self.shape, dur, gpus.max(1)));
-                }
-                self.metrics.record_iter(IterRecord {
-                    t: exit,
-                    dur_s: dur,
-                    chunk: self.group_plans[g].prefill.map(|(_, c)| c),
-                    n_decodes,
-                    active_gpus: gpus,
-                });
-                self.free_at[g] = if has_decode { exit } else { first };
-                self.complete_group_plan(g, exit);
-            }
-        }
-
-        // ---- cooperative completion -------------------------------------
-        if coop_ran {
-            if self.participating.len() > 1 && long_nq > 0 {
-                coop_exit += self.pm.kvp_merge_s(long_nq);
-            }
-            let dur = coop_exit - self.now;
-            // Dense SPP admission survives for pure-prefill coop batches:
-            // the set re-admits at its max stage-0 exit, not full drain.
-            let free = if coop_any_decode { coop_exit } else { coop_first };
-            for i in 0..self.participating.len() {
-                let g = self.participating[i].0 as usize;
-                self.free_at[g] = free;
-            }
-            let gpus = self.topo.gpus_active(self.participating.len().max(1) as u32);
-            if dur > 0.0 {
-                self.metrics
-                    .mfu
-                    .add(self.pm.mfu(&self.combined, dur, gpus.max(1)));
-                self.metrics
-                    .mbu
-                    .add(self.pm.mbu(&self.combined, dur, gpus.max(1)));
-            }
-            self.metrics.record_iter(IterRecord {
-                t: coop_exit,
-                dur_s: dur,
-                chunk: coop_chunk,
-                n_decodes: coop_decodes,
-                active_gpus: gpus,
-            });
-            for i in 0..self.participating.len() {
-                let g = self.participating[i].0 as usize;
-                self.complete_group_plan(g, coop_exit);
-            }
-            if let Some(slot) = long_slot {
-                self.complete_long_progress(slot, long_chunk, long_decode, coop_exit);
-            }
-        }
-
-        // Whether or not anything ran, the next decision instant is the
-        // earliest group admission point or arrival.
-        self.now = self.next_event_pooled();
     }
 
     /// Look up a request by its external id — live or (when

@@ -235,8 +235,7 @@ pub fn kvp_convoy(cfg: &KvpConvoyConfig, seed: u64) -> Vec<RequestSpec> {
         });
         id += 1;
     }
-    // Document ids continue the short sequence (the reference simulator
-    // keys flat per-request state by id, so ids stay dense).
+    // Document ids continue the short sequence, keeping ids dense.
     for k in 0..cfg.n_docs {
         out.push(RequestSpec {
             id: id + k as u64,

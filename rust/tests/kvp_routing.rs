@@ -160,6 +160,109 @@ fn oversized_request_is_overflow_placed_not_deferred_forever() {
     assert_eq!(sim.n_live(), 0);
 }
 
+/// Deferred-queue urgency ordering (the PR 5 inversion fix): capacity
+/// deferral is no longer strict FIFO under preemptive policies. Two
+/// giant blockers fill the only group's KV capacity; a slack-rich big
+/// request defers first, a deadline-critical tiny one defers later. When
+/// the first blocker retires, only the tiny request fits — under LARS it
+/// must be admitted *then* (before the second blocker finishes), not
+/// stuck behind the slack-rich head the old FIFO rule would have blocked
+/// on.
+fn deferral_trace() -> (DeploymentConfig, Vec<RequestSpec>, SimOptions) {
+    let mut dep = DeploymentConfig::llama3_8b_tp8(); // kvp = 1: one group
+    dep.scheduler.routing = RoutingMode::Routed;
+    dep.scheduler.adaptive_chunking = false;
+    dep.scheduler.static_chunk = 2048;
+    // exactly the two blockers' combined KV footprint
+    dep.scheduler.kvp_capacity_tokens = (2_000_000 + 2) + (2_500_000 + 2);
+    let w = vec![
+        // blockers: together they pin capacity at zero until one retires
+        RequestSpec { id: 0, prompt_len: 2_000_000, max_new_tokens: 2, arrival_s: 0.0 },
+        RequestSpec { id: 1, prompt_len: 2_500_000, max_new_tokens: 2, arrival_s: 0.0 },
+        // slack-rich big request: defers first, and fits only once BOTH
+        // blockers are gone (its need exceeds either blocker's own
+        // footprint, so a single retirement can never free enough)
+        RequestSpec { id: 2, prompt_len: 2_600_000, max_new_tokens: 4, arrival_s: 0.1 },
+        // deadline-critical tiny request: defers later, fits as soon as
+        // the first blocker frees; its floor deadline is long blown by
+        // then (multi-million-token prefills take far more than 2 s)
+        RequestSpec { id: 3, prompt_len: 256, max_new_tokens: 4, arrival_s: 0.3 },
+    ];
+    // everything through the group scheduler: capacity is the only gate
+    let opts = SimOptions { long_threshold: u64::MAX, ..SimOptions::default() };
+    (dep, w, opts)
+}
+
+#[test]
+fn deferred_queue_orders_retries_by_urgency_under_lars() {
+    let (mut dep, w, opts) = deferral_trace();
+    dep.scheduler.policy = SchedPolicyKind::Lars;
+    let mut sim = Simulation::new(dep, w, opts);
+    sim.run();
+    assert_eq!(sim.metrics.finished_requests, 4);
+    // both the big and the tiny request were refused exactly once each
+    assert_eq!(sim.metrics.routing_refusals, 2);
+    let s = sim.metrics.summary();
+    assert_eq!(s.n_deferred, 2, "both deferrals must be placed and timed");
+    assert!(s.deferral_wait_p95 > 0.0);
+    let blockers_done = sim
+        .request(0)
+        .unwrap()
+        .finished_s
+        .unwrap()
+        .max(sim.request(1).unwrap().finished_s.unwrap());
+    let small = sim.request(3).unwrap();
+    let big = sim.request(2).unwrap();
+    // the inversion fix: the later-arriving deadline-critical request is
+    // admitted at the first capacity release — no later than the last
+    // blocker's retirement — and served immediately...
+    assert!(
+        small.first_token_s.unwrap() <= blockers_done,
+        "deadline-critical short waited out the slack-rich head: \
+         first_token {} > last blocker finish {blockers_done}",
+        small.first_token_s.unwrap()
+    );
+    // ...while the slack-rich one keeps waiting for its capacity (it can
+    // only fit once both blockers are gone) and serves strictly after
+    assert!(
+        big.first_token_s.unwrap() > blockers_done,
+        "the big request cannot fit before both blockers retire"
+    );
+    assert!(
+        small.first_token_s.unwrap() < big.first_token_s.unwrap(),
+        "urgency-ordered deferral must serve the deadline-critical short first"
+    );
+}
+
+#[test]
+fn deferred_queue_stays_fifo_under_fcfs() {
+    let (mut dep, w, opts) = deferral_trace();
+    dep.scheduler.policy = SchedPolicyKind::Fcfs;
+    let mut sim = Simulation::new(dep, w, opts);
+    sim.run();
+    assert_eq!(sim.metrics.finished_requests, 4);
+    let blockers_done = sim
+        .request(0)
+        .unwrap()
+        .finished_s
+        .unwrap()
+        .max(sim.request(1).unwrap().finished_s.unwrap());
+    let small = sim.request(3).unwrap();
+    let big = sim.request(2).unwrap();
+    // FIFO retained: the tiny request queues behind the big head (which
+    // does not fit until both blockers retire), exactly the old strict
+    // head-blocking behavior — and then serves after the head's prefill
+    assert!(
+        small.first_token_s.unwrap() > blockers_done,
+        "FCFS deferral must keep strict FIFO head-blocking"
+    );
+    assert!(
+        small.first_token_s.unwrap() > big.first_token_s.unwrap(),
+        "FCFS serves the FIFO head first"
+    );
+    assert_eq!(sim.metrics.summary().n_deferred, 2);
+}
+
 /// The KV-integrity contract: preempt the active sharded document
 /// mid-prefill, run the preempting work to completion on other groups,
 /// resume — and the interrupted run's final metrics equal the

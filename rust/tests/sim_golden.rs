@@ -1,129 +1,150 @@
-//! Golden sim-semantics equivalence: the optimized (arena, allocation-free,
-//! event-driven) simulator core must reproduce the pre-refactor simulator's
-//! metrics **bit-for-bit** on fixed workloads.
+//! Recorded golden snapshots: the simulator's metric stream must be
+//! **bit-deterministic**, and its semantics must not drift silently.
 //!
-//! The pre-refactor semantics are preserved verbatim in
-//! `medha::sim::reference::ReferenceSimulation` (map-based store,
-//! per-iteration allocations, O(n²) retain, 1e-6 s idle bumps). Both cores
-//! run the same deterministic workloads; every summary statistic — finished
-//! count, TTFT/TBT percentiles, throughput, utilization means — and the
-//! total simulated time must compare exactly equal as f64s, not within a
-//! tolerance: the refactor changed the engineering of the loop, not the
-//! simulated behavior.
+//! The pre-PR-5 repo enforced this by maintaining a second simulator core
+//! (`sim::reference`, the map-based pre-arena implementation) and
+//! asserting bit-identical metrics against it — double-maintenance that
+//! every semantic change had to pay twice. With the cores unified on the
+//! single pool-scheduled `Simulation::step`, determinism is enforced by
+//! **recorded golden snapshots** instead:
+//!
+//! * every golden scenario runs **twice** in-process and the two runs'
+//!   full outcome serializations (every summary statistic as exact f64
+//!   bits, per-group token/busy accounting, the KVP onboarding log, the
+//!   simulated end time) must be identical — bit-determinism across runs;
+//! * the serialization is then compared against a snapshot file under
+//!   `rust/tests/golden/`. The first run in an environment **records** the
+//!   snapshot (committing it pins the semantics for every run after);
+//!   set `MEDHA_BLESS=1` to deliberately re-record after an intentional
+//!   semantics change.
+//!
+//! The blind-mode lockstep equivalence (the old `step_lockstep` path that
+//! PR 5 folded into the pooled step as the all-groups-cooperate barrier)
+//! is additionally proven structurally: on a single-group deployment the
+//! barrier and the pool arm must coincide, so `blind` and `round-robin`
+//! runs must be bit-identical there — a cross-arm differential that needs
+//! no second core.
+
+use std::fs;
+use std::path::PathBuf;
 
 use medha::config::DeploymentConfig;
-use medha::metrics::MetricsSummary;
-use medha::sim::reference::ReferenceSimulation;
-use medha::sim::{SimOptions, Simulation};
+use medha::coordinator::{RoutingMode, SchedPolicyKind};
+use medha::sim::{run_convoy_scenario, run_kvp_convoy_scenario, SimOptions, Simulation};
 use medha::workload::{self, LengthDist, RequestSpec};
 
-struct RunOutcome {
-    end_s: f64,
-    n_iters: u64,
-    summary: MetricsSummary,
-    onboard_log: Vec<(f64, u64, u32)>,
-    group_busy_s: Vec<f64>,
-    group_prefill_tokens: Vec<u64>,
-    group_decode_tokens: Vec<u64>,
-}
-
-fn run_optimized(dep: DeploymentConfig, w: Vec<RequestSpec>) -> RunOutcome {
-    let mut sim = Simulation::new(dep, w, SimOptions::default());
-    let end_s = sim.run();
-    RunOutcome {
-        end_s,
-        n_iters: sim.metrics.n_iters,
-        onboard_log: sim.kvp_onboard_log().to_vec(),
-        group_busy_s: sim.metrics.group_busy_s.clone(),
-        group_prefill_tokens: sim.metrics.group_prefill_tokens.clone(),
-        group_decode_tokens: sim.metrics.group_decode_tokens.clone(),
-        summary: sim.metrics.summary(),
+/// Exact, human-auditable serialization of everything a golden scenario
+/// pins: f64s are rendered as their raw bit patterns (plus a readable
+/// decimal), so comparison is bit-exact by construction — including NaNs
+/// for empty-population statistics.
+fn serialize_outcome(sim: &mut Simulation, end_s: f64) -> String {
+    let mut out = String::new();
+    let mut f = |name: &str, x: f64| {
+        out.push_str(&format!("{name} = {:016x} ({x:?})\n", x.to_bits()));
+    };
+    f("end_s", end_s);
+    let n_iters = sim.metrics.n_iters;
+    let group_busy = sim.metrics.group_busy_s.clone();
+    let group_prefill = sim.metrics.group_prefill_tokens.clone();
+    let group_decode = sim.metrics.group_decode_tokens.clone();
+    let onboard = sim.kvp_onboard_log().to_vec();
+    let n_events = sim.metrics.preemption_events.len();
+    let s = sim.metrics.summary();
+    f("ttft_p50", s.ttft_p50);
+    f("ttft_p95", s.ttft_p95);
+    f("tbt_p50", s.tbt_p50);
+    f("tbt_p95", s.tbt_p95);
+    f("tbt_p99", s.tbt_p99);
+    f("tbt_max", s.tbt_max);
+    f("decode_tps", s.decode_tps);
+    f("mfu_mean", s.mfu_mean);
+    f("mbu_mean", s.mbu_mean);
+    f("ttft_attainment", s.ttft_attainment);
+    f("tbt_attainment", s.tbt_attainment);
+    f("goodput_rps", s.goodput_rps);
+    f("deferral_wait_p95", s.deferral_wait_p95);
+    for (g, b) in group_busy.iter().enumerate() {
+        f(&format!("group{g}_busy_s"), *b);
     }
-}
-
-fn run_reference(dep: DeploymentConfig, w: Vec<RequestSpec>) -> RunOutcome {
-    let mut sim = ReferenceSimulation::new(dep, w, SimOptions::default());
-    let end_s = sim.run();
-    RunOutcome {
-        end_s,
-        n_iters: sim.metrics.n_iters,
-        onboard_log: sim.kvp_onboard_log().to_vec(),
-        group_busy_s: sim.metrics.group_busy_s.clone(),
-        group_prefill_tokens: sim.metrics.group_prefill_tokens.clone(),
-        group_decode_tokens: sim.metrics.group_decode_tokens.clone(),
-        summary: sim.metrics.summary(),
+    out.push_str(&format!("n_iters = {n_iters}\n"));
+    out.push_str(&format!("n_ttft = {}\n", s.n_ttft));
+    out.push_str(&format!("n_tbt = {}\n", s.n_tbt));
+    out.push_str(&format!("finished = {}\n", s.finished));
+    out.push_str(&format!("preemptions = {}\n", s.preemptions));
+    out.push_str(&format!("active_preemptions = {}\n", s.active_preemptions));
+    out.push_str(&format!("routing_refusals = {}\n", s.routing_refusals));
+    out.push_str(&format!("n_deferred = {}\n", s.n_deferred));
+    out.push_str(&format!("n_preemption_events = {n_events}\n"));
+    out.push_str(&format!("group_prefill_tokens = {group_prefill:?}\n"));
+    out.push_str(&format!("group_decode_tokens = {group_decode:?}\n"));
+    out.push_str(&format!("n_onboard_events = {}\n", onboard.len()));
+    for (t, id, g) in onboard {
+        out.push_str(&format!(
+            "onboard = {:016x} ({t:?}) req={id} group={g}\n",
+            t.to_bits()
+        ));
     }
+    out
 }
 
-/// Exact f64 comparison (NaN == NaN so empty-population statistics match).
-fn assert_f64_identical(what: &str, a: f64, b: f64) {
-    assert!(
-        a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
-        "{what}: optimized {a:?} != reference {b:?}"
-    );
+fn snapshot_path(name: &str) -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden"))
+        .join(format!("{name}.snap"))
 }
 
-fn assert_outcomes_identical(opt: &RunOutcome, reference: &RunOutcome) {
-    assert_eq!(opt.summary.finished, reference.summary.finished, "finished");
-    assert_eq!(opt.n_iters, reference.n_iters, "iteration count");
-    assert_eq!(opt.summary.n_ttft, reference.summary.n_ttft, "n_ttft");
-    assert_eq!(opt.summary.n_tbt, reference.summary.n_tbt, "n_tbt");
-    assert_eq!(opt.onboard_log, reference.onboard_log, "kvp onboard log");
-    assert_f64_identical("end time", opt.end_s, reference.end_s);
-    assert_f64_identical("ttft_p50", opt.summary.ttft_p50, reference.summary.ttft_p50);
-    assert_f64_identical("ttft_p95", opt.summary.ttft_p95, reference.summary.ttft_p95);
-    assert_f64_identical("tbt_p50", opt.summary.tbt_p50, reference.summary.tbt_p50);
-    assert_f64_identical("tbt_p95", opt.summary.tbt_p95, reference.summary.tbt_p95);
-    assert_f64_identical("tbt_p99", opt.summary.tbt_p99, reference.summary.tbt_p99);
-    assert_f64_identical("tbt_max", opt.summary.tbt_max, reference.summary.tbt_max);
-    assert_f64_identical("decode_tps", opt.summary.decode_tps, reference.summary.decode_tps);
-    assert_f64_identical("mfu_mean", opt.summary.mfu_mean, reference.summary.mfu_mean);
-    assert_f64_identical("mbu_mean", opt.summary.mbu_mean, reference.summary.mbu_mean);
-    // SLO-attainment accounting must also agree bit-for-bit: both cores
-    // assign the same length-aware deadlines at admission and judge the
-    // same finish times against them.
-    assert_f64_identical(
-        "ttft_attainment",
-        opt.summary.ttft_attainment,
-        reference.summary.ttft_attainment,
-    );
-    assert_f64_identical(
-        "tbt_attainment",
-        opt.summary.tbt_attainment,
-        reference.summary.tbt_attainment,
-    );
-    assert_f64_identical("goodput_rps", opt.summary.goodput_rps, reference.summary.goodput_rps);
-    // FCFS never preempts: both cores must report zero, and active yields
-    // cannot exist outside the pooled routing modes.
-    assert_eq!(opt.summary.preemptions, 0, "optimized FCFS preempted");
-    assert_eq!(reference.summary.preemptions, 0, "reference preempted");
-    assert_eq!(opt.summary.active_preemptions, 0, "optimized yielded an active request");
-    assert_eq!(reference.summary.active_preemptions, 0, "reference yielded");
-    // Capacity-refused admissions only exist under routed placement with a
-    // finite KV capacity; blind mode must mirror the reference's zero.
-    assert_eq!(opt.summary.routing_refusals, 0, "optimized blind mode refused a placement");
-    assert_eq!(reference.summary.routing_refusals, 0, "reference refused a placement");
-    // per-group utilization accounting, bit-for-bit
-    assert_eq!(opt.group_busy_s.len(), reference.group_busy_s.len(), "group count");
-    for (g, (a, b)) in opt.group_busy_s.iter().zip(&reference.group_busy_s).enumerate() {
-        assert_f64_identical(&format!("group {g} busy_s"), *a, *b);
+/// Compare `content` against the recorded snapshot, recording it when
+/// absent (first run in a fresh environment) or when `MEDHA_BLESS` is set.
+///
+/// With `MEDHA_REQUIRE_SNAPSHOTS=1` a missing snapshot is a **failure**
+/// instead of a recording: CI runs the suite a second time under this
+/// flag (same workspace, so the first pass's recordings are present),
+/// guaranteeing the compare path actually executes everywhere — a
+/// record-only harness would pass trivially on every fresh checkout.
+fn assert_matches_snapshot(name: &str, content: &str) {
+    let path = snapshot_path(name);
+    let bless = std::env::var("MEDHA_BLESS").is_ok();
+    if !bless && !path.exists() && std::env::var("MEDHA_REQUIRE_SNAPSHOTS").is_ok() {
+        panic!(
+            "golden snapshot {} is missing under MEDHA_REQUIRE_SNAPSHOTS — \
+             record it (plain `cargo test --test sim_golden`) and commit it",
+            path.display()
+        );
     }
+    if bless || !path.exists() {
+        fs::create_dir_all(path.parent().unwrap()).expect("create golden dir");
+        fs::write(&path, content).expect("record golden snapshot");
+        if !bless {
+            eprintln!("recorded new golden snapshot {}", path.display());
+        }
+        return;
+    }
+    let recorded = fs::read_to_string(&path).expect("read golden snapshot");
     assert_eq!(
-        opt.group_prefill_tokens, reference.group_prefill_tokens,
-        "group prefill tokens"
+        recorded, content,
+        "snapshot {name} diverged from {} — if the semantics change is \
+         intentional, re-record with MEDHA_BLESS=1",
+        path.display()
     );
-    assert_eq!(
-        opt.group_decode_tokens, reference.group_decode_tokens,
-        "group decode tokens"
-    );
+}
+
+/// Run a scenario twice, assert the two outcomes bit-identical (the
+/// determinism half), then pin the serialization against the recorded
+/// snapshot (the no-silent-drift half).
+fn golden<F: Fn() -> (Simulation, f64)>(name: &str, run: F) -> Simulation {
+    let (mut a, end_a) = run();
+    let (mut b, end_b) = run();
+    let sa = serialize_outcome(&mut a, end_a);
+    let sb = serialize_outcome(&mut b, end_b);
+    assert_eq!(sa, sb, "{name}: two identical runs diverged (non-determinism)");
+    assert_matches_snapshot(name, &sa);
+    a
 }
 
 /// Workload 1: fixed-seed Poisson mix of short requests across two KVP
 /// groups, adaptive chunking on — exercises routing, continuous batching,
-/// and idle-gap handling.
+/// and idle-gap handling under the default blind FCFS configuration.
 #[test]
 fn golden_mixed_short_poisson() {
-    let dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
     let w = workload::poisson_mixed(
         8.0,
         30.0,
@@ -135,10 +156,13 @@ fn golden_mixed_short_poisson() {
         42,
     );
     assert!(w.len() > 100, "workload degenerate: {} requests", w.len());
-    let opt = run_optimized(dep.clone(), w.clone());
-    let reference = run_reference(dep, w);
-    assert!(opt.summary.finished > 100);
-    assert_outcomes_identical(&opt, &reference);
+    let mut sim = golden("mixed_short_poisson", || {
+        let dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
+        let mut sim = Simulation::new(dep, w.clone(), SimOptions::default());
+        let end = sim.run();
+        (sim, end)
+    });
+    assert!(sim.metrics.summary().finished > 100);
 }
 
 /// Workload 2: one long KVP-sharded request (dynamic onboarding across 4
@@ -147,81 +171,73 @@ fn golden_mixed_short_poisson() {
 /// onboarding staircase.
 #[test]
 fn golden_long_kvp_sharded_plus_decodes() {
-    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 2, 4);
-    dep.scheduler.kvp_onboard_threshold = 256_000;
-    let w = workload::long_plus_decodes(1_000_000, 8, 1_000, 64);
-    let opt = run_optimized(dep.clone(), w.clone());
-    let reference = run_reference(dep, w);
-    assert_eq!(opt.summary.finished, 9);
-    assert_eq!(opt.onboard_log.len(), 4, "expected 4 KVP onboard events");
-    assert_outcomes_identical(&opt, &reference);
+    let mut sim = golden("long_kvp_sharded_plus_decodes", || {
+        let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 2, 4);
+        dep.scheduler.kvp_onboard_threshold = 256_000;
+        let w = workload::long_plus_decodes(1_000_000, 8, 1_000, 64);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        let end = sim.run();
+        (sim, end)
+    });
+    assert_eq!(sim.metrics.summary().finished, 9);
+    assert_eq!(sim.kvp_onboard_log().len(), 4, "expected 4 KVP onboard events");
 }
 
 /// Static chunking variant of workload 2 — the chunk policy out of the
-/// loop isolates batch formation and pipeline-flow equivalence.
+/// loop isolates batch formation and pipeline-flow determinism.
 #[test]
 fn golden_long_static_chunking() {
-    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
-    dep.scheduler.adaptive_chunking = false;
-    dep.scheduler.static_chunk = 2048;
-    let w = workload::long_plus_decodes(200_000, 6, 1_000, 32);
-    let opt = run_optimized(dep.clone(), w.clone());
-    let reference = run_reference(dep, w);
-    assert_outcomes_identical(&opt, &reference);
+    golden("long_static_chunking", || {
+        let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
+        dep.scheduler.adaptive_chunking = false;
+        dep.scheduler.static_chunk = 2048;
+        let w = workload::long_plus_decodes(200_000, 6, 1_000, 32);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        let end = sim.run();
+        (sim, end)
+    });
 }
 
-/// Workload 4: the kvp_convoy trace — overlapping KVP-sharded documents
-/// plus interactive traffic across 4 groups — under FCFS with the default
+/// The heterogeneous convoy trace under blind FCFS — the scheduling
+/// anchor: documents and interactive requests through one per-group queue.
+#[test]
+fn golden_convoy_fcfs_blind() {
+    let cfg = workload::ConvoyConfig::default();
+    let mut sim = golden("convoy_fcfs_blind", || {
+        let sim = run_convoy_scenario(SchedPolicyKind::Fcfs, &cfg, 42);
+        let end = sim.metrics.span_s();
+        (sim, end)
+    });
+    assert!(sim.metrics.summary().finished > 100);
+}
+
+/// The kvp_convoy trace — overlapping KVP-sharded documents plus
+/// interactive traffic across 4 groups — under FCFS with the default
 /// blind routing. The routed modes change semantics deliberately; this
-/// anchor pins that FCFS-without-routing on the *same trace* stays
-/// bit-identical to the oracle.
+/// anchor pins unified-blind FCFS on the *same trace* the pooled modes
+/// run.
 #[test]
 fn golden_kvp_convoy_fcfs_blind() {
-    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 4);
-    dep.scheduler.adaptive_chunking = false;
-    dep.scheduler.static_chunk = 4096;
-    dep.scheduler.kvp_onboard_threshold = 256_000;
     let cfg = workload::KvpConvoyConfig::default();
-    let w = workload::kvp_convoy(&cfg, 42);
-    let opt = run_optimized(dep.clone(), w.clone());
-    let reference = run_reference(dep, w);
-    assert!(opt.summary.finished > 100);
-    assert_outcomes_identical(&opt, &reference);
+    let mut sim = golden("kvp_convoy_fcfs_blind", || {
+        let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 4);
+        dep.scheduler.adaptive_chunking = false;
+        dep.scheduler.static_chunk = 4096;
+        dep.scheduler.kvp_onboard_threshold = 256_000;
+        let w = workload::kvp_convoy(&cfg, 42);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        let end = sim.run();
+        (sim, end)
+    });
+    assert!(sim.metrics.summary().finished > 100);
 }
 
-/// Exact f64 equality over every summary statistic — NaN == NaN, like the
-/// oracle comparison above.
-fn assert_summaries_bit_identical(a: &MetricsSummary, b: &MetricsSummary) {
-    assert_eq!(a.n_ttft, b.n_ttft);
-    assert_eq!(a.n_tbt, b.n_tbt);
-    assert_eq!(a.finished, b.finished);
-    assert_eq!(a.preemptions, b.preemptions);
-    assert_eq!(a.active_preemptions, b.active_preemptions);
-    assert_eq!(a.routing_refusals, b.routing_refusals);
-    for (what, x, y) in [
-        ("ttft_p50", a.ttft_p50, b.ttft_p50),
-        ("ttft_p95", a.ttft_p95, b.ttft_p95),
-        ("tbt_p50", a.tbt_p50, b.tbt_p50),
-        ("tbt_p95", a.tbt_p95, b.tbt_p95),
-        ("tbt_p99", a.tbt_p99, b.tbt_p99),
-        ("tbt_max", a.tbt_max, b.tbt_max),
-        ("decode_tps", a.decode_tps, b.decode_tps),
-        ("mfu_mean", a.mfu_mean, b.mfu_mean),
-        ("mbu_mean", a.mbu_mean, b.mbu_mean),
-        ("ttft_attainment", a.ttft_attainment, b.ttft_attainment),
-        ("tbt_attainment", a.tbt_attainment, b.tbt_attainment),
-        ("goodput_rps", a.goodput_rps, b.goodput_rps),
-    ] {
-        assert_f64_identical(what, x, y);
-    }
-}
-
-/// Determinism regression for the new pooled semantics: same workload seed
-/// + same policy ⇒ bit-identical `MetricsSummary`, onboarding log, and
-/// preemption-event stream across two routed runs, for all four policies.
+/// The full policy × routing matrix on a reduced kvp_convoy trace: every
+/// combination must be bit-deterministic across runs and pinned by its
+/// own recorded snapshot — the single unified core means every one of
+/// these exercises the same `Simulation::step`.
 #[test]
-fn kvp_routed_runs_are_bit_deterministic() {
-    use medha::coordinator::{RoutingMode, SchedPolicyKind};
+fn golden_policy_routing_matrix() {
     let cfg = workload::KvpConvoyConfig {
         horizon_s: 15.0,
         doc_prompt: 128_000,
@@ -230,13 +246,95 @@ fn kvp_routed_runs_are_bit_deterministic() {
         ..workload::KvpConvoyConfig::default()
     };
     for kind in SchedPolicyKind::ALL {
-        let mut a = medha::sim::run_kvp_convoy_scenario(kind, RoutingMode::Routed, &cfg, 7);
-        let mut b = medha::sim::run_kvp_convoy_scenario(kind, RoutingMode::Routed, &cfg, 7);
-        assert_eq!(a.metrics.n_iters, b.metrics.n_iters, "{}", kind.name());
-        assert_eq!(a.metrics.preemption_events, b.metrics.preemption_events);
-        assert_eq!(a.kvp_onboard_log(), b.kvp_onboard_log());
-        assert_eq!(a.metrics.group_prefill_tokens, b.metrics.group_prefill_tokens);
-        let (sa, sb) = (a.metrics.summary(), b.metrics.summary());
-        assert_summaries_bit_identical(&sa, &sb);
+        for routing in RoutingMode::ALL {
+            let name = format!("kvp_convoy_{}_{}", kind.name(), routing.name());
+            golden(&name, || {
+                let sim = run_kvp_convoy_scenario(kind, routing, &cfg, 7);
+                let end = sim.metrics.span_s();
+                (sim, end)
+            });
+        }
     }
+}
+
+/// Structural lockstep-equivalence proof for the folded blind mode.
+///
+/// On a **single-group** deployment the blind barrier (all groups
+/// cooperate) and the pool arm (only shard holders cooperate; everyone
+/// else iterates independently) describe the same schedule: one group,
+/// one clock. The pre-refactor `step_lockstep` was exactly the barrier
+/// schedule, so `blind` must be bit-identical to `round-robin` here —
+/// across all four policies on the convoy trace (no sharded path), and
+/// under FCFS with a genuinely KVP-sharded document (single group holds
+/// every shard). This replaces the retired `sim::reference` oracle with a
+/// differential the unified core carries inside itself.
+#[test]
+fn unified_blind_is_lockstep_on_one_group() {
+    // (a) convoy-style heterogeneous trace, everything through the group
+    // scheduler (long_threshold = MAX), all four policies.
+    let cfg = workload::ConvoyConfig {
+        horizon_s: 20.0,
+        long_every: 10, // keep documents in the short 20 s trace
+        ..workload::ConvoyConfig::default()
+    };
+    let w = workload::convoy(&cfg, 11);
+    for kind in SchedPolicyKind::ALL {
+        let run = |routing: RoutingMode| -> String {
+            let mut dep = DeploymentConfig::llama3_8b_tp8();
+            dep.scheduler.policy = kind;
+            dep.scheduler.routing = routing;
+            dep.scheduler.adaptive_chunking = false;
+            let opts = SimOptions {
+                long_threshold: u64::MAX,
+                ..SimOptions::default()
+            };
+            let mut sim = Simulation::new(dep, w.clone(), opts);
+            let end = sim.run();
+            serialize_outcome(&mut sim, end)
+        };
+        assert_eq!(
+            run(RoutingMode::Blind),
+            run(RoutingMode::RoundRobin),
+            "{}: blind (barrier) != round-robin (pool) on one group",
+            kind.name()
+        );
+    }
+    // (b) a genuinely sharded document alongside decodes, FCFS: the
+    // cooperative path with its merge-free single-holder iteration.
+    let run_sharded = |routing: RoutingMode| -> String {
+        let mut dep = DeploymentConfig::llama3_8b_tp8();
+        dep.scheduler.routing = routing;
+        dep.scheduler.adaptive_chunking = false;
+        dep.scheduler.static_chunk = 2048;
+        dep.scheduler.kvp_onboard_threshold = 50_000;
+        let w = workload::long_plus_decodes(100_000, 8, 1_000, 32);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        let end = sim.run();
+        serialize_outcome(&mut sim, end)
+    };
+    assert_eq!(
+        run_sharded(RoutingMode::Blind),
+        run_sharded(RoutingMode::RoundRobin),
+        "fcfs sharded: blind (barrier) != round-robin (pool) on one group"
+    );
+}
+
+/// Same-tick arrival regression carried over from the oracle era: the
+/// golden workloads must be insensitive to trace construction order (the
+/// `(arrival, id)` pending sort), or snapshots would flap between hosts.
+#[test]
+fn golden_workloads_are_construction_order_insensitive() {
+    let mut w = workload::long_plus_decodes(200_000, 6, 1_000, 32);
+    let run = |w: Vec<RequestSpec>| -> String {
+        let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
+        dep.scheduler.adaptive_chunking = false;
+        dep.scheduler.static_chunk = 2048;
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        let end = sim.run();
+        serialize_outcome(&mut sim, end)
+    };
+    let forward = run(w.clone());
+    w.reverse();
+    let reversed = run(w);
+    assert_eq!(forward, reversed, "admission order leaked trace construction order");
 }
