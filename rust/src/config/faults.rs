@@ -1,0 +1,244 @@
+//! Deterministic fault-injection plans for the elastic KVP fleet.
+//!
+//! A [`FaultPlan`] schedules group lifecycle events at precise simulation
+//! times; the simulator applies every event whose time has been reached
+//! before admitting arrivals, so a plan replays bit-identically run after
+//! run. An empty plan is the fault-free fleet and changes nothing.
+//!
+//! # JSON schema (`simulate --faults plan.json`)
+//!
+//! ```json
+//! {
+//!   "events": [
+//!     {"t_s": 12.0, "kind": "crash",    "group": 1},
+//!     {"t_s": 20.0, "kind": "join",     "group": 1, "warmup_s": 2.0},
+//!     {"t_s":  8.0, "kind": "drain",    "group": 2},
+//!     {"t_s":  5.0, "kind": "slowdown", "group": 0, "factor": 1.5,
+//!      "until_s": 9.0}
+//!   ]
+//! }
+//! ```
+//!
+//! Per event: `t_s` (required) is the simulation time in seconds; `kind`
+//! (required) is one of `crash` / `join` / `drain` / `slowdown`; `group`
+//! names the target group id — required for everything except `join`,
+//! where omitting it (or naming a slot past the fleet end) grows the fleet
+//! by a new group instead of reviving a crashed slot. `join` accepts an
+//! optional `warmup_s` (default 0): the group is `Joining` — announced but
+//! excluded from placement — for that long before activating. `slowdown`
+//! requires `factor >= 1` (iteration-time multiplier) and `until_s > t_s`.
+//!
+//! Events are kept sorted by time (stable for equal times, preserving file
+//! order), so application order is deterministic by construction.
+
+use crate::util::json::Json;
+
+/// What happens to the target group at the event time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Instant loss: ledger occupancy and every resident shard drop; see
+    /// `KvpManager::crash_group` for the recovery contract.
+    Crash,
+    /// Recovery / scale-up: revive a `Down` slot or grow the fleet. The
+    /// group warms up (`Joining`, unplaceable) for `warmup_s` first.
+    Join { warmup_s: f64 },
+    /// Graceful scale-down: no new placements; resident work finishes.
+    Drain,
+    /// Transient degradation: the group's iteration times are multiplied
+    /// by `factor` until `until_s`.
+    Slowdown { factor: f64, until_s: f64 },
+}
+
+/// One scheduled lifecycle event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Simulation time the event fires (seconds).
+    pub t_s: f64,
+    /// Target group id. `None` only for `Join`: grow the fleet by a slot.
+    pub group: Option<u32>,
+    pub kind: FaultKind,
+}
+
+/// A deterministic schedule of fleet lifecycle events, sorted by time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Normalize: stable-sort events by time (file order breaks ties).
+    pub fn sort(&mut self) {
+        self.events
+            .sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).expect("non-finite fault time"));
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultPlan> {
+        let mut events = Vec::new();
+        if let Some(arr) = j.get("events").and_then(|x| x.as_arr()) {
+            for e in arr {
+                events.push(FaultEvent::from_json(e)?);
+            }
+        }
+        let mut plan = FaultPlan { events };
+        plan.sort();
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<FaultPlan> {
+        FaultPlan::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "events",
+            Json::arr(self.events.iter().map(FaultEvent::to_json)),
+        )])
+    }
+
+    /// Structural checks that don't need fleet context: finite
+    /// non-negative times, sane slowdown windows and factors. Whether a
+    /// crash targets a live group is a runtime property the simulator
+    /// asserts when the event fires.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.t_s.is_finite() || e.t_s < 0.0 {
+                anyhow::bail!("fault event {i}: bad time {}", e.t_s);
+            }
+            match e.kind {
+                FaultKind::Crash | FaultKind::Drain => {
+                    if e.group.is_none() {
+                        anyhow::bail!("fault event {i}: crash/drain needs a group");
+                    }
+                }
+                FaultKind::Join { warmup_s } => {
+                    if !warmup_s.is_finite() || warmup_s < 0.0 {
+                        anyhow::bail!("fault event {i}: bad warmup_s {warmup_s}");
+                    }
+                }
+                FaultKind::Slowdown { factor, until_s } => {
+                    if e.group.is_none() {
+                        anyhow::bail!("fault event {i}: slowdown needs a group");
+                    }
+                    if !(factor >= 1.0) || !factor.is_finite() {
+                        anyhow::bail!("fault event {i}: slowdown factor {factor} < 1");
+                    }
+                    if !(until_s > e.t_s) {
+                        anyhow::bail!("fault event {i}: until_s {until_s} <= t_s {}", e.t_s);
+                    }
+                }
+            }
+        }
+        debug_assert!(
+            self.events.windows(2).all(|w| w[0].t_s <= w[1].t_s),
+            "fault plan not sorted"
+        );
+        Ok(())
+    }
+}
+
+impl FaultEvent {
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultEvent> {
+        let t_s = j.req_f64("t_s")?;
+        let group = j.get("group").and_then(|x| x.as_u64()).map(|g| g as u32);
+        let kind = match j.req_str("kind")? {
+            "crash" => FaultKind::Crash,
+            "join" => FaultKind::Join {
+                warmup_s: j.get("warmup_s").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            },
+            "drain" => FaultKind::Drain,
+            "slowdown" => FaultKind::Slowdown {
+                factor: j.req_f64("factor")?,
+                until_s: j.req_f64("until_s")?,
+            },
+            other => anyhow::bail!("unknown fault kind {other:?}"),
+        };
+        Ok(FaultEvent { t_s, group, kind })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("t_s", Json::num(self.t_s))];
+        let kind = match self.kind {
+            FaultKind::Crash => "crash",
+            FaultKind::Join { .. } => "join",
+            FaultKind::Drain => "drain",
+            FaultKind::Slowdown { .. } => "slowdown",
+        };
+        pairs.push(("kind", Json::str(kind)));
+        if let Some(g) = self.group {
+            pairs.push(("group", Json::num(g as f64)));
+        }
+        match self.kind {
+            FaultKind::Join { warmup_s } if warmup_s > 0.0 => {
+                pairs.push(("warmup_s", Json::num(warmup_s)));
+            }
+            FaultKind::Slowdown { factor, until_s } => {
+                pairs.push(("factor", Json::num(factor)));
+                pairs.push(("until_s", Json::num(until_s)));
+            }
+            _ => {}
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sorts_and_roundtrips() {
+        let j = Json::parse(
+            r#"{"events": [
+                {"t_s": 20.0, "kind": "join", "group": 1, "warmup_s": 2.0},
+                {"t_s": 12.0, "kind": "crash", "group": 1},
+                {"t_s": 5.0, "kind": "slowdown", "group": 0, "factor": 1.5,
+                 "until_s": 9.0},
+                {"t_s": 8.0, "kind": "drain", "group": 2},
+                {"t_s": 30.0, "kind": "join"}
+            ]}"#,
+        )
+        .unwrap();
+        let plan = FaultPlan::from_json(&j).unwrap();
+        let times: Vec<f64> = plan.events.iter().map(|e| e.t_s).collect();
+        assert_eq!(times, vec![5.0, 8.0, 12.0, 20.0, 30.0]);
+        assert_eq!(plan.events[2].kind, FaultKind::Crash);
+        assert_eq!(plan.events[4].group, None, "groupless join grows fleet");
+        assert_eq!(
+            plan.events[3].kind,
+            FaultKind::Join { warmup_s: 2.0 }
+        );
+        // JSON round-trip preserves the plan exactly
+        let back = FaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn empty_and_default_plans_are_fault_free() {
+        let plan = FaultPlan::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(plan, FaultPlan::default());
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_malformed_events() {
+        for bad in [
+            r#"{"events": [{"t_s": -1.0, "kind": "crash", "group": 0}]}"#,
+            r#"{"events": [{"t_s": 1.0, "kind": "crash"}]}"#,
+            r#"{"events": [{"t_s": 1.0, "kind": "melt", "group": 0}]}"#,
+            r#"{"events": [{"t_s": 1.0, "kind": "slowdown", "group": 0,
+                "factor": 0.5, "until_s": 2.0}]}"#,
+            r#"{"events": [{"t_s": 1.0, "kind": "slowdown", "group": 0,
+                "factor": 2.0, "until_s": 0.5}]}"#,
+            r#"{"events": [{"t_s": 1.0, "kind": "join", "warmup_s": -3.0}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(FaultPlan::from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+}

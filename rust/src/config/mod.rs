@@ -2,10 +2,12 @@
 //! SLOs, and scheduler policy. Presets mirror the paper's evaluation setup;
 //! everything is also loadable from JSON files (see `configs/`).
 
+mod faults;
 mod hardware;
 mod model;
 mod parallel;
 
+pub use faults::{FaultEvent, FaultKind, FaultPlan};
 pub use hardware::{HardwareConfig, InterconnectConfig};
 pub use model::ModelConfig;
 pub use parallel::{ParallelismConfig, PlacementError};

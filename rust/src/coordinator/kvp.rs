@@ -22,10 +22,68 @@
 //! `GroupView::kv_free`, letting `SchedPolicy::route` refuse placements
 //! that would not fit. The default capacity is unlimited — the
 //! pre-capacity behavior, and what every oracle-parity test runs under.
+//!
+//! # Group lifecycle (elastic fleet)
+//!
+//! The fleet is a *runtime object*: each group slot carries a
+//! [`GroupState`] and every placement decision — shard growth in
+//! [`KvpManager::append_tokens`], routed admission, round-robin spreading —
+//! consults live membership instead of `0..n_groups`:
+//!
+//! * `Active` — serving and placeable; the only state a fresh fleet has.
+//! * `Draining` — autoscale-down in progress: takes **no** new KV (neither
+//!   shard growth nor short reservations), but keeps what it holds until
+//!   the work finishes. `occ == reserved == 0` marks the drain complete.
+//! * `Down` — crashed (or drained out): holds nothing, receives nothing.
+//!   [`KvpManager::crash_group`] is the transition — it drops the group's
+//!   ledger occupancy *and every shard it holds*, truncating each affected
+//!   request's shard map at the first dead shard (KV after a hole is
+//!   useless), and returns a [`CrashReport`] so the scheduler can re-route
+//!   reservations and re-prefill the lost ranges from the surviving
+//!   chunk-boundary prefix.
+//! * `Joining` — announced but not yet serving (warm-up); excluded from
+//!   placement until promoted to `Active`.
+//!
+//! Crashes append to `drop_log`, which relaxes the exactly-once onboarding
+//! invariant per lost shard: a (request, group) pair may be re-onboarded
+//! once per recorded drop — never for a surviving shard.
 
 use super::arena::Slot;
 use crate::kvcache::{GroupId, RequestId, ShardMap};
 use crate::util::slotvec::SlotVec;
+
+/// Lifecycle state of one KVP worker group. See the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupState {
+    /// Serving and placeable.
+    Active,
+    /// Autoscale-down: no new placements, existing work finishes.
+    Draining,
+    /// Crashed or drained out: holds nothing, receives nothing.
+    Down,
+    /// Announced but still warming up: excluded from placement.
+    Joining,
+}
+
+/// What [`KvpManager::crash_group`] tore down — everything the scheduler
+/// needs to recover without leaking ledger state.
+#[derive(Debug, Clone, Default)]
+pub struct CrashReport {
+    /// Ledger occupancy the dead group itself held (zeroed by the crash).
+    pub occ_dropped: u64,
+    /// Outstanding short-request reservations on the dead group, returned
+    /// so admission can re-reserve elsewhere — the ledger entry is zeroed
+    /// in the same step, so the leak is impossible by construction.
+    pub reserved_dropped: u64,
+    /// KV shards dropped fleet-wide: every shard on the dead group plus
+    /// post-hole shards on survivors (KV after a missing range is useless).
+    pub shards_lost: u64,
+    /// Per affected long request: (slot, KV tokens before the crash, KV
+    /// tokens surviving). The surviving prefix always ends at a shard
+    /// boundary, which is itself a chunk boundary — re-prefill restarts
+    /// there, not at token zero.
+    pub victims: Vec<(Slot, u64, u64)>,
+}
 
 #[derive(Debug, Clone)]
 struct LongEntry {
@@ -40,8 +98,11 @@ struct LongEntry {
 pub struct KvpManager {
     /// Max KV tokens of one request per group before onboarding the next.
     pub onboard_threshold: u64,
-    /// Total KVP groups available.
+    /// Total group *slots* (live or down) — the bound on group ids, not the
+    /// live-fleet size; see [`Self::n_active`] for placeable membership.
     pub n_groups: u32,
+    /// Lifecycle state per group slot.
+    states: Vec<GroupState>,
     /// Per-group KV-token capacity (long shards + short reservations);
     /// `u64::MAX` disables capacity accounting (the default).
     pub capacity: u64,
@@ -61,6 +122,15 @@ pub struct KvpManager {
     /// resume). Chunk-boundary preemption of the active request retains all
     /// shards, so yields never appear in `onboard_log`.
     pub yield_log: Vec<(f64, RequestId, bool)>,
+    /// Shard-drop events from crashes: (time, request, group). Each entry
+    /// licenses exactly one re-onboarding of that (request, group) pair in
+    /// `onboard_log` — see [`Self::onboard_log_is_duplicate_free`].
+    pub drop_log: Vec<(f64, RequestId, GroupId)>,
+    /// KV tokens absorbed past a group's free ledger room (overflow-absorb
+    /// with the fleet full, or threshold-filling a nearly-full group).
+    /// Zero whenever capacity is sized to the workload — the routing
+    /// signal the metrics surface as `kv_overcommit_tokens`.
+    pub kv_overcommit_tokens: u64,
 }
 
 impl KvpManager {
@@ -76,13 +146,149 @@ impl KvpManager {
         KvpManager {
             onboard_threshold,
             n_groups,
+            states: vec![GroupState::Active; n_groups as usize],
             capacity,
             occ: vec![0; n_groups as usize],
             reserved: vec![0; n_groups as usize],
             maps: SlotVec::new(),
             onboard_log: Vec::new(),
             yield_log: Vec::new(),
+            drop_log: Vec::new(),
+            kv_overcommit_tokens: 0,
         }
+    }
+
+    /// Lifecycle state of group `g` (out-of-range reads as `Down`).
+    pub fn state(&self, g: GroupId) -> GroupState {
+        self.states
+            .get(g as usize)
+            .copied()
+            .unwrap_or(GroupState::Down)
+    }
+
+    /// Whether group `g` may receive new placements (shards, reservations,
+    /// short routing). Only `Active` groups qualify.
+    pub fn is_placeable(&self, g: GroupId) -> bool {
+        self.state(g) == GroupState::Active
+    }
+
+    /// Whether group `g` still participates in serving (holds or may hold
+    /// work): everything but `Down`.
+    pub fn is_live(&self, g: GroupId) -> bool {
+        self.state(g) != GroupState::Down
+    }
+
+    /// Number of `Active` (placeable) groups.
+    pub fn n_active(&self) -> u32 {
+        self.states
+            .iter()
+            .filter(|&&s| s == GroupState::Active)
+            .count() as u32
+    }
+
+    /// Begin autoscale-down of group `g`: no new placements land on it;
+    /// resident shards and reservations stay until they finish. Contrast
+    /// with [`Self::crash_group`], which drops state instantly.
+    pub fn begin_drain(&mut self, g: GroupId) {
+        assert_eq!(
+            self.state(g),
+            GroupState::Active,
+            "drain of group {g} which is not active"
+        );
+        self.states[g as usize] = GroupState::Draining;
+    }
+
+    /// A draining group with nothing resident can leave the fleet.
+    pub fn drain_idle(&self, g: GroupId) -> bool {
+        self.state(g) == GroupState::Draining
+            && self.occupancy(g) == 0
+            && self.reserved_on(g) == 0
+    }
+
+    /// Complete a drain: the group leaves the fleet. Panics if it still
+    /// holds KV — migrate or finish that first ([`Self::drain_idle`]).
+    pub fn finish_drain(&mut self, g: GroupId) {
+        assert!(self.drain_idle(g), "finish_drain of a non-idle group {g}");
+        self.states[g as usize] = GroupState::Down;
+    }
+
+    /// Announce a joining group: revive slot `g` if it is `Down`, or grow
+    /// the fleet by one slot when `g` is `None` / past the end. Returns
+    /// the slot joined. The group is `Joining` — excluded from placement —
+    /// until [`Self::activate`].
+    pub fn announce_join(&mut self, g: Option<GroupId>) -> GroupId {
+        let g = g.unwrap_or(self.n_groups);
+        if (g as usize) < self.states.len() {
+            assert_eq!(
+                self.state(g),
+                GroupState::Down,
+                "join into occupied group slot {g}"
+            );
+            debug_assert!(self.occ[g as usize] == 0 && self.reserved[g as usize] == 0);
+            self.states[g as usize] = GroupState::Joining;
+            g
+        } else {
+            let g = self.states.len() as GroupId;
+            self.states.push(GroupState::Joining);
+            self.occ.push(0);
+            self.reserved.push(0);
+            self.n_groups = self.states.len() as u32;
+            g
+        }
+    }
+
+    /// Promote a `Joining` group to `Active` (warm-up complete).
+    pub fn activate(&mut self, g: GroupId) {
+        assert_eq!(
+            self.state(g),
+            GroupState::Joining,
+            "activate of group {g} which is not joining"
+        );
+        self.states[g as usize] = GroupState::Active;
+    }
+
+    /// Crash group `g`: its ledger occupancy and short reservations are
+    /// zeroed, every shard it holds is dropped, and so is every *later*
+    /// shard of each affected request (KV after the hole is useless — the
+    /// surviving prefix ends at a shard boundary, which is where re-prefill
+    /// restarts). Returns everything the scheduler needs to recover; see
+    /// [`CrashReport`]. Works from any non-`Down` state.
+    pub fn crash_group(&mut self, g: GroupId, t: f64) -> CrashReport {
+        assert!(self.is_live(g), "crash of group {g} which is already down");
+        let mut report = CrashReport {
+            reserved_dropped: std::mem::take(&mut self.reserved[g as usize]),
+            ..CrashReport::default()
+        };
+        let affected: Vec<usize> = self
+            .maps
+            .iter()
+            .filter(|(_, e)| e.map.shards.iter().any(|&(gg, _, _)| gg == g))
+            .map(|(s, _)| s)
+            .collect();
+        for s in affected {
+            let e = self.maps.get_mut(s).expect("affected slot vanished");
+            let cut = e
+                .map
+                .shards
+                .iter()
+                .position(|&(gg, _, _)| gg == g)
+                .expect("affected map lost its dead shard");
+            let before = e.map.total_tokens();
+            for &(gg, _, n) in &e.map.shards[cut..] {
+                self.occ[gg as usize] -= n;
+                if gg == g {
+                    report.occ_dropped += n;
+                }
+                report.shards_lost += 1;
+                self.drop_log.push((t, e.ext_id, gg));
+            }
+            e.map.shards.truncate(cut);
+            debug_assert!(e.map.check_contiguous());
+            report.victims.push((s as Slot, before, e.map.total_tokens()));
+        }
+        debug_assert_eq!(self.occ[g as usize], 0, "crash left occupancy behind");
+        self.states[g as usize] = GroupState::Down;
+        report
     }
 
     /// Register a request; it starts on `first_group` only.
@@ -114,26 +320,40 @@ impl KvpManager {
     /// worst-case footprints, so bounded over-commit beats fragmenting the
     /// shard map). With unlimited capacity (the default) every candidate
     /// has room and growth is exactly the original round-robin.
+    ///
+    /// Growth is also **lifecycle-aware**: only `Active` groups onboard new
+    /// shards, and a last shard whose group left `Active` (draining) takes
+    /// no further KV — growth moves to the next live group immediately.
+    /// Tokens landed past a group's free ledger room (either overflow
+    /// absorption or threshold-filling a nearly-full group) accumulate in
+    /// [`Self::kv_overcommit_tokens`].
     pub fn append_tokens(&mut self, s: Slot, mut tokens: u64, t: f64) -> Vec<GroupId> {
         let e = self.maps.get_mut(s as usize).expect("request not onboarded");
+        assert!(
+            !e.map.shards.is_empty(),
+            "append to request {} with no shards (crash-orphaned, not re-onboarded)",
+            e.ext_id
+        );
         let mut added = Vec::new();
         while tokens > 0 {
             let (g, _, len) = *e.map.shards.last().unwrap();
-            let fleet_exhausted = e.map.shards.len() as u32 >= self.n_groups;
-            let room = if fleet_exhausted {
-                // No more groups to onboard: the last shard absorbs the rest
-                // (the paper grows "until it reaches the max of 128 GPUs").
-                u64::MAX
-            } else {
+            let room = if self.states[g as usize] == GroupState::Active {
                 self.onboard_threshold.saturating_sub(len)
+            } else {
+                0 // non-Active groups take no new KV: move on immediately
             };
             if room == 0 {
                 // Onboard the next group: round-robin over the fleet,
-                // skipping groups that already hold a shard of this request
-                // and groups whose capacity ledger is out of KV room.
+                // skipping non-Active groups, groups that already hold a
+                // shard of this request, and groups whose capacity ledger
+                // is out of KV room.
                 let mut next = None;
-                for step in 1..=self.n_groups {
-                    let cand = (g + step) % self.n_groups;
+                let n_slots = self.states.len() as u32;
+                for step in 1..=n_slots {
+                    let cand = (g + step) % n_slots;
+                    if self.states[cand as usize] != GroupState::Active {
+                        continue;
+                    }
                     if e.map.shards.iter().any(|&(gg, _, _)| gg == cand) {
                         continue;
                     }
@@ -156,6 +376,9 @@ impl KvpManager {
                         // current last shard rather than blowing a full
                         // group's budget. Not permanent — the next append
                         // rescans the fleet.
+                        let free =
+                            Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, g);
+                        self.kv_overcommit_tokens += tokens.saturating_sub(free);
                         e.map.shards.last_mut().unwrap().2 += tokens;
                         self.occ[g as usize] += tokens;
                         break;
@@ -163,6 +386,8 @@ impl KvpManager {
                 }
             }
             let take = tokens.min(room);
+            let free = Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, g);
+            self.kv_overcommit_tokens += take.saturating_sub(free);
             e.map.shards.last_mut().unwrap().2 += take;
             self.occ[g as usize] += take;
             tokens -= take;
@@ -283,16 +508,72 @@ impl KvpManager {
         self.occ.get(g as usize).copied().unwrap_or(0)
     }
 
-    /// Invariant the test harness leans on: no (request, group) pair ever
-    /// appears twice in the onboarding log — a shard retained across a
-    /// yield/resume cycle is never re-onboarded.
+    /// Outstanding short-request reservation tokens on group `g`.
+    pub fn reserved_on(&self, g: GroupId) -> u64 {
+        self.reserved.get(g as usize).copied().unwrap_or(0)
+    }
+
+    /// Invariant the test harness leans on: a (request, group) pair appears
+    /// in the onboarding log at most once **per shard lifetime** — once,
+    /// plus once more per crash-drop of that pair recorded in `drop_log`.
+    /// A shard retained across a yield/resume cycle is never re-onboarded,
+    /// and with no crashes this is the strict at-most-once property.
     pub fn onboard_log_is_duplicate_free(&self) -> bool {
+        let mut drops: Vec<(RequestId, GroupId)> =
+            self.drop_log.iter().map(|&(_, r, g)| (r, g)).collect();
+        drops.sort_unstable();
         let mut pairs: Vec<(RequestId, GroupId)> =
             self.onboard_log.iter().map(|&(_, r, g)| (r, g)).collect();
-        let n = pairs.len();
         pairs.sort_unstable();
-        pairs.dedup();
-        pairs.len() == n
+        let mut i = 0;
+        while i < pairs.len() {
+            let mut n = 1;
+            while i + n < pairs.len() && pairs[i + n] == pairs[i] {
+                n += 1;
+            }
+            let lo = drops.partition_point(|&p| p < pairs[i]);
+            let hi = drops.partition_point(|&p| p <= pairs[i]);
+            if n > 1 + (hi - lo) {
+                return false;
+            }
+            i += n;
+        }
+        true
+    }
+
+    /// Ledger conservation, checked by the invariant harness after every
+    /// step: the incremental `occ` mirrors the sum of shard tokens per
+    /// group across every onboarded map; `Down` groups hold nothing; and
+    /// for a finite capacity, `occ + reserved + kv_free == capacity` on
+    /// every group (free saturates at zero only when over-commit was
+    /// actually absorbed, i.e. `kv_overcommit_tokens > 0`).
+    pub fn ledger_is_conserved(&self) -> bool {
+        let mut sums = vec![0u64; self.states.len()];
+        for (_, e) in self.maps.iter() {
+            for &(g, _, n) in &e.map.shards {
+                sums[g as usize] += n;
+            }
+        }
+        for g in 0..self.states.len() {
+            if sums[g] != self.occ[g] {
+                return false;
+            }
+            if self.states[g] == GroupState::Down && (self.occ[g] != 0 || self.reserved[g] != 0) {
+                return false;
+            }
+            if self.capacity != u64::MAX {
+                let used = self.occ[g].saturating_add(self.reserved[g]);
+                let free = Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, g as GroupId);
+                if used <= self.capacity {
+                    if used + free != self.capacity {
+                        return false;
+                    }
+                } else if free != 0 || self.kv_overcommit_tokens == 0 {
+                    return false;
+                }
+            }
+        }
+        true
     }
 
     pub fn release(&mut self, s: Slot) {
@@ -515,6 +796,167 @@ mod tests {
         assert!(added.is_empty());
         assert_eq!(k.local_lengths(1), vec![(0, 30)]);
         assert!(k.onboard_log_is_duplicate_free());
+    }
+
+    #[test]
+    fn crash_drops_dead_and_post_hole_shards() {
+        let mut k = KvpManager::new(100, 4);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.append_tokens(1, 250, 1.0); // g0: 100, g1: 100, g2: 50
+        assert_eq!(k.active_groups(1), 3);
+
+        let rep = k.crash_group(1, 2.0);
+        // the dead shard AND the post-hole shard on surviving group 2 drop
+        assert_eq!(rep.shards_lost, 2);
+        assert_eq!(rep.occ_dropped, 100);
+        assert_eq!(rep.victims, vec![(1, 250, 100)]);
+        assert_eq!(k.local_lengths(1), vec![(0, 100)]);
+        assert_eq!(k.occupancy(1), 0);
+        assert_eq!(k.occupancy(2), 0);
+        assert_eq!(k.state(1), GroupState::Down);
+        assert!(k.ledger_is_conserved());
+        assert_eq!(k.drop_log.len(), 2);
+
+        // regrowth skips the dead group and may revisit dropped group 2
+        let added = k.append_tokens(1, 150, 3.0);
+        assert_eq!(added, vec![2]);
+        assert_eq!(k.local_lengths(1), vec![(0, 100), (2, 150)]);
+        assert!(k.shard_map(1).unwrap().check_contiguous());
+        assert!(k.onboard_log_is_duplicate_free());
+    }
+
+    #[test]
+    fn crash_returns_reservations_and_zeroes_ledger() {
+        let mut k = KvpManager::with_capacity(100, 3, 1_000);
+        k.reserve(2, 400);
+        k.onboard_request(1, 1, 2, 0.0);
+        k.append_tokens(1, 60, 0.5);
+        let rep = k.crash_group(2, 1.0);
+        assert_eq!(rep.reserved_dropped, 400);
+        assert_eq!(rep.occ_dropped, 60);
+        assert_eq!(rep.victims, vec![(1, 60, 0)]);
+        assert_eq!(k.reserved_on(2), 0);
+        assert_eq!(k.occupancy(2), 0);
+        assert!(k.ledger_is_conserved());
+        // the fully wiped victim must be re-onboarded before appending
+        k.release(1);
+        k.onboard_request(1, 1, 0, 2.0);
+        k.append_tokens(1, 60, 2.5);
+        assert_eq!(k.local_lengths(1), vec![(0, 60)]);
+        assert!(k.onboard_log_is_duplicate_free());
+    }
+
+    #[test]
+    fn surviving_shard_reonboard_is_flagged_as_duplicate() {
+        let mut k = KvpManager::new(100, 4);
+        k.onboard_request(1, 7, 0, 0.0);
+        k.append_tokens(1, 150, 1.0); // g0, g1
+        assert!(k.onboard_log_is_duplicate_free());
+        // a re-onboard with no recorded drop is exactly the bug class the
+        // invariant exists to catch
+        k.onboard_log.push((2.0, 7, 0));
+        assert!(!k.onboard_log_is_duplicate_free());
+    }
+
+    #[test]
+    fn draining_group_takes_no_new_kv_but_keeps_resident() {
+        let mut k = KvpManager::new(100, 3);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.append_tokens(1, 50, 0.5);
+        k.begin_drain(0);
+        assert!(!k.is_placeable(0) && k.is_live(0));
+        // the half-full draining shard stops growing: growth moves to g1
+        let added = k.append_tokens(1, 30, 1.0);
+        assert_eq!(added, vec![1]);
+        assert_eq!(k.local_lengths(1), vec![(0, 50), (1, 30)]);
+        assert_eq!(k.occupancy(0), 50);
+        assert!(!k.drain_idle(0));
+        k.release(1);
+        assert!(k.drain_idle(0));
+        k.finish_drain(0);
+        assert_eq!(k.state(0), GroupState::Down);
+        assert!(k.ledger_is_conserved());
+    }
+
+    #[test]
+    fn join_revives_a_down_slot_and_grows_the_fleet() {
+        let mut k = KvpManager::new(100, 2);
+        k.crash_group(1, 1.0);
+        assert_eq!(k.n_active(), 1);
+        let g = k.announce_join(Some(1));
+        assert_eq!(g, 1);
+        assert_eq!(k.state(1), GroupState::Joining);
+        assert!(!k.is_placeable(1)); // warm-up: excluded from placement
+        k.activate(1);
+        assert!(k.is_placeable(1));
+        // None / past-the-end grows the fleet by a slot
+        let g = k.announce_join(None);
+        assert_eq!(g, 2);
+        assert_eq!(k.n_groups, 3);
+        k.activate(2);
+        assert_eq!(k.n_active(), 3);
+        // the revived and the new slot both accept growth
+        k.onboard_request(1, 1, 0, 2.0);
+        let added = k.append_tokens(1, 250, 3.0);
+        assert_eq!(added, vec![1, 2]);
+        assert!(k.ledger_is_conserved());
+    }
+
+    #[test]
+    fn overcommit_counter_tracks_absorbed_tokens_only() {
+        // capacity sized to the workload: zero over-commit
+        let mut k = KvpManager::with_capacity(100, 2, 200);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.append_tokens(1, 200, 1.0);
+        assert_eq!(k.kv_overcommit_tokens, 0);
+
+        // fleet full: the absorbed overflow past free room is counted
+        let mut k = KvpManager::with_capacity(100, 2, 100);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.append_tokens(1, 230, 1.0); // g0: 100, g1: 100 + 30 absorbed
+        assert_eq!(k.kv_overcommit_tokens, 30);
+        assert!(k.ledger_is_conserved());
+
+        // unlimited capacity never over-commits by definition
+        let mut k = KvpManager::new(10, 2);
+        k.onboard_request(1, 1, 0, 0.0);
+        k.append_tokens(1, 500, 1.0);
+        assert_eq!(k.kv_overcommit_tokens, 0);
+    }
+
+    #[test]
+    fn prop_crash_recover_keeps_ledger_conserved() {
+        check("kvp crash/recover ledger conserved", 100, |rng| {
+            let groups = rng.range_u64(3, 8) as u32;
+            let threshold = rng.range_u64(10, 500);
+            let mut k = KvpManager::new(threshold, groups);
+            for s in 0..3u64 {
+                k.onboard_request(s as u32, s, rng.below(groups as u64) as GroupId, 0.0);
+                k.append_tokens(s as u32, rng.range_u64(1, threshold * 3), 0.1);
+            }
+            let victim = rng.below(groups as u64) as GroupId;
+            let rep = k.crash_group(victim, 1.0);
+            assert!(k.ledger_is_conserved());
+            assert_eq!(k.occupancy(victim), 0);
+            // orphaned requests (no surviving prefix) must re-onboard fresh
+            for &(s, _, kept) in &rep.victims {
+                if kept == 0 {
+                    let ext = s as u64;
+                    k.release(s);
+                    let mut first = (victim + 1) % groups;
+                    while !k.is_placeable(first) {
+                        first = (first + 1) % groups;
+                    }
+                    k.onboard_request(s, ext, first, 2.0);
+                }
+            }
+            for s in 0..3u32 {
+                k.append_tokens(s, rng.range_u64(1, threshold * 2), 3.0);
+                assert!(k.shard_map(s).unwrap().check_contiguous());
+            }
+            assert!(k.ledger_is_conserved());
+            assert!(k.onboard_log_is_duplicate_free());
+        });
     }
 
     #[test]

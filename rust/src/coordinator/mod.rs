@@ -53,6 +53,17 @@
 //! sharded long request at a chunk boundary ([`KvpManager::yield_active`]
 //! retains every per-group shard; resume is bit-exact). All three modes
 //! execute through the one pool-scheduled `Simulation::step`.
+//!
+//! # Elastic fleet & failure injection
+//!
+//! Group membership is a runtime object: each group carries a
+//! [`GroupState`] lifecycle (`Active`/`Draining`/`Down`/`Joining`) and
+//! every placement path consults it. [`KvpManager::crash_group`] models a
+//! group loss — ledger and shards dropped, a [`CrashReport`] handed to the
+//! scheduler so victims re-enter as re-prefill work from their last
+//! surviving chunk boundary. See `crate::config::FaultPlan` for the
+//! deterministic injection schedule and the [`kvp`] module docs for the
+//! lifecycle rules.
 
 pub mod arena;
 pub mod chunking;
@@ -67,7 +78,7 @@ pub mod topology;
 
 pub use arena::{RequestArena, Slot};
 pub use chunking::{AdaptiveChunk, ChunkPolicy, DeadlineChunk, StaticChunk};
-pub use kvp::KvpManager;
+pub use kvp::{CrashReport, GroupState, KvpManager};
 pub use policy::{Edf, Fcfs, GroupView, KeyShape, Lars, SchedPolicy, SchedPolicyKind, Srpt};
 pub use readyset::ReadySet;
 pub use request::{Phase, Request};

@@ -107,16 +107,48 @@ impl Request {
         self.phase = Phase::Prefilling;
         self.prefilled += c;
         if self.prefilled == self.prompt_len {
-            // Prefill completion produces the first output token.
+            // Prefill completion produces the first output token. After a
+            // crash rewind the first token was already delivered — TTFT is
+            // a client-visible latency and a re-prefill cannot undo it.
             self.phase = Phase::Decoding;
-            self.first_token_s = Some(t);
+            if self.first_token_s.is_none() {
+                self.first_token_s = Some(t);
+            }
             self.last_token_s = Some(t);
-            self.decoded = 1;
+            self.decoded = self.decoded.max(1);
             if self.decoded >= self.max_new_tokens {
                 self.phase = Phase::Finished;
                 self.finished_s = Some(t);
             }
         }
+    }
+
+    /// Crash recovery: roll KV progress back to `kv_prefix` total tokens
+    /// (the surviving shard prefix — always a chunk boundary). Prompt KV
+    /// past the prefix re-enters as prefill work; lost decode-range KV is
+    /// regenerated token by token. Returns the KV tokens that must be
+    /// recomputed (the re-prefill cost). Latency bookkeeping is untouched:
+    /// delivered tokens stay delivered, so TTFT/TBT history survives and
+    /// `remaining_work_s` grows to keep LARS slack honest.
+    pub fn rewind_prefill(&mut self, kv_prefix: u64) -> u64 {
+        assert!(self.phase != Phase::Finished, "rewind of a finished request");
+        let lost = self.kv_len().saturating_sub(kv_prefix);
+        if lost == 0 {
+            return 0;
+        }
+        if kv_prefix >= self.prompt_len {
+            // Prompt KV intact; only decode-range KV was lost.
+            self.decoded = kv_prefix - self.prompt_len;
+        } else {
+            self.prefilled = kv_prefix;
+            self.decoded = 0;
+            self.phase = if kv_prefix == 0 {
+                Phase::Queued
+            } else {
+                Phase::Prefilling
+            };
+        }
+        lost
     }
 
     /// Record one decode token completing at time `t`.
@@ -207,5 +239,55 @@ mod tests {
         r.complete_chunk(10, 1.0);
         assert!(r.is_finished());
         assert_eq!(r.ttft(), Some(1.0));
+    }
+
+    #[test]
+    fn rewind_mid_prefill_restarts_from_the_boundary() {
+        let mut r = Request::new(7, 1_000, 4, 0.0).with_slo(4.0, 30.0);
+        r.complete_chunk(500, 1.0);
+        r.complete_chunk(250, 2.0);
+        let lost = r.rewind_prefill(500);
+        assert_eq!(lost, 250);
+        assert_eq!(r.prefilled, 500);
+        assert_eq!(r.phase, Phase::Prefilling);
+        // LARS slack stays honest: lost work re-enters the estimate
+        assert!((r.remaining_work_s() - 2.0).abs() < 1e-12);
+        // deadline unchanged — rewind is rekey-legal in the ready set
+        assert_eq!(r.deadline_s, 30.0);
+        r.complete_chunk(500, 3.0);
+        assert_eq!(r.phase, Phase::Decoding);
+        assert_eq!(r.ttft(), Some(3.0));
+    }
+
+    #[test]
+    fn rewind_to_zero_requeues_and_noop_rewind_is_free() {
+        let mut r = Request::new(8, 100, 2, 0.0);
+        r.complete_chunk(50, 1.0);
+        assert_eq!(r.rewind_prefill(50), 0); // nothing lost
+        assert_eq!(r.phase, Phase::Prefilling);
+        assert_eq!(r.rewind_prefill(0), 50);
+        assert_eq!(r.phase, Phase::Queued);
+        assert_eq!(r.kv_len(), 0);
+    }
+
+    #[test]
+    fn rewind_during_decode_keeps_ttft_and_regenerates_lost_tokens() {
+        let mut r = Request::new(9, 100, 5, 0.0);
+        r.complete_chunk(100, 1.0);
+        r.complete_decode(1.1);
+        r.complete_decode(1.2); // decoded = 3, kv = 103
+        let lost = r.rewind_prefill(101); // lose 2 decode-range tokens
+        assert_eq!(lost, 2);
+        assert_eq!(r.phase, Phase::Decoding);
+        assert_eq!(r.decoded, 1);
+        assert_eq!(r.ttft(), Some(1.0));
+        // losing prompt KV too sends it back through prefill, but the
+        // delivered first token keeps its timestamp
+        let lost = r.rewind_prefill(60);
+        assert_eq!(lost, 41);
+        assert_eq!(r.phase, Phase::Prefilling);
+        r.complete_chunk(40, 5.0);
+        assert_eq!(r.ttft(), Some(1.0), "TTFT must not be overwritten");
+        assert_eq!(r.decoded, 1);
     }
 }

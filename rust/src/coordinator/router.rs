@@ -132,6 +132,39 @@ impl Router {
         g
     }
 
+    /// Round-robin over a live-membership mask (the elastic fleet): the
+    /// cursor scans forward to the first placeable group and advances past
+    /// it. With every group placeable this is exactly
+    /// [`Self::route_round_robin`]. Returns `None` when no group is
+    /// placeable (the caller defers the admission).
+    pub fn route_round_robin_masked(
+        &mut self,
+        s: Slot,
+        prompt_len: u64,
+        placeable: &[bool],
+    ) -> Option<GroupId> {
+        let n = self.load.len() as GroupId;
+        debug_assert_eq!(placeable.len(), n as usize);
+        for step in 0..n {
+            let g = (self.rr_next + step) % n;
+            if placeable.get(g as usize).copied().unwrap_or(false) {
+                self.rr_next = (g + 1) % n;
+                self.route_to(s, prompt_len, g);
+                return Some(g);
+            }
+        }
+        None
+    }
+
+    /// Grow the per-group load ledger to `n_groups` slots (a joining group
+    /// past the current fleet end starts with zero load). Shrinking never
+    /// happens — a departed group keeps its slot, `Down` and empty.
+    pub fn grow_to(&mut self, n_groups: u32) {
+        while self.load.len() < n_groups as usize {
+            self.load.push(0);
+        }
+    }
+
     /// Record an externally chosen placement (the policy-aware routed mode
     /// picks `g` via `SchedPolicy::route`; the router only does the load
     /// and placement accounting).
@@ -212,6 +245,39 @@ mod tests {
         assert_eq!(r.route_round_robin(3, 10), 2);
         assert_eq!(r.route_round_robin(4, 10), 0);
         assert_eq!(r.load_of(0), 1_000_010);
+    }
+
+    #[test]
+    fn masked_round_robin_skips_dead_groups() {
+        let mut r = Router::new(4);
+        let mask = [true, false, true, true]; // group 1 is down
+        assert_eq!(r.route_round_robin_masked(1, 10, &mask), Some(0));
+        assert_eq!(r.route_round_robin_masked(2, 10, &mask), Some(2));
+        assert_eq!(r.route_round_robin_masked(3, 10, &mask), Some(3));
+        assert_eq!(r.route_round_robin_masked(4, 10, &mask), Some(0));
+        assert_eq!(r.load_of(1), 0, "dead group received load");
+        // an all-dead fleet defers rather than placing
+        assert_eq!(r.route_round_robin_masked(5, 10, &[false; 4]), None);
+        // all-live mask is exactly the unmasked round-robin
+        let mut a = Router::new(3);
+        let mut b = Router::new(3);
+        for s in 0..7 {
+            assert_eq!(
+                a.route_round_robin_masked(s, 5, &[true; 3]),
+                Some(b.route_round_robin(s, 5))
+            );
+        }
+    }
+
+    #[test]
+    fn grow_to_extends_the_fleet() {
+        let mut r = Router::new(2);
+        r.grow_to(4);
+        assert_eq!(r.n_groups(), 4);
+        r.route_to(1, 100, 3);
+        assert_eq!(r.load_of(3), 100);
+        r.grow_to(3); // never shrinks
+        assert_eq!(r.n_groups(), 4);
     }
 
     #[test]

@@ -353,6 +353,23 @@ impl Scheduler {
         }
     }
 
+    /// Crash teardown for this replica: strip every queued and decoding
+    /// request out and append their slots to `out` (cleared first; ready
+    /// requests first, then decoding requests in decode-entry order). The
+    /// scheduler is left empty and reusable — a group rejoining after a
+    /// crash starts from a clean slate. The caller owns re-routing the
+    /// evicted requests and rewinding their KV progress.
+    pub fn evict_all(&mut self, out: &mut Vec<Slot>) {
+        out.clear();
+        out.extend(self.ready.iter());
+        for &s in out.iter() {
+            self.ready.remove(s);
+        }
+        out.append(&mut self.decoding);
+        self.decode_ctxs.clear();
+        self.running_prefill = None;
+    }
+
     /// Convenience wrapper for unsharded replicas (tests / cold paths):
     /// decode contexts track plain `kv_len`, finished set returned fresh.
     pub fn complete_iteration(
@@ -519,6 +536,40 @@ mod tests {
         let p = s.next_batch(&reqs, &pm, &slo, 0.0);
         assert_eq!(p.decodes, vec![slots[0], slots[2]]);
         assert_eq!(s.decode_ctxs(), &[reqs[slots[0]].kv_len(), reqs[slots[2]].kv_len()]);
+    }
+
+    #[test]
+    fn evict_all_empties_the_scheduler_for_reuse() {
+        let (pm, slo, mut reqs) = setup();
+        let mut s = static_sched(64);
+        // one decoding, one mid-prefill, one still queued
+        let deco = reqs.insert(Request::new(1, 4, 8, 0.0));
+        s.enqueue(deco, &reqs);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.0);
+        s.complete_iteration(&p, &mut reqs, 0.1);
+        let mid = reqs.insert(Request::new(2, 256, 1, 0.1));
+        let queued = reqs.insert(Request::new(3, 64, 1, 0.2));
+        s.enqueue(mid, &reqs);
+        s.enqueue(queued, &reqs);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.2);
+        s.complete_iteration(&p, &mut reqs, 0.3); // mid is now running_prefill
+
+        let mut evicted = Vec::new();
+        s.evict_all(&mut evicted);
+        evicted.sort_unstable();
+        let mut want = vec![deco, mid, queued];
+        want.sort_unstable();
+        assert_eq!(evicted, want);
+        assert!(!s.has_work());
+        assert_eq!(s.n_decoding(), 0);
+        assert!(s.decode_ctxs().is_empty());
+
+        // the scheduler is reusable after teardown
+        s.enqueue(queued, &reqs);
+        let p = s.next_batch(&reqs, &pm, &slo, 0.4);
+        assert_eq!(p.prefill, Some((queued, 64)));
+        // re-running the evicted mid-prefill elsewhere is not a preemption
+        assert_eq!(s.preemptions, 0);
     }
 
     #[test]

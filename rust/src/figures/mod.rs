@@ -17,6 +17,8 @@ pub const ALL_FIGURES: &[&str] = &[
     "fig9", "disagg", "kvpthresh",
     // scheduling-policy comparison on the heterogeneous convoy trace (sec. 5)
     "sched",
+    // robustness: 1-of-N KVP group crash, boundary re-prefill recovery
+    "faults",
 ];
 
 pub fn run(figure: &str) -> anyhow::Result<()> {
@@ -45,6 +47,7 @@ pub fn run(figure: &str) -> anyhow::Result<()> {
         "disagg" => disagg(),
         "kvpthresh" => kvpthresh(),
         "sched" => sched(),
+        "faults" => faults(),
         "all" => {
             for f in ALL_FIGURES {
                 run(f)?;
@@ -795,6 +798,110 @@ pub fn sched() -> anyhow::Result<()> {
     }
     println!("routed: shorts steered off the sharding groups (idle groups = serving pool);");
     println!("active documents yield at chunk boundaries to fresher urgent documents.");
+    Ok(())
+}
+
+/// Robustness harness (not a paper figure): recovery cost when 1 of 4 KVP
+/// groups crashes mid-run under the kvp_convoy trace. Medha's chunk-boundary
+/// re-prefill (surviving shards keep their KV; only the lost ranges are
+/// recomputed) is compared for LARS vs FCFS, and against a disaggregated
+/// restart where the whole context is re-prefilled and the KV cache
+/// re-shipped across pools (`baselines/disagg.rs`).
+pub fn faults() -> anyhow::Result<()> {
+    use crate::baselines::DisaggModel;
+    use crate::config::{FaultEvent, FaultKind, FaultPlan};
+    use crate::coordinator::{RoutingMode, SchedPolicyKind};
+
+    println!("\n== faults: 1-of-4 KVP group crash under the convoy trace (8B, tp=8) ==");
+    let kcfg = workload::KvpConvoyConfig::default();
+
+    // Probe run (fault-free) to find a moment when document shards are
+    // resident: crash just after a mid-run KVP onboard event, targeting the
+    // group that onboarded — deterministic, but robust to perf-model drift.
+    let probe = crate::sim::run_kvp_convoy_scenario_with_faults(
+        SchedPolicyKind::Lars,
+        RoutingMode::Routed,
+        &kcfg,
+        42,
+        FaultPlan::default(),
+    );
+    let log = probe.kvp_onboard_log();
+    anyhow::ensure!(!log.is_empty(), "probe run never sharded a document");
+    let (t_mid, _, victim) = log[log.len() / 2];
+    let crash_t = t_mid + 0.5;
+    println!(
+        "crash: group {victim} of 4 at t={} ({} docs of {} sharded across the fleet; \
+         lost shards resume from the last surviving chunk boundary)",
+        fmt_duration(crash_t),
+        kcfg.n_docs,
+        fmt_tokens(kcfg.doc_prompt)
+    );
+    println!(
+        "{:<6} {:<12} {:<6} {:>6} {:>9} {:>7} {:>11} {:>10} {:>10}",
+        "policy", "routing", "fault", "done", "goodput", "shards", "re-prefill", "rec p50", "rec p95"
+    );
+    for (kind, routing) in [
+        (SchedPolicyKind::Fcfs, RoutingMode::RoundRobin),
+        (SchedPolicyKind::Lars, RoutingMode::Routed),
+    ] {
+        for crashed in [false, true] {
+            let plan = if crashed {
+                FaultPlan {
+                    events: vec![FaultEvent {
+                        t_s: crash_t,
+                        group: Some(victim),
+                        kind: FaultKind::Crash,
+                    }],
+                }
+            } else {
+                FaultPlan::default()
+            };
+            let mut sim =
+                crate::sim::run_kvp_convoy_scenario_with_faults(kind, routing, &kcfg, 42, plan);
+            let s = sim.metrics.summary();
+            println!(
+                "{:<6} {:<12} {:<6} {:>6} {:>8.2}/s {:>7} {:>11} {:>10} {:>10}",
+                kind.name(),
+                routing.name(),
+                if crashed { "crash" } else { "none" },
+                s.finished,
+                s.goodput_rps,
+                s.shards_lost,
+                fmt_tokens(s.reprefill_tokens),
+                fmt_duration(s.recovery_wait_p50),
+                fmt_duration(s.recovery_wait_p95)
+            );
+        }
+    }
+
+    // Analytic recovery cost for ONE document losing its back-half shard:
+    // Medha recomputes only the lost range (the surviving prefix KV is
+    // reused, so the cost is full(n) - full(n/2)); a disaggregated restart
+    // re-prefills the whole context AND re-ships the KV cache.
+    let dep = dep8b(8, 1, 4);
+    let pm = pm_for(&dep);
+    let dm = DisaggModel::new(dep.model.clone(), dep.hardware.clone(), dep.parallel);
+    let n = kcfg.doc_prompt;
+    let medha_s = pm.prefill_time_spp(n, 4096) - pm.prefill_time_spp(n / 2, 4096);
+    let l = dm.latency(n, 4096);
+    println!(
+        "per-document recovery, {} context, back-half shard lost:",
+        fmt_tokens(n)
+    );
+    println!(
+        "  medha boundary re-prefill: {} ({} recomputed)",
+        fmt_duration(medha_s),
+        fmt_tokens(n / 2)
+    );
+    println!(
+        "  disagg full restart:       {} ({} re-prefill + {} KV re-transfer) — {:.1}x worse",
+        fmt_duration(l.prefill_s + l.transfer_s),
+        fmt_duration(l.prefill_s),
+        fmt_duration(l.transfer_s),
+        (l.prefill_s + l.transfer_s) / medha_s
+    );
+    println!("every request completes; degradation shows up as re-prefill work and");
+    println!("recovery wait, not dropped requests (no request left behind).");
     Ok(())
 }
 

@@ -25,6 +25,7 @@ USAGE:
                   [--policy fcfs|srpt|edf|lars] [--routing blind|round-robin|routed]
                   [--kvp-capacity TOKENS] [--workload mixed|convoy|kvp-convoy]
                   [--ctx TOKENS] [--requests N] [--rate R] [--horizon S] [--seed S]
+                  [--faults PLAN.json]   deterministic group crash/join/drain/slowdown schedule
   medha reproduce --figure <fig1|table1|fig5a|...|all>
   medha inspect   [--artifacts DIR]
   medha table1
@@ -129,6 +130,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let n = args.usize_or("requests", 8);
     let rate = args.f64_or("rate", 0.0);
     let mut opts = SimOptions::default();
+    // Deterministic fleet fault schedule (see config::FaultPlan for the
+    // JSON schema): crashes, drains, joins, slowdowns at precise times.
+    if let Some(path) = args.get("faults") {
+        opts.faults = medha::config::FaultPlan::load(std::path::Path::new(path))?;
+        println!("fault plan: {} events from {path}", opts.faults.events.len());
+    }
     let w = match args.str_or("workload", "mixed") {
         "convoy" => {
             let cfg = ConvoyConfig {
@@ -213,6 +220,24 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             s.routing_refusals,
             s.n_deferred,
             fmt_duration(s.deferral_wait_p95)
+        );
+    }
+    if s.group_crashes > 0 {
+        println!(
+            "degradation: {} crashes, {} shards lost, {} tokens re-prefilled \
+             ({} victims, recovery wait p50/p95 {} / {})",
+            s.group_crashes,
+            s.shards_lost,
+            fmt_tokens(s.reprefill_tokens),
+            s.n_recovered,
+            fmt_duration(s.recovery_wait_p50),
+            fmt_duration(s.recovery_wait_p95)
+        );
+    }
+    if s.kv_overcommit_tokens > 0 {
+        println!(
+            "kv over-commit: {} tokens absorbed past the ledger (fleet full)",
+            fmt_tokens(s.kv_overcommit_tokens)
         );
     }
     Ok(())

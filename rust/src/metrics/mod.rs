@@ -107,6 +107,24 @@ pub struct Metrics {
     /// this distribution is what the deferred-queue urgency ordering is
     /// judged by.
     pub deferral_wait: Samples,
+    /// KVP group crashes applied by the fault plan (one per `crash` event
+    /// that fired). Zero in fault-free runs.
+    pub group_crashes: u64,
+    /// KV shards dropped by crashes fleet-wide: shards on the dead groups
+    /// plus post-hole shards on survivors.
+    pub shards_lost: u64,
+    /// KV tokens that had to be recomputed after crashes: each victim's
+    /// progress past its last surviving chunk boundary, summed at rewind
+    /// time. The graceful-degradation cost a full-restart baseline pays as
+    /// the *entire* context instead.
+    pub reprefill_tokens: u64,
+    /// KV tokens the KVP manager absorbed past a group's free ledger room
+    /// (overflow-absorb with the fleet full). Synced from the manager at
+    /// run end; zero whenever capacity is sized to the workload.
+    pub kv_overcommit_tokens: u64,
+    /// Per-victim recovery waits: crash time to the first chunk of
+    /// re-prefill progress after it, one sample per crash victim.
+    pub recovery_wait: Samples,
     /// Active-yield audit trail, in event order; dropped (like `iters`)
     /// when `keep_iter_records` is off — the counter stays exact.
     pub preemption_events: Vec<PreemptionEvent>,
@@ -149,6 +167,11 @@ impl Default for Metrics {
             active_preemptions: 0,
             routing_refusals: 0,
             deferral_wait: Samples::new(),
+            group_crashes: 0,
+            shards_lost: 0,
+            reprefill_tokens: 0,
+            kv_overcommit_tokens: 0,
+            recovery_wait: Samples::new(),
             preemption_events: Vec::new(),
             group_busy_s: Vec::new(),
             group_prefill_tokens: Vec::new(),
@@ -175,6 +198,7 @@ impl Metrics {
             mfu: Samples::reservoir(reservoir, seed ^ 0x0066_7564),
             mbu: Samples::reservoir(reservoir, seed ^ 0x0062_7564),
             deferral_wait: Samples::reservoir(reservoir, seed ^ 0x6465_6665),
+            recovery_wait: Samples::reservoir(reservoir, seed ^ 0x7265_6376),
             keep_iter_records: false,
             tbt_p99_stream: Some(P2Quantile::new(0.99)),
             ..Metrics::default()
@@ -246,6 +270,12 @@ impl Metrics {
     /// to successful placement. Call once per deferred request.
     pub fn record_deferral_wait(&mut self, s: f64) {
         self.deferral_wait.add(s);
+    }
+
+    /// Record one crash victim's recovery wait: the crash that cost it KV
+    /// to its first re-prefill progress afterwards. Call once per victim.
+    pub fn record_recovery_wait(&mut self, s: f64) {
+        self.recovery_wait.add(s);
     }
 
     pub fn record_tbt(&mut self, s: f64) {
@@ -356,6 +386,13 @@ impl Metrics {
             routing_refusals: self.routing_refusals,
             n_deferred: self.deferral_wait.count(),
             deferral_wait_p95: self.deferral_wait.p95(),
+            group_crashes: self.group_crashes,
+            shards_lost: self.shards_lost,
+            reprefill_tokens: self.reprefill_tokens,
+            kv_overcommit_tokens: self.kv_overcommit_tokens,
+            n_recovered: self.recovery_wait.count(),
+            recovery_wait_p50: self.recovery_wait.median(),
+            recovery_wait_p95: self.recovery_wait.p95(),
         }
     }
 }
@@ -395,6 +432,21 @@ pub struct MetricsSummary {
     pub n_deferred: u64,
     /// p95 of the deferral→placement wait (NaN when nothing deferred).
     pub deferral_wait_p95: f64,
+    /// KVP group crashes the fault plan applied; zero fault-free.
+    pub group_crashes: u64,
+    /// KV shards dropped by crashes (dead-group + post-hole survivors).
+    pub shards_lost: u64,
+    /// KV tokens recomputed from chunk boundaries after crashes.
+    pub reprefill_tokens: u64,
+    /// KV tokens absorbed past a group's free ledger room; zero whenever
+    /// capacity is sized to the workload (asserted by the golden scenarios).
+    pub kv_overcommit_tokens: u64,
+    /// Crash victims that recorded a recovery wait.
+    pub n_recovered: u64,
+    /// p50 of crash→first-re-prefill-progress (NaN without crashes).
+    pub recovery_wait_p50: f64,
+    /// p95 of crash→first-re-prefill-progress (NaN without crashes).
+    pub recovery_wait_p95: f64,
 }
 
 #[cfg(test)]
@@ -519,6 +571,39 @@ mod tests {
         }
         assert_eq!(lean.deferral_wait.count(), 10);
         assert!(lean.deferral_wait.len() <= 2);
+    }
+
+    #[test]
+    fn degradation_counters_flow_into_the_summary() {
+        let mut m = Metrics::new();
+        let s = m.summary();
+        assert_eq!(s.group_crashes, 0);
+        assert_eq!(s.shards_lost, 0);
+        assert_eq!(s.reprefill_tokens, 0);
+        assert_eq!(s.kv_overcommit_tokens, 0);
+        assert_eq!(s.n_recovered, 0);
+        assert!(s.recovery_wait_p95.is_nan());
+        m.group_crashes = 1;
+        m.shards_lost = 3;
+        m.reprefill_tokens = 8_192;
+        m.kv_overcommit_tokens = 64;
+        m.record_recovery_wait(0.5);
+        m.record_recovery_wait(1.5);
+        let s = m.summary();
+        assert_eq!(s.group_crashes, 1);
+        assert_eq!(s.shards_lost, 3);
+        assert_eq!(s.reprefill_tokens, 8_192);
+        assert_eq!(s.kv_overcommit_tokens, 64);
+        assert_eq!(s.n_recovered, 2);
+        assert!((s.recovery_wait_p50 - 1.0).abs() < 0.51);
+        assert!(s.recovery_wait_p95 >= s.recovery_wait_p50);
+        // streaming mode reservoirs the wait samples like every other set
+        let mut lean = Metrics::streaming(4, 3);
+        for i in 0..10 {
+            lean.record_recovery_wait(i as f64);
+        }
+        assert_eq!(lean.recovery_wait.count(), 10);
+        assert!(lean.recovery_wait.len() <= 4);
     }
 
     #[test]

@@ -53,6 +53,34 @@
 //! state, so an admission costs O(groups) even at million-request
 //! backlogs.
 //!
+//! # Elastic fleet & deterministic failure injection
+//!
+//! The KVP fleet is a **runtime object**, not a constructor constant:
+//! every group slot carries a lifecycle state
+//! ([`GroupState`](crate::coordinator::GroupState) — `Active`, `Draining`,
+//! `Joining`, `Down`) and every placement decision (routing views,
+//! round-robin cursors, KV shard growth, capacity reservations) consults
+//! live membership instead of `0..n_groups`. A
+//! [`FaultPlan`](crate::config::FaultPlan) (`SimOptions::faults`) schedules
+//! crashes, drains, joins, and transient slowdowns at precise simulation
+//! times; the run loop applies every event whose time has been reached
+//! before admitting arrivals, so a plan replays bit-identically. An empty
+//! plan leaves every code path exactly on the fault-free trajectory (the
+//! recorded golden snapshots pin this).
+//!
+//! **Crash recovery** (`crash` events): the dead group's ledger occupancy
+//! and short reservations return to the conservation invariant instantly
+//! ([`KvpManager::crash_group`]); every long request holding a shard there
+//! is rewound to its **last surviving chunk boundary** — the KV prefix on
+//! surviving groups is retained, only the lost range re-prefills
+//! ([`Request::rewind_prefill`]) — and re-queued under its post-rewind
+//! priority; shorts resident on the group lose their KV wholly and
+//! re-admit from scratch. The degradation bill lands in [`Metrics`]:
+//! `group_crashes`, `shards_lost`, `reprefill_tokens`, and per-victim
+//! `recovery_wait` percentiles. A full-restart baseline
+//! (`baselines/disagg.rs`) pays the *entire* context again; the
+//! `reproduce --figure faults` table compares the two.
+//!
 //! Timing model:
 //! * every group's mixed batch flows through its stage pipeline
 //!   (`PipelineTimeline`);
@@ -106,15 +134,15 @@ pub mod throughput;
 
 use std::collections::VecDeque;
 
-use crate::config::DeploymentConfig;
+use crate::config::{DeploymentConfig, FaultEvent, FaultKind, FaultPlan};
 use crate::coordinator::chunking::ChunkPolicy;
 use crate::coordinator::policy::{self, GroupView, SchedPolicy};
 use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::scheduler::{BatchPlan, Scheduler};
 use crate::coordinator::spp::PipelineTimeline;
 use crate::coordinator::{
-    AdaptiveChunk, KvpManager, ReadySet, RequestArena, Router, RoutingMode, Slot, StaticChunk,
-    Topology,
+    AdaptiveChunk, GroupState, KvpManager, ReadySet, RequestArena, Router, RoutingMode, Slot,
+    StaticChunk, Topology,
 };
 use crate::kvcache::{GroupId, RequestId};
 use crate::metrics::{IterRecord, Metrics};
@@ -137,6 +165,9 @@ pub struct SimOptions {
     /// `Some(cap)`: reservoir-sample latency metrics at `cap` and drop the
     /// per-iteration trace (see [`Metrics::streaming`]). `None`: exact.
     pub metrics_reservoir: Option<usize>,
+    /// Deterministic fleet lifecycle schedule (crashes, joins, drains,
+    /// slowdowns). Empty — the default — is the fault-free fleet.
+    pub faults: FaultPlan,
 }
 
 impl Default for SimOptions {
@@ -146,6 +177,7 @@ impl Default for SimOptions {
             horizon_s: 86_400.0,
             retain_finished: true,
             metrics_reservoir: None,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -220,6 +252,20 @@ pub fn run_kvp_convoy_scenario(
     cfg: &crate::workload::KvpConvoyConfig,
     seed: u64,
 ) -> Simulation {
+    run_kvp_convoy_scenario_with_faults(kind, routing, cfg, seed, FaultPlan::default())
+}
+
+/// The kvp_convoy scenario under a deterministic [`FaultPlan`] — the
+/// degradation counterpart of [`run_kvp_convoy_scenario`] (which is this
+/// with an empty plan, bit-identically). Shared by the `faults` figure,
+/// the fault-matrix smoke tests, and the crash-recovery acceptance tests.
+pub fn run_kvp_convoy_scenario_with_faults(
+    kind: crate::coordinator::SchedPolicyKind,
+    routing: RoutingMode,
+    cfg: &crate::workload::KvpConvoyConfig,
+    seed: u64,
+    faults: FaultPlan,
+) -> Simulation {
     let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 4);
     dep.scheduler.policy = kind;
     dep.scheduler.routing = routing;
@@ -230,7 +276,11 @@ pub fn run_kvp_convoy_scenario(
     // Documents shard across two of the four groups, leaving an
     // independent short-serving pool (the section 7 opportunity).
     dep.scheduler.kvp_onboard_threshold = cfg.doc_prompt.div_ceil(2).max(1);
-    let mut sim = Simulation::new(dep, crate::workload::kvp_convoy(cfg, seed), SimOptions::default());
+    let opts = SimOptions {
+        faults,
+        ..SimOptions::default()
+    };
+    let mut sim = Simulation::new(dep, crate::workload::kvp_convoy(cfg, seed), opts);
     sim.run();
     sim
 }
@@ -315,6 +365,23 @@ pub struct Simulation {
     finished_buf: Vec<Slot>,
     /// Routed-admission scratch: per-group occupancy views.
     views: Vec<GroupView>,
+
+    // ---- elastic-fleet state (quiescent in fault-free runs) -------------
+    /// Placement mask, one flag per group slot (`true` = `Active`),
+    /// refreshed after every fleet lifecycle change. All-true in a
+    /// fault-free run, where it filters nothing.
+    placeable: Vec<bool>,
+    /// Cursor into the sorted `opts.faults.events` schedule.
+    fault_cursor: usize,
+    /// `Joining` groups and their activation instants (join warm-ups).
+    warming: Vec<(f64, GroupId)>,
+    /// Transient slowdowns in force: `(group, factor, until_s)`.
+    slowdowns: Vec<(GroupId, f64, f64)>,
+    /// Crash victims awaiting their first post-crash service, stamped with
+    /// the crash time (the `Metrics::recovery_wait` numerator).
+    recovery_since: SlotVec<f64>,
+    /// Scratch for crash-time scheduler eviction.
+    evict_buf: Vec<Slot>,
 }
 
 impl Simulation {
@@ -385,6 +452,12 @@ impl Simulation {
             participating: Vec::new(),
             finished_buf: Vec::new(),
             views: Vec::new(),
+            placeable: vec![true; kvp_groups as usize],
+            fault_cursor: 0,
+            warming: Vec::new(),
+            slowdowns: Vec::new(),
+            recovery_since: SlotVec::new(),
+            evict_buf: Vec::new(),
             dep,
             opts,
         }
@@ -495,7 +568,12 @@ impl Simulation {
                 self.scheds[g as usize].enqueue(slot, &self.requests);
             }
             RoutingMode::RoundRobin => {
-                let g = self.router.route_round_robin(slot, prompt_len);
+                // Masked over live membership; with every group `Active`
+                // this is exactly the unmasked cursor walk.
+                let g = self
+                    .router
+                    .route_round_robin_masked(slot, prompt_len, &self.placeable)
+                    .expect("the fleet keeps at least one active group");
                 self.reserve_short(slot, g);
                 self.scheds[g as usize].enqueue(slot, &self.requests);
             }
@@ -594,6 +672,13 @@ impl Simulation {
         self.views.clear();
         let preemptive = self.sched_policy.preemptive();
         for g in 0..self.scheds.len() {
+            // Membership filter: only `Active` groups are placement
+            // candidates. All-true in a fault-free fleet — the views (and
+            // every placement derived from them) are then exactly the
+            // fixed-fleet ones.
+            if !self.placeable[g] {
+                continue;
+            }
             let gid = g as GroupId;
             let urgent = if preemptive {
                 self.scheds[g].n_urgent(self.now)
@@ -662,6 +747,19 @@ impl Simulation {
                 t = t.min(spec.arrival_s);
             }
         }
+        // Scheduled faults and pending join activations are decision
+        // instants too (both vectors stay empty in a fault-free run).
+        if self.fault_cursor < self.opts.faults.events.len() {
+            let ft = self.opts.faults.events[self.fault_cursor].t_s;
+            if ft > self.now {
+                t = t.min(ft);
+            }
+        }
+        for &(wt, _) in &self.warming {
+            if wt > self.now {
+                t = t.min(wt);
+            }
+        }
         if t.is_finite() && t > self.now {
             t
         } else {
@@ -672,6 +770,11 @@ impl Simulation {
     /// Run the simulation to completion (or horizon). Returns total time.
     pub fn run(&mut self) -> f64 {
         loop {
+            if !self.opts.faults.is_empty() {
+                // Fleet lifecycle first: membership changes apply before
+                // the admissions and batches of the same instant.
+                self.apply_due_faults();
+            }
             self.admit_arrivals();
             if !self.has_work() {
                 match self.pending.front() {
@@ -691,6 +794,7 @@ impl Simulation {
             self.step();
         }
         self.metrics.preemptions = self.scheds.iter().map(|s| s.preemptions).sum();
+        self.metrics.kv_overcommit_tokens = self.kvp_mgr.kv_overcommit_tokens;
         self.now
     }
 
@@ -785,6 +889,11 @@ impl Simulation {
         self.combined.clear(); // accumulates the coop set's shapes
         for g in 0..n_groups {
             self.group_plans[g].clear();
+            if !self.kvp_mgr.is_live(g as GroupId) {
+                // A crashed slot: holds nothing, forms nothing, until (and
+                // unless) a join revives it. Always live fault-free.
+                continue;
+            }
             let holder = self.participating.iter().any(|&(gg, _)| gg as usize == g);
             let member = barrier || holder;
             let run_now = if member {
@@ -835,7 +944,10 @@ impl Simulation {
                 continue;
             }
             let has_decode = !self.shape.decodes.is_empty();
-            let st = self.pm.stage_time(&self.shape, self.layers_per_stage).total();
+            // `slow_factor` is exactly 1.0 without a slowdown in force —
+            // the multiply is then bit-exact with the undisturbed time.
+            let st = self.pm.stage_time(&self.shape, self.layers_per_stage).total()
+                * self.slow_factor(g);
             let hop = self.pm.stage_hop_s(self.shape.tokens());
             let ready = if has_decode {
                 self.now
@@ -993,6 +1105,7 @@ impl Simulation {
                 self.kvp_mgr.unreserve(g, kv_need);
             }
             self.router.release(slot, prompt_len);
+            self.note_recovery(slot, t);
             self.retire(slot);
         }
     }
@@ -1014,9 +1127,11 @@ impl Simulation {
             // long request's TTFT in the percentile stream.)
             self.requests.get_mut(slot).complete_chunk(c, t);
             self.kvp_mgr.append_tokens(slot, c, t);
+            self.note_recovery(slot, t);
         } else if long_decode {
             self.requests.get_mut(slot).complete_decode(t);
             self.kvp_mgr.append_tokens(slot, 1, t);
+            self.note_recovery(slot, t);
         }
         let finished = {
             let r = self.requests.get(slot);
@@ -1142,6 +1257,250 @@ impl Simulation {
         } else {
             None
         }
+    }
+
+    // ---- elastic fleet & failure injection ------------------------------
+
+    /// Apply every scheduled fault whose time has been reached, merged in
+    /// time order with pending join activations, then expire finished
+    /// slowdowns and complete idle drains. Only entered when the run has a
+    /// fault plan — a fault-free run never touches any of this state.
+    fn apply_due_faults(&mut self) {
+        loop {
+            let ev_t = self
+                .opts
+                .faults
+                .events
+                .get(self.fault_cursor)
+                .map_or(f64::INFINITY, |e| e.t_s);
+            let warm = self
+                .warming
+                .iter()
+                .enumerate()
+                .min_by(|a, b| (a.1).0.total_cmp(&(b.1).0))
+                .map(|(i, &(t, _))| (i, t));
+            let warm_t = warm.map_or(f64::INFINITY, |&(_, t)| t);
+            if ev_t <= self.now && ev_t <= warm_t {
+                let e = self.opts.faults.events[self.fault_cursor].clone();
+                self.fault_cursor += 1;
+                self.apply_fault(&e);
+            } else if warm_t <= self.now {
+                let (i, _) = warm.unwrap();
+                let (_, g) = self.warming.remove(i);
+                self.kvp_mgr.activate(g);
+                self.refresh_membership();
+            } else {
+                break;
+            }
+        }
+        if !self.slowdowns.is_empty() {
+            let now = self.now;
+            self.slowdowns.retain(|&(_, _, until_s)| until_s > now);
+        }
+        // Opportunistic drain completion: a `Draining` group with nothing
+        // resident (no KV, no reservations, no queued work) leaves the
+        // fleet.
+        for g in 0..self.scheds.len() {
+            let gid = g as GroupId;
+            if self.kvp_mgr.state(gid) == GroupState::Draining
+                && self.kvp_mgr.drain_idle(gid)
+                && !self.scheds[g].has_work()
+            {
+                self.kvp_mgr.finish_drain(gid);
+                self.refresh_membership();
+            }
+        }
+    }
+
+    fn apply_fault(&mut self, e: &FaultEvent) {
+        match e.kind {
+            FaultKind::Crash => {
+                self.apply_crash(e.group.expect("validated: crash names a group"));
+            }
+            FaultKind::Drain => {
+                self.kvp_mgr
+                    .begin_drain(e.group.expect("validated: drain names a group"));
+                self.refresh_membership();
+            }
+            FaultKind::Join { warmup_s } => {
+                let g = self.fleet_join(e.group);
+                if warmup_s > 0.0 {
+                    self.warming.push((self.now + warmup_s, g));
+                } else {
+                    self.kvp_mgr.activate(g);
+                }
+                self.refresh_membership();
+            }
+            FaultKind::Slowdown { factor, until_s } => {
+                self.slowdowns.push((
+                    e.group.expect("validated: slowdown names a group"),
+                    factor,
+                    until_s,
+                ));
+            }
+        }
+    }
+
+    /// Crash group `g` at the current instant. The KVP manager zeroes the
+    /// group's ledger (occupancy **and** short reservations — the crash
+    /// path cannot leak a reservation by construction) and reports every
+    /// shard-losing request. Long victims rewind to their last surviving
+    /// chunk boundary — surviving KV is retained, only the lost range
+    /// re-prefills — and re-queue under their post-rewind priority; shorts
+    /// resident on the group lose their KV wholly and re-admit from
+    /// scratch. Iterations already completed for this instant stand: a
+    /// crash lands at the first decision instant at or after its scheduled
+    /// time.
+    fn apply_crash(&mut self, g: GroupId) {
+        assert!(
+            self.kvp_mgr.is_live(g),
+            "fault plan crashes group {g} which is already down"
+        );
+        let actives_left = self.kvp_mgr.n_active() - (self.kvp_mgr.is_placeable(g) as u32);
+        assert!(
+            actives_left >= 1,
+            "crash of group {g} would leave no active group"
+        );
+        let rep = self.kvp_mgr.crash_group(g, self.now);
+        self.metrics.group_crashes += 1;
+        self.metrics.shards_lost += rep.shards_lost;
+        self.refresh_membership();
+
+        // Long victims: rewind to the shard boundary the surviving prefix
+        // ends at; chunk completion is what grew the shards, so that is a
+        // completed-chunk boundary — re-prefill never redoes retained work.
+        for &(slot, _before, surviving) in &rep.victims {
+            let lost = self.requests.get_mut(slot).rewind_prefill(surviving);
+            self.metrics.reprefill_tokens += lost;
+            self.recovery_since.insert(slot as usize, self.now);
+            if surviving == 0 {
+                // Every shard died: forget the empty map and re-onboard on
+                // a live group. The drop log pairs this fresh onboarding
+                // with the loss, keeping the exactly-once audit clean.
+                let (ext_id, prompt_len) = {
+                    let r = self.requests.get(slot);
+                    (r.id, r.prompt_len)
+                };
+                self.kvp_mgr.release(slot);
+                self.router.release(slot, prompt_len);
+                let home = self.place_least_loaded(slot, prompt_len);
+                self.kvp_mgr.onboard_request(slot, ext_id, home, self.now);
+            }
+            // Re-file under the post-rewind priority (work remaining
+            // grew); an active victim returns to the queue and the next
+            // step re-decides who holds the cooperative slot.
+            if self.active_long == Some(slot) {
+                self.active_long = None;
+            } else {
+                self.long_queue.remove(slot);
+            }
+            self.long_queue
+                .push(slot, self.sched_policy.as_ref(), &self.requests);
+        }
+
+        // Short victims: a short's KV lives wholly on its group, so its
+        // resident progress is gone — rewind to zero and re-admit through
+        // the normal (live-membership) admission path, which re-reserves
+        // on the new group. The dead group's reservations were already
+        // returned wholesale by `crash_group`.
+        let mut evicted = std::mem::take(&mut self.evict_buf);
+        self.scheds[g as usize].evict_all(&mut evicted);
+        for i in 0..evicted.len() {
+            let slot = evicted[i];
+            let lost = self.requests.get_mut(slot).rewind_prefill(0);
+            self.metrics.reprefill_tokens += lost;
+            self.recovery_since.insert(slot as usize, self.now);
+            let prompt_len = self.requests.get(slot).prompt_len;
+            self.router.release(slot, prompt_len);
+            self.admit_short(slot, prompt_len);
+        }
+        evicted.clear();
+        self.evict_buf = evicted;
+    }
+
+    /// A group joins the fleet: revive the named `Down` slot, or grow by a
+    /// brand-new group (fresh scheduler, timeline, clock, router lane,
+    /// mask slot). The group is `Joining` — excluded from placement —
+    /// until activated.
+    fn fleet_join(&mut self, want: Option<GroupId>) -> GroupId {
+        let prev = self.scheds.len();
+        let g = self.kvp_mgr.announce_join(want);
+        let spp = self.dep.parallel.spp.max(1) as usize;
+        if (g as usize) < prev {
+            // Revived slot: every structure is still sized; reset the
+            // clock so the rejoined group starts from now, not from
+            // whatever instant it died at.
+            self.timelines[g as usize] = PipelineTimeline::new(spp, self.now);
+            self.free_at[g as usize] = self.now;
+        } else {
+            let kind = self.dep.scheduler.policy;
+            self.scheds.push(Scheduler::with_policy(
+                Box::new(StaticChunk(self.dep.scheduler.static_chunk)),
+                kind.build(),
+                self.dep.scheduler.max_batch_size,
+            ));
+            self.timelines.push(PipelineTimeline::new(spp, self.now));
+            self.free_at.push(self.now);
+            self.group_plans.push(BatchPlan::default());
+            self.router.grow_to(g + 1);
+            self.placeable.push(false);
+        }
+        g
+    }
+
+    /// Rebuild the placement mask from the manager's group states.
+    /// All-true when every group is `Active` (the fault-free fleet).
+    fn refresh_membership(&mut self) {
+        self.placeable.resize(self.scheds.len(), false);
+        for g in 0..self.scheds.len() {
+            self.placeable[g] = self.kvp_mgr.is_placeable(g as GroupId);
+        }
+    }
+
+    /// Iteration-time multiplier for group `g` under the transient
+    /// slowdowns in force — exactly 1.0 (not approximately) when none
+    /// target it, so undisturbed groups keep bit-exact timing.
+    fn slow_factor(&self, g: usize) -> f64 {
+        let mut f = 1.0;
+        for &(sg, factor, until_s) in &self.slowdowns {
+            if sg as usize == g && self.now < until_s {
+                f = f.max(factor);
+            }
+        }
+        f
+    }
+
+    /// Record a crash victim's recovery wait at its first post-crash
+    /// service the simulator can observe per-request: a long request's
+    /// next completed chunk or decode of re-prefill progress (at its
+    /// completion instant `t`), a short request's completion. No-op (one
+    /// `SlotVec` probe) for non-victims.
+    fn note_recovery(&mut self, slot: Slot, t: f64) {
+        if let Some(since) = self.recovery_since.remove(slot as usize) {
+            self.metrics.record_recovery_wait(t - since);
+        }
+    }
+
+    /// Lifecycle state of group `g` (post-run inspection).
+    pub fn group_state(&self, g: GroupId) -> GroupState {
+        self.kvp_mgr.state(g)
+    }
+
+    /// Number of `Active` groups right now.
+    pub fn n_active_groups(&self) -> u32 {
+        self.kvp_mgr.n_active()
+    }
+
+    /// See [`KvpManager::ledger_is_conserved`] — the capacity-conservation
+    /// invariant, exposed for the test harness.
+    pub fn kvp_ledger_is_conserved(&self) -> bool {
+        self.kvp_mgr.ledger_is_conserved()
+    }
+
+    /// Crash-time shard-drop audit trail: `(t, request, group)` per shard
+    /// lost, the counterpart of [`Self::kvp_onboard_log`].
+    pub fn kvp_drop_log(&self) -> &[(f64, RequestId, u32)] {
+        &self.kvp_mgr.drop_log
     }
 
     /// Look up a request by its external id — live or (when
@@ -1504,6 +1863,191 @@ mod tests {
         assert_eq!(short.ttft_budget_s(), sim.dep.slo.ttft_floor_s);
         assert!(long.ttft_budget_s() > short.ttft_budget_s());
         assert!(long.est_prefill_s > short.est_prefill_s);
+    }
+
+    fn one_fault(t_s: f64, group: Option<u32>, kind: FaultKind) -> FaultPlan {
+        FaultPlan {
+            events: vec![FaultEvent { t_s, group, kind }],
+        }
+    }
+
+    #[test]
+    fn crash_rewinds_long_prefill_to_surviving_boundary() {
+        let mk = || {
+            let mut d = dep(8, 1, 4);
+            d.scheduler.routing = RoutingMode::RoundRobin;
+            d.scheduler.adaptive_chunking = false;
+            d.scheduler.static_chunk = 4096;
+            d.scheduler.kvp_onboard_threshold = 128_000;
+            d
+        };
+        let w = workload::single_long(400_000, 4);
+        // Probe run: when does the second group onboard, and when does the
+        // run end? The crash is scheduled a quarter of the way between —
+        // mid-prefill, with at least one shard on a surviving group.
+        let mut probe = Simulation::new(mk(), w.clone(), SimOptions::default());
+        let end = probe.run();
+        let log = probe.kvp_onboard_log();
+        assert!(log.len() >= 2, "document never sharded: {log:?}");
+        let (t1, _, victim_group) = log[1];
+        let crash_t = t1 + (end - t1) * 0.25;
+
+        let opts = SimOptions {
+            faults: one_fault(crash_t, Some(victim_group), FaultKind::Crash),
+            ..SimOptions::default()
+        };
+        let mut sim = Simulation::new(mk(), w, opts);
+        sim.run();
+        // Degradation is accounted, and the request still completes fully.
+        assert_eq!(sim.metrics.finished_requests, 1);
+        let r = sim.request(0).unwrap();
+        assert!(r.is_finished());
+        assert_eq!(r.prefilled, 400_000);
+        assert_eq!(sim.metrics.group_crashes, 1);
+        assert!(sim.metrics.shards_lost >= 1);
+        // The rewind is partial: the lost range re-prefills, the surviving
+        // prefix (the first group's shard) is never redone.
+        assert!(
+            sim.metrics.reprefill_tokens > 0 && sim.metrics.reprefill_tokens < 400_000,
+            "reprefill_tokens={}",
+            sim.metrics.reprefill_tokens
+        );
+        assert_eq!(
+            sim.metrics.prefill_tokens,
+            400_000 + sim.metrics.reprefill_tokens,
+            "prefill executed must be prompt plus exactly the lost range"
+        );
+        // Exactly-once audit holds across the loss: drops pair with
+        // re-onboardings, the ledger stays conserved, the group is down.
+        assert!(!sim.kvp_drop_log().is_empty());
+        assert!(sim.kvp_onboard_log_is_duplicate_free());
+        assert!(sim.kvp_ledger_is_conserved());
+        assert_eq!(sim.group_state(victim_group), GroupState::Down);
+        assert_eq!(sim.n_active_groups(), 3);
+        // The victim's recovery wait was sampled once.
+        assert_eq!(sim.metrics.summary().n_recovered, 1);
+    }
+
+    #[test]
+    fn join_grows_the_fleet_and_serves_new_work() {
+        let mut d = dep(8, 1, 2);
+        d.scheduler.routing = RoutingMode::RoundRobin;
+        let w: Vec<RequestSpec> = (0..12)
+            .map(|i| RequestSpec {
+                id: i,
+                prompt_len: 2_000,
+                max_new_tokens: 2,
+                arrival_s: 2.0 + i as f64 * 0.5,
+            })
+            .collect();
+        let opts = SimOptions {
+            faults: one_fault(1.0, None, FaultKind::Join { warmup_s: 0.5 }),
+            ..SimOptions::default()
+        };
+        let mut sim = Simulation::new(d, w, opts);
+        sim.run();
+        assert_eq!(sim.metrics.finished_requests, 12);
+        assert_eq!(sim.n_active_groups(), 3, "the joined group is active");
+        assert_eq!(sim.group_state(2), GroupState::Active);
+        // Round-robin rotated real work onto the new group.
+        assert_eq!(sim.metrics.group_busy_s.len(), 3);
+        assert!(sim.metrics.group_busy_s[2] > 0.0, "joined group never served");
+        assert!(sim.kvp_ledger_is_conserved());
+    }
+
+    #[test]
+    fn drain_retires_a_group_without_dropping_work() {
+        let mut d = dep(8, 1, 2);
+        d.scheduler.routing = RoutingMode::RoundRobin;
+        let w: Vec<RequestSpec> = (0..10)
+            .map(|i| RequestSpec {
+                id: i,
+                prompt_len: 2_000,
+                max_new_tokens: 2,
+                arrival_s: i as f64 * 0.5,
+            })
+            .collect();
+        let opts = SimOptions {
+            faults: one_fault(1.0, Some(1), FaultKind::Drain),
+            ..SimOptions::default()
+        };
+        let mut sim = Simulation::new(d, w, opts);
+        sim.run();
+        // Graceful: every request finishes, nothing is lost or redone.
+        assert_eq!(sim.metrics.finished_requests, 10);
+        assert_eq!(sim.metrics.group_crashes, 0);
+        assert_eq!(sim.metrics.shards_lost, 0);
+        assert_eq!(sim.metrics.reprefill_tokens, 0);
+        // The drained group finished its resident work and left the fleet.
+        assert_eq!(sim.group_state(1), GroupState::Down);
+        assert_eq!(sim.n_active_groups(), 1);
+        assert!(sim.kvp_ledger_is_conserved());
+    }
+
+    #[test]
+    fn slowdown_stretches_only_the_target_group() {
+        let run = |faults: FaultPlan| {
+            let opts = SimOptions {
+                faults,
+                ..SimOptions::default()
+            };
+            let w = workload::single_long(4_000, 8); // short: below threshold
+            let mut sim = Simulation::new(dep(8, 1, 1), w, opts);
+            sim.run();
+            sim.request(0).unwrap().finished_s.unwrap()
+        };
+        let base = run(FaultPlan::default());
+        let slowed = run(one_fault(
+            0.0,
+            Some(0),
+            FaultKind::Slowdown {
+                factor: 3.0,
+                until_s: 1e9,
+            },
+        ));
+        assert!(
+            slowed > base * 1.5,
+            "slowdown did not stretch the run: base={base} slowed={slowed}"
+        );
+    }
+
+    #[test]
+    fn crash_then_rejoin_restores_the_fleet() {
+        let mut d = dep(8, 1, 2);
+        d.scheduler.routing = RoutingMode::RoundRobin;
+        let w: Vec<RequestSpec> = (0..10)
+            .map(|i| RequestSpec {
+                id: i,
+                prompt_len: 2_000,
+                max_new_tokens: 2,
+                arrival_s: i as f64 * 0.4,
+            })
+            .collect();
+        let opts = SimOptions {
+            faults: FaultPlan {
+                events: vec![
+                    FaultEvent {
+                        t_s: 1.0,
+                        group: Some(1),
+                        kind: FaultKind::Crash,
+                    },
+                    FaultEvent {
+                        t_s: 2.0,
+                        group: Some(1),
+                        kind: FaultKind::Join { warmup_s: 0.0 },
+                    },
+                ],
+            },
+            ..SimOptions::default()
+        };
+        let mut sim = Simulation::new(d, w, opts);
+        sim.run();
+        assert_eq!(sim.metrics.finished_requests, 10, "no request left behind");
+        assert_eq!(sim.metrics.group_crashes, 1);
+        assert_eq!(sim.group_state(1), GroupState::Active, "slot revived");
+        assert_eq!(sim.n_active_groups(), 2);
+        assert!(sim.kvp_ledger_is_conserved());
+        assert!(sim.kvp_onboard_log_is_duplicate_free());
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Workload generators: the request populations behind each figure, plus
 //! production-like mixed traffic (Poisson arrivals, skewed context lengths —
 //! section 3's C3: inputs "ranging from 10s to 1000s, and now millions of
-//! tokens").
+//! tokens"), and randomized-but-deterministic fleet fault schedules
+//! ([`fault_storm`]) for the elastic-fleet robustness runs.
 
+use crate::config::{FaultEvent, FaultKind, FaultPlan};
 use crate::util::rng::Rng;
 
 /// A request as submitted by a client.
@@ -248,6 +250,81 @@ pub fn kvp_convoy(cfg: &KvpConvoyConfig, seed: u64) -> Vec<RequestSpec> {
     out
 }
 
+/// Configuration for [`fault_storm`]: serialized crash→rejoin cycles drawn
+/// from a seeded RNG, the workload-style counterpart of a hand-written
+/// [`FaultPlan`] JSON file.
+#[derive(Debug, Clone)]
+pub struct FaultStormConfig {
+    /// Fleet size victims are drawn from. Group 0 is never crashed, so at
+    /// least one group stays active through every outage.
+    pub n_groups: u32,
+    /// Maximum crash→rejoin cycles (fewer if the window runs out).
+    pub n_cycles: usize,
+    /// No crash before this time (lets the workload ramp up).
+    pub start_s: f64,
+    /// Crashes are drawn inside `[start_s, start_s + window_s)`.
+    pub window_s: f64,
+    /// Mean gap from one group's rejoin to the next crash (exponential).
+    pub mean_gap_s: f64,
+    /// Mean outage duration, crash to rejoin announcement (exponential).
+    pub mean_outage_s: f64,
+    /// Warm-up each rejoined group spends `Joining` before activating.
+    pub warmup_s: f64,
+}
+
+impl Default for FaultStormConfig {
+    fn default() -> Self {
+        FaultStormConfig {
+            n_groups: 4,
+            n_cycles: 2,
+            start_s: 4.0,
+            window_s: 30.0,
+            mean_gap_s: 4.0,
+            mean_outage_s: 6.0,
+            warmup_s: 1.0,
+        }
+    }
+}
+
+/// Deterministic random fault schedule: crash→rejoin cycles, serialized so
+/// at most one group is ever down (each cycle's crash waits for the
+/// previous rejoin plus warm-up), with group 0 never a victim. The plan is
+/// therefore valid by construction — every crash targets a live group and
+/// the fleet always keeps an active member — and identical for identical
+/// `(config, seed)`.
+pub fn fault_storm(cfg: &FaultStormConfig, seed: u64) -> FaultPlan {
+    assert!(cfg.n_groups >= 2, "a fault storm needs a group to spare");
+    let mut rng = Rng::new(seed);
+    let mut events = Vec::new();
+    let mut t = cfg.start_s;
+    for _ in 0..cfg.n_cycles {
+        t += rng.exponential(1.0 / cfg.mean_gap_s.max(1e-9));
+        if t >= cfg.start_s + cfg.window_s {
+            break;
+        }
+        let victim = 1 + rng.below((cfg.n_groups - 1) as u64) as u32;
+        events.push(FaultEvent {
+            t_s: t,
+            group: Some(victim),
+            kind: FaultKind::Crash,
+        });
+        t += rng.exponential(1.0 / cfg.mean_outage_s.max(1e-9));
+        events.push(FaultEvent {
+            t_s: t,
+            group: Some(victim),
+            kind: FaultKind::Join {
+                warmup_s: cfg.warmup_s,
+            },
+        });
+        t += cfg.warmup_s;
+    }
+    let mut plan = FaultPlan { events };
+    plan.sort();
+    plan.validate()
+        .expect("fault_storm generates structurally valid plans");
+    plan
+}
+
 /// Poisson arrivals with a context-length distribution — the production
 /// mix of section 3 C3.
 pub fn poisson_mixed(
@@ -364,6 +441,31 @@ mod tests {
         };
         let w = convoy(&cfg, 7);
         assert!(w.iter().all(|r| r.prompt_len == cfg.short_prompt));
+    }
+
+    #[test]
+    fn fault_storm_is_deterministic_and_serialized() {
+        let cfg = FaultStormConfig::default();
+        let plan = fault_storm(&cfg, 42);
+        assert_eq!(plan, fault_storm(&cfg, 42));
+        assert!(!plan.is_empty());
+        assert_eq!(plan.events.len() % 2, 0, "crashes pair with rejoins");
+        // Cycles are serialized: crash, its rejoin, then the next crash —
+        // the same victim each pair, never group 0, times non-decreasing.
+        for pair in plan.events.chunks(2) {
+            assert_eq!(pair[0].kind, FaultKind::Crash);
+            assert!(matches!(pair[1].kind, FaultKind::Join { .. }));
+            assert_eq!(pair[0].group, pair[1].group);
+            let g = pair[0].group.unwrap();
+            assert!(g >= 1 && g < cfg.n_groups);
+            assert!(pair[1].t_s >= pair[0].t_s);
+        }
+        assert!(plan
+            .events
+            .windows(2)
+            .all(|w| w[1].t_s >= w[0].t_s));
+        // A different seed draws a different storm.
+        assert_ne!(plan, fault_storm(&cfg, 43));
     }
 
     #[test]

@@ -6,13 +6,19 @@
 //! must be bit-identical to the O(n) priority scan it replaced, and
 //! randomized admit/preempt/resume/finish sequences must uphold all of it
 //! — under all four scheduling policies and all three routing modes.
-//! Every failure reports a replay seed (`MEDHA_PROPTEST_SEED`).
+//! The elastic-fleet tentpole extends the same guarantees across group
+//! crash/recover lifecycles: a crash returns occupancy AND reservations
+//! to the ledger by construction, truncated shard maps stay contiguous,
+//! and re-onboarding is allowed only for lost ranges — never for
+//! retained shards. Every failure reports a replay seed
+//! (`MEDHA_PROPTEST_SEED`).
 
 use std::collections::BTreeMap;
 
-use medha::config::DeploymentConfig;
+use medha::config::{DeploymentConfig, FaultEvent, FaultKind, FaultPlan};
 use medha::coordinator::{
-    KvpManager, ReadySet, Request, RequestArena, RoutingMode, SchedPolicy, SchedPolicyKind,
+    GroupState, KvpManager, ReadySet, Request, RequestArena, RoutingMode, SchedPolicy,
+    SchedPolicyKind,
 };
 use medha::sim::{SimOptions, Simulation};
 use medha::util::proptest::check;
@@ -296,6 +302,220 @@ fn prop_random_lifecycle_upholds_invariants_across_policies() {
                 sim.metrics.routing_refusals, 0,
                 "{label} refused a placement with unlimited capacity"
             );
+        }
+    });
+}
+
+/// Crash lifecycles at the manager level (satellite of the elastic-fleet
+/// tentpole): a crash must zero the dead group's ledger — occupancy AND
+/// short reservations, so the reservation leak is impossible by
+/// construction — truncate every affected shard map at the last surviving
+/// chunk boundary, and the exactly-once coverage property must hold
+/// across recovery: re-onboarding only for dropped ranges, never for a
+/// retained shard, and growth never touches the dead group again.
+#[test]
+fn prop_kvp_crash_recover_conserves_ledger_and_coverage() {
+    check("kvp crash/recover ledger", 150, |rng| {
+        let threshold = rng.range_u64(50, 1_000);
+        let n_groups = rng.range_u64(3, 6) as u32;
+        let mut k = KvpManager::new(threshold, n_groups);
+        let n_reqs = rng.range_u64(1, 4);
+        let mut total = vec![0u64; n_reqs as usize];
+        for s in 0..n_reqs {
+            k.onboard_request(s as u32, 100 + s, rng.below(n_groups as u64) as u32, 0.0);
+        }
+        // short-request reservations ride on the same ledger
+        for g in 0..n_groups {
+            k.reserve(g, rng.below(500));
+        }
+        let mut t = 1.0;
+        for _ in 0..rng.range_u64(1, 50) {
+            let s = rng.below(n_reqs) as u32;
+            k.append_tokens(s, rng.range_u64(1, threshold), t);
+            t += 1.0;
+        }
+        for s in 0..n_reqs as u32 {
+            total[s as usize] = k.shard_map(s).unwrap().total_tokens();
+        }
+        let g = rng.below(n_groups as u64) as u32;
+        let reserved_before = k.reserved_on(g);
+        let report = k.crash_group(g, t);
+        // teardown returns occupancy AND reservations in one report
+        assert_eq!(report.reserved_dropped, reserved_before);
+        assert_eq!(k.occupancy(g), 0, "crash left occupancy on the dead group");
+        assert_eq!(k.reserved_on(g), 0, "crash leaked a short reservation");
+        assert_eq!(k.state(g), GroupState::Down);
+        assert!(k.ledger_is_conserved(), "crash broke occupancy conservation");
+        // every affected map truncates to a contiguous prefix ending at a
+        // shard boundary, with nothing left on (or after) the dead group
+        let mut lost = 0u64;
+        for s in 0..n_reqs as u32 {
+            let m = k.shard_map(s).unwrap();
+            assert!(m.check_contiguous(), "crash left a non-contiguous map");
+            assert!(m.shards.iter().all(|&(gg, _, _)| gg != g));
+            assert!(m.total_tokens() <= total[s as usize]);
+            lost += total[s as usize] - m.total_tokens();
+            total[s as usize] = m.total_tokens();
+        }
+        for &(vs, before, surviving) in &report.victims {
+            assert!(surviving <= before);
+            assert_eq!(k.shard_map(vs).unwrap().total_tokens(), surviving);
+        }
+        assert_eq!(
+            report.victims.iter().map(|&(_, b, sv)| b - sv).sum::<u64>(),
+            lost,
+            "victim report disagrees with the maps"
+        );
+        assert!(report.occ_dropped <= lost, "dead-group drop exceeds total loss");
+        // recovery: orphaned requests re-onboard on a live group (only the
+        // lost ranges — the drop-aware duplicate check must allow exactly
+        // this) and growth continues on the surviving fleet
+        let first_active = (0..n_groups).find(|&c| k.is_placeable(c)).unwrap();
+        for s in 0..n_reqs as u32 {
+            if k.shard_map(s).unwrap().shards.is_empty() {
+                k.release(s);
+                k.onboard_request(s, 100 + s as u64, first_active, t);
+            }
+            let c = rng.range_u64(1, 2 * threshold);
+            k.append_tokens(s, c, t);
+            total[s as usize] += c;
+        }
+        for s in 0..n_reqs as u32 {
+            let m = k.shard_map(s).unwrap();
+            assert!(m.check_contiguous());
+            assert_eq!(m.total_tokens(), total[s as usize], "recovery lost KV tokens");
+            assert!(
+                m.shards.iter().all(|&(gg, _, _)| gg != g),
+                "growth re-used the dead group"
+            );
+        }
+        assert!(
+            k.onboard_log_is_duplicate_free(),
+            "recovery re-onboarded a retained shard"
+        );
+        assert!(k.ledger_is_conserved());
+    });
+}
+
+/// Randomized crash/recover lifecycles through the full simulator: a
+/// group crash (sometimes followed by a warmed-up rejoin) at a random
+/// instant, under all four policies × both pooled routing modes. Every
+/// request must still finish with token-exact KV — total prefill work
+/// equals prompt tokens plus the recomputed tokens, nothing more — the
+/// drop-aware onboard log must show re-onboarding only for lost ranges,
+/// and the capacity ledger must balance when the run drains.
+#[test]
+fn prop_crash_recover_lifecycle_across_policies() {
+    check("sim crash/recover invariants", 6, |rng| {
+        let n_short = rng.range_u64(4, 12);
+        let mut w = Vec::new();
+        let mut t = 0.0;
+        for id in 0..n_short {
+            t += rng.exponential(3.0);
+            w.push(RequestSpec {
+                id,
+                prompt_len: rng.range_u64(64, 2_048),
+                max_new_tokens: rng.range_u64(1, 8),
+                arrival_s: t,
+            });
+        }
+        // an anchor document long enough that the crash instant is always
+        // inside the run, plus smaller documents at random arrivals
+        w.push(RequestSpec {
+            id: n_short,
+            prompt_len: 300_000,
+            max_new_tokens: 2,
+            arrival_s: 0.1,
+        });
+        for kd in 0..rng.range_u64(1, 3) {
+            w.push(RequestSpec {
+                id: n_short + 1 + kd,
+                prompt_len: rng.range_u64(30_000, 90_000),
+                max_new_tokens: rng.range_u64(1, 4),
+                arrival_s: rng.range_f64(0.0, 2.0),
+            });
+        }
+        let kvp = rng.range_u64(3, 5) as u32;
+        let victim = 1 + rng.below(kvp as u64 - 1) as u32; // group 0 survives
+        let crash_t = rng.range_f64(0.3, 1.5);
+        let rejoin = rng.bool(0.5);
+        let mut events = vec![FaultEvent {
+            t_s: crash_t,
+            group: Some(victim),
+            kind: FaultKind::Crash,
+        }];
+        if rejoin {
+            events.push(FaultEvent {
+                t_s: crash_t + rng.range_f64(0.5, 3.0),
+                group: Some(victim),
+                kind: FaultKind::Join { warmup_s: 0.25 },
+            });
+        }
+        let onboard = rng.range_u64(8_000, 40_000);
+        // fault-free baseline for token conservation: processed-token
+        // totals are trace properties, identical across policies/routings
+        let clean_total = {
+            let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, kvp);
+            dep.scheduler.adaptive_chunking = false;
+            dep.scheduler.static_chunk = 2048;
+            dep.scheduler.kvp_onboard_threshold = onboard;
+            let mut sim = Simulation::new(dep, w.clone(), SimOptions::default());
+            sim.run();
+            sim.metrics.prefill_tokens + sim.metrics.decode_tokens
+        };
+        for routing in [RoutingMode::RoundRobin, RoutingMode::Routed] {
+            for kind in SchedPolicyKind::ALL {
+                let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, kvp);
+                dep.scheduler.policy = kind;
+                dep.scheduler.routing = routing;
+                dep.scheduler.adaptive_chunking = false;
+                dep.scheduler.static_chunk = 2048;
+                dep.scheduler.kvp_onboard_threshold = onboard;
+                let opts = SimOptions {
+                    faults: FaultPlan { events: events.clone() },
+                    ..SimOptions::default()
+                };
+                let mut sim = Simulation::new(dep, w.clone(), opts);
+                sim.run();
+                let label =
+                    format!("{}/{} crash g{victim}@{crash_t:.2}", kind.name(), routing.name());
+                assert_eq!(
+                    sim.metrics.finished_requests,
+                    w.len() as u64,
+                    "{label} left requests behind"
+                );
+                assert_eq!(sim.n_live(), 0, "{label} leaked arena slots");
+                for r in sim.retired() {
+                    assert!(r.is_finished(), "{label}: request {} unfinished", r.id);
+                    assert_eq!(r.prefilled, r.prompt_len, "{label}: prefill drift on {}", r.id);
+                    assert_eq!(r.decoded, r.max_new_tokens, "{label}: decode drift on {}", r.id);
+                }
+                assert_eq!(sim.metrics.group_crashes, 1, "{label} missed the crash");
+                // KV conservation band: every recomputed token shows up
+                // again in the prefill/decode counters — except that a
+                // victim rewound across its prefill boundary regenerates
+                // the first output token via the final prefill chunk,
+                // which neither counter sees: at most one token/victim.
+                let total = sim.metrics.prefill_tokens + sim.metrics.decode_tokens;
+                assert!(total >= clean_total, "{label}: the crash erased processed work");
+                let surplus = total - clean_total;
+                let s = sim.metrics.summary();
+                assert!(
+                    surplus <= sim.metrics.reprefill_tokens
+                        && sim.metrics.reprefill_tokens <= surplus + s.n_recovered,
+                    "{label}: recomputed {} tokens for {} victims but re-processed {surplus}",
+                    sim.metrics.reprefill_tokens,
+                    s.n_recovered
+                );
+                assert!(
+                    sim.kvp_onboard_log_is_duplicate_free(),
+                    "{label} re-onboarded a retained shard"
+                );
+                assert!(sim.kvp_ledger_is_conserved(), "{label}: ledger out of balance");
+                if !rejoin {
+                    assert_eq!(sim.group_state(victim), GroupState::Down, "{label}");
+                }
+            }
         }
     });
 }

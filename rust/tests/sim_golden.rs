@@ -28,9 +28,12 @@
 use std::fs;
 use std::path::PathBuf;
 
-use medha::config::DeploymentConfig;
-use medha::coordinator::{RoutingMode, SchedPolicyKind};
-use medha::sim::{run_convoy_scenario, run_kvp_convoy_scenario, SimOptions, Simulation};
+use medha::config::{DeploymentConfig, FaultEvent, FaultKind, FaultPlan};
+use medha::coordinator::{GroupState, RoutingMode, SchedPolicyKind};
+use medha::sim::{
+    run_convoy_scenario, run_kvp_convoy_scenario, run_kvp_convoy_scenario_with_faults, SimOptions,
+    Simulation,
+};
 use medha::workload::{self, LengthDist, RequestSpec};
 
 /// Exact, human-auditable serialization of everything a golden scenario
@@ -63,6 +66,8 @@ fn serialize_outcome(sim: &mut Simulation, end_s: f64) -> String {
     f("tbt_attainment", s.tbt_attainment);
     f("goodput_rps", s.goodput_rps);
     f("deferral_wait_p95", s.deferral_wait_p95);
+    f("recovery_wait_p50", s.recovery_wait_p50);
+    f("recovery_wait_p95", s.recovery_wait_p95);
     for (g, b) in group_busy.iter().enumerate() {
         f(&format!("group{g}_busy_s"), *b);
     }
@@ -74,6 +79,11 @@ fn serialize_outcome(sim: &mut Simulation, end_s: f64) -> String {
     out.push_str(&format!("active_preemptions = {}\n", s.active_preemptions));
     out.push_str(&format!("routing_refusals = {}\n", s.routing_refusals));
     out.push_str(&format!("n_deferred = {}\n", s.n_deferred));
+    out.push_str(&format!("group_crashes = {}\n", s.group_crashes));
+    out.push_str(&format!("shards_lost = {}\n", s.shards_lost));
+    out.push_str(&format!("reprefill_tokens = {}\n", s.reprefill_tokens));
+    out.push_str(&format!("kv_overcommit_tokens = {}\n", s.kv_overcommit_tokens));
+    out.push_str(&format!("n_recovered = {}\n", s.n_recovered));
     out.push_str(&format!("n_preemption_events = {n_events}\n"));
     out.push_str(&format!("group_prefill_tokens = {group_prefill:?}\n"));
     out.push_str(&format!("group_decode_tokens = {group_decode:?}\n"));
@@ -163,6 +173,9 @@ fn golden_mixed_short_poisson() {
         (sim, end)
     });
     assert!(sim.metrics.summary().finished > 100);
+    // capacity is sized to the workload here: the ledger must never absorb
+    // tokens past a group's free room
+    assert_eq!(sim.metrics.kv_overcommit_tokens, 0);
 }
 
 /// Workload 2: one long KVP-sharded request (dynamic onboarding across 4
@@ -181,6 +194,7 @@ fn golden_long_kvp_sharded_plus_decodes() {
     });
     assert_eq!(sim.metrics.summary().finished, 9);
     assert_eq!(sim.kvp_onboard_log().len(), 4, "expected 4 KVP onboard events");
+    assert_eq!(sim.metrics.kv_overcommit_tokens, 0);
 }
 
 /// Static chunking variant of workload 2 — the chunk policy out of the
@@ -230,6 +244,7 @@ fn golden_kvp_convoy_fcfs_blind() {
         (sim, end)
     });
     assert!(sim.metrics.summary().finished > 100);
+    assert_eq!(sim.metrics.kv_overcommit_tokens, 0);
 }
 
 /// The full policy × routing matrix on a reduced kvp_convoy trace: every
@@ -337,4 +352,79 @@ fn golden_workloads_are_construction_order_insensitive() {
     w.reverse();
     let reversed = run(w);
     assert_eq!(forward, reversed, "admission order leaked trace construction order");
+}
+
+/// Fault-injection goldens: a mid-run group crash — and a crash followed
+/// by a warmed-up rejoin — must be exactly as bit-deterministic as the
+/// fault-free scenarios, recovery placement, chunk-boundary re-prefill,
+/// and degradation accounting included. The crash instant is derived from
+/// a fault-free probe run (just after a mid-run KVP onboard event, aimed
+/// at the group that onboarded) so document shards are resident when the
+/// group dies, without hard-coding perf-model timings.
+#[test]
+fn golden_fault_crash_and_rejoin() {
+    let cfg = workload::KvpConvoyConfig {
+        horizon_s: 15.0,
+        doc_prompt: 128_000,
+        n_docs: 2,
+        doc_stagger_s: 6.0,
+        ..workload::KvpConvoyConfig::default()
+    };
+    let probe = run_kvp_convoy_scenario_with_faults(
+        SchedPolicyKind::Lars,
+        RoutingMode::Routed,
+        &cfg,
+        7,
+        FaultPlan::default(),
+    );
+    let log = probe.kvp_onboard_log();
+    assert!(!log.is_empty(), "probe run never sharded a document");
+    let (t_mid, _, victim) = log[log.len() / 2];
+    let crash_t = t_mid + 0.25;
+
+    // (a) crash only: the fleet stays degraded for the rest of the run
+    let mut sim = golden("kvp_convoy_lars_routed_crash", || {
+        let plan = FaultPlan {
+            events: vec![FaultEvent {
+                t_s: crash_t,
+                group: Some(victim),
+                kind: FaultKind::Crash,
+            }],
+        };
+        let sim =
+            run_kvp_convoy_scenario_with_faults(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg, 7, plan);
+        let end = sim.metrics.span_s();
+        (sim, end)
+    });
+    let s = sim.metrics.summary();
+    assert_eq!(s.group_crashes, 1);
+    assert!(s.shards_lost > 0, "crash instant missed resident shards");
+    assert!(s.reprefill_tokens > 0);
+    assert_eq!(sim.group_state(victim), GroupState::Down);
+    assert!(sim.kvp_ledger_is_conserved());
+
+    // (b) the same crash followed by a warmed-up rejoin of the dead group
+    let sim = golden("kvp_convoy_lars_routed_crash_join", || {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent {
+                    t_s: crash_t,
+                    group: Some(victim),
+                    kind: FaultKind::Crash,
+                },
+                FaultEvent {
+                    t_s: crash_t + 2.0,
+                    group: Some(victim),
+                    kind: FaultKind::Join { warmup_s: 0.5 },
+                },
+            ],
+        };
+        let sim =
+            run_kvp_convoy_scenario_with_faults(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg, 7, plan);
+        let end = sim.metrics.span_s();
+        (sim, end)
+    });
+    assert_eq!(sim.group_state(victim), GroupState::Active, "rejoin must restore the group");
+    assert_eq!(sim.n_active_groups(), 4);
+    assert!(sim.kvp_ledger_is_conserved());
 }
