@@ -7,8 +7,10 @@
 //!
 //! Results are recorded to `BENCH_sim.json`, including the simulator
 //! throughput reports (`sim/throughput decode-stream`, `sim/million
-//! mixed`) and the unified-core `sim/mixed 100K-prefill + 8 decodes`
-//! wall time (`sim_mixed_mean_s`).
+//! mixed`), the unified-core `sim/mixed 100K-prefill + 8 decodes`
+//! wall time (`sim_mixed_mean_s`), the serial-vs-threaded
+//! `sim/parallel_step` comparison (`sim_parallel_speedup`), and the
+//! concurrent policy × routing × load sweep (`sweep`, one row per cell).
 
 use medha::config::{DeploymentConfig, SloConfig};
 use medha::coordinator::chunking::{AdaptiveChunk, ChunkPolicy};
@@ -185,6 +187,73 @@ fn main() {
         );
         println!("{}", r.report_line());
         sim_reports.push(r);
+    });
+
+    // --- parallel step: serial vs threaded wall clock ----------------------
+    // The same pooled (4 KVP groups, round-robin) deployment and mixed
+    // trace at threads=1 and threads=4. The sim_golden determinism suite
+    // asserts the outcomes are bit-identical, so the only question here is
+    // the wall-clock speedup of sharding per-group phase-A work across the
+    // pool; both walls and the ratio land in BENCH_sim.json.
+    let par_threads = 4usize;
+    let par_dep = |threads: usize| {
+        let mut dep = throughput_dep(4);
+        dep.scheduler.routing = medha::coordinator::RoutingMode::RoundRobin;
+        dep.scheduler.threads = threads;
+        dep
+    };
+    let mut par_serial_wall = f64::NAN;
+    let mut par_threaded_wall = f64::NAN;
+    suite.bench_once("sim/parallel_step serial (threads=1)", || {
+        let r = run_sim_throughput(
+            "sim/parallel_step serial (threads=1)",
+            par_dep(1),
+            mixed_million_workload(n, n_long, 7),
+        );
+        println!("{}", r.report_line());
+        par_serial_wall = r.wall_s;
+        sim_reports.push(r);
+    });
+    let par_name = format!("sim/parallel_step threads={par_threads}");
+    suite.bench_once(&par_name, || {
+        let r = run_sim_throughput(
+            &par_name,
+            par_dep(par_threads),
+            mixed_million_workload(n, n_long, 7),
+        );
+        println!("{}", r.report_line());
+        par_threaded_wall = r.wall_s;
+        sim_reports.push(r);
+    });
+    if par_serial_wall.is_finite() && par_threaded_wall.is_finite() && par_threaded_wall > 0.0 {
+        println!(
+            "sim/parallel_step: serial {par_serial_wall:.2}s vs {par_threads} threads \
+             {par_threaded_wall:.2}s ({:.2}x)",
+            par_serial_wall / par_threaded_wall
+        );
+    }
+
+    // --- concurrent sweep: policy x routing x load grid --------------------
+    // One independent sim per pool worker over the full grid; the Pareto
+    // table goes to stdout and every cell's outcome row into
+    // BENCH_sim.json's `sweep` section.
+    let sweep_cfg = {
+        let mut c = if smoke {
+            medha::sim::sweep::SweepConfig::smoke()
+        } else {
+            medha::sim::sweep::SweepConfig::default()
+        };
+        c.threads = par_threads;
+        c
+    };
+    let sweep_threads = sweep_cfg.threads;
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    let mut sweep_wall = f64::NAN;
+    suite.bench_once("sim/sweep policy x routing x load", || {
+        let (outcomes, wall_s) = medha::sim::sweep::run_sweep(&sweep_cfg);
+        medha::sim::sweep::print_table(&outcomes, wall_s, sweep_cfg.threads);
+        sweep_rows = outcomes.iter().map(|o| o.to_json()).collect();
+        sweep_wall = wall_s;
     });
 
     // --- scheduling-policy comparison on the convoy trace ------------------
@@ -377,6 +446,28 @@ fn main() {
                 ("routed_active_yields", routed_yields.into()),
             ]),
         ),
+        (
+            "sim_parallel_speedup",
+            Json::obj(vec![
+                ("workload", Json::str("million mixed (kvp=4, round-robin)")),
+                ("threads", (par_threads as u64).into()),
+                ("serial_wall_s", num_or_null(par_serial_wall)),
+                ("parallel_wall_s", num_or_null(par_threaded_wall)),
+                (
+                    "speedup",
+                    if par_threaded_wall > 0.0 {
+                        num_or_null(par_serial_wall / par_threaded_wall)
+                    } else {
+                        Json::Null
+                    },
+                ),
+            ]),
+        ),
+        // One row per sweep cell (policy, routing, load, seed, goodput,
+        // short p99 TTFT, deferrals, on_frontier) — empty when filtered.
+        ("sweep", Json::arr(sweep_rows)),
+        ("sweep_threads", (sweep_threads as u64).into()),
+        ("sweep_wall_s", num_or_null(sweep_wall)),
     ];
     let out = std::path::Path::new("BENCH_sim.json");
     match suite.write_json(out, extra) {

@@ -112,6 +112,13 @@ pub struct SchedulerConfig {
     /// let non-sharded groups serve short traffic independently and enable
     /// active-long-request preemption under preemptive policies.
     pub routing: RoutingMode,
+    /// Worker threads for the simulator's parallel step (`simulate
+    /// --threads N`): per-group batch formation and pipeline timing run
+    /// group-parallel on a threadpool, with results merged in group-index
+    /// order so every metric and clock is bit-identical to the serial
+    /// schedule. `1` (the default) keeps the single-threaded path; must be
+    /// positive.
+    pub threads: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -125,6 +132,7 @@ impl Default for SchedulerConfig {
             kvp_capacity_tokens: u64::MAX,
             policy: SchedPolicyKind::Fcfs,
             routing: RoutingMode::Blind,
+            threads: 1,
         }
     }
 }
@@ -173,6 +181,7 @@ impl SchedulerConfig {
                 })?,
                 None => d.routing,
             },
+            threads: j.get("threads").and_then(|x| x.as_usize()).unwrap_or(d.threads),
         })
     }
 }
@@ -250,6 +259,9 @@ impl DeploymentConfig {
     pub fn validate(&self) -> anyhow::Result<()> {
         if self.scheduler.kvp_capacity_tokens == 0 {
             anyhow::bail!("kvp_capacity_tokens must be positive (use u64::MAX for unlimited)");
+        }
+        if self.scheduler.threads == 0 {
+            anyhow::bail!("scheduler threads must be positive (1 = serial)");
         }
         self.parallel
             .validate(&self.model, &self.hardware)
@@ -340,6 +352,18 @@ mod tests {
         );
         let bad = Json::parse(r#"{"routing": "hash"}"#).unwrap();
         assert!(SchedulerConfig::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn scheduler_threads_from_json() {
+        // default is the serial path
+        assert_eq!(SchedulerConfig::default().threads, 1);
+        let j = Json::parse(r#"{"threads": 4}"#).unwrap();
+        assert_eq!(SchedulerConfig::from_json(&j).unwrap().threads, 4);
+        // zero threads is a config error, not a pool-construction panic
+        let mut dep = DeploymentConfig::llama3_8b_tp8();
+        dep.scheduler.threads = 0;
+        assert!(dep.validate().is_err());
     }
 
     #[test]

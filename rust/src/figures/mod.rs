@@ -19,6 +19,8 @@ pub const ALL_FIGURES: &[&str] = &[
     "sched",
     // robustness: 1-of-N KVP group crash, boundary re-prefill recovery
     "faults",
+    // concurrent policy x routing x load sweep with the Pareto frontier
+    "sweep",
 ];
 
 pub fn run(figure: &str) -> anyhow::Result<()> {
@@ -48,6 +50,7 @@ pub fn run(figure: &str) -> anyhow::Result<()> {
         "kvpthresh" => kvpthresh(),
         "sched" => sched(),
         "faults" => faults(),
+        "sweep" => sweep(),
         "all" => {
             for f in ALL_FIGURES {
                 run(f)?;
@@ -902,6 +905,31 @@ pub fn faults() -> anyhow::Result<()> {
     );
     println!("every request completes; degradation shows up as re-prefill work and");
     println!("recovery wait, not dropped requests (no request left behind).");
+    Ok(())
+}
+
+/// Concurrent evaluation sweep (not a paper figure): the full policy ×
+/// routing × load grid on the kvp_convoy trace, one independent sim per
+/// threadpool worker, reduced to the goodput vs short-p99-TTFT vs
+/// deferrals Pareto frontier (see `sim::sweep`). Honors
+/// `MEDHA_BENCH_SMOKE` with the down-scaled grid.
+pub fn sweep() -> anyhow::Result<()> {
+    use crate::sim::sweep::{print_table, run_sweep, SweepConfig};
+
+    println!("\n== sweep: policy x routing x load Pareto frontier (8B, tp=8, 4 KVP groups) ==");
+    let mut cfg = if std::env::var("MEDHA_BENCH_SMOKE").is_ok() {
+        SweepConfig::smoke()
+    } else {
+        SweepConfig::default()
+    };
+    // Worker count never changes results (per-cell seeds, canonical-order
+    // reduction) — only how fast the table arrives.
+    cfg.threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+    let (outcomes, wall_s) = run_sweep(&cfg);
+    print_table(&outcomes, wall_s, cfg.threads);
     Ok(())
 }
 

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve       serve the tiny real model on CPU PJRT (SPP pipeline)
 //!   simulate    run the cluster simulator on a workload
+//!   sweep       run the policy x routing x load grid concurrently
 //!   reproduce   regenerate a paper table/figure (--figure fig15 | all)
 //!   inspect     list AOT artifacts and the manifest summary
 //!   table1      print the capability matrix
@@ -25,17 +26,23 @@ USAGE:
                   [--policy fcfs|srpt|edf|lars] [--routing blind|round-robin|routed]
                   [--kvp-capacity TOKENS] [--workload mixed|convoy|kvp-convoy]
                   [--ctx TOKENS] [--requests N] [--rate R] [--horizon S] [--seed S]
+                  [--threads N]          parallel per-group stepping (bit-identical to serial)
                   [--faults PLAN.json]   deterministic group crash/join/drain/slowdown schedule
-  medha reproduce --figure <fig1|table1|fig5a|...|all>
+  medha sweep     [--threads N] [--seed S] [--loads 0.5,1,2] [--kvp-capacity TOKENS] [--smoke]
+                  run the full policy x routing x load grid concurrently (one sim
+                  per worker, per-cell seeds from (seed, cell)) and print the
+                  Pareto-frontier table: goodput vs short p99 TTFT vs deferrals
+  medha reproduce --figure <fig1|table1|fig5a|...|sweep|all>
   medha inspect   [--artifacts DIR]
   medha table1
 ";
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["verbose", "adaptive", "no-adaptive"], true);
+    let args = Args::from_env(&["verbose", "adaptive", "no-adaptive", "smoke"], true);
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("reproduce") => {
             let fig = args.str_or("figure", "all");
             medha::figures::run(fig)
@@ -125,6 +132,9 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             .parse()
             .map_err(|_| anyhow::anyhow!("--kvp-capacity must be a token count"))?;
     }
+    // Parallel per-group stepping; results are bit-identical to --threads 1
+    // (the determinism tests assert it), only wall-clock changes.
+    dep.scheduler.threads = args.usize_or("threads", 1);
     dep.validate()?;
     let ctx = args.u64_or("ctx", 1_000_000);
     let n = args.usize_or("requests", 8);
@@ -240,6 +250,49 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             fmt_tokens(s.kv_overcommit_tokens)
         );
     }
+    Ok(())
+}
+
+/// `medha sweep`: the concurrent policy × routing × load grid with the
+/// Pareto-frontier table. Results are independent of --threads (cells get
+/// deterministic per-cell seeds and land in canonical order); the flag
+/// only divides wall-clock.
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    use medha::sim::sweep::{print_table, run_sweep, SweepConfig};
+    let smoke = args.flag("smoke") || std::env::var("MEDHA_BENCH_SMOKE").is_ok();
+    let mut cfg = if smoke {
+        SweepConfig::smoke()
+    } else {
+        SweepConfig::default()
+    };
+    cfg.base_seed = args.u64_or("seed", cfg.base_seed);
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8);
+    cfg.threads = args.usize_or("threads", default_threads);
+    anyhow::ensure!(cfg.threads > 0, "--threads must be positive (1 = serial)");
+    if let Some(loads) = args.get("loads") {
+        cfg.load_levels = loads
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--loads: '{t}' is not a number"))
+            })
+            .collect::<anyhow::Result<Vec<f64>>>()?;
+        anyhow::ensure!(
+            !cfg.load_levels.is_empty(),
+            "--loads must name at least one load multiplier"
+        );
+    }
+    if let Some(cap) = args.get("kvp-capacity") {
+        cfg.kvp_capacity_tokens = cap
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--kvp-capacity must be a token count"))?;
+    }
+    let (outcomes, wall_s) = run_sweep(&cfg);
+    print_table(&outcomes, wall_s, cfg.threads);
     Ok(())
 }
 

@@ -126,15 +126,46 @@
 //!   golden snapshots in `tests/sim_golden.rs` assert identical metric
 //!   streams across runs for every policy × routing combination.
 //!
+//! # Parallel step (`scheduler.threads > 1`)
+//!
+//! `step()` is split into two phases. **Phase A** — batch formation,
+//! long-share injection, and pipeline flow ([`group_phase_a`]) — touches
+//! only *per-group* mutable state (that group's `Scheduler`,
+//! `PipelineTimeline`, `BatchPlan`, and `BatchShape` scratch) plus shared
+//! **immutable** reads ([`StepCtx`]: the request arena, perf model, KVP
+//! ledger, shard map, slowdowns). **Phase B** — metrics recording,
+//! cooperative-set accumulation, clock updates, and plan completion
+//! (`merge_group_outcome`) — is serial. With `scheduler.threads > 1` the
+//! phase-A calls fan out across a persistent [`ThreadPool`] (borrowed jobs
+//! via `ThreadPool::scoped`, one pre-sized result slot per group) and the
+//! reduction merges the slots **in group-index order**, so metric streams,
+//! clocks, and the capacity ledger are byte-identical to the serial
+//! schedule. The serial path (`threads = 1`, the default) keeps the
+//! original interleaving — merge group *g* before forming group *g+1*'s
+//! batch — so the determinism tests in `tests/sim_golden.rs` compare the
+//! parallel reduction against unchanged semantics.
+//!
+//! Why the fan-out is safe *and* deterministic: a request belongs to
+//! exactly one group's scheduler, so phase A(g) never reads state phase
+//! B(g′≠g) mutates within the same instant — completions retire arena
+//! slots, release reservations, and free router lanes, but none of that
+//! feeds another group's batch formation until the *next* admission
+//! instant (slot recycling happens only at admission-time inserts). The
+//! per-group results are therefore independent of execution order, and
+//! merging them in index order reproduces the serial schedule bit-exactly.
+//!
 //! Benches: `sim/mixed 100K-prefill + 8 decodes` plus `sim/throughput
-//! decode-stream` and `sim/million mixed` live in `benches/hotpath.rs`,
-//! which records results to `BENCH_sim.json`.
+//! decode-stream`, `sim/million mixed`, and the serial-vs-threaded
+//! `sim/parallel_step` pair live in `benches/hotpath.rs`, which records
+//! results (including `sim_parallel_speedup` and the concurrent
+//! policy × routing × load `sweep`, see [`sweep`]) to `BENCH_sim.json`.
 
+pub mod sweep;
 pub mod throughput;
 
 use std::collections::VecDeque;
 
-use crate::config::{DeploymentConfig, FaultEvent, FaultKind, FaultPlan};
+use crate::config::{DeploymentConfig, FaultEvent, FaultKind, FaultPlan, SloConfig};
 use crate::coordinator::chunking::ChunkPolicy;
 use crate::coordinator::policy::{self, GroupView, SchedPolicy};
 use crate::coordinator::request::{Phase, Request};
@@ -148,6 +179,7 @@ use crate::kvcache::{GroupId, RequestId};
 use crate::metrics::{IterRecord, Metrics};
 use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
 use crate::util::slotvec::SlotVec;
+use crate::util::threadpool::ThreadPool;
 use crate::workload::RequestSpec;
 
 /// Simulation options beyond the deployment config.
@@ -266,6 +298,26 @@ pub fn run_kvp_convoy_scenario_with_faults(
     seed: u64,
     faults: FaultPlan,
 ) -> Simulation {
+    let dep = kvp_convoy_dep(kind, routing, cfg);
+    let opts = SimOptions {
+        faults,
+        ..SimOptions::default()
+    };
+    let mut sim = Simulation::new(dep, crate::workload::kvp_convoy(cfg, seed), opts);
+    sim.run();
+    sim
+}
+
+/// The deployment every kvp_convoy evaluation runs on (the figure, the
+/// bench, the sweep grid, and the golden/determinism tests — which also
+/// layer `scheduler.threads` overrides onto it): Llama-3 8B tp=8 across 4
+/// KVP groups, static chunking, onboarding threshold sized so each
+/// document shards across two groups.
+pub fn kvp_convoy_dep(
+    kind: crate::coordinator::SchedPolicyKind,
+    routing: RoutingMode,
+    cfg: &crate::workload::KvpConvoyConfig,
+) -> DeploymentConfig {
     let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 4);
     dep.scheduler.policy = kind;
     dep.scheduler.routing = routing;
@@ -276,13 +328,7 @@ pub fn run_kvp_convoy_scenario_with_faults(
     // Documents shard across two of the four groups, leaving an
     // independent short-serving pool (the section 7 opportunity).
     dep.scheduler.kvp_onboard_threshold = cfg.doc_prompt.div_ceil(2).max(1);
-    let opts = SimOptions {
-        faults,
-        ..SimOptions::default()
-    };
-    let mut sim = Simulation::new(dep, crate::workload::kvp_convoy(cfg, seed), opts);
-    sim.run();
-    sim
+    dep
 }
 
 /// Split finished-request TTFTs of a kvp_convoy run by class —
@@ -358,7 +404,15 @@ pub struct Simulation {
 
     // ---- per-iteration scratch (reused across steps) --------------------
     group_plans: Vec<BatchPlan>,
-    shape: BatchShape,
+    /// One shape scratch per group — disjoint, so phase A runs
+    /// group-parallel; the serial path uses them identically.
+    group_shapes: Vec<BatchShape>,
+    /// Pre-sized phase-A result slots, merged in group-index order (the
+    /// deterministic reduction).
+    phase_outs: Vec<GroupPhaseA>,
+    /// Workers for the parallel step (`scheduler.threads > 1`); `None` is
+    /// the serial path.
+    pool: Option<ThreadPool>,
     combined: BatchShape,
     long_ctxs: Vec<u64>,
     participating: Vec<(GroupId, u64)>,
@@ -446,7 +500,13 @@ impl Simulation {
             metrics,
             now: 0.0,
             group_plans: (0..kvp_groups).map(|_| BatchPlan::default()).collect(),
-            shape: BatchShape::default(),
+            group_shapes: (0..kvp_groups).map(|_| BatchShape::default()).collect(),
+            phase_outs: Vec::new(),
+            pool: if dep.scheduler.threads > 1 {
+                Some(ThreadPool::new(dep.scheduler.threads))
+            } else {
+                None
+            },
             combined: BatchShape::default(),
             long_ctxs: Vec::new(),
             participating: Vec::new(),
@@ -879,133 +939,121 @@ impl Simulation {
         }
         let long_nq = long_chunk.unwrap_or(if long_decode { 1 } else { 0 });
 
-        // ---- batch formation + flow -------------------------------------
-        let mut coop_ran = false;
-        let mut coop_exit = self.now;
-        let mut coop_first = self.now;
-        let mut coop_any_decode = long_decode;
-        let mut coop_decodes = 0usize;
-        let mut coop_chunk: Option<u64> = None;
-        self.combined.clear(); // accumulates the coop set's shapes
-        for g in 0..n_groups {
-            self.group_plans[g].clear();
-            if !self.kvp_mgr.is_live(g as GroupId) {
-                // A crashed slot: holds nothing, forms nothing, until (and
-                // unless) a join revives it. Always live fault-free.
-                continue;
-            }
-            let holder = self.participating.iter().any(|&(gg, _)| gg as usize == g);
-            let member = barrier || holder;
-            let run_now = if member {
-                // Pooled holders additionally wait for actual long work —
-                // unreachable in practice (an active request always has a
-                // chunk or a decode pending), kept as a guard.
-                coop_ready && (barrier || long_nq > 0)
-            } else {
-                self.free_at[g] <= self.now
-            };
-            if !run_now {
-                continue;
-            }
-            self.scheds[g].next_batch_into(
-                &self.requests,
-                &self.pm,
-                &slo,
-                self.now,
-                &mut self.group_plans[g],
-            );
-            self.scheds[g].batch_shape_into(
-                &self.group_plans[g],
-                &self.requests,
-                Self::short_local_kv,
-                &mut self.shape,
-            );
-            if holder {
-                // Long-request share on this group: partial attention over
-                // the local shard (queries broadcast to every holder).
-                let local = self
-                    .participating
-                    .iter()
-                    .find(|&&(gg, _)| gg as usize == g)
-                    .expect("holder has a shard")
-                    .1;
-                if let Some(c) = long_chunk {
-                    self.shape.prefills.push(PrefillWork {
-                        chunk: c,
-                        kv_len: local + c,
-                    });
-                } else if long_decode {
-                    self.shape.decodes.push(DecodeWork {
-                        kv_len: local.max(1),
-                    });
-                }
-            }
-            if self.shape.is_empty() {
-                continue;
-            }
-            let has_decode = !self.shape.decodes.is_empty();
-            // `slow_factor` is exactly 1.0 without a slowdown in force —
-            // the multiply is then bit-exact with the undisturbed time.
-            let st = self.pm.stage_time(&self.shape, self.layers_per_stage).total()
-                * self.slow_factor(g);
-            let hop = self.pm.stage_hop_s(self.shape.tokens());
-            let ready = if has_decode {
-                self.now
-            } else {
-                self.timelines[g].stage0_free().max(self.now)
-            };
-            let (first, exit) = self.timelines[g].flow_compact(ready, |_| st, hop);
-            let prefill_toks: u64 = self.shape.prefills.iter().map(|p| p.chunk).sum();
-            let n_decodes = self.shape.decodes.len();
-            self.metrics
-                .record_group_iter(g, exit - self.now, prefill_toks, n_decodes as u64);
-            if member {
-                coop_ran = true;
-                coop_exit = coop_exit.max(exit);
-                coop_first = coop_first.max(first);
-                coop_any_decode |= has_decode;
-                coop_decodes += n_decodes;
-                if coop_chunk.is_none() {
-                    // The combined record reports the sharded chunk; under
-                    // the barrier it falls back to the first member's own
-                    // prefill chunk (the lockstep record's rule).
-                    coop_chunk = long_chunk.or(if barrier {
-                        self.group_plans[g].prefill.map(|(_, c)| c)
-                    } else {
-                        None
-                    });
-                }
-                self.combined.extend_from(&self.shape);
-            } else {
-                // Independent pool iteration: this group's requests
-                // complete at its own exit, on its own clock.
-                let dur = exit - self.now;
-                let gpus = self.topo.parallel.workers_per_replica();
-                if dur > 0.0 {
-                    self.metrics.mfu.add(self.pm.mfu(&self.shape, dur, gpus.max(1)));
-                    self.metrics.mbu.add(self.pm.mbu(&self.shape, dur, gpus.max(1)));
-                }
-                self.metrics.record_iter(IterRecord {
-                    t: exit,
-                    dur_s: dur,
-                    chunk: self.group_plans[g].prefill.map(|(_, c)| c),
-                    n_decodes,
-                    active_gpus: gpus,
+        // ---- batch formation + flow (phase A, then the ordered merge) ---
+        let mut coop = CoopAcc {
+            ran: false,
+            exit: self.now,
+            first: self.now,
+            any_decode: long_decode,
+            decodes: 0,
+            chunk: None,
+        };
+        // Scratch moves out of `self` so phase A can borrow per-group
+        // `&mut` slices alongside the shared immutable `StepCtx` reads.
+        let mut combined = std::mem::take(&mut self.combined);
+        combined.clear(); // accumulates the coop set's shapes
+        let mut shapes = std::mem::take(&mut self.group_shapes);
+        shapes.resize_with(n_groups, BatchShape::default); // fleet growth
+        let mut outs = std::mem::take(&mut self.phase_outs);
+        outs.clear();
+        outs.resize(n_groups, GroupPhaseA::default());
+
+        if let Some(pool) = self.pool.take() {
+            // Parallel phase A: one borrowed job per group, results into
+            // pre-sized slots. Work-order free; merge order is not.
+            {
+                let ctx = StepCtx {
+                    requests: &self.requests,
+                    pm: &self.pm,
+                    kvp: &self.kvp_mgr,
+                    slo,
+                    now: self.now,
+                    layers_per_stage: self.layers_per_stage,
+                    barrier,
+                    coop_ready,
+                    long_nq,
+                    long_chunk,
+                    long_decode,
+                    participating: &self.participating,
+                    slowdowns: &self.slowdowns,
+                    pool_gpus: self.topo.parallel.workers_per_replica(),
+                };
+                let free_at = &self.free_at;
+                let per_group = self
+                    .scheds
+                    .iter_mut()
+                    .zip(self.timelines.iter_mut())
+                    .zip(self.group_plans.iter_mut())
+                    .zip(shapes.iter_mut().zip(outs.iter_mut()))
+                    .enumerate();
+                pool.scoped(|scope| {
+                    for (g, (((sched, timeline), plan), (shape, out))) in per_group {
+                        let ctx = &ctx;
+                        let free_at_g = free_at[g];
+                        scope.spawn(move || {
+                            *out = group_phase_a(ctx, g, free_at_g, sched, timeline, plan, shape);
+                        });
+                    }
                 });
-                self.free_at[g] = if has_decode { exit } else { first };
-                self.complete_group_plan(g, exit);
+            }
+            self.pool = Some(pool);
+            // Deterministic reduction: merge in group-index order, so
+            // metric streams, clocks, and completions are byte-identical
+            // to the serial schedule below.
+            for g in 0..n_groups {
+                let out = outs[g];
+                self.merge_group_outcome(g, &out, &shapes[g], &mut coop, &mut combined);
+            }
+        } else {
+            // Serial schedule (the default): each group's outcome merges
+            // before the next group forms its batch — the original
+            // interleaving, which the parallel reduction must reproduce
+            // bit-exactly (asserted by the thread-matrix golden tests).
+            for g in 0..n_groups {
+                let out = {
+                    let ctx = StepCtx {
+                        requests: &self.requests,
+                        pm: &self.pm,
+                        kvp: &self.kvp_mgr,
+                        slo,
+                        now: self.now,
+                        layers_per_stage: self.layers_per_stage,
+                        barrier,
+                        coop_ready,
+                        long_nq,
+                        long_chunk,
+                        long_decode,
+                        participating: &self.participating,
+                        slowdowns: &self.slowdowns,
+                        pool_gpus: self.topo.parallel.workers_per_replica(),
+                    };
+                    group_phase_a(
+                        &ctx,
+                        g,
+                        self.free_at[g],
+                        &mut self.scheds[g],
+                        &mut self.timelines[g],
+                        &mut self.group_plans[g],
+                        &mut shapes[g],
+                    )
+                };
+                outs[g] = out;
+                self.merge_group_outcome(g, &out, &shapes[g], &mut coop, &mut combined);
             }
         }
 
         // ---- cooperative completion -------------------------------------
-        if coop_ran {
+        if coop.ran {
             if self.participating.len() > 1 && long_nq > 0 {
-                coop_exit += self.pm.kvp_merge_s(long_nq);
+                coop.exit += self.pm.kvp_merge_s(long_nq);
             }
+            let coop_exit = coop.exit;
+            let coop_chunk = coop.chunk;
+            let coop_decodes = coop.decodes;
             let dur = coop_exit - self.now;
             // Dense SPP admission survives for pure-prefill coop batches:
             // the set re-admits at its max stage-0 exit, not full drain.
-            let free = if coop_any_decode { coop_exit } else { coop_first };
+            let free = if coop.any_decode { coop_exit } else { coop.first };
             if barrier {
                 // Lockstep accounting convention, kept bit-exact with the
                 // pre-pool blind core: complete first, account after — the
@@ -1027,10 +1075,10 @@ impl Simulation {
                 if dur > 0.0 {
                     self.metrics
                         .mfu
-                        .add(self.pm.mfu(&self.combined, dur, gpus.max(1)));
+                        .add(self.pm.mfu(&combined, dur, gpus.max(1)));
                     self.metrics
                         .mbu
-                        .add(self.pm.mbu(&self.combined, dur, gpus.max(1)));
+                        .add(self.pm.mbu(&combined, dur, gpus.max(1)));
                 }
                 self.metrics.record_iter(IterRecord {
                     t: coop_exit,
@@ -1046,10 +1094,10 @@ impl Simulation {
                 if dur > 0.0 {
                     self.metrics
                         .mfu
-                        .add(self.pm.mfu(&self.combined, dur, gpus.max(1)));
+                        .add(self.pm.mfu(&combined, dur, gpus.max(1)));
                     self.metrics
                         .mbu
-                        .add(self.pm.mbu(&self.combined, dur, gpus.max(1)));
+                        .add(self.pm.mbu(&combined, dur, gpus.max(1)));
                 }
                 self.metrics.record_iter(IterRecord {
                     t: coop_exit,
@@ -1072,9 +1120,72 @@ impl Simulation {
             }
         }
 
+        // Hand the scratch back for the next step.
+        self.combined = combined;
+        self.group_shapes = shapes;
+        self.phase_outs = outs;
+
         // Whether or not anything ran, the next decision instant is the
         // earliest group admission point or arrival.
         self.now = self.next_event();
+    }
+
+    /// Phase B of one group's decision instant: the order-dependent half —
+    /// metric recording, cooperative-set accumulation, pool-group clock
+    /// updates, and plan completion. Always called in group-index order;
+    /// together with phase A's independence that is what makes the
+    /// parallel reduction byte-identical to the serial schedule.
+    fn merge_group_outcome(
+        &mut self,
+        g: usize,
+        out: &GroupPhaseA,
+        shape: &BatchShape,
+        coop: &mut CoopAcc,
+        combined: &mut BatchShape,
+    ) {
+        if !out.ran {
+            return;
+        }
+        self.metrics
+            .record_group_iter(g, out.exit - self.now, out.prefill_toks, out.n_decodes as u64);
+        if out.member {
+            coop.ran = true;
+            coop.exit = coop.exit.max(out.exit);
+            coop.first = coop.first.max(out.first);
+            coop.any_decode |= out.has_decode;
+            coop.decodes += out.n_decodes;
+            if coop.chunk.is_none() {
+                // The combined record reports the sharded chunk; under
+                // the barrier it falls back to the first member's own
+                // prefill chunk (the lockstep record's rule).
+                coop.chunk = out.long_chunk.or(if out.barrier {
+                    self.group_plans[g].prefill.map(|(_, c)| c)
+                } else {
+                    None
+                });
+            }
+            combined.extend_from(shape);
+        } else {
+            // Independent pool iteration: this group's requests
+            // complete at its own exit, on its own clock.
+            let dur = out.exit - self.now;
+            let gpus = self.topo.parallel.workers_per_replica();
+            if dur > 0.0 {
+                // Utilization precomputed in phase A from this group's own
+                // shape — pure values, added here in deterministic order.
+                self.metrics.mfu.add(out.mfu);
+                self.metrics.mbu.add(out.mbu);
+            }
+            self.metrics.record_iter(IterRecord {
+                t: out.exit,
+                dur_s: dur,
+                chunk: self.group_plans[g].prefill.map(|(_, c)| c),
+                n_decodes: out.n_decodes,
+                active_gpus: gpus,
+            });
+            self.free_at[g] = if out.has_decode { out.exit } else { out.first };
+            self.complete_group_plan(g, out.exit);
+        }
     }
 
     /// Apply one group's completed plan at time `t`: request transitions
@@ -1457,19 +1568,6 @@ impl Simulation {
         }
     }
 
-    /// Iteration-time multiplier for group `g` under the transient
-    /// slowdowns in force — exactly 1.0 (not approximately) when none
-    /// target it, so undisturbed groups keep bit-exact timing.
-    fn slow_factor(&self, g: usize) -> f64 {
-        let mut f = 1.0;
-        for &(sg, factor, until_s) in &self.slowdowns {
-            if sg as usize == g && self.now < until_s {
-                f = f.max(factor);
-            }
-        }
-        f
-    }
-
     /// Record a crash victim's recovery wait at its first post-crash
     /// service the simulator can observe per-request: a long request's
     /// next completed chunk or decode of re-prefill progress (at its
@@ -1544,6 +1642,174 @@ impl Simulation {
     pub fn n_live(&self) -> usize {
         self.requests.len()
     }
+}
+
+/// Immutable per-instant inputs shared by every group's phase A. Nothing
+/// here is mutated while phase A runs — the request arena, perf model,
+/// and KVP ledger change only in phase B and between steps — which is the
+/// whole safety argument for fanning the per-group calls out across
+/// threads (see the module docs).
+struct StepCtx<'a> {
+    requests: &'a RequestArena,
+    pm: &'a PerfModel,
+    kvp: &'a KvpManager,
+    slo: SloConfig,
+    now: f64,
+    layers_per_stage: u32,
+    barrier: bool,
+    coop_ready: bool,
+    long_nq: u64,
+    long_chunk: Option<u64>,
+    long_decode: bool,
+    participating: &'a [(GroupId, u64)],
+    slowdowns: &'a [(GroupId, f64, f64)],
+    /// `workers_per_replica()` — the pool-group iteration's GPU count.
+    pool_gpus: u32,
+}
+
+/// One group's phase-A outcome, written into a pre-sized slot and merged
+/// in group-index order. Pure data: everything order-dependent (metrics,
+/// clocks, completions) happens at merge time, in `merge_group_outcome`.
+#[derive(Debug, Clone, Copy, Default)]
+struct GroupPhaseA {
+    /// This group formed a non-empty batch this instant.
+    ran: bool,
+    /// Member of the cooperative set (barrier mode or shard holder).
+    member: bool,
+    has_decode: bool,
+    /// Copies of the instant-wide inputs the merge's coop-chunk rule
+    /// needs (uniform across groups; carried here so the slot is
+    /// self-contained).
+    barrier: bool,
+    long_chunk: Option<u64>,
+    /// Pipeline stage-0 re-admission point and batch exit.
+    first: f64,
+    exit: f64,
+    prefill_toks: u64,
+    n_decodes: usize,
+    /// Pool-group utilization samples, precomputed from this group's own
+    /// shape (zero and unused for cooperative members).
+    mfu: f64,
+    mbu: f64,
+}
+
+/// Cooperative-set accumulator threaded through the group merge.
+struct CoopAcc {
+    ran: bool,
+    exit: f64,
+    first: f64,
+    any_decode: bool,
+    decodes: usize,
+    chunk: Option<u64>,
+}
+
+/// Iteration-time multiplier for group `g` under the transient slowdowns
+/// in force — exactly 1.0 (not approximately) when none target it, so
+/// undisturbed groups keep bit-exact timing.
+fn slow_factor_of(slowdowns: &[(GroupId, f64, f64)], now: f64, g: usize) -> f64 {
+    let mut f = 1.0;
+    for &(sg, factor, until_s) in slowdowns {
+        if sg as usize == g && now < until_s {
+            f = f.max(factor);
+        }
+    }
+    f
+}
+
+/// Phase A of one group's decision instant: batch formation, long-share
+/// injection, and pipeline flow. Mutates only the group's own scheduler,
+/// timeline, plan, and shape scratch (disjoint across groups) plus the
+/// shared immutable [`StepCtx`] reads, so the per-group calls are
+/// independent — the parallel step runs them on threadpool workers and
+/// the serial step inline, with identical results either way.
+fn group_phase_a(
+    ctx: &StepCtx<'_>,
+    g: usize,
+    free_at_g: f64,
+    sched: &mut Scheduler,
+    timeline: &mut PipelineTimeline,
+    plan: &mut BatchPlan,
+    shape: &mut BatchShape,
+) -> GroupPhaseA {
+    let mut out = GroupPhaseA {
+        barrier: ctx.barrier,
+        long_chunk: ctx.long_chunk,
+        ..GroupPhaseA::default()
+    };
+    plan.clear();
+    shape.clear();
+    if !ctx.kvp.is_live(g as GroupId) {
+        // A crashed slot: holds nothing, forms nothing, until (and
+        // unless) a join revives it. Always live fault-free.
+        return out;
+    }
+    let holder = ctx.participating.iter().any(|&(gg, _)| gg as usize == g);
+    let member = ctx.barrier || holder;
+    out.member = member;
+    let run_now = if member {
+        // Pooled holders additionally wait for actual long work —
+        // unreachable in practice (an active request always has a
+        // chunk or a decode pending), kept as a guard.
+        ctx.coop_ready && (ctx.barrier || ctx.long_nq > 0)
+    } else {
+        free_at_g <= ctx.now
+    };
+    if !run_now {
+        return out;
+    }
+    sched.next_batch_into(ctx.requests, ctx.pm, &ctx.slo, ctx.now, plan);
+    sched.batch_shape_into(plan, ctx.requests, Simulation::short_local_kv, shape);
+    if holder {
+        // Long-request share on this group: partial attention over
+        // the local shard (queries broadcast to every holder).
+        let local = ctx
+            .participating
+            .iter()
+            .find(|&&(gg, _)| gg as usize == g)
+            .expect("holder has a shard")
+            .1;
+        if let Some(c) = ctx.long_chunk {
+            shape.prefills.push(PrefillWork {
+                chunk: c,
+                kv_len: local + c,
+            });
+        } else if ctx.long_decode {
+            shape.decodes.push(DecodeWork {
+                kv_len: local.max(1),
+            });
+        }
+    }
+    if shape.is_empty() {
+        return out;
+    }
+    out.ran = true;
+    out.has_decode = !shape.decodes.is_empty();
+    // `slow_factor_of` is exactly 1.0 without a slowdown in force —
+    // the multiply is then bit-exact with the undisturbed time.
+    let st = ctx.pm.stage_time(shape, ctx.layers_per_stage).total()
+        * slow_factor_of(ctx.slowdowns, ctx.now, g);
+    let hop = ctx.pm.stage_hop_s(shape.tokens());
+    let ready = if out.has_decode {
+        ctx.now
+    } else {
+        timeline.stage0_free().max(ctx.now)
+    };
+    let (first, exit) = timeline.flow_compact(ready, |_| st, hop);
+    out.first = first;
+    out.exit = exit;
+    out.prefill_toks = shape.prefills.iter().map(|p| p.chunk).sum();
+    out.n_decodes = shape.decodes.len();
+    if !member {
+        // Pool-group utilization is a pure function of this group's shape
+        // and duration: computed here so the merge stays bookkeeping.
+        let dur = exit - ctx.now;
+        if dur > 0.0 {
+            let gpus = ctx.pool_gpus.max(1);
+            out.mfu = ctx.pm.mfu(shape, dur, gpus);
+            out.mbu = ctx.pm.mbu(shape, dur, gpus);
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -2048,6 +2314,41 @@ mod tests {
         assert_eq!(sim.n_active_groups(), 2);
         assert!(sim.kvp_ledger_is_conserved());
         assert!(sim.kvp_onboard_log_is_duplicate_free());
+    }
+
+    #[test]
+    fn parallel_step_summary_matches_serial_in_module() {
+        // The in-crate sanity check for scheduler.threads > 1 (the full
+        // bit-exact matrix lives in tests/sim_golden.rs): same mixed
+        // trace, pooled 4-group round-robin, serial vs threaded summary.
+        let run = |threads: usize| {
+            let mut d = dep(8, 1, 4);
+            d.scheduler.routing = RoutingMode::RoundRobin;
+            d.scheduler.adaptive_chunking = false;
+            d.scheduler.static_chunk = 2048;
+            d.scheduler.threads = threads;
+            let w = workload::poisson_mixed(
+                8.0,
+                10.0,
+                workload::LengthDist::ZipfBuckets { buckets: vec![128, 1_024, 4_096], s: 1.2 },
+                8,
+                7,
+            );
+            let mut sim = Simulation::new(d, w, SimOptions::default());
+            let end = sim.run();
+            let s = sim.metrics.summary();
+            (
+                end.to_bits(),
+                s.finished,
+                sim.metrics.n_iters,
+                s.ttft_p95.to_bits(),
+                s.goodput_rps.to_bits(),
+            )
+        };
+        let serial = run(1);
+        assert!(serial.1 > 10, "degenerate trace: {} finished", serial.1);
+        assert_eq!(serial, run(2), "threads=2 diverged");
+        assert_eq!(serial, run(4), "threads=4 diverged");
     }
 
     #[test]

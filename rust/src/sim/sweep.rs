@@ -1,0 +1,415 @@
+//! Concurrent evaluation sweep: the full scheduling-policy
+//! (FCFS/SRPT/EDF/LARS) × routing (blind/round-robin/routed) × load-level
+//! grid over the shared kvp_convoy scenario, one independent simulation
+//! per threadpool worker, reduced to a **Pareto frontier** over goodput
+//! (maximize) vs short-request p99 TTFT (minimize) vs capacity deferrals
+//! (minimize) — the tradeoff surface the paper's evaluation walks.
+//!
+//! Determinism: the grid is enumerated in a fixed order (policy-major,
+//! then routing, then load), each cell's workload seed is derived from
+//! `(base_seed, cell_index)` via SplitMix64, and cell results land in
+//! submission-order slots ([`crate::util::threadpool::ThreadPool::map`]
+//! joins handles in submit order) — so the outcome vector is bit-identical
+//! whatever the worker count or completion order, and identical to the
+//! serial (`threads = 1`) run. [`SweepOutcome`] deliberately carries no
+//! host wall-clock; [`SweepOutcome::fingerprint`] renders every float as
+//! its raw bit pattern for exact cross-run comparison (asserted by the
+//! tests here and exercised by `medha sweep` / `reproduce --figure
+//! sweep` / the `sim/sweep` bench).
+
+use std::time::Instant;
+
+use super::{kvp_convoy_dep, kvp_convoy_ttft_split, SimOptions, Simulation};
+use crate::coordinator::{RoutingMode, SchedPolicyKind};
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+use crate::util::threadpool::ThreadPool;
+use crate::workload::{self, KvpConvoyConfig};
+
+/// Sweep grid + execution configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Base seed; each cell derives its own workload stream from
+    /// `(base_seed, cell_index)` — see [`cell_seed`].
+    pub base_seed: u64,
+    /// Multipliers applied to the trace's short-request arrival rate; one
+    /// grid layer per level.
+    pub load_levels: Vec<f64>,
+    /// Worker threads running whole cells concurrently (1 = serial). Does
+    /// not change any result, only wall-clock.
+    pub threads: usize,
+    /// Per-group KV capacity for every cell. Finite — unlike the
+    /// capacity-blind kvp_convoy default — so routed placement actually
+    /// refuses and defers under load, giving the deferrals Pareto axis a
+    /// signal.
+    pub kvp_capacity_tokens: u64,
+    /// The kvp_convoy trace template each cell scales.
+    pub trace: KvpConvoyConfig,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            base_seed: 42,
+            load_levels: vec![0.5, 1.0, 2.0],
+            threads: 1,
+            // ~1.5 document shards per group: enough for the convoy, tight
+            // enough that routed mode defers under the 2x load level.
+            kvp_capacity_tokens: 768_000,
+            trace: KvpConvoyConfig::default(),
+        }
+    }
+}
+
+impl SweepConfig {
+    /// Down-scaled grid for CI smoke runs (`MEDHA_BENCH_SMOKE`): one load
+    /// level and a short horizon with small documents — the full 12-cell
+    /// policy × routing matrix still runs.
+    pub fn smoke() -> SweepConfig {
+        SweepConfig {
+            load_levels: vec![1.0],
+            trace: KvpConvoyConfig {
+                rate_per_s: 4.0,
+                horizon_s: 5.0,
+                doc_prompt: 64_000,
+                n_docs: 2,
+                doc_start_s: 1.0,
+                doc_stagger_s: 2.0,
+                ..KvpConvoyConfig::default()
+            },
+            ..SweepConfig::default()
+        }
+    }
+
+    /// Enumerate the grid in its canonical order: policy-major, then
+    /// routing, then load level. A cell's index — and therefore its
+    /// derived seed — never depends on execution.
+    pub fn cells(&self) -> Vec<SweepCell> {
+        let mut out =
+            Vec::with_capacity(SchedPolicyKind::ALL.len() * RoutingMode::ALL.len() * self.load_levels.len());
+        for policy in SchedPolicyKind::ALL {
+            for routing in RoutingMode::ALL {
+                for &load in &self.load_levels {
+                    let index = out.len();
+                    out.push(SweepCell {
+                        index,
+                        policy,
+                        routing,
+                        load,
+                        seed: cell_seed(self.base_seed, index),
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One grid cell, fully determined by the config and its index.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepCell {
+    pub index: usize,
+    pub policy: SchedPolicyKind,
+    pub routing: RoutingMode,
+    /// Short-request arrival-rate multiplier.
+    pub load: f64,
+    pub seed: u64,
+}
+
+/// Derive a cell's workload seed from `(base_seed, cell_index)`:
+/// SplitMix64 over the mixed pair, so neighbouring cells get decorrelated
+/// streams and any cell is reproducible in isolation.
+pub fn cell_seed(base_seed: u64, cell_index: usize) -> u64 {
+    let mut sm = SplitMix64::new(base_seed ^ (cell_index as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    sm.next_u64()
+}
+
+/// One cell's deterministic outcome. Every field is a pure function of
+/// the cell definition; host wall-clock is deliberately *not* here (the
+/// sweep reports it separately), so fingerprints compare bit-exactly
+/// across worker counts.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub cell: SweepCell,
+    pub finished: u64,
+    /// SLO-attaining request throughput (the goodput Pareto axis, max).
+    pub goodput_rps: f64,
+    /// Interactive-class p99 TTFT (the latency Pareto axis, min; NaN when
+    /// no short request finished — never on the frontier).
+    pub short_p99_ttft_s: f64,
+    /// Document-class worst TTFT (reported, not a frontier axis).
+    pub doc_max_ttft_s: f64,
+    pub ttft_attainment: f64,
+    /// Capacity-refused admissions (the deferrals Pareto axis, min).
+    pub deferrals: u64,
+    pub n_deferred: u64,
+    pub preemptions: u64,
+    /// Non-dominated over (goodput, short p99 TTFT, deferrals) — set by
+    /// [`mark_pareto_frontier`].
+    pub on_frontier: bool,
+}
+
+impl SweepOutcome {
+    /// Bit-exact serialization — floats as raw bit patterns — for the
+    /// determinism assertions (serial vs threaded, double-run).
+    pub fn fingerprint(&self) -> String {
+        format!(
+            "cell={} policy={} routing={} load={:016x} seed={} finished={} goodput={:016x} \
+             short_p99={:016x} doc_max={:016x} attain={:016x} deferrals={} n_deferred={} \
+             preempt={} frontier={}",
+            self.cell.index,
+            self.cell.policy.name(),
+            self.cell.routing.name(),
+            self.cell.load.to_bits(),
+            self.cell.seed,
+            self.finished,
+            self.goodput_rps.to_bits(),
+            self.short_p99_ttft_s.to_bits(),
+            self.doc_max_ttft_s.to_bits(),
+            self.ttft_attainment.to_bits(),
+            self.deferrals,
+            self.n_deferred,
+            self.preemptions,
+            self.on_frontier,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        // NaN is not valid JSON — latency axes go Null when no request of
+        // that class finished. The derived 64-bit seed is rendered as a
+        // string so it round-trips without f64 precision loss.
+        let num_or_null = |x: f64| if x.is_finite() { Json::num(x) } else { Json::Null };
+        Json::obj(vec![
+            ("cell", self.cell.index.into()),
+            ("policy", Json::str(self.cell.policy.name())),
+            ("routing", Json::str(self.cell.routing.name())),
+            ("load", Json::num(self.cell.load)),
+            ("seed", Json::str(&self.cell.seed.to_string())),
+            ("finished", self.finished.into()),
+            ("goodput_rps", num_or_null(self.goodput_rps)),
+            ("short_p99_ttft_s", num_or_null(self.short_p99_ttft_s)),
+            ("doc_max_ttft_s", num_or_null(self.doc_max_ttft_s)),
+            ("ttft_attainment", num_or_null(self.ttft_attainment)),
+            ("deferrals", self.deferrals.into()),
+            ("n_deferred", self.n_deferred.into()),
+            ("preemptions", self.preemptions.into()),
+            ("on_frontier", Json::Bool(self.on_frontier)),
+        ])
+    }
+}
+
+/// Run one cell: scale the trace to the cell's load level, build the
+/// shared kvp_convoy deployment for its policy × routing (with the
+/// sweep's finite capacity), simulate, and distill the outcome.
+pub fn run_cell(cfg: &SweepConfig, cell: &SweepCell) -> SweepOutcome {
+    let mut trace_cfg = cfg.trace.clone();
+    trace_cfg.rate_per_s = cfg.trace.rate_per_s * cell.load;
+    let mut dep = kvp_convoy_dep(cell.policy, cell.routing, &trace_cfg);
+    dep.scheduler.kvp_capacity_tokens = cfg.kvp_capacity_tokens;
+    let w = workload::kvp_convoy(&trace_cfg, cell.seed);
+    let mut sim = Simulation::new(dep, w, SimOptions::default());
+    sim.run();
+    let (mut short, mut docs) = kvp_convoy_ttft_split(&sim, &trace_cfg);
+    let s = sim.metrics.summary();
+    SweepOutcome {
+        cell: *cell,
+        finished: s.finished,
+        goodput_rps: s.goodput_rps,
+        short_p99_ttft_s: short.p99(),
+        doc_max_ttft_s: docs.max(),
+        ttft_attainment: s.ttft_attainment,
+        deferrals: s.routing_refusals,
+        n_deferred: s.n_deferred,
+        preemptions: s.preemptions,
+        on_frontier: false,
+    }
+}
+
+/// Run the whole grid — `cfg.threads > 1` fans whole cells out across a
+/// threadpool, each an independent simulation — mark the Pareto frontier,
+/// and return the outcomes (in canonical cell order, worker-count
+/// invariant) plus total host wall-clock seconds.
+pub fn run_sweep(cfg: &SweepConfig) -> (Vec<SweepOutcome>, f64) {
+    let cells = cfg.cells();
+    let t0 = Instant::now();
+    let mut outcomes: Vec<SweepOutcome> = if cfg.threads > 1 && cells.len() > 1 {
+        let pool = ThreadPool::new(cfg.threads.min(cells.len()));
+        let cfg2 = cfg.clone();
+        // One cell per job: a cell is seconds of simulated work, so the
+        // per-job overhead `map_chunks` amortizes is irrelevant and the
+        // finest granularity balances the queue best.
+        pool.map(cells, move |cell| run_cell(&cfg2, &cell))
+    } else {
+        cells.iter().map(|c| run_cell(cfg, c)).collect()
+    };
+    let wall_s = t0.elapsed().as_secs_f64();
+    mark_pareto_frontier(&mut outcomes);
+    (outcomes, wall_s)
+}
+
+/// Mark the non-dominated set over (goodput max, short p99 TTFT min,
+/// deferrals min). `a` dominates `b` when it is no worse on all three
+/// axes and strictly better on at least one. A NaN latency (no short
+/// request finished) is never on the frontier and — NaN comparisons being
+/// false — never dominates anything.
+pub fn mark_pareto_frontier(outcomes: &mut [SweepOutcome]) {
+    fn key(o: &SweepOutcome) -> (f64, f64, u64) {
+        (o.goodput_rps, o.short_p99_ttft_s, o.deferrals)
+    }
+    fn dominates(a: (f64, f64, u64), b: (f64, f64, u64)) -> bool {
+        a.0 >= b.0 && a.1 <= b.1 && a.2 <= b.2 && (a.0 > b.0 || a.1 < b.1 || a.2 < b.2)
+    }
+    for i in 0..outcomes.len() {
+        let ki = key(&outcomes[i]);
+        let dominated = !ki.0.is_finite()
+            || !ki.1.is_finite()
+            || outcomes
+                .iter()
+                .enumerate()
+                .any(|(j, o)| j != i && dominates(key(o), ki));
+        outcomes[i].on_frontier = !dominated;
+    }
+}
+
+/// Render the sweep as the table `medha sweep` and `reproduce --figure
+/// sweep` print: one row per cell, `*` marking Pareto-frontier members.
+pub fn print_table(outcomes: &[SweepOutcome], wall_s: f64, threads: usize) {
+    println!(
+        "sweep: {} cells ({} policies x {} routings x loads), {threads} worker thread(s), {wall_s:.2}s wall",
+        outcomes.len(),
+        SchedPolicyKind::ALL.len(),
+        RoutingMode::ALL.len(),
+    );
+    println!(
+        "{:<2} {:<6} {:<12} {:>5} {:>10} {:>14} {:>12} {:>10}",
+        "", "policy", "routing", "load", "goodput/s", "short p99 TTFT", "doc max TTFT", "deferrals"
+    );
+    for o in outcomes {
+        println!(
+            "{:<2} {:<6} {:<12} {:>5.2} {:>10.3} {:>13.3}s {:>11.2}s {:>10}",
+            if o.on_frontier { "*" } else { "" },
+            o.cell.policy.name(),
+            o.cell.routing.name(),
+            o.cell.load,
+            o.goodput_rps,
+            o.short_p99_ttft_s,
+            o.doc_max_ttft_s,
+            o.deferrals,
+        );
+    }
+    let n_front = outcomes.iter().filter(|o| o.on_frontier).count();
+    println!("Pareto frontier (goodput vs short p99 TTFT vs deferrals): {n_front} of {} cells", outcomes.len());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A grid small enough for a unit test: the full 12-cell policy ×
+    /// routing matrix at one load level on a short two-document trace.
+    fn tiny_cfg(threads: usize) -> SweepConfig {
+        SweepConfig {
+            threads,
+            load_levels: vec![1.0],
+            trace: KvpConvoyConfig {
+                rate_per_s: 4.0,
+                horizon_s: 2.5,
+                doc_prompt: 48_000,
+                n_docs: 1,
+                doc_start_s: 0.5,
+                doc_stagger_s: 1.0,
+                ..KvpConvoyConfig::default()
+            },
+            ..SweepConfig::default()
+        }
+    }
+
+    #[test]
+    fn grid_enumeration_is_canonical() {
+        let cfg = SweepConfig::default();
+        let cells = cfg.cells();
+        assert_eq!(cells.len(), 4 * 3 * 3);
+        // indexes are dense, policy-major
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert_eq!(c.seed, cell_seed(cfg.base_seed, i));
+        }
+        assert_eq!(cells[0].policy, SchedPolicyKind::Fcfs);
+        assert_eq!(cells[0].routing, RoutingMode::Blind);
+        // same config, same cells; different base seed, different streams
+        let again = cfg.cells();
+        assert!(cells.iter().zip(&again).all(|(a, b)| a.seed == b.seed));
+        let other = SweepConfig {
+            base_seed: 43,
+            ..SweepConfig::default()
+        };
+        assert_ne!(other.cells()[0].seed, cells[0].seed);
+        // neighbouring cells get distinct streams
+        assert!(cells.windows(2).all(|w| w[0].seed != w[1].seed));
+    }
+
+    #[test]
+    fn pareto_marks_non_dominated() {
+        let cell = SweepCell {
+            index: 0,
+            policy: SchedPolicyKind::Fcfs,
+            routing: RoutingMode::Blind,
+            load: 1.0,
+            seed: 1,
+        };
+        let mk = |goodput: f64, p99: f64, deferrals: u64| SweepOutcome {
+            cell,
+            finished: 0,
+            goodput_rps: goodput,
+            short_p99_ttft_s: p99,
+            doc_max_ttft_s: 0.0,
+            ttft_attainment: 1.0,
+            deferrals,
+            n_deferred: 0,
+            preemptions: 0,
+            on_frontier: false,
+        };
+        let mut outs = vec![
+            mk(10.0, 1.0, 0),     // frontier: best goodput and latency
+            mk(5.0, 2.0, 0),      // dominated by the first on two axes
+            mk(10.0, 2.0, 0),     // dominated (same goodput, worse p99)
+            mk(8.0, 0.5, 5),      // frontier: best p99 (deferrals traded)
+            mk(10.0, 1.0, 0),     // duplicate of the first: also frontier
+            mk(2.0, f64::NAN, 0), // no shorts finished: never on frontier
+        ];
+        mark_pareto_frontier(&mut outs);
+        let flags: Vec<bool> = outs.iter().map(|o| o.on_frontier).collect();
+        assert_eq!(flags, vec![true, false, false, true, true, false]);
+    }
+
+    #[test]
+    fn cell_runs_are_reproducible() {
+        let cfg = tiny_cfg(1);
+        let cell = cfg.cells()[5];
+        let a = run_cell(&cfg, &cell);
+        let b = run_cell(&cfg, &cell);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert!(a.finished > 0, "tiny sweep cell must finish work");
+    }
+
+    /// The sweep tentpole's determinism contract: identical fingerprints
+    /// for every cell whatever the worker count — serial, fewer workers
+    /// than cells (queueing, arbitrary completion order), more workers
+    /// than cells — and across a double run in-process.
+    #[test]
+    fn sweep_is_worker_count_invariant() {
+        let serial = run_sweep(&tiny_cfg(1)).0;
+        assert_eq!(serial.len(), 12);
+        let serial_fp: Vec<String> = serial.iter().map(|o| o.fingerprint()).collect();
+        let again: Vec<String> = run_sweep(&tiny_cfg(1)).0.iter().map(|o| o.fingerprint()).collect();
+        assert_eq!(serial_fp, again, "serial sweep must be double-run deterministic");
+        for threads in [3usize, 16] {
+            let par: Vec<String> = run_sweep(&tiny_cfg(threads))
+                .0
+                .iter()
+                .map(|o| o.fingerprint())
+                .collect();
+            assert_eq!(serial_fp, par, "sweep diverged at threads={threads}");
+        }
+    }
+}

@@ -1,11 +1,36 @@
 //! Fixed-size worker thread pool over std channels (tokio is unavailable
-//! offline; the engine's stage workers and KVP shard workers run on this).
+//! offline). This is the substrate for **both layers of simulator
+//! parallelism**: the parallel phase-A of `Simulation::step` runs per-group
+//! batch formation as *borrowed* jobs through [`ThreadPool::scoped`], and
+//! the sweep driver (`sim::sweep`) runs whole independent simulations as
+//! `'static` jobs through [`ThreadPool::map`] / [`ThreadPool::map_chunks`].
 //!
-//! Design: each worker owns a receiver on a shared injector queue
-//! (Mutex<VecDeque>) with a condvar; jobs are boxed `FnOnce`. `scope`-like
-//! joining is provided by `JobHandle` futures backed by channels.
+//! Design: workers share one injector queue (`Mutex<VecDeque>` + condvar);
+//! jobs are boxed `FnOnce`. Three submission shapes:
+//!
+//! * [`submit`](ThreadPool::submit) — one `'static` job, joined through a
+//!   [`JobHandle`] whose [`try_join`](JobHandle::try_join) distinguishes a
+//!   job that **panicked** from one that was **dropped un-run** (a worker
+//!   died before reaching it and the pool shut down — the shutdown race);
+//! * [`map`](ThreadPool::map) / [`map_chunks`](ThreadPool::map_chunks) —
+//!   order-preserving parallel map; the chunked variant pays one job +
+//!   channel per *chunk* instead of per element, for hot paths where the
+//!   per-item work is small;
+//! * [`scoped`](ThreadPool::scoped) — jobs that borrow from the caller's
+//!   stack (`'scope` instead of `'static`). The scope blocks until every
+//!   spawned job has finished before returning (and on unwind, via `Drop`),
+//!   which is what makes the lifetime erasure sound; a panicking scoped job
+//!   is caught on the worker (the worker survives, the barrier always
+//!   resolves) and re-raised on the scope owner.
+//!
+//! Everything is deterministic from the caller's perspective as long as the
+//! jobs themselves are: results land where the caller put their slots, in
+//! submission order, regardless of which worker ran what when.
 
 use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
@@ -22,15 +47,79 @@ struct Queue {
     shutdown: bool,
 }
 
+/// Why a [`JobHandle`] could not produce a value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JoinError {
+    /// The job ran and panicked on its worker.
+    Panicked,
+    /// The job was dropped without ever running: its worker died (an
+    /// earlier job panicked) and the pool shut down with the job still
+    /// queued. Distinct from [`JoinError::Panicked`] — the job's own code
+    /// was never at fault.
+    Dropped,
+}
+
+impl std::fmt::Display for JoinError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            JoinError::Panicked => write!(f, "worker job panicked"),
+            JoinError::Dropped => write!(f, "worker job dropped un-run at pool shutdown"),
+        }
+    }
+}
+
 /// A handle resolving to the job's return value.
 pub struct JobHandle<T> {
-    rx: mpsc::Receiver<T>,
+    rx: mpsc::Receiver<Result<T, JoinError>>,
 }
 
 impl<T> JobHandle<T> {
-    /// Block until the job finishes. Panics if the job panicked.
+    /// Block until the job resolves: its value, or why there isn't one
+    /// ([`JoinError::Panicked`] vs [`JoinError::Dropped`]).
+    pub fn try_join(self) -> Result<T, JoinError> {
+        match self.rx.recv() {
+            Ok(out) => out,
+            // The sender vanished without a verdict (only possible if the
+            // outcome send itself failed); the job cannot have completed.
+            Err(mpsc::RecvError) => Err(JoinError::Dropped),
+        }
+    }
+
+    /// Block until the job finishes, panicking with the specific failure
+    /// (`{}` of [`JoinError`]) when it didn't.
     pub fn join(self) -> T {
-        self.rx.recv().expect("worker job panicked")
+        match self.try_join() {
+            Ok(v) => v,
+            Err(e) => panic!("{e}"),
+        }
+    }
+}
+
+/// Sends the job's outcome exactly once: `Ok` on completion, or — from
+/// `Drop` — `Panicked` while unwinding and `Dropped` when the un-run job
+/// box is discarded at shutdown.
+struct Outcome<T> {
+    tx: Option<mpsc::Sender<Result<T, JoinError>>>,
+}
+
+impl<T> Outcome<T> {
+    fn complete(mut self, value: T) {
+        if let Some(tx) = self.tx.take() {
+            let _ = tx.send(Ok(value)); // receiver may have been dropped; fine
+        }
+    }
+}
+
+impl<T> Drop for Outcome<T> {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            let e = if thread::panicking() {
+                JoinError::Panicked
+            } else {
+                JoinError::Dropped
+            };
+            let _ = tx.send(Err(e));
+        }
     }
 }
 
@@ -65,6 +154,15 @@ impl ThreadPool {
         self.workers.len()
     }
 
+    fn push_job(&self, job: Job) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            assert!(!q.shutdown, "submit after shutdown");
+            q.jobs.push_back(job);
+        }
+        self.shared.cv.notify_one();
+    }
+
     /// Submit a job; returns a handle to its result.
     pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
     where
@@ -73,33 +171,155 @@ impl ThreadPool {
     {
         let (tx, rx) = mpsc::channel();
         let job: Job = Box::new(move || {
-            let out = f();
-            let _ = tx.send(out); // receiver may have been dropped; fine
+            let outcome = Outcome { tx: Some(tx) };
+            let value = f();
+            outcome.complete(value);
         });
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            assert!(!q.shutdown, "submit after shutdown");
-            q.jobs.push_back(job);
-        }
-        self.shared.cv.notify_one();
+        self.push_job(job);
         JobHandle { rx }
     }
 
-    /// Map `f` over `items` in parallel, preserving order.
+    /// Map `f` over `items` in parallel, preserving order. One job +
+    /// result channel per item: right when each item is substantial work
+    /// (a whole simulation); for many small items use
+    /// [`map_chunks`](Self::map_chunks).
     pub fn map<T, U, F>(&self, items: Vec<T>, f: F) -> Vec<U>
     where
         T: Send + 'static,
         U: Send + 'static,
         F: Fn(T) -> U + Send + Sync + Clone + 'static,
     {
-        let handles: Vec<JobHandle<U>> = items
-            .into_iter()
-            .map(|it| {
-                let f = f.clone();
-                self.submit(move || f(it))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join()).collect()
+        self.map_chunks(items, 1, f)
+    }
+
+    /// Order-preserving parallel map in contiguous chunks of up to
+    /// `chunk` items: one boxed job + channel pair per chunk rather than
+    /// per element, so a million tiny items cost thousands of
+    /// allocations, not millions. `chunk = 1` degenerates to [`map`]
+    /// exactly; larger chunks trade scheduling granularity for overhead.
+    ///
+    /// [`map`]: Self::map
+    pub fn map_chunks<T, U, F>(&self, items: Vec<T>, chunk: usize, f: F) -> Vec<U>
+    where
+        T: Send + 'static,
+        U: Send + 'static,
+        F: Fn(T) -> U + Send + Sync + Clone + 'static,
+    {
+        assert!(chunk > 0, "chunk size must be positive");
+        let n = items.len();
+        let mut handles = Vec::with_capacity(n.div_ceil(chunk.max(1)));
+        let mut it = items.into_iter();
+        loop {
+            let batch: Vec<T> = it.by_ref().take(chunk).collect();
+            if batch.is_empty() {
+                break;
+            }
+            let f = f.clone();
+            handles.push(self.submit(move || batch.into_iter().map(&f).collect::<Vec<U>>()));
+        }
+        let mut out = Vec::with_capacity(n);
+        for h in handles {
+            out.extend(h.join());
+        }
+        out
+    }
+
+    /// Run jobs that **borrow** from the caller's stack: `body` spawns
+    /// work through [`Scope::spawn`]; `scoped` returns only after every
+    /// spawned job has finished (a completion barrier on the persistent
+    /// pool — no per-call thread spawning), so jobs may safely capture
+    /// `&`/`&mut` references with lifetime `'scope`. If any job panicked,
+    /// the panic is re-raised here after the barrier resolves.
+    ///
+    /// This is what the parallel `Simulation::step` runs per-group phase-A
+    /// work on: each job takes disjoint `&mut` borrows of per-group state
+    /// plus shared `&` reads, and the barrier restores exclusive access
+    /// before the serial merge.
+    // `'scope` is early-bound (the rayon `scope` shape, not std's
+    // higher-ranked one): the caller's borrowed data picks it at the call
+    // site, so spawned jobs may capture non-'static references.
+    pub fn scoped<'pool, 'scope, R, F>(&'pool self, body: F) -> R
+    where
+        F: FnOnce(&Scope<'scope, 'pool>) -> R,
+    {
+        let scope = Scope {
+            pool: self,
+            sync: Arc::new(ScopeSync {
+                pending: Mutex::new(0),
+                done: Condvar::new(),
+                panicked: AtomicBool::new(false),
+            }),
+            _invariant: PhantomData,
+        };
+        let out = body(&scope);
+        scope.wait_all();
+        if scope.sync.panicked.load(Ordering::SeqCst) {
+            panic!("scoped worker job panicked");
+        }
+        out
+    }
+}
+
+struct ScopeSync {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// Spawn surface of [`ThreadPool::scoped`]. Invariant over `'scope` so a
+/// longer-lived scope cannot be smuggled through a subtyping coercion.
+pub struct Scope<'scope, 'pool> {
+    pool: &'pool ThreadPool,
+    sync: Arc<ScopeSync>,
+    _invariant: PhantomData<&'scope mut &'scope ()>,
+}
+
+impl<'scope> Scope<'scope, '_> {
+    /// Spawn a job that may borrow data outliving the scope. The job's
+    /// panic (if any) is caught on the worker — the worker survives and
+    /// the scope's barrier always resolves — and re-raised by
+    /// [`ThreadPool::scoped`] once every sibling has finished.
+    pub fn spawn<F>(&self, f: F)
+    where
+        F: FnOnce() + Send + 'scope,
+    {
+        *self.sync.pending.lock().unwrap() += 1;
+        let sync = Arc::clone(&self.sync);
+        let wrapped = move || {
+            if catch_unwind(AssertUnwindSafe(f)).is_err() {
+                sync.panicked.store(true, Ordering::SeqCst);
+            }
+            let mut n = sync.pending.lock().unwrap();
+            *n -= 1;
+            if *n == 0 {
+                sync.done.notify_all();
+            }
+        };
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(wrapped);
+        // SAFETY: the queue requires 'static jobs, but `wait_all` — called
+        // by `ThreadPool::scoped` before returning AND by `Scope::drop`
+        // (covering unwinds out of `body`) — blocks until this job has
+        // run to completion, so its `'scope` borrows are live for the
+        // job's whole execution. The lifetime is erased, never exceeded.
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+        };
+        self.pool.push_job(job);
+    }
+
+    fn wait_all(&self) {
+        let mut n = self.sync.pending.lock().unwrap();
+        while *n > 0 {
+            n = self.sync.done.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for Scope<'_, '_> {
+    fn drop(&mut self) {
+        // The soundness backstop: even if `body` unwinds before the
+        // explicit barrier, no borrowed job survives the scope.
+        self.wait_all();
     }
 }
 
@@ -154,6 +374,19 @@ mod tests {
     }
 
     #[test]
+    fn map_chunks_matches_map_for_every_chunking() {
+        let pool = ThreadPool::new(3);
+        let expect: Vec<u64> = (0..100).map(|x| x * 3 + 1).collect();
+        for chunk in [1usize, 2, 7, 33, 100, 1000] {
+            let out = pool.map_chunks((0..100).collect::<Vec<u64>>(), chunk, |x| x * 3 + 1);
+            assert_eq!(out, expect, "chunk={chunk}");
+        }
+        // empty input: no jobs, empty output
+        let out: Vec<u64> = pool.map_chunks(Vec::<u64>::new(), 8, |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
     fn all_jobs_complete_on_drop() {
         let counter = Arc::new(AtomicUsize::new(0));
         {
@@ -186,5 +419,100 @@ mod tests {
         }
         // 4 sleeps of 50ms on 4 threads should take ~50ms, not 200ms.
         assert!(t0.elapsed() < Duration::from_millis(150));
+    }
+
+    #[test]
+    fn panicked_job_reports_panicked() {
+        let pool = ThreadPool::new(1);
+        let h = pool.submit(|| -> u32 { panic!("boom") });
+        assert_eq!(h.try_join(), Err(JoinError::Panicked));
+    }
+
+    /// The shutdown race the seed mis-reported: a job queued behind a
+    /// panicking one on a single-worker pool is dropped un-run when the
+    /// dead worker's pool shuts down — it must join as `Dropped`, not be
+    /// blamed with "worker job panicked".
+    #[test]
+    fn shutdown_race_reports_dropped_not_panicked() {
+        let pool = ThreadPool::new(1);
+        let ran = Arc::new(AtomicUsize::new(0));
+        let h_panic = pool.submit(|| -> u32 { panic!("boom") });
+        let ran2 = Arc::clone(&ran);
+        let h_dropped = pool.submit(move || {
+            ran2.fetch_add(1, Ordering::SeqCst);
+            7u32
+        });
+        // The panic verdict arrives while the worker unwinds.
+        assert_eq!(h_panic.try_join(), Err(JoinError::Panicked));
+        // Shutting the pool down joins the dead worker and drops the
+        // still-queued job, which resolves its handle as Dropped.
+        drop(pool);
+        assert_eq!(h_dropped.try_join(), Err(JoinError::Dropped));
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "dropped job must never have run");
+    }
+
+    #[test]
+    fn join_error_messages_are_distinct() {
+        assert_eq!(JoinError::Panicked.to_string(), "worker job panicked");
+        assert_ne!(JoinError::Panicked.to_string(), JoinError::Dropped.to_string());
+    }
+
+    #[test]
+    fn scoped_jobs_borrow_and_barrier() {
+        let pool = ThreadPool::new(4);
+        let mut slots = vec![0u64; 64];
+        let base = 10u64; // borrowed immutably by every job
+        pool.scoped(|scope| {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                let base = &base;
+                scope.spawn(move || {
+                    *slot = *base + i as u64;
+                });
+            }
+        });
+        // the barrier has resolved: every borrowed write landed
+        for (i, &v) in slots.iter().enumerate() {
+            assert_eq!(v, 10 + i as u64);
+        }
+    }
+
+    #[test]
+    fn scoped_with_no_spawns_is_a_noop() {
+        let pool = ThreadPool::new(2);
+        let out = pool.scoped(|_scope| 42);
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn scoped_reraises_job_panic_after_barrier() {
+        let pool = ThreadPool::new(2);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d = Arc::clone(&done);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(|scope| {
+                scope.spawn(|| panic!("scoped boom"));
+                let d = &d;
+                scope.spawn(move || {
+                    d.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        }));
+        assert!(result.is_err(), "scope must re-raise the job panic");
+        // the sibling still ran to completion (the worker survived)
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+        // ...and the pool is still usable afterwards
+        assert_eq!(pool.submit(|| 5).join(), 5);
+    }
+
+    #[test]
+    fn scoped_more_jobs_than_workers() {
+        let pool = ThreadPool::new(2);
+        let mut out = vec![0u32; 200];
+        pool.scoped(|scope| {
+            for (i, slot) in out.iter_mut().enumerate() {
+                scope.spawn(move || *slot = i as u32 + 1);
+            }
+        });
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u32 + 1));
     }
 }

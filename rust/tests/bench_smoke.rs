@@ -41,16 +41,40 @@ fn smoke_run_emits_valid_bench_json() {
         assert!(r.iterations > 0 && r.wall_s > 0.0);
     }
 
+    // one concurrent-sweep pass, down-scaled even further than smoke():
+    // the full 12-cell policy x routing matrix across 4 worker threads,
+    // feeding the `sweep` section the benches record
+    let sweep_cfg = medha::sim::sweep::SweepConfig {
+        threads: 4,
+        load_levels: vec![1.0],
+        trace: medha::workload::KvpConvoyConfig {
+            rate_per_s: 4.0,
+            horizon_s: 2.5,
+            doc_prompt: 48_000,
+            n_docs: 1,
+            doc_start_s: 0.5,
+            doc_stagger_s: 1.0,
+            ..medha::workload::KvpConvoyConfig::default()
+        },
+        ..medha::sim::sweep::SweepConfig::default()
+    };
+    let (outcomes, _wall) = medha::sim::sweep::run_sweep(&sweep_cfg);
+    assert_eq!(outcomes.len(), 12);
+    assert!(outcomes.iter().any(|o| o.on_frontier), "empty Pareto frontier");
+
     let dir = std::env::temp_dir().join("medha_bench_smoke");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("BENCH_sim.json");
     suite
         .write_json(
             &path,
-            vec![(
-                "sim_throughput",
-                Json::arr(reports.iter().map(|r| r.to_json())),
-            )],
+            vec![
+                (
+                    "sim_throughput",
+                    Json::arr(reports.iter().map(|r| r.to_json())),
+                ),
+                ("sweep", Json::arr(outcomes.iter().map(|o| o.to_json()))),
+            ],
         )
         .unwrap();
 
@@ -65,6 +89,13 @@ fn smoke_run_emits_valid_bench_json() {
     for s in sims {
         assert!(s.get("iters_per_s").and_then(|x| x.as_f64()).unwrap() > 0.0);
         assert!(s.get("name").and_then(|x| x.as_str()).is_some());
+    }
+    let sweep = j.get("sweep").unwrap().as_arr().unwrap();
+    assert_eq!(sweep.len(), 12);
+    for c in sweep {
+        assert!(c.get("policy").and_then(|x| x.as_str()).is_some());
+        assert!(c.get("routing").and_then(|x| x.as_str()).is_some());
+        assert!(c.get("on_frontier").and_then(|x| x.as_bool()).is_some());
     }
 
     std::env::remove_var(SMOKE_ENV);

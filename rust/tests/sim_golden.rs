@@ -31,8 +31,8 @@ use std::path::PathBuf;
 use medha::config::{DeploymentConfig, FaultEvent, FaultKind, FaultPlan};
 use medha::coordinator::{GroupState, RoutingMode, SchedPolicyKind};
 use medha::sim::{
-    run_convoy_scenario, run_kvp_convoy_scenario, run_kvp_convoy_scenario_with_faults, SimOptions,
-    Simulation,
+    kvp_convoy_dep, run_convoy_scenario, run_kvp_convoy_scenario,
+    run_kvp_convoy_scenario_with_faults, SimOptions, Simulation,
 };
 use medha::workload::{self, LengthDist, RequestSpec};
 
@@ -427,4 +427,169 @@ fn golden_fault_crash_and_rejoin() {
     assert_eq!(sim.group_state(victim), GroupState::Active, "rejoin must restore the group");
     assert_eq!(sim.n_active_groups(), 4);
     assert!(sim.kvp_ledger_is_conserved());
+}
+
+// ---------------------------------------------------------------------------
+// Parallel-step determinism: `scheduler.threads > 1` shards per-group
+// phase-A work across the pool and merges in group-index order; every
+// scenario below must serialize bit-identically to its threads=1 run.
+// ---------------------------------------------------------------------------
+
+/// The reduced kvp_convoy trace used by the thread-matrix tests: two
+/// KVP-sharded documents plus interactive traffic over a 10 s horizon —
+/// enough to exercise cooperative iterations, onboarding, routing
+/// refusals, and preemption under every policy without full-trace cost.
+fn thread_matrix_cfg() -> workload::KvpConvoyConfig {
+    workload::KvpConvoyConfig {
+        horizon_s: 10.0,
+        doc_prompt: 96_000,
+        n_docs: 2,
+        doc_stagger_s: 4.0,
+        ..workload::KvpConvoyConfig::default()
+    }
+}
+
+/// Run the kvp_convoy scenario with an explicit worker-thread count (the
+/// scenario helpers always use the config default of 1).
+fn run_kvp_convoy_threads(
+    kind: SchedPolicyKind,
+    routing: RoutingMode,
+    cfg: &workload::KvpConvoyConfig,
+    seed: u64,
+    threads: usize,
+    faults: FaultPlan,
+) -> String {
+    let mut dep = kvp_convoy_dep(kind, routing, cfg);
+    dep.scheduler.threads = threads;
+    let w = workload::kvp_convoy(cfg, seed);
+    let opts = SimOptions {
+        faults,
+        ..SimOptions::default()
+    };
+    let mut sim = Simulation::new(dep, w, opts);
+    sim.run();
+    let end = sim.metrics.span_s();
+    serialize_outcome(&mut sim, end)
+}
+
+/// Tentpole determinism contract, fault-free half: the full policy ×
+/// routing matrix at threads = 2 and 4 must be bit-identical to serial.
+#[test]
+fn parallel_step_matches_serial_policy_routing_matrix() {
+    let cfg = thread_matrix_cfg();
+    for kind in SchedPolicyKind::ALL {
+        for routing in RoutingMode::ALL {
+            let serial = run_kvp_convoy_threads(kind, routing, &cfg, 7, 1, FaultPlan::default());
+            for threads in [2usize, 4] {
+                let par = run_kvp_convoy_threads(kind, routing, &cfg, 7, threads, FaultPlan::default());
+                assert_eq!(
+                    serial,
+                    par,
+                    "{} x {}: threads={threads} diverged from serial",
+                    kind.name(),
+                    routing.name()
+                );
+            }
+        }
+    }
+}
+
+/// Tentpole determinism contract, fault half: a mid-run crash followed by
+/// a warmed-up rejoin (the probe-derived plan from
+/// `golden_fault_crash_and_rejoin`) must survive the parallel step
+/// bit-identically — elastic-fleet transitions happen between instants,
+/// outside the sharded phase.
+#[test]
+fn parallel_step_matches_serial_under_faults() {
+    let cfg = workload::KvpConvoyConfig {
+        horizon_s: 15.0,
+        doc_prompt: 128_000,
+        n_docs: 2,
+        doc_stagger_s: 6.0,
+        ..workload::KvpConvoyConfig::default()
+    };
+    let probe = run_kvp_convoy_scenario_with_faults(
+        SchedPolicyKind::Lars,
+        RoutingMode::Routed,
+        &cfg,
+        7,
+        FaultPlan::default(),
+    );
+    let log = probe.kvp_onboard_log();
+    assert!(!log.is_empty(), "probe run never sharded a document");
+    let (t_mid, _, victim) = log[log.len() / 2];
+    let plan = FaultPlan {
+        events: vec![
+            FaultEvent {
+                t_s: t_mid + 0.25,
+                group: Some(victim),
+                kind: FaultKind::Crash,
+            },
+            FaultEvent {
+                t_s: t_mid + 2.25,
+                group: Some(victim),
+                kind: FaultKind::Join { warmup_s: 0.5 },
+            },
+        ],
+    };
+    let run = |threads: usize| {
+        run_kvp_convoy_threads(
+            SchedPolicyKind::Lars,
+            RoutingMode::Routed,
+            &cfg,
+            7,
+            threads,
+            plan.clone(),
+        )
+    };
+    let serial = run(1);
+    for threads in [2usize, 4] {
+        assert_eq!(serial, run(threads), "fault scenario diverged at threads={threads}");
+    }
+}
+
+/// Blind barrier and genuinely sharded shapes under the parallel step:
+/// the Poisson short mix on a 2-group blind deployment with adaptive
+/// chunking (golden workload 1's shape), and the 1M-token KVP-sharded
+/// document beside decodes on 4 groups (golden workload 2's shape).
+#[test]
+fn parallel_step_matches_serial_blind_and_sharded() {
+    // (a) blind + adaptive chunking, 2 groups
+    let w = workload::poisson_mixed(
+        8.0,
+        15.0,
+        LengthDist::ZipfBuckets {
+            buckets: vec![128, 1_024, 4_096, 12_288],
+            s: 1.1,
+        },
+        16,
+        42,
+    );
+    let run_blind = |threads: usize| -> String {
+        let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 2);
+        dep.scheduler.threads = threads;
+        let mut sim = Simulation::new(dep, w.clone(), SimOptions::default());
+        let end = sim.run();
+        serialize_outcome(&mut sim, end)
+    };
+    // (b) one KVP-sharded long request + lockstep decodes, 4 groups
+    let run_sharded = |threads: usize| -> String {
+        let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 2, 4);
+        dep.scheduler.kvp_onboard_threshold = 256_000;
+        dep.scheduler.threads = threads;
+        let w = workload::long_plus_decodes(1_000_000, 8, 1_000, 64);
+        let mut sim = Simulation::new(dep, w, SimOptions::default());
+        let end = sim.run();
+        serialize_outcome(&mut sim, end)
+    };
+    let blind_serial = run_blind(1);
+    let sharded_serial = run_sharded(1);
+    for threads in [2usize, 4] {
+        assert_eq!(blind_serial, run_blind(threads), "blind mix diverged at threads={threads}");
+        assert_eq!(
+            sharded_serial,
+            run_sharded(threads),
+            "sharded long diverged at threads={threads}"
+        );
+    }
 }
