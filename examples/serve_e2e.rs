@@ -17,7 +17,7 @@
 use medha::engine::pipeline::{serve, ServeRequest};
 use medha::engine::{tokenize, Engine};
 use medha::util::rng::Rng;
-use medha::util::stats::fmt_duration;
+use medha::util::stats::{fmt_duration, percentile_nearest_rank};
 
 fn main() -> anyhow::Result<()> {
     let dir = "artifacts";
@@ -66,11 +66,7 @@ fn main() -> anyhow::Result<()> {
         rep.total_tps()
     );
     for (i, r) in rep.requests.iter().enumerate() {
-        let p95 = {
-            let mut t = r.tbt_s.clone();
-            t.sort_by(f64::total_cmp);
-            t.get((t.len() as f64 * 0.95) as usize).copied().unwrap_or(f64::NAN)
-        };
+        let p95 = percentile_nearest_rank(&r.tbt_s, 95.0);
         println!(
             "   req{i}: prompt={:>4} ttft={:>9} p95 tbt={:>9} generated={}",
             r.prompt_len,
@@ -79,18 +75,25 @@ fn main() -> anyhow::Result<()> {
             r.generated.len()
         );
     }
-    // Short requests must not be HOL-blocked behind the long prefill:
+    // Short requests must not be HOL-blocked behind the long prefill. The
+    // max is total_cmp-based so a NaN TTFT surfaces as a failure instead of
+    // being silently dropped, and the check is a hard gate like the others.
     let long_ttft = rep.requests[0].ttft_s;
     let short_ttft_max = rep.requests[1..]
         .iter()
         .map(|r| r.ttft_s)
-        .fold(0.0, f64::max);
+        .max_by(f64::total_cmp)
+        .unwrap_or(f64::NAN);
     println!(
-        "   HOL check: worst short-request TTFT {} vs long request {} ({})\n",
+        "   HOL check: worst short-request TTFT {} vs long request {}",
         fmt_duration(short_ttft_max),
         fmt_duration(long_ttft),
-        if short_ttft_max < long_ttft { "OK — no HOL blocking" } else { "!!" }
     );
+    anyhow::ensure!(
+        short_ttft_max < long_ttft,
+        "HOL blocking: worst short TTFT {short_ttft_max:.4}s >= long-request TTFT {long_ttft:.4}s"
+    );
+    println!("   PASS — no HOL blocking\n");
 
     // ---- 3. SPP pipeline overhead on real wall clocks --------------------
     // NOTE: on a single CPU, one PJRT client already saturates every core

@@ -1,0 +1,561 @@
+//! Admission control for open-loop serving: the layer between an arrival
+//! stream the system does not control and the coordinator's admission path
+//! (which assumes every request it sees will be served).
+//!
+//! Three mechanisms, applied in order to every arrival:
+//!
+//! 1. **SLO-feedback load shedding** — when the rolling deferral-wait p95
+//!    (the observed queueing delay of capacity-deferred admissions,
+//!    [`crate::metrics::Metrics::deferral_wait`]) crosses a configured
+//!    fraction of the arrival's own length-aware TTFT deadline, arrivals
+//!    whose *projected* LARS slack is already negative — the deadline
+//!    cannot be met even if service starts after the observed wait — are
+//!    rejected at the door. Shedding the provably-late keeps the fleet's
+//!    work conserving for requests that can still make their SLO: goodput
+//!    plateaus instead of collapsing.
+//! 2. **Per-class queue limits** — short/interactive and document arrivals
+//!    wait in separate bounded queues; an arrival to a full queue is
+//!    rejected (`503`, in HTTP terms). Bounding the backlog bounds the
+//!    worst-case wait of everything behind it.
+//! 3. **Per-class token buckets** — queued arrivals are released to the
+//!    coordinator at a sustained per-class rate with bounded burst, so a
+//!    document flood cannot crowd shorts out of the admission path (and
+//!    vice versa). An unpaced class (`rate_per_s = ∞`) releases
+//!    immediately.
+//!
+//! A default-constructed [`AdmissionConfig`] is a pure pass-through —
+//! unbounded queues, unpaced buckets, shedding disabled — under which the
+//! open-loop driver reproduces closed-loop replay bit-identically
+//! (asserted in `tests/sim_serve.rs`). Everything is deterministic: no
+//! randomness, no wall clock; decisions depend only on the arrival stream
+//! and the metrics observed so far.
+
+use std::collections::VecDeque;
+
+use crate::util::json::Json;
+use crate::workload::RequestSpec;
+
+/// Request class, by prompt length against [`AdmissionConfig::doc_threshold`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqClass {
+    Short,
+    Doc,
+}
+
+/// What happened to one offered arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionOutcome {
+    /// Queued for paced release to the coordinator.
+    Enqueued,
+    /// Shed by SLO feedback: deferral pressure high and projected slack
+    /// negative.
+    Shed,
+    /// The class queue was at its limit.
+    RejectedQueueFull,
+}
+
+/// One class's pacing and backlog knobs.
+#[derive(Debug, Clone)]
+pub struct BucketConfig {
+    /// Sustained release rate (requests/s). `f64::INFINITY` = unpaced.
+    pub rate_per_s: f64,
+    /// Bucket depth: releases that may happen back-to-back after idle.
+    pub burst: f64,
+    /// Max arrivals waiting in this class's queue (`usize::MAX` = unbounded).
+    pub queue_limit: usize,
+}
+
+impl BucketConfig {
+    /// No pacing, no backlog bound.
+    pub fn unlimited() -> BucketConfig {
+        BucketConfig {
+            rate_per_s: f64::INFINITY,
+            burst: 1.0,
+            queue_limit: usize::MAX,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    pub short: BucketConfig,
+    pub doc: BucketConfig,
+    /// Prompt length at/above which an arrival is document class.
+    pub doc_threshold: u64,
+    /// Shedding arms when the rolling deferral-wait p95 exceeds this
+    /// fraction of the arrival's TTFT deadline. `0` (or non-finite)
+    /// disables shedding.
+    pub shed_deferral_frac: f64,
+    /// LARS headroom fraction used in the projected-slack check (mirrors
+    /// [`crate::coordinator::policy::Lars::headroom_frac`]).
+    pub headroom_frac: f64,
+}
+
+impl Default for AdmissionConfig {
+    /// Pure pass-through: open-loop serving under this config is
+    /// bit-identical to closed-loop replay of the same trace.
+    fn default() -> AdmissionConfig {
+        AdmissionConfig {
+            short: BucketConfig::unlimited(),
+            doc: BucketConfig::unlimited(),
+            doc_threshold: 16_384,
+            shed_deferral_frac: 0.0,
+            headroom_frac: 0.2,
+        }
+    }
+}
+
+impl AdmissionConfig {
+    /// Overload-protective defaults, scaled to a target sustainable rate:
+    /// shorts paced at the full target rate, documents at 1/16th of it
+    /// (one document costs orders of magnitude more prefill work), bounded
+    /// queues, shedding armed at half the TTFT deadline.
+    pub fn protective(target_rate_per_s: f64, doc_threshold: u64) -> AdmissionConfig {
+        AdmissionConfig {
+            short: BucketConfig {
+                rate_per_s: target_rate_per_s,
+                burst: (target_rate_per_s * 2.0).max(4.0),
+                queue_limit: 64,
+            },
+            doc: BucketConfig {
+                rate_per_s: (target_rate_per_s / 16.0).max(0.05),
+                burst: 2.0,
+                queue_limit: 8,
+            },
+            doc_threshold,
+            shed_deferral_frac: 0.5,
+            headroom_frac: 0.2,
+        }
+    }
+
+    /// Parse from a JSON object; absent keys keep the pass-through
+    /// defaults. Shape:
+    /// `{"short": {"rate_per_s": 8, "burst": 16, "queue_limit": 64},
+    ///   "doc": {...}, "doc_threshold": 131072, "shed_deferral_frac": 0.5}`
+    pub fn from_json(j: &Json) -> anyhow::Result<AdmissionConfig> {
+        let d = AdmissionConfig::default();
+        let bucket = |key: &str, d: &BucketConfig| -> anyhow::Result<BucketConfig> {
+            let Some(b) = j.get(key) else {
+                return Ok(d.clone());
+            };
+            Ok(BucketConfig {
+                rate_per_s: b.get("rate_per_s").and_then(|x| x.as_f64()).unwrap_or(d.rate_per_s),
+                burst: b.get("burst").and_then(|x| x.as_f64()).unwrap_or(d.burst),
+                queue_limit: b
+                    .get("queue_limit")
+                    .and_then(|x| x.as_usize())
+                    .unwrap_or(d.queue_limit),
+            })
+        };
+        let cfg = AdmissionConfig {
+            short: bucket("short", &d.short)?,
+            doc: bucket("doc", &d.doc)?,
+            doc_threshold: j
+                .get("doc_threshold")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.doc_threshold),
+            shed_deferral_frac: j
+                .get("shed_deferral_frac")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(d.shed_deferral_frac),
+            headroom_frac: j
+                .get("headroom_frac")
+                .and_then(|x| x.as_f64())
+                .unwrap_or(d.headroom_frac),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, b) in [("short", &self.short), ("doc", &self.doc)] {
+            anyhow::ensure!(
+                b.rate_per_s > 0.0,
+                "admission.{name}.rate_per_s must be > 0 (use infinity for unpaced)"
+            );
+            anyhow::ensure!(
+                b.burst >= 1.0,
+                "admission.{name}.burst must be >= 1 (a bucket that can never hold a whole token never releases)"
+            );
+            anyhow::ensure!(b.queue_limit >= 1, "admission.{name}.queue_limit must be >= 1");
+        }
+        anyhow::ensure!(self.doc_threshold > 0, "admission.doc_threshold must be > 0");
+        anyhow::ensure!(
+            self.shed_deferral_frac >= 0.0,
+            "admission.shed_deferral_frac must be >= 0"
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.headroom_frac),
+            "admission.headroom_frac must be in [0, 1)"
+        );
+        Ok(())
+    }
+
+    pub fn class_of(&self, prompt_len: u64) -> ReqClass {
+        if prompt_len >= self.doc_threshold {
+            ReqClass::Doc
+        } else {
+            ReqClass::Short
+        }
+    }
+}
+
+/// Standard token bucket: `tokens` refills at `rate` up to `burst`; one
+/// release costs one token. Unpaced (`rate = ∞`) always has a token.
+#[derive(Debug, Clone)]
+struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    tokens: f64,
+    last_s: f64,
+}
+
+impl TokenBucket {
+    fn new(cfg: &BucketConfig) -> TokenBucket {
+        TokenBucket {
+            rate: cfg.rate_per_s,
+            burst: cfg.burst,
+            // starts full: an idle system admits a burst immediately
+            tokens: cfg.burst,
+            last_s: 0.0,
+        }
+    }
+
+    fn unpaced(&self) -> bool {
+        !self.rate.is_finite()
+    }
+
+    fn refill(&mut self, now: f64) {
+        if self.unpaced() {
+            return;
+        }
+        let dt = (now - self.last_s).max(0.0);
+        self.tokens = (self.tokens + self.rate * dt).min(self.burst);
+        self.last_s = now;
+    }
+
+    fn has_token(&self) -> bool {
+        self.unpaced() || self.tokens >= 1.0
+    }
+
+    fn take(&mut self) {
+        if !self.unpaced() {
+            self.tokens -= 1.0;
+        }
+    }
+
+    /// Time at which the next token will exist (== `now` if one already
+    /// does). Call after `refill(now)`.
+    fn next_ready_s(&self, now: f64) -> f64 {
+        if self.has_token() {
+            now
+        } else {
+            now + (1.0 - self.tokens) / self.rate
+        }
+    }
+}
+
+/// Admission state: one token bucket + bounded FIFO queue per class.
+/// Counters are written into the caller's [`crate::metrics::Metrics`] at
+/// decision time; high-water marks are kept here for invariant tests.
+#[derive(Debug)]
+pub struct Admission {
+    cfg: AdmissionConfig,
+    short_bucket: TokenBucket,
+    doc_bucket: TokenBucket,
+    short_q: VecDeque<RequestSpec>,
+    doc_q: VecDeque<RequestSpec>,
+    /// Deepest the short queue ever got (post-enqueue).
+    pub short_q_high_water: usize,
+    /// Deepest the doc queue ever got (post-enqueue).
+    pub doc_q_high_water: usize,
+}
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Admission {
+        Admission {
+            short_bucket: TokenBucket::new(&cfg.short),
+            doc_bucket: TokenBucket::new(&cfg.doc),
+            short_q: VecDeque::new(),
+            doc_q: VecDeque::new(),
+            short_q_high_water: 0,
+            doc_q_high_water: 0,
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Arrivals currently waiting for paced release, both classes.
+    pub fn queued(&self) -> usize {
+        self.short_q.len() + self.doc_q.len()
+    }
+
+    pub fn queue_len(&self, class: ReqClass) -> usize {
+        match class {
+            ReqClass::Short => self.short_q.len(),
+            ReqClass::Doc => self.doc_q.len(),
+        }
+    }
+
+    /// Offer one arrival. `est_prefill_s` and `ttft_deadline_rel_s` are
+    /// the perf model's prefill estimate and the length-aware TTFT budget
+    /// this request *would* be admitted under; `deferral_p95_s` is the
+    /// rolling deferral-wait p95 (NaN when nothing has been deferred yet).
+    /// Shed/reject decisions are final — a dropped arrival never enters
+    /// the coordinator. The caller meters the outcome
+    /// ([`crate::metrics::Metrics::record_shed`] /
+    /// [`record_queue_reject`](crate::metrics::Metrics::record_queue_reject)).
+    pub fn offer(
+        &mut self,
+        spec: RequestSpec,
+        est_prefill_s: f64,
+        ttft_deadline_rel_s: f64,
+        deferral_p95_s: f64,
+    ) -> AdmissionOutcome {
+        let class = self.cfg.class_of(spec.prompt_len);
+        // 1. SLO-feedback shedding: only under measured deferral pressure,
+        // and only for arrivals that are already projected late. NaN p95
+        // (no deferrals observed) fails both comparisons — disarmed.
+        let frac = self.cfg.shed_deferral_frac;
+        if frac > 0.0 && frac.is_finite() && deferral_p95_s > frac * ttft_deadline_rel_s {
+            let budget = ttft_deadline_rel_s * (1.0 - self.cfg.headroom_frac);
+            let work = est_prefill_s.max(1e-12);
+            let projected_slack = (budget - deferral_p95_s - work) / work;
+            if projected_slack < 0.0 {
+                return AdmissionOutcome::Shed;
+            }
+        }
+        // 2. per-class queue limit
+        let (q, limit) = match class {
+            ReqClass::Short => (&mut self.short_q, self.cfg.short.queue_limit),
+            ReqClass::Doc => (&mut self.doc_q, self.cfg.doc.queue_limit),
+        };
+        if q.len() >= limit {
+            return AdmissionOutcome::RejectedQueueFull;
+        }
+        q.push_back(spec);
+        match class {
+            ReqClass::Short => {
+                self.short_q_high_water = self.short_q_high_water.max(self.short_q.len())
+            }
+            ReqClass::Doc => self.doc_q_high_water = self.doc_q_high_water.max(self.doc_q.len()),
+        }
+        AdmissionOutcome::Enqueued
+    }
+
+    /// Release every queued arrival whose class bucket has a token,
+    /// preserving global `(arrival_s, id)` order whenever both classes are
+    /// eligible (so a pass-through config reproduces the source order
+    /// exactly). Appends to `out`.
+    pub fn release(&mut self, now: f64, out: &mut Vec<RequestSpec>) {
+        self.short_bucket.refill(now);
+        self.doc_bucket.refill(now);
+        loop {
+            let s = self.short_bucket.has_token().then(|| self.short_q.front()).flatten();
+            let d = self.doc_bucket.has_token().then(|| self.doc_q.front()).flatten();
+            let take_short = match (s, d) {
+                (None, None) => break,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(a), Some(b)) => (a.arrival_s, a.id) <= (b.arrival_s, b.id),
+            };
+            let spec = if take_short {
+                self.short_bucket.take();
+                self.short_q.pop_front().unwrap()
+            } else {
+                self.doc_bucket.take();
+                self.doc_q.pop_front().unwrap()
+            };
+            out.push(spec);
+        }
+    }
+
+    /// Earliest future time a queued arrival could be released (`None`
+    /// when nothing is queued). Lets an idle driver jump straight to the
+    /// next admission event instead of polling.
+    pub fn next_release_s(&self, now: f64) -> Option<f64> {
+        let mut t: Option<f64> = None;
+        for (q, b) in [
+            (&self.short_q, &self.short_bucket),
+            (&self.doc_q, &self.doc_bucket),
+        ] {
+            if !q.is_empty() {
+                let ready = b.next_ready_s(now);
+                t = Some(t.map_or(ready, |x: f64| x.min(ready)));
+            }
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(id: u64, prompt_len: u64, arrival_s: f64) -> RequestSpec {
+        RequestSpec {
+            id,
+            prompt_len,
+            max_new_tokens: 8,
+            arrival_s,
+        }
+    }
+
+    fn offer_plain(a: &mut Admission, s: RequestSpec) -> AdmissionOutcome {
+        // no deferral pressure, generous deadline
+        a.offer(s, 0.1, 10.0, f64::NAN)
+    }
+
+    #[test]
+    fn pass_through_releases_everything_in_order() {
+        let mut a = Admission::new(AdmissionConfig::default());
+        // offered out of class but in (arrival, id) order
+        assert_eq!(offer_plain(&mut a, spec(0, 512, 0.0)), AdmissionOutcome::Enqueued);
+        assert_eq!(offer_plain(&mut a, spec(1, 500_000, 0.1)), AdmissionOutcome::Enqueued);
+        assert_eq!(offer_plain(&mut a, spec(2, 512, 0.2)), AdmissionOutcome::Enqueued);
+        let mut out = Vec::new();
+        a.release(0.2, &mut out);
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(a.queued(), 0);
+        assert_eq!(a.next_release_s(0.2), None);
+    }
+
+    #[test]
+    fn token_bucket_paces_a_burst() {
+        let cfg = AdmissionConfig {
+            short: BucketConfig {
+                rate_per_s: 1.0,
+                burst: 2.0,
+                queue_limit: usize::MAX,
+            },
+            ..AdmissionConfig::default()
+        };
+        let mut a = Admission::new(cfg);
+        for i in 0..5 {
+            offer_plain(&mut a, spec(i, 512, 0.0));
+        }
+        let mut out = Vec::new();
+        a.release(0.0, &mut out);
+        assert_eq!(out.len(), 2, "burst depth releases immediately");
+        assert_eq!(a.queued(), 3);
+        // one more token exists at t=1
+        let next = a.next_release_s(0.0).unwrap();
+        assert!((next - 1.0).abs() < 1e-9, "next={next}");
+        a.release(1.0, &mut out);
+        assert_eq!(out.len(), 3);
+        // full drain after enough refill time
+        a.release(10.0, &mut out);
+        assert_eq!(out.len(), 5);
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn queue_limit_rejects_only_the_full_class() {
+        let cfg = AdmissionConfig {
+            short: BucketConfig {
+                rate_per_s: 1.0, // paced so the queue actually fills
+                burst: 1.0,
+                queue_limit: 2,
+            },
+            doc_threshold: 16_384,
+            ..AdmissionConfig::default()
+        };
+        let mut a = Admission::new(cfg);
+        offer_plain(&mut a, spec(0, 512, 0.0));
+        offer_plain(&mut a, spec(1, 512, 0.0));
+        assert_eq!(
+            offer_plain(&mut a, spec(2, 512, 0.0)),
+            AdmissionOutcome::RejectedQueueFull
+        );
+        // the doc class is unaffected
+        assert_eq!(offer_plain(&mut a, spec(3, 500_000, 0.0)), AdmissionOutcome::Enqueued);
+        assert_eq!(a.queue_len(ReqClass::Short), 2);
+        assert_eq!(a.queue_len(ReqClass::Doc), 1);
+        assert_eq!(a.short_q_high_water, 2);
+    }
+
+    #[test]
+    fn shedding_requires_pressure_and_negative_slack() {
+        let cfg = AdmissionConfig {
+            shed_deferral_frac: 0.5,
+            ..AdmissionConfig::default()
+        };
+        let mut a = Admission::new(cfg);
+        // deadline 10s: pressure threshold is p95 > 5s
+        // no pressure recorded yet (NaN p95): admit
+        assert_eq!(a.offer(spec(0, 512, 0.0), 1.0, 10.0, f64::NAN), AdmissionOutcome::Enqueued);
+        // pressure below the threshold: admit
+        assert_eq!(a.offer(spec(1, 512, 0.0), 1.0, 10.0, 4.0), AdmissionOutcome::Enqueued);
+        // pressure above threshold but slack still positive
+        // (budget 8 - wait 6 - work 1 = +1): admit
+        assert_eq!(a.offer(spec(2, 512, 0.0), 1.0, 10.0, 6.0), AdmissionOutcome::Enqueued);
+        // pressure above threshold and projected late
+        // (budget 8 - wait 7.5 - work 1 < 0): shed
+        assert_eq!(a.offer(spec(3, 512, 0.0), 1.0, 10.0, 7.5), AdmissionOutcome::Shed);
+        assert_eq!(a.queued(), 3);
+    }
+
+    #[test]
+    fn shedding_disabled_by_default() {
+        let mut a = Admission::new(AdmissionConfig::default());
+        // crushing pressure, hopeless slack — still admitted: frac = 0
+        assert_eq!(
+            a.offer(spec(0, 512, 0.0), 5.0, 1.0, 100.0),
+            AdmissionOutcome::Enqueued
+        );
+    }
+
+    #[test]
+    fn per_class_pacing_is_independent() {
+        let cfg = AdmissionConfig {
+            doc: BucketConfig {
+                rate_per_s: 0.1,
+                burst: 1.0,
+                queue_limit: usize::MAX,
+            },
+            doc_threshold: 16_384,
+            ..AdmissionConfig::default()
+        };
+        let mut a = Admission::new(cfg);
+        offer_plain(&mut a, spec(0, 500_000, 0.0)); // doc, takes the one doc token
+        offer_plain(&mut a, spec(1, 500_000, 0.0)); // doc, must wait ~10s
+        offer_plain(&mut a, spec(2, 512, 0.5)); // short, arrives later
+        let mut out = Vec::new();
+        a.release(0.5, &mut out);
+        // doc 0 (earlier arrival, token available) then short 2; doc 1 blocked
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(a.queue_len(ReqClass::Doc), 1);
+        let next = a.next_release_s(0.5).unwrap();
+        assert!(next > 0.5, "doc token refills in the future, next={next}");
+    }
+
+    #[test]
+    fn config_json_round_trip_and_validation() {
+        let j = Json::parse(
+            r#"{"short": {"rate_per_s": 8.0, "burst": 16.0, "queue_limit": 64},
+                "doc": {"rate_per_s": 0.5, "burst": 2.0, "queue_limit": 8},
+                "doc_threshold": 131072, "shed_deferral_frac": 0.5}"#,
+        )
+        .unwrap();
+        let cfg = AdmissionConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.short.queue_limit, 64);
+        assert_eq!(cfg.doc.queue_limit, 8);
+        assert_eq!(cfg.doc_threshold, 131_072);
+        assert!((cfg.shed_deferral_frac - 0.5).abs() < 1e-12);
+        assert_eq!(cfg.class_of(131_072), ReqClass::Doc);
+        assert_eq!(cfg.class_of(512), ReqClass::Short);
+        // empty object = pass-through defaults
+        let d = AdmissionConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(d.short.rate_per_s.is_infinite());
+        assert_eq!(d.shed_deferral_frac, 0.0);
+        // invalid knobs are rejected
+        let bad = Json::parse(r#"{"short": {"rate_per_s": -1.0}}"#).unwrap();
+        assert!(AdmissionConfig::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"short": {"burst": 0.5}}"#).unwrap();
+        assert!(AdmissionConfig::from_json(&bad).is_err());
+        assert!(AdmissionConfig::protective(8.0, 131_072).validate().is_ok());
+    }
+}

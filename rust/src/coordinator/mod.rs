@@ -65,6 +65,7 @@
 //! deterministic injection schedule and the [`kvp`] module docs for the
 //! lifecycle rules.
 
+pub mod admission;
 pub mod arena;
 pub mod chunking;
 pub mod kvp;
@@ -76,6 +77,7 @@ pub mod scheduler;
 pub mod spp;
 pub mod topology;
 
+pub use admission::{Admission, AdmissionConfig, AdmissionOutcome, BucketConfig, ReqClass};
 pub use arena::{RequestArena, Slot};
 pub use chunking::{AdaptiveChunk, ChunkPolicy, DeadlineChunk, StaticChunk};
 pub use kvp::{CrashReport, GroupState, KvpManager};

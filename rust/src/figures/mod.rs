@@ -21,6 +21,8 @@ pub const ALL_FIGURES: &[&str] = &[
     "faults",
     // concurrent policy x routing x load sweep with the Pareto frontier
     "sweep",
+    // open-loop overload: goodput vs offered load under admission control
+    "overload",
 ];
 
 pub fn run(figure: &str) -> anyhow::Result<()> {
@@ -51,6 +53,7 @@ pub fn run(figure: &str) -> anyhow::Result<()> {
         "sched" => sched(),
         "faults" => faults(),
         "sweep" => sweep(),
+        "overload" => overload(),
         "all" => {
             for f in ALL_FIGURES {
                 run(f)?;
@@ -930,6 +933,73 @@ pub fn sweep() -> anyhow::Result<()> {
         .min(8);
     let (outcomes, wall_s) = run_sweep(&cfg);
     print_table(&outcomes, wall_s, cfg.threads);
+    Ok(())
+}
+
+/// Overload harness (online serving mode): goodput vs offered load on the
+/// sustained-overcommit open-loop scenario, sweeping the arrival rate from
+/// half to triple the base rate. Two stacks: LARS/routed behind the
+/// protective admission gate (token buckets paced to the base rate, bounded
+/// queues, SLO-feedback shedding) vs FCFS/blind with the gate wide open.
+/// The gated stack's goodput plateaus near the paced rate — excess load is
+/// shed at the door — while the ungated stack's queues grow without bound
+/// and deadline attainment collapses. Honors `MEDHA_BENCH_SMOKE`.
+pub fn overload() -> anyhow::Result<()> {
+    use crate::coordinator::{AdmissionConfig, RoutingMode, SchedPolicyKind};
+    use crate::sim::serve::run_serve_scenario;
+    use crate::workload::openloop::{OpenLoopConfig, Scenario};
+
+    println!("\n== overload: goodput vs offered load, open-loop overcommit (8B, tp=8, 4 KVP groups) ==");
+    let base = if std::env::var("MEDHA_BENCH_SMOKE").is_ok() {
+        OpenLoopConfig::smoke()
+    } else {
+        OpenLoopConfig::default()
+    };
+    println!(
+        "base rate {:.1} req/s over {}; gated stack pacing: token buckets at the base rate",
+        base.base_rate_per_s,
+        fmt_duration(base.horizon_s)
+    );
+    println!(
+        "{:<20} {:>6} {:>9} {:>9} {:>8} {:>14} {:>14}",
+        "stack", "load", "offered", "goodput", "attain", "shed (s/d)", "rejected (s/d)"
+    );
+    for (label, kind, routing, gated) in [
+        ("lars/routed gated", SchedPolicyKind::Lars, RoutingMode::Routed, true),
+        ("fcfs/blind ungated", SchedPolicyKind::Fcfs, RoutingMode::Blind, false),
+    ] {
+        for &mult in &[0.5f64, 1.0, 1.5, 2.0, 3.0] {
+            let cfg = OpenLoopConfig {
+                overcommit_mult: mult,
+                ..base.clone()
+            };
+            let adm = if gated {
+                AdmissionConfig::protective(base.base_rate_per_s, base.doc_prompt)
+            } else {
+                AdmissionConfig::default()
+            };
+            let mut serve =
+                run_serve_scenario(Scenario::Overcommit, &cfg, kind, routing, adm, 42);
+            let offered = serve.n_offered();
+            let s = serve.sim.metrics.summary();
+            println!(
+                "{:<20} {:>5.1}x {:>9} {:>7.2}/s {:>7.0}% {:>14} {:>14}",
+                label,
+                mult,
+                offered,
+                s.goodput_rps,
+                s.ttft_attainment * 100.0,
+                format!("{} ({}/{})", s.n_shed, s.n_shed_short, s.n_shed_doc),
+                format!(
+                    "{} ({}/{})",
+                    s.n_rejected_queue_full, s.n_rejected_short, s.n_rejected_doc
+                )
+            );
+        }
+    }
+    println!("gated: goodput plateaus at the paced rate as offered load grows — excess is");
+    println!("shed/rejected at the door, so admitted requests keep their SLOs (graceful");
+    println!("degradation); ungated: the backlog grows and attainment collapses instead.");
     Ok(())
 }
 

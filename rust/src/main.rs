@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   serve       serve the tiny real model on CPU PJRT (SPP pipeline)
 //!   simulate    run the cluster simulator on a workload
+//!   serve-sim   open-loop online serving: arrival stream + admission gate
 //!   sweep       run the policy x routing x load grid concurrently
 //!   reproduce   regenerate a paper table/figure (--figure fig15 | all)
 //!   inspect     list AOT artifacts and the manifest summary
@@ -28,6 +29,14 @@ USAGE:
                   [--ctx TOKENS] [--requests N] [--rate R] [--horizon S] [--seed S]
                   [--threads N]          parallel per-group stepping (bit-identical to serial)
                   [--faults PLAN.json]   deterministic group crash/join/drain/slowdown schedule
+  medha serve-sim [--scenario flash|diurnal|overcommit] [--policy fcfs|srpt|edf|lars]
+                  [--routing blind|round-robin|routed] [--rate R] [--horizon S]
+                  [--mult M] [--seed S] [--admission pass|PLAN.json] [--smoke]
+                  open-loop online serving: the scenario offers an arrival
+                  stream the fleet does not control; a per-class token-bucket
+                  admission gate paces, queues, or sheds (default: protective
+                  gate scaled to the base rate; 'pass' = unpaced pass-through,
+                  bit-identical to the closed-loop simulate path)
   medha sweep     [--threads N] [--seed S] [--loads 0.5,1,2] [--kvp-capacity TOKENS] [--smoke]
                   run the full policy x routing x load grid concurrently (one sim
                   per worker, per-cell seeds from (seed, cell)) and print the
@@ -42,6 +51,7 @@ fn main() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("serve-sim") => cmd_serve_sim(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("reproduce") => {
             let fig = args.str_or("figure", "all");
@@ -242,6 +252,127 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             s.n_recovered,
             fmt_duration(s.recovery_wait_p50),
             fmt_duration(s.recovery_wait_p95)
+        );
+    }
+    if s.kv_overcommit_tokens > 0 {
+        println!(
+            "kv over-commit: {} tokens absorbed past the ledger (fleet full)",
+            fmt_tokens(s.kv_overcommit_tokens)
+        );
+    }
+    Ok(())
+}
+
+/// `medha serve-sim`: open-loop online serving. An arrival generator
+/// (`workload::openloop`) offers a stream the fleet does not control; the
+/// admission gate (`coordinator::admission`) paces it through per-class
+/// token buckets with bounded queues and SLO-feedback shedding, and the
+/// pool-scheduled core serves what gets through. Prints the simulate
+/// summary plus the admission ledger (shed / queue-rejected per class).
+fn cmd_serve_sim(args: &Args) -> anyhow::Result<()> {
+    use medha::coordinator::AdmissionConfig;
+    use medha::sim::serve::{serve_scenario_dep, ServeSim};
+    use medha::workload::openloop::{generate, OpenLoopConfig, Scenario};
+
+    let scen_name = args.str_or("scenario", "overcommit");
+    let scenario = Scenario::parse(scen_name).ok_or_else(|| {
+        anyhow::anyhow!("unknown --scenario '{scen_name}' (flash|diurnal|overcommit)")
+    })?;
+    let smoke = args.flag("smoke") || std::env::var("MEDHA_BENCH_SMOKE").is_ok();
+    let mut cfg = if smoke {
+        OpenLoopConfig::smoke()
+    } else {
+        OpenLoopConfig::default()
+    };
+    cfg.base_rate_per_s = args.f64_or("rate", cfg.base_rate_per_s);
+    cfg.horizon_s = args.f64_or("horizon", cfg.horizon_s);
+    cfg.overcommit_mult = args.f64_or("mult", cfg.overcommit_mult);
+    let policy = match args.get("policy") {
+        Some(p) => SchedPolicyKind::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown --policy '{p}' (fcfs|srpt|edf|lars)"))?,
+        None => SchedPolicyKind::Lars,
+    };
+    let routing = match args.get("routing") {
+        Some(rm) => RoutingMode::parse(rm)
+            .ok_or_else(|| anyhow::anyhow!("unknown --routing '{rm}' (blind|round-robin|routed)"))?,
+        None => RoutingMode::Routed,
+    };
+    // Admission gate: protective by default (buckets scaled to the base
+    // rate, shedding armed), 'pass' for the unpaced pass-through that is
+    // bit-identical to the closed loop, or a JSON plan for custom buckets.
+    let admission = match args.get("admission") {
+        None => AdmissionConfig::protective(cfg.base_rate_per_s, cfg.doc_prompt),
+        Some("pass") => AdmissionConfig::default(),
+        Some(path) => {
+            let j = medha::util::json::Json::parse_file(std::path::Path::new(path))?;
+            AdmissionConfig::from_json(&j)?
+        }
+    };
+    let seed = args.u64_or("seed", 0);
+    let source = generate(scenario, &cfg, seed);
+    let dep = serve_scenario_dep(policy, routing, &cfg);
+    println!(
+        "serve-sim '{}': {} offered arrivals over {} ({:.1} req/s base) on {} x{} \
+         ({}, policy {}, routing {})",
+        scenario.name(),
+        source.len(),
+        fmt_duration(cfg.horizon_s),
+        cfg.base_rate_per_s,
+        dep.model.name,
+        dep.total_gpus(),
+        dep.parallel.label(),
+        dep.scheduler.policy.name(),
+        dep.scheduler.routing.name()
+    );
+    let mut serve = ServeSim::new(dep, source, SimOptions::default(), admission);
+    let end = serve.run();
+    let offered = serve.n_offered();
+    let (short_hw, doc_hw) = (
+        serve.admission().short_q_high_water,
+        serve.admission().doc_q_high_water,
+    );
+    let s = serve.sim.metrics.summary();
+    println!("served span: {}", fmt_duration(end));
+    println!(
+        "offered {}   admitted {}   finished {}",
+        offered,
+        offered - s.n_shed - s.n_rejected_queue_full,
+        s.finished
+    );
+    println!(
+        "admission: {} shed ({} short / {} doc)   {} queue-rejected ({} short / {} doc)   \
+         queue high-water {} short / {} doc",
+        s.n_shed,
+        s.n_shed_short,
+        s.n_shed_doc,
+        s.n_rejected_queue_full,
+        s.n_rejected_short,
+        s.n_rejected_doc,
+        short_hw,
+        doc_hw
+    );
+    println!(
+        "TTFT p50/p95: {} / {}   TBT p95/p99: {} / {}",
+        fmt_duration(s.ttft_p50),
+        fmt_duration(s.ttft_p95),
+        fmt_duration(s.tbt_p95),
+        fmt_duration(s.tbt_p99)
+    );
+    println!(
+        "SLO: TTFT attainment {:.0}%   TBT attainment {:.0}%   goodput {:.2} req/s   \
+         preemptions {} queued / {} active yields",
+        s.ttft_attainment * 100.0,
+        s.tbt_attainment * 100.0,
+        s.goodput_rps,
+        s.preemptions,
+        s.active_preemptions
+    );
+    if s.routing_refusals > 0 {
+        println!(
+            "capacity: {} admissions refused for KV room ({} deferred, wait p95 {})",
+            s.routing_refusals,
+            s.n_deferred,
+            fmt_duration(s.deferral_wait_p95)
         );
     }
     if s.kv_overcommit_tokens > 0 {

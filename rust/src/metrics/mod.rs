@@ -125,6 +125,22 @@ pub struct Metrics {
     /// Per-victim recovery waits: crash time to the first chunk of
     /// re-prefill progress after it, one sample per crash victim.
     pub recovery_wait: Samples,
+    /// Arrivals shed at the door by SLO-feedback admission control: the
+    /// rolling deferral-wait p95 had crossed the shed threshold and the
+    /// arrival's projected LARS slack was already negative. Open-loop
+    /// serving only (`sim::serve`); always zero in closed-loop replay.
+    pub n_shed: u64,
+    /// Shed arrivals that were short/interactive class.
+    pub n_shed_short: u64,
+    /// Shed arrivals that were document class.
+    pub n_shed_doc: u64,
+    /// Arrivals rejected because their class's admission queue was at its
+    /// configured limit. Open-loop serving only.
+    pub n_rejected_queue_full: u64,
+    /// Queue-full rejections of short/interactive arrivals.
+    pub n_rejected_short: u64,
+    /// Queue-full rejections of document arrivals.
+    pub n_rejected_doc: u64,
     /// Active-yield audit trail, in event order; dropped (like `iters`)
     /// when `keep_iter_records` is off — the counter stays exact.
     pub preemption_events: Vec<PreemptionEvent>,
@@ -172,6 +188,12 @@ impl Default for Metrics {
             reprefill_tokens: 0,
             kv_overcommit_tokens: 0,
             recovery_wait: Samples::new(),
+            n_shed: 0,
+            n_shed_short: 0,
+            n_shed_doc: 0,
+            n_rejected_queue_full: 0,
+            n_rejected_short: 0,
+            n_rejected_doc: 0,
             preemption_events: Vec::new(),
             group_busy_s: Vec::new(),
             group_prefill_tokens: Vec::new(),
@@ -276,6 +298,28 @@ impl Metrics {
     /// to its first re-prefill progress afterwards. Call once per victim.
     pub fn record_recovery_wait(&mut self, s: f64) {
         self.recovery_wait.add(s);
+    }
+
+    /// Record one arrival shed at the door by SLO-feedback admission
+    /// control. `doc` selects the per-class breakdown counter.
+    pub fn record_shed(&mut self, doc: bool) {
+        self.n_shed += 1;
+        if doc {
+            self.n_shed_doc += 1;
+        } else {
+            self.n_shed_short += 1;
+        }
+    }
+
+    /// Record one arrival rejected because its class's admission queue was
+    /// full. `doc` selects the per-class breakdown counter.
+    pub fn record_queue_reject(&mut self, doc: bool) {
+        self.n_rejected_queue_full += 1;
+        if doc {
+            self.n_rejected_doc += 1;
+        } else {
+            self.n_rejected_short += 1;
+        }
     }
 
     pub fn record_tbt(&mut self, s: f64) {
@@ -393,6 +437,12 @@ impl Metrics {
             n_recovered: self.recovery_wait.count(),
             recovery_wait_p50: self.recovery_wait.median(),
             recovery_wait_p95: self.recovery_wait.p95(),
+            n_shed: self.n_shed,
+            n_shed_short: self.n_shed_short,
+            n_shed_doc: self.n_shed_doc,
+            n_rejected_queue_full: self.n_rejected_queue_full,
+            n_rejected_short: self.n_rejected_short,
+            n_rejected_doc: self.n_rejected_doc,
         }
     }
 }
@@ -447,6 +497,19 @@ pub struct MetricsSummary {
     pub recovery_wait_p50: f64,
     /// p95 of crash→first-re-prefill-progress (NaN without crashes).
     pub recovery_wait_p95: f64,
+    /// Arrivals shed at the door by SLO-feedback admission control
+    /// (open-loop serving only; zero in closed-loop replay).
+    pub n_shed: u64,
+    /// Shed arrivals that were short/interactive class.
+    pub n_shed_short: u64,
+    /// Shed arrivals that were document class.
+    pub n_shed_doc: u64,
+    /// Arrivals rejected at a full per-class admission queue.
+    pub n_rejected_queue_full: u64,
+    /// Queue-full rejections of short/interactive arrivals.
+    pub n_rejected_short: u64,
+    /// Queue-full rejections of document arrivals.
+    pub n_rejected_doc: u64,
 }
 
 #[cfg(test)]
@@ -604,6 +667,28 @@ mod tests {
         }
         assert_eq!(lean.recovery_wait.count(), 10);
         assert!(lean.recovery_wait.len() <= 4);
+    }
+
+    #[test]
+    fn admission_counters_flow_into_the_summary() {
+        let mut m = Metrics::new();
+        let s = m.summary();
+        assert_eq!(s.n_shed, 0);
+        assert_eq!(s.n_rejected_queue_full, 0);
+        m.record_shed(false);
+        m.record_shed(true);
+        m.record_shed(true);
+        m.record_queue_reject(false);
+        let s = m.summary();
+        assert_eq!(s.n_shed, 3);
+        assert_eq!(s.n_shed_short, 1);
+        assert_eq!(s.n_shed_doc, 2);
+        assert_eq!(s.n_rejected_queue_full, 1);
+        assert_eq!(s.n_rejected_short, 1);
+        assert_eq!(s.n_rejected_doc, 0);
+        // the per-class splits always sum to the totals
+        assert_eq!(s.n_shed, s.n_shed_short + s.n_shed_doc);
+        assert_eq!(s.n_rejected_queue_full, s.n_rejected_short + s.n_rejected_doc);
     }
 
     #[test]

@@ -160,6 +160,7 @@
 //! results (including `sim_parallel_speedup` and the concurrent
 //! policy × routing × load `sweep`, see [`sweep`]) to `BENCH_sim.json`.
 
+pub mod serve;
 pub mod sweep;
 pub mod throughput;
 

@@ -1,0 +1,411 @@
+//! Open-loop online serving driver: the millions-of-users mode where the
+//! simulator is fed by an arrival *stream* it does not control
+//! ([`crate::workload::openloop`]) through an admission layer
+//! ([`crate::coordinator::admission`]) instead of replaying a pre-admitted
+//! trace.
+//!
+//! [`ServeSim`] wraps the closed-loop [`Simulation`] core untouched: every
+//! decision instant it offers due arrivals to the [`Admission`] gate
+//! (token-bucket pacing per class, bounded per-class queues, SLO-feedback
+//! shedding keyed on the rolling deferral-wait p95 and the arrival's
+//! projected LARS slack), pushes the released requests into the
+//! simulation's pending queue, and steps the core. Shed and queue-reject
+//! decisions are metered per class
+//! ([`crate::metrics::Metrics::n_shed`] /
+//! [`n_rejected_queue_full`](crate::metrics::Metrics::n_rejected_queue_full)).
+//!
+//! **Equivalence contract:** under the pass-through
+//! [`AdmissionConfig::default`] (unpaced, unbounded, shedding off), a
+//! [`ServeSim`] run is bit-identical to [`Simulation::run`] on the same
+//! trace. The one subtlety is event timing: the core's private
+//! `next_event` consults `pending.front()` for the next arrival, and in
+//! open-loop mode future arrivals live outside the core. [`ServeSim::run`]
+//! therefore lends the core a sentinel pending entry carrying the next
+//! external wake-up (next un-offered arrival or next token-bucket release)
+//! for the duration of each `step`, so the core wakes at exactly the
+//! instants the closed loop would — same condition (pooled routing, or a
+//! barrier with no group admission point), same times. Asserted
+//! bit-exactly in `tests/sim_serve.rs` and by the open-loop golden
+//! snapshots in `tests/sim_golden.rs`.
+
+use crate::config::DeploymentConfig;
+use crate::coordinator::admission::{Admission, AdmissionConfig, AdmissionOutcome, ReqClass};
+use crate::coordinator::{RoutingMode, SchedPolicyKind};
+use crate::workload::openloop::{generate, OpenLoopConfig, Scenario};
+use crate::workload::RequestSpec;
+
+use super::{est_prefill_s, kvp_convoy_dep, SimOptions, Simulation};
+
+/// Open-loop serving run: an arrival source, an admission gate, and the
+/// closed-loop simulation core.
+pub struct ServeSim {
+    /// The wrapped closed-loop core; `sim.metrics` carries the shed/reject
+    /// counters next to everything else.
+    pub sim: Simulation,
+    admission: Admission,
+    /// The full offered stream, sorted by `(arrival_s, id)` like the
+    /// closed-loop pending queue.
+    source: Vec<RequestSpec>,
+    /// First source index not yet offered to admission.
+    cursor: usize,
+    released_buf: Vec<RequestSpec>,
+}
+
+impl ServeSim {
+    pub fn new(
+        dep: DeploymentConfig,
+        mut source: Vec<RequestSpec>,
+        opts: SimOptions,
+        admission: AdmissionConfig,
+    ) -> ServeSim {
+        admission.validate().expect("invalid admission config");
+        source.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
+        ServeSim {
+            sim: Simulation::new(dep, Vec::new(), opts),
+            admission: Admission::new(admission),
+            source,
+            cursor: 0,
+            released_buf: Vec::new(),
+        }
+    }
+
+    /// The admission gate (queue depths, high-water marks, config).
+    pub fn admission(&self) -> &Admission {
+        &self.admission
+    }
+
+    /// Arrivals offered to admission so far.
+    pub fn n_offered(&self) -> u64 {
+        self.cursor as u64
+    }
+
+    /// Offer every due source arrival to the admission gate, then release
+    /// whatever the class buckets allow into the core's pending queue.
+    /// Shed/reject outcomes are metered here, at decision time.
+    fn offer_due(&mut self) {
+        let now = self.sim.now;
+        while self.cursor < self.source.len() && self.source[self.cursor].arrival_s <= now {
+            let spec = self.source[self.cursor];
+            self.cursor += 1;
+            let est = est_prefill_s(&self.sim.pm, spec.prompt_len);
+            let deadline_rel = self.sim.dep.slo.ttft_deadline_for(est);
+            // Query the rolling p95 only when shedding can act on it: the
+            // query sorts the sample reservoir in place, and the
+            // pass-through config must leave the core's metrics state
+            // bit-identical to a closed-loop run.
+            let p95 = if self.admission.config().shed_deferral_frac > 0.0 {
+                self.sim.metrics.deferral_wait.p95()
+            } else {
+                f64::NAN
+            };
+            let doc = self.admission.config().class_of(spec.prompt_len) == ReqClass::Doc;
+            match self.admission.offer(spec, est, deadline_rel, p95) {
+                AdmissionOutcome::Enqueued => {}
+                AdmissionOutcome::Shed => self.sim.metrics.record_shed(doc),
+                AdmissionOutcome::RejectedQueueFull => self.sim.metrics.record_queue_reject(doc),
+            }
+        }
+        self.released_buf.clear();
+        self.admission.release(now, &mut self.released_buf);
+        for spec in self.released_buf.drain(..) {
+            self.sim.pending.push_back(spec);
+        }
+    }
+
+    /// Earliest future external event: the next un-offered arrival or the
+    /// next token-bucket release of a queued one.
+    fn next_wake(&self) -> Option<f64> {
+        let mut t: Option<f64> = None;
+        if self.cursor < self.source.len() {
+            t = Some(self.source[self.cursor].arrival_s);
+        }
+        if let Some(r) = self.admission.next_release_s(self.sim.now) {
+            t = Some(t.map_or(r, |x: f64| x.min(r)));
+        }
+        t
+    }
+
+    /// Run to completion (source drained, queues empty, core idle) or
+    /// horizon. Returns the end time. Mirrors [`Simulation::run`] exactly,
+    /// with admission spliced between arrivals and the core.
+    pub fn run(&mut self) -> f64 {
+        loop {
+            if !self.sim.opts.faults.is_empty() {
+                self.sim.apply_due_faults();
+            }
+            self.offer_due();
+            self.sim.admit_arrivals();
+            if !self.sim.has_work() {
+                match self.next_wake() {
+                    Some(t) if t > self.sim.now => {
+                        self.sim.now = t;
+                        for tl in &mut self.sim.timelines {
+                            tl.advance_to(t);
+                        }
+                        continue;
+                    }
+                    // A release nominally due now with nothing released
+                    // cannot happen (release() just drained everything
+                    // eligible); bump defensively rather than spin.
+                    Some(_) => {
+                        self.sim.now += 1e-6;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            if self.sim.now > self.sim.opts.horizon_s {
+                break;
+            }
+            // Lend the core the next external wake-up as a sentinel
+            // pending entry so its internal `next_event` interleaves
+            // arrivals/releases exactly as the closed loop interleaves
+            // arrivals. `step` never pops `pending`, so the sentinel is
+            // gone before anyone could admit it.
+            debug_assert!(self.sim.pending.is_empty());
+            let lent = match self.next_wake() {
+                Some(t) => {
+                    self.sim.pending.push_back(RequestSpec {
+                        id: u64::MAX,
+                        prompt_len: 1,
+                        max_new_tokens: 0,
+                        arrival_s: t,
+                    });
+                    true
+                }
+                None => false,
+            };
+            self.sim.step();
+            if lent {
+                self.sim.pending.pop_back();
+            }
+        }
+        self.sim.metrics.preemptions = self.sim.scheds.iter().map(|s| s.preemptions).sum();
+        self.sim.metrics.kv_overcommit_tokens = self.sim.kvp_mgr.kv_overcommit_tokens;
+        self.sim.now
+    }
+}
+
+/// The deployment the `serve-sim` scenarios run on: the kvp_convoy fleet
+/// (Llama-3 8B tp=8 across 4 KVP groups, static 4K chunks) with per-group
+/// KV capacity bounded to the document scale, so routed mode has real
+/// capacity pressure — the deferral-wait signal SLO-feedback shedding
+/// listens to.
+pub fn serve_scenario_dep(
+    kind: SchedPolicyKind,
+    routing: RoutingMode,
+    cfg: &OpenLoopConfig,
+) -> DeploymentConfig {
+    let convoy = crate::workload::KvpConvoyConfig {
+        doc_prompt: cfg.doc_prompt,
+        ..crate::workload::KvpConvoyConfig::default()
+    };
+    let mut dep = kvp_convoy_dep(kind, routing, &convoy);
+    // Room for one sharded document half plus a working set of shorts per
+    // group; a second concurrent document must wait for capacity.
+    dep.scheduler.kvp_capacity_tokens = cfg.doc_prompt + cfg.doc_prompt / 2;
+    dep
+}
+
+/// Build-and-run helper shared by the CLI, the `overload` figure, and the
+/// acceptance/golden tests: one named scenario on the serve deployment
+/// under the given admission gate.
+pub fn run_serve_scenario(
+    scenario: Scenario,
+    cfg: &OpenLoopConfig,
+    kind: SchedPolicyKind,
+    routing: RoutingMode,
+    admission: AdmissionConfig,
+    seed: u64,
+) -> ServeSim {
+    let dep = serve_scenario_dep(kind, routing, cfg);
+    let source = generate(scenario, cfg, seed);
+    let mut serve = ServeSim::new(dep, source, SimOptions::default(), admission);
+    serve.run();
+    serve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::BucketConfig;
+
+    /// Small open-loop shape shared by the in-module tests.
+    fn small_cfg() -> OpenLoopConfig {
+        OpenLoopConfig {
+            base_rate_per_s: 6.0,
+            horizon_s: 12.0,
+            doc_prompt: 65_536,
+            doc_every: 24,
+            ..OpenLoopConfig::default()
+        }
+    }
+
+    #[test]
+    fn pass_through_serve_matches_closed_loop_exactly() {
+        let cfg = small_cfg();
+        let source = generate(Scenario::Overcommit, &cfg, 42);
+        let dep = serve_scenario_dep(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg);
+
+        let mut closed = Simulation::new(dep.clone(), source.clone(), SimOptions::default());
+        let end_closed = closed.run();
+
+        let mut open = ServeSim::new(dep, source, SimOptions::default(), AdmissionConfig::default());
+        let end_open = open.run();
+
+        assert_eq!(end_closed.to_bits(), end_open.to_bits());
+        let (a, b) = (closed.metrics.summary(), open.sim.metrics.summary());
+        assert_eq!(a.finished, b.finished);
+        assert_eq!(a.goodput_rps.to_bits(), b.goodput_rps.to_bits());
+        assert_eq!(a.ttft_p95.to_bits(), b.ttft_p95.to_bits());
+        assert_eq!(a.tbt_p99.to_bits(), b.tbt_p99.to_bits());
+        assert_eq!(a.routing_refusals, b.routing_refusals);
+        assert_eq!(a.n_deferred, b.n_deferred);
+        assert_eq!(b.n_shed, 0);
+        assert_eq!(b.n_rejected_queue_full, 0);
+        // per-request equality, not just aggregates
+        assert_eq!(closed.retired().len(), open.sim.retired().len());
+        for (x, y) in closed.retired().iter().zip(open.sim.retired().iter()) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(
+                x.ttft().map(f64::to_bits),
+                y.ttft().map(f64::to_bits),
+                "req {}",
+                x.id
+            );
+        }
+    }
+
+    #[test]
+    fn serve_run_is_deterministic_across_runs() {
+        let cfg = small_cfg();
+        let adm = AdmissionConfig::protective(cfg.base_rate_per_s, cfg.doc_prompt);
+        let a = run_serve_scenario(
+            Scenario::Flash,
+            &cfg,
+            SchedPolicyKind::Lars,
+            RoutingMode::Routed,
+            adm.clone(),
+            7,
+        );
+        let mut b = run_serve_scenario(
+            Scenario::Flash,
+            &cfg,
+            SchedPolicyKind::Lars,
+            RoutingMode::Routed,
+            adm,
+            7,
+        );
+        let mut a = a;
+        let (sa, sb) = (a.sim.metrics.summary(), b.sim.metrics.summary());
+        assert_eq!(sa.finished, sb.finished);
+        assert_eq!(sa.goodput_rps.to_bits(), sb.goodput_rps.to_bits());
+        assert_eq!(sa.n_shed, sb.n_shed);
+        assert_eq!(sa.n_rejected_queue_full, sb.n_rejected_queue_full);
+        assert_eq!(a.n_offered(), b.n_offered());
+    }
+
+    #[test]
+    fn bounded_queues_never_exceed_their_limits() {
+        let cfg = OpenLoopConfig {
+            overcommit_mult: 3.0,
+            ..small_cfg()
+        };
+        let adm = AdmissionConfig {
+            short: BucketConfig {
+                rate_per_s: cfg.base_rate_per_s,
+                burst: 4.0,
+                queue_limit: 10,
+            },
+            doc: BucketConfig {
+                rate_per_s: 0.2,
+                burst: 1.0,
+                queue_limit: 2,
+            },
+            doc_threshold: cfg.doc_prompt,
+            ..AdmissionConfig::default()
+        };
+        let serve = run_serve_scenario(
+            Scenario::Overcommit,
+            &cfg,
+            SchedPolicyKind::Lars,
+            RoutingMode::Routed,
+            adm,
+            42,
+        );
+        assert!(
+            serve.admission().short_q_high_water <= 10,
+            "short high water {}",
+            serve.admission().short_q_high_water
+        );
+        assert!(
+            serve.admission().doc_q_high_water <= 2,
+            "doc high water {}",
+            serve.admission().doc_q_high_water
+        );
+        // 3x overcommit against paced buckets must overflow something
+        let mut serve = serve;
+        let s = serve.sim.metrics.summary();
+        assert!(
+            s.n_rejected_queue_full > 0,
+            "3x overcommit never overflowed a bounded queue"
+        );
+        assert_eq!(s.n_rejected_queue_full, s.n_rejected_short + s.n_rejected_doc);
+    }
+
+    #[test]
+    fn injected_deferral_pressure_sheds_projected_late_arrivals() {
+        // Deterministic exercise of the SLO-feedback path: pre-load the
+        // rolling deferral-wait distribution far past every short
+        // request's TTFT budget, then serve. Every short arrival projects
+        // negative slack and is shed at the door; admitted work still
+        // completes.
+        let cfg = small_cfg();
+        let dep = serve_scenario_dep(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg);
+        let source = generate(Scenario::Overcommit, &cfg, 42);
+        let n_docs = source.iter().filter(|r| cfg.is_doc(r.prompt_len)).count();
+        assert!(n_docs > 0, "scenario must contain documents");
+        let adm = AdmissionConfig {
+            shed_deferral_frac: 0.5,
+            doc_threshold: cfg.doc_prompt,
+            ..AdmissionConfig::default()
+        };
+        let mut serve = ServeSim::new(dep, source, SimOptions::default(), adm);
+        for _ in 0..50 {
+            serve.sim.metrics.record_deferral_wait(1_000.0);
+        }
+        serve.run();
+        let s = serve.sim.metrics.summary();
+        assert!(s.n_shed > 0, "no arrival was shed under crushing pressure");
+        assert!(s.n_shed_short > 0, "shorts project late first");
+        assert_eq!(s.n_shed, s.n_shed_short + s.n_shed_doc);
+        assert_eq!(s.n_rejected_queue_full, 0, "unbounded queues never reject");
+    }
+
+    #[test]
+    fn flash_and_diurnal_scenarios_complete_and_meter() {
+        for scenario in [Scenario::Flash, Scenario::Diurnal] {
+            let cfg = OpenLoopConfig {
+                horizon_s: 8.0,
+                ..small_cfg()
+            };
+            let mut serve = run_serve_scenario(
+                scenario,
+                &cfg,
+                SchedPolicyKind::Lars,
+                RoutingMode::Routed,
+                AdmissionConfig::protective(cfg.base_rate_per_s, cfg.doc_prompt),
+                11,
+            );
+            let s = serve.sim.metrics.summary();
+            let dropped = s.n_shed + s.n_rejected_queue_full;
+            assert_eq!(
+                serve.cursor as u64,
+                s.finished + dropped + serve.sim.n_live() as u64,
+                "{}: every offered arrival is finished, dropped, or live",
+                scenario.name()
+            );
+            assert!(s.finished > 0, "{}: nothing finished", scenario.name());
+        }
+    }
+}

@@ -178,6 +178,15 @@ impl Samples {
         }
     }
 
+    /// Percentile p in [0, 100] by the nearest-rank definition (the value at
+    /// rank `ceil(p/100 * n)`, 1-based) — no interpolation, always an actual
+    /// sample. Prefer this over ad-hoc `(len as f64 * p) as usize` indexing,
+    /// which truncates toward zero and is biased low.
+    pub fn percentile_nearest_rank(&mut self, p: f64) -> f64 {
+        self.ensure_sorted();
+        nearest_rank_sorted(&self.xs, p)
+    }
+
     pub fn median(&mut self) -> f64 {
         self.percentile(50.0)
     }
@@ -206,6 +215,29 @@ impl Samples {
         self.ensure_sorted();
         *self.xs.first().unwrap_or(&f64::NAN)
     }
+}
+
+/// Nearest-rank percentile over an arbitrary (unsorted) slice: sorts a copy
+/// NaN-safely (`total_cmp`) and returns the sample at rank
+/// `ceil(p/100 * n)` (1-based). `NaN` when empty.
+///
+/// This is the one shared definition for call sites that hold a plain
+/// `Vec<f64>` rather than a [`Samples`] collector (e.g. per-request TBT
+/// vectors in the serving report).
+pub fn percentile_nearest_rank(xs: &[f64], p: f64) -> f64 {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    nearest_rank_sorted(&sorted, p)
+}
+
+/// Nearest-rank lookup over an already-sorted slice.
+fn nearest_rank_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
 }
 
 /// Streaming quantile estimator (Jain & Chlamtac's P² algorithm): tracks a
@@ -426,6 +458,44 @@ mod tests {
         s.add(0.0);
         s.add(10.0);
         assert!((s.percentile(50.0) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nearest_rank_matches_definition() {
+        // 1..=20: p95 is the 19th order statistic (ceil(0.95*20) = 19).
+        let xs: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&xs, 95.0), 19.0);
+        assert_eq!(percentile_nearest_rank(&xs, 100.0), 20.0);
+        assert_eq!(percentile_nearest_rank(&xs, 0.0), 1.0);
+        assert_eq!(percentile_nearest_rank(&xs, 50.0), 10.0);
+        // single sample: every percentile is that sample
+        assert_eq!(percentile_nearest_rank(&[7.0], 95.0), 7.0);
+        assert!(percentile_nearest_rank(&[], 95.0).is_nan());
+        // input order must not matter
+        let mut rev = xs.clone();
+        rev.reverse();
+        assert_eq!(percentile_nearest_rank(&rev, 95.0), 19.0);
+    }
+
+    #[test]
+    fn nearest_rank_samples_method_agrees_with_free_fn() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        let mut s = Samples::new();
+        for &x in &xs {
+            s.add(x);
+        }
+        for p in [0.0, 1.0, 50.0, 95.0, 99.0, 100.0] {
+            assert_eq!(s.percentile_nearest_rank(p), percentile_nearest_rank(&xs, p));
+        }
+    }
+
+    #[test]
+    fn nearest_rank_is_nan_safe() {
+        // A NaN sample sorts to the end (total_cmp): low/mid percentiles
+        // stay meaningful instead of panicking or poisoning everything.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile_nearest_rank(&xs, 50.0), 2.0);
+        assert!(percentile_nearest_rank(&xs, 100.0).is_nan());
     }
 
     #[test]

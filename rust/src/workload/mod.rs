@@ -7,6 +7,8 @@
 use crate::config::{FaultEvent, FaultKind, FaultPlan};
 use crate::util::rng::Rng;
 
+pub mod openloop;
+
 /// A request as submitted by a client.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct RequestSpec {

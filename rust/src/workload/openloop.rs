@@ -1,0 +1,313 @@
+//! Open-loop arrival generators for the online serving mode
+//! ([`crate::sim::serve`]): unlike the closed-loop traces in the parent
+//! module, these model an *offered load* the system does not control —
+//! clients keep arriving whether or not the fleet keeps up, so the
+//! coordinator must admit, queue, or shed. Three overload shapes:
+//!
+//! - [`flash_crowd`] — steady Poisson traffic with a multiplicative burst
+//!   window (a link goes viral).
+//! - [`diurnal`] — a sinusoidal ramp from trough to peak and back (the
+//!   daily cycle compressed into one horizon).
+//! - [`overcommit`] — sustained arrivals at a fixed multiple of the base
+//!   rate (capacity planning got it wrong; nothing will drain the backlog).
+//!
+//! All generators are deterministic in `(config, seed)`. Time-varying
+//! rates use Lewis–Shedler thinning against the peak rate, so the arrival
+//! process is an exact inhomogeneous Poisson draw, not a piecewise
+//! approximation. Like [`super::convoy`], every `doc_every`-th arrival is
+//! deterministically a document, keeping the class mix stable across seeds.
+
+use super::RequestSpec;
+use crate::util::rng::Rng;
+
+/// Shape of one open-loop scenario. One struct covers all three generators;
+/// each reads the knobs for its own shape and ignores the rest.
+#[derive(Debug, Clone)]
+pub struct OpenLoopConfig {
+    /// Steady-state offered load (requests/s, both classes together).
+    pub base_rate_per_s: f64,
+    /// Arrivals stop after this horizon (the driver then drains).
+    pub horizon_s: f64,
+    pub short_prompt: u64,
+    pub short_new_tokens: u64,
+    /// Document prompt length — exceed the simulator's `long_threshold`
+    /// so documents take the KVP-sharded long path.
+    pub doc_prompt: u64,
+    pub doc_new_tokens: u64,
+    /// Every `doc_every`-th arrival is a document (0 = shorts only).
+    pub doc_every: u64,
+    /// Flash crowd: burst window start.
+    pub burst_start_s: f64,
+    /// Flash crowd: burst window length.
+    pub burst_len_s: f64,
+    /// Flash crowd: rate multiplier inside the burst window.
+    pub burst_mult: f64,
+    /// Diurnal: peak rate as a multiple of the base (trough) rate.
+    pub peak_mult: f64,
+    /// Overcommit: sustained rate as a multiple of the base rate.
+    pub overcommit_mult: f64,
+}
+
+impl Default for OpenLoopConfig {
+    fn default() -> Self {
+        OpenLoopConfig {
+            base_rate_per_s: 8.0,
+            horizon_s: 40.0,
+            short_prompt: 512,
+            short_new_tokens: 32,
+            doc_prompt: 131_072,
+            doc_new_tokens: 8,
+            doc_every: 32,
+            burst_start_s: 10.0,
+            burst_len_s: 8.0,
+            burst_mult: 4.0,
+            peak_mult: 3.0,
+            overcommit_mult: 2.0,
+        }
+    }
+}
+
+impl OpenLoopConfig {
+    /// Whether a request of this trace is a document (by prompt length) —
+    /// the same class boundary the admission layer keys its buckets on.
+    pub fn is_doc(&self, prompt_len: u64) -> bool {
+        prompt_len >= self.doc_prompt
+    }
+
+    /// Down-scaled shape for CI smoke runs (`MEDHA_BENCH_SMOKE=1`): short
+    /// horizon, smaller documents, same overload structure.
+    pub fn smoke() -> OpenLoopConfig {
+        OpenLoopConfig {
+            base_rate_per_s: 4.0,
+            horizon_s: 6.0,
+            doc_prompt: 65_536,
+            doc_every: 16,
+            burst_start_s: 2.0,
+            burst_len_s: 2.0,
+            ..OpenLoopConfig::default()
+        }
+    }
+}
+
+/// Named open-loop scenario, as selected by `medha serve-sim --scenario`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    Flash,
+    Diurnal,
+    Overcommit,
+}
+
+impl Scenario {
+    pub const ALL: [Scenario; 3] = [Scenario::Flash, Scenario::Diurnal, Scenario::Overcommit];
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s {
+            "flash" => Some(Scenario::Flash),
+            "diurnal" => Some(Scenario::Diurnal),
+            "overcommit" => Some(Scenario::Overcommit),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Flash => "flash",
+            Scenario::Diurnal => "diurnal",
+            Scenario::Overcommit => "overcommit",
+        }
+    }
+}
+
+/// Dispatch a named scenario to its generator.
+pub fn generate(scenario: Scenario, cfg: &OpenLoopConfig, seed: u64) -> Vec<RequestSpec> {
+    match scenario {
+        Scenario::Flash => flash_crowd(cfg, seed),
+        Scenario::Diurnal => diurnal(cfg, seed),
+        Scenario::Overcommit => overcommit(cfg, seed),
+    }
+}
+
+/// Steady base-rate traffic with a `burst_mult`× window at
+/// `[burst_start_s, burst_start_s + burst_len_s)`.
+pub fn flash_crowd(cfg: &OpenLoopConfig, seed: u64) -> Vec<RequestSpec> {
+    let base = cfg.base_rate_per_s;
+    let mult = cfg.burst_mult.max(1.0);
+    let (b0, b1) = (cfg.burst_start_s, cfg.burst_start_s + cfg.burst_len_s);
+    inhomogeneous(cfg, seed, base * mult, move |t| {
+        if (b0..b1).contains(&t) {
+            base * mult
+        } else {
+            base
+        }
+    })
+}
+
+/// Sinusoidal ramp: the rate starts at the base (trough), peaks at
+/// `peak_mult`× mid-horizon, and returns to the trough by the end.
+pub fn diurnal(cfg: &OpenLoopConfig, seed: u64) -> Vec<RequestSpec> {
+    let base = cfg.base_rate_per_s;
+    let peak = base * cfg.peak_mult.max(1.0);
+    let horizon = cfg.horizon_s;
+    inhomogeneous(cfg, seed, peak, move |t| {
+        let phase = (std::f64::consts::TAU * t / horizon).cos();
+        base + (peak - base) * 0.5 * (1.0 - phase)
+    })
+}
+
+/// Sustained arrivals at `overcommit_mult`× the base rate for the whole
+/// horizon — the backlog grows without bound unless admission sheds.
+pub fn overcommit(cfg: &OpenLoopConfig, seed: u64) -> Vec<RequestSpec> {
+    let rate = cfg.base_rate_per_s * cfg.overcommit_mult.max(0.0);
+    inhomogeneous(cfg, seed, rate, move |_| rate)
+}
+
+/// Inhomogeneous Poisson draw by Lewis–Shedler thinning: candidate events
+/// at the peak rate `rate_max`, each kept with probability
+/// `rate_at(t) / rate_max`. Exact for any `rate_at <= rate_max`, and for a
+/// constant rate it degenerates to the plain exponential-gap generator
+/// (every candidate accepted).
+fn inhomogeneous(
+    cfg: &OpenLoopConfig,
+    seed: u64,
+    rate_max: f64,
+    rate_at: impl Fn(f64) -> f64,
+) -> Vec<RequestSpec> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut id = 0u64;
+    if rate_max <= 0.0 {
+        return out;
+    }
+    loop {
+        t += rng.exponential(rate_max);
+        if t >= cfg.horizon_s {
+            break;
+        }
+        if rng.f64() * rate_max > rate_at(t) {
+            continue; // thinned candidate — consumes RNG state, emits nothing
+        }
+        // Deterministic document injection (same idiom as `convoy`): the
+        // doc_every/2 offset keeps the very first arrival a short.
+        let doc = cfg.doc_every > 0 && id % cfg.doc_every == cfg.doc_every / 2;
+        out.push(RequestSpec {
+            id,
+            prompt_len: if doc { cfg.doc_prompt } else { cfg.short_prompt },
+            max_new_tokens: if doc {
+                cfg.doc_new_tokens
+            } else {
+                cfg.short_new_tokens
+            },
+            arrival_s: t,
+        });
+        id += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn count_in(w: &[RequestSpec], lo: f64, hi: f64) -> usize {
+        w.iter()
+            .filter(|r| (lo..hi).contains(&r.arrival_s))
+            .count()
+    }
+
+    fn assert_well_formed(w: &[RequestSpec], cfg: &OpenLoopConfig) {
+        assert!(w.windows(2).all(|p| p[1].arrival_s >= p[0].arrival_s));
+        let ids: Vec<u64> = w.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..w.len() as u64).collect::<Vec<_>>());
+        assert!(w
+            .iter()
+            .all(|r| r.prompt_len == cfg.short_prompt || r.prompt_len == cfg.doc_prompt));
+        assert!(w.iter().all(|r| r.arrival_s < cfg.horizon_s));
+    }
+
+    #[test]
+    fn flash_crowd_bursts_inside_the_window() {
+        let cfg = OpenLoopConfig::default();
+        let w = flash_crowd(&cfg, 42);
+        assert_well_formed(&w, &cfg);
+        // density inside the burst window vs an equally long quiet stretch
+        let burst = count_in(&w, cfg.burst_start_s, cfg.burst_start_s + cfg.burst_len_s);
+        let quiet = count_in(&w, 30.0, 30.0 + cfg.burst_len_s);
+        assert!(
+            burst as f64 > 2.0 * quiet as f64,
+            "burst={burst} quiet={quiet}"
+        );
+        assert_eq!(w, flash_crowd(&cfg, 42));
+        assert_ne!(w, flash_crowd(&cfg, 43));
+    }
+
+    #[test]
+    fn diurnal_peaks_mid_horizon() {
+        let cfg = OpenLoopConfig {
+            horizon_s: 60.0,
+            ..OpenLoopConfig::default()
+        };
+        let w = diurnal(&cfg, 42);
+        assert_well_formed(&w, &cfg);
+        // peak quarter (centered mid-horizon) vs the leading trough quarter
+        let peak = count_in(&w, 22.5, 37.5);
+        let trough = count_in(&w, 0.0, 15.0);
+        assert!(peak > trough, "peak={peak} trough={trough}");
+        assert_eq!(w, diurnal(&cfg, 42));
+    }
+
+    #[test]
+    fn overcommit_rate_scales_with_multiplier() {
+        let cfg = OpenLoopConfig {
+            base_rate_per_s: 10.0,
+            horizon_s: 100.0,
+            overcommit_mult: 2.0,
+            ..OpenLoopConfig::default()
+        };
+        let w = overcommit(&cfg, 7);
+        assert_well_formed(&w, &cfg);
+        // ~2000 expected arrivals; allow generous Poisson slack
+        assert!((1700..2300).contains(&w.len()), "{}", w.len());
+        let base = overcommit(
+            &OpenLoopConfig {
+                overcommit_mult: 1.0,
+                ..cfg.clone()
+            },
+            7,
+        );
+        assert!(w.len() > base.len() * 3 / 2, "{} vs {}", w.len(), base.len());
+    }
+
+    #[test]
+    fn document_mix_is_deterministic_and_classed() {
+        let cfg = OpenLoopConfig::default();
+        let w = overcommit(&cfg, 11);
+        let docs = w.iter().filter(|r| cfg.is_doc(r.prompt_len)).count();
+        let expect = w.len() / cfg.doc_every as usize;
+        assert!(docs >= expect.saturating_sub(1) && docs <= expect + 1, "docs={docs}");
+        assert!(!cfg.is_doc(cfg.short_prompt));
+        assert!(cfg.is_doc(cfg.doc_prompt));
+    }
+
+    #[test]
+    fn scenario_names_round_trip() {
+        for s in Scenario::ALL {
+            assert_eq!(Scenario::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scenario::parse("nope"), None);
+        // dispatch matches the direct generators
+        let cfg = OpenLoopConfig::default();
+        assert_eq!(generate(Scenario::Flash, &cfg, 5), flash_crowd(&cfg, 5));
+        assert_eq!(generate(Scenario::Overcommit, &cfg, 5), overcommit(&cfg, 5));
+    }
+
+    #[test]
+    fn zero_doc_every_is_all_short() {
+        let cfg = OpenLoopConfig {
+            doc_every: 0,
+            ..OpenLoopConfig::default()
+        };
+        let w = diurnal(&cfg, 9);
+        assert!(w.iter().all(|r| r.prompt_len == cfg.short_prompt));
+    }
+}

@@ -83,6 +83,14 @@ fn serialize_outcome(sim: &mut Simulation, end_s: f64) -> String {
     out.push_str(&format!("shards_lost = {}\n", s.shards_lost));
     out.push_str(&format!("reprefill_tokens = {}\n", s.reprefill_tokens));
     out.push_str(&format!("kv_overcommit_tokens = {}\n", s.kv_overcommit_tokens));
+    out.push_str(&format!(
+        "n_shed = {} (short {} / doc {})\n",
+        s.n_shed, s.n_shed_short, s.n_shed_doc
+    ));
+    out.push_str(&format!(
+        "n_rejected_queue_full = {} (short {} / doc {})\n",
+        s.n_rejected_queue_full, s.n_rejected_short, s.n_rejected_doc
+    ));
     out.push_str(&format!("n_recovered = {}\n", s.n_recovered));
     out.push_str(&format!("n_preemption_events = {n_events}\n"));
     out.push_str(&format!("group_prefill_tokens = {group_prefill:?}\n"));
@@ -427,6 +435,51 @@ fn golden_fault_crash_and_rejoin() {
     assert_eq!(sim.group_state(victim), GroupState::Active, "rejoin must restore the group");
     assert_eq!(sim.n_active_groups(), 4);
     assert!(sim.kvp_ledger_is_conserved());
+}
+
+/// Open-loop golden scenarios: every `serve-sim` scenario under both the
+/// pass-through gate (must shadow the closed loop bit-exactly — the same
+/// serialization the closed-loop goldens pin) and the protective gate
+/// (token-bucket pacing + bounded queues + SLO-feedback shedding, whose
+/// drop accounting the extended serialization now pins). Each runs twice
+/// in-process (bit-determinism) before the snapshot compare, like every
+/// other golden.
+#[test]
+fn golden_openloop_scenarios() {
+    use medha::coordinator::AdmissionConfig;
+    use medha::sim::serve::run_serve_scenario;
+    use medha::workload::openloop::{OpenLoopConfig, Scenario};
+
+    let cfg = OpenLoopConfig {
+        base_rate_per_s: 6.0,
+        horizon_s: 12.0,
+        doc_prompt: 65_536,
+        doc_every: 24,
+        ..OpenLoopConfig::default()
+    };
+    for scenario in [Scenario::Flash, Scenario::Diurnal, Scenario::Overcommit] {
+        for (gate_name, gate) in [
+            ("pass", AdmissionConfig::default()),
+            (
+                "protective",
+                AdmissionConfig::protective(cfg.base_rate_per_s, cfg.doc_prompt),
+            ),
+        ] {
+            let name = format!("openloop_{}_{gate_name}", scenario.name());
+            golden(&name, || {
+                let mut serve = run_serve_scenario(
+                    scenario,
+                    &cfg,
+                    SchedPolicyKind::Lars,
+                    RoutingMode::Routed,
+                    gate.clone(),
+                    7,
+                );
+                let end = serve.sim.metrics.span_s();
+                (serve.sim, end)
+            });
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,227 @@
+//! Acceptance suite for the open-loop online serving mode (`sim::serve` +
+//! `coordinator::admission`): the overload contract from the paper's
+//! no-request-left-behind stance, restated for the open loop — when offered
+//! load exceeds capacity, the system degrades *gracefully*: admitted
+//! requests keep their SLOs (goodput plateaus at the paced rate instead of
+//! collapsing), the excess is shed or rejected at the door with per-class
+//! accounting, bounded queues never overflow their limits, and with the
+//! gate wide open the whole driver is bit-identical to the closed loop.
+
+use medha::coordinator::{AdmissionConfig, BucketConfig, RoutingMode, SchedPolicyKind};
+use medha::sim::serve::{run_serve_scenario, serve_scenario_dep, ServeSim};
+use medha::sim::{SimOptions, Simulation};
+use medha::workload::openloop::{generate, OpenLoopConfig, Scenario};
+
+/// Shared open-loop shape: small enough for test wall-clock, hot enough
+/// (6 req/s with a document every 24th arrival) for real contention.
+fn base_cfg() -> OpenLoopConfig {
+    OpenLoopConfig {
+        base_rate_per_s: 6.0,
+        horizon_s: 12.0,
+        doc_prompt: 65_536,
+        doc_every: 24,
+        ..OpenLoopConfig::default()
+    }
+}
+
+/// A gate paced clearly below fleet capacity: with the buckets binding,
+/// the admitted stream is rate-limited to ~3 short/s + ~0.1 doc/s no
+/// matter how much is offered — the mechanism behind the goodput plateau.
+fn paced_gate(cfg: &OpenLoopConfig) -> AdmissionConfig {
+    AdmissionConfig {
+        short: BucketConfig {
+            rate_per_s: 3.0,
+            burst: 6.0,
+            queue_limit: 64,
+        },
+        doc: BucketConfig {
+            rate_per_s: 0.1,
+            burst: 1.0,
+            queue_limit: 4,
+        },
+        doc_threshold: cfg.doc_prompt,
+        shed_deferral_frac: 0.0,
+        ..AdmissionConfig::default()
+    }
+}
+
+/// Bit-exact outcome signature: summary statistics as raw f64 bits plus
+/// per-request `(id, ttft)` pairs over the retired set.
+fn outcome_sig(sim: &mut Simulation, end: f64) -> Vec<u64> {
+    let s = sim.metrics.summary();
+    let mut v = vec![
+        end.to_bits(),
+        s.finished,
+        s.goodput_rps.to_bits(),
+        s.ttft_p50.to_bits(),
+        s.ttft_p95.to_bits(),
+        s.tbt_p50.to_bits(),
+        s.tbt_p95.to_bits(),
+        s.tbt_p99.to_bits(),
+        s.tbt_max.to_bits(),
+        s.ttft_attainment.to_bits(),
+        s.tbt_attainment.to_bits(),
+        s.deferral_wait_p95.to_bits(),
+        s.routing_refusals,
+        s.n_deferred,
+        s.preemptions,
+        s.active_preemptions,
+    ];
+    for r in sim.retired() {
+        v.push(r.id);
+        v.push(r.ttft().map_or(u64::MAX, f64::to_bits));
+    }
+    v
+}
+
+/// With the pass-through gate (unpaced buckets, unbounded queues, shedding
+/// off) every open-loop scenario must replay bit-identically to feeding
+/// the same trace straight into the closed-loop core — the equivalence
+/// contract that keeps serve-sim from forking the simulator's semantics.
+#[test]
+fn pass_through_open_loop_matches_closed_loop_on_every_scenario() {
+    let cfg = base_cfg();
+    for scenario in [Scenario::Flash, Scenario::Diurnal, Scenario::Overcommit] {
+        let source = generate(scenario, &cfg, 42);
+        let dep = serve_scenario_dep(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg);
+
+        let mut closed = Simulation::new(dep.clone(), source.clone(), SimOptions::default());
+        let end_closed = closed.run();
+
+        let mut open = ServeSim::new(dep, source, SimOptions::default(), AdmissionConfig::default());
+        let end_open = open.run();
+
+        assert_eq!(
+            outcome_sig(&mut closed, end_closed),
+            outcome_sig(&mut open.sim, end_open),
+            "{}: pass-through open loop diverged from the closed loop",
+            scenario.name()
+        );
+        let s = open.sim.metrics.summary();
+        assert_eq!(s.n_shed, 0, "{}: pass-through shed", scenario.name());
+        assert_eq!(s.n_rejected_queue_full, 0, "{}: pass-through rejected", scenario.name());
+    }
+}
+
+/// The tentpole claim: with admission paced below capacity, doubling the
+/// offered load does not move goodput — the gate admits the same paced
+/// stream and the excess is dropped at the door. Goodput at 2x overcommit
+/// must stay within 10% of the capacity-matched (1x) run, while the drop
+/// counters grow with the offered excess.
+#[test]
+fn goodput_plateaus_when_offered_load_doubles() {
+    let run = |mult: f64| -> (u64, medha::metrics::MetricsSummary) {
+        let cfg = OpenLoopConfig {
+            overcommit_mult: mult,
+            ..base_cfg()
+        };
+        let gate = paced_gate(&cfg);
+        let mut serve = run_serve_scenario(
+            Scenario::Overcommit,
+            &cfg,
+            SchedPolicyKind::Lars,
+            RoutingMode::Routed,
+            gate,
+            42,
+        );
+        let offered = serve.n_offered();
+        (offered, serve.sim.metrics.summary())
+    };
+    let (offered_1x, s1) = run(1.0);
+    let (offered_2x, s2) = run(2.0);
+    assert!(
+        offered_2x as f64 > 1.5 * offered_1x as f64,
+        "degenerate sweep: {offered_2x} offered at 2x vs {offered_1x} at 1x"
+    );
+    assert!(s1.goodput_rps > 0.0, "capacity-matched run produced no goodput");
+    let ratio = s2.goodput_rps / s1.goodput_rps;
+    assert!(
+        (0.9..=1.1).contains(&ratio),
+        "goodput did not plateau: {:.3} req/s at 1x vs {:.3} req/s at 2x ({ratio:.2}x)",
+        s1.goodput_rps,
+        s2.goodput_rps
+    );
+    let dropped_1x = s1.n_shed + s1.n_rejected_queue_full;
+    let dropped_2x = s2.n_shed + s2.n_rejected_queue_full;
+    assert!(
+        dropped_2x > dropped_1x,
+        "doubling offered load must drop more at the door ({dropped_1x} -> {dropped_2x})"
+    );
+    assert!(dropped_2x > 0, "2x overcommit against a paced gate never dropped");
+}
+
+/// Per-class accounting and queue bounds under heavy overload: every drop
+/// lands in exactly one class counter, and the bounded per-class queues
+/// never exceed their configured limits (tracked via high-water marks).
+#[test]
+fn overload_drops_are_class_correct_and_queues_stay_bounded() {
+    let cfg = OpenLoopConfig {
+        overcommit_mult: 3.0,
+        ..base_cfg()
+    };
+    let gate = paced_gate(&cfg);
+    let (short_limit, doc_limit) = (gate.short.queue_limit, gate.doc.queue_limit);
+    let mut serve = run_serve_scenario(
+        Scenario::Overcommit,
+        &cfg,
+        SchedPolicyKind::Lars,
+        RoutingMode::Routed,
+        gate,
+        42,
+    );
+    assert!(
+        serve.admission().short_q_high_water <= short_limit,
+        "short queue exceeded its limit: {} > {short_limit}",
+        serve.admission().short_q_high_water
+    );
+    assert!(
+        serve.admission().doc_q_high_water <= doc_limit,
+        "doc queue exceeded its limit: {} > {doc_limit}",
+        serve.admission().doc_q_high_water
+    );
+    let offered = serve.n_offered();
+    let s = serve.sim.metrics.summary();
+    assert_eq!(s.n_shed, s.n_shed_short + s.n_shed_doc, "shed classes don't sum");
+    assert_eq!(
+        s.n_rejected_queue_full,
+        s.n_rejected_short + s.n_rejected_doc,
+        "reject classes don't sum"
+    );
+    assert!(
+        s.n_rejected_queue_full > 0,
+        "3x overcommit against bounded queues never overflowed"
+    );
+    assert!(
+        s.finished + s.n_shed + s.n_rejected_queue_full <= offered,
+        "conservation: {} finished + {} dropped > {} offered",
+        s.finished,
+        s.n_shed + s.n_rejected_queue_full,
+        offered
+    );
+}
+
+/// SLO-feedback shedding, exercised deterministically: pre-loading the
+/// rolling deferral-wait distribution far past every TTFT budget makes
+/// each short arrival project negative slack, so it is shed at the door —
+/// and sheds are metered per class like every other drop.
+#[test]
+fn slo_feedback_shedding_fires_and_is_class_correct() {
+    let cfg = base_cfg();
+    let dep = serve_scenario_dep(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg);
+    let source = generate(Scenario::Overcommit, &cfg, 42);
+    let gate = AdmissionConfig {
+        shed_deferral_frac: 0.5,
+        doc_threshold: cfg.doc_prompt,
+        ..AdmissionConfig::default()
+    };
+    let mut serve = ServeSim::new(dep, source, SimOptions::default(), gate);
+    for _ in 0..50 {
+        serve.sim.metrics.record_deferral_wait(1_000.0);
+    }
+    serve.run();
+    let s = serve.sim.metrics.summary();
+    assert!(s.n_shed > 0, "crushing deferral pressure never shed an arrival");
+    assert!(s.n_shed_short > 0, "short arrivals project late first");
+    assert_eq!(s.n_shed, s.n_shed_short + s.n_shed_doc);
+    assert_eq!(s.n_rejected_queue_full, 0, "unbounded queues must never reject");
+}
