@@ -33,6 +33,16 @@
 
 use crate::util::json::Json;
 
+/// Typed validation failure for fault plans. Non-finite times get their
+/// own variant because they used to be a *panic* (a NaN `t_s` blew up the
+/// old `partial_cmp` comparator inside `sort`, before validation could
+/// reject it); now sorting is total and the parse path returns this.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum FaultPlanError {
+    #[error("fault event {index}: time {t_s} must be a finite non-negative number of seconds")]
+    BadTime { index: usize, t_s: f64 },
+}
+
 /// What happens to the target group at the event time.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FaultKind {
@@ -71,9 +81,11 @@ impl FaultPlan {
     }
 
     /// Normalize: stable-sort events by time (file order breaks ties).
+    /// The comparator is total (`total_cmp`), so a malformed plan with a
+    /// NaN time sorts deterministically instead of panicking here —
+    /// [`FaultPlan::validate`] then rejects it with [`FaultPlanError`].
     pub fn sort(&mut self) {
-        self.events
-            .sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).expect("non-finite fault time"));
+        self.events.sort_by(|a, b| a.t_s.total_cmp(&b.t_s));
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<FaultPlan> {
@@ -107,7 +119,7 @@ impl FaultPlan {
     pub fn validate(&self) -> anyhow::Result<()> {
         for (i, e) in self.events.iter().enumerate() {
             if !e.t_s.is_finite() || e.t_s < 0.0 {
-                anyhow::bail!("fault event {i}: bad time {}", e.t_s);
+                return Err(FaultPlanError::BadTime { index: i, t_s: e.t_s }.into());
             }
             match e.kind {
                 FaultKind::Crash | FaultKind::Drain => {
@@ -223,6 +235,30 @@ mod tests {
         assert!(plan.is_empty());
         assert_eq!(plan, FaultPlan::default());
         plan.validate().unwrap();
+    }
+
+    #[test]
+    fn nan_and_infinite_times_are_rejected_not_panicked() {
+        // NaN is not expressible in JSON, so build the plan directly to
+        // prove the sort itself is total: the old comparator panicked
+        // right here, before validation ever saw the event.
+        let mut plan = FaultPlan {
+            events: vec![
+                FaultEvent { t_s: f64::NAN, group: Some(0), kind: FaultKind::Crash },
+                FaultEvent { t_s: 1.0, group: Some(1), kind: FaultKind::Crash },
+            ],
+        };
+        plan.sort();
+        let err = plan.validate().unwrap_err();
+        let typed = err.downcast_ref::<FaultPlanError>().expect("typed FaultPlanError");
+        assert!(matches!(typed, FaultPlanError::BadTime { .. }), "{typed}");
+
+        // JSON reaches infinity by overflow (1e999 parses to +inf), so the
+        // whole parse path must reject it with the typed error, not panic.
+        let j = Json::parse(r#"{"events": [{"t_s": 1e999, "kind": "crash", "group": 0}]}"#)
+            .unwrap();
+        let err = FaultPlan::from_json(&j).unwrap_err();
+        assert!(err.downcast_ref::<FaultPlanError>().is_some(), "{err}");
     }
 
     #[test]

@@ -9,6 +9,10 @@
 //!
 //! Activations cross stage boundaries as host vectors (the CPU analogue of
 //! the paper's inter-node activation hop).
+//!
+//! Wall-clock note: D2-allowlisted (`medha lint`) — this module serves
+//! the *real* model, so its TTFT/TBT are genuine wall-clock readings, not
+//! simulator state.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -6,6 +6,12 @@
 //! into 3D parallelism, plus the substrates needed to reproduce every
 //! table and figure of the evaluation. See DESIGN.md for the full map.
 
+// Determinism/safety contract (enforced statically by `medha lint`, rule
+// U1): unsafe code is denied crate-wide; the only modules that may opt
+// back in — with a `// SAFETY:` comment on every block — are
+// `util::threadpool` and `runtime`.
+#![deny(unsafe_code)]
+
 pub mod config;
 pub mod perfmodel;
 pub mod util;

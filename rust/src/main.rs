@@ -8,6 +8,7 @@
 //!   reproduce   regenerate a paper table/figure (--figure fig15 | all)
 //!   inspect     list AOT artifacts and the manifest summary
 //!   table1      print the capability matrix
+//!   lint        run the determinism-contract checker over rust/src
 
 use medha::config::DeploymentConfig;
 use medha::coordinator::{RoutingMode, SchedPolicyKind};
@@ -44,10 +45,15 @@ USAGE:
   medha reproduce --figure <fig1|table1|fig5a|...|sweep|all>
   medha inspect   [--artifacts DIR]
   medha table1
+  medha lint      [--root DIR] [--json]
+                  statically check the determinism contract (D1 hash
+                  containers, D2 wall clock, D3 partial_cmp, D4 truncating
+                  rank casts, U1 unsafe/SAFETY hygiene) over the source
+                  tree; exits 1 and prints findings on any violation
 ";
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["verbose", "adaptive", "no-adaptive", "smoke"], true);
+    let args = Args::from_env(&["verbose", "adaptive", "no-adaptive", "smoke", "json"], true);
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -59,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         }
         Some("inspect") => cmd_inspect(&args),
         Some("table1") => medha::figures::run("table1"),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print!("{USAGE}");
             Ok(())
@@ -424,6 +431,51 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     }
     let (outcomes, wall_s) = run_sweep(&cfg);
     print_table(&outcomes, wall_s, cfg.threads);
+    Ok(())
+}
+
+/// `medha lint`: the determinism-contract checker (see `util::lint`).
+/// Scans the source tree with the repo-default rule set and exits
+/// non-zero on any finding, so CI and pre-commit hooks can gate on it;
+/// `--json` emits the findings as a machine-readable array instead.
+fn cmd_lint(args: &Args) -> anyhow::Result<()> {
+    use medha::util::json::Json;
+    use medha::util::lint::{check_tree, count_rs_files};
+
+    // Default to the in-repo tree: relative to the current directory when
+    // run from a checkout, falling back to the crate manifest dir so
+    // `cargo run -- lint` works from anywhere.
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => {
+            let local = std::path::PathBuf::from("rust/src");
+            if local.is_dir() {
+                local
+            } else {
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src")
+            }
+        }
+    };
+    anyhow::ensure!(root.is_dir(), "lint root {} is not a directory", root.display());
+    let findings = check_tree(&root)?;
+    let n_files = count_rs_files(&root)?;
+    if args.flag("json") {
+        let arr = Json::arr(findings.iter().map(|f| f.to_json()));
+        println!("{arr}");
+    } else {
+        for f in &findings {
+            println!("{f}");
+        }
+        println!(
+            "medha lint: {} finding(s) across {} files under {}",
+            findings.len(),
+            n_files,
+            root.display()
+        );
+    }
+    if !findings.is_empty() {
+        anyhow::bail!("determinism contract violated: {} finding(s)", findings.len());
+    }
     Ok(())
 }
 

@@ -290,15 +290,28 @@ impl Runtime {
 
 // ---- literal helpers -------------------------------------------------------
 
+/// Encode a 4-byte-element slice as little-endian bytes for PJRT's
+/// untyped-literal constructor. This replaces the previous
+/// `slice::from_raw_parts` reinterpretation: literal creation copies the
+/// buffer internally and only runs on the load path, so the safe copy
+/// costs nothing measurable — and unlike the cast, it is byte-order
+/// explicit (PJRT literals are little-endian on every supported host).
+fn le_bytes_4<T: Copy>(data: &[T], enc: impl Fn(T) -> [u8; 4]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &v in data {
+        bytes.extend_from_slice(&enc(v));
+    }
+    bytes
+}
+
 /// f32 literal of the given shape.
 pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
     let n: usize = shape.iter().product();
     if n != data.len() {
         bail!("shape {:?} wants {n} elements, got {}", shape, data.len());
     }
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+    let bytes = le_bytes_4(data, f32::to_le_bytes);
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, &bytes)
         .map_err(|e| anyhow!("literal: {e:?}"))
 }
 
@@ -308,9 +321,8 @@ pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
     if n != data.len() {
         bail!("shape {:?} wants {n} elements, got {}", shape, data.len());
     }
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+    let bytes = le_bytes_4(data, i32::to_le_bytes);
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, &bytes)
         .map_err(|e| anyhow!("literal: {e:?}"))
 }
 
@@ -367,5 +379,17 @@ mod tests {
         let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
         assert_eq!(to_vec_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
         assert!(lit_f32(&[2, 2], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn le_bytes_4_matches_native_encoding() {
+        // the safe copy must produce exactly the bytes the old raw-parts
+        // reinterpretation handed PJRT (little-endian hosts)
+        assert_eq!(le_bytes_4(&[1.0f32], f32::to_le_bytes), 1.0f32.to_le_bytes());
+        assert_eq!(
+            le_bytes_4(&[-7i32, 300], i32::to_le_bytes),
+            [(-7i32).to_le_bytes(), 300i32.to_le_bytes()].concat()
+        );
+        assert!(le_bytes_4(&[] as &[f32], f32::to_le_bytes).is_empty());
     }
 }

@@ -159,6 +159,42 @@
 //! `sim/parallel_step` pair live in `benches/hotpath.rs`, which records
 //! results (including `sim_parallel_speedup` and the concurrent
 //! policy × routing × load `sweep`, see [`sweep`]) to `BENCH_sim.json`.
+//!
+//! # Determinism contract
+//!
+//! Everything above is only verifiable because the simulator is **bit
+//! deterministic**: the golden snapshots (`tests/sim_golden.rs`) assume a
+//! run is a pure function of (deployment, workload, seed, fault plan);
+//! the thread-matrix tests assume `--threads 1/2/4` agree bit-exactly;
+//! the sweep assumes outcomes are worker-count invariant; and the
+//! open-loop serving tests assume Lewis–Shedler arrival draws replay
+//! exactly. Four coding rules carry that weight, and they are enforced
+//! *statically* by `medha lint` (see `util::lint`, run by
+//! `tests/lint.rs` on every `cargo test` and by the `medha lint`
+//! subcommand / CI step):
+//!
+//! * **D1** no `HashMap`/`HashSet` in sim / coordinator / kvcache /
+//!   workload / config / metrics state — hash iteration order varies per
+//!   process, so one stray iteration scrambles replay. Use `BTreeMap`,
+//!   `Vec`, or the arena/`SlotVec` substrates.
+//! * **D2** no `Instant`/`SystemTime` outside the timing-only modules
+//!   (`util/bench.rs`, [`sweep`], [`throughput`], `engine/pipeline.rs`,
+//!   `util/threadpool.rs`) — wall clock measures the simulator, never
+//!   feeds it.
+//! * **D3** no `partial_cmp` — a NaN panics the unwrap or makes the sort
+//!   order run-dependent; `total_cmp` everywhere.
+//! * **D4** no truncating float→`usize` rank casts and no integer
+//!   `* N / 100` percentile arithmetic in metrics paths — rounding must
+//!   be explicit (`.floor()`/`.ceil()`/`.round()`).
+//!
+//! (Plus **U1**: `unsafe` only in `util/threadpool.rs` and
+//! `runtime/mod.rs`, always under a `// SAFETY:` comment.)
+//!
+//! CLI: `medha lint` prints findings and exits non-zero on any violation;
+//! `medha lint --json` emits them machine-readably. To extend an
+//! allowlist (e.g. a new timing-only module), edit
+//! `util::lint::LintConfig::repo_default` with a comment justifying the
+//! exemption — the fixtures in `tests/lint.rs` keep every rule honest.
 
 pub mod serve;
 pub mod sweep;

@@ -16,6 +16,9 @@
 //! its raw bit pattern for exact cross-run comparison (asserted by the
 //! tests here and exercised by `medha sweep` / `reproduce --figure
 //! sweep` / the `sim/sweep` bench).
+//!
+//! Wall-clock note: D2-allowlisted (`medha lint`) — `Instant` only times
+//! the sweep for the report line; cell outcomes never see it.
 
 use std::time::Instant;
 

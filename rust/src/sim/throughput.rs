@@ -7,6 +7,9 @@
 //! the results into `BENCH_sim.json`) and the `bench_smoke` integration
 //! test (which runs a down-scaled version under `MEDHA_BENCH_SMOKE=1` to
 //! keep the bench path compiling and its JSON valid).
+//!
+//! Wall-clock note: D2-allowlisted (`medha lint`) — steps/wall-second is
+//! the *measurement*; simulated time advances only by the perf model.
 
 use std::time::Instant;
 

@@ -8,6 +8,10 @@
 //! iteration count so an integration test can exercise every bench in
 //! milliseconds — keeping the bench binaries compiling and their JSON
 //! output valid under plain `cargo test`.
+//!
+//! Wall-clock note: this module is on the determinism-contract allowlist
+//! for rule D2 (`medha lint`) — it *measures* real time around runs; no
+//! reading ever feeds back into simulated state.
 
 use std::time::Instant;
 

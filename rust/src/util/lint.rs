@@ -1,0 +1,930 @@
+//! `medha lint` — the repo-native determinism-contract checker.
+//!
+//! Every guarantee this reproduction makes — golden-snapshot bit-identity,
+//! thread-matrix parity, worker-count-invariant sweeps, Lewis–Shedler exact
+//! replay — rests on a determinism contract that the compiler does not
+//! enforce: no iteration-order-nondeterministic containers in simulator
+//! state, no wall-clock reads feeding simulated time, no NaN-unsafe float
+//! ordering, no silently truncating percentile indexes, and no `unsafe`
+//! outside the two modules that declare (and justify) it. This module
+//! enforces that contract statically with a dependency-free line/token
+//! scanner: comment- and string-literal-aware stripping, per-rule scopes
+//! and allowlists, machine-readable findings.
+//!
+//! # Rules
+//!
+//! * **D1 `hash-collections`** — no `HashMap`/`HashSet` in simulator,
+//!   coordinator, kvcache, workload, config, or metrics state: their
+//!   iteration order varies across runs (`RandomState`), which breaks
+//!   bit-exact replay the moment anyone iterates. Use `BTreeMap`, `Vec`,
+//!   or the arena/`SlotVec` substrates.
+//! * **D2 `wall-clock`** — no `Instant`/`SystemTime`/`std::time` outside
+//!   the timing-only modules (bench harness, sweep/throughput wall-clock
+//!   reporting, the real-model pipeline, the thread pool): wall time must
+//!   measure the simulator, never feed it.
+//! * **D3 `float-ord`** — no `partial_cmp` on floats: a single NaN makes
+//!   `partial_cmp(..).unwrap()` panic mid-sort and `sort_by` with a
+//!   partial comparator is order-nondeterministic. Use `total_cmp` (the
+//!   rule that would have caught the PR 4 stats bug and the
+//!   `config/faults.rs` comparator this lint landed alongside fixing).
+//! * **D4 `trunc-index`** — no truncating float→`usize` casts and no
+//!   integer `* N / 100` rank arithmetic in percentile/metrics paths (the
+//!   PR 8 p95 bug class: `len * 95 / 100` under-reads small samples).
+//!   Make the rounding mode explicit (`.floor()`/`.ceil()`/`.round()`) or
+//!   use the shared `percentile_nearest_rank` helpers.
+//! * **U1 `unsafe-hygiene`** — `unsafe` (and `allow(unsafe_code)`) may
+//!   appear only in the declared modules (`util/threadpool.rs`,
+//!   `runtime/mod.rs`), and every `unsafe` there must be immediately
+//!   preceded by a `// SAFETY:` comment stating the invariant. Everywhere
+//!   else the crate root's `#![deny(unsafe_code)]` holds.
+//!
+//! The scanner is lexical by design: it sees one line at a time after
+//! comments and string/char literals are blanked, so it cannot be fooled
+//! by banned tokens inside strings or docs, but it also cannot do type
+//! inference — the rules are calibrated (scopes + allowlists) so the
+//! committed tree is clean and each rule still fires on its bug class.
+//! `rust/tests/lint.rs` runs [`check_tree`] over `rust/src` on every
+//! `cargo test`, and the `medha lint` subcommand exposes the same pass
+//! (exit status 1 on findings, `--json` for machine-readable output).
+//!
+//! Extending the contract: add the module to the matching [`RuleScope`]
+//! allowlist in [`LintConfig::repo_default`] *with a comment saying why
+//! the exemption is sound*, or add a new rule + fixture pair. Never
+//! silence a finding by weakening the stripper.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// The determinism-contract rules, in documentation order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// D1: iteration-order-nondeterministic hash containers in state.
+    HashCollections,
+    /// D2: wall-clock reads outside the timing-only modules.
+    WallClock,
+    /// D3: NaN-unsafe `partial_cmp` float ordering.
+    FloatOrd,
+    /// D4: truncating index arithmetic in percentile/metrics paths.
+    TruncIndex,
+    /// U1: `unsafe` outside declared modules or without a SAFETY comment.
+    UnsafeHygiene,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 5] = [
+        Rule::HashCollections,
+        Rule::WallClock,
+        Rule::FloatOrd,
+        Rule::TruncIndex,
+        Rule::UnsafeHygiene,
+    ];
+
+    /// Short stable identifier used in findings and CI logs.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::HashCollections => "D1",
+            Rule::WallClock => "D2",
+            Rule::FloatOrd => "D3",
+            Rule::TruncIndex => "D4",
+            Rule::UnsafeHygiene => "U1",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HashCollections => "hash-collections",
+            Rule::WallClock => "wall-clock",
+            Rule::FloatOrd => "float-ord",
+            Rule::TruncIndex => "trunc-index",
+            Rule::UnsafeHygiene => "unsafe-hygiene",
+        }
+    }
+}
+
+const MSG_HASH: &str =
+    "nondeterministic hash container in replayable state; use BTreeMap/Vec/SlotVec";
+const MSG_CLOCK: &str =
+    "wall-clock read outside the timing-only modules; real time must never reach sim state";
+const MSG_FLOAT_ORD: &str =
+    "NaN-unsafe float ordering panics or scrambles the sort on non-finite values; use total_cmp";
+const MSG_UNSAFE_MODULE: &str =
+    "`unsafe` outside the declared modules; the crate root denies unsafe_code everywhere else";
+const MSG_UNSAFE_SAFETY: &str =
+    "`unsafe` without an immediately preceding `// SAFETY:` comment stating the invariant";
+
+/// One contract violation: where, which rule, and what to do instead.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Path relative to the scanned root, forward slashes.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+    /// The offending source line, trimmed.
+    pub snippet: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{} {}] {}\n    | {}",
+            self.path,
+            self.line,
+            self.rule.id(),
+            self.rule.name(),
+            self.message,
+            self.snippet
+        )
+    }
+}
+
+impl Finding {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("path", Json::str(&self.path)),
+            ("line", Json::num(self.line as f64)),
+            ("rule", Json::str(self.rule.id())),
+            ("name", Json::str(self.rule.name())),
+            ("message", Json::str(&self.message)),
+            ("snippet", Json::str(&self.snippet)),
+        ])
+    }
+}
+
+/// Where a rule applies. Paths are root-relative with forward slashes and
+/// match by prefix, so `"sim/"` covers the whole directory and
+/// `"util/stats.rs"` one file.
+#[derive(Debug, Clone, Default)]
+pub struct RuleScope {
+    /// Prefixes the rule applies to; empty means the whole tree.
+    pub include: Vec<String>,
+    /// Prefixes exempt from the rule (the per-module allowlist).
+    pub allow: Vec<String>,
+}
+
+impl RuleScope {
+    fn tree_wide(allow: &[&str]) -> RuleScope {
+        RuleScope {
+            include: Vec::new(),
+            allow: allow.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    fn only(include: &[&str]) -> RuleScope {
+        RuleScope {
+            include: include.iter().map(|s| s.to_string()).collect(),
+            allow: Vec::new(),
+        }
+    }
+
+    pub fn applies(&self, path: &str) -> bool {
+        let included =
+            self.include.is_empty() || self.include.iter().any(|p| path.starts_with(p.as_str()));
+        included && !self.allow.iter().any(|p| path.starts_with(p.as_str()))
+    }
+}
+
+/// Per-rule scopes and allowlists. [`LintConfig::repo_default`] encodes
+/// this repository's determinism contract; tests construct narrower
+/// configs to exercise individual rules.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    pub hash_collections: RuleScope,
+    pub wall_clock: RuleScope,
+    pub float_ord: RuleScope,
+    pub trunc_index: RuleScope,
+    /// The only modules in which `unsafe` (and `allow(unsafe_code)`) may
+    /// appear — each occurrence still requires a `// SAFETY:` comment.
+    pub unsafe_modules: Vec<String>,
+}
+
+impl LintConfig {
+    /// The contract the committed tree is held to (see module docs).
+    pub fn repo_default() -> LintConfig {
+        LintConfig {
+            // Everything that carries replayable simulator state. util/ is
+            // out of scope: the substrates there (json, args, slotvec) hold
+            // host-side config or are deterministic by construction.
+            hash_collections: RuleScope::only(&[
+                "sim/",
+                "coordinator/",
+                "kvcache/",
+                "workload/",
+                "config/",
+                "metrics/",
+            ]),
+            // Wall clock is measurement-only; these modules measure.
+            wall_clock: RuleScope::tree_wide(&[
+                "util/bench.rs",      // the bench harness times real work
+                "sim/sweep.rs",       // reports sweep wall-clock, never sim time
+                "sim/throughput.rs",  // reports steps/sec wall-clock
+                "engine/pipeline.rs", // serves the real model: TTFT/TBT are real
+                "util/threadpool.rs", // test-only timing of the shutdown wait
+            ]),
+            float_ord: RuleScope::tree_wide(&[]),
+            // Percentile/metrics paths, where a truncated rank silently
+            // biases a reported tail (the PR 8 p95 class).
+            trunc_index: RuleScope::only(&["util/stats.rs", "metrics/", "sim/", "figures/"]),
+            unsafe_modules: vec![
+                "util/threadpool.rs".to_string(), // lifetime-erased scoped jobs
+                "runtime/mod.rs".to_string(),     // reserved for PJRT FFI views
+            ],
+        }
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursively, in sorted path order)
+/// against the repo-default contract. Returns all findings; an empty vec
+/// is a clean tree.
+pub fn check_tree(root: impl AsRef<Path>) -> anyhow::Result<Vec<Finding>> {
+    check_tree_with(root.as_ref(), &LintConfig::repo_default())
+}
+
+/// [`check_tree`] with an explicit configuration.
+pub fn check_tree_with(root: &Path, cfg: &LintConfig) -> anyhow::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let rel: String = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", f.display()))?;
+        out.extend(check_source(&rel, &src, cfg));
+    }
+    Ok(out)
+}
+
+/// Number of `.rs` files [`check_tree`] would scan under `root`.
+pub fn count_rs_files(root: impl AsRef<Path>) -> anyhow::Result<usize> {
+    let mut files = Vec::new();
+    collect_rs_files(root.as_ref(), &mut files)?;
+    Ok(files.len())
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("reading dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn finding(path: &str, line: usize, rule: Rule, message: impl Into<String>, snip: &str) -> Finding {
+    Finding {
+        path: path.to_string(),
+        line,
+        rule,
+        message: message.into(),
+        snippet: snip.trim().to_string(),
+    }
+}
+
+/// Lint one file's source. `path` is the root-relative forward-slash path
+/// the scopes match against; fixtures pass synthetic paths to place a
+/// string inside or outside a rule's scope.
+pub fn check_source(path: &str, source: &str, cfg: &LintConfig) -> Vec<Finding> {
+    let views = strip_lines(source);
+    let raw: Vec<&str> = source.lines().collect();
+    let mut out = Vec::new();
+
+    for (i, view) in views.iter().enumerate() {
+        let code = view.code.as_str();
+        let line = i + 1;
+        let snip = raw.get(i).copied().unwrap_or("");
+
+        if cfg.hash_collections.applies(path)
+            && (find_word(code, "HashMap") || find_word(code, "HashSet"))
+        {
+            out.push(finding(path, line, Rule::HashCollections, MSG_HASH, snip));
+        }
+
+        if cfg.wall_clock.applies(path)
+            && (find_word(code, "Instant")
+                || find_word(code, "SystemTime")
+                || code.contains("std::time"))
+        {
+            out.push(finding(path, line, Rule::WallClock, MSG_CLOCK, snip));
+        }
+
+        if cfg.float_ord.applies(path) && find_word(code, "partial_cmp") {
+            out.push(finding(path, line, Rule::FloatOrd, MSG_FLOAT_ORD, snip));
+        }
+
+        if cfg.trunc_index.applies(path) {
+            if let Some(msg) = trunc_index_violation(code) {
+                out.push(finding(path, line, Rule::TruncIndex, msg, snip));
+            }
+        }
+
+        if find_word(code, "unsafe") || code.contains("allow(unsafe_code)") {
+            let declared = cfg.unsafe_modules.iter().any(|m| path.starts_with(m.as_str()));
+            if !declared {
+                out.push(finding(path, line, Rule::UnsafeHygiene, MSG_UNSAFE_MODULE, snip));
+            } else if find_word(code, "unsafe") && !has_safety_comment(&views, i) {
+                out.push(finding(path, line, Rule::UnsafeHygiene, MSG_UNSAFE_SAFETY, snip));
+            }
+        }
+    }
+    out
+}
+
+// ---- source stripping ------------------------------------------------------
+
+/// One source line split into its code text (string/char literal contents
+/// blanked, comments removed) and its comment text (for SAFETY lookup).
+#[derive(Debug, Clone, Default)]
+struct LineView {
+    code: String,
+    comment: String,
+}
+
+/// Split source into per-line code/comment views. Handles line comments,
+/// nested block comments, string literals (plain, raw `r#".."#`, byte),
+/// char/byte-char literals with escapes, and lifetimes (`'a` is code, not
+/// an unterminated char). Literal *contents* never reach the code view,
+/// so banned tokens inside strings or docs cannot fire a rule.
+fn strip_lines(source: &str) -> Vec<LineView> {
+    let cs: Vec<char> = source.chars().collect();
+    let n = cs.len();
+    let mut out = Vec::new();
+    let mut line = LineView::default();
+    let mut i = 0;
+    // Block-comment nesting depth (Rust block comments nest); 0 = code.
+    let mut block_depth = 0usize;
+    let mut in_line_comment = false;
+
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            in_line_comment = false;
+            out.push(std::mem::take(&mut line));
+            i += 1;
+            continue;
+        }
+        if in_line_comment {
+            line.comment.push(c);
+            i += 1;
+            continue;
+        }
+        if block_depth > 0 {
+            if c == '*' && cs.get(i + 1) == Some(&'/') {
+                block_depth -= 1;
+                i += 2;
+            } else if c == '/' && cs.get(i + 1) == Some(&'*') {
+                block_depth += 1;
+                i += 2;
+            } else {
+                line.comment.push(c);
+                i += 1;
+            }
+            continue;
+        }
+        // code state
+        if c == '/' && cs.get(i + 1) == Some(&'/') {
+            in_line_comment = true;
+            i += 2;
+            continue;
+        }
+        if c == '/' && cs.get(i + 1) == Some(&'*') {
+            block_depth += 1;
+            i += 2;
+            continue;
+        }
+        if c == '"' {
+            i = skip_string(&cs, i);
+            line.code.push_str("\"\"");
+            continue;
+        }
+        // raw / byte strings: r".."  r#".."#  b".."  br#".."#
+        if (c == 'r' || c == 'b') && !prev_is_ident(&cs, i) {
+            if let Some(end) = raw_or_byte_string_end(&cs, i) {
+                i = end;
+                line.code.push_str("\"\"");
+                continue;
+            }
+        }
+        if c == '\'' {
+            // char literal vs lifetime/label
+            if cs.get(i + 1) == Some(&'\\') {
+                // escaped char: jump past the escape head, then scan to
+                // the closing quote
+                let mut j = i + 3;
+                while j < n && cs[j] != '\'' {
+                    j += 1;
+                }
+                line.code.push_str("' '");
+                i = (j + 1).min(n);
+                continue;
+            }
+            if cs.get(i + 2) == Some(&'\'') {
+                line.code.push_str("' '");
+                i += 3;
+                continue;
+            }
+            // lifetime or loop label: plain code
+            line.code.push(c);
+            i += 1;
+            continue;
+        }
+        line.code.push(c);
+        i += 1;
+    }
+    out.push(line);
+    out
+}
+
+fn prev_is_ident(cs: &[char], i: usize) -> bool {
+    i > 0 && (cs[i - 1].is_alphanumeric() || cs[i - 1] == '_' || cs[i - 1] == '"')
+}
+
+/// Past-the-end index of a plain string literal starting at `i` (a `"`).
+fn skip_string(cs: &[char], i: usize) -> usize {
+    let n = cs.len();
+    let mut j = i + 1;
+    while j < n {
+        match cs[j] {
+            '\\' => j += 2,
+            '"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+/// If a raw or byte string starts at `i` (`r`/`b`/`br` prefix), return its
+/// past-the-end index.
+fn raw_or_byte_string_end(cs: &[char], i: usize) -> Option<usize> {
+    let n = cs.len();
+    let mut j = i;
+    if cs.get(j) == Some(&'b') {
+        j += 1;
+        if cs.get(j) == Some(&'\'') {
+            // byte char b'x' — the char-literal path handles it next round
+            return None;
+        }
+    }
+    let raw = cs.get(j) == Some(&'r');
+    if raw {
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    while cs.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if cs.get(j) != Some(&'"') || (!raw && hashes > 0) {
+        return None;
+    }
+    if !raw {
+        // plain byte string b"..": same escape rules as a normal string
+        return Some(skip_string(cs, j));
+    }
+    j += 1;
+    while j < n {
+        if cs[j] == '"' {
+            let mut k = 0usize;
+            while k < hashes && cs.get(j + 1 + k) == Some(&'#') {
+                k += 1;
+            }
+            if k == hashes {
+                return Some(j + 1 + hashes);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+// ---- token matching --------------------------------------------------------
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Whole-word occurrence of `word` in `code` (identifier boundaries on
+/// both sides, so a ban on one word never matches inside another).
+fn find_word(code: &str, word: &str) -> bool {
+    let cs: Vec<char> = code.chars().collect();
+    let ws: Vec<char> = word.chars().collect();
+    if ws.is_empty() || cs.len() < ws.len() {
+        return false;
+    }
+    cs.windows(ws.len()).enumerate().any(|(start, w)| {
+        w == ws.as_slice()
+            && (start == 0 || !is_ident_char(cs[start - 1]))
+            && cs.get(start + ws.len()).is_none_or(|c| !is_ident_char(*c))
+    })
+}
+
+// ---- D4: truncating index arithmetic ---------------------------------------
+
+/// Returns a message if the code line contains truncating rank arithmetic:
+/// either a float→usize cast whose operand is float-valued but carries no
+/// explicit rounding call, or the integer `* N / 100` percentile idiom.
+fn trunc_index_violation(code: &str) -> Option<String> {
+    if let Some(operand) = float_cast_operand(code) {
+        return Some(format!(
+            "float expression `{}` cast straight to usize truncates toward zero; \
+             make rounding explicit (.floor()/.ceil()/.round()) or use the \
+             percentile helpers",
+            operand.trim()
+        ));
+    }
+    if int_percent_arithmetic(code) {
+        return Some(
+            "integer `* N / 100` rank arithmetic truncates and under-reads small \
+             samples; use the shared percentile helpers"
+                .to_string(),
+        );
+    }
+    None
+}
+
+/// Find an `as usize` cast whose operand looks float-valued and has no
+/// explicit rounding-mode call.
+fn float_cast_operand(code: &str) -> Option<String> {
+    let mut search = 0usize;
+    while let Some(rel) = code[search..].find("as usize") {
+        let idx = search + rel;
+        search = idx + "as usize".len();
+        let before_ok = code[..idx].chars().next_back().is_none_or(|c| !is_ident_char(c));
+        let after_ok = code[search..].chars().next().is_none_or(|c| !is_ident_char(c));
+        if !before_ok || !after_ok {
+            continue;
+        }
+        let operand = cast_operand(&code[..idx]);
+        let sanctioned = [".floor()", ".ceil()", ".round()", ".trunc()"]
+            .iter()
+            .any(|m| operand.ends_with(m));
+        if !sanctioned && is_float_marked(&operand) {
+            return Some(operand);
+        }
+    }
+    None
+}
+
+/// The lexical cast operand preceding an `as`: trailing paren groups and
+/// the identifier/method chains between them, walked right to left. An
+/// approximation — it sees one line — but exact for the idioms in tree.
+fn cast_operand(prefix: &str) -> String {
+    let cs: Vec<char> = prefix.trim_end().chars().collect();
+    let mut i = cs.len();
+    loop {
+        let round_start = i;
+        if i > 0 && cs[i - 1] == ')' {
+            let mut depth = 0usize;
+            while i > 0 {
+                i -= 1;
+                match cs[i] {
+                    ')' => depth += 1,
+                    '(' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+        let chain_end = i;
+        while i > 0 && (is_ident_char(cs[i - 1]) || cs[i - 1] == '.' || cs[i - 1] == ':') {
+            i -= 1;
+        }
+        // keep absorbing `(..).method` chains; otherwise we are done
+        let chain_starts_with_dot = i < chain_end && cs[i] == '.';
+        if i == round_start || !(chain_starts_with_dot && i > 0 && cs[i - 1] == ')') {
+            break;
+        }
+    }
+    cs[i..].iter().collect()
+}
+
+/// Does the operand evaluate to a float, lexically: an `as f64` cast, an
+/// `f64::` path, or a float literal (`1.5`, `1e6`; hex excluded).
+fn is_float_marked(operand: &str) -> bool {
+    if operand.contains("as f64") || operand.contains("f64::") {
+        return true;
+    }
+    if operand.contains("0x") || operand.contains("0X") {
+        return false;
+    }
+    let cs: Vec<char> = operand.chars().collect();
+    cs.windows(3).any(|w| {
+        let float_dot = w[0].is_ascii_digit() && w[1] == '.' && w[2].is_ascii_digit();
+        let float_exp = w[0].is_ascii_digit()
+            && (w[1] == 'e' || w[1] == 'E')
+            && (w[2].is_ascii_digit() || w[2] == '+' || w[2] == '-');
+        float_dot || float_exp
+    })
+}
+
+/// Token sequence `* <int> / 100` (the truncating percentile idiom).
+fn int_percent_arithmetic(code: &str) -> bool {
+    let toks = tokens(code);
+    toks.windows(4).any(|w| {
+        w[0] == "*"
+            && !w[1].is_empty()
+            && w[1].chars().all(|c| c.is_ascii_digit() || c == '_')
+            && w[1].chars().any(|c| c.is_ascii_digit())
+            && w[2] == "/"
+            && w[3] == "100"
+    })
+}
+
+/// Split a code line into identifier/number words and single-char
+/// punctuation tokens (whitespace dropped). `100.0` stays one token, so
+/// it can never be mistaken for the integer `100`.
+fn tokens(code: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let cs: Vec<char> = code.chars().collect();
+    let mut i = 0;
+    while i < cs.len() {
+        let c = cs[i];
+        if c.is_whitespace() {
+            i += 1;
+        } else if is_ident_char(c) {
+            let start = i;
+            while i < cs.len() && (is_ident_char(cs[i]) || cs[i] == '.') {
+                i += 1;
+            }
+            out.push(cs[start..i].iter().collect());
+        } else {
+            out.push(c.to_string());
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---- U1: SAFETY comment adjacency ------------------------------------------
+
+/// Is the `unsafe` on line `i` covered by a `// SAFETY:` comment — on the
+/// same line or in the contiguous comment block immediately above it?
+/// A blank line or an intervening code line breaks adjacency.
+fn has_safety_comment(views: &[LineView], i: usize) -> bool {
+    if views[i].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let v = &views[j];
+        if !v.code.trim().is_empty() {
+            return false;
+        }
+        if v.comment.contains("SAFETY:") {
+            return true;
+        }
+        if v.comment.trim().is_empty() {
+            // blank line: the comment block no longer immediately precedes
+            return false;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> LintConfig {
+        LintConfig::repo_default()
+    }
+
+    fn check(path: &str, src: &str) -> Vec<Finding> {
+        check_source(path, src, &cfg())
+    }
+
+    fn rules_of(findings: &[Finding]) -> Vec<Rule> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    // ---- stripper --------------------------------------------------------
+
+    #[test]
+    fn stripper_blanks_comments_and_strings() {
+        let src =
+            "let x = 1; // HashMap here\nlet s = \"Instant::now\";\n/* SystemTime */ let y;\n";
+        let v = strip_lines(src);
+        assert!(!v[0].code.contains("HashMap"));
+        assert!(v[0].comment.contains("HashMap"));
+        assert!(!v[1].code.contains("Instant"));
+        assert!(v[2].comment.contains("SystemTime"));
+        assert!(v[2].code.contains("let y;"));
+    }
+
+    #[test]
+    fn stripper_handles_raw_strings_chars_and_lifetimes() {
+        let src = "let r = r#\"partial_cmp \"quoted\" inside\"#;\nlet c = '\\'';\n\
+                   fn f<'a>(x: &'a u8) -> &'a u8 { x }\nlet b = b'{';\nlet bs = b\"unsafe\";\n";
+        let v = strip_lines(src);
+        assert!(!v[0].code.contains("partial_cmp"), "raw string: {}", v[0].code);
+        assert!(v[0].code.contains("let r ="));
+        assert!(v[1].code.contains("let c ="));
+        assert!(v[2].code.contains("fn f<'a>"), "lifetime survives: {}", v[2].code);
+        assert!(v[3].code.contains("let b ="));
+        assert!(!v[4].code.contains("unsafe"), "byte string: {}", v[4].code);
+    }
+
+    #[test]
+    fn stripper_handles_nested_block_comments() {
+        let src = "/* outer /* inner unsafe */ still comment */ let z = 3;\n";
+        let v = strip_lines(src);
+        assert!(!v[0].code.contains("unsafe"));
+        assert!(v[0].code.contains("let z = 3;"));
+        assert!(v[0].comment.contains("inner unsafe"));
+    }
+
+    #[test]
+    fn word_matching_respects_identifier_boundaries() {
+        assert!(find_word("use std::collections::HashMap;", "HashMap"));
+        assert!(!find_word("struct HashMapLike;", "HashMap"));
+        assert!(!find_word("#[deny(unsafe_code)]", "unsafe"));
+        assert!(find_word("unsafe { x() }", "unsafe"));
+    }
+
+    // ---- D1 --------------------------------------------------------------
+
+    #[test]
+    fn d1_fires_on_hash_containers_in_state_modules() {
+        let f = check("sim/mod.rs", "use std::collections::HashMap;\n");
+        assert_eq!(rules_of(&f), vec![Rule::HashCollections]);
+        let f = check("coordinator/kvp.rs", "let s: HashSet<u32> = HashSet::new();\n");
+        assert_eq!(rules_of(&f), vec![Rule::HashCollections]);
+    }
+
+    #[test]
+    fn d1_silent_outside_state_scope_and_in_comments() {
+        assert!(check("util/json.rs", "use std::collections::HashMap;\n").is_empty());
+        assert!(check("sim/mod.rs", "// a HashMap would break replay\n").is_empty());
+        assert!(check("sim/mod.rs", "let s = \"HashMap\";\n").is_empty());
+    }
+
+    // ---- D2 --------------------------------------------------------------
+
+    #[test]
+    fn d2_fires_on_wall_clock_in_sim_code() {
+        let f = check("sim/mod.rs", "let t0 = Instant::now();\n");
+        assert_eq!(rules_of(&f), vec![Rule::WallClock]);
+        let f = check("coordinator/scheduler.rs", "use std::time::SystemTime;\n");
+        assert_eq!(rules_of(&f), vec![Rule::WallClock]);
+    }
+
+    #[test]
+    fn d2_allowlists_the_timing_modules() {
+        assert!(check("util/bench.rs", "let t0 = Instant::now();\n").is_empty());
+        assert!(check("sim/sweep.rs", "use std::time::Instant;\n").is_empty());
+        assert!(check("sim/throughput.rs", "let t0 = Instant::now();\n").is_empty());
+        assert!(check("engine/pipeline.rs", "let now = Instant::now();\n").is_empty());
+        assert!(check("util/threadpool.rs", "use std::time::{Duration, Instant};\n").is_empty());
+    }
+
+    // ---- D3 --------------------------------------------------------------
+
+    #[test]
+    fn d3_fires_on_partial_cmp_anywhere() {
+        let src = "xs.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        for path in ["config/faults.rs", "util/stats.rs", "sim/mod.rs"] {
+            let f = check(path, src);
+            assert_eq!(rules_of(&f), vec![Rule::FloatOrd], "{path}");
+        }
+        // the exact shape that sat at config/faults.rs:76
+        let f = check(
+            "config/faults.rs",
+            ".sort_by(|a, b| a.t_s.partial_cmp(&b.t_s).expect(\"non-finite\"));\n",
+        );
+        assert_eq!(rules_of(&f), vec![Rule::FloatOrd]);
+    }
+
+    #[test]
+    fn d3_silent_on_total_cmp_and_comments() {
+        assert!(check("util/stats.rs", "xs.sort_by(|a, b| a.total_cmp(b));\n").is_empty());
+        assert!(check("util/stats.rs", "// partial_cmp would panic on NaN\n").is_empty());
+    }
+
+    // ---- D4 --------------------------------------------------------------
+
+    #[test]
+    fn d4_fires_on_truncating_float_casts() {
+        let f = check("util/stats.rs", "let i = (xs.len() as f64 * 0.95) as usize;\n");
+        assert_eq!(rules_of(&f), vec![Rule::TruncIndex]);
+        let f = check("metrics/mod.rs", "let k = (rank * 1.5) as usize;\n");
+        assert_eq!(rules_of(&f), vec![Rule::TruncIndex]);
+    }
+
+    #[test]
+    fn d4_fires_on_integer_percent_arithmetic() {
+        let f = check("util/stats.rs", "let i = xs.len() * 95 / 100;\n");
+        assert_eq!(rules_of(&f), vec![Rule::TruncIndex]);
+    }
+
+    #[test]
+    fn d4_sanctions_explicit_rounding_and_integer_casts() {
+        let ok = [
+            "let i = (p / 100.0 * n as f64).ceil() as usize;",
+            "let lo = rank.floor() as usize;",
+            "let hi = rank.ceil() as usize;",
+            "let k = xs[rank.round() as usize];",
+            "let g = group_id as usize;",
+            "let t = PipelineTimeline::new(spp.max(1) as usize, 0.0);",
+            "let c = (self.count - 1) as usize;",
+        ];
+        for src in ok {
+            assert!(check("util/stats.rs", src).is_empty(), "false positive: {src}");
+        }
+    }
+
+    #[test]
+    fn d4_scoped_to_percentile_paths() {
+        // the same truncating cast is fine in, say, the RNG (bit mixing)
+        assert!(check("util/rng.rs", "let i = (x as f64 * 0.5) as usize;\n").is_empty());
+    }
+
+    // ---- U1 --------------------------------------------------------------
+
+    #[test]
+    fn u1_fires_outside_declared_modules() {
+        let f = check("sim/mod.rs", "let p = unsafe { &*ptr };\n");
+        assert_eq!(rules_of(&f), vec![Rule::UnsafeHygiene]);
+        let f = check("kvcache/mod.rs", "#![allow(unsafe_code)]\n");
+        assert_eq!(rules_of(&f), vec![Rule::UnsafeHygiene]);
+    }
+
+    #[test]
+    fn u1_requires_safety_comment_in_declared_modules() {
+        let f = check("util/threadpool.rs", "let p = unsafe { &*ptr };\n");
+        assert_eq!(rules_of(&f), vec![Rule::UnsafeHygiene]);
+        assert!(f[0].message.contains("SAFETY"));
+        let ok = "// SAFETY: ptr is valid for the whole scope, see wait_all.\n\
+                  let p = unsafe { &*ptr };\n";
+        assert!(check("util/threadpool.rs", ok).is_empty());
+        // multi-line comment block directly above still counts
+        let ok2 = "// SAFETY: the queue requires 'static jobs, but the barrier\n\
+                   // blocks until this job completes.\nlet job = unsafe { erase(job) };\n";
+        assert!(check("runtime/mod.rs", ok2).is_empty());
+    }
+
+    #[test]
+    fn u1_blank_line_breaks_safety_adjacency() {
+        let src = "// SAFETY: stale justification\n\nlet p = unsafe { &*ptr };\n";
+        let f = check("util/threadpool.rs", src);
+        assert_eq!(rules_of(&f), vec![Rule::UnsafeHygiene]);
+    }
+
+    #[test]
+    fn u1_ignores_the_deny_attribute_and_strings() {
+        assert!(check("lib.rs", "#![deny(unsafe_code)]\n").is_empty());
+        assert!(check("sim/mod.rs", "let s = \"unsafe\";\n").is_empty());
+        assert!(check("sim/mod.rs", "// unsafe is banned here\n").is_empty());
+    }
+
+    // ---- findings plumbing -----------------------------------------------
+
+    #[test]
+    fn findings_render_and_serialize() {
+        let f = check("sim/mod.rs", "fn f() {}\nlet t = Instant::now();\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+        let disp = f[0].to_string();
+        assert!(disp.contains("sim/mod.rs:2"), "{disp}");
+        assert!(disp.contains("D2"), "{disp}");
+        let j = f[0].to_json();
+        assert_eq!(j.get("rule").and_then(|x| x.as_str()), Some("D2"));
+        assert_eq!(j.get("line").and_then(|x| x.as_u64()), Some(2));
+    }
+
+    #[test]
+    fn custom_scope_allowlists_are_honored() {
+        let mut c = cfg();
+        c.wall_clock.allow.push("sim/replay_clock.rs".to_string());
+        let f = check_source("sim/replay_clock.rs", "let t = Instant::now();\n", &c);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn rule_ids_and_names_are_stable() {
+        let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
+        assert_eq!(ids, vec!["D1", "D2", "D3", "D4", "U1"]);
+        for r in Rule::ALL {
+            assert!(!r.name().is_empty());
+        }
+    }
+}

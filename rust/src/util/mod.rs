@@ -6,6 +6,7 @@
 pub mod args;
 pub mod bench;
 pub mod json;
+pub mod lint;
 pub mod proptest;
 pub mod rng;
 pub mod slotvec;

@@ -376,7 +376,10 @@ impl Histogram {
             self.overflow += 1;
         } else {
             let n = self.buckets.len();
-            let i = ((x - self.lo) / (self.hi - self.lo) * n as f64) as usize;
+            // floor is the intended bucketing (x >= lo, so the operand is
+            // non-negative and floor == trunc); spelling it out keeps the
+            // rounding mode explicit per the determinism contract (D4).
+            let i = ((x - self.lo) / (self.hi - self.lo) * n as f64).floor() as usize;
             self.buckets[i.min(n - 1)] += 1;
         }
     }

@@ -27,6 +27,12 @@
 //! jobs themselves are: results land where the caller put their slots, in
 //! submission order, regardless of which worker ran what when.
 
+// One of the two modules declared unsafe-capable by the determinism
+// contract (`medha lint`, rule U1): the scoped-job lifetime erasure below
+// needs `transmute`, and every unsafe block here carries a SAFETY note.
+// The crate root denies unsafe_code everywhere else.
+#![allow(unsafe_code)]
+
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, AssertUnwindSafe};
