@@ -9,8 +9,10 @@
 //! throughput reports (`sim/throughput decode-stream`, `sim/million
 //! mixed`), the unified-core `sim/mixed 100K-prefill + 8 decodes`
 //! wall time (`sim_mixed_mean_s`), the serial-vs-threaded
-//! `sim/parallel_step` comparison (`sim_parallel_speedup`), and the
-//! concurrent policy × routing × load sweep (`sweep`, one row per cell).
+//! `sim/parallel_step` comparison (`sim_parallel_speedup`), the
+//! prefix-index on/off multiturn comparison (`prefix_reuse_speedup`),
+//! and the concurrent policy × routing × load sweep (`sweep`, one row
+//! per cell).
 
 use medha::config::{DeploymentConfig, SloConfig};
 use medha::coordinator::chunking::{AdaptiveChunk, ChunkPolicy};
@@ -344,6 +346,56 @@ fn main() {
         );
     }
 
+    // --- prefix reuse on the multi-turn trace ------------------------------
+    // LARS + cache-affinity routing with the hash-consed prefix index on
+    // vs off, same seeded chat sessions: the prefill-token ratio is the
+    // work the index deletes (each turn re-submits its whole history), and
+    // the session-turn p95 TTFT ratio is what the user sees. Both land in
+    // BENCH_sim.json as `prefix_reuse_speedup`.
+    let mt_cfg = if smoke {
+        medha::workload::MultiTurnConfig {
+            n_sessions: 3,
+            turns: 3,
+            shorts_rate_per_s: 2.0,
+            horizon_s: 8.0,
+            ..medha::workload::MultiTurnConfig::default()
+        }
+    } else {
+        medha::workload::MultiTurnConfig::default()
+    };
+    let run_reuse = |on: bool| -> (u64, u64, f64) {
+        let sim = medha::sim::run_multiturn_scenario(
+            medha::coordinator::SchedPolicyKind::Lars,
+            medha::coordinator::RoutingMode::Routed,
+            &mt_cfg,
+            42,
+            on,
+        );
+        let (_, mut turns) = medha::sim::multiturn_ttft_split(&sim, &mt_cfg);
+        let p95 = turns.p95();
+        (sim.metrics.prefill_tokens, sim.metrics.prefix_hit_tokens, p95)
+    };
+    let mut reuse_on = (0u64, 0u64, f64::NAN);
+    let mut reuse_off = (0u64, 0u64, f64::NAN);
+    suite.bench_once("kv/prefix_reuse on multiturn", || {
+        reuse_on = run_reuse(true);
+    });
+    suite.bench_once("kv/prefix_reuse off multiturn", || {
+        reuse_off = run_reuse(false);
+    });
+    if reuse_on.0 > 0 && reuse_off.0 > 0 {
+        println!(
+            "kv/prefix_reuse: prefill tokens {} -> {} ({:.2}x less work, {} served from \
+             cache), turn p95 TTFT {:.3}s -> {:.3}s",
+            reuse_off.0,
+            reuse_on.0,
+            reuse_off.0 as f64 / reuse_on.0 as f64,
+            reuse_on.1,
+            reuse_off.2,
+            reuse_on.2
+        );
+    }
+
     // --- substrates -------------------------------------------------------
     let manifest_like = format!(
         "{{\"entries\":{{{}}}}}",
@@ -461,6 +513,25 @@ fn main() {
                         Json::Null
                     },
                 ),
+            ]),
+        ),
+        (
+            "prefix_reuse_speedup",
+            Json::obj(vec![
+                ("workload", Json::str("multiturn (lars, routed affinity)")),
+                ("reuse_prefill_tokens", reuse_on.0.into()),
+                ("noreuse_prefill_tokens", reuse_off.0.into()),
+                ("prefix_hit_tokens", reuse_on.1.into()),
+                (
+                    "prefill_work_ratio",
+                    if reuse_on.0 > 0 {
+                        num_or_null(reuse_off.0 as f64 / reuse_on.0 as f64)
+                    } else {
+                        Json::Null
+                    },
+                ),
+                ("reuse_turn_p95_ttft_s", num_or_null(reuse_on.2)),
+                ("noreuse_turn_p95_ttft_s", num_or_null(reuse_off.2)),
             ]),
         ),
         // One row per sweep cell (policy, routing, load, seed, goodput,

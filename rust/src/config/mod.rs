@@ -119,6 +119,24 @@ pub struct SchedulerConfig {
     /// schedule. `1` (the default) keeps the single-threaded path; must be
     /// positive.
     pub threads: usize,
+    /// Prefix-aware KV reuse (`kvcache::PrefixIndex`): admission matches a
+    /// request's stream against hash-consed prefix block chains, skips the
+    /// matched prefill span, and routing scores cache affinity. `false`
+    /// (the default) keeps the strictly per-request KV behavior every
+    /// pre-reuse golden snapshot pins, bit for bit.
+    pub prefix_reuse: bool,
+    /// Block granularity of the prefix index: reuse is granted in whole
+    /// blocks of this many tokens. Must be positive.
+    pub prefix_block_tokens: u64,
+    /// Global budget on indexed prefix blocks; rc-0 chains age out LRU
+    /// (by sim-sequence) past it. `u64::MAX` = unbounded.
+    pub prefix_cache_blocks: u64,
+    /// LARS headroom auto-tuning: maintain an EWMA of observed-vs-predicted
+    /// iteration time (slowdown faults are the real divergence source in
+    /// the simulator) and scale admission-time prefill estimates by it, so
+    /// deadlines and slack absorb systematic model error. Off by default —
+    /// estimates, deadlines, and every golden snapshot stay untouched.
+    pub headroom_autotune: bool,
 }
 
 impl Default for SchedulerConfig {
@@ -133,6 +151,10 @@ impl Default for SchedulerConfig {
             policy: SchedPolicyKind::Fcfs,
             routing: RoutingMode::Blind,
             threads: 1,
+            prefix_reuse: false,
+            prefix_block_tokens: 256,
+            prefix_cache_blocks: u64::MAX,
+            headroom_autotune: false,
         }
     }
 }
@@ -182,6 +204,22 @@ impl SchedulerConfig {
                 None => d.routing,
             },
             threads: j.get("threads").and_then(|x| x.as_usize()).unwrap_or(d.threads),
+            prefix_reuse: j
+                .get("prefix_reuse")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(d.prefix_reuse),
+            prefix_block_tokens: j
+                .get("prefix_block_tokens")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.prefix_block_tokens),
+            prefix_cache_blocks: j
+                .get("prefix_cache_blocks")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.prefix_cache_blocks),
+            headroom_autotune: j
+                .get("headroom_autotune")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(d.headroom_autotune),
         })
     }
 }
@@ -262,6 +300,12 @@ impl DeploymentConfig {
         }
         if self.scheduler.threads == 0 {
             anyhow::bail!("scheduler threads must be positive (1 = serial)");
+        }
+        if self.scheduler.prefix_block_tokens == 0 {
+            anyhow::bail!("prefix_block_tokens must be positive");
+        }
+        if self.scheduler.prefix_cache_blocks == 0 {
+            anyhow::bail!("prefix_cache_blocks must be positive (use u64::MAX for unbounded)");
         }
         self.parallel
             .validate(&self.model, &self.hardware)
@@ -363,6 +407,33 @@ mod tests {
         // zero threads is a config error, not a pool-construction panic
         let mut dep = DeploymentConfig::llama3_8b_tp8();
         dep.scheduler.threads = 0;
+        assert!(dep.validate().is_err());
+    }
+
+    #[test]
+    fn scheduler_prefix_reuse_from_json() {
+        // defaults: reuse and autotune off, sane block size
+        let d = SchedulerConfig::default();
+        assert!(!d.prefix_reuse);
+        assert!(!d.headroom_autotune);
+        assert_eq!(d.prefix_block_tokens, 256);
+        assert_eq!(d.prefix_cache_blocks, u64::MAX);
+        let j = Json::parse(
+            r#"{"prefix_reuse": true, "prefix_block_tokens": 128,
+                "prefix_cache_blocks": 4096, "headroom_autotune": true}"#,
+        )
+        .unwrap();
+        let s = SchedulerConfig::from_json(&j).unwrap();
+        assert!(s.prefix_reuse);
+        assert!(s.headroom_autotune);
+        assert_eq!(s.prefix_block_tokens, 128);
+        assert_eq!(s.prefix_cache_blocks, 4096);
+        // degenerate knobs are config errors, not downstream panics
+        let mut dep = DeploymentConfig::llama3_8b_tp8();
+        dep.scheduler.prefix_block_tokens = 0;
+        assert!(dep.validate().is_err());
+        let mut dep = DeploymentConfig::llama3_8b_tp8();
+        dep.scheduler.prefix_cache_blocks = 0;
         assert!(dep.validate().is_err());
     }
 

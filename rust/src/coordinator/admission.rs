@@ -401,6 +401,7 @@ mod tests {
             prompt_len,
             max_new_tokens: 8,
             arrival_s,
+            ..RequestSpec::default()
         }
     }
 

@@ -75,6 +75,11 @@ pub struct CrashReport {
     /// so admission can re-reserve elsewhere — the ledger entry is zeroed
     /// in the same step, so the leak is impossible by construction.
     pub reserved_dropped: u64,
+    /// Shared prefix-chain KV tokens the dead group held (zeroed by the
+    /// crash). The caller must drop the group's chains from the
+    /// `PrefixIndex` in the same step and re-prefill the shared span for
+    /// every in-flight holder.
+    pub shared_dropped: u64,
     /// KV shards dropped fleet-wide: every shard on the dead group plus
     /// post-hole shards on survivors (KV after a missing range is useless).
     pub shards_lost: u64,
@@ -112,6 +117,12 @@ pub struct KvpManager {
     /// Short-request KV reservations per group (prompt + output tokens,
     /// held from admission to retirement).
     reserved: Vec<u64>,
+    /// Shared prefix-chain KV tokens per group (`kvcache::PrefixIndex`
+    /// blocks, counted **once** per block no matter how many requests hold
+    /// the chain). Requests placed on a chain's owner group reserve only
+    /// their non-shared remainder, so double counting the shared span is
+    /// impossible by construction.
+    shared: Vec<u64>,
     /// Shard maps per long request, slot-indexed.
     maps: SlotVec<LongEntry>,
     /// Onboarding events (time, request, group) — the Fig. 19 timeline.
@@ -150,6 +161,7 @@ impl KvpManager {
             capacity,
             occ: vec![0; n_groups as usize],
             reserved: vec![0; n_groups as usize],
+            shared: vec![0; n_groups as usize],
             maps: SlotVec::new(),
             onboard_log: Vec::new(),
             yield_log: Vec::new(),
@@ -203,6 +215,7 @@ impl KvpManager {
         self.state(g) == GroupState::Draining
             && self.occupancy(g) == 0
             && self.reserved_on(g) == 0
+            && self.shared_on(g) == 0
     }
 
     /// Complete a drain: the group leaves the fleet. Panics if it still
@@ -224,7 +237,11 @@ impl KvpManager {
                 GroupState::Down,
                 "join into occupied group slot {g}"
             );
-            debug_assert!(self.occ[g as usize] == 0 && self.reserved[g as usize] == 0);
+            debug_assert!(
+                self.occ[g as usize] == 0
+                    && self.reserved[g as usize] == 0
+                    && self.shared[g as usize] == 0
+            );
             self.states[g as usize] = GroupState::Joining;
             g
         } else {
@@ -232,6 +249,7 @@ impl KvpManager {
             self.states.push(GroupState::Joining);
             self.occ.push(0);
             self.reserved.push(0);
+            self.shared.push(0);
             self.n_groups = self.states.len() as u32;
             g
         }
@@ -257,6 +275,7 @@ impl KvpManager {
         assert!(self.is_live(g), "crash of group {g} which is already down");
         let mut report = CrashReport {
             reserved_dropped: std::mem::take(&mut self.reserved[g as usize]),
+            shared_dropped: std::mem::take(&mut self.shared[g as usize]),
             ..CrashReport::default()
         };
         let affected: Vec<usize> = self
@@ -357,7 +376,7 @@ impl KvpManager {
                     if e.map.shards.iter().any(|&(gg, _, _)| gg == cand) {
                         continue;
                     }
-                    if Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, cand) == 0 {
+                    if Self::ledger_kv_free(&self.occ, &self.reserved, &self.shared, self.capacity, cand) == 0 {
                         continue; // capacity-aware growth: skip full groups
                     }
                     next = Some(cand);
@@ -376,8 +395,13 @@ impl KvpManager {
                         // current last shard rather than blowing a full
                         // group's budget. Not permanent — the next append
                         // rescans the fleet.
-                        let free =
-                            Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, g);
+                        let free = Self::ledger_kv_free(
+                            &self.occ,
+                            &self.reserved,
+                            &self.shared,
+                            self.capacity,
+                            g,
+                        );
                         self.kv_overcommit_tokens += tokens.saturating_sub(free);
                         e.map.shards.last_mut().unwrap().2 += tokens;
                         self.occ[g as usize] += tokens;
@@ -386,7 +410,7 @@ impl KvpManager {
                 }
             }
             let take = tokens.min(room);
-            let free = Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, g);
+            let free = Self::ledger_kv_free(&self.occ, &self.reserved, &self.shared, self.capacity, g);
             self.kv_overcommit_tokens += take.saturating_sub(free);
             e.map.shards.last_mut().unwrap().2 += take;
             self.occ[g as usize] += take;
@@ -397,11 +421,33 @@ impl KvpManager {
 
     /// Free KV tokens on group `g` per the disaggregated ledger fields —
     /// the borrow-splitting form of [`Self::kv_free`] usable while a shard
-    /// map is mutably borrowed.
-    fn ledger_kv_free(occ: &[u64], reserved: &[u64], capacity: u64, g: GroupId) -> u64 {
+    /// map is mutably borrowed. Shared prefix-chain blocks count against
+    /// capacity exactly once, alongside long shards and reservations.
+    fn ledger_kv_free(occ: &[u64], reserved: &[u64], shared: &[u64], capacity: u64, g: GroupId) -> u64 {
         let o = occ.get(g as usize).copied().unwrap_or(0);
         let r = reserved.get(g as usize).copied().unwrap_or(0);
-        capacity.saturating_sub(o.saturating_add(r))
+        let s = shared.get(g as usize).copied().unwrap_or(0);
+        capacity.saturating_sub(o.saturating_add(r).saturating_add(s))
+    }
+
+    /// Charge `tokens` of shared prefix-chain KV to group `g` — called once
+    /// per *new block* when a finished request's chain is inserted into the
+    /// prefix index, never per holder.
+    pub fn charge_shared(&mut self, g: GroupId, tokens: u64) {
+        self.shared[g as usize] += tokens;
+    }
+
+    /// Release shared prefix-chain KV on group `g` — eviction of a
+    /// refcount-0 chain gives its blocks back to the ledger.
+    pub fn release_shared(&mut self, g: GroupId, tokens: u64) {
+        let s = &mut self.shared[g as usize];
+        debug_assert!(*s >= tokens, "release of shared tokens never charged");
+        *s = s.saturating_sub(tokens);
+    }
+
+    /// Shared prefix-chain KV tokens resident on group `g`.
+    pub fn shared_on(&self, g: GroupId) -> u64 {
+        self.shared.get(g as usize).copied().unwrap_or(0)
     }
 
     /// Reserve `tokens` of short-request KV on group `g` (admission).
@@ -420,7 +466,7 @@ impl KvpManager {
     /// shards minus short reservations. O(1) — the routing hook reads this
     /// for every group on every routed admission.
     pub fn kv_free(&self, g: GroupId) -> u64 {
-        Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, g)
+        Self::ledger_kv_free(&self.occ, &self.reserved, &self.shared, self.capacity, g)
     }
 
     pub fn shard_map(&self, s: Slot) -> Option<&ShardMap> {
@@ -543,8 +589,9 @@ impl KvpManager {
 
     /// Ledger conservation, checked by the invariant harness after every
     /// step: the incremental `occ` mirrors the sum of shard tokens per
-    /// group across every onboarded map; `Down` groups hold nothing; and
-    /// for a finite capacity, `occ + reserved + kv_free == capacity` on
+    /// group across every onboarded map; `Down` groups hold nothing (no
+    /// long shards, no reservations, no shared prefix blocks); and for a
+    /// finite capacity, `occ + reserved + shared + kv_free == capacity` on
     /// every group (free saturates at zero only when over-commit was
     /// actually absorbed, i.e. `kv_overcommit_tokens > 0`).
     pub fn ledger_is_conserved(&self) -> bool {
@@ -558,12 +605,22 @@ impl KvpManager {
             if sums[g] != self.occ[g] {
                 return false;
             }
-            if self.states[g] == GroupState::Down && (self.occ[g] != 0 || self.reserved[g] != 0) {
+            if self.states[g] == GroupState::Down
+                && (self.occ[g] != 0 || self.reserved[g] != 0 || self.shared[g] != 0)
+            {
                 return false;
             }
             if self.capacity != u64::MAX {
-                let used = self.occ[g].saturating_add(self.reserved[g]);
-                let free = Self::ledger_kv_free(&self.occ, &self.reserved, self.capacity, g as GroupId);
+                let used = self.occ[g]
+                    .saturating_add(self.reserved[g])
+                    .saturating_add(self.shared[g]);
+                let free = Self::ledger_kv_free(
+                    &self.occ,
+                    &self.reserved,
+                    &self.shared,
+                    self.capacity,
+                    g as GroupId,
+                );
                 if used <= self.capacity {
                     if used + free != self.capacity {
                         return false;
@@ -737,6 +794,45 @@ mod tests {
         // out-of-range groups read as empty, never panic
         assert_eq!(k.kv_free(9), 1_000);
         assert_eq!(k.occupancy(9), 0);
+    }
+
+    #[test]
+    fn shared_ledger_counts_blocks_once_and_crash_returns_them() {
+        let mut k = KvpManager::with_capacity(100, 2, 1_000);
+        // two requests share a 256-token prefix chain on group 0: the
+        // ledger charges the blocks once, not per holder
+        k.charge_shared(0, 256);
+        assert_eq!(k.shared_on(0), 256);
+        assert_eq!(k.kv_free(0), 744);
+        assert!(k.ledger_is_conserved());
+        // shared stacks with long shards and short reservations
+        k.onboard_request(1, 1, 0, 0.0);
+        k.append_tokens(1, 100, 0.5);
+        k.reserve(0, 144);
+        assert_eq!(k.kv_free(0), 500);
+        assert!(k.ledger_is_conserved());
+        // eviction releases exactly what was charged
+        k.release_shared(0, 256);
+        assert_eq!(k.shared_on(0), 0);
+        assert_eq!(k.kv_free(0), 756);
+        // crash zeroes the column and reports the drop exactly once
+        k.charge_shared(0, 128);
+        let rep = k.crash_group(0, 1.0);
+        assert_eq!(rep.shared_dropped, 128);
+        assert_eq!(k.shared_on(0), 0);
+        assert!(k.ledger_is_conserved());
+    }
+
+    #[test]
+    fn shared_blocks_hold_a_drain_open() {
+        let mut k = KvpManager::new(100, 2);
+        k.charge_shared(0, 64);
+        k.begin_drain(0);
+        assert!(!k.drain_idle(0), "shared chains still resident");
+        k.release_shared(0, 64);
+        assert!(k.drain_idle(0));
+        k.finish_drain(0);
+        assert!(k.ledger_is_conserved());
     }
 
     #[test]

@@ -88,6 +88,28 @@ pub struct GroupView {
     /// Free KV-token capacity on the group (`u64::MAX` when capacity
     /// accounting is off) — placements needing more than this are refused.
     pub kv_free: u64,
+    /// Prompt tokens of the request being routed whose KV already lives on
+    /// this group as a shared prefix chain (`kvcache::PrefixIndex`). Zero
+    /// everywhere when reuse is off or the request misses; nonzero on at
+    /// most one group (chains are single-group). Placement here skips that
+    /// much prefill, so routing subtracts it from both the effective load
+    /// and the capacity the placement needs — cache affinity, weighed
+    /// against load rather than overriding the urgency ordering.
+    pub prefix_hit_tokens: u64,
+}
+
+/// Cache-affinity effective load: the group's outstanding tokens minus the
+/// prompt span this request would *not* have to prefill there. With no hit
+/// this is exactly `load`, so reuse-off routing is bit-identical.
+fn affinity_load(v: &GroupView) -> u64 {
+    v.load.saturating_sub(v.prefix_hit_tokens)
+}
+
+/// Cache-affinity capacity check: the hit span is already resident on the
+/// group (accounted once in the shared ledger), so the placement only
+/// needs room for the remainder.
+fn affinity_fits(v: &GroupView, need: u64) -> bool {
+    v.kv_free >= need.saturating_sub(v.prefix_hit_tokens)
 }
 
 /// KV tokens request `r` will occupy at completion (prompt + every output
@@ -102,8 +124,8 @@ pub fn kv_need(r: &Request) -> u64 {
 pub fn route_least_loaded(groups: &[GroupView], need: u64) -> Option<GroupId> {
     groups
         .iter()
-        .filter(|v| v.kv_free >= need)
-        .min_by_key(|v| (v.load, v.group))
+        .filter(|v| affinity_fits(v, need))
+        .min_by_key(|v| (affinity_load(v), v.group))
         .map(|v| v.group)
 }
 
@@ -115,8 +137,8 @@ pub fn route_least_loaded(groups: &[GroupView], need: u64) -> Option<GroupId> {
 pub fn route_policy_aware(groups: &[GroupView], need: u64) -> Option<GroupId> {
     groups
         .iter()
-        .filter(|v| v.kv_free >= need)
-        .min_by_key(|v| (v.active_long, v.more_urgent_queued, v.load, v.group))
+        .filter(|v| affinity_fits(v, need))
+        .min_by_key(|v| (v.active_long, v.more_urgent_queued, affinity_load(v), v.group))
         .map(|v| v.group)
 }
 
@@ -443,6 +465,56 @@ impl SchedPolicyKind {
     }
 }
 
+/// EWMA correction of the perf model's iteration-time predictions against
+/// observed iteration times (`scheduler.headroom_autotune`).
+///
+/// The analytical model drifts when the fleet degrades — a slowdown fault
+/// (PR 6) stretches every iteration, so admission-time prefill estimates
+/// (and the TTFT deadlines derived from them) run systematically short.
+/// The tuner tracks the ratio `actual / predicted` per completed iteration
+/// and exposes a multiplicative `factor()` applied to *admission-time*
+/// estimates only. It never touches `Lars` or any live request: LARS
+/// requires `critical_time` to be time-invariant per request (the ready-set
+/// index contract), so corrections may only shape how *new* requests enter.
+///
+/// Off by default; entirely deterministic (pure arithmetic over simulated
+/// durations, no clocks).
+#[derive(Debug, Clone, Copy)]
+pub struct HeadroomTuner {
+    factor: f64,
+}
+
+/// EWMA smoothing weight for each new observation.
+const TUNE_ALPHA: f64 = 0.1;
+/// Per-observation ratio clamp: one absurd iteration (division by a tiny
+/// prediction, a crash-stalled step) must not poison the estimate.
+const TUNE_RATIO_MIN: f64 = 0.25;
+const TUNE_RATIO_MAX: f64 = 4.0;
+
+impl Default for HeadroomTuner {
+    fn default() -> Self {
+        HeadroomTuner { factor: 1.0 }
+    }
+}
+
+impl HeadroomTuner {
+    /// Fold one completed iteration into the correction. Non-positive or
+    /// non-finite samples are dropped — they carry no timing signal.
+    pub fn observe(&mut self, predicted_s: f64, actual_s: f64) {
+        if !(predicted_s > 0.0) || !actual_s.is_finite() || actual_s <= 0.0 {
+            return;
+        }
+        let ratio = (actual_s / predicted_s).clamp(TUNE_RATIO_MIN, TUNE_RATIO_MAX);
+        self.factor += TUNE_ALPHA * (ratio - self.factor);
+    }
+
+    /// Multiplier for admission-time work estimates: >1 when the fleet runs
+    /// slower than modeled, 1.0 until the first observation.
+    pub fn factor(&self) -> f64 {
+        self.factor
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -614,7 +686,75 @@ mod tests {
             active_long,
             more_urgent_queued: urgent,
             kv_free: u64::MAX,
+            prefix_hit_tokens: 0,
         }
+    }
+
+    #[test]
+    fn affinity_pulls_placement_toward_the_chain_owner() {
+        let r = req(100, 0.0, 0.1, 0.5);
+        let need = kv_need(&r);
+        // group 1 is busier, but holds enough of the prompt that its
+        // effective (post-reuse) load undercuts group 0
+        let mut views = vec![view(0, 100, false, 0), view(1, 160, false, 0)];
+        views[1].prefix_hit_tokens = 80;
+        assert_eq!(route_least_loaded(&views, need), Some(1));
+        assert_eq!(route_policy_aware(&views, need), Some(1));
+        // a small hit that does not close the load gap changes nothing
+        views[1].prefix_hit_tokens = 40;
+        assert_eq!(route_least_loaded(&views, need), Some(0));
+    }
+
+    #[test]
+    fn affinity_never_overrides_the_urgency_ordering() {
+        let r = req(100, 0.0, 0.1, 0.5);
+        let need = kv_need(&r);
+        // the chain owner shards the active long request: the policy-aware
+        // ranking still routes around it, affinity only breaks load ties
+        let mut views = vec![view(0, 500, false, 0), view(1, 10, true, 0)];
+        views[1].prefix_hit_tokens = 90;
+        assert_eq!(route_policy_aware(&views, need), Some(0));
+        // same for deadline-critical work already queued ahead
+        let mut views = vec![view(0, 500, false, 0), view(1, 10, false, 2)];
+        views[1].prefix_hit_tokens = 90;
+        assert_eq!(route_policy_aware(&views, need), Some(0));
+    }
+
+    #[test]
+    fn affinity_relaxes_the_capacity_check_by_the_resident_span() {
+        let r = req(100, 0.0, 0.1, 0.5);
+        let need = kv_need(&r); // 104
+        // group 0 cannot fit the full footprint, but 80 prompt tokens are
+        // already resident there: only the remainder needs free capacity
+        let mut views = vec![view(0, 10, false, 0)];
+        views[0].kv_free = need - 80;
+        assert_eq!(route_least_loaded(&views, need), None);
+        views[0].prefix_hit_tokens = 80;
+        assert_eq!(route_least_loaded(&views, need), Some(0));
+        // a hit never conjures capacity beyond the remainder
+        views[0].kv_free = need - 81;
+        assert_eq!(route_least_loaded(&views, need), None);
+    }
+
+    #[test]
+    fn headroom_tuner_tracks_slowdown_and_clamps_outliers() {
+        let mut t = HeadroomTuner::default();
+        assert_eq!(t.factor(), 1.0);
+        // fleet consistently 2x slower than modeled: factor climbs toward 2
+        for _ in 0..200 {
+            t.observe(1.0, 2.0);
+        }
+        assert!((t.factor() - 2.0).abs() < 1e-6, "factor {}", t.factor());
+        // one absurd sample moves the EWMA by at most alpha * (max - f)
+        let before = t.factor();
+        t.observe(1e-12, 1.0e6);
+        assert!(t.factor() <= before + TUNE_ALPHA * (TUNE_RATIO_MAX - before) + 1e-9);
+        // degenerate samples are ignored outright
+        let frozen = t.factor();
+        t.observe(0.0, 1.0);
+        t.observe(1.0, f64::NAN);
+        t.observe(1.0, -1.0);
+        assert_eq!(t.factor(), frozen);
     }
 
     #[test]

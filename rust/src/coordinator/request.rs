@@ -40,6 +40,11 @@ pub struct Request {
     /// Perf-model estimate of the full isolated prefill time, set at
     /// admission. Scaled by prefill progress via [`Self::remaining_work_s`].
     pub est_prefill_s: f64,
+    /// Prompt tokens served from a prefix-cache hit at admission
+    /// ([`crate::kvcache::PrefixIndex`]): their KV was never computed by
+    /// this request, `prefilled` starts here, and `est_prefill_s` covers
+    /// only the remaining span. Zero when reuse is off or missed.
+    pub reused_tokens: u64,
 }
 
 impl Request {
@@ -59,7 +64,28 @@ impl Request {
             tbt_samples: Vec::new(),
             deadline_s: f64::INFINITY,
             est_prefill_s: 0.0,
+            reused_tokens: 0,
         }
+    }
+
+    /// Grant a prefix-cache hit at admission: the first `tokens` prompt
+    /// tokens are served from the shared chain, so prefill starts past
+    /// them. Must happen before any chunk executes; at least one token is
+    /// always left to prefill (the hit is clamped by the lookup).
+    pub fn grant_reuse(&mut self, tokens: u64) {
+        assert_eq!(self.phase, Phase::Queued, "reuse granted after scheduling");
+        assert_eq!(self.prefilled, 0, "reuse granted twice");
+        assert!(tokens < self.prompt_len, "reuse must leave a token to prefill");
+        self.reused_tokens = tokens;
+        self.prefilled = tokens;
+    }
+
+    /// The shared span died with its owning group (crash): the request
+    /// must recompute it, so the span re-enters this request's own work.
+    /// Returns the tokens that become re-prefill. The caller pairs this
+    /// with `rewind_prefill(0)` and meters the span.
+    pub fn clear_reuse(&mut self) -> u64 {
+        std::mem::take(&mut self.reused_tokens)
     }
 
     /// Attach admission-time SLO state: the perf-model prefill estimate and
@@ -71,9 +97,15 @@ impl Request {
     }
 
     /// Estimated seconds of prefill work remaining: the admission estimate
-    /// scaled by how much of the prompt is still unprocessed.
+    /// scaled by how much of the *admitted* work span (the prompt minus any
+    /// prefix-cache hit) is still unprocessed. With no reuse this is the
+    /// classic `est * remaining / prompt_len`; with a hit, `est_prefill_s`
+    /// already covers only the post-hit span, so the denominator shrinks to
+    /// match. After a crash clears the reuse grant the denominator grows
+    /// back to the full prompt (the span is this request's work again).
     pub fn remaining_work_s(&self) -> f64 {
-        self.est_prefill_s * self.remaining_prefill() as f64 / self.prompt_len as f64
+        let span = (self.prompt_len - self.reused_tokens).max(1);
+        self.est_prefill_s * self.remaining_prefill() as f64 / span as f64
     }
 
     /// Seconds until the TTFT deadline at time `now` (negative once overdue).
@@ -268,6 +300,43 @@ mod tests {
         assert_eq!(r.rewind_prefill(0), 50);
         assert_eq!(r.phase, Phase::Queued);
         assert_eq!(r.kv_len(), 0);
+    }
+
+    #[test]
+    fn reuse_grant_scales_remaining_work_over_the_admitted_span() {
+        let mut r = Request::new(10, 1_000, 4, 0.0);
+        r.grant_reuse(600);
+        // est covers only the 400-token post-hit span
+        r = r.with_slo(2.0, 10.0);
+        assert_eq!(r.prefilled, 600);
+        assert_eq!(r.remaining_prefill(), 400);
+        assert!((r.remaining_work_s() - 2.0).abs() < 1e-12);
+        r.complete_chunk(200, 1.0);
+        assert!((r.remaining_work_s() - 1.0).abs() < 1e-12);
+        r.complete_chunk(200, 2.0);
+        assert_eq!(r.phase, Phase::Decoding);
+        assert_eq!(r.remaining_work_s(), 0.0);
+    }
+
+    #[test]
+    fn crash_clears_reuse_and_the_span_reenters_as_work() {
+        let mut r = Request::new(11, 1_000, 4, 0.0);
+        r.grant_reuse(600);
+        r = r.with_slo(2.0, 10.0);
+        r.complete_chunk(100, 1.0);
+        assert_eq!(r.clear_reuse(), 600);
+        assert_eq!(r.rewind_prefill(0), 700);
+        assert_eq!(r.phase, Phase::Queued);
+        // the whole prompt is this request's work again; est (unchanged)
+        // now spreads over the full prompt — a deterministic underestimate
+        assert!((r.remaining_work_s() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "reuse must leave a token")]
+    fn full_prompt_reuse_is_rejected() {
+        let mut r = Request::new(12, 100, 1, 0.0);
+        r.grant_reuse(100);
     }
 
     #[test]

@@ -19,6 +19,9 @@ pub const ALL_FIGURES: &[&str] = &[
     "sched",
     // robustness: 1-of-N KVP group crash, boundary re-prefill recovery
     "faults",
+    // prefix-aware KV reuse on the multi-turn chat trace: hit rate,
+    // prefill tokens saved, short p99 TTFT (affinity vs blind vs off)
+    "reuse",
     // concurrent policy x routing x load sweep with the Pareto frontier
     "sweep",
     // open-loop overload: goodput vs offered load under admission control
@@ -52,6 +55,7 @@ pub fn run(figure: &str) -> anyhow::Result<()> {
         "kvpthresh" => kvpthresh(),
         "sched" => sched(),
         "faults" => faults(),
+        "reuse" => reuse(),
         "sweep" => sweep(),
         "overload" => overload(),
         "all" => {
@@ -813,6 +817,55 @@ pub fn sched() -> anyhow::Result<()> {
 /// recomputed) is compared for LARS vs FCFS, and against a disaggregated
 /// restart where the whole context is re-prefilled and the KV cache
 /// re-shipped across pools (`baselines/disagg.rs`).
+/// Prefix-aware KV reuse on the multi-turn chat trace: hash-consed
+/// ref-counted block chains serve each turn's shared history from cache.
+/// Three arms on the identical trace: reuse with cache-affinity routing
+/// (placement steered to the chain's owner group), reuse under blind
+/// placement (grants only on coincidental landings), and the no-reuse
+/// control. The table reports what the tentpole claims: hit rate, prefill
+/// tokens actually executed, and the background shorts' p99 TTFT.
+pub fn reuse() -> anyhow::Result<()> {
+    use crate::coordinator::{RoutingMode, SchedPolicyKind};
+
+    println!("\n== reuse: multi-turn sessions + convoy shorts (8B, tp=8, 4 KVP groups, LARS) ==");
+    let cfg = workload::MultiTurnConfig::default();
+    println!(
+        "{} sessions x {} turns over a {} system prompt, {} background shorts/s",
+        cfg.n_sessions, cfg.turns, fmt_tokens(cfg.sys_prompt), cfg.shorts_rate_per_s
+    );
+    println!(
+        "{:<16} {:<9} {:>6} {:>10} {:>8} {:>12} {:>8} {:>11} {:>11}",
+        "arm", "routing", "done", "hit toks", "hit %", "prefill toks", "blocks", "short p99", "turn p95"
+    );
+    for (label, routing, on) in [
+        ("reuse+affinity", RoutingMode::Routed, true),
+        ("reuse+blind", RoutingMode::Blind, true),
+        ("no-reuse", RoutingMode::Routed, false),
+    ] {
+        let mut sim =
+            crate::sim::run_multiturn_scenario(SchedPolicyKind::Lars, routing, &cfg, 42, on);
+        let s = sim.metrics.summary();
+        let (mut short, mut turns) = crate::sim::multiturn_ttft_split(&sim, &cfg);
+        println!(
+            "{:<16} {:<9} {:>6} {:>10} {:>7.0}% {:>12} {:>8} {:>11} {:>11}",
+            label,
+            sim.dep.scheduler.routing.name(),
+            s.finished,
+            fmt_tokens(s.prefix_hit_tokens),
+            s.prefix_hit_rate * 100.0,
+            fmt_tokens(sim.metrics.prefill_tokens),
+            s.blocks_shared,
+            fmt_duration(short.p99()),
+            fmt_duration(turns.p95())
+        );
+    }
+    println!(
+        "(affinity must win on hit rate; reuse must not cost the shorts their p99 — \
+         the `multiturn_reuse_saves_prefill_without_hurting_shorts` test asserts it)"
+    );
+    Ok(())
+}
+
 pub fn faults() -> anyhow::Result<()> {
     use crate::baselines::DisaggModel;
     use crate::config::{FaultEvent, FaultKind, FaultPlan};

@@ -1,13 +1,32 @@
 //! Paged KV-cache management (vLLM-style block tables) with the paper's
-//! platform optimizations modeled explicitly:
+//! platform optimizations modeled explicitly, plus cross-request prefix
+//! reuse:
 //!
-//! * block allocator + per-request block tables;
+//! * block allocator + per-request block tables ([`BlockPool`] /
+//!   [`KvManager`]);
+//! * **hash-consed prefix block chains** ([`prefix::PrefixIndex`]): a
+//!   request's KV prefix is a chain of content-hashed block nodes shared
+//!   across requests — multi-turn sessions extend their previous turn's
+//!   chain, and every session shares the system-prompt span. Nodes are
+//!   ref-counted (request holders + structural child pins), rc-0 leaves
+//!   age out of an LRU keyed by a monotone sim-sequence (never wall
+//!   clock), and chains are single-group so a group crash drops exactly
+//!   the chains whose blocks died with its pool. The scheduler layers
+//!   above subtract the matched span from prefill work estimates and
+//!   route toward the chain's owner (cache affinity);
 //! * **GPU-side page tables with delta updates** (section 5): the manager
 //!   tracks how many table entries must be shipped to workers per iteration
 //!   — full tables for the naive scheme, only the new blocks for Medha's —
 //!   so the ablation bench can show the data-movement difference;
 //! * KVP shard ownership: a long request's cache spans multiple worker
 //!   groups along the sequence dimension (section 4.4, Fig. 10).
+//!
+//! Everything here is replayable state under the `medha lint` determinism
+//! contract: ordered containers only, no wall-clock reads.
+
+pub mod prefix;
+
+pub use prefix::{InsertOutcome, NodeRef, PrefixHit, PrefixIndex};
 
 use crate::util::slotvec::SlotVec;
 

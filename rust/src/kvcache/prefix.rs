@@ -1,0 +1,590 @@
+//! Hash-consed, ref-counted prefix block chains: the deterministic prefix
+//! index behind cross-request KV reuse.
+//!
+//! A request's KV prefix is modeled as a chain of fixed-size block nodes.
+//! Each node is identified by the **chain hash** of its path from the root
+//! (a stable SplitMix64-style mix over per-block content keys), so two
+//! requests whose token streams share a prefix resolve to the *same* nodes
+//! — hash-consing. Content keys come from `(stream namespace, block
+//! index)`: a multi-turn session's turns share a namespace (so turn t+1's
+//! prompt extends turn t's chain), and the leading system-prompt span uses
+//! a global namespace (so *every* session shares the system-prefix nodes).
+//!
+//! Lifecycle is explicit reference counting:
+//!
+//! * a request that is granted reuse `acquire`s the deepest matched node
+//!   for its lifetime and `release`s it exactly once at finish/abort;
+//! * interior nodes are pinned structurally by their child count;
+//! * a node with zero holders and zero children is *evictable*: it enters
+//!   an LRU keyed by a monotone sim-sequence number (no wall clock), and
+//!   [`PrefixIndex::evict_over_capacity`] trims oldest-first until the
+//!   global block budget is met, collapsing chains leaf-first;
+//! * chains are **single-group**: a chain's blocks physically live on the
+//!   worker group that computed them, so extension is only allowed by that
+//!   group (a foreign group recomputes and simply does not index). A group
+//!   crash drops every chain it owns via [`PrefixIndex::drop_group`].
+//!
+//! Determinism contract: ordered maps only (`BTreeMap` keyed by the stable
+//! chain hash / LRU sequence), no wall clock, no float comparisons — the
+//! index is replayable state and is covered by `medha lint` D1/D2.
+
+use std::collections::BTreeMap;
+
+use super::GroupId;
+
+/// Namespace for the globally shared system-prompt span. Session stream
+/// namespaces are `1..`; `0` means "does not participate in reuse".
+pub const SYS_STREAM: u64 = u64::MAX;
+
+/// Stable 64-bit mix (SplitMix64 finalizer over `a ^ f(b)`); the basis of
+/// both content keys and chain hashes. Pure integer arithmetic: identical
+/// on every platform and run.
+fn mix2(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+const CHAIN_SEED: u64 = 0x6d65_6468_615f_6b76; // "medha_kv"
+
+/// Content key for block `i` of a stream: the leading blocks that lie
+/// entirely inside the shared system prompt key off the global
+/// [`SYS_STREAM`] namespace, the rest off the session stream.
+fn block_key(ns: u64, sys_tokens: u64, block_tokens: u64, i: u64) -> u64 {
+    if (i + 1) * block_tokens <= sys_tokens {
+        mix2(SYS_STREAM, i)
+    } else {
+        mix2(ns, i)
+    }
+}
+
+/// Handle to a chain node. Carries the slot generation so a stale handle
+/// (node evicted or dropped with a crash) can never alias a recycled slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeRef {
+    idx: u32,
+    gen: u32,
+}
+
+/// Result of a prefix lookup: the deepest matched node, the token span it
+/// covers, and the group whose KV pool physically holds those blocks.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixHit {
+    pub node: NodeRef,
+    pub tokens: u64,
+    pub group: GroupId,
+}
+
+/// What an insert changed: blocks newly indexed (charged to the owning
+/// group's shared ledger by the caller).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct InsertOutcome {
+    pub new_blocks: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    parent: Option<u32>,
+    key: u64,
+    hash: u64,
+    /// Blocks on the path from the root through this node (inclusive).
+    depth: u32,
+    group: GroupId,
+    holders: u32,
+    children: u32,
+    /// LRU stamp: the sequence at which this node last became evictable.
+    last_use: u64,
+    gen: u32,
+    alive: bool,
+}
+
+/// The prefix index itself. One per fleet (chains name their owning group);
+/// all state is in ordered containers keyed by stable integers.
+#[derive(Debug, Clone)]
+pub struct PrefixIndex {
+    block_tokens: u64,
+    capacity_blocks: u64,
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    /// chain hash -> slot of the (unique) live node with that hash.
+    by_hash: BTreeMap<u64, u32>,
+    /// LRU of evictable nodes: last_use sequence -> slot. Sequences are
+    /// globally unique, so the key never collides.
+    evictable: BTreeMap<u64, u32>,
+    seq: u64,
+    total_blocks: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(block_tokens: u64, capacity_blocks: u64) -> PrefixIndex {
+        assert!(block_tokens > 0, "prefix block size must be positive");
+        PrefixIndex {
+            block_tokens,
+            capacity_blocks,
+            nodes: Vec::new(),
+            free: Vec::new(),
+            by_hash: BTreeMap::new(),
+            evictable: BTreeMap::new(),
+            seq: 0,
+            total_blocks: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> u64 {
+        self.block_tokens
+    }
+
+    /// Live indexed blocks across all chains.
+    pub fn total_blocks(&self) -> u64 {
+        self.total_blocks
+    }
+
+    /// Nodes currently eligible for eviction (rc-0 leaves).
+    pub fn evictable_len(&self) -> usize {
+        self.evictable.len()
+    }
+
+    pub fn is_live(&self, r: NodeRef) -> bool {
+        self.node(r).is_some()
+    }
+
+    fn node(&self, r: NodeRef) -> Option<&Node> {
+        let n = self.nodes.get(r.idx as usize)?;
+        (n.alive && n.gen == r.gen).then_some(n)
+    }
+
+    fn next_seq(&mut self) -> u64 {
+        self.seq += 1;
+        self.seq
+    }
+
+    /// Walk the chain for `(ns, sys_tokens)` as far as it matches and as
+    /// far as full blocks fit strictly inside `prompt_len` (at least one
+    /// token must remain to prefill, or the request could never produce
+    /// its first output token). Returns the deepest match, if any.
+    pub fn lookup(&self, ns: u64, sys_tokens: u64, prompt_len: u64) -> Option<PrefixHit> {
+        if ns == 0 {
+            return None;
+        }
+        let max_blocks = prompt_len.saturating_sub(1) / self.block_tokens;
+        let mut hash = CHAIN_SEED;
+        let mut prev: Option<u32> = None;
+        let mut best: Option<u32> = None;
+        for i in 0..max_blocks {
+            let key = block_key(ns, sys_tokens, self.block_tokens, i);
+            hash = mix2(hash, key);
+            let Some(&idx) = self.by_hash.get(&hash) else {
+                break;
+            };
+            let n = &self.nodes[idx as usize];
+            // Collision guard: the stored node must really be this path.
+            if !n.alive || n.key != key || n.parent != prev {
+                break;
+            }
+            prev = Some(idx);
+            best = Some(idx);
+        }
+        best.map(|idx| {
+            let n = &self.nodes[idx as usize];
+            PrefixHit {
+                node: NodeRef { idx, gen: n.gen },
+                tokens: n.depth as u64 * self.block_tokens,
+                group: n.group,
+            }
+        })
+    }
+
+    /// Pin a node for a request's lifetime. Must be paired with exactly
+    /// one [`release`](Self::release) (the refcount-lifecycle tests assert
+    /// no leak and no double-free).
+    pub fn acquire(&mut self, r: NodeRef) {
+        let n = self.node(r).expect("acquire on a dead prefix node");
+        let (holders, children, last_use) = (n.holders, n.children, n.last_use);
+        if holders == 0 && children == 0 {
+            self.evictable.remove(&last_use);
+        }
+        self.nodes[r.idx as usize].holders = holders + 1;
+    }
+
+    /// Unpin a node; when the last holder of a leaf leaves, the node
+    /// becomes evictable with a fresh LRU stamp.
+    pub fn release(&mut self, r: NodeRef) {
+        let n = self.node(r).expect("release on a dead prefix node");
+        assert!(n.holders > 0, "double release of a prefix node");
+        let idx = r.idx as usize;
+        self.nodes[idx].holders -= 1;
+        if self.nodes[idx].holders == 0 && self.nodes[idx].children == 0 {
+            let stamp = self.next_seq();
+            self.nodes[idx].last_use = stamp;
+            self.evictable.insert(stamp, r.idx);
+        }
+    }
+
+    /// Index the first `tokens / block_tokens` blocks of a finished
+    /// request's KV as a chain owned by `group`. Extends the existing
+    /// chain where it matches; a chain whose deepest existing node lives
+    /// on a *different* group is left untouched (its blocks are not on
+    /// `group`, and overwriting the hash entries would alias KV across
+    /// groups). Returns how many blocks were newly indexed.
+    pub fn insert(
+        &mut self,
+        ns: u64,
+        sys_tokens: u64,
+        tokens: u64,
+        group: GroupId,
+    ) -> InsertOutcome {
+        if ns == 0 {
+            return InsertOutcome::default();
+        }
+        let target = tokens / self.block_tokens;
+        let mut hash = CHAIN_SEED;
+        let mut prev: Option<u32> = None;
+        let mut depth = 0u64;
+        // Phase 1: follow the existing chain.
+        while depth < target {
+            let key = block_key(ns, sys_tokens, self.block_tokens, depth);
+            let h = mix2(hash, key);
+            match self.by_hash.get(&h) {
+                Some(&idx) => {
+                    let n = &self.nodes[idx as usize];
+                    if !n.alive || n.key != key || n.parent != prev {
+                        // Hash collision with a different path: refuse to
+                        // overwrite — deterministic no-op from here down.
+                        return InsertOutcome::default();
+                    }
+                    prev = Some(idx);
+                    hash = h;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        if depth == target {
+            return InsertOutcome::default();
+        }
+        // Single-group chains: only the owning group may extend.
+        if let Some(p) = prev {
+            if self.nodes[p as usize].group != group {
+                return InsertOutcome::default();
+            }
+        }
+        // Phase 2: append new nodes for the unindexed blocks.
+        let mut new_blocks = 0u64;
+        while depth < target {
+            let key = block_key(ns, sys_tokens, self.block_tokens, depth);
+            hash = mix2(hash, key);
+            // Unpin the parent from the LRU: it gains a child.
+            if let Some(p) = prev {
+                let pn = &self.nodes[p as usize];
+                if pn.holders == 0 && pn.children == 0 {
+                    self.evictable.remove(&pn.last_use);
+                }
+                self.nodes[p as usize].children += 1;
+            }
+            let node = Node {
+                parent: prev,
+                key,
+                hash,
+                depth: (depth + 1) as u32,
+                group,
+                holders: 0,
+                children: 0,
+                last_use: 0,
+                gen: 0,
+                alive: true,
+            };
+            let idx = match self.free.pop() {
+                Some(i) => {
+                    let gen = self.nodes[i as usize].gen;
+                    self.nodes[i as usize] = Node { gen, ..node };
+                    i
+                }
+                None => {
+                    self.nodes.push(node);
+                    (self.nodes.len() - 1) as u32
+                }
+            };
+            self.by_hash.insert(hash, idx);
+            prev = Some(idx);
+            depth += 1;
+            new_blocks += 1;
+        }
+        // The fresh leaf starts unheld: evictable with a fresh stamp.
+        let leaf = prev.expect("depth < target implies at least one new node");
+        let stamp = self.next_seq();
+        self.nodes[leaf as usize].last_use = stamp;
+        self.evictable.insert(stamp, leaf);
+        self.total_blocks += new_blocks;
+        InsertOutcome { new_blocks }
+    }
+
+    fn kill(&mut self, idx: u32) -> GroupId {
+        let n = &self.nodes[idx as usize];
+        debug_assert!(n.alive && n.holders == 0 && n.children == 0);
+        let (hash, parent, group) = (n.hash, n.parent, n.group);
+        if self.by_hash.get(&hash) == Some(&idx) {
+            self.by_hash.remove(&hash);
+        }
+        let slot = &mut self.nodes[idx as usize];
+        slot.alive = false;
+        slot.gen = slot.gen.wrapping_add(1);
+        self.free.push(idx);
+        self.total_blocks -= 1;
+        if let Some(p) = parent {
+            let pn = &mut self.nodes[p as usize];
+            pn.children -= 1;
+            if pn.alive && pn.children == 0 && pn.holders == 0 {
+                let stamp = self.next_seq();
+                self.nodes[p as usize].last_use = stamp;
+                self.evictable.insert(stamp, p);
+            }
+        }
+        group
+    }
+
+    /// Evict oldest rc-0 leaves until the index fits its block budget.
+    /// Chains collapse leaf-first (a parent becomes evictable only once
+    /// its last child is gone). Returns blocks freed per group, in group
+    /// order, for the caller to credit back to the shared KV ledger.
+    pub fn evict_over_capacity(&mut self) -> Vec<(GroupId, u64)> {
+        let mut freed: BTreeMap<GroupId, u64> = BTreeMap::new();
+        while self.total_blocks > self.capacity_blocks {
+            let Some((&stamp, &idx)) = self.evictable.iter().next() else {
+                break; // everything left is pinned
+            };
+            self.evictable.remove(&stamp);
+            let g = self.kill(idx);
+            *freed.entry(g).or_insert(0) += 1;
+        }
+        freed.into_iter().collect()
+    }
+
+    /// A group crashed: drop every chain it owns (the blocks are gone with
+    /// its KV pool). Holders of dropped nodes are necessarily requests
+    /// placed on that group — the caller rewinds them and meters the
+    /// re-prefill of the shared span. Returns the blocks dropped.
+    pub fn drop_group(&mut self, g: GroupId) -> u64 {
+        let mut dropped = 0u64;
+        for idx in 0..self.nodes.len() as u32 {
+            let n = &self.nodes[idx as usize];
+            if !n.alive || n.group != g {
+                continue;
+            }
+            let (hash, last_use, holders, children) = (n.hash, n.last_use, n.holders, n.children);
+            if holders == 0 && children == 0 {
+                self.evictable.remove(&last_use);
+            }
+            if self.by_hash.get(&hash) == Some(&idx) {
+                self.by_hash.remove(&hash);
+            }
+            let slot = &mut self.nodes[idx as usize];
+            slot.alive = false;
+            slot.gen = slot.gen.wrapping_add(1);
+            slot.holders = 0;
+            slot.children = 0;
+            self.free.push(idx);
+            dropped += 1;
+        }
+        // Parents are always in the same chain (single-group), so no
+        // cross-group child counts need repair.
+        self.total_blocks -= dropped;
+        dropped
+    }
+
+    /// Test/debug invariant: every live node's refcounts are consistent
+    /// with the tree and the LRU contains exactly the rc-0 leaves.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut child_counts: BTreeMap<u32, u32> = BTreeMap::new();
+        let mut live = 0u64;
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            live += 1;
+            if let Some(p) = n.parent {
+                let pn = &self.nodes[p as usize];
+                if !pn.alive || pn.group != n.group {
+                    return Err(format!("node {i}: dangling or cross-group parent {p}"));
+                }
+                *child_counts.entry(p).or_insert(0) += 1;
+            }
+            if self.by_hash.get(&n.hash) != Some(&(i as u32)) {
+                return Err(format!("node {i}: not indexed by its hash"));
+            }
+        }
+        if live != self.total_blocks {
+            return Err(format!("live {live} != total_blocks {}", self.total_blocks));
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !n.alive {
+                continue;
+            }
+            let actual = child_counts.get(&(i as u32)).copied().unwrap_or(0);
+            if n.children != actual {
+                return Err(format!("node {i}: children {} != actual {actual}", n.children));
+            }
+            let evictable = n.holders == 0 && n.children == 0;
+            let in_lru = self.evictable.get(&n.last_use) == Some(&(i as u32));
+            if evictable != in_lru {
+                return Err(format!("node {i}: evictable={evictable} but in_lru={in_lru}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: u64 = 256;
+
+    fn idx(cap: u64) -> PrefixIndex {
+        PrefixIndex::new(B, cap)
+    }
+
+    #[test]
+    fn lookup_misses_on_empty_and_on_ns_zero() {
+        let p = idx(1024);
+        assert!(p.lookup(1, 0, 10 * B).is_none());
+        assert!(p.lookup(0, 0, 10 * B).is_none());
+    }
+
+    #[test]
+    fn insert_then_lookup_hits_full_blocks_only() {
+        let mut p = idx(1024);
+        let out = p.insert(1, 0, 10 * B + 17, 0);
+        assert_eq!(out.new_blocks, 10);
+        assert_eq!(p.total_blocks(), 10);
+        p.check_invariants().unwrap();
+        // a same-stream longer prompt hits the whole chain
+        let hit = p.lookup(1, 0, 20 * B).unwrap();
+        assert_eq!(hit.tokens, 10 * B);
+        assert_eq!(hit.group, 0);
+        // a prompt of exactly 10 blocks must keep one token to prefill
+        let hit = p.lookup(1, 0, 10 * B).unwrap();
+        assert_eq!(hit.tokens, 9 * B);
+        // different stream: no hit
+        assert!(p.lookup(2, 0, 20 * B).is_none());
+    }
+
+    #[test]
+    fn sys_prefix_is_shared_across_streams() {
+        let mut p = idx(1024);
+        // stream 1 indexes sys (4 blocks) + 4 private blocks
+        p.insert(1, 4 * B, 8 * B, 0);
+        // stream 2 shares only the sys span
+        let hit = p.lookup(2, 4 * B, 8 * B).unwrap();
+        assert_eq!(hit.tokens, 4 * B);
+        // extending stream 2 reuses the sys nodes: only 4 new blocks
+        let out = p.insert(2, 4 * B, 8 * B, 0);
+        assert_eq!(out.new_blocks, 4);
+        assert_eq!(p.total_blocks(), 12);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn refcount_lifecycle_no_leak() {
+        let mut p = idx(1024);
+        p.insert(1, 0, 4 * B, 0);
+        let hit = p.lookup(1, 0, 100 * B).unwrap();
+        p.acquire(hit.node);
+        // held leaf is not evictable
+        assert_eq!(p.evictable_len(), 0);
+        p.check_invariants().unwrap();
+        p.release(hit.node);
+        assert_eq!(p.evictable_len(), 1);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut p = idx(1024);
+        p.insert(1, 0, 2 * B, 0);
+        let hit = p.lookup(1, 0, 100 * B).unwrap();
+        p.acquire(hit.node);
+        p.release(hit.node);
+        p.release(hit.node);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_collapses_leaf_first() {
+        let mut p = idx(u64::MAX);
+        p.insert(1, 0, 4 * B, 0); // chain A, older
+        p.insert(2, 0, 2 * B, 0); // chain B, newer
+        assert_eq!(p.total_blocks(), 6);
+        // shrink the budget: only 3 blocks may stay
+        p.capacity_blocks = 3;
+        let freed = p.evict_over_capacity();
+        assert_eq!(freed, vec![(0, 3)]);
+        assert_eq!(p.total_blocks(), 3);
+        p.check_invariants().unwrap();
+        // chain A (older leaf) collapsed leaf-first down to 1 block;
+        // chain B untouched
+        assert_eq!(p.lookup(1, 0, 100 * B).unwrap().tokens, B);
+        assert_eq!(p.lookup(2, 0, 100 * B).unwrap().tokens, 2 * B);
+    }
+
+    #[test]
+    fn pinned_chains_survive_capacity_pressure() {
+        let mut p = idx(u64::MAX);
+        p.insert(1, 0, 4 * B, 0);
+        let hit = p.lookup(1, 0, 100 * B).unwrap();
+        p.acquire(hit.node);
+        p.capacity_blocks = 0;
+        let freed: u64 = p.evict_over_capacity().iter().map(|&(_, n)| n).sum();
+        // the held leaf pins the whole chain
+        assert_eq!(freed, 0);
+        assert_eq!(p.total_blocks(), 4);
+        p.release(hit.node);
+        let freed: u64 = p.evict_over_capacity().iter().map(|&(_, n)| n).sum();
+        assert_eq!(freed, 4);
+        assert_eq!(p.total_blocks(), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn foreign_group_does_not_extend_a_chain() {
+        let mut p = idx(1024);
+        p.insert(1, 0, 4 * B, 0);
+        // group 1 recomputed the same stream deeper: must not index
+        let out = p.insert(1, 0, 8 * B, 1);
+        assert_eq!(out.new_blocks, 0);
+        assert_eq!(p.total_blocks(), 4);
+        assert_eq!(p.lookup(1, 0, 100 * B).unwrap().group, 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn drop_group_removes_chains_and_invalidates_handles() {
+        let mut p = idx(1024);
+        p.insert(1, 0, 4 * B, 0);
+        p.insert(2, 0, 3 * B, 1);
+        let hit = p.lookup(1, 0, 100 * B).unwrap();
+        p.acquire(hit.node);
+        assert_eq!(p.drop_group(0), 4);
+        assert!(!p.is_live(hit.node));
+        assert!(p.lookup(1, 0, 100 * B).is_none());
+        // group 1's chain is untouched
+        assert_eq!(p.lookup(2, 0, 100 * B).unwrap().tokens, 3 * B);
+        assert_eq!(p.total_blocks(), 3);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reinsert_after_eviction_reuses_slots_safely() {
+        let mut p = idx(u64::MAX);
+        p.insert(1, 0, 2 * B, 0);
+        let stale = p.lookup(1, 0, 100 * B).unwrap();
+        p.capacity_blocks = 0;
+        p.evict_over_capacity();
+        p.capacity_blocks = u64::MAX;
+        p.insert(2, 0, 2 * B, 0);
+        // the stale handle's slot was recycled: generation protects it
+        assert!(!p.is_live(stale.node));
+        assert_eq!(p.lookup(2, 0, 100 * B).unwrap().tokens, 2 * B);
+        p.check_invariants().unwrap();
+    }
+}

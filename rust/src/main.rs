@@ -26,10 +26,11 @@ USAGE:
   medha serve     [--artifacts DIR] [--stages N] [--chunk-cap C] [--prompt TEXT] [--requests N] [--new-tokens N]
   medha simulate  [--model llama3-8b|llama3-70b] [--tp N] [--spp N] [--kvp N]
                   [--policy fcfs|srpt|edf|lars] [--routing blind|round-robin|routed]
-                  [--kvp-capacity TOKENS] [--workload mixed|convoy|kvp-convoy]
+                  [--kvp-capacity TOKENS] [--workload mixed|convoy|kvp-convoy|multiturn]
                   [--ctx TOKENS] [--requests N] [--rate R] [--horizon S] [--seed S]
                   [--threads N]          parallel per-group stepping (bit-identical to serial)
                   [--faults PLAN.json]   deterministic group crash/join/drain/slowdown schedule
+                  [--no-reuse]           multiturn only: disable the prefix index (control arm)
   medha serve-sim [--scenario flash|diurnal|overcommit] [--policy fcfs|srpt|edf|lars]
                   [--routing blind|round-robin|routed] [--rate R] [--horizon S]
                   [--mult M] [--seed S] [--admission pass|PLAN.json] [--smoke]
@@ -53,7 +54,10 @@ USAGE:
 ";
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(&["verbose", "adaptive", "no-adaptive", "smoke", "json"], true);
+    let args = Args::from_env(
+        &["verbose", "adaptive", "no-adaptive", "smoke", "json", "no-reuse"],
+        true,
+    );
     match args.subcommand.as_deref() {
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -197,7 +201,22 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             args.u64_or("seed", 0),
         ),
         "mixed" => workload::long_plus_decodes(ctx, n, 1_000, 512),
-        other => anyhow::bail!("unknown --workload '{other}' (mixed|convoy|kvp-convoy)"),
+        "multiturn" => {
+            // Seeded multi-turn chat sessions (shared system prompt,
+            // per-turn growing history) plus background shorts — the
+            // prefix-reuse workload. The index is on unless --no-reuse
+            // selects the control arm; pair with --routing routed for
+            // cache-affinity placement.
+            let cfg = medha::workload::MultiTurnConfig {
+                horizon_s: args.f64_or("horizon", 30.0),
+                ..medha::workload::MultiTurnConfig::default()
+            };
+            dep.scheduler.prefix_reuse = !args.flag("no-reuse");
+            workload::multiturn(&cfg, args.u64_or("seed", 0))
+        }
+        other => {
+            anyhow::bail!("unknown --workload '{other}' (mixed|convoy|kvp-convoy|multiturn)")
+        }
     };
     println!(
         "simulating {} requests on {} x{} ({}, policy {}, routing {})",
@@ -265,6 +284,16 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         println!(
             "kv over-commit: {} tokens absorbed past the ledger (fleet full)",
             fmt_tokens(s.kv_overcommit_tokens)
+        );
+    }
+    if s.prefix_hit_tokens > 0 {
+        println!(
+            "prefix reuse: {} prompt tokens served from cache (hit rate {:.0}%), \
+             {} blocks shared, {} shared tokens re-prefilled after crashes",
+            fmt_tokens(s.prefix_hit_tokens),
+            s.prefix_hit_rate * 100.0,
+            s.blocks_shared,
+            fmt_tokens(s.reprefill_shared_tokens)
         );
     }
     Ok(())

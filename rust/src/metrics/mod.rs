@@ -141,6 +141,18 @@ pub struct Metrics {
     pub n_rejected_short: u64,
     /// Queue-full rejections of document arrivals.
     pub n_rejected_doc: u64,
+    /// Prompt tokens served from prefix-cache hits at admission
+    /// (`kvcache::PrefixIndex`): their prefill was skipped entirely. Zero
+    /// with reuse off (the default).
+    pub prefix_hit_tokens: u64,
+    /// Prefix blocks handed to a request from the shared index at
+    /// admission — each such block's KV is used by more than one request
+    /// over its lifetime.
+    pub blocks_shared: u64,
+    /// Reused-span tokens that had to be re-prefilled because the group
+    /// owning the shared chain crashed: the per-holder cost of sharing,
+    /// metered separately from the victim's own `reprefill_tokens`.
+    pub reprefill_shared_tokens: u64,
     /// Active-yield audit trail, in event order; dropped (like `iters`)
     /// when `keep_iter_records` is off — the counter stays exact.
     pub preemption_events: Vec<PreemptionEvent>,
@@ -194,6 +206,9 @@ impl Default for Metrics {
             n_rejected_queue_full: 0,
             n_rejected_short: 0,
             n_rejected_doc: 0,
+            prefix_hit_tokens: 0,
+            blocks_shared: 0,
+            reprefill_shared_tokens: 0,
             preemption_events: Vec::new(),
             group_busy_s: Vec::new(),
             group_prefill_tokens: Vec::new(),
@@ -443,6 +458,20 @@ impl Metrics {
             n_rejected_queue_full: self.n_rejected_queue_full,
             n_rejected_short: self.n_rejected_short,
             n_rejected_doc: self.n_rejected_doc,
+            prefix_hit_tokens: self.prefix_hit_tokens,
+            blocks_shared: self.blocks_shared,
+            reprefill_shared_tokens: self.reprefill_shared_tokens,
+            prefix_hit_rate: {
+                // Hit tokens over all prompt tokens the fleet saw: hits
+                // skipped their prefill, so the denominator is hits plus
+                // the prefill actually executed.
+                let total = self.prefix_hit_tokens + self.prefill_tokens;
+                if total > 0 {
+                    self.prefix_hit_tokens as f64 / total as f64
+                } else {
+                    f64::NAN
+                }
+            },
         }
     }
 }
@@ -510,6 +539,15 @@ pub struct MetricsSummary {
     pub n_rejected_short: u64,
     /// Queue-full rejections of document arrivals.
     pub n_rejected_doc: u64,
+    /// Prompt tokens served from prefix-cache hits (prefill skipped).
+    pub prefix_hit_tokens: u64,
+    /// Prefix blocks served to requests out of the shared index.
+    pub blocks_shared: u64,
+    /// Reused-span tokens re-prefilled after a chain-owner crash.
+    pub reprefill_shared_tokens: u64,
+    /// Fraction of prompt tokens served from cache:
+    /// `hit / (hit + executed prefill)`. NaN before any prompt token.
+    pub prefix_hit_rate: f64,
 }
 
 #[cfg(test)]
@@ -689,6 +727,30 @@ mod tests {
         // the per-class splits always sum to the totals
         assert_eq!(s.n_shed, s.n_shed_short + s.n_shed_doc);
         assert_eq!(s.n_rejected_queue_full, s.n_rejected_short + s.n_rejected_doc);
+    }
+
+    #[test]
+    fn prefix_reuse_counters_flow_into_the_summary() {
+        let mut m = Metrics::new();
+        let s = m.summary();
+        assert_eq!(s.prefix_hit_tokens, 0);
+        assert_eq!(s.blocks_shared, 0);
+        assert_eq!(s.reprefill_shared_tokens, 0);
+        assert!(s.prefix_hit_rate.is_nan(), "no prompt tokens yet");
+        m.prefix_hit_tokens = 1_024;
+        m.blocks_shared = 4;
+        m.reprefill_shared_tokens = 256;
+        m.prefill_tokens = 3_072; // executed prefill
+        let s = m.summary();
+        assert_eq!(s.prefix_hit_tokens, 1_024);
+        assert_eq!(s.blocks_shared, 4);
+        assert_eq!(s.reprefill_shared_tokens, 256);
+        // 1024 of 4096 prompt tokens came from cache
+        assert!((s.prefix_hit_rate - 0.25).abs() < 1e-12);
+        // all-hit corner: rate pegs at 1 with no executed prefill
+        let mut all_hit = Metrics::new();
+        all_hit.prefix_hit_tokens = 10;
+        assert!((all_hit.summary().prefix_hit_rate - 1.0).abs() < 1e-12);
     }
 
     #[test]

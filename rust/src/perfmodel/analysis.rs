@@ -44,6 +44,21 @@ impl PerfModel {
         sum_stage + (spp as f64 - 1.0) * last_stage
     }
 
+    /// SPP prefill time for a request resuming from a reused KV prefix:
+    /// the first `reused` tokens already sit in cache (prefix-chain hit),
+    /// so only chunks past them are computed — but each computed chunk
+    /// still attends over the full context before it. Expressed as the
+    /// difference of two Eq. 8 sums so the chunk schedule matches the one
+    /// the simulator actually executes; `reused = 0` is exactly
+    /// [`prefill_time_spp`](Self::prefill_time_spp).
+    pub fn prefill_time_spp_resume(&self, n: u64, reused: u64, chunk: u64) -> f64 {
+        if reused == 0 {
+            return self.prefill_time_spp(n, chunk);
+        }
+        let reused = reused.min(n.saturating_sub(1));
+        (self.prefill_time_spp(n, chunk) - self.prefill_time_spp(reused, chunk)).max(0.0)
+    }
+
     /// Full-3D prefill (Eq. 10): SPP dense pipelining with the chunk's
     /// attention additionally parallelized across the kvp groups (each
     /// group holds a sequence shard; chunk queries are broadcast and
@@ -223,6 +238,21 @@ mod tests {
         let a = m.prefill_time_spp(100_000, 2048);
         let b = m.prefill_time_monolithic(100_000, 2048);
         assert!((a - b).abs() / b < 1e-9);
+    }
+
+    #[test]
+    fn resume_prefill_subtracts_the_skipped_span() {
+        let m = pm(8, 4, 1);
+        let full = m.prefill_time_spp(100_000, 4096);
+        let resumed = m.prefill_time_spp_resume(100_000, 40_960, 4096);
+        // strictly cheaper than full, strictly dearer than the tail alone
+        // (the tail chunks attend over the reused context too)
+        assert!(resumed < full, "resumed {resumed} vs full {full}");
+        let tail_alone = m.prefill_time_spp(100_000 - 40_960, 4096);
+        assert!(resumed > tail_alone * 0.99, "resumed {resumed} vs tail {tail_alone}");
+        // degenerate cases: no reuse = full; reuse >= n-1 clamps, stays >= 0
+        assert_eq!(m.prefill_time_spp_resume(100_000, 0, 4096), full);
+        assert!(m.prefill_time_spp_resume(100_000, 100_000, 4096) >= 0.0);
     }
 
     #[test]

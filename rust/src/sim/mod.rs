@@ -53,6 +53,38 @@
 //! state, so an admission costs O(groups) even at million-request
 //! backlogs.
 //!
+//! # Prefix-aware KV reuse (`scheduler.prefix_reuse`)
+//!
+//! With reuse on, every short admission consults the hash-consed prefix
+//! index ([`crate::kvcache::PrefixIndex`]): a request whose
+//! `(prefix_ns, sys_tokens)` identity matches a resident chain can skip
+//! prefilling the resident span *if* it is placed on the chain's owner
+//! group. The hit threads through every layer it touches:
+//!
+//! * **Estimates & deadlines** — a granted request's `est_prefill_s`
+//!   covers only the remaining span
+//!   ([`PerfModel::prefill_time_spp_resume`](crate::perfmodel::PerfModel::prefill_time_spp_resume)),
+//!   so its TTFT deadline tightens and LARS slack stays honest.
+//! * **Routing** — the placement views carry the pending request's hit on
+//!   the owner group ([`GroupView::prefix_hit_tokens`]); the policy hooks
+//!   subtract it from effective load and relax the capacity check by the
+//!   resident span, *after* the anti-starvation urgency terms. Blind and
+//!   round-robin placements ignore the hit but still grant on a
+//!   coincidental landing.
+//! * **Ledger** — shared blocks are charged once to the KVP ledger's
+//!   `shared` column ([`KvpManager::charge_shared`]); a granted request
+//!   reserves its footprint *minus* the resident span. A crash returns
+//!   the column wholesale, drops the group's chains, and meters the
+//!   victims' shared spans as `Metrics::reprefill_shared_tokens`; a drain
+//!   drops its group's (pure-cache) chains once no request holds them.
+//! * **Lifecycle** — finish releases the pinned node and indexes the
+//!   finished KV (prompt + generated tokens) as the next turn's chain;
+//!   refcount-0 chains past the block budget evict LRU-by-sim-time.
+//!
+//! With `prefix_reuse = false` (the default) the index is never
+//! constructed and every path above degenerates to the pre-reuse code,
+//! bit for bit — pinned by the recorded golden snapshots.
+//!
 //! # Elastic fleet & deterministic failure injection
 //!
 //! The KVP fleet is a **runtime object**, not a constructor constant:
@@ -176,7 +208,12 @@
 //! * **D1** no `HashMap`/`HashSet` in sim / coordinator / kvcache /
 //!   workload / config / metrics state — hash iteration order varies per
 //!   process, so one stray iteration scrambles replay. Use `BTreeMap`,
-//!   `Vec`, or the arena/`SlotVec` substrates.
+//!   `Vec`, or the arena/`SlotVec` substrates. The prefix index is the
+//!   deliberate stress case: it is *content-hashed* (chained SplitMix64
+//!   over block position keys) yet stores those hashes in `BTreeMap`s and
+//!   orders its LRU by a simulation-time sequence stamp — the hash values
+//!   are pure functions of the workload, never of process state, so
+//!   lookup, insertion, eviction, and crash-drop order replay exactly.
 //! * **D2** no `Instant`/`SystemTime` outside the timing-only modules
 //!   (`util/bench.rs`, [`sweep`], [`throughput`], `engine/pipeline.rs`,
 //!   `util/threadpool.rs`) — wall clock measures the simulator, never
@@ -204,7 +241,7 @@ use std::collections::VecDeque;
 
 use crate::config::{DeploymentConfig, FaultEvent, FaultKind, FaultPlan, SloConfig};
 use crate::coordinator::chunking::ChunkPolicy;
-use crate::coordinator::policy::{self, GroupView, SchedPolicy};
+use crate::coordinator::policy::{self, GroupView, HeadroomTuner, SchedPolicy};
 use crate::coordinator::request::{Phase, Request};
 use crate::coordinator::scheduler::{BatchPlan, Scheduler};
 use crate::coordinator::spp::PipelineTimeline;
@@ -212,7 +249,7 @@ use crate::coordinator::{
     AdaptiveChunk, GroupState, KvpManager, ReadySet, RequestArena, Router, RoutingMode, Slot,
     StaticChunk, Topology,
 };
-use crate::kvcache::{GroupId, RequestId};
+use crate::kvcache::{GroupId, NodeRef, PrefixHit, PrefixIndex, RequestId};
 use crate::metrics::{IterRecord, Metrics};
 use crate::perfmodel::{BatchShape, DecodeWork, PerfModel, PrefillWork};
 use crate::util::slotvec::SlotVec;
@@ -368,6 +405,57 @@ pub fn kvp_convoy_dep(
     dep
 }
 
+/// Build and run the multi-turn prefix-reuse scenario shared by the
+/// `reuse` figure, the multiturn golden scenarios, and the CI smoke step:
+/// Llama-3 8B tp=8 across 4 KVP groups, static chunking, the seeded
+/// [`workload::multiturn`](crate::workload::multiturn) trace (chat
+/// sessions sharing a system prompt, per-turn growing history, convoy
+/// shorts), with the prefix index switched by `reuse`. `reuse = false` is
+/// the control arm: the same trace on the pre-reuse paths, bit for bit.
+pub fn run_multiturn_scenario(
+    kind: crate::coordinator::SchedPolicyKind,
+    routing: RoutingMode,
+    cfg: &crate::workload::MultiTurnConfig,
+    seed: u64,
+    reuse: bool,
+) -> Simulation {
+    let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, 4);
+    dep.scheduler.policy = kind;
+    dep.scheduler.routing = routing;
+    dep.scheduler.adaptive_chunking = false;
+    dep.scheduler.static_chunk = 2048;
+    dep.scheduler.prefix_reuse = reuse;
+    let mut sim = Simulation::new(
+        dep,
+        crate::workload::multiturn(cfg, seed),
+        SimOptions::default(),
+    );
+    sim.run();
+    sim
+}
+
+/// Split finished-request TTFTs of a multiturn run by class —
+/// (background shorts, session turns) — with the shared `Samples`
+/// percentile rule. Session turns always carry the system prompt, so any
+/// prompt longer than a background short is a turn.
+pub fn multiturn_ttft_split(
+    sim: &Simulation,
+    cfg: &crate::workload::MultiTurnConfig,
+) -> (crate::util::stats::Samples, crate::util::stats::Samples) {
+    let mut short = crate::util::stats::Samples::new();
+    let mut turns = crate::util::stats::Samples::new();
+    for r in sim.retired() {
+        if let Some(t) = r.ttft() {
+            if r.prompt_len > cfg.short_prompt {
+                turns.add(t);
+            } else {
+                short.add(t);
+            }
+        }
+    }
+    (short, turns)
+}
+
 /// Split finished-request TTFTs of a kvp_convoy run by class —
 /// (interactive, documents) — with the shared `Samples` percentile rule.
 pub fn kvp_convoy_ttft_split(
@@ -473,6 +561,29 @@ pub struct Simulation {
     recovery_since: SlotVec<f64>,
     /// Scratch for crash-time scheduler eviction.
     evict_buf: Vec<Slot>,
+
+    // ---- prefix-aware KV reuse (None/empty when `scheduler.prefix_reuse`
+    // ---- is off — every path below then degenerates to the pre-reuse one)
+    /// Hash-consed, ref-counted prefix block chains indexed by content
+    /// position ([`PrefixIndex`]). `None` when reuse is disabled.
+    prefix: Option<PrefixIndex>,
+    /// Per-slot reuse identity carried from the [`RequestSpec`]:
+    /// `(prefix_ns, sys_tokens)`. Present only for short requests admitted
+    /// with a nonzero namespace while reuse is on; survives crash
+    /// re-admission (the re-run's KV is re-indexable) and is dropped at
+    /// retirement.
+    reuse_meta: SlotVec<(u64, u64)>,
+    /// The chain node a granted request pinned at admission
+    /// ([`PrefixIndex::acquire`]); released exactly once — at finish, or
+    /// forgotten when the owning group crashes (`drop_group` invalidated
+    /// the handle and the ledger column was returned wholesale).
+    reuse_hold: SlotVec<NodeRef>,
+    /// LARS headroom auto-tuner (`scheduler.headroom_autotune`): an EWMA
+    /// of observed-vs-predicted iteration time that scales **admission
+    /// time** estimates only — never the priority key of an already-queued
+    /// request, preserving the ready-set's time-invariance contract.
+    /// `None` (the default) leaves every estimate byte-identical.
+    tuner: Option<HeadroomTuner>,
 }
 
 impl Simulation {
@@ -555,6 +666,21 @@ impl Simulation {
             slowdowns: Vec::new(),
             recovery_since: SlotVec::new(),
             evict_buf: Vec::new(),
+            prefix: if dep.scheduler.prefix_reuse {
+                Some(PrefixIndex::new(
+                    dep.scheduler.prefix_block_tokens,
+                    dep.scheduler.prefix_cache_blocks,
+                ))
+            } else {
+                None
+            },
+            reuse_meta: SlotVec::new(),
+            reuse_hold: SlotVec::new(),
+            tuner: if dep.scheduler.headroom_autotune {
+                Some(HeadroomTuner::default())
+            } else {
+                None
+            },
             dep,
             opts,
         }
@@ -571,7 +697,7 @@ impl Simulation {
             self.deferred
                 .select(self.sched_policy.as_ref(), &self.requests, self.now)
         {
-            if !self.place_short_routed(slot, false) {
+            if !self.place_short_routed(slot, false, None) {
                 break;
             }
             self.deferred.remove(slot);
@@ -586,7 +712,12 @@ impl Simulation {
             let spec = self.pending.pop_front().unwrap();
             // Length-aware SLO state: the perf-model prefill estimate sets
             // both the scheduling policies' work term and the TTFT deadline.
-            let est = est_prefill_s(&self.pm, spec.prompt_len);
+            // With `headroom_autotune`, the estimate is scaled by the EWMA
+            // correction learned from completed iterations.
+            let est = match &self.tuner {
+                Some(t) => est_prefill_s(&self.pm, spec.prompt_len) * t.factor(),
+                None => est_prefill_s(&self.pm, spec.prompt_len),
+            };
             let deadline = spec.arrival_s + self.dep.slo.ttft_deadline_for(est);
             let r = Request::new(spec.id, spec.prompt_len, spec.max_new_tokens, spec.arrival_s)
                 .with_slo(est, deadline);
@@ -594,7 +725,21 @@ impl Simulation {
             if spec.prompt_len > self.opts.long_threshold {
                 self.admit_long(slot, spec.id, spec.prompt_len);
             } else {
-                self.admit_short(slot, spec.prompt_len);
+                // Prefix reuse is a short-path concern: consult the index
+                // once per admission (namespace 0 opts out — background
+                // traffic), remember the request's reuse identity for the
+                // finish-time insert, and hand the hit to placement. The
+                // grant itself happens only if placement lands on the
+                // chain's owner group.
+                let hit = match &self.prefix {
+                    Some(px) => px.lookup(spec.prefix_ns, spec.sys_tokens, spec.prompt_len),
+                    None => None,
+                };
+                if self.prefix.is_some() && spec.prefix_ns != 0 {
+                    self.reuse_meta
+                        .insert(slot as usize, (spec.prefix_ns, spec.sys_tokens));
+                }
+                self.admit_short(slot, spec.prompt_len, hit);
             }
         }
     }
@@ -610,7 +755,7 @@ impl Simulation {
     /// before the next group onboards.
     fn admit_long(&mut self, slot: Slot, ext_id: RequestId, prompt_len: u64) {
         let g = if self.routing == RoutingMode::Routed {
-            self.fill_group_views();
+            self.fill_group_views(None);
             let need = policy::kv_need(self.requests.get(slot))
                 .min(self.dep.scheduler.kvp_onboard_threshold);
             let g = match self
@@ -644,7 +789,7 @@ impl Simulation {
     /// min `(load, group)` — expressed through the same routing-hook state
     /// every other placement reads.
     fn place_least_loaded(&mut self, slot: Slot, prompt_len: u64) -> GroupId {
-        self.fill_group_views();
+        self.fill_group_views(None);
         let g = policy::route_least_loaded(&self.views, 0).expect("deployment has a group");
         self.router.route_to(slot, prompt_len, g);
         g
@@ -654,13 +799,16 @@ impl Simulation {
     /// Its full KV footprint (prompt + output) is reserved on the chosen
     /// group until retirement; under `routed` with finite capacity the
     /// placement may be refused and the admission deferred.
-    fn admit_short(&mut self, slot: Slot, prompt_len: u64) {
+    fn admit_short(&mut self, slot: Slot, prompt_len: u64, hit: Option<PrefixHit>) {
         match self.routing {
             RoutingMode::Blind => {
                 // The folded blind mode: least-loaded over GroupViews,
                 // capacity-blind — bit-identical placement to the old
-                // dedicated lockstep path.
+                // dedicated lockstep path. Placement ignores the hit
+                // (blind), but a coincidental landing on the chain's owner
+                // group still grants the reuse.
                 let g = self.place_least_loaded(slot, prompt_len);
+                self.maybe_grant(slot, g, hit);
                 self.reserve_short(slot, g);
                 self.scheds[g as usize].enqueue(slot, &self.requests);
             }
@@ -671,6 +819,7 @@ impl Simulation {
                     .router
                     .route_round_robin_masked(slot, prompt_len, &self.placeable)
                     .expect("the fleet keeps at least one active group");
+                self.maybe_grant(slot, g, hit);
                 self.reserve_short(slot, g);
                 self.scheds[g as usize].enqueue(slot, &self.requests);
             }
@@ -688,9 +837,13 @@ impl Simulation {
                 let oversized = policy::kv_need(self.requests.get(slot))
                     > self.dep.scheduler.kvp_capacity_tokens;
                 if !oversized && !self.deferred.is_empty() {
+                    // The hit is dropped with the deferral: a deferred
+                    // request's deadline is already fixed in the ready-set
+                    // key, and the chain may be evicted before capacity
+                    // frees — reuse is evaluated once, at admission.
                     self.metrics.routing_refusals += 1;
                     self.defer(slot);
-                } else if !self.place_short_routed(slot, true) {
+                } else if !self.place_short_routed(slot, true, hit) {
                     self.defer(slot);
                 }
             }
@@ -706,8 +859,52 @@ impl Simulation {
     }
 
     fn reserve_short(&mut self, slot: Slot, g: GroupId) {
-        let need = policy::kv_need(self.requests.get(slot));
+        let need = Self::reserve_need(self.requests.get(slot));
         self.kvp_mgr.reserve(g, need);
+    }
+
+    /// KV tokens a short request must reserve on its group: the full
+    /// footprint minus any span already resident as a shared prefix chain
+    /// (counted once, in the ledger's `shared` column). Identical to
+    /// [`policy::kv_need`] when no reuse was granted. The finish-time
+    /// unreserve recomputes this from the same field, so the pair always
+    /// balances (a crash clears `reused_tokens` *before* re-admission
+    /// re-reserves, keeping both sides on the full footprint).
+    fn reserve_need(r: &Request) -> u64 {
+        policy::kv_need(r).saturating_sub(r.reused_tokens)
+    }
+
+    /// Grant a prefix-cache hit if placement landed on the chain's owner
+    /// group: pin the node, skip the resident span in the request's
+    /// prefill accounting, and re-derive the admission SLO state from the
+    /// *remaining* span (`prefill_time_spp_resume`) — tighter deadline,
+    /// honest LARS slack. A miss (different group, or the chain was
+    /// evicted since lookup) leaves the request byte-identical to the
+    /// no-reuse path.
+    fn maybe_grant(&mut self, slot: Slot, g: GroupId, hit: Option<PrefixHit>) {
+        let (Some(px), Some(h)) = (self.prefix.as_mut(), hit) else {
+            return;
+        };
+        if h.group != g || h.tokens == 0 || !px.is_live(h.node) {
+            return;
+        }
+        px.acquire(h.node);
+        self.reuse_hold.insert(slot as usize, h.node);
+        let (prompt_len, arrival_s) = {
+            let r = self.requests.get(slot);
+            (r.prompt_len, r.arrival_s)
+        };
+        let base = self.pm.prefill_time_spp_resume(prompt_len, h.tokens, EST_CHUNK);
+        let est = match &self.tuner {
+            Some(t) => base * t.factor(),
+            None => base,
+        };
+        let deadline = arrival_s + self.dep.slo.ttft_deadline_for(est);
+        let r = self.requests.get_mut(slot);
+        r.grant_reuse(h.tokens);
+        r.est_prefill_s = est;
+        r.deadline_s = deadline;
+        self.metrics.prefix_hit_tokens += h.tokens;
     }
 
     /// Re-route with the capacity filter waived, for refusals that waiting
@@ -730,8 +927,8 @@ impl Simulation {
     /// only, so a deferred request counts once in `routing_refusals`.
     /// Requests larger than a whole group's capacity can never satisfy the
     /// check and are placed with it waived (counted, never deferred).
-    fn place_short_routed(&mut self, slot: Slot, count_refusal: bool) -> bool {
-        self.fill_group_views();
+    fn place_short_routed(&mut self, slot: Slot, count_refusal: bool, hit: Option<PrefixHit>) -> bool {
+        self.fill_group_views(hit);
         let need = policy::kv_need(self.requests.get(slot));
         let choice = self
             .sched_policy
@@ -752,6 +949,11 @@ impl Simulation {
         };
         let prompt_len = self.requests.get(slot).prompt_len;
         self.router.route_to(slot, prompt_len, g);
+        // Grant before reserving: a granted request's reservation shrinks
+        // by the resident span (the routing hook's `affinity_fits` relaxed
+        // the capacity check by exactly this much on the owner group).
+        self.maybe_grant(slot, g, hit);
+        let need = Self::reserve_need(self.requests.get(slot));
         self.kvp_mgr.reserve(g, need);
         self.scheds[g as usize].enqueue(slot, &self.requests);
         true
@@ -765,7 +967,13 @@ impl Simulation {
     /// and the KVP manager's capacity ledger), replacing the
     /// O(total queued) backlog rescan the pre-heap router performed on
     /// each admission.
-    fn fill_group_views(&mut self) {
+    /// `hit` threads a pending admission's prefix-cache lookup into the
+    /// views: the owner group's view carries the resident span
+    /// (`prefix_hit_tokens`), every other view carries zero, so the
+    /// policy's affinity terms see exactly one candidate chain. `None`
+    /// (every non-reuse placement) leaves all views at zero — the
+    /// pre-reuse snapshot, bit for bit.
+    fn fill_group_views(&mut self, hit: Option<PrefixHit>) {
         self.views.clear();
         let preemptive = self.sched_policy.preemptive();
         for g in 0..self.scheds.len() {
@@ -793,6 +1001,10 @@ impl Simulation {
                     .unwrap_or(false),
                 more_urgent_queued: urgent,
                 kv_free: self.kvp_mgr.kv_free(gid),
+                prefix_hit_tokens: match hit {
+                    Some(h) if h.group == gid => h.tokens,
+                    _ => 0,
+                },
             });
         }
     }
@@ -812,6 +1024,11 @@ impl Simulation {
     /// Retire a finished request: recycle its arena slot, optionally
     /// keeping the record for post-run inspection.
     fn retire(&mut self, slot: Slot) {
+        self.reuse_meta.remove(slot as usize);
+        debug_assert!(
+            !self.reuse_hold.contains(slot as usize),
+            "retired request still pins a prefix node"
+        );
         let r = self.requests.remove(slot);
         if self.opts.retain_finished {
             self.retired.push(r);
@@ -1183,6 +1400,15 @@ impl Simulation {
         if !out.ran {
             return;
         }
+        // Headroom auto-tuning: feed the EWMA the model-predicted duration
+        // (the observed one with transient slowdowns divided back out)
+        // against the observed one. Gated on the config flag — `tuner` is
+        // `None` by default and this is a no-op.
+        if let Some(t) = self.tuner.as_mut() {
+            let dur = out.exit - self.now;
+            let f = slow_factor_of(&self.slowdowns, self.now, g);
+            t.observe(dur / f, dur);
+        }
         self.metrics
             .record_group_iter(g, out.exit - self.now, out.prefill_toks, out.n_decodes as u64);
         if out.member {
@@ -1245,16 +1471,48 @@ impl Simulation {
             let (prompt_len, kv_need) = {
                 let r = self.requests.get(slot);
                 self.metrics.record_finished_request(r);
-                (r.prompt_len, policy::kv_need(r))
+                (r.prompt_len, Self::reserve_need(r))
             };
             // Release the KV reservation held since admission (group read
-            // before the router forgets the placement).
+            // before the router forgets the placement), then settle the
+            // prefix index: unpin the chain node this request held and
+            // index its finished KV for the next turn.
             if let Some(g) = self.router.group_of(slot) {
                 self.kvp_mgr.unreserve(g, kv_need);
+                self.finish_prefix(slot, g);
             }
             self.router.release(slot, prompt_len);
             self.note_recovery(slot, t);
             self.retire(slot);
+        }
+    }
+
+    /// Finish-time prefix-index settlement for a short request on group
+    /// `g`: release the node pinned at admission (exactly-once pairing
+    /// with [`Self::maybe_grant`]), then — if the request carries a reuse
+    /// namespace — index its full KV (prompt + generated tokens, the next
+    /// turn's shared history) as a chain owned by `g`. Newly indexed
+    /// blocks are charged to the ledger's `shared` column once, and the
+    /// LRU evicts refcount-0 chains past the block budget, crediting the
+    /// ledger back per group.
+    fn finish_prefix(&mut self, slot: Slot, g: GroupId) {
+        let Some(px) = self.prefix.as_mut() else {
+            return;
+        };
+        if let Some(node) = self.reuse_hold.remove(slot as usize) {
+            px.release(node);
+        }
+        let Some(&(ns, sys_tokens)) = self.reuse_meta.get(slot as usize) else {
+            return;
+        };
+        let kv = self.requests.get(slot).kv_len();
+        let out = px.insert(ns, sys_tokens, kv, g);
+        if out.new_blocks > 0 {
+            self.metrics.blocks_shared += out.new_blocks;
+            self.kvp_mgr.charge_shared(g, out.new_blocks * px.block_tokens());
+        }
+        for (eg, blocks) in px.evict_over_capacity() {
+            self.kvp_mgr.release_shared(eg, blocks * px.block_tokens());
         }
     }
 
@@ -1447,13 +1705,26 @@ impl Simulation {
         }
         // Opportunistic drain completion: a `Draining` group with nothing
         // resident (no KV, no reservations, no queued work) leaves the
-        // fleet.
+        // fleet. Resident prefix chains are pure cache: once the group has
+        // no queued work and no occupancy (hence no chain holders — pins
+        // are owner-local and released at finish), they are dropped and
+        // their ledger charge credited back so the drain can complete.
         for g in 0..self.scheds.len() {
             let gid = g as GroupId;
-            if self.kvp_mgr.state(gid) == GroupState::Draining
-                && self.kvp_mgr.drain_idle(gid)
-                && !self.scheds[g].has_work()
+            if self.kvp_mgr.state(gid) != GroupState::Draining || self.scheds[g].has_work() {
+                continue;
+            }
+            if self.kvp_mgr.occupancy(gid) == 0
+                && self.kvp_mgr.reserved_on(gid) == 0
+                && self.kvp_mgr.shared_on(gid) > 0
             {
+                if let Some(px) = self.prefix.as_mut() {
+                    let blocks = px.drop_group(gid);
+                    let bt = px.block_tokens();
+                    self.kvp_mgr.release_shared(gid, blocks * bt);
+                }
+            }
+            if self.kvp_mgr.drain_idle(gid) {
                 self.kvp_mgr.finish_drain(gid);
                 self.refresh_membership();
             }
@@ -1513,6 +1784,14 @@ impl Simulation {
         self.metrics.group_crashes += 1;
         self.metrics.shards_lost += rep.shards_lost;
         self.refresh_membership();
+        // The group's prefix chains died with its KV pool: drop them from
+        // the index (handles invalidated — holders are exactly the shorts
+        // evicted below, whose pins are forgotten, not released). The
+        // ledger's `shared` column was already returned wholesale by
+        // `crash_group` (`rep.shared_dropped`).
+        if let Some(px) = self.prefix.as_mut() {
+            px.drop_group(g);
+        }
 
         // Long victims: rewind to the shard boundary the surviving prefix
         // ends at; chunk completion is what grew the shards, so that is a
@@ -1555,12 +1834,31 @@ impl Simulation {
         self.scheds[g as usize].evict_all(&mut evicted);
         for i in 0..evicted.len() {
             let slot = evicted[i];
-            let lost = self.requests.get_mut(slot).rewind_prefill(0);
-            self.metrics.reprefill_tokens += lost;
+            // A granted victim's shared span died with the group's chains:
+            // the span re-enters the request's own prefill work
+            // (`clear_reuse` before the rewind, so the full footprint
+            // re-reserves) and is metered separately — it was never
+            // prefilled by this request, so it is new work forced by the
+            // crash, not re-prefill of its own progress.
+            let shared = {
+                let r = self.requests.get_mut(slot);
+                let shared = r.clear_reuse();
+                let lost = r.rewind_prefill(0);
+                self.metrics.reprefill_tokens += lost.saturating_sub(shared);
+                self.metrics.reprefill_shared_tokens += shared;
+                shared
+            };
+            if shared > 0 {
+                self.reuse_hold.remove(slot as usize);
+            }
             self.recovery_since.insert(slot as usize, self.now);
             let prompt_len = self.requests.get(slot).prompt_len;
             self.router.release(slot, prompt_len);
-            self.admit_short(slot, prompt_len);
+            // Re-admit without a reuse grant: the only chain this request
+            // could hit died with its group (chains are single-group and
+            // grants owner-local), and a fresh deadline would loosen the
+            // admission-time SLO the victim already carries.
+            self.admit_short(slot, prompt_len, None);
         }
         evicted.clear();
         self.evict_buf = evicted;
@@ -1628,6 +1926,21 @@ impl Simulation {
 
     /// See [`KvpManager::ledger_is_conserved`] — the capacity-conservation
     /// invariant, exposed for the test harness.
+    /// Post-run inspection: the prefix index's internal invariants
+    /// (refcount/tree/LRU consistency — [`PrefixIndex::check_invariants`]).
+    /// Vacuously `true` when reuse is disabled.
+    pub fn prefix_index_is_consistent(&self) -> bool {
+        self.prefix
+            .as_ref()
+            .map_or(true, |px| px.check_invariants().is_ok())
+    }
+
+    /// Post-run inspection: shared-chain tokens currently charged to group
+    /// `g` in the KVP ledger's `shared` column.
+    pub fn kvp_shared_on(&self, g: GroupId) -> u64 {
+        self.kvp_mgr.shared_on(g)
+    }
+
     pub fn kvp_ledger_is_conserved(&self) -> bool {
         self.kvp_mgr.ledger_is_conserved()
     }
@@ -1956,13 +2269,14 @@ mod tests {
                 id: 0,
                 prompt_len: 100,
                 max_new_tokens: 4,
-                arrival_s: 0.0,
+                ..RequestSpec::default()
             },
             RequestSpec {
                 id: 1,
                 prompt_len: 100,
                 max_new_tokens: 4,
                 arrival_s: 1_000.0,
+                ..RequestSpec::default()
             },
         ];
         let mut sim = Simulation::new(dep(8, 1, 1), w, SimOptions::default());
@@ -1982,6 +2296,7 @@ mod tests {
                 prompt_len: 64,
                 max_new_tokens: 2,
                 arrival_s: i as f64 * 10.0, // far apart: never concurrent
+                ..RequestSpec::default()
             })
             .collect();
         let opts = SimOptions {
@@ -2041,7 +2356,7 @@ mod tests {
             id: 0,
             prompt_len: 200_000,
             max_new_tokens: 4,
-            arrival_s: 0.0,
+            ..RequestSpec::default()
         }];
         for i in 1..6u64 {
             w.push(RequestSpec {
@@ -2049,6 +2364,7 @@ mod tests {
                 prompt_len: 512,
                 max_new_tokens: 8,
                 arrival_s: i as f64 * 0.5,
+                ..RequestSpec::default()
             });
         }
         let opts = SimOptions {
@@ -2112,8 +2428,8 @@ mod tests {
         d.scheduler.static_chunk = 2048;
         d.scheduler.kvp_onboard_threshold = 64_000;
         let w = vec![
-            RequestSpec { id: 0, prompt_len: 200_000, max_new_tokens: 4, arrival_s: 0.0 },
-            RequestSpec { id: 1, prompt_len: 32_000, max_new_tokens: 4, arrival_s: 1.0 },
+            RequestSpec { id: 0, prompt_len: 200_000, max_new_tokens: 4, ..RequestSpec::default() },
+            RequestSpec { id: 1, prompt_len: 32_000, max_new_tokens: 4, arrival_s: 1.0, ..RequestSpec::default() },
         ];
         let mut sim = Simulation::new(d, w, SimOptions::default());
         sim.run();
@@ -2154,8 +2470,8 @@ mod tests {
     #[test]
     fn admission_assigns_length_aware_deadlines() {
         let w = vec![
-            RequestSpec { id: 0, prompt_len: 100, max_new_tokens: 2, arrival_s: 0.0 },
-            RequestSpec { id: 1, prompt_len: 1_000_000, max_new_tokens: 2, arrival_s: 0.0 },
+            RequestSpec { id: 0, prompt_len: 100, max_new_tokens: 2, ..RequestSpec::default() },
+            RequestSpec { id: 1, prompt_len: 1_000_000, max_new_tokens: 2, ..RequestSpec::default() },
         ];
         let mut sim = Simulation::new(dep(8, 1, 1), w, SimOptions::default());
         sim.run();
@@ -2241,6 +2557,7 @@ mod tests {
                 prompt_len: 2_000,
                 max_new_tokens: 2,
                 arrival_s: 2.0 + i as f64 * 0.5,
+                ..RequestSpec::default()
             })
             .collect();
         let opts = SimOptions {
@@ -2268,6 +2585,7 @@ mod tests {
                 prompt_len: 2_000,
                 max_new_tokens: 2,
                 arrival_s: i as f64 * 0.5,
+                ..RequestSpec::default()
             })
             .collect();
         let opts = SimOptions {
@@ -2324,6 +2642,7 @@ mod tests {
                 prompt_len: 2_000,
                 max_new_tokens: 2,
                 arrival_s: i as f64 * 0.4,
+                ..RequestSpec::default()
             })
             .collect();
         let opts = SimOptions {
@@ -2393,8 +2712,8 @@ mod tests {
         // two requests 1000s apart: the run must not spin through the gap
         // (bounded iteration count implies the event jump worked)
         let w = vec![
-            RequestSpec { id: 0, prompt_len: 100, max_new_tokens: 2, arrival_s: 0.0 },
-            RequestSpec { id: 1, prompt_len: 100, max_new_tokens: 2, arrival_s: 1_000.0 },
+            RequestSpec { id: 0, prompt_len: 100, max_new_tokens: 2, ..RequestSpec::default() },
+            RequestSpec { id: 1, prompt_len: 100, max_new_tokens: 2, arrival_s: 1_000.0, ..RequestSpec::default() },
         ];
         let mut sim = Simulation::new(dep(8, 1, 1), w, SimOptions::default());
         let end = sim.run();
@@ -2403,6 +2722,236 @@ mod tests {
             sim.metrics.n_iters < 100,
             "spun {} iterations across an idle gap",
             sim.metrics.n_iters
+        );
+    }
+
+    // ---- prefix-aware KV reuse ------------------------------------------
+
+    /// Two turns of one session on a blind 1-group fleet: the second turn
+    /// is granted the first turn's full-block chain, its estimate covers
+    /// only the remaining span, and the chain blocks land in the ledger's
+    /// shared column exactly once.
+    #[test]
+    fn reuse_grant_skips_resident_span_and_tightens_estimate() {
+        let turn = |id: u64, prompt: u64, at: f64| RequestSpec {
+            id,
+            prompt_len: prompt,
+            max_new_tokens: 4,
+            arrival_s: at,
+            prefix_ns: 1,
+            sys_tokens: 0,
+        };
+        let w = vec![turn(0, 4_096, 0.0), turn(1, 4_352, 50.0)];
+        let mut d = dep(8, 1, 1);
+        d.scheduler.prefix_reuse = true;
+        let mut sim = Simulation::new(d, w, SimOptions::default());
+        sim.run();
+        assert_eq!(sim.metrics.finished_requests, 2);
+        let r0 = sim.request(0).unwrap();
+        let r1 = sim.request(1).unwrap();
+        assert_eq!(r0.reused_tokens, 0, "nothing resident at the first turn");
+        // Turn 0 retires 4096 + 4 KV tokens: 16 full 256-token blocks.
+        assert_eq!(r1.reused_tokens, 4_096, "turn 1 reuses the indexed chain");
+        assert!(
+            r1.est_prefill_s < r0.est_prefill_s,
+            "hit-aware estimate must cover only the remaining span: {} vs {}",
+            r1.est_prefill_s,
+            r0.est_prefill_s
+        );
+        assert_eq!(sim.metrics.prefix_hit_tokens, 4_096);
+        assert!(sim.metrics.blocks_shared >= 16);
+        assert!(sim.prefix_index_is_consistent());
+        assert!(sim.kvp_ledger_is_conserved());
+        assert!(sim.kvp_shared_on(0) > 0, "retired chains stay indexed");
+    }
+
+    /// Crash of the chain-owning group mid-flight: the granted victim's
+    /// shared span re-enters its own prefill work, is metered once as
+    /// `reprefill_shared_tokens`, and the dead group's shared-ledger
+    /// column returns to zero. The re-admitted request completes on the
+    /// survivor without a second grant.
+    #[test]
+    fn reuse_crash_reprefills_shared_span_exactly_once() {
+        let turn = |id: u64, prompt: u64, at: f64| RequestSpec {
+            id,
+            prompt_len: prompt,
+            max_new_tokens: 4,
+            arrival_s: at,
+            prefix_ns: 1,
+            sys_tokens: 0,
+        };
+        // Turn 0 on the (tied, lowest-id) group 0 indexes 32 blocks =
+        // 8192 tokens; turn 1 arrives long after it finished, ties to
+        // group 0 again, and is granted the full chain. The crash lands
+        // at the first decision instant after turn 1 starts executing.
+        let w = vec![turn(0, 8_192, 0.0), turn(1, 15_000, 100.0)];
+        let mut d = dep(8, 1, 2);
+        d.scheduler.prefix_reuse = true;
+        let opts = SimOptions {
+            faults: one_fault(100.001, Some(0), FaultKind::Crash),
+            ..SimOptions::default()
+        };
+        let mut sim = Simulation::new(d, w, opts);
+        sim.run();
+        assert_eq!(sim.metrics.group_crashes, 1);
+        assert_eq!(sim.metrics.finished_requests, 2, "no request left behind");
+        assert_eq!(
+            sim.metrics.prefix_hit_tokens, 8_192,
+            "one grant, before the crash; the re-admission finds no chain"
+        );
+        assert_eq!(
+            sim.metrics.reprefill_shared_tokens, 8_192,
+            "the shared span is metered exactly once"
+        );
+        assert_eq!(sim.kvp_shared_on(0), 0, "crashed group's column returned");
+        assert!(sim.kvp_shared_on(1) > 0, "survivor indexed the re-run's KV");
+        assert!(sim.prefix_index_is_consistent());
+        assert!(sim.kvp_ledger_is_conserved());
+    }
+
+    /// A draining group's resident chains are pure cache: once its work
+    /// completes they are dropped, the shared column returns to zero, and
+    /// the drain finishes.
+    #[test]
+    fn drain_completes_after_dropping_cached_chains() {
+        let w = vec![
+            RequestSpec {
+                id: 0,
+                prompt_len: 4_096,
+                max_new_tokens: 4,
+                prefix_ns: 1,
+                ..RequestSpec::default()
+            },
+            // A later namespace-free short keeps the run alive past the
+            // drain instant (and lands on the surviving group).
+            RequestSpec { id: 1, prompt_len: 512, max_new_tokens: 4, arrival_s: 5.0, ..RequestSpec::default() },
+        ];
+        let mut d = dep(8, 1, 2);
+        d.scheduler.prefix_reuse = true;
+        let opts = SimOptions {
+            faults: one_fault(2.0, Some(0), FaultKind::Drain),
+            ..SimOptions::default()
+        };
+        let mut sim = Simulation::new(d, w, opts);
+        sim.run();
+        assert_eq!(sim.metrics.finished_requests, 2);
+        assert_eq!(sim.n_active_groups(), 1, "the drained group left the fleet");
+        assert_eq!(sim.kvp_shared_on(0), 0, "cached chains dropped at drain");
+        assert!(sim.prefix_index_is_consistent());
+        assert!(sim.kvp_ledger_is_conserved());
+    }
+
+    /// The reuse acceptance criteria on the shared multiturn scenario
+    /// (LARS + routed affinity): nonzero hit rate, strictly fewer prefill
+    /// tokens executed than the no-reuse control, and background-short
+    /// p99 TTFT no worse.
+    #[test]
+    fn multiturn_reuse_saves_prefill_without_hurting_shorts() {
+        use crate::coordinator::SchedPolicyKind;
+        let cfg = workload::MultiTurnConfig::default();
+        let mut on =
+            run_multiturn_scenario(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg, 7, true);
+        let mut off =
+            run_multiturn_scenario(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg, 7, false);
+        assert_eq!(
+            on.metrics.finished_requests, off.metrics.finished_requests,
+            "reuse must not change which requests finish"
+        );
+        assert!(on.metrics.prefix_hit_tokens > 0, "sessions must hit the index");
+        assert_eq!(off.metrics.prefix_hit_tokens, 0);
+        let s_on = on.metrics.summary();
+        let s_off = off.metrics.summary();
+        assert!(s_on.prefix_hit_rate > 0.0);
+        assert!(
+            on.metrics.prefill_tokens < off.metrics.prefill_tokens,
+            "granted spans must not be prefilled again: {} vs {}",
+            on.metrics.prefill_tokens,
+            off.metrics.prefill_tokens
+        );
+        let (mut short_on, _) = multiturn_ttft_split(&on, &cfg);
+        let (mut short_off, _) = multiturn_ttft_split(&off, &cfg);
+        assert!(short_on.count() > 0 && short_off.count() > 0);
+        assert!(
+            short_on.p99() <= short_off.p99() + 1e-6,
+            "reuse+affinity must not degrade short p99 TTFT: {} vs {}",
+            short_on.p99(),
+            short_off.p99()
+        );
+        assert!(on.prefix_index_is_consistent());
+        assert!(on.kvp_ledger_is_conserved());
+    }
+
+    /// With reuse disabled, the multiturn trace's namespace fields are
+    /// inert: the run is bit-identical to the same trace with them
+    /// stripped (the differential guard behind "reuse off ≡ pre-reuse").
+    #[test]
+    fn multiturn_reuse_disabled_ignores_namespace_fields() {
+        use crate::coordinator::SchedPolicyKind;
+        let cfg = workload::MultiTurnConfig::default();
+        let run = |strip: bool| {
+            let mut w = workload::multiturn(&cfg, 11);
+            if strip {
+                for spec in &mut w {
+                    spec.prefix_ns = 0;
+                    spec.sys_tokens = 0;
+                }
+            }
+            let mut d = dep(8, 1, 4);
+            d.scheduler.policy = SchedPolicyKind::Lars;
+            d.scheduler.routing = RoutingMode::Routed;
+            d.scheduler.adaptive_chunking = false;
+            d.scheduler.static_chunk = 2048;
+            let mut sim = Simulation::new(d, w, SimOptions::default());
+            let end = sim.run();
+            let s = sim.metrics.summary();
+            (
+                end.to_bits(),
+                s.finished,
+                sim.metrics.n_iters,
+                sim.metrics.prefill_tokens,
+                s.ttft_p95.to_bits(),
+                s.goodput_rps.to_bits(),
+            )
+        };
+        assert_eq!(run(false), run(true), "namespace fields leaked into a reuse-off run");
+    }
+
+    /// `scheduler.headroom_autotune`: under a persistent slowdown the EWMA
+    /// correction scales later admissions' estimates up; with the flag off
+    /// (or no slowdown) estimates are untouched.
+    #[test]
+    fn headroom_autotune_scales_admission_estimates() {
+        let w = || {
+            vec![
+                RequestSpec { id: 0, prompt_len: 8_000, max_new_tokens: 8, ..RequestSpec::default() },
+                RequestSpec { id: 1, prompt_len: 8_000, max_new_tokens: 8, arrival_s: 200.0, ..RequestSpec::default() },
+            ]
+        };
+        let slow = || {
+            one_fault(0.0, Some(0), FaultKind::Slowdown { factor: 4.0, until_s: 1e12 })
+        };
+        let run = |autotune: bool| {
+            let mut d = dep(8, 1, 1);
+            d.scheduler.headroom_autotune = autotune;
+            let opts = SimOptions { faults: slow(), ..SimOptions::default() };
+            let mut sim = Simulation::new(d, w(), opts);
+            sim.run();
+            let e0 = sim.request(0).unwrap().est_prefill_s;
+            let e1 = sim.request(1).unwrap().est_prefill_s;
+            (e0, e1)
+        };
+        let (base0, base1) = run(false);
+        assert_eq!(base0, base1, "identical requests, identical estimates");
+        let (tuned0, tuned1) = run(true);
+        assert_eq!(
+            tuned0, base0,
+            "the first admission precedes any observation: factor is 1.0"
+        );
+        assert!(
+            tuned1 > base1 * 1.5,
+            "the EWMA must have absorbed the 4x slowdown: {} vs {}",
+            tuned1,
+            base1
         );
     }
 }

@@ -170,6 +170,7 @@ impl ServeSim {
                         prompt_len: 1,
                         max_new_tokens: 0,
                         arrival_s: t,
+                        ..RequestSpec::default()
                     });
                     true
                 }

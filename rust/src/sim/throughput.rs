@@ -73,7 +73,7 @@ pub fn decode_stream_workload(n_decoders: usize, tokens_each: u64) -> Vec<Reques
             id: i as u64,
             prompt_len: 256,
             max_new_tokens: tokens_each,
-            arrival_s: 0.0,
+            ..RequestSpec::default()
         })
         .collect()
 }
@@ -106,6 +106,7 @@ pub fn mixed_million_workload(n_requests: usize, n_long: usize, seed: u64) -> Ve
             prompt_len: 100_000,
             max_new_tokens: 8,
             arrival_s: (i as f64 + 0.5) / n_long.max(1) as f64 * horizon_s,
+            ..RequestSpec::default()
         });
     }
     w

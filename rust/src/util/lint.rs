@@ -227,8 +227,16 @@ impl LintConfig {
             ]),
             float_ord: RuleScope::tree_wide(&[]),
             // Percentile/metrics paths, where a truncated rank silently
-            // biases a reported tail (the PR 8 p95 class).
-            trunc_index: RuleScope::only(&["util/stats.rs", "metrics/", "sim/", "figures/"]),
+            // biases a reported tail (the PR 8 p95 class) — plus the
+            // prefix index, where a truncated block count would silently
+            // shrink or inflate a reuse grant.
+            trunc_index: RuleScope::only(&[
+                "util/stats.rs",
+                "metrics/",
+                "sim/",
+                "figures/",
+                "kvcache/",
+            ]),
             unsafe_modules: vec![
                 "util/threadpool.rs".to_string(), // lifetime-erased scoped jobs
                 "runtime/mod.rs".to_string(),     // reserved for PJRT FFI views
@@ -856,6 +864,9 @@ mod tests {
     fn d4_scoped_to_percentile_paths() {
         // the same truncating cast is fine in, say, the RNG (bit mixing)
         assert!(check("util/rng.rs", "let i = (x as f64 * 0.5) as usize;\n").is_empty());
+        // ...but not in the prefix index, where it would shrink a grant
+        let f = check("kvcache/prefix.rs", "let b = (tokens as f64 / bt) as usize;\n");
+        assert_eq!(rules_of(&f), vec![Rule::TruncIndex]);
     }
 
     // ---- U1 --------------------------------------------------------------

@@ -16,6 +16,27 @@ pub struct RequestSpec {
     pub prompt_len: u64,
     pub max_new_tokens: u64,
     pub arrival_s: f64,
+    /// Prefix namespace for KV reuse: requests sharing a namespace share a
+    /// growing-history prefix (a multi-turn session). `0` — the default and
+    /// every one-shot workload — opts out of prefix reuse entirely.
+    pub prefix_ns: u64,
+    /// Leading tokens of the prompt that are a fleet-wide shared system
+    /// prompt: their KV blocks hash into a namespace shared across *all*
+    /// sessions, so even a first turn can hit.
+    pub sys_tokens: u64,
+}
+
+impl Default for RequestSpec {
+    fn default() -> Self {
+        RequestSpec {
+            id: 0,
+            prompt_len: 1,
+            max_new_tokens: 1,
+            arrival_s: 0.0,
+            prefix_ns: 0,
+            sys_tokens: 0,
+        }
+    }
 }
 
 /// One long request arriving at t=0 (Figs. 14a, 15: pure prefill scaling).
@@ -24,7 +45,7 @@ pub fn single_long(ctx: u64, new_tokens: u64) -> Vec<RequestSpec> {
         id: 0,
         prompt_len: ctx,
         max_new_tokens: new_tokens,
-        arrival_s: 0.0,
+        ..RequestSpec::default()
     }]
 }
 
@@ -44,14 +65,14 @@ pub fn long_plus_decodes(
             id: i as u64 + 1,
             prompt_len: decode_ctx.max(1),
             max_new_tokens: new_tokens,
-            arrival_s: 0.0,
+            ..RequestSpec::default()
         });
     }
     v.push(RequestSpec {
         id: 0,
         prompt_len: ctx,
         max_new_tokens: 32,
-        arrival_s: 0.0,
+        ..RequestSpec::default()
     });
     v
 }
@@ -64,7 +85,7 @@ pub fn decode_population(n: usize, ctx: u64, new_tokens: u64) -> Vec<RequestSpec
             id: i as u64,
             prompt_len: ctx,
             max_new_tokens: new_tokens,
-            arrival_s: 0.0,
+            ..RequestSpec::default()
         })
         .collect()
 }
@@ -162,6 +183,7 @@ pub fn convoy(cfg: &ConvoyConfig, seed: u64) -> Vec<RequestSpec> {
                 cfg.short_new_tokens
             },
             arrival_s: t,
+            ..RequestSpec::default()
         });
         id += 1;
     }
@@ -236,6 +258,7 @@ pub fn kvp_convoy(cfg: &KvpConvoyConfig, seed: u64) -> Vec<RequestSpec> {
             prompt_len: cfg.short_prompt,
             max_new_tokens: cfg.short_new_tokens,
             arrival_s: t,
+            ..RequestSpec::default()
         });
         id += 1;
     }
@@ -246,6 +269,7 @@ pub fn kvp_convoy(cfg: &KvpConvoyConfig, seed: u64) -> Vec<RequestSpec> {
             prompt_len: cfg.doc_prompt,
             max_new_tokens: cfg.doc_new_tokens,
             arrival_s: cfg.doc_start_s + k as f64 * cfg.doc_stagger_s,
+            ..RequestSpec::default()
         });
     }
     out.sort_by(|a, b| a.arrival_s.total_cmp(&b.arrival_s).then(a.id.cmp(&b.id)));
@@ -350,9 +374,134 @@ pub fn poisson_mixed(
             prompt_len: lengths.sample(&mut rng).max(1),
             max_new_tokens: new_tokens,
             arrival_s: t,
+            ..RequestSpec::default()
         });
         id += 1;
     }
+    out
+}
+
+/// Multi-turn chat sessions over a shared system prompt — the workload
+/// where prefix-aware KV reuse pays (section 3's conversational traffic):
+/// every turn re-submits the whole conversation, so its prompt is the
+/// previous turn's prompt plus the previous reply plus the new user
+/// message. Without reuse each turn re-prefills a history that is already
+/// resident; with the prefix index only the new suffix costs prefill, and
+/// cache-affinity routing keeps a session's turns landing on the group
+/// that holds its chain.
+#[derive(Debug, Clone)]
+pub struct MultiTurnConfig {
+    /// Concurrent chat sessions.
+    pub n_sessions: usize,
+    /// Shared system-prompt tokens leading every session's every prompt
+    /// (hashes into a fleet-wide namespace: sessions share these blocks).
+    pub sys_prompt: u64,
+    /// Turns per session.
+    pub turns: usize,
+    /// New user tokens appended per turn.
+    pub user_tokens: u64,
+    /// Reply budget per turn; the reply joins the history the next turn
+    /// re-submits.
+    pub reply_tokens: u64,
+    /// Mean think time between a turn's arrival and the next (exponential —
+    /// Poisson turn gaps).
+    pub mean_gap_s: f64,
+    /// Session `k` opens at `k * session_stagger_s`.
+    pub session_stagger_s: f64,
+    /// Background one-shot interactive shorts mixed in (0 = none) — the
+    /// convoy-style traffic whose tail latency reuse must not hurt.
+    pub shorts_rate_per_s: f64,
+    pub short_prompt: u64,
+    pub short_new_tokens: u64,
+    /// Background shorts stop arriving after this horizon.
+    pub horizon_s: f64,
+}
+
+impl Default for MultiTurnConfig {
+    fn default() -> Self {
+        MultiTurnConfig {
+            n_sessions: 6,
+            sys_prompt: 1_024,
+            turns: 5,
+            user_tokens: 256,
+            reply_tokens: 128,
+            mean_gap_s: 2.0,
+            session_stagger_s: 1.0,
+            shorts_rate_per_s: 4.0,
+            short_prompt: 512,
+            short_new_tokens: 32,
+            horizon_s: 30.0,
+        }
+    }
+}
+
+impl MultiTurnConfig {
+    /// Prompt length of turn `t` (0-based): system prompt, every prior
+    /// user message and reply, plus the new user message.
+    pub fn prompt_at(&self, t: usize) -> u64 {
+        self.sys_prompt + (t as u64 + 1) * self.user_tokens + t as u64 * self.reply_tokens
+    }
+}
+
+/// Deterministic multi-turn trace: session turns with Poisson think-time
+/// gaps, interleaved with background one-shot shorts, sorted by arrival
+/// with ids reassigned densely in arrival order. Session `k`'s turns carry
+/// `prefix_ns = k + 1` (namespace 0 opts out of reuse) and
+/// `sys_tokens = sys_prompt`; background shorts carry namespace 0.
+pub fn multiturn(cfg: &MultiTurnConfig, seed: u64) -> Vec<RequestSpec> {
+    let mut out = Vec::new();
+    for k in 0..cfg.n_sessions {
+        // per-session RNG stream: turn gaps are independent of how many
+        // background shorts the horizon admits
+        let mut rng = Rng::new(seed ^ (0x5e55_1011u64).wrapping_mul(k as u64 + 1));
+        let mut t = k as f64 * cfg.session_stagger_s;
+        for turn in 0..cfg.turns {
+            out.push(RequestSpec {
+                id: 0, // reassigned densely after the sort
+                prompt_len: cfg.prompt_at(turn),
+                max_new_tokens: cfg.reply_tokens.max(1),
+                arrival_s: t,
+                prefix_ns: k as u64 + 1,
+                sys_tokens: cfg.sys_prompt,
+            });
+            t += rng.exponential(1.0 / cfg.mean_gap_s.max(1e-9));
+        }
+    }
+    let n_turns = out.len();
+    if cfg.shorts_rate_per_s > 0.0 {
+        let mut rng = Rng::new(seed ^ 0x0b5e_55ed);
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(cfg.shorts_rate_per_s);
+            if t >= cfg.horizon_s {
+                break;
+            }
+            out.push(RequestSpec {
+                id: 0,
+                prompt_len: cfg.short_prompt,
+                max_new_tokens: cfg.short_new_tokens,
+                arrival_s: t,
+                ..RequestSpec::default()
+            });
+        }
+    }
+    // Stable tie-break before ids exist: namespace (shorts' 0 first), then
+    // prompt length — turn prompts within a session are strictly growing,
+    // so the key is total on any same-instant pair the generator can emit.
+    out.sort_by(|a, b| {
+        a.arrival_s
+            .total_cmp(&b.arrival_s)
+            .then(a.prefix_ns.cmp(&b.prefix_ns))
+            .then(a.prompt_len.cmp(&b.prompt_len))
+    });
+    for (i, r) in out.iter_mut().enumerate() {
+        r.id = i as u64;
+    }
+    debug_assert_eq!(
+        out.iter().filter(|r| r.prefix_ns > 0).count(),
+        n_turns,
+        "session turns survived the sort"
+    );
     out
 }
 
@@ -468,6 +617,51 @@ mod tests {
             .all(|w| w[1].t_s >= w[0].t_s));
         // A different seed draws a different storm.
         assert_ne!(plan, fault_storm(&cfg, 43));
+    }
+
+    #[test]
+    fn multiturn_sessions_grow_and_shorts_stay_namespace_free() {
+        let cfg = MultiTurnConfig::default();
+        let w = multiturn(&cfg, 42);
+        // dense ids in arrival order
+        assert!(w.windows(2).all(|p| p[1].arrival_s >= p[0].arrival_s));
+        assert_eq!(
+            w.iter().map(|r| r.id).collect::<Vec<_>>(),
+            (0..w.len() as u64).collect::<Vec<_>>()
+        );
+        // every session contributes exactly `turns` requests with strictly
+        // growing prompts and non-decreasing arrivals
+        for k in 0..cfg.n_sessions as u64 {
+            let turns: Vec<&RequestSpec> =
+                w.iter().filter(|r| r.prefix_ns == k + 1).collect();
+            assert_eq!(turns.len(), cfg.turns);
+            assert!(turns.windows(2).all(|p| p[1].prompt_len > p[0].prompt_len));
+            assert!(turns.windows(2).all(|p| p[1].arrival_s > p[0].arrival_s));
+            assert!(turns.iter().all(|r| r.sys_tokens == cfg.sys_prompt));
+            assert_eq!(turns[0].prompt_len, cfg.sys_prompt + cfg.user_tokens);
+        }
+        // background shorts opt out of reuse
+        let shorts: Vec<&RequestSpec> = w.iter().filter(|r| r.prefix_ns == 0).collect();
+        assert!(shorts.len() > 50, "shorts={}", shorts.len());
+        assert!(shorts
+            .iter()
+            .all(|r| r.sys_tokens == 0 && r.prompt_len == cfg.short_prompt));
+        // deterministic per (config, seed)
+        assert_eq!(w, multiturn(&cfg, 42));
+        assert_ne!(w, multiturn(&cfg, 43));
+    }
+
+    #[test]
+    fn multiturn_without_shorts_is_pure_sessions() {
+        let cfg = MultiTurnConfig {
+            shorts_rate_per_s: 0.0,
+            n_sessions: 2,
+            turns: 3,
+            ..MultiTurnConfig::default()
+        };
+        let w = multiturn(&cfg, 7);
+        assert_eq!(w.len(), 6);
+        assert!(w.iter().all(|r| r.prefix_ns > 0));
     }
 
     #[test]

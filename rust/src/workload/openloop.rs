@@ -198,6 +198,8 @@ fn inhomogeneous(
             } else {
                 cfg.short_new_tokens
             },
+            prefix_ns: 0,
+            sys_tokens: 0,
             arrival_s: t,
         });
         id += 1;

@@ -10,8 +10,12 @@
 //! crash/recover lifecycles: a crash returns occupancy AND reservations
 //! to the ledger by construction, truncated shard maps stay contiguous,
 //! and re-onboarding is allowed only for lost ranges — never for
-//! retained shards. Every failure reports a replay seed
-//! (`MEDHA_PROPTEST_SEED`).
+//! retained shards. The prefix-reuse tentpole adds refcount-lifecycle
+//! properties: every indexed block leaves the index exactly once
+//! (evicted or crash-dropped, never both, never leaked), holds are
+//! released exactly once even across a crash that invalidates them, and
+//! multi-turn reuse under crash/recover conserves prefill accounting.
+//! Every failure reports a replay seed (`MEDHA_PROPTEST_SEED`).
 
 use std::collections::BTreeMap;
 
@@ -20,10 +24,11 @@ use medha::coordinator::{
     GroupState, KvpManager, ReadySet, Request, RequestArena, RoutingMode, SchedPolicy,
     SchedPolicyKind,
 };
+use medha::kvcache::{NodeRef, PrefixIndex};
 use medha::sim::{SimOptions, Simulation};
 use medha::util::proptest::check;
 use medha::util::slotvec::SlotVec;
-use medha::workload::RequestSpec;
+use medha::workload::{multiturn, MultiTurnConfig, RequestSpec};
 
 #[test]
 fn prop_arena_slot_recycling_never_aliases_live_requests() {
@@ -206,6 +211,7 @@ fn same_tick_arrivals_admit_in_id_order_regardless_of_trace_order() {
                 prompt_len: 256 + 64 * id, // distinct lengths expose reorders
                 max_new_tokens: 4,
                 arrival_s: 1.0, // all in the same tick
+                ..RequestSpec::default()
             })
             .collect()
     };
@@ -245,6 +251,7 @@ fn prop_random_lifecycle_upholds_invariants_across_policies() {
                 prompt_len: rng.range_u64(64, 2_048),
                 max_new_tokens: rng.range_u64(1, 16),
                 arrival_s: t,
+                ..RequestSpec::default()
             });
         }
         let n_docs = rng.range_u64(1, 3);
@@ -254,6 +261,7 @@ fn prop_random_lifecycle_upholds_invariants_across_policies() {
                 prompt_len: rng.range_u64(20_000, 80_000),
                 max_new_tokens: rng.range_u64(1, 8),
                 arrival_s: rng.range_f64(0.0, 3.0),
+                ..RequestSpec::default()
             });
         }
         let routing = *rng.choose(&[
@@ -417,6 +425,7 @@ fn prop_crash_recover_lifecycle_across_policies() {
                 prompt_len: rng.range_u64(64, 2_048),
                 max_new_tokens: rng.range_u64(1, 8),
                 arrival_s: t,
+                ..RequestSpec::default()
             });
         }
         // an anchor document long enough that the crash instant is always
@@ -426,6 +435,7 @@ fn prop_crash_recover_lifecycle_across_policies() {
             prompt_len: 300_000,
             max_new_tokens: 2,
             arrival_s: 0.1,
+            ..RequestSpec::default()
         });
         for kd in 0..rng.range_u64(1, 3) {
             w.push(RequestSpec {
@@ -433,6 +443,7 @@ fn prop_crash_recover_lifecycle_across_policies() {
                 prompt_len: rng.range_u64(30_000, 90_000),
                 max_new_tokens: rng.range_u64(1, 4),
                 arrival_s: rng.range_f64(0.0, 2.0),
+                ..RequestSpec::default()
             });
         }
         let kvp = rng.range_u64(3, 5) as u32;
@@ -516,6 +527,184 @@ fn prop_crash_recover_lifecycle_across_policies() {
                     assert_eq!(sim.group_state(victim), GroupState::Down, "{label}");
                 }
             }
+        }
+    });
+}
+
+/// Refcount lifecycle at the index level (prefix-reuse tentpole): a
+/// random interleaving of insert / lookup+acquire / release /
+/// drop_group / evict must uphold the structural invariants after every
+/// step, and the block ledger must conserve exactly-once removal —
+/// every newly indexed block is returned exactly once, either by
+/// `evict_over_capacity` or by `drop_group`, never both and never
+/// leaked. Holds invalidated by a group drop are forgotten (the sim
+/// does the same after a crash); releasing only live holds means the
+/// index's own double-free assertion never fires.
+#[test]
+fn prop_prefix_index_refcount_lifecycle() {
+    check("prefix index refcount lifecycle", 200, |rng| {
+        let block = *rng.choose(&[64u64, 128, 256]);
+        let capacity = rng.range_u64(4, 64);
+        let n_groups = rng.range_u64(2, 4) as u32;
+        let mut px = PrefixIndex::new(block, capacity);
+        let mut holds: Vec<NodeRef> = Vec::new();
+        let (mut inserted, mut evicted, mut dropped) = (0u64, 0u64, 0u64);
+        for _ in 0..rng.range_u64(20, 120) {
+            match rng.below(5) {
+                0 | 1 => {
+                    // finished request indexes its prefix
+                    let ns = rng.range_u64(1, 3);
+                    let sys = *rng.choose(&[0u64, 2 * block]);
+                    let tokens = rng.below(8 * block + 1);
+                    let g = rng.below(n_groups as u64) as u32;
+                    inserted += px.insert(ns, sys, tokens, g).new_blocks;
+                }
+                2 => {
+                    // admission pins the deepest match
+                    let ns = rng.range_u64(1, 3);
+                    let sys = *rng.choose(&[0u64, 2 * block]);
+                    let prompt = rng.range_u64(1, 10 * block);
+                    if let Some(h) = px.lookup(ns, sys, prompt) {
+                        px.acquire(h.node);
+                        holds.push(h.node);
+                    }
+                }
+                3 => {
+                    // a holder finishes: exactly one release per acquire
+                    if !holds.is_empty() {
+                        let i = rng.below(holds.len() as u64) as usize;
+                        let r = holds.swap_remove(i);
+                        px.release(r);
+                    }
+                }
+                _ => {
+                    // crash: force-drop a group's chains; holds on them
+                    // die with the generation bump and must be forgotten,
+                    // not released (exactly-once across the crash path)
+                    let g = rng.below(n_groups as u64) as u32;
+                    dropped += px.drop_group(g) * block;
+                    holds.retain(|&r| px.is_live(r));
+                }
+            }
+            for (_, blocks) in px.evict_over_capacity() {
+                evicted += blocks * block;
+            }
+            px.check_invariants().unwrap_or_else(|e| panic!("invariant broken: {e}"));
+            // after eviction only pinned paths may exceed the budget, and
+            // each hold pins at most one chain (inserts cap at 8 blocks)
+            assert!(
+                px.total_blocks() <= capacity + holds.len() as u64 * 8,
+                "index grew past the budget plus its pinned chains"
+            );
+        }
+        // drain: release every surviving hold, then drop every group.
+        // Nothing may leak and nothing may be double-counted.
+        for r in holds.drain(..) {
+            px.release(r);
+        }
+        px.check_invariants().unwrap_or_else(|e| panic!("invariant broken: {e}"));
+        for g in 0..n_groups {
+            dropped += px.drop_group(g) * block;
+        }
+        assert_eq!(px.total_blocks(), 0, "blocks leaked past a full drop");
+        assert_eq!(px.evictable_len(), 0, "evictable set leaked past a full drop");
+        assert_eq!(
+            inserted * block,
+            evicted + dropped,
+            "a block left the index twice or never"
+        );
+        px.check_invariants().unwrap();
+    });
+}
+
+/// Multi-turn reuse through the full simulator under a random crash
+/// (sometimes with a warmed-up rejoin): every turn still finishes with
+/// token-exact prefill, the prefix index and the shared-ledger column
+/// stay consistent, shared re-prefill never exceeds what was granted,
+/// and a dead group that never rejoins holds no shared blocks.
+#[test]
+fn prop_multiturn_reuse_crash_recover_exactly_once() {
+    check("multiturn reuse crash/recover", 5, |rng| {
+        let cfg = MultiTurnConfig {
+            n_sessions: rng.range_u64(2, 4) as usize,
+            sys_prompt: *rng.choose(&[512u64, 1_024]),
+            turns: rng.range_u64(2, 4) as usize,
+            user_tokens: 256,
+            reply_tokens: 64,
+            mean_gap_s: 1.0,
+            session_stagger_s: 0.5,
+            shorts_rate_per_s: 2.0,
+            short_prompt: 512,
+            short_new_tokens: 8,
+            horizon_s: 8.0,
+        };
+        let w = multiturn(&cfg, rng.range_u64(0, 1 << 30));
+        let prompt_sum: u64 = w.iter().map(|s| s.prompt_len).sum();
+        let kvp = rng.range_u64(2, 4) as u32;
+        let victim = rng.below(kvp as u64) as u32;
+        let crash_t = rng.range_f64(0.5, 4.0);
+        let rejoin = rng.bool(0.5);
+        let mut events = vec![FaultEvent {
+            t_s: crash_t,
+            group: Some(victim),
+            kind: FaultKind::Crash,
+        }];
+        if rejoin {
+            events.push(FaultEvent {
+                t_s: crash_t + rng.range_f64(0.5, 2.0),
+                group: Some(victim),
+                kind: FaultKind::Join { warmup_s: 0.25 },
+            });
+        }
+        let kind = *rng.choose(&SchedPolicyKind::ALL);
+        let routing = *rng.choose(&[RoutingMode::Blind, RoutingMode::Routed]);
+        let mut dep = DeploymentConfig::llama3_8b_tp8().with_parallel(8, 1, kvp);
+        dep.scheduler.policy = kind;
+        dep.scheduler.routing = routing;
+        dep.scheduler.adaptive_chunking = false;
+        dep.scheduler.static_chunk = 2048;
+        dep.scheduler.prefix_reuse = true;
+        let opts = SimOptions {
+            faults: FaultPlan { events },
+            ..SimOptions::default()
+        };
+        let mut sim = Simulation::new(dep, w.clone(), opts);
+        sim.run();
+        let label = format!("{}/{} reuse crash g{victim}@{crash_t:.2}", kind.name(), routing.name());
+        assert_eq!(
+            sim.metrics.finished_requests,
+            w.len() as u64,
+            "{label} left requests behind"
+        );
+        assert_eq!(sim.n_live(), 0, "{label} leaked arena slots");
+        let mut granted = 0u64;
+        for r in sim.retired() {
+            assert_eq!(r.prefilled, r.prompt_len, "{label}: prefill drift on {}", r.id);
+            granted += r.reused_tokens;
+        }
+        assert!(
+            granted <= sim.metrics.prefix_hit_tokens,
+            "{label}: retired requests kept more grant than was ever metered"
+        );
+        assert!(sim.prefix_index_is_consistent(), "{label}: prefix index inconsistent");
+        assert!(sim.kvp_ledger_is_conserved(), "{label}: ledger out of balance");
+        assert!(
+            sim.metrics.reprefill_shared_tokens <= sim.metrics.prefix_hit_tokens,
+            "{label}: re-prefilled more shared span than was ever granted"
+        );
+        // every prompt token was either prefilled or served from a granted
+        // prefix; crashes only ever add prefill work on top
+        assert!(
+            sim.metrics.prefill_tokens + sim.metrics.prefix_hit_tokens >= prompt_sum,
+            "{label}: prefill accounting lost prompt tokens"
+        );
+        if !rejoin {
+            assert_eq!(sim.group_state(victim), GroupState::Down, "{label}");
+            assert_eq!(
+                sim.kvp_shared_on(victim),
+                0,
+                "{label}: dead group still holds shared blocks"
+            );
         }
     });
 }

@@ -113,6 +113,7 @@ fn capacity_refusals_defer_admissions_without_losing_requests() {
             prompt_len: 512,
             max_new_tokens: 8,
             arrival_s: 0.01 * i as f64,
+            ..RequestSpec::default()
         })
         .collect();
     let mut sim = Simulation::new(dep.clone(), w.clone(), SimOptions::default());
@@ -151,7 +152,7 @@ fn oversized_request_is_overflow_placed_not_deferred_forever() {
         id: 0,
         prompt_len: 8_000, // short-path (below long_threshold), yet > capacity
         max_new_tokens: 4,
-        arrival_s: 0.0,
+        ..RequestSpec::default()
     }];
     let mut sim = Simulation::new(dep, w, SimOptions::default());
     sim.run();
@@ -177,16 +178,16 @@ fn deferral_trace() -> (DeploymentConfig, Vec<RequestSpec>, SimOptions) {
     dep.scheduler.kvp_capacity_tokens = (2_000_000 + 2) + (2_500_000 + 2);
     let w = vec![
         // blockers: together they pin capacity at zero until one retires
-        RequestSpec { id: 0, prompt_len: 2_000_000, max_new_tokens: 2, arrival_s: 0.0 },
-        RequestSpec { id: 1, prompt_len: 2_500_000, max_new_tokens: 2, arrival_s: 0.0 },
+        RequestSpec { id: 0, prompt_len: 2_000_000, max_new_tokens: 2, ..RequestSpec::default() },
+        RequestSpec { id: 1, prompt_len: 2_500_000, max_new_tokens: 2, ..RequestSpec::default() },
         // slack-rich big request: defers first, and fits only once BOTH
         // blockers are gone (its need exceeds either blocker's own
         // footprint, so a single retirement can never free enough)
-        RequestSpec { id: 2, prompt_len: 2_600_000, max_new_tokens: 4, arrival_s: 0.1 },
+        RequestSpec { id: 2, prompt_len: 2_600_000, max_new_tokens: 4, arrival_s: 0.1, ..RequestSpec::default() },
         // deadline-critical tiny request: defers later, fits as soon as
         // the first blocker frees; its floor deadline is long blown by
         // then (multi-million-token prefills take far more than 2 s)
-        RequestSpec { id: 3, prompt_len: 256, max_new_tokens: 4, arrival_s: 0.3 },
+        RequestSpec { id: 3, prompt_len: 256, max_new_tokens: 4, arrival_s: 0.3, ..RequestSpec::default() },
     ];
     // everything through the group scheduler: capacity is the only gate
     let opts = SimOptions { long_threshold: u64::MAX, ..SimOptions::default() };
@@ -280,7 +281,7 @@ fn preempted_prefill_resumes_bit_exactly_shifted_by_the_yield_window() {
             id: 0,
             prompt_len: 200_000,
             max_new_tokens: 6,
-            arrival_s: 0.0,
+            ..RequestSpec::default()
         }];
         if with_challenger {
             // strictly less remaining work under SRPT: preempts doc 0 at
@@ -290,6 +291,7 @@ fn preempted_prefill_resumes_bit_exactly_shifted_by_the_yield_window() {
                 prompt_len: 32_000,
                 max_new_tokens: 4,
                 arrival_s: 1.0,
+                ..RequestSpec::default()
             });
         }
         let mut sim = Simulation::new(dep, w, SimOptions::default());

@@ -32,7 +32,7 @@ use medha::config::{DeploymentConfig, FaultEvent, FaultKind, FaultPlan};
 use medha::coordinator::{GroupState, RoutingMode, SchedPolicyKind};
 use medha::sim::{
     kvp_convoy_dep, run_convoy_scenario, run_kvp_convoy_scenario,
-    run_kvp_convoy_scenario_with_faults, SimOptions, Simulation,
+    run_kvp_convoy_scenario_with_faults, run_multiturn_scenario, SimOptions, Simulation,
 };
 use medha::workload::{self, LengthDist, RequestSpec};
 
@@ -68,6 +68,7 @@ fn serialize_outcome(sim: &mut Simulation, end_s: f64) -> String {
     f("deferral_wait_p95", s.deferral_wait_p95);
     f("recovery_wait_p50", s.recovery_wait_p50);
     f("recovery_wait_p95", s.recovery_wait_p95);
+    f("prefix_hit_rate", s.prefix_hit_rate);
     for (g, b) in group_busy.iter().enumerate() {
         f(&format!("group{g}_busy_s"), *b);
     }
@@ -83,6 +84,12 @@ fn serialize_outcome(sim: &mut Simulation, end_s: f64) -> String {
     out.push_str(&format!("shards_lost = {}\n", s.shards_lost));
     out.push_str(&format!("reprefill_tokens = {}\n", s.reprefill_tokens));
     out.push_str(&format!("kv_overcommit_tokens = {}\n", s.kv_overcommit_tokens));
+    out.push_str(&format!("prefix_hit_tokens = {}\n", s.prefix_hit_tokens));
+    out.push_str(&format!("blocks_shared = {}\n", s.blocks_shared));
+    out.push_str(&format!(
+        "reprefill_shared_tokens = {}\n",
+        s.reprefill_shared_tokens
+    ));
     out.push_str(&format!(
         "n_shed = {} (short {} / doc {})\n",
         s.n_shed, s.n_shed_short, s.n_shed_doc
@@ -645,4 +652,58 @@ fn parallel_step_matches_serial_blind_and_sharded() {
             "sharded long diverged at threads={threads}"
         );
     }
+}
+
+/// The multi-turn prefix-reuse scenario with the index ON (LARS + routed
+/// cache-affinity placement): the reuse machinery — content-hashed chain
+/// lookup, refcount lifecycle, shared-ledger accounting, LRU eviction —
+/// must be bit-deterministic across runs and pinned by its own snapshot.
+#[test]
+fn golden_multiturn_lars_routed_reuse() {
+    let cfg = workload::MultiTurnConfig::default();
+    let mut sim = golden("multiturn_lars_routed_reuse", || {
+        let sim = run_multiturn_scenario(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg, 42, true);
+        let end = sim.metrics.span_s();
+        (sim, end)
+    });
+    let s = sim.metrics.summary();
+    assert!(s.finished > 50, "degenerate multiturn trace: {}", s.finished);
+    assert!(s.prefix_hit_rate > 0.0, "affinity arm must hit the index");
+    assert!(sim.prefix_index_is_consistent());
+    assert!(sim.kvp_ledger_is_conserved());
+}
+
+/// The same trace under FCFS + blind placement with the index ON: grants
+/// happen only on coincidental owner-group landings, and the blind
+/// lockstep barrier must stay bit-deterministic with reuse in the loop.
+#[test]
+fn golden_multiturn_fcfs_blind_reuse() {
+    let cfg = workload::MultiTurnConfig::default();
+    let mut sim = golden("multiturn_fcfs_blind_reuse", || {
+        let sim = run_multiturn_scenario(SchedPolicyKind::Fcfs, RoutingMode::Blind, &cfg, 42, true);
+        let end = sim.metrics.span_s();
+        (sim, end)
+    });
+    assert!(sim.metrics.summary().finished > 50);
+    assert!(sim.prefix_index_is_consistent());
+    assert!(sim.kvp_ledger_is_conserved());
+}
+
+/// The no-reuse control arm on the same trace: `prefix_reuse = false`
+/// must keep every reuse counter at zero — and this snapshot pins that
+/// the multiturn trace on the pre-reuse paths never drifts.
+#[test]
+fn golden_multiturn_lars_routed_noreuse() {
+    let cfg = workload::MultiTurnConfig::default();
+    let mut sim = golden("multiturn_lars_routed_noreuse", || {
+        let sim =
+            run_multiturn_scenario(SchedPolicyKind::Lars, RoutingMode::Routed, &cfg, 42, false);
+        let end = sim.metrics.span_s();
+        (sim, end)
+    });
+    let s = sim.metrics.summary();
+    assert!(s.finished > 50);
+    assert_eq!(s.prefix_hit_tokens, 0, "reuse off must never grant");
+    assert_eq!(s.blocks_shared, 0);
+    assert_eq!(s.reprefill_shared_tokens, 0);
 }
